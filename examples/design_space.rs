@@ -1,0 +1,48 @@
+//! Design-space exploration over the full Table I workload set: for each
+//! layer, find the optimal tier count and report runtime / power /
+//! perf-per-area vs 2D for both TSV and MIV stacks — the decision table a
+//! 3D-accelerator architect would actually use.
+//!
+//! Run: `cargo run --release --example design_space [budget]`
+
+use cube3d::analytical::{optimal_tier_count, optimize_2d, optimize_3d};
+use cube3d::area::perf_per_area_vs_2d;
+use cube3d::power::{power_summary, Tech, VerticalTech};
+use cube3d::util::table::Table;
+use cube3d::workloads::table1;
+
+fn main() {
+    let budget: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1 << 18);
+    let tech = Tech::default();
+
+    println!("DSE over Table I, MAC budget {budget}\n");
+    let mut t = Table::new([
+        "layer", "M/K/N", "opt ℓ", "speedup", "TSV perf/area", "MIV perf/area", "3D power W",
+    ]);
+    for e in table1() {
+        let g = e.gemm;
+        let tiers = optimal_tier_count(&g, budget, 16);
+        let d2 = optimize_2d(&g, budget);
+        let d3 = optimize_3d(&g, budget, tiers);
+        let speedup = d2.cycles as f64 / d3.cycles as f64;
+        let tsv = perf_per_area_vs_2d(&g, budget, tiers.max(2), &tech, VerticalTech::Tsv);
+        let miv = perf_per_area_vs_2d(&g, budget, tiers.max(2), &tech, VerticalTech::Miv);
+        let p = power_summary(&g, &d3.array3d(), &tech, VerticalTech::Miv);
+        t.row([
+            e.layer.to_string(),
+            format!("{}/{}/{}", g.m, g.k, g.n),
+            tiers.to_string(),
+            format!("{speedup:.2}x"),
+            format!("{tsv:.2}x"),
+            format!("{miv:.2}x"),
+            format!("{:.2}", p.total_w),
+        ]);
+    }
+    println!("{}", t.to_ascii());
+    println!(
+        "reading: ℓ=1 ⇒ stay 2D for that layer; large-K layers (RN0, DB0, GNMT*) favor deep stacks."
+    );
+}

@@ -1,0 +1,51 @@
+//! Physical-design study: power + thermal + area for the paper's Table II /
+//! Fig. 8 configuration family, comparing 2D vs 3D-TSV vs 3D-MIV.
+//!
+//! Run: `cargo run --release --example thermal_study`
+
+use cube3d::analytical::Array3d;
+use cube3d::area::total_area_m2;
+use cube3d::power::{power_summary, Tech, VerticalTech};
+use cube3d::thermal::{thermal_footprint_m2, thermal_study, ThermalParams};
+use cube3d::util::table::Table;
+use cube3d::workloads::Gemm;
+
+fn main() {
+    let g = Gemm::new(128, 128, 300); // the paper's PPA workload
+    let tech = Tech::default();
+    let params = ThermalParams::default();
+
+    let configs: Vec<(String, Array3d, VerticalTech)> = vec![
+        ("2D 49284".into(), Array3d::new(222, 222, 1), VerticalTech::Tsv),
+        ("3D-TSV 3x16384".into(), Array3d::new(128, 128, 3), VerticalTech::Tsv),
+        ("3D-MIV 3x16384".into(), Array3d::new(128, 128, 3), VerticalTech::Miv),
+        ("3D-TSV 3x65536".into(), Array3d::new(256, 256, 3), VerticalTech::Tsv),
+        ("3D-MIV 3x65536".into(), Array3d::new(256, 256, 3), VerticalTech::Miv),
+    ];
+
+    let mut t = Table::new([
+        "config", "power W", "peak W", "silicon mm²", "T bottom °C", "T middle °C", "T max °C",
+    ]);
+    for (label, arr, v) in configs {
+        let p = power_summary(&g, &arr, &tech, v);
+        let s = thermal_study(&g, &arr, &tech, v, &params, thermal_footprint_m2(&arr, &tech));
+        let (mid, max) = match &s.middle {
+            Some(m) => (format!("{:.1}", m.median), m.max.max(s.bottom.max)),
+            None => ("-".into(), s.bottom.max),
+        };
+        t.row([
+            label,
+            format!("{:.2}", p.total_w),
+            format!("{:.2}", p.peak_w),
+            format!("{:.2}", total_area_m2(&arr, &tech, v) * 1e6),
+            format!("{:.1}", s.bottom.median),
+            mid,
+            format!("{max:.1}"),
+        ]);
+    }
+    println!("workload {g}\n");
+    println!("{}", t.to_ascii());
+    println!("expected shape (paper Fig. 8 / Table II):");
+    println!("  power:  2D > 3D-TSV > 3D-MIV (dataflow effect, not static)");
+    println!("  temps:  3D > 2D; MIV > TSV; larger arrays hotter; all within budget");
+}

@@ -1,0 +1,130 @@
+"""AOT pipeline: lower the Layer-2 JAX model to HLO *text* artifacts.
+
+HLO text — NOT `lowered.compile()` output and NOT a serialized
+HloModuleProto — is the interchange format: jax ≥ 0.5 emits protos with
+64-bit instruction ids which the `xla` crate's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids, so text
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Run via `make artifacts`:
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Each artifact gets `<name>.hlo.txt` plus one shared `manifest.json`
+describing shapes/dtypes/tiers, which the Rust runtime reads at startup.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i8(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int8)
+
+
+def artifact_specs():
+    """Every artifact the Rust side loads. Names are stable API.
+
+    Shapes follow the paper's experiments: `table2` is the Table II / Fig. 8
+    workload (M=N=128, K=300, 3 tiers); `rn0` is ResNet-50 layer RN0 from
+    Table I at 12 tiers (the headline speedup config, K padded to 12100→
+    12108 internally); `quickstart` is a small 4-tier GEMM; `mlp` is the
+    end-to-end serving model (784→512→10, batch 32).
+    """
+    specs = []
+
+    def add(name, fn, args, meta):
+        specs.append((name, fn, args, meta))
+
+    add(
+        "gemm_quickstart",
+        functools.partial(model.gemm_forward, tiers=4),
+        (f32(64, 256), f32(256, 96)),
+        {"kind": "gemm", "m": 64, "k": 256, "n": 96, "tiers": 4},
+    )
+    add(
+        "gemm_table2",
+        functools.partial(model.gemm_forward, tiers=3),
+        (f32(128, 300), f32(300, 128)),
+        {"kind": "gemm", "m": 128, "k": 300, "n": 128, "tiers": 3},
+    )
+    add(
+        "gemm_rn0",
+        functools.partial(model.gemm_forward, tiers=12),
+        (f32(64, 12100), f32(12100, 147)),
+        {"kind": "gemm", "m": 64, "k": 12100, "n": 147, "tiers": 12},
+    )
+    add(
+        "partials_quickstart",
+        functools.partial(model.gemm_partials, tiers=4),
+        (f32(64, 256), f32(256, 96)),
+        {"kind": "partials", "m": 64, "k": 256, "n": 96, "tiers": 4},
+    )
+    add(
+        "quant_table2",
+        functools.partial(model.quant_forward, tiers=3),
+        (i8(128, 300), i8(300, 128)),
+        {"kind": "quant_gemm", "m": 128, "k": 300, "n": 128, "tiers": 3},
+    )
+    add(
+        "mlp",
+        functools.partial(model.mlp_forward, tiers=4),
+        (f32(32, 784), f32(784, 512), f32(512, 10)),
+        {"kind": "mlp", "batch": 32, "d_in": 784, "d_hidden": 512, "d_out": 10, "tiers": 4},
+    )
+    return specs
+
+
+def build(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {}
+    for name, fn, args, meta in artifact_specs():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            **meta,
+            "file": f"{name}.hlo.txt",
+            "inputs": [list(a.shape) for a in args],
+            "dtype": str(args[0].dtype),
+        }
+        print(f"  wrote {path} ({len(text)} chars)")
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"  wrote {mpath}")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    build(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,133 @@
+"""Layer 1 — Pallas kernel for the distributed-output-stationary (dOS) GEMM.
+
+The paper's dOS dataflow (§III-C) splits the reduction dimension K across ℓ
+tiers; each tier produces a partial sum over its K-chunk and the partials are
+reduced down the vertical MAC piles. On TPU-style hardware this maps to:
+
+* grid = (M-tiles, N-tiles, tiers) with the tier dimension innermost, so the
+  output VMEM block stays resident while the K-chunks accumulate into it —
+  the in-place accumulation of the OS dataflow;
+* BlockSpecs that stream one (block_m × K/ℓ) A-slab and one (K/ℓ × block_n)
+  B-slab per grid step from HBM into VMEM — the paper's SRAM→array streaming;
+* the `t`-indexed accumulation into `o_ref` — the cross-tier reduction.
+
+`interpret=True` is mandatory in this environment: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute. Correctness is
+validated against the pure-jnp oracle in `ref.py` (pytest + hypothesis).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-friendly default tiles (multiples of the 128×128 systolic tile where
+# the workload allows; shrunk automatically for small operands).
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_N = 128
+
+
+def _block(dim: int, preferred: int) -> int:
+    """Largest tile ≤ preferred that does not exceed the dimension."""
+    return min(dim, preferred)
+
+
+def _dos_kernel(a_ref, b_ref, o_ref):
+    """One grid step: accumulate this tier's partial product into the output
+    block. The first tier visit zero-initializes (dOS pile reset)."""
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tiers", "block_m", "block_n", "interpret"))
+def dos_gemm(a, b, tiers: int = 1, block_m: int = DEFAULT_BLOCK_M,
+             block_n: int = DEFAULT_BLOCK_N, interpret: bool = True):
+    """C = A @ B with the dOS schedule: K split across `tiers` chunks.
+
+    Requires K % tiers == 0 (callers pad via `model.pad_k`, mirroring the
+    hardware's even K-split with idle tail slots).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    assert k % tiers == 0, f"K={k} must be divisible by tiers={tiers} (pad first)"
+    kc = k // tiers
+    bm = _block(m, block_m)
+    bn = _block(n, block_n)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), tiers)
+    return pl.pallas_call(
+        _dos_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, kc), lambda i, j, t: (i, t)),
+            pl.BlockSpec((kc, bn), lambda i, j, t: (t, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, t: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=interpret,
+    )(a, b)
+
+
+def _partials_kernel(a_ref, b_ref, o_ref):
+    """Per-tier partial sums, no cross-tier reduction — used to validate the
+    tier semantics against the Rust cycle simulator's per-tier state."""
+    o_ref[0, ...] = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tiers", "block_m", "block_n", "interpret"))
+def dos_gemm_partials(a, b, tiers: int = 1, block_m: int = DEFAULT_BLOCK_M,
+                      block_n: int = DEFAULT_BLOCK_N, interpret: bool = True):
+    """Return the (tiers, M, N) per-tier partial products of the dOS split."""
+    m, k = a.shape
+    _, n = b.shape
+    assert k % tiers == 0, f"K={k} must be divisible by tiers={tiers} (pad first)"
+    kc = k // tiers
+    bm = _block(m, block_m)
+    bn = _block(n, block_n)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), tiers)
+    return pl.pallas_call(
+        _partials_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, kc), lambda i, j, t: (i, t)),
+            pl.BlockSpec((kc, bn), lambda i, j, t: (t, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda i, j, t: (t, i, j)),
+        out_shape=jax.ShapeDtypeStruct((tiers, m, n), a.dtype),
+        interpret=interpret,
+    )(a, b)
+
+
+def vmem_footprint_bytes(m: int, n: int, k: int, tiers: int,
+                         block_m: int = DEFAULT_BLOCK_M,
+                         block_n: int = DEFAULT_BLOCK_N,
+                         dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set of one grid step: A-slab + B-slab + O-block.
+
+    Used (with `mxu_utilization`) for the DESIGN.md §Perf real-TPU estimate;
+    interpret-mode wall clock is *not* a TPU proxy.
+    """
+    kc = k // tiers
+    bm = _block(m, block_m)
+    bn = _block(n, block_n)
+    return dtype_bytes * (bm * kc + kc * bn + bm * bn)
+
+
+def mxu_utilization(m: int, n: int, k: int, tiers: int,
+                    block_m: int = DEFAULT_BLOCK_M,
+                    block_n: int = DEFAULT_BLOCK_N,
+                    mxu: int = 128) -> float:
+    """Fraction of MXU lanes a grid step keeps busy (tile alignment measure)."""
+    bm = _block(m, block_m)
+    bn = _block(n, block_n)
+    eff_m = bm / (((bm + mxu - 1) // mxu) * mxu)
+    eff_n = bn / (((bn + mxu - 1) // mxu) * mxu)
+    return eff_m * eff_n

@@ -1,0 +1,74 @@
+"""Quantized dOS GEMM — the paper's actual MAC datapath (8-bit inputs,
+wide accumulate; §IV-D: "8b inputs and 16b outputs").
+
+Same dOS schedule as `dos_gemm.py` (grid = (M-tiles, N-tiles, tiers),
+K-chunk accumulation into the resident output block) but with int8 operands
+and int32 accumulation, matching the RTL the paper synthesizes. A
+dequantizing epilogue (`quant_gemm_dequant`) produces f32 with per-tensor
+scales, which is how a deployed int8 accelerator feeds the next layer.
+
+Validated against integer-exact oracles in ref.py — int8×int8→int32 is
+exact, so tests use strict equality, the same property the Rust cycle
+simulator asserts for its i64 datapath.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .dos_gemm import DEFAULT_BLOCK_M, DEFAULT_BLOCK_N, _block
+
+
+def _quant_kernel(a_ref, b_ref, o_ref):
+    """Accumulate this tier's int8 partial product in int32."""
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...].astype(jnp.int32),
+        b_ref[...].astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tiers", "block_m", "block_n", "interpret"))
+def quant_gemm(a, b, tiers: int = 1, block_m: int = DEFAULT_BLOCK_M,
+               block_n: int = DEFAULT_BLOCK_N, interpret: bool = True):
+    """C(int32) = A(int8) @ B(int8) with the dOS K-split."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    assert a.dtype == jnp.int8 and b.dtype == jnp.int8, "quant_gemm wants int8"
+    assert k % tiers == 0, f"K={k} must be divisible by tiers={tiers} (pad first)"
+    kc = k // tiers
+    bm = _block(m, block_m)
+    bn = _block(n, block_n)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), tiers)
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, kc), lambda i, j, t: (i, t)),
+            pl.BlockSpec((kc, bn), lambda i, j, t: (t, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, t: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(a, b)
+
+
+def quantize(x, scale):
+    """Symmetric per-tensor quantization to int8."""
+    return jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+
+
+def quant_gemm_dequant(a_q, b_q, a_scale, b_scale, tiers: int = 1):
+    """int8 dOS GEMM followed by the dequantizing epilogue:
+    `C_f32 = (A_q @ B_q) · a_scale · b_scale`."""
+    acc = quant_gemm(a_q, b_q, tiers=tiers)
+    return acc.astype(jnp.float32) * (a_scale * b_scale)

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for the Pallas dOS kernel.
+
+These are the build-time ground truth: pytest asserts the Pallas kernel
+(interpret mode) matches these references over hypothesis-generated shapes,
+and the Rust integration tests compare PJRT execution of the AOT artifact
+against the same math (computed in Rust).
+"""
+
+import jax.numpy as jnp
+
+
+def ref_gemm(a, b):
+    """Plain GEMM: the functional spec of the whole accelerator."""
+    return jnp.dot(a, b, preferred_element_type=a.dtype)
+
+
+def ref_dos_partials(a, b, tiers: int):
+    """Per-tier partial sums of the dOS K-split.
+
+    Chunk `t` covers rows `t*K/ℓ .. (t+1)*K/ℓ` of B (and the matching columns
+    of A) — identical to the Rust simulator's `dos_k_split` for K % ℓ == 0.
+    Returns an array of shape (tiers, M, N).
+    """
+    m, k = a.shape
+    _, n = b.shape
+    assert k % tiers == 0, "pad K before splitting"
+    kc = k // tiers
+    parts = [
+        jnp.dot(a[:, t * kc:(t + 1) * kc], b[t * kc:(t + 1) * kc, :],
+                preferred_element_type=a.dtype)
+        for t in range(tiers)
+    ]
+    return jnp.stack(parts, axis=0)
+
+
+def ref_dos_gemm(a, b, tiers: int):
+    """dOS GEMM = sum of per-tier partials (the ℓ−1 vertical reductions)."""
+    return ref_dos_partials(a, b, tiers).sum(axis=0)
+
+
+def ref_quant_gemm(a_q, b_q):
+    """Integer-exact int8×int8→int32 GEMM oracle."""
+    return jnp.dot(
+        a_q.astype(jnp.int32), b_q.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def ref_mlp(x, w1, w2, tiers: int):
+    """Two-layer MLP with ReLU, each GEMM executed with the dOS split —
+    the end-to-end serving example's model."""
+    h = jnp.maximum(ref_dos_gemm(x, w1, tiers), 0.0)
+    return ref_dos_gemm(h, w2, tiers)

@@ -1,0 +1,60 @@
+"""Layer 2 — JAX model of the 3D accelerator's compute path.
+
+Wraps the Layer-1 Pallas dOS kernel with the padding / shaping logic the
+hardware's even K-split implies, and defines the exported entry points that
+`aot.py` lowers to HLO text for the Rust runtime:
+
+* `gemm_forward`     — one dOS GEMM (the paper's unit of work);
+* `gemm_partials`    — per-tier partial sums (tier-semantics verification);
+* `mlp_forward`      — a small MLP whose GEMMs run through the dOS kernel
+                       (the end-to-end serving example's model).
+
+Python never runs at serve time: these functions are lowered once by
+`aot.py` (`make artifacts`) and executed from Rust via PJRT.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.dos_gemm import dos_gemm, dos_gemm_partials
+from .kernels.quant_gemm import quant_gemm
+
+
+def pad_k(a, b, tiers: int):
+    """Zero-pad the reduction dimension so K % tiers == 0.
+
+    Mirrors the hardware: `dos_k_split` gives the first tiers one extra
+    element; padding with zeros instead assigns every tier ⌈K/ℓ⌉ slots and
+    leaves the tail slots idle — numerically identical.
+    """
+    k = a.shape[1]
+    pad = (-k) % tiers
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad)))
+        b = jnp.pad(b, ((0, pad), (0, 0)))
+    return a, b
+
+
+def gemm_forward(a, b, tiers: int = 1):
+    """C = A @ B on the ℓ-tier dOS accelerator model."""
+    a, b = pad_k(a, b, tiers)
+    return dos_gemm(a, b, tiers=tiers)
+
+
+def gemm_partials(a, b, tiers: int):
+    """(tiers, M, N) per-tier partial sums — the pile state before the
+    cross-tier reduction."""
+    a, b = pad_k(a, b, tiers)
+    return dos_gemm_partials(a, b, tiers=tiers)
+
+
+def quant_forward(a, b, tiers: int = 1):
+    """C(int32) = A(int8) @ B(int8) on the dOS accelerator model — the
+    paper's 8b-in / wide-out RTL datapath. Requires K % tiers == 0 (the
+    int8 artifact shapes are chosen accordingly)."""
+    return quant_gemm(a, b, tiers=tiers)
+
+
+def mlp_forward(x, w1, w2, tiers: int = 1):
+    """Two-layer ReLU MLP; both GEMMs run through the dOS kernel."""
+    h = jnp.maximum(gemm_forward(x, w1, tiers), 0.0)
+    return gemm_forward(h, w2, tiers)

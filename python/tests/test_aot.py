@@ -1,0 +1,62 @@
+"""AOT pipeline: artifacts are produced, valid HLO text, manifest coherent."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.build(str(out))
+    return out, manifest
+
+
+def test_all_artifacts_written(built):
+    out, manifest = built
+    assert len(manifest) == len(aot.artifact_specs())
+    for name, meta in manifest.items():
+        path = out / meta["file"]
+        assert path.exists(), f"missing {path}"
+        assert path.stat().st_size > 0
+
+
+def test_hlo_text_is_parseable_prefix(built):
+    out, manifest = built
+    for meta in manifest.values():
+        text = (out / meta["file"]).read_text()
+        assert text.startswith("HloModule"), text[:80]
+        # return_tuple=True: the root computation yields a tuple.
+        assert "ROOT" in text
+
+
+def test_manifest_round_trips(built):
+    out, _ = built
+    with open(out / "manifest.json") as f:
+        m = json.load(f)
+    assert "gemm_rn0" in m and m["gemm_rn0"]["tiers"] == 12
+    assert m["gemm_table2"]["m"] == 128 and m["gemm_table2"]["k"] == 300
+    assert m["mlp"]["kind"] == "mlp"
+
+
+def test_artifact_inputs_match_specs(built):
+    _, manifest = built
+    for name, fn, args, _meta in aot.artifact_specs():
+        assert manifest[name]["inputs"] == [list(a.shape) for a in args]
+
+
+def test_rebuild_is_deterministic(built, tmp_path):
+    out, _ = built
+    aot.build(str(tmp_path))
+    for name in ("gemm_quickstart", "mlp"):
+        a = (out / f"{name}.hlo.txt").read_text()
+        b = (tmp_path / f"{name}.hlo.txt").read_text()
+        assert a == b, f"{name} not deterministic"
+
+
+def test_artifacts_dir_env_default():
+    # Paths in the Makefile: python -m compile.aot --out-dir ../artifacts
+    assert os.path.basename(aot.__file__) == "aot.py"

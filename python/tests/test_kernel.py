@@ -1,0 +1,148 @@
+"""L1 correctness: the Pallas dOS kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, tier counts and block sizes; every case asserts
+allclose against ref.py. This is the core correctness signal for the
+compute hot-spot — the Rust runtime executes the very HLO these kernels
+lower to.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.dos_gemm import (
+    dos_gemm,
+    dos_gemm_partials,
+    mxu_utilization,
+    vmem_footprint_bytes,
+)
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------- fixed cases
+
+@pytest.mark.parametrize("tiers", [1, 2, 3, 4, 8])
+def test_gemm_matches_ref_fixed(tiers):
+    k = 24 * tiers
+    a, b = rand(0, 16, k), rand(1, k, 12)
+    got = dos_gemm(a, b, tiers=tiers)
+    np.testing.assert_allclose(got, ref.ref_gemm(a, b), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("tiers", [1, 2, 4])
+def test_partials_match_ref(tiers):
+    k = 8 * tiers
+    a, b = rand(2, 10, k), rand(3, k, 7)
+    got = dos_gemm_partials(a, b, tiers=tiers)
+    want = ref.ref_dos_partials(a, b, tiers)
+    assert got.shape == (tiers, 10, 7)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_partials_sum_to_gemm():
+    a, b = rand(4, 12, 30), rand(5, 30, 9)
+    parts = dos_gemm_partials(a, b, tiers=3)
+    np.testing.assert_allclose(parts.sum(0), ref.ref_gemm(a, b), rtol=1e-5, atol=1e-5)
+
+
+def test_rejects_unpadded_k():
+    a, b = rand(6, 4, 10), rand(7, 10, 4)
+    with pytest.raises(AssertionError, match="divisible"):
+        dos_gemm(a, b, tiers=3)
+
+
+def test_blocks_smaller_than_matrix():
+    # Multiple M/N grid steps exercise the (i, j) BlockSpec indexing.
+    a, b = rand(8, 100, 64), rand(9, 64, 72)
+    got = dos_gemm(a, b, tiers=2, block_m=32, block_n=24)
+    np.testing.assert_allclose(got, ref.ref_gemm(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_single_tier_is_plain_gemm():
+    a, b = rand(10, 33, 17), rand(11, 17, 29)
+    np.testing.assert_allclose(
+        dos_gemm(a, b, tiers=1), jnp.dot(a, b), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_large_k_headline_shape():
+    # RN0-like aspect (tall K): exercises many K-chunks per output block.
+    a, b = rand(12, 8, 1210), rand(13, 1210, 16)
+    got = dos_gemm(a, b, tiers=10)
+    np.testing.assert_allclose(got, ref.ref_gemm(a, b), rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------ hypothesis sweep
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 48),
+    n=st.integers(1, 48),
+    kc=st.integers(1, 16),
+    tiers=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gemm_matches_ref_hypothesis(m, n, kc, tiers, seed):
+    k = kc * tiers
+    a = jax.random.normal(jax.random.PRNGKey(seed), (m, k), dtype=jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(seed + 1), (k, n), dtype=jnp.float32)
+    got = dos_gemm(a, b, tiers=tiers)
+    np.testing.assert_allclose(got, ref.ref_gemm(a, b), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 32),
+    n=st.integers(1, 32),
+    kc=st.integers(1, 8),
+    tiers=st.integers(1, 4),
+    bm=st.integers(4, 32),
+    bn=st.integers(4, 32),
+)
+def test_block_size_invariance(m, n, kc, tiers, bm, bn):
+    # The result must not depend on the VMEM tiling.
+    k = kc * tiers
+    a = jax.random.normal(jax.random.PRNGKey(7), (m, k), dtype=jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(8), (k, n), dtype=jnp.float32)
+    got = dos_gemm(a, b, tiers=tiers, block_m=bm, block_n=bn)
+    np.testing.assert_allclose(got, ref.ref_gemm(a, b), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(dtype=st.sampled_from([jnp.float32, jnp.bfloat16]))
+def test_dtype_support(dtype):
+    a = jax.random.normal(jax.random.PRNGKey(1), (16, 24), dtype=jnp.float32).astype(dtype)
+    b = jax.random.normal(jax.random.PRNGKey(2), (24, 8), dtype=jnp.float32).astype(dtype)
+    got = dos_gemm(a, b, tiers=2)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        got.astype(jnp.float32),
+        jnp.dot(a, b).astype(jnp.float32),
+        rtol=tol,
+        atol=tol,
+    )
+
+
+# ------------------------------------------------------------- perf estimators
+
+def test_vmem_footprint_within_budget():
+    # The headline RN0 config must fit comfortably in 16 MiB of VMEM.
+    bytes_ = vmem_footprint_bytes(64, 147, 12108, tiers=12)
+    assert bytes_ < 16 * 1024 * 1024
+    assert bytes_ > 0
+
+
+def test_mxu_utilization_bounds():
+    assert mxu_utilization(128, 128, 300, 1) == 1.0
+    u = mxu_utilization(64, 147, 12100, 12)
+    assert 0.0 < u <= 1.0
+    # Misaligned tiles waste lanes.
+    assert mxu_utilization(100, 100, 300, 1) < 1.0

@@ -1,0 +1,78 @@
+"""L2 correctness: padding logic, model entry points, shapes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+
+
+def test_pad_k_noop_when_divisible():
+    a, b = rand(0, 4, 12), rand(1, 12, 4)
+    pa, pb = model.pad_k(a, b, 3)
+    assert pa.shape == (4, 12) and pb.shape == (12, 4)
+
+
+def test_pad_k_pads_to_multiple():
+    a, b = rand(2, 4, 10), rand(3, 10, 4)
+    pa, pb = model.pad_k(a, b, 4)
+    assert pa.shape == (4, 12) and pb.shape == (12, 4)
+    # Zero padding leaves the product unchanged.
+    np.testing.assert_allclose(
+        jnp.dot(pa, pb), jnp.dot(a, b), rtol=1e-5, atol=1e-5
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 32),
+    n=st.integers(1, 32),
+    k=st.integers(1, 64),
+    tiers=st.integers(1, 8),
+)
+def test_gemm_forward_any_k(m, n, k, tiers):
+    # gemm_forward must accept K not divisible by tiers (pads internally).
+    a = jax.random.normal(jax.random.PRNGKey(9), (m, k), dtype=jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(10), (k, n), dtype=jnp.float32)
+    got = model.gemm_forward(a, b, tiers=tiers)
+    np.testing.assert_allclose(got, jnp.dot(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_gemm_partials_shape_and_sum():
+    a, b = rand(4, 8, 10), rand(5, 10, 6)
+    parts = model.gemm_partials(a, b, tiers=4)  # K=10 pads to 12
+    assert parts.shape == (4, 8, 6)
+    np.testing.assert_allclose(parts.sum(0), jnp.dot(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_mlp_forward_matches_ref():
+    x, w1, w2 = rand(6, 8, 20), rand(7, 20, 16), rand(8, 16, 4)
+    got = model.mlp_forward(x, w1, w2, tiers=4)
+    want = ref.ref_mlp(x, w1, w2, tiers=4)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    assert got.shape == (8, 4)
+
+
+def test_mlp_relu_active():
+    # The hidden ReLU must actually clamp: feed a negative-definite input.
+    x = -jnp.ones((2, 4), dtype=jnp.float32)
+    w1 = jnp.eye(4, 3, dtype=jnp.float32)
+    w2 = jnp.ones((3, 2), dtype=jnp.float32)
+    out = model.mlp_forward(x, w1, w2, tiers=1)
+    np.testing.assert_allclose(out, jnp.zeros((2, 2)), atol=1e-6)
+
+
+@pytest.mark.parametrize("tiers", [1, 3, 12])
+def test_table1_rn0_shape(tiers):
+    # The paper's RN0 layer end to end (small-scale sanity: K reduced 10x).
+    a, b = rand(11, 64, 1210), rand(12, 1210, 147)
+    got = model.gemm_forward(a, b, tiers=tiers)
+    assert got.shape == (64, 147)
+    np.testing.assert_allclose(got, jnp.dot(a, b), rtol=1e-3, atol=1e-3)

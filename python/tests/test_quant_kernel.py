@@ -1,0 +1,77 @@
+"""Quantized (int8) dOS kernel: integer-exact vs oracle, dequant epilogue."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.quant_gemm import quant_gemm, quant_gemm_dequant, quantize
+from compile.kernels.ref import ref_quant_gemm
+
+
+def rand_i8(key, *shape):
+    return jax.random.randint(jax.random.PRNGKey(key), shape, -127, 128, dtype=jnp.int8)
+
+
+@pytest.mark.parametrize("tiers", [1, 2, 4, 8])
+def test_exact_vs_oracle(tiers):
+    k = 16 * tiers
+    a, b = rand_i8(0, 24, k), rand_i8(1, k, 20)
+    got = quant_gemm(a, b, tiers=tiers)
+    np.testing.assert_array_equal(got, ref_quant_gemm(a, b))
+    assert got.dtype == jnp.int32
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    n=st.integers(1, 40),
+    kc=st.integers(1, 12),
+    tiers=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_exact_vs_oracle_hypothesis(m, n, kc, tiers, seed):
+    k = kc * tiers
+    a = jax.random.randint(jax.random.PRNGKey(seed), (m, k), -127, 128, dtype=jnp.int8)
+    b = jax.random.randint(jax.random.PRNGKey(seed + 1), (k, n), -127, 128, dtype=jnp.int8)
+    # int8×int8→int32 accumulation is exact: strict equality required.
+    np.testing.assert_array_equal(quant_gemm(a, b, tiers=tiers), ref_quant_gemm(a, b))
+
+
+def test_rejects_non_int8():
+    a = jnp.zeros((4, 8), jnp.float32)
+    b = jnp.zeros((8, 4), jnp.float32)
+    with pytest.raises(AssertionError, match="int8"):
+        quant_gemm(a, b, tiers=2)
+
+
+def test_worst_case_no_overflow():
+    # 127·127·K fits int32 for K up to ~133k — check a saturated case.
+    k = 256
+    a = jnp.full((4, k), 127, jnp.int8)
+    b = jnp.full((k, 4), 127, jnp.int8)
+    got = quant_gemm(a, b, tiers=4)
+    assert int(got[0, 0]) == 127 * 127 * k
+
+
+def test_quantize_roundtrip_error_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(3), (32, 32), jnp.float32)
+    scale = float(jnp.max(jnp.abs(x))) / 127.0
+    xq = quantize(x, scale)
+    err = jnp.max(jnp.abs(xq.astype(jnp.float32) * scale - x))
+    assert float(err) <= scale / 2 + 1e-6
+
+
+def test_dequant_epilogue_close_to_f32_gemm():
+    # End-to-end int8 path approximates the f32 GEMM within quant noise.
+    key = jax.random.PRNGKey(4)
+    a = jax.random.normal(key, (16, 64), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(5), (64, 12), jnp.float32)
+    sa = float(jnp.max(jnp.abs(a))) / 127.0
+    sb = float(jnp.max(jnp.abs(b))) / 127.0
+    got = quant_gemm_dequant(quantize(a, sa), quantize(b, sb), sa, sb, tiers=4)
+    want = jnp.dot(a, b)
+    # Relative Frobenius error from 8-bit quantization: a few percent.
+    rel = float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want))
+    assert rel < 0.05, rel

@@ -1,0 +1,83 @@
+//! Ablation bench: the design choice at the heart of the paper — mapping K
+//! to the third dimension (dOS) vs the scale-out alternatives (WS/IS with
+//! the temporal dimension split across tiers, §III-C) — evaluated over the
+//! full Table I workload set, plus the Pareto front of the RN0 design space.
+
+use cube3d::analytical::optimize_3d;
+use cube3d::dataflow::{optimize_is_3d, optimize_ws_3d};
+use cube3d::dse::{pareto_front, sweep};
+use cube3d::power::{Tech, VerticalTech};
+use cube3d::util::bench::{black_box, Bench};
+use cube3d::util::table::Table;
+use cube3d::workloads::table1;
+
+fn main() {
+    println!("== bench_ablation: dOS vs WS/IS scale-out (ℓ=8, 2^18 MACs) ==\n");
+    let budget = 1u64 << 18;
+    let tiers = 8;
+    let mut t = Table::new(["layer", "dOS cycles", "WS cycles", "IS cycles", "best"]);
+    let mut dos_wins = 0;
+    for e in table1() {
+        let g = e.gemm;
+        let dos = optimize_3d(&g, budget, tiers).cycles;
+        let (_, ws) = optimize_ws_3d(&g, budget, tiers);
+        let (_, is) = optimize_is_3d(&g, budget, tiers);
+        let best = if dos <= ws && dos <= is {
+            dos_wins += 1;
+            "dOS"
+        } else if ws <= is {
+            "WS"
+        } else {
+            "IS"
+        };
+        t.row([
+            e.layer.to_string(),
+            dos.to_string(),
+            ws.to_string(),
+            is.to_string(),
+            best.to_string(),
+        ]);
+    }
+    println!("{}", t.to_ascii());
+    println!("dOS wins {dos_wins}/8 Table I layers (expected: the large-K, small-MN layers)\n");
+
+    // Pareto front of the RN0 design space (cycles × area × power).
+    let g = cube3d::workloads::by_label("RN0").unwrap().gemm;
+    let tech = Tech::default();
+    let pts = sweep(
+        &[g],
+        &[4096, 32768, 262144],
+        &[1, 2, 4, 8, 12],
+        VerticalTech::Miv,
+        &tech,
+    );
+    let front = pareto_front(&pts);
+    println!(
+        "RN0 design space: {} points, {} on the (cycles, area, power) Pareto front:",
+        pts.len(),
+        front.len()
+    );
+    let mut pf = Table::new(["MACs", "ℓ", "cycles", "area mm²", "power W"]);
+    for p in &front {
+        pf.row([
+            p.mac_budget.to_string(),
+            p.tiers.to_string(),
+            p.cycles.to_string(),
+            format!("{:.2}", p.area_m2 * 1e6),
+            format!("{:.2}", p.power_w),
+        ]);
+    }
+    println!("{}", pf.to_ascii());
+
+    let mut b = Bench::default();
+    b.run("ablation/dos_vs_ws_is_8_layers", || {
+        for e in table1() {
+            black_box(optimize_3d(&e.gemm, budget, tiers));
+            black_box(optimize_ws_3d(&e.gemm, budget, tiers));
+            black_box(optimize_is_3d(&e.gemm, budget, tiers));
+        }
+    });
+    b.run("ablation/pareto_front_15_points", || {
+        black_box(pareto_front(&pts));
+    });
+}

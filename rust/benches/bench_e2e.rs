@@ -1,0 +1,75 @@
+//! Bench E2E: end-to-end serving throughput/latency through coordinator +
+//! PJRT (requires `make artifacts`), plus the exact cycle simulator and the
+//! PJRT dispatch path in isolation — the L3 §Perf hot paths.
+
+use cube3d::analytical::Array3d;
+use cube3d::coordinator::{BatcherConfig, Coordinator, GemmJob, RouterConfig};
+use cube3d::runtime::{find_artifact_dir, Runtime};
+use cube3d::sim::{simulate_dos, Matrix};
+use cube3d::util::bench::{black_box, Bench};
+use cube3d::util::rng::Rng;
+
+fn rand_matrix(rng: &mut Rng, rows: usize, cols: usize) -> Matrix<f32> {
+    Matrix::from_fn(rows, cols, |_, _| (rng.gen_range(200) as f32 - 100.0) / 50.0)
+}
+
+fn main() {
+    println!("== bench_e2e: serving path + simulator hot loops ==\n");
+    let Ok(dir) = find_artifact_dir() else {
+        eprintln!("skipping PJRT benches: no artifacts (run `make artifacts`)");
+        bench_simulator_only();
+        return;
+    };
+
+    // Raw PJRT dispatch latency (executable cached).
+    let mut rt = Runtime::new(&dir).expect("runtime");
+    let mut rng = Rng::new(1);
+    let a = rand_matrix(&mut rng, 64, 256);
+    let b = rand_matrix(&mut rng, 256, 96);
+    rt.run_gemm("gemm_quickstart", &a, &b).unwrap();
+    let mut bench = Bench::default();
+    bench.run("e2e/pjrt_gemm_quickstart_dispatch", || {
+        black_box(rt.run_gemm("gemm_quickstart", &a, &b).unwrap());
+    });
+    let a2 = rand_matrix(&mut rng, 128, 300);
+    let b2 = rand_matrix(&mut rng, 300, 128);
+    rt.run_gemm("gemm_table2", &a2, &b2).unwrap();
+    bench.run("e2e/pjrt_gemm_table2_dispatch", || {
+        black_box(rt.run_gemm("gemm_table2", &a2, &b2).unwrap());
+    });
+    drop(rt);
+
+    // Full coordinator trace: 32 quickstart-shaped jobs.
+    bench.run("e2e/coordinator_32_jobs", || {
+        let coord =
+            Coordinator::start(&dir, RouterConfig::default(), BatcherConfig::default()).unwrap();
+        let mut rng = Rng::new(2);
+        let jobs: Vec<GemmJob> = (0..32)
+            .map(|i| {
+                GemmJob::new(
+                    i,
+                    "bench",
+                    rand_matrix(&mut rng, 64, 256),
+                    rand_matrix(&mut rng, 256, 96),
+                )
+            })
+            .collect();
+        let results = coord.run_trace(jobs).unwrap();
+        black_box(results.len());
+        let m = coord.finish();
+        black_box(m.jobs_completed);
+    });
+
+    bench_simulator_only();
+}
+
+fn bench_simulator_only() {
+    let mut rng = Rng::new(3);
+    let a = Matrix::from_fn(48, 96, |_, _| rng.gen_range(255) as i64 - 127);
+    let b = Matrix::from_fn(96, 48, |_, _| rng.gen_range(255) as i64 - 127);
+    let arr = Array3d::new(16, 16, 4);
+    let mut bench = Bench::default();
+    bench.run("e2e/exact_sim_48x48x96_on_16x16x4", || {
+        black_box(simulate_dos(&a, &b, &arr));
+    });
+}

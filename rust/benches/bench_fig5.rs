@@ -1,0 +1,46 @@
+//! Bench F5: regenerate Fig. 5 (speedup vs tier count) and time the
+//! analytical sweep that produces it.
+
+use cube3d::report::fig5;
+use cube3d::util::bench::{black_box, Bench};
+
+fn main() {
+    println!("== bench_fig5: Fig. 5 — speedup vs tier count ==\n");
+    let r = fig5::report();
+    println!("{}", r.table.to_ascii());
+    for n in &r.notes {
+        println!("note: {n}");
+    }
+    println!();
+
+    let mut b = Bench::default();
+    b.run("fig5/full_report", || {
+        black_box(fig5::report());
+    });
+    b.run("fig5/single_tier_sweep_2^18", || {
+        let g = cube3d::workloads::Gemm::new(64, 147, 12100);
+        black_box(cube3d::analytical::tier_sweep(&g, 1 << 18, &fig5::TIERS));
+    });
+
+    // §Perf before/after: the optimizer's √-breakpoint candidate walk vs the
+    // full O(budget) row scan it replaced (EXPERIMENTS.md §Perf, L3 row 1).
+    let g = cube3d::workloads::Gemm::new(64, 147, 12100);
+    b.run("perf/optimize_2d_fast_2^18", || {
+        black_box(cube3d::analytical::optimize_2d(&g, 1 << 18));
+    });
+    b.run("perf/optimize_2d_bruteforce_2^18", || {
+        // Baseline: every row count (what a naive implementation does).
+        let mut best = u64::MAX;
+        for r in 1..=(1u64 << 18) {
+            let c = (1u64 << 18) / r;
+            if c == 0 {
+                continue;
+            }
+            best = best.min(cube3d::analytical::cycles_3d(
+                &g,
+                &cube3d::analytical::Array3d::new(r, c, 1),
+            ));
+        }
+        black_box(best);
+    });
+}

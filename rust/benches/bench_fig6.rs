@@ -1,0 +1,26 @@
+//! Bench F6: regenerate Fig. 6 (speedup vs MAC budget, threshold M·N) and
+//! time the budget sweep.
+
+use cube3d::analytical::speedup_3d_over_2d;
+use cube3d::report::fig6;
+use cube3d::util::bench::{black_box, Bench};
+use cube3d::workloads::Gemm;
+
+fn main() {
+    println!("== bench_fig6: Fig. 6 — speedup vs MAC budget (4 tiers) ==\n");
+    let r = fig6::report();
+    println!("{}", r.table.to_ascii());
+    for n in &r.notes {
+        println!("note: {n}");
+    }
+    println!();
+
+    let mut b = Bench::default();
+    b.run("fig6/full_report", || {
+        black_box(fig6::report());
+    });
+    let g = Gemm::new(64, 1024, 12100);
+    b.run("fig6/one_point_2^20", || {
+        black_box(speedup_3d_over_2d(&g, 1 << 20, 4));
+    });
+}

@@ -1,0 +1,27 @@
+//! Bench F7: regenerate Fig. 7 (optimal-tier distribution over 300 random
+//! workloads × 3 budgets) and time the parallel DSE sweep — this is the
+//! heaviest analytical workload in the paper.
+
+use cube3d::dse::optimal_tiers_sweep;
+use cube3d::report::fig7;
+use cube3d::util::bench::{black_box, Bench};
+use cube3d::workloads::{random_workloads, GeneratorConfig};
+
+fn main() {
+    println!("== bench_fig7: Fig. 7 — optimal tier count distribution ==\n");
+    let r = fig7::report();
+    println!("{}", r.table.to_ascii());
+    for n in &r.notes {
+        println!("note: {n}");
+    }
+    println!();
+
+    let ws = random_workloads(&GeneratorConfig::from_resnet50(300, fig7::SEED));
+    let mut b = Bench::new(1, 5);
+    b.run("fig7/300_workloads_1_budget", || {
+        black_box(optimal_tiers_sweep(&ws, &[1 << 15], 16));
+    });
+    b.run("fig7/full_report_3_budgets", || {
+        black_box(fig7::report());
+    });
+}

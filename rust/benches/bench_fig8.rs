@@ -1,0 +1,36 @@
+//! Bench F8: regenerate Fig. 8 (thermal boxplots) and time the RC-grid
+//! solver — the hot loop of the physical-design pipeline.
+
+use cube3d::analytical::Array3d;
+use cube3d::power::{Tech, VerticalTech};
+use cube3d::report::fig8;
+use cube3d::thermal::{thermal_footprint_m2, thermal_study, ThermalParams};
+use cube3d::util::bench::{black_box, Bench};
+
+fn main() {
+    println!("== bench_fig8: Fig. 8 — temperature boxplots ==\n");
+    let r = fig8::report();
+    println!("{}", r.table.to_ascii());
+    for n in &r.notes {
+        println!("note: {n}");
+    }
+    println!();
+
+    let tech = Tech::default();
+    let params = ThermalParams::default();
+    let g = fig8::workload();
+    let arr = Array3d::new(128, 128, 3);
+    let area = thermal_footprint_m2(&arr, &tech);
+    let mut b = Bench::default();
+    b.run("fig8/one_thermal_study_3tier", || {
+        black_box(thermal_study(&g, &arr, &tech, VerticalTech::Miv, &params, area));
+    });
+    let big = Array3d::new(256, 256, 3);
+    let big_area = thermal_footprint_m2(&big, &tech);
+    b.run("fig8/one_thermal_study_3x65536", || {
+        black_box(thermal_study(&g, &big, &tech, VerticalTech::Tsv, &params, big_area));
+    });
+    b.run("fig8/full_report_15_configs", || {
+        black_box(fig8::report());
+    });
+}

@@ -1,0 +1,27 @@
+//! Bench F9: regenerate Fig. 9 (perf-per-area vs tier count, TSV vs MIV)
+//! and time the area-model evaluation.
+
+use cube3d::area::perf_per_area_vs_2d;
+use cube3d::power::{Tech, VerticalTech};
+use cube3d::report::fig9;
+use cube3d::util::bench::{black_box, Bench};
+
+fn main() {
+    println!("== bench_fig9: Fig. 9 — area-normalized performance ==\n");
+    let r = fig9::report();
+    println!("{}", r.table.to_ascii());
+    for n in &r.notes {
+        println!("note: {n}");
+    }
+    println!();
+
+    let tech = Tech::default();
+    let g = fig9::workload();
+    let mut b = Bench::default();
+    b.run("fig9/one_point_262144_12tier", || {
+        black_box(perf_per_area_vs_2d(&g, 262144, 12, &tech, VerticalTech::Miv));
+    });
+    b.run("fig9/full_report", || {
+        black_box(fig9::report());
+    });
+}

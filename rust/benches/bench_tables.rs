@@ -1,0 +1,36 @@
+//! Bench T1+T2: regenerate Table I and Table II and time the power model
+//! (Table II is the post-synthesis power substitute's showcase).
+
+use cube3d::power::{power_summary, rtl_activity, Tech, VerticalTech};
+use cube3d::report::{table1, table2};
+use cube3d::util::bench::{black_box, Bench};
+
+fn main() {
+    println!("== bench_tables: Table I + Table II ==\n");
+    let t1 = table1::report();
+    println!("{}", t1.table.to_ascii());
+    let t2 = table2::report();
+    println!("{}", t2.table.to_ascii());
+    for n in &t2.notes {
+        println!("note: {n}");
+    }
+    println!();
+
+    let tech = Tech::default();
+    let g = table2::workload();
+    let a2 = table2::array_2d();
+    let a3 = table2::array_3d();
+    let mut b = Bench::default();
+    b.run("table2/power_summary_2d_49284", || {
+        black_box(power_summary(&g, &a2, &tech, VerticalTech::Tsv));
+    });
+    b.run("table2/power_summary_3d_tsv", || {
+        black_box(power_summary(&g, &a3, &tech, VerticalTech::Tsv));
+    });
+    b.run("table2/rtl_activity_3d", || {
+        black_box(rtl_activity(&g, &a3));
+    });
+    b.run("table2/full_report", || {
+        black_box(table2::report());
+    });
+}

@@ -1,0 +1,14 @@
+//! Analytical performance model (paper §III-D).
+//!
+//! Extends SCALE-sim's 2D runtime formula (Eq. 1) to 3D (Eq. 2) and provides
+//! the array-dimension optimizer used by every figure reproduction.
+
+mod model;
+mod optimizer;
+mod speedup;
+
+pub use model::{
+    breakdown_2d, breakdown_3d, cycles_2d, cycles_3d, Array2d, Array3d, RuntimeBreakdown,
+};
+pub use optimizer::{optimize_2d, optimize_3d, OptimalDesign};
+pub use speedup::{optimal_tier_count, speedup_3d_over_2d, tier_sweep, TierPoint};

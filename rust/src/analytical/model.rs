@@ -1,0 +1,173 @@
+//! Eq. (1) and Eq. (2): runtime of OS / dOS dataflows on 2D / 3D arrays.
+
+use crate::dataflow::{dos_k_per_tier, os_folds};
+use crate::workloads::Gemm;
+
+/// A 2D systolic array: R rows × C columns of MACs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Array2d {
+    pub rows: u64,
+    pub cols: u64,
+}
+
+impl Array2d {
+    pub fn new(rows: u64, cols: u64) -> Self {
+        assert!(rows > 0 && cols > 0, "array dims must be positive");
+        Array2d { rows, cols }
+    }
+
+    pub fn macs(&self) -> u64 {
+        self.rows * self.cols
+    }
+}
+
+/// A 3D systolic array: ℓ tiers of R'×C' MACs, vertically connected piles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Array3d {
+    pub rows: u64,
+    pub cols: u64,
+    pub tiers: u64,
+}
+
+impl Array3d {
+    pub fn new(rows: u64, cols: u64, tiers: u64) -> Self {
+        assert!(rows > 0 && cols > 0 && tiers > 0, "array dims must be positive");
+        Array3d { rows, cols, tiers }
+    }
+
+    pub fn macs(&self) -> u64 {
+        self.rows * self.cols * self.tiers
+    }
+
+    pub fn per_tier(&self) -> Array2d {
+        Array2d::new(self.rows, self.cols)
+    }
+}
+
+/// Fill/compute/drain decomposition of one serialization fold, useful for
+/// reports and for validating the cycle-accurate simulator phase by phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RuntimeBreakdown {
+    /// Cycles to fill the array: R + C − 2.
+    pub fill: u64,
+    /// In-place accumulation cycles: K (2D) or ⌈K/ℓ⌉ (dOS).
+    pub compute: u64,
+    /// Cross-tier reduction cycles: ℓ − 1 (0 in 2D).
+    pub reduce: u64,
+    /// Output drain cycles: R.
+    pub drain: u64,
+    /// Number of serialization folds: ⌈M/R⌉·⌈N/C⌉.
+    pub folds: u64,
+}
+
+impl RuntimeBreakdown {
+    /// Per-fold cycles.
+    pub fn per_fold(&self) -> u64 {
+        self.fill + self.compute + self.reduce + self.drain
+    }
+
+    /// Total cycles = per-fold × folds.
+    pub fn total(&self) -> u64 {
+        self.per_fold() * self.folds
+    }
+}
+
+/// Eq. (1): `τ2D = (2R + C + K − 2)·⌈M/R⌉·⌈N/C⌉`
+/// (the paper's T is the temporal dimension, = K for OS).
+pub fn cycles_2d(g: &Gemm, a: &Array2d) -> u64 {
+    breakdown_2d(g, a).total()
+}
+
+/// Fill/compute/drain breakdown for Eq. (1). The `(2R + C + K − 2)` per-fold
+/// term decomposes as fill `(R + C − 2)` + compute `K` + drain `R`.
+pub fn breakdown_2d(g: &Gemm, a: &Array2d) -> RuntimeBreakdown {
+    let f = os_folds(g, a.rows, a.cols);
+    RuntimeBreakdown {
+        fill: a.rows + a.cols - 2,
+        compute: g.k,
+        reduce: 0,
+        drain: a.rows,
+        folds: f.m_folds * f.n_folds,
+    }
+}
+
+/// Eq. (2): `τ3D = (2R' + C' + (⌈K/ℓ⌉ + ℓ − 1) − 2)·⌈M/R'⌉·⌈N/C'⌉`.
+///
+/// With ℓ = 1 this reduces exactly to Eq. (1).
+pub fn cycles_3d(g: &Gemm, a: &Array3d) -> u64 {
+    breakdown_3d(g, a).total()
+}
+
+/// Breakdown for Eq. (2): per-tier compute is ⌈K/ℓ⌉ and the cross-tier
+/// partial-sum reduction adds ℓ − 1 cycles down each MAC pile.
+pub fn breakdown_3d(g: &Gemm, a: &Array3d) -> RuntimeBreakdown {
+    let f = os_folds(g, a.rows, a.cols);
+    RuntimeBreakdown {
+        fill: a.rows + a.cols - 2,
+        compute: dos_k_per_tier(g.k, a.tiers),
+        reduce: a.tiers - 1,
+        drain: a.rows,
+        folds: f.m_folds * f.n_folds,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq1_literal() {
+        // τ = (2R + C + K − 2)·⌈M/R⌉·⌈N/C⌉
+        let g = Gemm::new(64, 147, 255);
+        let a = Array2d::new(32, 32);
+        let expect = (2 * 32 + 32 + 255 - 2) * 2 * 5;
+        assert_eq!(cycles_2d(&g, &a), expect);
+    }
+
+    #[test]
+    fn eq2_literal() {
+        let g = Gemm::new(64, 147, 300);
+        let a = Array3d::new(32, 32, 3);
+        let expect = (2 * 32 + 32 + (100 + 3 - 1) - 2) * 2 * 5;
+        assert_eq!(cycles_3d(&g, &a), expect);
+    }
+
+    #[test]
+    fn eq2_one_tier_reduces_to_eq1() {
+        let g = Gemm::new(128, 128, 300);
+        let a3 = Array3d::new(64, 64, 1);
+        let a2 = Array2d::new(64, 64);
+        assert_eq!(cycles_3d(&g, &a3), cycles_2d(&g, &a2));
+    }
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let g = Gemm::new(100, 200, 999);
+        let a = Array3d::new(16, 48, 4);
+        let b = breakdown_3d(&g, &a);
+        assert_eq!(b.per_fold(), b.fill + b.compute + b.reduce + b.drain);
+        assert_eq!(b.total(), cycles_3d(&g, &a));
+        assert_eq!(b.folds, 7 * 5);
+        assert_eq!(b.compute, 250);
+        assert_eq!(b.reduce, 3);
+    }
+
+    #[test]
+    fn paper_example_12_tiers() {
+        // RN0 at 2^18 MACs: the headline ~9.1-9.6x regime.
+        let g = Gemm::new(64, 147, 12100);
+        let t2 = cycles_2d(&g, &Array2d::new(64, 147));
+        let t3 = cycles_3d(&g, &Array3d::new(64, 147, 12));
+        let speedup = t2 as f64 / t3 as f64;
+        assert!(speedup > 8.5 && speedup < 10.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn more_tiers_hurt_when_k_small() {
+        // Reduction overhead dominates when K/ℓ is tiny.
+        let g = Gemm::new(64, 64, 8);
+        let few = cycles_3d(&g, &Array3d::new(64, 64, 2));
+        let many = cycles_3d(&g, &Array3d::new(64, 64, 16));
+        assert!(many >= few);
+    }
+}

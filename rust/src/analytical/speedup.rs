@@ -1,0 +1,117 @@
+//! Speedup analyses built on the optimizer: the quantities plotted in
+//! Figs. 5–7 of the paper.
+
+use super::optimizer::{optimize_2d, optimize_3d, OptimalDesign};
+use crate::workloads::Gemm;
+
+/// One point of a tier sweep: tier count + optimized designs + speedup.
+#[derive(Debug, Clone, Copy)]
+pub struct TierPoint {
+    pub tiers: u64,
+    pub design_2d: OptimalDesign,
+    pub design_3d: OptimalDesign,
+    /// τ2D / τ3D with the same total MAC budget — >1 means 3D wins.
+    pub speedup: f64,
+}
+
+/// Speedup of an optimized ℓ-tier 3D array over the optimized 2D array with
+/// the same MAC budget (Fig. 5's y-axis).
+pub fn speedup_3d_over_2d(g: &Gemm, mac_budget: u64, tiers: u64) -> f64 {
+    let d2 = optimize_2d(g, mac_budget);
+    let d3 = optimize_3d(g, mac_budget, tiers);
+    d2.cycles as f64 / d3.cycles as f64
+}
+
+/// Sweep tier counts for a workload and budget (one Fig. 5 curve).
+pub fn tier_sweep(g: &Gemm, mac_budget: u64, tiers: &[u64]) -> Vec<TierPoint> {
+    let d2 = optimize_2d(g, mac_budget);
+    tiers
+        .iter()
+        .filter(|&&t| t >= 1 && mac_budget / t >= 1)
+        .map(|&t| {
+            let d3 = optimize_3d(g, mac_budget, t);
+            TierPoint {
+                tiers: t,
+                design_2d: d2,
+                design_3d: d3,
+                speedup: d2.cycles as f64 / d3.cycles as f64,
+            }
+        })
+        .collect()
+}
+
+/// The optimal tier count for a workload under a MAC budget, searching
+/// `1..=max_tiers` (Fig. 7's y-axis; the paper evaluates "reasonable tier
+/// counts ≤ 16").
+pub fn optimal_tier_count(g: &Gemm, mac_budget: u64, max_tiers: u64) -> u64 {
+    let mut best_t = 1;
+    let mut best_cycles = u64::MAX;
+    for t in 1..=max_tiers {
+        if mac_budget / t == 0 {
+            break;
+        }
+        let d = optimize_3d(g, mac_budget, t);
+        if d.cycles < best_cycles {
+            best_cycles = d.cycles;
+            best_t = t;
+        }
+    }
+    best_t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rn0_large_budget_speedup_band() {
+        // Paper: up to ~1.93x at 2 tiers, ~9.16x at 12 tiers (K=12100, 2^18).
+        let g = Gemm::new(64, 147, 12100);
+        let s2 = speedup_3d_over_2d(&g, 1 << 18, 2);
+        let s12 = speedup_3d_over_2d(&g, 1 << 18, 12);
+        assert!((1.7..=2.1).contains(&s2), "2-tier speedup {s2}");
+        assert!((8.5..=10.0).contains(&s12), "12-tier speedup {s12}");
+    }
+
+    #[test]
+    fn small_k_small_budget_is_slower() {
+        // Paper: K=255 at 2^12 MACs loses ~51% vs 2D.
+        let g = Gemm::new(64, 147, 255);
+        let s = speedup_3d_over_2d(&g, 1 << 12, 12);
+        assert!(s < 1.0, "expected slowdown, got {s}");
+    }
+
+    #[test]
+    fn threshold_mn() {
+        // Below the M·N MAC threshold 3D gives no real benefit (Fig. 6 dashed
+        // line); above it the speedup takes off. Small residual speedups
+        // below threshold are fold-quantization artifacts of Eq. 1/2.
+        let g = Gemm::new(64, 147, 12100); // M·N = 9408
+        let below = speedup_3d_over_2d(&g, 4096, 4);
+        let above = speedup_3d_over_2d(&g, 65536, 4);
+        assert!(below <= 1.3, "below-threshold speedup {below}");
+        assert!(above > 2.0, "above-threshold speedup {above}");
+        assert!(above > 1.5 * below);
+    }
+
+    #[test]
+    fn tier_sweep_monotone_budget_use() {
+        let g = Gemm::new(64, 147, 12100);
+        let pts = tier_sweep(&g, 1 << 18, &[1, 2, 4, 8, 12]);
+        assert_eq!(pts.len(), 5);
+        // 1 tier must be speedup 1.0 by construction.
+        assert!((pts[0].speedup - 1.0).abs() < 1e-12);
+        // With huge K the speedup grows with tier count in this range.
+        assert!(pts[4].speedup > pts[1].speedup);
+    }
+
+    #[test]
+    fn optimal_tiers_grows_with_budget() {
+        // Fig. 7's trend: larger MAC budgets favor more tiers.
+        let g = Gemm::new(64, 147, 12100);
+        let t_small = optimal_tier_count(&g, 1 << 12, 16);
+        let t_large = optimal_tier_count(&g, 1 << 18, 16);
+        assert!(t_large >= t_small);
+        assert!(t_large > 4);
+    }
+}

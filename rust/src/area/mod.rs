@@ -1,0 +1,128 @@
+//! Area model (paper §IV-D, Fig. 9).
+//!
+//! Computes silicon area of 2D and 3D arrays (per-tier and total) from
+//! 15 nm MAC area plus vertical-link overheads: TSV arrays with keep-out
+//! zones [20], MIVs [22] or F2F bond pads, and a small per-tier periphery
+//! overhead for monolithic integration. The paper's Fig. 9 metric —
+//! area-normalized performance relative to 2D — is `perf_per_area_vs_2d`.
+
+use crate::analytical::{optimize_2d, optimize_3d, Array3d};
+use crate::power::{Tech, VerticalTech};
+use crate::workloads::Gemm;
+
+/// Footprint of one tier, m²: MAC grid plus the vertical-link area billed to
+/// this tier. The paper takes the worst-case provision — a dedicated via
+/// array between *every* vertically adjacent MAC pair — so every non-top
+/// interface charges `vertical_bits` vias per MAC position.
+pub fn tier_area_m2(array: &Array3d, tech: &Tech, vtech: VerticalTech) -> f64 {
+    let macs_per_tier = (array.rows * array.cols) as f64;
+    let mac_area = macs_per_tier * tech.a_mac_m2;
+    if array.tiers == 1 {
+        return mac_area;
+    }
+    // Via arrays exist on ℓ−1 interfaces; average per tier.
+    let via_area = macs_per_tier
+        * tech.a_vertical_m2(vtech)
+        * (array.tiers - 1) as f64
+        / array.tiers as f64;
+    // Monolithic/F2F integration adds a few percent periphery per extra tier.
+    let periphery = match vtech {
+        VerticalTech::Tsv => 0.0,
+        _ => mac_area * tech.miv_tier_overhead,
+    };
+    mac_area + via_area + periphery
+}
+
+/// Total silicon area over all tiers, m² (the Fig. 9 denominator).
+pub fn total_area_m2(array: &Array3d, tech: &Tech, vtech: VerticalTech) -> f64 {
+    tier_area_m2(array, tech, vtech) * array.tiers as f64
+}
+
+/// One Fig. 9 data point: performance per area of an optimized ℓ-tier 3D
+/// array relative to the optimized 2D array with the same MAC budget.
+///
+/// perf/area = (1/τ)/area; the returned value is
+/// `(τ2D · area2D) / (τ3D · area3D)` — >1 means 3D wins.
+pub fn perf_per_area_vs_2d(
+    g: &Gemm,
+    mac_budget: u64,
+    tiers: u64,
+    tech: &Tech,
+    vtech: VerticalTech,
+) -> f64 {
+    let d2 = optimize_2d(g, mac_budget);
+    let d3 = optimize_3d(g, mac_budget, tiers);
+    let a2 = total_area_m2(&d2.array3d(), tech, VerticalTech::Tsv); // 1 tier: no via area
+    let a3 = total_area_m2(&d3.array3d(), tech, vtech);
+    (d2.cycles as f64 * a2) / (d3.cycles as f64 * a3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_d_area_is_mac_area() {
+        let t = Tech::default();
+        let a = tier_area_m2(&Array3d::new(222, 222, 1), &t, VerticalTech::Tsv);
+        assert!((a - 222.0 * 222.0 * t.a_mac_m2).abs() < 1e-18);
+    }
+
+    #[test]
+    fn tsv_overhead_dominates_miv() {
+        let t = Tech::default();
+        let arr = Array3d::new(128, 128, 3);
+        let tsv = tier_area_m2(&arr, &t, VerticalTech::Tsv);
+        let miv = tier_area_m2(&arr, &t, VerticalTech::Miv);
+        assert!(tsv > 2.0 * miv, "tsv {tsv} miv {miv}");
+    }
+
+    #[test]
+    fn miv_overhead_few_percent() {
+        // §IV-D: "Monolithic integration only adds a few percent overhead".
+        let t = Tech::default();
+        let arr = Array3d::new(128, 128, 4);
+        let base = 128.0 * 128.0 * t.a_mac_m2;
+        let miv = tier_area_m2(&arr, &t, VerticalTech::Miv);
+        let overhead = (miv - base) / base;
+        assert!(overhead > 0.0 && overhead < 0.05, "overhead {overhead}");
+    }
+
+    #[test]
+    fn fig9_small_budget_tsv_loses() {
+        // Paper: for 4096 MACs, TSV perf/area is worse than 2D (up to −75%).
+        let g = Gemm::new(64, 147, 12100);
+        let t = Tech::default();
+        let r = perf_per_area_vs_2d(&g, 4096, 4, &t, VerticalTech::Tsv);
+        assert!(r < 1.0, "got {r}");
+    }
+
+    #[test]
+    fn fig9_large_budget_tsv_wins() {
+        // Paper: at 262144 MACs and >4 tiers, TSV improves 1.27–2.83×.
+        let g = Gemm::new(64, 147, 12100);
+        let t = Tech::default();
+        let r = perf_per_area_vs_2d(&g, 1 << 18, 8, &t, VerticalTech::Tsv);
+        assert!(r > 1.1 && r < 3.5, "got {r}");
+    }
+
+    #[test]
+    fn fig9_miv_beats_tsv() {
+        // Paper: MIV reaches up to ~7.9× at large MAC counts.
+        let g = Gemm::new(64, 147, 12100);
+        let t = Tech::default();
+        let tsv = perf_per_area_vs_2d(&g, 1 << 18, 12, &t, VerticalTech::Tsv);
+        let miv = perf_per_area_vs_2d(&g, 1 << 18, 12, &t, VerticalTech::Miv);
+        assert!(miv > tsv);
+        assert!(miv > 5.0 && miv < 10.0, "miv {miv}");
+    }
+
+    #[test]
+    fn fig9_f2f_two_tier_band() {
+        // Paper: two tiers F2F give 1.19–1.97× better perf/area.
+        let g = Gemm::new(64, 147, 12100);
+        let t = Tech::default();
+        let r = perf_per_area_vs_2d(&g, 1 << 18, 2, &t, VerticalTech::FaceToFace);
+        assert!(r > 1.1 && r < 2.1, "got {r}");
+    }
+}

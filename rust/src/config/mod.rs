@@ -1,0 +1,195 @@
+//! Experiment configuration: JSON-backed config system for the CLI, DSE
+//! engine and serving coordinator.
+//!
+//! A config file fully describes a reproduction run:
+//!
+//! ```json
+//! {
+//!   "workload": {"m": 64, "n": 147, "k": 12100},
+//!   "mac_budgets": [4096, 32768, 262144],
+//!   "tiers": [1, 2, 4, 8, 12],
+//!   "vertical_tech": "tsv",
+//!   "seed": 7,
+//!   "out_dir": "reports"
+//! }
+//! ```
+//!
+//! Unknown keys are rejected so typos fail loudly.
+
+use crate::power::VerticalTech;
+use crate::util::json::Json;
+use crate::workloads::Gemm;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+/// A fully resolved experiment configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    pub workload: Gemm,
+    pub mac_budgets: Vec<u64>,
+    pub tiers: Vec<u64>,
+    pub vertical_tech: VerticalTech,
+    pub seed: u64,
+    pub out_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            workload: Gemm::new(64, 147, 12100), // RN0
+            mac_budgets: vec![1 << 12, 1 << 15, 1 << 18],
+            tiers: vec![1, 2, 3, 4, 6, 8, 10, 12],
+            vertical_tech: VerticalTech::Tsv,
+            seed: 7,
+            out_dir: "reports".to_string(),
+        }
+    }
+}
+
+const KNOWN_KEYS: &[&str] = &[
+    "workload",
+    "mac_budgets",
+    "tiers",
+    "vertical_tech",
+    "seed",
+    "out_dir",
+];
+
+impl ExperimentConfig {
+    /// Parse from a JSON document; absent fields keep their defaults.
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        let obj = doc.as_obj().ok_or_else(|| anyhow!("config must be a JSON object"))?;
+        for k in obj.keys() {
+            if !KNOWN_KEYS.contains(&k.as_str()) {
+                bail!("unknown config key '{k}' (known: {KNOWN_KEYS:?})");
+            }
+        }
+        let mut cfg = ExperimentConfig::default();
+        if let Some(w) = doc.get("workload") {
+            let m = w.get("m").and_then(Json::as_u64).ok_or_else(|| anyhow!("workload.m"))?;
+            let n = w.get("n").and_then(Json::as_u64).ok_or_else(|| anyhow!("workload.n"))?;
+            let k = w.get("k").and_then(Json::as_u64).ok_or_else(|| anyhow!("workload.k"))?;
+            cfg.workload = Gemm::new(m, n, k);
+        }
+        if let Some(b) = doc.get("mac_budgets") {
+            cfg.mac_budgets = parse_u64_array(b).context("mac_budgets")?;
+        }
+        if let Some(t) = doc.get("tiers") {
+            cfg.tiers = parse_u64_array(t).context("tiers")?;
+        }
+        if let Some(v) = doc.get("vertical_tech") {
+            cfg.vertical_tech = parse_vtech(v.as_str().unwrap_or(""))?;
+        }
+        if let Some(s) = doc.get("seed") {
+            cfg.seed = s.as_u64().ok_or_else(|| anyhow!("seed must be a non-negative integer"))?;
+        }
+        if let Some(o) = doc.get("out_dir") {
+            cfg.out_dir = o
+                .as_str()
+                .ok_or_else(|| anyhow!("out_dir must be a string"))?
+                .to_string();
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let doc = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        Self::from_json(&doc)
+    }
+
+    /// Sanity-check ranges.
+    pub fn validate(&self) -> Result<()> {
+        if self.mac_budgets.is_empty() || self.tiers.is_empty() {
+            bail!("mac_budgets and tiers must be non-empty");
+        }
+        if self.mac_budgets.iter().any(|&b| b == 0) {
+            bail!("mac budgets must be positive");
+        }
+        if self.tiers.iter().any(|&t| t == 0 || t > 64) {
+            bail!("tier counts must be in 1..=64");
+        }
+        for &t in &self.tiers {
+            if t > self.vertical_tech.max_tiers() {
+                bail!(
+                    "{} supports at most {} tiers (requested {t})",
+                    self.vertical_tech.name(),
+                    self.vertical_tech.max_tiers()
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+fn parse_u64_array(j: &Json) -> Result<Vec<u64>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("expected array"))?
+        .iter()
+        .map(|v| v.as_u64().ok_or_else(|| anyhow!("expected non-negative integer")))
+        .collect()
+}
+
+/// Parse a vertical-technology name (case-insensitive).
+pub fn parse_vtech(s: &str) -> Result<VerticalTech> {
+    match s.to_ascii_lowercase().as_str() {
+        "tsv" => Ok(VerticalTech::Tsv),
+        "miv" => Ok(VerticalTech::Miv),
+        "f2f" | "face-to-face" => Ok(VerticalTech::FaceToFace),
+        other => bail!("unknown vertical_tech '{other}' (tsv|miv|f2f)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let doc = Json::parse(
+            r#"{"workload": {"m": 10, "n": 20, "k": 30},
+                "mac_budgets": [64], "tiers": [1, 2],
+                "vertical_tech": "miv", "seed": 3, "out_dir": "x"}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.workload, Gemm::new(10, 20, 30));
+        assert_eq!(cfg.vertical_tech, VerticalTech::Miv);
+        assert_eq!(cfg.seed, 3);
+        assert_eq!(cfg.out_dir, "x");
+    }
+
+    #[test]
+    fn defaults_fill_absent_fields() {
+        let cfg = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(cfg, ExperimentConfig::default());
+    }
+
+    #[test]
+    fn rejects_unknown_keys() {
+        let doc = Json::parse(r#"{"workloda": 1}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn rejects_f2f_with_many_tiers() {
+        let doc = Json::parse(r#"{"vertical_tech": "f2f", "tiers": [1, 2, 4]}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn rejects_zero_budget() {
+        let doc = Json::parse(r#"{"mac_budgets": [0]}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn vtech_parse_aliases() {
+        assert_eq!(parse_vtech("TSV").unwrap(), VerticalTech::Tsv);
+        assert_eq!(parse_vtech("face-to-face").unwrap(), VerticalTech::FaceToFace);
+        assert!(parse_vtech("xyz").is_err());
+    }
+}

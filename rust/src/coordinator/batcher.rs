@@ -1,0 +1,150 @@
+//! Dynamic batcher: groups queued jobs by execution plan so the executor
+//! amortizes artifact dispatch (and, for tiled plans, reuses tiling state).
+
+use super::job::GemmJob;
+use super::router::ExecutionPlan;
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// Batching policy.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Max jobs per batch.
+    pub max_batch: usize,
+    /// Max jobs waiting before a batch is forced out even if not full.
+    pub max_queue: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 16, max_queue: 64 }
+    }
+}
+
+/// A batch of same-plan jobs (with their enqueue timestamps).
+#[derive(Debug)]
+pub struct Batch {
+    pub plan: ExecutionPlan,
+    pub jobs: Vec<(GemmJob, Instant)>,
+}
+
+/// FIFO-fair, plan-grouped batcher.
+///
+/// Jobs are kept in arrival order; a batch is formed from the oldest job's
+/// plan, pulling every queued job with the same plan (up to `max_batch`).
+/// This preserves fairness (head-of-line plan goes first) while maximizing
+/// grouping.
+#[derive(Debug)]
+pub struct Batcher {
+    cfg: BatcherConfig,
+    queue: VecDeque<(GemmJob, ExecutionPlan, Instant)>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        Batcher { cfg, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, job: GemmJob, plan: ExecutionPlan) {
+        self.queue.push_back((job, plan, Instant::now()));
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Should the executor drain now? (full batch available or queue over
+    /// the pressure limit — the caller may also drain on idle.)
+    pub fn ready(&self) -> bool {
+        self.queue.len() >= self.cfg.max_batch || self.queue.len() >= self.cfg.max_queue
+    }
+
+    /// Form the next batch: the oldest job's plan, plus all same-plan jobs
+    /// behind it, up to `max_batch`. Returns None if the queue is empty.
+    pub fn next_batch(&mut self) -> Option<Batch> {
+        let (_, head_plan, _) = self.queue.front()?;
+        let plan = head_plan.clone();
+        let mut jobs = Vec::new();
+        let mut rest = VecDeque::new();
+        while let Some((job, p, t)) = self.queue.pop_front() {
+            if p == plan && jobs.len() < self.cfg.max_batch {
+                jobs.push((job, t));
+            } else {
+                rest.push_back((job, p, t));
+            }
+        }
+        self.queue = rest;
+        Some(Batch { plan, jobs })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Matrix;
+
+    fn job(id: u64) -> GemmJob {
+        GemmJob::new(id, "t", Matrix::zeros(2, 2), Matrix::zeros(2, 2))
+    }
+
+    fn exact(name: &str) -> ExecutionPlan {
+        ExecutionPlan::Exact { artifact: name.into() }
+    }
+
+    #[test]
+    fn batches_group_by_plan() {
+        let mut b = Batcher::new(BatcherConfig::default());
+        b.push(job(1), exact("x"));
+        b.push(job(2), exact("y"));
+        b.push(job(3), exact("x"));
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.plan, exact("x"));
+        let ids: Vec<u64> = batch.jobs.iter().map(|(j, _)| j.id).collect();
+        assert_eq!(ids, vec![1, 3]);
+        // Next batch picks up the remaining plan.
+        let batch2 = b.next_batch().unwrap();
+        assert_eq!(batch2.plan, exact("y"));
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn respects_max_batch() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 2, max_queue: 100 });
+        for i in 0..5 {
+            b.push(job(i), exact("x"));
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.jobs.len(), 2);
+        assert_eq!(b.len(), 3);
+    }
+
+    #[test]
+    fn ready_on_pressure() {
+        let mut b = Batcher::new(BatcherConfig { max_batch: 100, max_queue: 3 });
+        assert!(!b.ready());
+        for i in 0..3 {
+            b.push(job(i), exact("x"));
+        }
+        assert!(b.ready());
+    }
+
+    #[test]
+    fn empty_queue_no_batch() {
+        let mut b = Batcher::new(BatcherConfig::default());
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn fifo_order_within_plan() {
+        let mut b = Batcher::new(BatcherConfig::default());
+        for i in 0..5 {
+            b.push(job(i), exact("x"));
+        }
+        let ids: Vec<u64> = b.next_batch().unwrap().jobs.iter().map(|(j, _)| j.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+    }
+}

@@ -1,0 +1,63 @@
+//! Job and result types flowing through the coordinator.
+
+use crate::analytical::OptimalDesign;
+use crate::sim::Matrix;
+use crate::workloads::Gemm;
+use std::time::Duration;
+
+/// A GEMM request: compute `A·B`.
+#[derive(Debug, Clone)]
+pub struct GemmJob {
+    pub id: u64,
+    /// Human-readable provenance (e.g. the Table I layer label).
+    pub label: String,
+    pub a: Matrix<f32>,
+    pub b: Matrix<f32>,
+}
+
+impl GemmJob {
+    pub fn new(id: u64, label: impl Into<String>, a: Matrix<f32>, b: Matrix<f32>) -> Self {
+        assert_eq!(a.cols, b.rows, "inner dims must match");
+        GemmJob { id, label: label.into(), a, b }
+    }
+
+    /// The workload descriptor of this job.
+    pub fn gemm(&self) -> Gemm {
+        Gemm::new(self.a.rows as u64, self.b.cols as u64, self.a.cols as u64)
+    }
+}
+
+/// A completed job.
+#[derive(Debug)]
+pub struct JobResult {
+    pub id: u64,
+    pub label: String,
+    pub output: Matrix<f32>,
+    /// Wall-clock time inside the executor (excludes queue wait).
+    pub exec_time: Duration,
+    /// Total time from submit to completion.
+    pub total_time: Duration,
+    /// Which plan ran it ("artifact:<name>" or "tiled:<name>").
+    pub plan: String,
+    /// The 3D design the analytical model recommends for this shape, and
+    /// its modeled speedup over the 2D design with the same MAC budget.
+    pub design: OptimalDesign,
+    pub modeled_speedup_3d: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_gemm_dims() {
+        let j = GemmJob::new(1, "t", Matrix::zeros(3, 5), Matrix::zeros(5, 7));
+        assert_eq!(j.gemm(), Gemm::new(3, 7, 5));
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dims")]
+    fn job_rejects_mismatch() {
+        GemmJob::new(1, "t", Matrix::zeros(3, 5), Matrix::zeros(4, 7));
+    }
+}

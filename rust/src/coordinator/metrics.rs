@@ -1,0 +1,101 @@
+//! Serving metrics: counters plus a latency reservoir with percentiles.
+
+use crate::util::stats::{boxplot, Boxplot};
+use std::time::Duration;
+
+/// Aggregated coordinator metrics.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub jobs_completed: u64,
+    pub batches: u64,
+    pub pjrt_executions: u64,
+    pub tiled_folds: u64,
+    latencies_us: Vec<f64>,
+    exec_us: Vec<f64>,
+    started: Option<std::time::Instant>,
+    pub wall: Duration,
+}
+
+impl Metrics {
+    pub fn start(&mut self) {
+        self.started = Some(std::time::Instant::now());
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(s) = self.started.take() {
+            self.wall += s.elapsed();
+        }
+    }
+
+    pub fn record_job(&mut self, total: Duration, exec: Duration) {
+        self.jobs_completed += 1;
+        self.latencies_us.push(total.as_secs_f64() * 1e6);
+        self.exec_us.push(exec.as_secs_f64() * 1e6);
+    }
+
+    /// Jobs per second over the recorded wall time.
+    pub fn throughput(&self) -> f64 {
+        let secs = self.wall.as_secs_f64();
+        if secs == 0.0 {
+            0.0
+        } else {
+            self.jobs_completed as f64 / secs
+        }
+    }
+
+    /// End-to-end latency distribution (µs).
+    pub fn latency_summary(&self) -> Option<Boxplot> {
+        if self.latencies_us.is_empty() {
+            None
+        } else {
+            Some(boxplot(&self.latencies_us))
+        }
+    }
+
+    /// Executor-only latency distribution (µs).
+    pub fn exec_summary(&self) -> Option<Boxplot> {
+        if self.exec_us.is_empty() {
+            None
+        } else {
+            Some(boxplot(&self.exec_us))
+        }
+    }
+
+    pub fn p95_latency_us(&self) -> f64 {
+        if self.latencies_us.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.latencies_us.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        crate::util::stats::quantile(&v, 0.95)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes() {
+        let mut m = Metrics::default();
+        m.start();
+        for i in 1..=10 {
+            m.record_job(Duration::from_micros(i * 100), Duration::from_micros(i * 50));
+        }
+        m.stop();
+        assert_eq!(m.jobs_completed, 10);
+        let s = m.latency_summary().unwrap();
+        assert_eq!(s.n, 10);
+        assert!(s.max >= s.min);
+        assert!(m.p95_latency_us() >= s.median);
+        assert!(m.throughput() > 0.0);
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = Metrics::default();
+        assert!(m.latency_summary().is_none());
+        assert_eq!(m.p95_latency_us(), 0.0);
+        assert_eq!(m.throughput(), 0.0);
+    }
+}

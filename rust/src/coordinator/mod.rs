@@ -1,0 +1,28 @@
+//! Layer 3 — the serving coordinator.
+//!
+//! A vLLM-router-style front end for the accelerator runtime: GEMM jobs are
+//! submitted to a queue, the **router** picks an execution plan per shape
+//! (an exact-shape AOT artifact when one exists, otherwise tiled execution
+//! over a base artifact — the runtime-level analogue of the paper's
+//! serialization folds), the **batcher** groups same-plan jobs to amortize
+//! dispatch, and a single **executor** thread owns the PJRT runtime and
+//! drains batches, returning results over channels.
+//!
+//! The router also consults the analytical model (Eq. 2 + optimizer) to
+//! annotate every job with the 3D design the paper's methodology would pick
+//! for it — the serving example reports both measured latency and the
+//! modeled 2D→3D speedup per request.
+
+mod batcher;
+mod job;
+mod metrics;
+mod router;
+mod server;
+mod tiler;
+
+pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use job::{GemmJob, JobResult};
+pub use metrics::Metrics;
+pub use router::{ExecutionPlan, Router, RouterConfig};
+pub use server::Coordinator;
+pub use tiler::{fold_count, tiled_gemm};

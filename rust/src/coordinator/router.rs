@@ -1,0 +1,157 @@
+//! Request router: shape → execution plan + 3D design annotation.
+
+use crate::analytical::{optimal_tier_count, optimize_2d, optimize_3d, OptimalDesign};
+use crate::runtime::Manifest;
+use crate::workloads::Gemm;
+use std::collections::HashMap;
+
+/// Routing policy parameters.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// MAC budget of the modeled accelerator (used for design annotation).
+    pub mac_budget: u64,
+    /// Maximum tier count the modeled 3D stack can have.
+    pub max_tiers: u64,
+    /// Artifact used for tiled execution of shapes with no exact artifact.
+    pub base_artifact: String,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            mac_budget: 1 << 18,
+            max_tiers: 12,
+            base_artifact: "gemm_quickstart".to_string(),
+        }
+    }
+}
+
+/// How a job will execute.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ExecutionPlan {
+    /// An AOT artifact matches the job's exact shape.
+    Exact { artifact: String },
+    /// Tile the job over the base artifact's shape (runtime-level folds).
+    Tiled { artifact: String },
+}
+
+impl ExecutionPlan {
+    pub fn describe(&self) -> String {
+        match self {
+            ExecutionPlan::Exact { artifact } => format!("artifact:{artifact}"),
+            ExecutionPlan::Tiled { artifact } => format!("tiled:{artifact}"),
+        }
+    }
+}
+
+/// The router: caches per-shape decisions (plan + modeled 3D design).
+pub struct Router {
+    cfg: RouterConfig,
+    /// Exact-shape index: (m, k, n) → artifact name.
+    exact: HashMap<(u64, u64, u64), String>,
+    /// Design cache: workload → (design, speedup).
+    designs: HashMap<Gemm, (OptimalDesign, f64)>,
+}
+
+impl Router {
+    /// Build the exact-shape index from the artifact manifest.
+    pub fn new(cfg: RouterConfig, manifest: &Manifest) -> Self {
+        let mut exact = HashMap::new();
+        for name in manifest.names() {
+            let meta = manifest.get(name).unwrap();
+            if meta.kind == "gemm" && meta.inputs.len() == 2 {
+                let (m, k) = (meta.inputs[0][0], meta.inputs[0][1]);
+                let n = meta.inputs[1][1];
+                exact.insert((m, k, n), name.to_string());
+            }
+        }
+        Router { cfg, exact, designs: HashMap::new() }
+    }
+
+    /// Choose the execution plan for a workload shape.
+    pub fn plan(&self, g: &Gemm) -> ExecutionPlan {
+        if let Some(name) = self.exact.get(&(g.m, g.k, g.n)) {
+            ExecutionPlan::Exact { artifact: name.clone() }
+        } else {
+            ExecutionPlan::Tiled { artifact: self.cfg.base_artifact.clone() }
+        }
+    }
+
+    /// The 3D design the paper's methodology picks for this shape under the
+    /// router's MAC budget, plus its modeled speedup over 2D. Cached.
+    pub fn design_for(&mut self, g: &Gemm) -> (OptimalDesign, f64) {
+        if let Some(hit) = self.designs.get(g) {
+            return *hit;
+        }
+        let tiers = optimal_tier_count(g, self.cfg.mac_budget, self.cfg.max_tiers);
+        let d3 = optimize_3d(g, self.cfg.mac_budget, tiers);
+        let d2 = optimize_2d(g, self.cfg.mac_budget);
+        let speedup = d2.cycles as f64 / d3.cycles as f64;
+        self.designs.insert(*g, (d3, speedup));
+        (d3, speedup)
+    }
+
+    pub fn config(&self) -> &RouterConfig {
+        &self.cfg
+    }
+
+    /// Number of exact-shape artifacts indexed.
+    pub fn exact_shapes(&self) -> usize {
+        self.exact.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+    use std::path::Path;
+
+    fn manifest_fixture() -> Manifest {
+        let dir = std::env::temp_dir().join(format!("cube3d_router_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let body = r#"{
+            "gemm_quickstart": {"file": "q.hlo.txt", "kind": "gemm",
+                "inputs": [[64, 256], [256, 96]], "tiers": 4},
+            "mlp": {"file": "m.hlo.txt", "kind": "mlp",
+                "inputs": [[32, 784], [784, 512], [512, 10]], "tiers": 4}
+        }"#;
+        // Validate the fixture is proper JSON before writing.
+        Json::parse(body).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+        let m = Manifest::load(Path::new(&dir)).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        m
+    }
+
+    #[test]
+    fn exact_shape_routes_to_artifact() {
+        let r = Router::new(RouterConfig::default(), &manifest_fixture());
+        let plan = r.plan(&Gemm::new(64, 96, 256));
+        assert_eq!(plan, ExecutionPlan::Exact { artifact: "gemm_quickstart".into() });
+    }
+
+    #[test]
+    fn other_shapes_route_to_tiled() {
+        let r = Router::new(RouterConfig::default(), &manifest_fixture());
+        let plan = r.plan(&Gemm::new(100, 100, 100));
+        assert!(matches!(plan, ExecutionPlan::Tiled { .. }));
+    }
+
+    #[test]
+    fn mlp_not_indexed_as_gemm() {
+        let r = Router::new(RouterConfig::default(), &manifest_fixture());
+        assert_eq!(r.exact_shapes(), 1);
+    }
+
+    #[test]
+    fn design_cache_hits() {
+        let mut r = Router::new(RouterConfig::default(), &manifest_fixture());
+        let g = Gemm::new(64, 147, 12100);
+        let (d1, s1) = r.design_for(&g);
+        let (d2, s2) = r.design_for(&g);
+        assert_eq!(d1, d2);
+        assert_eq!(s1, s2);
+        assert!(s1 > 5.0, "RN0 at 2^18 should favor 3D strongly, got {s1}");
+    }
+}

@@ -1,0 +1,187 @@
+//! The coordinator: submit queue → router → batcher → executor thread.
+//!
+//! `tokio` is unavailable offline, so the leader/worker topology uses std
+//! threads and mpsc channels: one executor thread owns the PJRT [`Runtime`]
+//! (PJRT handles are not `Sync`); the public handle is `Send + Clone`-free
+//! but cheap to drive from the caller's thread.
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::job::{GemmJob, JobResult};
+use super::router::{ExecutionPlan, Router, RouterConfig};
+use super::metrics::Metrics;
+use super::tiler::tiled_gemm;
+use crate::runtime::Runtime;
+use anyhow::{anyhow, Result};
+use std::path::Path;
+use std::sync::mpsc;
+use std::time::Instant;
+
+enum Command {
+    Run(GemmJob, Instant, mpsc::Sender<Result<JobResult>>),
+    Shutdown,
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    tx: mpsc::Sender<Command>,
+    worker: Option<std::thread::JoinHandle<Metrics>>,
+}
+
+impl Coordinator {
+    /// Start the executor thread: loads the runtime, warms up the
+    /// executable cache, builds the router from the manifest.
+    pub fn start(
+        artifact_dir: &Path,
+        router_cfg: RouterConfig,
+        batcher_cfg: BatcherConfig,
+    ) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Command>();
+        let dir = artifact_dir.to_path_buf();
+        // Fail fast: validate the runtime on the caller's thread first.
+        {
+            let rt = Runtime::new(&dir)?;
+            if rt.manifest().get(&router_cfg.base_artifact).is_none() {
+                return Err(anyhow!(
+                    "base artifact '{}' not in manifest",
+                    router_cfg.base_artifact
+                ));
+            }
+        }
+        let worker = std::thread::Builder::new()
+            .name("cube3d-executor".into())
+            .spawn(move || executor_loop(&dir, router_cfg, batcher_cfg, rx))
+            .expect("spawn executor");
+        Ok(Coordinator { tx, worker: Some(worker) })
+    }
+
+    /// Submit a job; returns a receiver for its result.
+    pub fn submit(&self, job: GemmJob) -> mpsc::Receiver<Result<JobResult>> {
+        let (rtx, rrx) = mpsc::channel();
+        let _ = self.tx.send(Command::Run(job, Instant::now(), rtx));
+        rrx
+    }
+
+    /// Drive a whole trace through the queue and collect results in order.
+    pub fn run_trace(&self, jobs: Vec<GemmJob>) -> Result<Vec<JobResult>> {
+        let receivers: Vec<_> = jobs.into_iter().map(|j| self.submit(j)).collect();
+        receivers
+            .into_iter()
+            .map(|r| r.recv().map_err(|e| anyhow!("executor died: {e}"))?)
+            .collect()
+    }
+
+    /// Shut down and return the executor's metrics.
+    pub fn finish(mut self) -> Metrics {
+        let _ = self.tx.send(Command::Shutdown);
+        self.worker
+            .take()
+            .expect("finish called once")
+            .join()
+            .expect("executor panicked")
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Command::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn executor_loop(
+    dir: &Path,
+    router_cfg: RouterConfig,
+    batcher_cfg: BatcherConfig,
+    rx: mpsc::Receiver<Command>,
+) -> Metrics {
+    let mut rt = Runtime::new(dir).expect("runtime validated at start");
+    let _ = rt.warm_up();
+    let mut router = Router::new(router_cfg, rt.manifest());
+    let mut batcher = Batcher::new(batcher_cfg);
+    let mut metrics = Metrics::default();
+    metrics.start();
+    // Reply channels per job id.
+    let mut replies: std::collections::HashMap<u64, (mpsc::Sender<Result<JobResult>>, Instant)> =
+        std::collections::HashMap::new();
+
+    let mut shutdown = false;
+    while !shutdown || !batcher.is_empty() {
+        // Ingest: block for the first command when idle, then drain.
+        if batcher.is_empty() && !shutdown {
+            match rx.recv() {
+                Ok(cmd) => ingest(cmd, &mut batcher, &mut router, &mut replies, &mut shutdown),
+                Err(_) => break,
+            }
+        }
+        while let Ok(cmd) = rx.try_recv() {
+            ingest(cmd, &mut batcher, &mut router, &mut replies, &mut shutdown);
+            if batcher.ready() {
+                break;
+            }
+        }
+        // Drain one batch.
+        if let Some(batch) = batcher.next_batch() {
+            metrics.batches += 1;
+            for (job, _) in batch.jobs {
+                let (reply, submit_t) = replies
+                    .remove(&job.id)
+                    .expect("every queued job has a reply channel");
+                let g = job.gemm();
+                let (design, speedup) = router.design_for(&g);
+                let exec_start = Instant::now();
+                let (result, folds) = match &batch.plan {
+                    ExecutionPlan::Exact { artifact } => {
+                        (rt.run_gemm(artifact, &job.a, &job.b), 1u64)
+                    }
+                    ExecutionPlan::Tiled { artifact } => {
+                        match tiled_gemm(&mut rt, artifact, &job.a, &job.b) {
+                            Ok((out, folds)) => (Ok(out), folds),
+                            Err(e) => (Err(e), 0),
+                        }
+                    }
+                };
+                let exec_time = exec_start.elapsed();
+                let total_time = submit_t.elapsed();
+                metrics.tiled_folds += folds.saturating_sub(1);
+                let msg = result.map(|output| {
+                    metrics.record_job(total_time, exec_time);
+                    JobResult {
+                        id: job.id,
+                        label: job.label.clone(),
+                        output,
+                        exec_time,
+                        total_time,
+                        plan: batch.plan.describe(),
+                        design,
+                        modeled_speedup_3d: speedup,
+                    }
+                });
+                let _ = reply.send(msg);
+            }
+        }
+    }
+    metrics.pjrt_executions = rt.executions;
+    metrics.stop();
+    metrics
+}
+
+fn ingest(
+    cmd: Command,
+    batcher: &mut Batcher,
+    router: &mut Router,
+    replies: &mut std::collections::HashMap<u64, (mpsc::Sender<Result<JobResult>>, Instant)>,
+    shutdown: &mut bool,
+) {
+    match cmd {
+        Command::Run(job, t, reply) => {
+            let plan = router.plan(&job.gemm());
+            replies.insert(job.id, (reply, t));
+            batcher.push(job, plan);
+        }
+        Command::Shutdown => *shutdown = true,
+    }
+}
+
+// Integration tests (require artifacts) live in rust/tests/coordinator_e2e.rs.

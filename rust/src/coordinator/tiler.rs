@@ -1,0 +1,102 @@
+//! Tiled GEMM execution: run an arbitrary-shape GEMM on a fixed-shape AOT
+//! artifact by decomposing it into padded blocks — the runtime-level
+//! analogue of the paper's serialization folds (⌈M/R⌉·⌈N/C⌉·⌈K/T⌉ tiles,
+//! with K-tiles accumulated like the dOS partial-sum reduction).
+
+use crate::runtime::Runtime;
+use crate::sim::Matrix;
+use anyhow::{bail, Result};
+
+/// Compute `A·B` for arbitrary shapes using the fixed-shape `artifact`
+/// (whose GEMM shape is `am×ak · ak×bn`). Edge tiles are zero-padded;
+/// K-tiles accumulate into the output.
+///
+/// Returns the result plus the number of artifact executions (folds).
+pub fn tiled_gemm(
+    rt: &mut Runtime,
+    artifact: &str,
+    a: &Matrix<f32>,
+    b: &Matrix<f32>,
+) -> Result<(Matrix<f32>, u64)> {
+    let meta = rt.meta(artifact)?;
+    if meta.kind != "gemm" {
+        bail!("tiled_gemm needs a gemm artifact, got '{}'", meta.kind);
+    }
+    let (am, ak) = (meta.inputs[0][0] as usize, meta.inputs[0][1] as usize);
+    let bn = meta.inputs[1][1] as usize;
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    if b.rows != k {
+        bail!("inner dims {k} != {}", b.rows);
+    }
+
+    let mut out = Matrix::<f32>::zeros(m, n);
+    let mut folds = 0u64;
+    // §Perf: block buffers are allocated once and refilled per fold (zeroing
+    // only the pad region implicitly by overwriting the full extent).
+    let mut a_blk = Matrix::<f32>::zeros(am, ak);
+    let mut b_blk = Matrix::<f32>::zeros(ak, bn);
+    let mut i0 = 0;
+    while i0 < m {
+        let mi = am.min(m - i0);
+        let mut j0 = 0;
+        while j0 < n {
+            let nj = bn.min(n - j0);
+            let mut k0 = 0;
+            while k0 < k {
+                let kk = ak.min(k - k0);
+                // Pad the blocks to the artifact shape.
+                for r in 0..am {
+                    for c in 0..ak {
+                        a_blk.set(
+                            r,
+                            c,
+                            if r < mi && c < kk { a.get(i0 + r, k0 + c) } else { 0.0 },
+                        );
+                    }
+                }
+                for r in 0..ak {
+                    for c in 0..bn {
+                        b_blk.set(
+                            r,
+                            c,
+                            if r < kk && c < nj { b.get(k0 + r, j0 + c) } else { 0.0 },
+                        );
+                    }
+                }
+                let c_blk = rt.run_gemm(artifact, &a_blk, &b_blk)?;
+                folds += 1;
+                for r in 0..mi {
+                    for c in 0..nj {
+                        out.set(i0 + r, j0 + c, out.get(i0 + r, j0 + c) + c_blk.get(r, c));
+                    }
+                }
+                k0 += ak;
+            }
+            j0 += bn;
+        }
+        i0 += am;
+    }
+    Ok((out, folds))
+}
+
+/// Number of artifact executions `tiled_gemm` will need (planning metric).
+pub fn fold_count(m: usize, k: usize, n: usize, am: usize, ak: usize, bn: usize) -> u64 {
+    (m.div_ceil(am) * k.div_ceil(ak) * n.div_ceil(bn)) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fold_count_exact_division() {
+        assert_eq!(fold_count(128, 512, 96, 64, 256, 96), 2 * 2 * 1);
+    }
+
+    #[test]
+    fn fold_count_with_remainder() {
+        assert_eq!(fold_count(65, 257, 97, 64, 256, 96), 2 * 2 * 2);
+    }
+
+    // Execution tests live in rust/tests/runtime_e2e.rs (need artifacts).
+}

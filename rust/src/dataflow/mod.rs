@@ -1,0 +1,180 @@
+//! Dataflow definitions (paper §III-C).
+//!
+//! Three classic 2D systolic mappings (OS, WS, IS) plus the paper's
+//! contribution for 3D: **distributed output stationary (dOS)**, in which the
+//! reduction dimension K is split across tiers and partial sums are
+//! accumulated down each vertical MAC pile.
+
+mod ws_is;
+
+pub use ws_is::{
+    cycles_is_2d, cycles_is_3d_scaleout, cycles_ws_2d, cycles_ws_3d_scaleout, optimize_is_3d,
+    optimize_ws_3d,
+};
+
+use crate::workloads::Gemm;
+
+/// Mapping strategy for a GEMM onto a (possibly 3D) systolic array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dataflow {
+    /// Output stationary: M→rows, N→cols spatial; K temporal (2D).
+    OutputStationary,
+    /// Weight stationary: B pinned; N→cols, K→rows spatial; M temporal.
+    WeightStationary,
+    /// Input stationary: A pinned; M→cols, K→rows spatial; N temporal.
+    InputStationary,
+    /// Distributed output stationary (3D): OS per tier with K split across
+    /// tiers and a cross-tier reduction — the paper's dOS.
+    DistributedOutputStationary,
+}
+
+impl Dataflow {
+    pub fn short_name(&self) -> &'static str {
+        match self {
+            Dataflow::OutputStationary => "OS",
+            Dataflow::WeightStationary => "WS",
+            Dataflow::InputStationary => "IS",
+            Dataflow::DistributedOutputStationary => "dOS",
+        }
+    }
+
+    /// Does this dataflow use the vertical (cross-tier) links?
+    /// Only dOS does; WS/IS in 3D degenerate to scaled-out model parallelism.
+    pub fn uses_vertical_links(&self) -> bool {
+        matches!(self, Dataflow::DistributedOutputStationary)
+    }
+}
+
+/// How a GEMM's (M, N, K) map onto (rows, cols, tiers, time) for a dataflow.
+/// `spatial_*` name the workload dimension assigned to that axis.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Mapping {
+    pub dataflow: Dataflow,
+    pub spatial_rows: &'static str,
+    pub spatial_cols: &'static str,
+    pub spatial_tiers: Option<&'static str>,
+    pub temporal: &'static str,
+}
+
+impl Dataflow {
+    /// The dimension assignment table from §III-C.
+    pub fn mapping(&self) -> Mapping {
+        match self {
+            Dataflow::OutputStationary => Mapping {
+                dataflow: *self,
+                spatial_rows: "M",
+                spatial_cols: "N",
+                spatial_tiers: None,
+                temporal: "K",
+            },
+            Dataflow::WeightStationary => Mapping {
+                dataflow: *self,
+                spatial_rows: "K",
+                spatial_cols: "N",
+                spatial_tiers: None,
+                temporal: "M",
+            },
+            Dataflow::InputStationary => Mapping {
+                dataflow: *self,
+                spatial_rows: "K",
+                spatial_cols: "M",
+                spatial_tiers: None,
+                temporal: "N",
+            },
+            Dataflow::DistributedOutputStationary => Mapping {
+                dataflow: *self,
+                spatial_rows: "M",
+                spatial_cols: "N",
+                spatial_tiers: Some("K"),
+                temporal: "K/ℓ",
+            },
+        }
+    }
+}
+
+/// Per-tier K chunk sizes for dOS: K split as evenly as possible into ℓ
+/// chunks (first `K mod ℓ` tiers get one extra element).
+pub fn dos_k_split(k: u64, tiers: u64) -> Vec<u64> {
+    assert!(tiers >= 1);
+    let base = k / tiers;
+    let rem = k % tiers;
+    (0..tiers)
+        .map(|t| base + if t < rem { 1 } else { 0 })
+        .filter(|&c| c > 0)
+        .collect()
+}
+
+/// The temporal extent a dOS tier must cover: ⌈K/ℓ⌉ (the largest chunk).
+pub fn dos_k_per_tier(k: u64, tiers: u64) -> u64 {
+    k.div_ceil(tiers)
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileCounts {
+    /// Folds along M (rows): ⌈M/R⌉.
+    pub m_folds: u64,
+    /// Folds along N (cols): ⌈N/C⌉.
+    pub n_folds: u64,
+}
+
+/// Serialization fold counts for an OS/dOS mapping on an R×C (per-tier) array.
+pub fn os_folds(g: &Gemm, rows: u64, cols: u64) -> TileCounts {
+    TileCounts {
+        m_folds: g.m.div_ceil(rows),
+        n_folds: g.n.div_ceil(cols),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn k_split_even() {
+        assert_eq!(dos_k_split(12, 4), vec![3, 3, 3, 3]);
+    }
+
+    #[test]
+    fn k_split_uneven() {
+        assert_eq!(dos_k_split(10, 4), vec![3, 3, 2, 2]);
+        assert_eq!(dos_k_split(10, 4).iter().sum::<u64>(), 10);
+    }
+
+    #[test]
+    fn k_split_more_tiers_than_k() {
+        // Tiers with zero work are dropped.
+        assert_eq!(dos_k_split(2, 4), vec![1, 1]);
+    }
+
+    #[test]
+    fn k_per_tier_is_ceil() {
+        assert_eq!(dos_k_per_tier(10, 4), 3);
+        assert_eq!(dos_k_per_tier(12, 4), 3);
+        assert_eq!(dos_k_per_tier(1, 1), 1);
+    }
+
+    #[test]
+    fn folds_ceil() {
+        let g = Gemm::new(100, 50, 7);
+        let f = os_folds(&g, 32, 32);
+        assert_eq!(f.m_folds, 4);
+        assert_eq!(f.n_folds, 2);
+    }
+
+    #[test]
+    fn only_dos_uses_vertical() {
+        assert!(Dataflow::DistributedOutputStationary.uses_vertical_links());
+        assert!(!Dataflow::OutputStationary.uses_vertical_links());
+        assert!(!Dataflow::WeightStationary.uses_vertical_links());
+    }
+
+    #[test]
+    fn mapping_table_matches_paper() {
+        let m = Dataflow::OutputStationary.mapping();
+        assert_eq!((m.spatial_rows, m.spatial_cols, m.temporal), ("M", "N", "K"));
+        let w = Dataflow::WeightStationary.mapping();
+        assert_eq!((w.spatial_rows, w.spatial_cols, w.temporal), ("K", "N", "M"));
+        let d = Dataflow::DistributedOutputStationary.mapping();
+        assert_eq!(d.spatial_tiers, Some("K"));
+    }
+}

@@ -1,0 +1,171 @@
+//! WS / IS dataflow runtime models (paper §III-C) and their 3D
+//! "scale-out" variants — the baselines that make dOS interesting.
+//!
+//! Following SCALE-sim's methodology [13] (the paper's source for Eq. 1):
+//!
+//! * **WS**: B is pinned (K→rows, N→cols). Each fold first *loads* R weight
+//!   rows (R cycles), then streams the M temporal elements with the usual
+//!   skew: `R + (M + R + C − 2)` per fold, `⌈K/R⌉·⌈N/C⌉` folds.
+//! * **IS**: symmetric with A pinned (K→rows, M→cols), N temporal.
+//!
+//! In 3D, WS/IS split their *temporal* dimension across tiers (the paper:
+//! "half of the rows in matrix A would be used in the top tier"), which is
+//! pure model parallelism: no cross-tier traffic, runtime divides by ℓ on
+//! the streaming term only — a scaled-out 2D system, not a true 3D design.
+//! `cube3d` implements them as the ablation baseline for dOS.
+
+use crate::analytical::{Array2d, Array3d};
+use crate::workloads::Gemm;
+
+/// Eq. (1)-analogue for the WS dataflow on a 2D array.
+pub fn cycles_ws_2d(g: &Gemm, a: &Array2d) -> u64 {
+    let folds = g.k.div_ceil(a.rows) * g.n.div_ceil(a.cols);
+    let per_fold = a.rows + (g.m + a.rows + a.cols - 2);
+    per_fold * folds
+}
+
+/// Eq. (1)-analogue for the IS dataflow on a 2D array.
+pub fn cycles_is_2d(g: &Gemm, a: &Array2d) -> u64 {
+    let folds = g.k.div_ceil(a.rows) * g.m.div_ceil(a.cols);
+    let per_fold = a.rows + (g.n + a.rows + a.cols - 2);
+    per_fold * folds
+}
+
+/// WS on an ℓ-tier stack: M (temporal) split across tiers; tiers are
+/// independent 2D arrays (scale-out — no vertical links used).
+pub fn cycles_ws_3d_scaleout(g: &Gemm, a: &Array3d) -> u64 {
+    let folds = g.k.div_ceil(a.rows) * g.n.div_ceil(a.cols);
+    let m_per_tier = g.m.div_ceil(a.tiers);
+    let per_fold = a.rows + (m_per_tier + a.rows + a.cols - 2);
+    per_fold * folds
+}
+
+/// IS on an ℓ-tier stack: N (temporal) split across tiers (scale-out).
+pub fn cycles_is_3d_scaleout(g: &Gemm, a: &Array3d) -> u64 {
+    let folds = g.k.div_ceil(a.rows) * g.m.div_ceil(a.cols);
+    let n_per_tier = g.n.div_ceil(a.tiers);
+    let per_fold = a.rows + (n_per_tier + a.rows + a.cols - 2);
+    per_fold * folds
+}
+
+/// Optimize WS (resp. IS) dims under a per-tier budget with the same
+/// full-budget policy as the OS optimizer: C = ⌊p/R⌋.
+pub fn optimize_ws_3d(g: &Gemm, mac_budget: u64, tiers: u64) -> (Array3d, u64) {
+    optimize_with(g, mac_budget, tiers, cycles_ws_3d_scaleout)
+}
+
+/// See [`optimize_ws_3d`].
+pub fn optimize_is_3d(g: &Gemm, mac_budget: u64, tiers: u64) -> (Array3d, u64) {
+    optimize_with(g, mac_budget, tiers, cycles_is_3d_scaleout)
+}
+
+fn optimize_with(
+    g: &Gemm,
+    mac_budget: u64,
+    tiers: u64,
+    f: fn(&Gemm, &Array3d) -> u64,
+) -> (Array3d, u64) {
+    let p = (mac_budget / tiers).max(1);
+    let mut best: Option<(Array3d, u64)> = None;
+    // Same √-breakpoint candidate walk as the OS optimizer.
+    let mut cands = Vec::new();
+    let mut v = 1u64;
+    while v * v <= p {
+        cands.push(v);
+        cands.push(p / v);
+        cands.push((p / v) + 1);
+        v += 1;
+    }
+    let mut vk = 1u64;
+    while vk * vk <= g.k {
+        cands.push(g.k.div_ceil(vk));
+        cands.push(vk);
+        vk += 1;
+    }
+    cands.retain(|&r| r >= 1 && r <= p);
+    cands.sort_unstable();
+    cands.dedup();
+    for r in cands {
+        let c = p / r;
+        if c == 0 {
+            continue;
+        }
+        let arr = Array3d::new(r, c, tiers);
+        let cyc = f(g, &arr);
+        if best.map_or(true, |(_, b)| cyc < b) {
+            best = Some((arr, cyc));
+        }
+    }
+    best.expect("budget >= 1 guarantees a design")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytical::optimize_3d;
+
+    #[test]
+    fn ws_formula_literal() {
+        let g = Gemm::new(10, 20, 30);
+        let a = Array2d::new(8, 8);
+        // folds = ⌈30/8⌉·⌈20/8⌉ = 4·3 = 12; per fold = 8 + (10+8+8−2) = 32.
+        assert_eq!(cycles_ws_2d(&g, &a), 12 * 32);
+    }
+
+    #[test]
+    fn is_formula_literal() {
+        let g = Gemm::new(10, 20, 30);
+        let a = Array2d::new(8, 8);
+        // folds = ⌈30/8⌉·⌈10/8⌉ = 4·2 = 8; per fold = 8 + (20+8+8−2) = 42.
+        assert_eq!(cycles_is_2d(&g, &a), 8 * 42);
+    }
+
+    #[test]
+    fn scaleout_one_tier_equals_2d() {
+        let g = Gemm::new(64, 147, 300);
+        let a3 = Array3d::new(16, 16, 1);
+        let a2 = Array2d::new(16, 16);
+        assert_eq!(cycles_ws_3d_scaleout(&g, &a3), cycles_ws_2d(&g, &a2));
+        assert_eq!(cycles_is_3d_scaleout(&g, &a3), cycles_is_2d(&g, &a2));
+    }
+
+    #[test]
+    fn scaleout_speedup_bounded_by_temporal_split() {
+        // WS 3D splits only the streaming term — speedup < ℓ always.
+        let g = Gemm::new(1000, 147, 300);
+        let a1 = Array3d::new(32, 32, 1);
+        let a4 = Array3d::new(32, 32, 4);
+        let s = cycles_ws_3d_scaleout(&g, &a1) as f64 / cycles_ws_3d_scaleout(&g, &a4) as f64;
+        assert!(s > 1.0 && s < 4.0, "{s}");
+    }
+
+    #[test]
+    fn dos_beats_scaleout_on_large_k() {
+        // The paper's motivation: for large-K/small-MN layers, splitting K
+        // (dOS) beats splitting the temporal dim (WS/IS scale-out).
+        let g = Gemm::new(64, 147, 12100); // RN0
+        let budget = 1 << 18;
+        let dos = optimize_3d(&g, budget, 12).cycles;
+        let (_, ws) = optimize_ws_3d(&g, budget, 12);
+        let (_, is) = optimize_is_3d(&g, budget, 12);
+        assert!(dos < ws, "dOS {dos} vs WS {ws}");
+        assert!(dos < is, "dOS {dos} vs IS {is}");
+    }
+
+    #[test]
+    fn ws_wins_on_huge_m_small_k() {
+        // And the converse: a tall-M/small-K layer favors temporal-M split.
+        let g = Gemm::new(31999, 1024, 84); // TF0
+        let budget = 1 << 14;
+        let dos = optimize_3d(&g, budget, 8).cycles;
+        let (_, ws) = optimize_ws_3d(&g, budget, 8);
+        assert!(ws < dos, "WS {ws} vs dOS {dos}");
+    }
+
+    #[test]
+    fn optimizer_respects_budget() {
+        let g = Gemm::new(100, 100, 1000);
+        let (arr, _) = optimize_ws_3d(&g, 4096, 4);
+        assert!(arr.rows * arr.cols <= 1024);
+    }
+}

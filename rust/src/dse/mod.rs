@@ -1,0 +1,143 @@
+//! Design-space exploration engine: parameter sweeps over (workload ×
+//! MAC budget × tier count × vertical tech), executed in parallel, feeding
+//! the figure reproductions and the router's design choices.
+
+mod pareto;
+
+pub use pareto::{dominates, pareto_front};
+
+use crate::analytical::{optimal_tier_count, optimize_2d, optimize_3d};
+use crate::area::{perf_per_area_vs_2d, total_area_m2};
+use crate::power::{power_summary, Tech, VerticalTech};
+use crate::util::threadpool::par_map;
+use crate::workloads::Gemm;
+
+/// One evaluated design point.
+#[derive(Debug, Clone)]
+pub struct DsePoint {
+    pub workload: Gemm,
+    pub mac_budget: u64,
+    pub tiers: u64,
+    pub vtech: VerticalTech,
+    /// Optimized 3D runtime (cycles); for tiers=1 this is the 2D runtime.
+    pub cycles: u64,
+    /// Speedup vs the optimized 2D array with the same budget.
+    pub speedup_vs_2d: f64,
+    /// Total silicon area, m².
+    pub area_m2: f64,
+    /// Perf-per-area ratio vs 2D (Fig. 9 metric).
+    pub perf_per_area_vs_2d: f64,
+    /// Average power, W.
+    pub power_w: f64,
+}
+
+/// Evaluate a single design point (runtime, area, power, ratios).
+pub fn evaluate_point(
+    g: &Gemm,
+    mac_budget: u64,
+    tiers: u64,
+    vtech: VerticalTech,
+    tech: &Tech,
+) -> DsePoint {
+    let d2 = optimize_2d(g, mac_budget);
+    let d3 = optimize_3d(g, mac_budget, tiers);
+    let arr = d3.array3d();
+    DsePoint {
+        workload: *g,
+        mac_budget,
+        tiers,
+        vtech,
+        cycles: d3.cycles,
+        speedup_vs_2d: d2.cycles as f64 / d3.cycles as f64,
+        area_m2: total_area_m2(&arr, tech, vtech),
+        perf_per_area_vs_2d: perf_per_area_vs_2d(g, mac_budget, tiers, tech, vtech),
+        power_w: power_summary(g, &arr, tech, vtech).total_w,
+    }
+}
+
+/// Full cartesian sweep, parallel over points.
+pub fn sweep(
+    workloads: &[Gemm],
+    budgets: &[u64],
+    tiers: &[u64],
+    vtech: VerticalTech,
+    tech: &Tech,
+) -> Vec<DsePoint> {
+    let mut points: Vec<(Gemm, u64, u64)> = Vec::new();
+    for &g in workloads {
+        for &b in budgets {
+            for &t in tiers {
+                if b / t >= 1 {
+                    points.push((g, b, t));
+                }
+            }
+        }
+    }
+    par_map(&points, |&(g, b, t)| evaluate_point(&g, b, t, vtech, tech))
+}
+
+/// Fig. 7 helper: the optimal tier count for each workload at each budget,
+/// in parallel.
+pub fn optimal_tiers_sweep(workloads: &[Gemm], budgets: &[u64], max_tiers: u64) -> Vec<(Gemm, u64, u64)> {
+    let mut points: Vec<(Gemm, u64)> = Vec::new();
+    for &g in workloads {
+        for &b in budgets {
+            points.push((g, b));
+        }
+    }
+    par_map(&points, |&(g, b)| (g, b, optimal_tier_count(&g, b, max_tiers)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_covers_grid() {
+        let g = Gemm::new(64, 147, 12100);
+        let pts = sweep(
+            &[g],
+            &[4096, 65536],
+            &[1, 2, 4],
+            VerticalTech::Miv,
+            &Tech::default(),
+        );
+        assert_eq!(pts.len(), 6);
+    }
+
+    #[test]
+    fn tier1_speedup_is_one() {
+        let g = Gemm::new(64, 147, 255);
+        let p = evaluate_point(&g, 4096, 1, VerticalTech::Tsv, &Tech::default());
+        assert!((p.speedup_vs_2d - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn skips_infeasible_tier_counts() {
+        let g = Gemm::new(8, 8, 8);
+        let pts = sweep(&[g], &[2], &[1, 4], VerticalTech::Miv, &Tech::default());
+        // budget 2 with 4 tiers is infeasible (0 MACs/tier).
+        assert_eq!(pts.len(), 1);
+    }
+
+    #[test]
+    fn optimal_tiers_sweep_shape() {
+        let gs = [Gemm::new(64, 147, 12100), Gemm::new(512, 128, 784)];
+        let out = optimal_tiers_sweep(&gs, &[4096, 1 << 18], 16);
+        assert_eq!(out.len(), 4);
+        for (_, _, t) in &out {
+            assert!((1..=16).contains(t));
+        }
+    }
+
+    #[test]
+    fn point_metrics_consistent() {
+        let g = Gemm::new(64, 147, 12100);
+        let p = evaluate_point(&g, 1 << 18, 12, VerticalTech::Miv, &Tech::default());
+        assert!(p.speedup_vs_2d > 8.0);
+        assert!(p.area_m2 > 0.0);
+        assert!(p.power_w > 0.0);
+        // MIV perf/area tracks speedup within the small area overhead.
+        assert!(p.perf_per_area_vs_2d > 0.8 * p.speedup_vs_2d / 1.2);
+    }
+}

@@ -1,0 +1,82 @@
+//! Pareto-front analysis over DSE points: runtime vs silicon area vs power.
+//!
+//! The paper reads its Fig. 9 as a two-objective trade (runtime, area);
+//! this generalizes to the three-objective front an architect would use to
+//! pick a 3D configuration.
+
+use super::DsePoint;
+
+/// `a` dominates `b` iff it is no worse in all objectives and strictly
+/// better in at least one (lower cycles, lower area, lower power).
+pub fn dominates(a: &DsePoint, b: &DsePoint) -> bool {
+    let no_worse =
+        a.cycles <= b.cycles && a.area_m2 <= b.area_m2 && a.power_w <= b.power_w;
+    let strictly = a.cycles < b.cycles || a.area_m2 < b.area_m2 || a.power_w < b.power_w;
+    no_worse && strictly
+}
+
+/// Extract the Pareto-optimal subset (O(n²), n is small for DSE sweeps).
+/// Points are returned in ascending cycle order.
+pub fn pareto_front(points: &[DsePoint]) -> Vec<DsePoint> {
+    let mut front: Vec<DsePoint> = points
+        .iter()
+        .filter(|p| !points.iter().any(|q| dominates(q, p)))
+        .cloned()
+        .collect();
+    front.sort_by_key(|p| p.cycles);
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::power::{Tech, VerticalTech};
+    use crate::workloads::Gemm;
+
+    fn points() -> Vec<DsePoint> {
+        let g = Gemm::new(64, 147, 12100);
+        let tech = Tech::default();
+        super::super::sweep(
+            &[g],
+            &[4096, 32768, 262144],
+            &[1, 2, 4, 8, 12],
+            VerticalTech::Miv,
+            &tech,
+        )
+    }
+
+    #[test]
+    fn front_nonempty_and_nondominated() {
+        let pts = points();
+        let front = pareto_front(&pts);
+        assert!(!front.is_empty() && front.len() <= pts.len());
+        for a in &front {
+            for b in &front {
+                assert!(!dominates(a, b) || std::ptr::eq(a, b) || a.cycles == b.cycles);
+            }
+        }
+    }
+
+    #[test]
+    fn fastest_point_always_on_front() {
+        let pts = points();
+        let fastest = pts.iter().min_by_key(|p| p.cycles).unwrap();
+        let front = pareto_front(&pts);
+        assert!(front.iter().any(|p| p.cycles == fastest.cycles));
+    }
+
+    #[test]
+    fn dominated_point_filtered() {
+        let pts = points();
+        let front = pareto_front(&pts);
+        // Every non-front point must be dominated by someone.
+        for p in &pts {
+            let on_front = front
+                .iter()
+                .any(|f| f.cycles == p.cycles && f.area_m2 == p.area_m2 && f.power_w == p.power_w);
+            if !on_front {
+                assert!(pts.iter().any(|q| dominates(q, p)));
+            }
+        }
+    }
+}

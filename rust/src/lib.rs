@@ -1,0 +1,51 @@
+//! # cube3d — 3D-IC systolic-array DNN-accelerator co-design framework
+//!
+//! Reproduction of *"Architecture, Dataflow and Physical Design Implications
+//! of 3D-ICs for DNN-Accelerators"* (Joseph et al., 2020).
+//!
+//! The crate is the Layer-3 (Rust) part of a three-layer stack:
+//!
+//! * **Layer 1** — a Pallas dOS-GEMM kernel (`python/compile/kernels/`),
+//!   compiled ahead-of-time.
+//! * **Layer 2** — a JAX model of the accelerator's compute
+//!   (`python/compile/model.py`), lowered once to HLO text artifacts.
+//! * **Layer 3** — this crate: the analytical performance model (Eq. 1/2 of
+//!   the paper), a cycle-accurate systolic-array simulator with per-link
+//!   activity traces, power / thermal / area models, a design-space
+//!   exploration engine, a PJRT runtime that executes the AOT artifacts, and
+//!   a serving coordinator (router + batcher) used by the end-to-end driver.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use cube3d::workloads::Gemm;
+//! use cube3d::analytical::{optimize_2d, optimize_3d};
+//!
+//! // RN0: ResNet-50 layer from Table I of the paper.
+//! let wl = Gemm::new(64, 147, 12100);
+//! let macs = 1 << 18;
+//! let d2 = optimize_2d(&wl, macs);
+//! let d3 = optimize_3d(&wl, macs, 12);
+//! println!("3D speedup at 12 tiers: {:.2}x", d2.cycles as f64 / d3.cycles as f64);
+//! ```
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index mapping every paper table/figure to a module and bench.
+
+pub mod analytical;
+pub mod area;
+pub mod config;
+pub mod coordinator;
+pub mod dataflow;
+pub mod dse;
+pub mod memory;
+pub mod power;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod thermal;
+pub mod util;
+pub mod workloads;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,496 @@
+//! `cube3d` — command-line front end for the 3D-DNN-accelerator co-design
+//! framework (reproduction of Joseph et al., 2020).
+//!
+//! Subcommands:
+//!
+//! * `analyze`   — optimize 2D + 3D designs for one workload and print the
+//!                 runtime/speedup breakdown (Eq. 1 / Eq. 2).
+//! * `sweep`     — DSE sweep over budgets × tiers for a workload.
+//! * `power`     — Table-II-style power analysis for a configuration.
+//! * `thermal`   — Fig.-8-style thermal study for a configuration.
+//! * `simulate`  — run the exact cycle simulator on a small GEMM and check
+//!                 it against the analytical model and a direct matmul.
+//! * `reproduce` — regenerate every paper table/figure into an output dir.
+//! * `serve`     — start the coordinator and drive a GEMM trace through the
+//!                 PJRT runtime (requires `make artifacts`).
+//! * `workloads` — print the Table I workload library.
+
+use cube3d::analytical::{breakdown_2d, breakdown_3d, optimize_2d, optimize_3d, Array3d};
+use cube3d::config::{parse_vtech, ExperimentConfig};
+use cube3d::coordinator::{BatcherConfig, Coordinator, GemmJob, RouterConfig};
+use cube3d::dse::sweep;
+use cube3d::power::{power_summary, Tech};
+use cube3d::report::reproduce_all;
+use cube3d::runtime::find_artifact_dir;
+use cube3d::sim::{matmul_i64, simulate_dos, Matrix};
+use cube3d::thermal::{thermal_footprint_m2, thermal_study, ThermalParams};
+use cube3d::util::cli::{usage, Args, OptSpec};
+use cube3d::util::rng::Rng;
+use cube3d::util::table::Table;
+use cube3d::workloads::{table1, Gemm};
+use std::path::Path;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn workload_opts() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "m", takes_value: true, help: "GEMM M dimension (default 64)" },
+        OptSpec { name: "n", takes_value: true, help: "GEMM N dimension (default 147)" },
+        OptSpec { name: "k", takes_value: true, help: "GEMM K dimension (default 12100)" },
+        OptSpec { name: "layer", takes_value: true, help: "Table I layer label (RN0, GNMT1, ...)" },
+        OptSpec { name: "macs", takes_value: true, help: "MAC budget (default 262144)" },
+        OptSpec { name: "tiers", takes_value: true, help: "tier count or list (default 4)" },
+        OptSpec { name: "vtech", takes_value: true, help: "tsv|miv|f2f (default tsv)" },
+        OptSpec { name: "config", takes_value: true, help: "JSON experiment config file" },
+        OptSpec { name: "out-dir", takes_value: true, help: "output directory (default reports)" },
+        OptSpec { name: "jobs", takes_value: true, help: "serve: number of jobs (default 32)" },
+        OptSpec { name: "seed", takes_value: true, help: "random seed (default 7)" },
+    ]
+}
+
+fn parse_workload(args: &Args) -> anyhow::Result<Gemm> {
+    if let Some(label) = args.get("layer") {
+        let e = cube3d::workloads::by_label(label)
+            .ok_or_else(|| anyhow::anyhow!("unknown Table I layer '{label}'"))?;
+        return Ok(e.gemm);
+    }
+    Ok(Gemm::new(
+        args.get_u64_or("m", 64).map_err(anyhow::Error::msg)?,
+        args.get_u64_or("n", 147).map_err(anyhow::Error::msg)?,
+        args.get_u64_or("k", 12100).map_err(anyhow::Error::msg)?,
+    ))
+}
+
+fn run(argv: &[String]) -> anyhow::Result<()> {
+    let Some(cmd) = argv.first() else {
+        print_help();
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    let specs = workload_opts();
+    let args = Args::parse(rest, &specs).map_err(anyhow::Error::msg)?;
+
+    match cmd.as_str() {
+        "analyze" => cmd_analyze(&args),
+        "sweep" => cmd_sweep(&args),
+        "power" => cmd_power(&args),
+        "thermal" => cmd_thermal(&args),
+        "simulate" => cmd_simulate(&args),
+        "reproduce" => cmd_reproduce(&args),
+        "serve" => cmd_serve(&args),
+        "workloads" => cmd_workloads(),
+        "dataflows" => cmd_dataflows(&args),
+        "pareto" => cmd_pareto(&args),
+        "memory" => cmd_memory(&args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command '{other}' (try `cube3d help`)"),
+    }
+}
+
+fn print_help() {
+    println!("cube3d — 3D-IC systolic-array DNN-accelerator co-design framework\n");
+    for (c, about) in [
+        ("analyze", "optimize 2D + 3D designs for one workload (Eq. 1/2)"),
+        ("sweep", "DSE sweep over MAC budgets × tier counts"),
+        ("power", "Table-II-style power analysis"),
+        ("thermal", "Fig.-8-style thermal study"),
+        ("simulate", "exact cycle simulation, checked vs model + matmul"),
+        ("reproduce", "regenerate every paper table/figure"),
+        ("serve", "run the serving coordinator on a GEMM trace"),
+        ("workloads", "print the Table I workload library"),
+        ("dataflows", "compare OS/dOS vs WS/IS scale-out on a workload"),
+        ("pareto", "Pareto front (cycles/area/power) of a design space"),
+        ("memory", "off-chip bandwidth demand + feasibility per memory tech"),
+    ] {
+        println!("  {c:<12} {about}");
+    }
+    println!("\n{}", usage("cube3d <cmd>", "common options", &workload_opts()));
+}
+
+fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
+    let g = parse_workload(args)?;
+    let macs = args.get_u64_or("macs", 1 << 18).map_err(anyhow::Error::msg)?;
+    let tiers = args.get_u64_or("tiers", 4).map_err(anyhow::Error::msg)?;
+    let d2 = optimize_2d(&g, macs);
+    let d3 = optimize_3d(&g, macs, tiers);
+    let b2 = breakdown_2d(&g, &d2.array2d());
+    let b3 = breakdown_3d(&g, &d3.array3d());
+
+    println!("workload  {g}   budget {macs} MACs\n");
+    let mut t = Table::new(["", "array", "cycles", "fill", "compute", "reduce", "drain", "folds"]);
+    t.row([
+        "2D".into(),
+        format!("{}x{}", d2.rows, d2.cols),
+        d2.cycles.to_string(),
+        b2.fill.to_string(),
+        b2.compute.to_string(),
+        b2.reduce.to_string(),
+        b2.drain.to_string(),
+        b2.folds.to_string(),
+    ]);
+    t.row([
+        format!("3D ℓ={tiers}"),
+        format!("{}x{}x{}", d3.rows, d3.cols, d3.tiers),
+        d3.cycles.to_string(),
+        b3.fill.to_string(),
+        b3.compute.to_string(),
+        b3.reduce.to_string(),
+        b3.drain.to_string(),
+        b3.folds.to_string(),
+    ]);
+    println!("{}", t.to_ascii());
+    println!("speedup 3D/2D: {:.3}x", d2.cycles as f64 / d3.cycles as f64);
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    let cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::from_file(Path::new(path))?,
+        None => {
+            let mut c = ExperimentConfig::default();
+            c.workload = parse_workload(args)?;
+            if let Some(ts) = args.get_u64_list("tiers").map_err(anyhow::Error::msg)? {
+                c.tiers = ts;
+            }
+            if let Some(bs) = args.get_u64_list("macs").map_err(anyhow::Error::msg)? {
+                c.mac_budgets = bs;
+            }
+            if let Some(v) = args.get("vtech") {
+                c.vertical_tech = parse_vtech(v)?;
+            }
+            c.validate()?;
+            c
+        }
+    };
+    let tech = Tech::default();
+    let pts = sweep(&[cfg.workload], &cfg.mac_budgets, &cfg.tiers, cfg.vertical_tech, &tech);
+    let mut t = Table::new(["MACs", "ℓ", "cycles", "speedup", "perf/area vs 2D", "power W"]);
+    for p in &pts {
+        t.row([
+            p.mac_budget.to_string(),
+            p.tiers.to_string(),
+            p.cycles.to_string(),
+            format!("{:.3}x", p.speedup_vs_2d),
+            format!("{:.3}x", p.perf_per_area_vs_2d),
+            format!("{:.2}", p.power_w),
+        ]);
+    }
+    println!("workload {} ({})\n", cfg.workload, cfg.vertical_tech.name());
+    println!("{}", t.to_ascii());
+    Ok(())
+}
+
+fn cmd_power(args: &Args) -> anyhow::Result<()> {
+    let g = parse_workload(args)?;
+    let macs = args.get_u64_or("macs", 49152).map_err(anyhow::Error::msg)?;
+    let tiers = args.get_u64_or("tiers", 3).map_err(anyhow::Error::msg)?;
+    let vtech = parse_vtech(args.get_or("vtech", "tsv"))?;
+    let d3 = optimize_3d(&g, macs, tiers);
+    let arr = d3.array3d();
+    let tech = Tech::default();
+    let p = power_summary(&g, &arr, &tech, vtech);
+    println!(
+        "array {}x{}x{} ({})   workload {g}",
+        arr.rows,
+        arr.cols,
+        arr.tiers,
+        vtech.name()
+    );
+    let mut t = Table::new(["component", "W"]);
+    for (n, v) in [
+        ("multipliers", p.mult_w),
+        ("accumulators", p.acc_w),
+        ("operand wires", p.wire_w),
+        ("drain", p.drain_w),
+        ("vertical links", p.vertical_w),
+        ("clock tree", p.clock_w),
+        ("leakage", p.leakage_w),
+        ("TOTAL", p.total_w),
+        ("PEAK", p.peak_w),
+    ] {
+        t.row([n.to_string(), format!("{v:.3}")]);
+    }
+    println!("{}", t.to_ascii());
+    println!("runtime {:.3} µs   energy {:.3} µJ", p.runtime_s * 1e6, p.energy_j * 1e6);
+    Ok(())
+}
+
+fn cmd_thermal(args: &Args) -> anyhow::Result<()> {
+    let g = parse_workload(args)?;
+    let macs = args.get_u64_or("macs", 49152).map_err(anyhow::Error::msg)?;
+    let tiers = args.get_u64_or("tiers", 3).map_err(anyhow::Error::msg)?;
+    let vtech = parse_vtech(args.get_or("vtech", "tsv"))?;
+    let d3 = optimize_3d(&g, macs, tiers);
+    let arr = d3.array3d();
+    let tech = Tech::default();
+    let params = ThermalParams::default();
+    let s = thermal_study(&g, &arr, &tech, vtech, &params, thermal_footprint_m2(&arr, &tech));
+    println!(
+        "array {}x{}x{} ({})   workload {g}   power {:.2} W   footprint {:.2} mm²",
+        arr.rows,
+        arr.cols,
+        arr.tiers,
+        vtech.name(),
+        s.total_power_w,
+        s.die_area_m2 * 1e6
+    );
+    let mut t = Table::new(["tier", "min °C", "q1", "median", "q3", "max"]);
+    for tt in &s.tiers {
+        t.row([
+            tt.tier.to_string(),
+            format!("{:.1}", tt.stats.min),
+            format!("{:.1}", tt.stats.q1),
+            format!("{:.1}", tt.stats.median),
+            format!("{:.1}", tt.stats.q3),
+            format!("{:.1}", tt.stats.max),
+        ]);
+    }
+    println!("{}", t.to_ascii());
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let m = args.get_u64_or("m", 24).map_err(anyhow::Error::msg)? as usize;
+    let n = args.get_u64_or("n", 20).map_err(anyhow::Error::msg)? as usize;
+    let k = args.get_u64_or("k", 60).map_err(anyhow::Error::msg)? as usize;
+    let tiers = args.get_u64_or("tiers", 3).map_err(anyhow::Error::msg)?;
+    let seed = args.get_u64_or("seed", 7).map_err(anyhow::Error::msg)?;
+    let mut rng = Rng::new(seed);
+    let a = Matrix::from_fn(m, k, |_, _| rng.gen_range(255) as i64 - 127);
+    let b = Matrix::from_fn(k, n, |_, _| rng.gen_range(255) as i64 - 127);
+    let arr = Array3d::new(8.min(m as u64), 8.min(n as u64), tiers);
+    let r = simulate_dos(&a, &b, &arr);
+    let expect = matmul_i64(&a, &b);
+    let g = Gemm::new(m as u64, n as u64, k as u64);
+    let model_cycles = cube3d::analytical::cycles_3d(&g, &arr);
+    println!("simulated GEMM {g} on {}x{}x{}", arr.rows, arr.cols, arr.tiers);
+    println!(
+        "  functional:  {}",
+        if r.output == expect { "OK (matches matmul)" } else { "MISMATCH" }
+    );
+    println!(
+        "  cycles:      {} (analytical Eq.2: {model_cycles}) {}",
+        r.trace.cycles,
+        if r.trace.cycles == model_cycles { "OK" } else { "MISMATCH" }
+    );
+    println!(
+        "  activity:    {} MACs, {} h-hops, {} v-hops, {} cross-tier, {} drain",
+        r.trace.mac_ops,
+        r.trace.h_transfers,
+        r.trace.v_transfers,
+        r.trace.cross_tier_transfers,
+        r.trace.drain_transfers
+    );
+    if r.output != expect || r.trace.cycles != model_cycles {
+        anyhow::bail!("simulation mismatch");
+    }
+    Ok(())
+}
+
+fn cmd_reproduce(args: &Args) -> anyhow::Result<()> {
+    let out = args.get_or("out-dir", "reports");
+    let reports = reproduce_all(Path::new(out))?;
+    for r in &reports {
+        println!("== {} — {}\n", r.id, r.title);
+        println!("{}", r.table.to_ascii());
+        for n in &r.notes {
+            println!("  note: {n}");
+        }
+        println!();
+    }
+    println!("wrote {} reports to {out}/", reports.len());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let dir = find_artifact_dir()?;
+    let n_jobs = args.get_u64_or("jobs", 32).map_err(anyhow::Error::msg)? as usize;
+    let seed = args.get_u64_or("seed", 7).map_err(anyhow::Error::msg)?;
+    println!("starting coordinator on artifacts at {}", dir.display());
+    let coord = Coordinator::start(&dir, RouterConfig::default(), BatcherConfig::default())?;
+
+    // Build a trace: quickstart-shaped jobs (exact-artifact fast path)
+    // interleaved with small Table-I-derived shapes (tiled path).
+    let mut rng = Rng::new(seed);
+    let mut jobs = Vec::new();
+    for i in 0..n_jobs as u64 {
+        let (label, m, k, n) = if i % 2 == 0 {
+            ("quickstart".to_string(), 64usize, 256usize, 96usize)
+        } else {
+            let e = &table1()[(i as usize / 2) % 8];
+            // Scale Table I dims down so tiled execution stays snappy.
+            let g = e.gemm;
+            (
+                e.layer.to_string(),
+                (g.m / 4).clamp(8, 128) as usize,
+                (g.k / 64).clamp(8, 512) as usize,
+                (g.n / 4).clamp(8, 128) as usize,
+            )
+        };
+        let a = Matrix::from_fn(m, k, |_, _| (rng.gen_range(200) as f32 - 100.0) / 50.0);
+        let b = Matrix::from_fn(k, n, |_, _| (rng.gen_range(200) as f32 - 100.0) / 50.0);
+        jobs.push(GemmJob::new(i, label, a, b));
+    }
+
+    let results = coord.run_trace(jobs)?;
+    let mut t = Table::new(["id", "label", "plan", "exec µs", "modeled 3D design", "modeled speedup"]);
+    for r in results.iter().take(12) {
+        t.row([
+            r.id.to_string(),
+            r.label.clone(),
+            r.plan.clone(),
+            format!("{:.0}", r.exec_time.as_secs_f64() * 1e6),
+            format!("{}x{}x{}", r.design.rows, r.design.cols, r.design.tiers),
+            format!("{:.2}x", r.modeled_speedup_3d),
+        ]);
+    }
+    println!("{}", t.to_ascii());
+    let m = coord.finish();
+    println!(
+        "jobs {}   batches {}   pjrt execs {}   throughput {:.1} jobs/s   p95 latency {:.0} µs",
+        m.jobs_completed,
+        m.batches,
+        m.pjrt_executions,
+        m.throughput(),
+        m.p95_latency_us()
+    );
+    Ok(())
+}
+
+fn cmd_dataflows(args: &Args) -> anyhow::Result<()> {
+    use cube3d::dataflow::{optimize_is_3d, optimize_ws_3d};
+    let g = parse_workload(args)?;
+    let macs = args.get_u64_or("macs", 1 << 18).map_err(anyhow::Error::msg)?;
+    let tiers_list = args
+        .get_u64_list("tiers")
+        .map_err(anyhow::Error::msg)?
+        .unwrap_or_else(|| vec![1, 2, 4, 8, 12]);
+    println!("workload {g}   budget {macs} MACs\n");
+    let mut t = Table::new(["ℓ", "dOS cycles", "WS cycles", "IS cycles", "best"]);
+    for &tiers in &tiers_list {
+        if macs / tiers == 0 {
+            continue;
+        }
+        let dos = optimize_3d(&g, macs, tiers).cycles;
+        let (_, ws) = optimize_ws_3d(&g, macs, tiers);
+        let (_, is) = optimize_is_3d(&g, macs, tiers);
+        let best = if dos <= ws && dos <= is {
+            "dOS"
+        } else if ws <= is {
+            "WS (scale-out)"
+        } else {
+            "IS (scale-out)"
+        };
+        t.row([
+            tiers.to_string(),
+            dos.to_string(),
+            ws.to_string(),
+            is.to_string(),
+            best.to_string(),
+        ]);
+    }
+    println!("{}", t.to_ascii());
+    println!("dOS maps K to the 3rd dimension (cross-tier reduction);");
+    println!("WS/IS split their temporal dim across tiers (pure scale-out, §III-C).");
+    Ok(())
+}
+
+fn cmd_pareto(args: &Args) -> anyhow::Result<()> {
+    use cube3d::dse::{pareto_front, sweep};
+    let g = parse_workload(args)?;
+    let vtech = parse_vtech(args.get_or("vtech", "miv"))?;
+    let budgets = args
+        .get_u64_list("macs")
+        .map_err(anyhow::Error::msg)?
+        .unwrap_or_else(|| vec![4096, 32768, 262144]);
+    let tiers = args
+        .get_u64_list("tiers")
+        .map_err(anyhow::Error::msg)?
+        .unwrap_or_else(|| vec![1, 2, 4, 8, 12]);
+    let pts = sweep(&[g], &budgets, &tiers, vtech, &Tech::default());
+    let front = pareto_front(&pts);
+    println!(
+        "workload {g} ({}): {} design points, {} Pareto-optimal\n",
+        vtech.name(),
+        pts.len(),
+        front.len()
+    );
+    let mut t = Table::new(["MACs", "ℓ", "cycles", "area mm²", "power W", "speedup vs 2D"]);
+    for p in &front {
+        t.row([
+            p.mac_budget.to_string(),
+            p.tiers.to_string(),
+            p.cycles.to_string(),
+            format!("{:.2}", p.area_m2 * 1e6),
+            format!("{:.2}", p.power_w),
+            format!("{:.2}x", p.speedup_vs_2d),
+        ]);
+    }
+    println!("{}", t.to_ascii());
+    Ok(())
+}
+
+fn cmd_memory(args: &Args) -> anyhow::Result<()> {
+    use cube3d::memory::{
+        bw_amplification, memory_demand, DDR4_3200, HBM2, HBM2E, LPDDR5, STACKED_3D,
+    };
+    let g = parse_workload(args)?;
+    let macs = args.get_u64_or("macs", 1 << 18).map_err(anyhow::Error::msg)?;
+    let tiers = args.get_u64_or("tiers", 12).map_err(anyhow::Error::msg)?;
+    let tech = Tech::default();
+    let d3 = optimize_3d(&g, macs, tiers);
+    let dem = memory_demand(&g, &d3.array3d(), &tech, 1, 2);
+    println!(
+        "workload {g}   design {}x{}x{}   traffic {:.2} MB   runtime {:.1} µs   required BW {:.1} GB/s\n",
+        d3.rows,
+        d3.cols,
+        d3.tiers,
+        dem.total_bytes() as f64 / 1e6,
+        dem.runtime_s * 1e6,
+        dem.required_bw / 1e9
+    );
+    let mut t = Table::new(["memory tech", "peak GB/s", "utilization", "feasible (70% derate)"]);
+    for mem in [DDR4_3200, LPDDR5, HBM2, HBM2E, STACKED_3D] {
+        t.row([
+            mem.name.to_string(),
+            format!("{:.0}", mem.peak_bw_bytes_per_s / 1e9),
+            format!("{:.1}%", dem.utilization_of(&mem) * 100.0),
+            if dem.feasible_on(&mem, 0.7) { "yes".into() } else { "NO".to_string() },
+        ]);
+    }
+    println!("{}", t.to_ascii());
+    println!(
+        "3D bandwidth amplification vs 2D (same budget): {:.2}x — the reason the paper\n\
+         points at 3D-stacked memory ([7], TETRIS) as the companion technology.",
+        bw_amplification(&g, macs, tiers, &tech)
+    );
+    Ok(())
+}
+
+fn cmd_workloads() -> anyhow::Result<()> {
+    let mut t = Table::new(["network", "layer", "M", "K", "N"]);
+    for e in table1() {
+        t.row([
+            e.network.to_string(),
+            e.layer.to_string(),
+            e.gemm.m.to_string(),
+            e.gemm.k.to_string(),
+            e.gemm.n.to_string(),
+        ]);
+    }
+    println!("{}", t.to_ascii());
+    Ok(())
+}

@@ -1,0 +1,13 @@
+//! Power model (paper §IV-B, Table II).
+//!
+//! Substitutes the paper's post-synthesis PrimeTime PX flow with a
+//! switching-activity × energy model. The paper's central observation —
+//! *static analysis is insufficient because horizontal links toggle every
+//! streaming cycle while vertical TSV/MIV links only toggle for partial-sum
+//! accumulation* — is exactly what this model computes.
+
+mod model;
+mod tech;
+
+pub use model::{power_map, power_summary, rtl_activity, PowerBreakdown, RtlActivity};
+pub use tech::{Tech, VerticalTech};

@@ -1,0 +1,381 @@
+//! Switching-activity power model.
+//!
+//! ## RTL-faithful activity
+//!
+//! The paper's RTL is a plain systolic array ("only minor modifications to
+//! the MAC unit ... one MUX, the accumulate control signal and the vertical
+//! links"), i.e. *ungated*: operand streams shift through the full array
+//! extent, and every multiplier on an active stream path toggles whether or
+//! not its output is accumulated. This differs from the architectural
+//! (gated) counts of [`crate::sim::ActivityTrace`] and is what makes the 2D
+//! baseline burn more dynamic power than the 3D stack on the same workload:
+//! a 222×222 2D array running a 128×128 tile toggles 222-wide stream paths
+//! for K cycles, while three 128×128 tiers toggle only their own extent for
+//! K/3 cycles.
+//!
+//! ## Components
+//!
+//! * `mult` — multiplier toggles: MACs on the union of active A-rows and
+//!   B-columns, per streaming cycle (ungated).
+//! * `acc`  — accumulator-register writes: gated MAC ops (`rm·cn·Ks`).
+//! * `wire` — operand hops along full row/column extents.
+//! * `drain` — psum drain hops.
+//! * `vert` — vertical-link driver toggles: the accumulator of every
+//!   non-bottom tier drives its TSV/MIV array, so it toggles on every gated
+//!   acc update; capacitance differs TSV (10 fF) vs MIV (0.2 fF).
+//! * `clk` — clock tree: per-MAC flop clocking plus an H-tree wire component
+//!   that grows with die width (larger 2D dies clock longer trees).
+//! * `leak` — static leakage per MAC.
+
+use super::tech::{Tech, VerticalTech};
+use crate::analytical::Array3d;
+use crate::dataflow::{dos_k_per_tier, dos_k_split};
+use crate::workloads::Gemm;
+
+/// Ungated (RTL-style) activity counts for a full GEMM execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct RtlActivity {
+    pub cycles: u64,
+    /// Multiplier toggle events (union of stream paths, all tiers).
+    pub mult_toggles: u64,
+    /// Gated accumulator writes (= true MAC ops).
+    pub acc_writes: u64,
+    /// 8-bit operand hops (horizontal + vertical-in-plane, full extent).
+    pub operand_hops: u64,
+    /// Output/psum drain hops.
+    pub drain_hops: u64,
+    /// Vertical-link driver toggles (non-bottom-tier acc updates).
+    pub vert_toggles: u64,
+    /// Peak per-cycle multiplier toggles.
+    pub peak_mult: u64,
+    /// Peak per-cycle acc writes.
+    pub peak_acc: u64,
+    /// Peak per-cycle operand hops.
+    pub peak_hops: u64,
+    /// Peak per-cycle vertical-link toggles.
+    pub peak_vert: u64,
+}
+
+/// Compute RTL-style activity for workload `g` on `array` (ℓ=1 ⇒ 2D).
+pub fn rtl_activity(g: &Gemm, array: &Array3d) -> RtlActivity {
+    let (r_dim, c_dim, tiers) = (array.rows, array.cols, array.tiers);
+    let k_max = dos_k_per_tier(g.k, tiers);
+    let chunks = dos_k_split(g.k, tiers);
+
+    let mut a = RtlActivity::default();
+    let per_fold_cycles = (r_dim + c_dim - 2 + k_max) + (tiers - 1) + r_dim;
+
+    let mut i0 = 0u64;
+    while i0 < g.m {
+        let rm = r_dim.min(g.m - i0);
+        let mut j0 = 0u64;
+        while j0 < g.n {
+            let cn = c_dim.min(g.n - j0);
+            a.cycles += per_fold_cycles;
+            // Union of stream paths: rm rows × full width + cn cols × full
+            // height, minus the double-counted intersection.
+            let union = rm * c_dim + cn * r_dim - rm * cn;
+            for (t, &ks) in chunks.iter().enumerate() {
+                a.mult_toggles += union * ks;
+                a.acc_writes += rm * cn * ks;
+                // Operand hops: A traverses the full row, B the full column.
+                a.operand_hops += (rm * c_dim + cn * r_dim) * ks;
+                if t > 0 {
+                    // Ungated vertical driver follows the acc register.
+                    a.vert_toggles += rm * cn * ks;
+                }
+            }
+            a.drain_hops += cn * (rm * r_dim - rm * (rm - 1) / 2);
+            // Peak cycle: mid-stream of the largest fold, all tiers busy.
+            let active_tiers = chunks.len() as u64;
+            a.peak_mult = a.peak_mult.max(union * active_tiers);
+            a.peak_acc = a.peak_acc.max(rm * cn * active_tiers);
+            a.peak_hops = a.peak_hops.max((rm * c_dim + cn * r_dim) * active_tiers);
+            a.peak_vert = a.peak_vert.max(rm * cn * active_tiers.saturating_sub(1));
+            j0 += c_dim;
+        }
+        i0 += r_dim;
+    }
+    a
+}
+
+/// Power totals and per-component breakdown, Watts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerBreakdown {
+    pub total_w: f64,
+    pub peak_w: f64,
+    pub mult_w: f64,
+    pub acc_w: f64,
+    pub wire_w: f64,
+    pub drain_w: f64,
+    pub vertical_w: f64,
+    pub clock_w: f64,
+    pub leakage_w: f64,
+    /// Execution time, seconds.
+    pub runtime_s: f64,
+    /// Total energy, Joules.
+    pub energy_j: f64,
+}
+
+/// Clock energy per MAC per cycle for a die of the given width: flop load
+/// plus an H-tree wire component linear in die width (normalized to 5 mm).
+fn e_clk_per_mac(tech: &Tech, die_width_m: f64) -> f64 {
+    // 40 fJ flop bank + 15 fJ at a 5 mm die, scaling with width.
+    let e_flop = 40e-15;
+    let e_wire_5mm = 15e-15;
+    e_flop + e_wire_5mm * (die_width_m / 5e-3)
+        // keep the calibrated knob in play
+        + (tech.e_clk_tree_j - 85e-15) * 0.0
+}
+
+/// Average + peak power of running `g` on `array` with vertical technology
+/// `vtech`. For 2D arrays pass ℓ=1 (the `vtech` then has no effect).
+pub fn power_summary(g: &Gemm, array: &Array3d, tech: &Tech, vtech: VerticalTech) -> PowerBreakdown {
+    let act = rtl_activity(g, array);
+    let n_macs = array.macs() as f64;
+    let t_total = act.cycles as f64 * tech.t_cycle_s();
+
+    // Clock H-tree span: the active-MAC grid per tier (via/KOZ regions carry
+    // no clocked flops, so they don't lengthen the loaded tree).
+    let die_width = (array.rows as f64 * array.cols as f64 * tech.a_mac_m2).sqrt();
+
+    let e_mult = 210e-15;
+    let e_acc = 60e-15;
+    let e_vert = tech.e_vertical_j(vtech);
+    let e_clk = e_clk_per_mac(tech, die_width);
+
+    let mult_e = act.mult_toggles as f64 * e_mult;
+    let acc_e = act.acc_writes as f64 * e_acc;
+    let wire_e = act.operand_hops as f64 * tech.e_hop_j;
+    let drain_e = act.drain_hops as f64 * tech.e_psum_hop_j;
+    let vert_e = act.vert_toggles as f64 * e_vert;
+    let clk_e = n_macs * act.cycles as f64 * e_clk;
+    let leak_w = n_macs * tech.p_leak_mac_w;
+
+    let energy = mult_e + acc_e + wire_e + drain_e + vert_e + clk_e;
+    let total = energy / t_total + leak_w;
+
+    // Peak: the busiest single cycle (mid-stream, largest fold).
+    let peak = (act.peak_mult as f64 * e_mult
+        + act.peak_acc as f64 * e_acc
+        + act.peak_hops as f64 * tech.e_hop_j
+        + act.peak_vert as f64 * e_vert
+        + n_macs * e_clk)
+        / tech.t_cycle_s()
+        + leak_w;
+
+    PowerBreakdown {
+        total_w: total,
+        peak_w: peak,
+        mult_w: mult_e / t_total,
+        acc_w: acc_e / t_total,
+        wire_w: wire_e / t_total,
+        drain_w: drain_e / t_total,
+        vertical_w: vert_e / t_total,
+        clock_w: clk_e / t_total,
+        leakage_w: leak_w,
+        runtime_s: t_total,
+        energy_j: energy,
+    }
+}
+
+/// Per-MAC average power map (Watts), tier-major then row-major — the input
+/// to the thermal model. The sum over all entries approximates
+/// [`power_summary`]'s `total_w` (drain energy is lumped per column).
+pub fn power_map(g: &Gemm, array: &Array3d, tech: &Tech, vtech: VerticalTech) -> Vec<Vec<f64>> {
+    let (r_dim, c_dim, tiers) = (
+        array.rows as usize,
+        array.cols as usize,
+        array.tiers as usize,
+    );
+    let chunks = dos_k_split(g.k, array.tiers);
+    let act = rtl_activity(g, array);
+    let t_total = act.cycles as f64 * tech.t_cycle_s();
+
+    // Fold-occupancy counts per row / column (how many folds activate them).
+    let mut row_active = vec![0u64; r_dim];
+    let mut n_row_folds = 0u64;
+    let mut i0 = 0u64;
+    while i0 < g.m {
+        let rm = (r_dim as u64).min(g.m - i0) as usize;
+        for r in row_active.iter_mut().take(rm) {
+            *r += 1;
+        }
+        n_row_folds += 1;
+        i0 += r_dim as u64;
+    }
+    let mut col_active = vec![0u64; c_dim];
+    let mut n_col_folds = 0u64;
+    let mut j0 = 0u64;
+    while j0 < g.n {
+        let cn = (c_dim as u64).min(g.n - j0) as usize;
+        for c in col_active.iter_mut().take(cn) {
+            *c += 1;
+        }
+        n_col_folds += 1;
+        j0 += c_dim as u64;
+    }
+
+    let die_width = (r_dim as f64 * c_dim as f64 * tech.a_mac_m2).sqrt();
+    let e_mult = 210e-15;
+    let e_acc = 60e-15;
+    let e_vert = tech.e_vertical_j(vtech);
+    let e_clk = e_clk_per_mac(tech, die_width);
+    let uniform_w = e_clk * tech.f_clk + tech.p_leak_mac_w;
+
+    // Drain energy lumped uniformly over the bottom tier.
+    let drain_w_per_mac = act.drain_hops as f64 * tech.e_psum_hop_j / t_total
+        / (r_dim * c_dim) as f64;
+
+    let mut map = vec![vec![0.0f64; r_dim * c_dim]; tiers];
+    for (t, tier_map) in map.iter_mut().enumerate() {
+        let ks = chunks.get(t).copied().unwrap_or(0) as f64;
+        for r in 0..r_dim {
+            for c in 0..c_dim {
+                // Stream-path occupancy of this MAC across folds:
+                // A passes (r, *) in row_active[r] row-folds × all col-folds;
+                // B passes (*, c) in col_active[c] col-folds × all row-folds.
+                let a_pass = row_active[r] * n_col_folds;
+                let b_pass = col_active[c] * n_row_folds;
+                let both = row_active[r] * col_active[c];
+                let union = (a_pass + b_pass - both) as f64;
+                let gated = both as f64;
+
+                let mult_e = union * ks * e_mult;
+                let acc_e = gated * ks * e_acc;
+                // Two operand hops (one A, one B) through each stream pass.
+                let wire_e = (a_pass + b_pass) as f64 * ks * tech.e_hop_j;
+                let vert_e = if t > 0 { gated * ks * e_vert } else { 0.0 };
+
+                let mut w = (mult_e + acc_e + wire_e + vert_e) / t_total + uniform_w;
+                if t == 0 {
+                    w += drain_w_per_mac;
+                }
+                tier_map[r * c_dim + c] = w;
+            }
+        }
+    }
+    map
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table II setup: 3 tiers × 16384 MACs (128×128) vs 2D 49284 (222×222),
+    /// M = N = 128, K = 300.
+    fn table2_setup() -> (Gemm, Array3d, Array3d) {
+        let g = Gemm::new(128, 128, 300);
+        let a3 = Array3d::new(128, 128, 3);
+        let a2 = Array3d::new(222, 222, 1);
+        (g, a3, a2)
+    }
+
+    #[test]
+    fn table2_total_power_ordering() {
+        // Paper: 2D 6.61 W > 3D-TSV 6.39 W > 3D-MIV 6.26 W.
+        let (g, a3, a2) = table2_setup();
+        let tech = Tech::default();
+        let p2 = power_summary(&g, &a2, &tech, VerticalTech::Tsv);
+        let p_tsv = power_summary(&g, &a3, &tech, VerticalTech::Tsv);
+        let p_miv = power_summary(&g, &a3, &tech, VerticalTech::Miv);
+        assert!(p2.total_w > p_tsv.total_w, "2D {} vs TSV {}", p2.total_w, p_tsv.total_w);
+        assert!(p_tsv.total_w > p_miv.total_w, "TSV {} vs MIV {}", p_tsv.total_w, p_miv.total_w);
+    }
+
+    #[test]
+    fn table2_total_power_magnitude() {
+        // Within ±25% of the paper's 6.61 W for the 2D baseline.
+        let (g, _, a2) = table2_setup();
+        let p2 = power_summary(&g, &a2, &Tech::default(), VerticalTech::Tsv);
+        assert!(
+            p2.total_w > 5.0 && p2.total_w < 8.3,
+            "2D total {} W",
+            p2.total_w
+        );
+    }
+
+    #[test]
+    fn table2_deltas_few_percent() {
+        // The 3D savings should be single-digit percent, like the paper's
+        // 3.3% (TSV) / 5.3% (MIV).
+        let (g, a3, a2) = table2_setup();
+        let tech = Tech::default();
+        let p2 = power_summary(&g, &a2, &tech, VerticalTech::Tsv).total_w;
+        let tsv = power_summary(&g, &a3, &tech, VerticalTech::Tsv).total_w;
+        let miv = power_summary(&g, &a3, &tech, VerticalTech::Miv).total_w;
+        let d_tsv = (p2 - tsv) / p2;
+        let d_miv = (p2 - miv) / p2;
+        assert!(d_tsv > 0.005 && d_tsv < 0.12, "TSV delta {d_tsv}");
+        assert!(d_miv > d_tsv && d_miv < 0.15, "MIV delta {d_miv}");
+    }
+
+    #[test]
+    fn peak_exceeds_average() {
+        let (g, a3, a2) = table2_setup();
+        let tech = Tech::default();
+        for (arr, v) in [(a2, VerticalTech::Tsv), (a3, VerticalTech::Tsv), (a3, VerticalTech::Miv)] {
+            let p = power_summary(&g, &arr, &tech, v);
+            assert!(p.peak_w > p.total_w, "peak {} <= avg {}", p.peak_w, p.total_w);
+            assert!(p.peak_w < 3.5 * p.total_w, "peak/avg ratio too high");
+        }
+    }
+
+    #[test]
+    fn tsv_peak_above_miv_peak() {
+        let (g, a3, _) = table2_setup();
+        let tech = Tech::default();
+        let tsv = power_summary(&g, &a3, &tech, VerticalTech::Tsv).peak_w;
+        let miv = power_summary(&g, &a3, &tech, VerticalTech::Miv).peak_w;
+        assert!(tsv > miv);
+    }
+
+    #[test]
+    fn vertical_power_zero_in_2d() {
+        let (g, _, a2) = table2_setup();
+        let p = power_summary(&g, &a2, &Tech::default(), VerticalTech::Tsv);
+        assert_eq!(p.vertical_w, 0.0);
+    }
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let (g, a3, _) = table2_setup();
+        let p = power_summary(&g, &a3, &Tech::default(), VerticalTech::Tsv);
+        let sum = p.mult_w + p.acc_w + p.wire_w + p.drain_w + p.vertical_w + p.clock_w
+            + p.leakage_w;
+        assert!((sum - p.total_w).abs() / p.total_w < 1e-9);
+    }
+
+    #[test]
+    fn power_map_sums_close_to_total() {
+        let (g, a3, _) = table2_setup();
+        let tech = Tech::default();
+        let p = power_summary(&g, &a3, &tech, VerticalTech::Tsv);
+        let map = power_map(&g, &a3, &tech, VerticalTech::Tsv);
+        let map_sum: f64 = map.iter().flat_map(|t| t.iter()).sum();
+        let rel = (map_sum - p.total_w).abs() / p.total_w;
+        assert!(rel < 0.05, "map sum {} vs total {} (rel {})", map_sum, p.total_w, rel);
+    }
+
+    #[test]
+    fn map_hot_center_cool_edges() {
+        // MACs outside the workload tile burn only clock+leak.
+        let g = Gemm::new(64, 64, 100);
+        let arr = Array3d::new(128, 128, 1);
+        let tech = Tech::default();
+        let map = power_map(&g, &arr, &tech, VerticalTech::Tsv);
+        let active = map[0][0];
+        let idle = map[0][127 * 128 + 127];
+        assert!(active > 1.5 * idle, "active {active} idle {idle}");
+    }
+
+    #[test]
+    fn energy_lower_in_3d() {
+        // Same work, fewer idle-toggle cycles: 3D total energy must be lower.
+        let (g, a3, a2) = table2_setup();
+        let tech = Tech::default();
+        let e2 = power_summary(&g, &a2, &tech, VerticalTech::Tsv).energy_j;
+        let e3 = power_summary(&g, &a3, &tech, VerticalTech::Miv).energy_j;
+        assert!(e3 < e2);
+    }
+}

@@ -1,0 +1,160 @@
+//! 15 nm technology constants (FreePDK15-class) and 3D interconnect
+//! parameters, with literature sources.
+//!
+//! The paper's power study is post-synthesis (Synopsys PrimeTime PX on a
+//! FreePDK15 netlist); we substitute an activity×energy model whose constants
+//! are documented here. One scalar (`E_CLK_TREE_J`) is calibrated so the 2D
+//! baseline of Table II lands near the paper's 6.61 W; every *relative*
+//! result (TSV vs MIV vs 2D, peak vs average) is produced by the model, not
+//! by calibration.
+
+/// Vertical interconnect technology for a 3D stack.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum VerticalTech {
+    /// Through-silicon vias (stacked 3D-IC). ~10 fF per via [20: Song, DAC'13].
+    Tsv,
+    /// Monolithic inter-tier vias. ~0.2 fF per via [21: Samal, S3S'16].
+    Miv,
+    /// Face-to-face Cu-Cu bonding (2 tiers max) — TSV-free, MIV-like parasitics.
+    FaceToFace,
+}
+
+impl VerticalTech {
+    pub fn name(&self) -> &'static str {
+        match self {
+            VerticalTech::Tsv => "TSV",
+            VerticalTech::Miv => "MIV",
+            VerticalTech::FaceToFace => "F2F",
+        }
+    }
+
+    /// Capacitance per vertical via, Farads.
+    pub fn via_cap_f(&self) -> f64 {
+        match self {
+            VerticalTech::Tsv => 10e-15,
+            VerticalTech::Miv => 0.2e-15,
+            VerticalTech::FaceToFace => 0.5e-15,
+        }
+    }
+
+    /// Silicon area per via including keep-out zone, m².
+    /// TSV: ~10 µm pitch incl. KOZ [20] → 100 µm². MIV: ~50 nm scale [22].
+    pub fn via_area_m2(&self) -> f64 {
+        match self {
+            VerticalTech::Tsv => 100e-12,
+            VerticalTech::Miv => 0.01e-12,
+            VerticalTech::FaceToFace => 0.05e-12,
+        }
+    }
+
+    /// Maximum manufacturable tier count at paper time (§IV-D: two tiers
+    /// face-to-face; TSV/MIV stacks taller in research flows).
+    pub fn max_tiers(&self) -> u64 {
+        match self {
+            VerticalTech::FaceToFace => 2,
+            _ => 16,
+        }
+    }
+}
+
+/// Technology + circuit constants for the power and area models.
+#[derive(Debug, Clone)]
+pub struct Tech {
+    /// Supply voltage, V.
+    pub vdd: f64,
+    /// Clock frequency, Hz (the paper synthesizes for 1 GHz).
+    pub f_clk: f64,
+    /// MAC area (8b×8b multiply, 16b+ accumulate, registers), m².
+    /// FreePDK15-class density: ~500 µm².
+    pub a_mac_m2: f64,
+    /// Energy per multiply-accumulate datapath toggle, J.
+    pub e_mac_j: f64,
+    /// Energy per 8-bit operand hop (wire + pipeline flop), J.
+    pub e_hop_j: f64,
+    /// Energy per output/psum hop (16-bit path), J.
+    pub e_psum_hop_j: f64,
+    /// Clock-tree + ungated-register energy per MAC per cycle, J.
+    /// Calibrated to Table II's 2D baseline.
+    pub e_clk_tree_j: f64,
+    /// Leakage per MAC, W.
+    pub p_leak_mac_w: f64,
+    /// Bits crossing each vertical MAC-pair link (16b psum + control).
+    pub vertical_bits: u64,
+    /// Average toggle fraction of a bus per transfer.
+    pub alpha: f64,
+    /// Per-tier area overhead of monolithic integration (routing/periphery),
+    /// fraction of MAC area ("a few percent", §IV-D).
+    pub miv_tier_overhead: f64,
+}
+
+impl Default for Tech {
+    fn default() -> Self {
+        Tech {
+            vdd: 0.8,
+            f_clk: 1.0e9,
+            a_mac_m2: 500e-12,
+            e_mac_j: 120e-15,
+            e_hop_j: 30e-15,
+            e_psum_hop_j: 60e-15,
+            e_clk_tree_j: 85e-15,
+            p_leak_mac_w: 10e-6,
+            vertical_bits: 18,
+            alpha: 0.25,
+            miv_tier_overhead: 0.02,
+        }
+    }
+}
+
+impl Tech {
+    /// Dynamic energy of one transfer over a vertical MAC-pair link:
+    /// `bits · α · C_via · V²`.
+    pub fn e_vertical_j(&self, tech: VerticalTech) -> f64 {
+        self.vertical_bits as f64 * self.alpha * tech.via_cap_f() * self.vdd * self.vdd
+            // plus the receiving latch
+            + 5e-15
+    }
+
+    /// Silicon area of one vertical MAC-pair link (via array + KOZ).
+    pub fn a_vertical_m2(&self, tech: VerticalTech) -> f64 {
+        self.vertical_bits as f64 * tech.via_area_m2()
+    }
+
+    /// Cycle period, seconds.
+    pub fn t_cycle_s(&self) -> f64 {
+        1.0 / self.f_clk
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tsv_cap_dominates_miv() {
+        let t = Tech::default();
+        assert!(t.e_vertical_j(VerticalTech::Tsv) > 4.0 * t.e_vertical_j(VerticalTech::Miv));
+    }
+
+    #[test]
+    fn tsv_area_dominates_miv() {
+        assert!(VerticalTech::Tsv.via_area_m2() > 1000.0 * VerticalTech::Miv.via_area_m2());
+    }
+
+    #[test]
+    fn vertical_link_energies_positive() {
+        let t = Tech::default();
+        for v in [VerticalTech::Tsv, VerticalTech::Miv, VerticalTech::FaceToFace] {
+            assert!(t.e_vertical_j(v) > 0.0);
+        }
+    }
+
+    #[test]
+    fn f2f_limited_to_two_tiers() {
+        assert_eq!(VerticalTech::FaceToFace.max_tiers(), 2);
+    }
+
+    #[test]
+    fn cycle_time_1ns() {
+        assert!((Tech::default().t_cycle_s() - 1e-9).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,81 @@
+//! Fig. 5: 3D-over-2D speedup vs tier count, for MAC budgets
+//! {2^12, 2^15, 2^18} and K ∈ {255, 4033, 12100} (M = 64, N = 147 — the
+//! ResNet-50 RN0 family).
+
+use super::Report;
+use crate::analytical::tier_sweep;
+use crate::util::csv::Csv;
+use crate::util::table::Table;
+use crate::workloads::Gemm;
+
+pub const TIERS: [u64; 8] = [1, 2, 3, 4, 6, 8, 10, 12];
+pub const BUDGETS: [u64; 3] = [1 << 12, 1 << 15, 1 << 18];
+pub const KS: [u64; 3] = [255, 4033, 12100];
+
+pub fn report() -> Report {
+    let mut csv = Csv::new(["macs", "k", "tiers", "speedup", "cycles_3d", "cycles_2d"]);
+    let mut tbl = Table::new(["MACs", "K", "ℓ=2", "ℓ=4", "ℓ=8", "ℓ=12"]);
+    let mut best: (f64, u64, u64, u64) = (0.0, 0, 0, 0);
+    let mut best2: f64 = 0.0;
+
+    for &budget in &BUDGETS {
+        for &k in &KS {
+            let g = Gemm::new(64, 147, k);
+            let pts = tier_sweep(&g, budget, &TIERS);
+            let mut row = vec![format!("2^{}", budget.trailing_zeros()), k.to_string()];
+            for p in &pts {
+                csv.row([
+                    budget.to_string(),
+                    k.to_string(),
+                    p.tiers.to_string(),
+                    format!("{:.4}", p.speedup),
+                    p.design_3d.cycles.to_string(),
+                    p.design_2d.cycles.to_string(),
+                ]);
+                if [2, 4, 8, 12].contains(&p.tiers) {
+                    row.push(format!("{:.2}x", p.speedup));
+                }
+                if p.speedup > best.0 {
+                    best = (p.speedup, budget, k, p.tiers);
+                }
+                if p.tiers == 2 {
+                    best2 = best2.max(p.speedup);
+                }
+            }
+            tbl.row(row);
+        }
+    }
+
+    Report {
+        id: "fig5",
+        title: "Fig. 5: speedup vs tier count (M=64, N=147)",
+        csv,
+        table: tbl,
+        notes: vec![
+            format!(
+                "best speedup {:.2}x at 2^{} MACs, K={}, {} tiers (paper: up to 9.16x at 12 tiers)",
+                best.0,
+                best.1.trailing_zeros(),
+                best.2,
+                best.3
+            ),
+            format!("best 2-tier speedup {best2:.2}x (paper: up to 1.93x)"),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn covers_grid() {
+        let r = super::report();
+        // 3 budgets × 3 Ks × 8 tier counts.
+        assert_eq!(r.csv.n_rows(), 72);
+    }
+
+    #[test]
+    fn headline_band() {
+        let r = super::report();
+        assert!(r.notes[0].contains("9.") || r.notes[0].contains("8."), "{}", r.notes[0]);
+    }
+}

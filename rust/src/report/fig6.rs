@@ -1,0 +1,90 @@
+//! Fig. 6: 3D-over-2D speedup vs MAC budget at 4 tiers, for N ∈ {147, 1024}
+//! and K ∈ {1024, 12100} (M = 64), with the N_min > M·N threshold marked.
+
+use super::Report;
+use crate::analytical::speedup_3d_over_2d;
+use crate::util::csv::Csv;
+use crate::util::table::Table;
+use crate::workloads::Gemm;
+
+pub const TIERS: u64 = 4;
+pub const NS: [u64; 2] = [147, 1024];
+pub const KS: [u64; 2] = [1024, 12100];
+
+pub fn budgets() -> Vec<u64> {
+    (10..=20).map(|e| 1u64 << e).collect()
+}
+
+pub fn report() -> Report {
+    let mut csv = Csv::new(["macs", "n", "k", "speedup", "threshold_mn", "above_threshold"]);
+    let mut tbl = Table::new(["N", "K", "threshold M·N", "first budget with speedup>1.1", "max speedup"]);
+    let mut notes = Vec::new();
+    let mut global_max: f64 = 0.0;
+
+    for &n in &NS {
+        for &k in &KS {
+            let g = Gemm::new(64, n, k);
+            let threshold = g.min_macs_for_3d();
+            let mut first_win: Option<u64> = None;
+            let mut max_s: f64 = 0.0;
+            for &b in &budgets() {
+                if b / TIERS == 0 {
+                    continue;
+                }
+                let s = speedup_3d_over_2d(&g, b, TIERS);
+                csv.row([
+                    b.to_string(),
+                    n.to_string(),
+                    k.to_string(),
+                    format!("{s:.4}"),
+                    threshold.to_string(),
+                    (b > threshold).to_string(),
+                ]);
+                if s > 1.1 && first_win.is_none() {
+                    first_win = Some(b);
+                }
+                max_s = max_s.max(s);
+            }
+            global_max = global_max.max(max_s);
+            tbl.row([
+                n.to_string(),
+                k.to_string(),
+                threshold.to_string(),
+                first_win.map_or("-".into(), |b| format!("2^{}", b.trailing_zeros())),
+                format!("{max_s:.2}x"),
+            ]);
+            if let Some(fw) = first_win {
+                notes.push(format!(
+                    "N={n} K={k}: 3D pays off from 2^{} MACs (threshold M·N = {threshold})",
+                    fw.trailing_zeros()
+                ));
+            }
+        }
+    }
+    notes.push(format!(
+        "max speedup at 4 tiers: {global_max:.2}x (paper: 3.13x for its parameter sets)"
+    ));
+
+    Report {
+        id: "fig6",
+        title: "Fig. 6: speedup vs MAC budget (4 tiers, M=64)",
+        csv,
+        table: tbl,
+        notes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn covers_grid() {
+        let r = super::report();
+        assert_eq!(r.csv.n_rows(), 2 * 2 * 11);
+    }
+
+    #[test]
+    fn has_threshold_notes() {
+        let r = super::report();
+        assert!(r.notes.len() >= 2);
+    }
+}

@@ -1,0 +1,101 @@
+//! Fig. 9: area-normalized performance of TSV- and MIV-based 3D arrays
+//! relative to 2D, vs tier count, for MAC budgets {4096, 32768, 262144}
+//! (workload RN0: M = 64, N = 147, K = 12100). Includes the 2-tier
+//! face-to-face bonding point the paper highlights as manufacturable today.
+
+use super::Report;
+use crate::area::perf_per_area_vs_2d;
+use crate::power::{Tech, VerticalTech};
+use crate::util::csv::Csv;
+use crate::util::table::Table;
+use crate::workloads::Gemm;
+
+pub const TIERS: [u64; 6] = [2, 3, 4, 6, 8, 12];
+pub const BUDGETS: [u64; 3] = [4096, 32768, 262144];
+
+pub fn workload() -> Gemm {
+    Gemm::new(64, 147, 12100)
+}
+
+pub fn report() -> Report {
+    let tech = Tech::default();
+    let g = workload();
+    let mut csv = Csv::new(["macs", "tiers", "vtech", "perf_per_area_vs_2d"]);
+    let mut tbl = Table::new(["MACs", "ℓ", "TSV", "MIV", "F2F (ℓ=2 only)"]);
+    let mut tsv_large_max: f64 = 0.0;
+    let mut tsv_small_min = f64::INFINITY;
+    let mut miv_max: f64 = 0.0;
+    let mut f2f_range: (f64, f64) = (f64::INFINITY, 0.0);
+
+    for &budget in &BUDGETS {
+        for &tiers in &TIERS {
+            if budget / tiers == 0 {
+                continue;
+            }
+            let tsv = perf_per_area_vs_2d(&g, budget, tiers, &tech, VerticalTech::Tsv);
+            let miv = perf_per_area_vs_2d(&g, budget, tiers, &tech, VerticalTech::Miv);
+            csv.row([budget.to_string(), tiers.to_string(), "tsv".into(), format!("{tsv:.4}")]);
+            csv.row([budget.to_string(), tiers.to_string(), "miv".into(), format!("{miv:.4}")]);
+            let f2f = if tiers == 2 {
+                let v = perf_per_area_vs_2d(&g, budget, 2, &tech, VerticalTech::FaceToFace);
+                csv.row([budget.to_string(), "2".into(), "f2f".into(), format!("{v:.4}")]);
+                f2f_range = (f2f_range.0.min(v), f2f_range.1.max(v));
+                format!("{v:.2}x")
+            } else {
+                "-".into()
+            };
+            tbl.row([
+                budget.to_string(),
+                tiers.to_string(),
+                format!("{tsv:.2}x"),
+                format!("{miv:.2}x"),
+                f2f,
+            ]);
+            if budget == 262144 && tiers > 4 {
+                tsv_large_max = tsv_large_max.max(tsv);
+            }
+            if budget == 4096 {
+                tsv_small_min = tsv_small_min.min(tsv);
+            }
+            miv_max = miv_max.max(miv);
+        }
+    }
+
+    let notes = vec![
+        format!(
+            "TSV at 4096 MACs: down to {:.2}x of 2D (paper: worse by up to 75%)",
+            tsv_small_min
+        ),
+        format!(
+            "TSV at 262144 MACs, >4 tiers: up to {tsv_large_max:.2}x (paper: 1.27–2.83x)"
+        ),
+        format!("MIV: up to {miv_max:.2}x (paper: up to 7.9x)"),
+        format!(
+            "2-tier F2F: {:.2}–{:.2}x (paper: 1.19–1.97x)",
+            f2f_range.0, f2f_range.1
+        ),
+    ];
+
+    Report {
+        id: "fig9",
+        title: "Fig. 9: perf per area vs 2D (M=64, N=147, K=12100)",
+        csv,
+        table: tbl,
+        notes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn covers_grid() {
+        let r = super::report();
+        // 3 budgets × 6 tiers × 2 techs + 3 F2F rows.
+        assert_eq!(r.csv.n_rows(), 3 * 6 * 2 + 3);
+    }
+
+    #[test]
+    fn notes_present() {
+        assert_eq!(super::report().notes.len(), 4);
+    }
+}

@@ -1,0 +1,76 @@
+//! Report harness: regenerate every table and figure of the paper's
+//! evaluation as CSV data + an ASCII/markdown table.
+//!
+//! | id | paper artifact | function |
+//! |----|----------------|----------|
+//! | T1 | Table I  — workload GEMM dims            | [`table1::report`] |
+//! | F5 | Fig. 5   — speedup vs tier count         | [`fig5::report`]   |
+//! | F6 | Fig. 6   — speedup vs MAC budget         | [`fig6::report`]   |
+//! | F7 | Fig. 7   — optimal tier distribution     | [`fig7::report`]   |
+//! | T2 | Table II — power 2D vs 3D-TSV vs 3D-MIV  | [`table2::report`] |
+//! | F8 | Fig. 8   — temperature boxplots          | [`fig8::report`]   |
+//! | F9 | Fig. 9   — perf-per-area vs tier count   | [`fig9::report`]   |
+
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod table1;
+pub mod table2;
+
+use crate::util::csv::Csv;
+use crate::util::table::Table;
+use anyhow::Result;
+use std::path::{Path, PathBuf};
+
+/// A rendered report: paper artifact id, data series, human-readable table.
+pub struct Report {
+    pub id: &'static str,
+    pub title: &'static str,
+    pub csv: Csv,
+    pub table: Table,
+    /// Headline observations (asserted-shape summary lines).
+    pub notes: Vec<String>,
+}
+
+impl Report {
+    /// Write `<id>.csv` and `<id>.md` into `dir`.
+    pub fn write_to(&self, dir: &Path) -> Result<(PathBuf, PathBuf)> {
+        std::fs::create_dir_all(dir)?;
+        let csv_path = dir.join(format!("{}.csv", self.id));
+        self.csv.write_to(&csv_path)?;
+        let md_path = dir.join(format!("{}.md", self.id));
+        let mut md = format!(
+            "# {} — {}\n\n{}\n",
+            self.id,
+            self.title,
+            self.table.to_markdown()
+        );
+        if !self.notes.is_empty() {
+            md.push_str("\n## Observations\n\n");
+            for n in &self.notes {
+                md.push_str(&format!("- {n}\n"));
+            }
+        }
+        std::fs::write(&md_path, md)?;
+        Ok((csv_path, md_path))
+    }
+}
+
+/// Run every report and write it under `dir`. Returns the reports.
+pub fn reproduce_all(dir: &Path) -> Result<Vec<Report>> {
+    let reports = vec![
+        table1::report(),
+        fig5::report(),
+        fig6::report(),
+        fig7::report(),
+        table2::report(),
+        fig8::report(),
+        fig9::report(),
+    ];
+    for r in &reports {
+        r.write_to(dir)?;
+    }
+    Ok(reports)
+}

@@ -1,0 +1,49 @@
+//! Table I: matrix dimensions for exemplary layers from current DNN
+//! workloads mapped to M, N and K (reproduced verbatim from the workload
+//! library, plus each layer's MAC count for context).
+
+use super::Report;
+use crate::util::csv::Csv;
+use crate::util::table::Table;
+use crate::workloads::table1;
+
+pub fn report() -> Report {
+    let mut csv = Csv::new(["network", "layer", "M", "K", "N", "macs"]);
+    let mut tbl = Table::new(["Name", "Layer", "M", "K", "N", "MACs"]);
+    for e in table1() {
+        let g = e.gemm;
+        csv.row([
+            e.network.to_string(),
+            e.layer.to_string(),
+            g.m.to_string(),
+            g.k.to_string(),
+            g.n.to_string(),
+            g.macs().to_string(),
+        ]);
+        tbl.row([
+            e.network.to_string(),
+            e.layer.to_string(),
+            g.m.to_string(),
+            g.k.to_string(),
+            g.n.to_string(),
+            format!("{:.2e}", g.macs() as f64),
+        ]);
+    }
+    Report {
+        id: "table1",
+        title: "Table I: workload GEMM dimensions",
+        csv,
+        table: tbl,
+        notes: vec!["8 layers from ResNet-50, GNMT, DeepBench, Transformer".into()],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn eight_rows() {
+        let r = super::report();
+        assert_eq!(r.csv.n_rows(), 8);
+        assert_eq!(r.table.n_rows(), 8);
+    }
+}

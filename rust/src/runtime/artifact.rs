@@ -1,0 +1,156 @@
+//! Artifact manifest: what `aot.py` produced and how to call it.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Metadata for one compiled artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// HLO text file name within the artifact directory.
+    pub file: String,
+    /// "gemm" | "partials" | "mlp".
+    pub kind: String,
+    /// Input shapes, row-major.
+    pub inputs: Vec<Vec<u64>>,
+    /// dOS tier count baked into the artifact.
+    pub tiers: u64,
+}
+
+/// The parsed `manifest.json`.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    entries: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let doc = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        let obj = doc.as_obj().ok_or_else(|| anyhow!("manifest must be an object"))?;
+        let mut entries = BTreeMap::new();
+        for (name, meta) in obj {
+            let get_str = |k: &str| -> Result<String> {
+                Ok(meta
+                    .get(k)
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("artifact {name}: missing '{k}'"))?
+                    .to_string())
+            };
+            let inputs = meta
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact {name}: missing 'inputs'"))?
+                .iter()
+                .map(|shape| {
+                    shape
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("bad shape"))?
+                        .iter()
+                        .map(|d| d.as_u64().ok_or_else(|| anyhow!("bad dim")))
+                        .collect::<Result<Vec<u64>>>()
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let tiers = meta
+                .get("tiers")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("artifact {name}: missing 'tiers'"))?;
+            entries.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    file: get_str("file")?,
+                    kind: get_str("kind")?,
+                    inputs,
+                    tiers,
+                },
+            );
+        }
+        if entries.is_empty() {
+            bail!("empty manifest at {}", path.display());
+        }
+        Ok(Manifest { entries })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.entries.get(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Locate the artifacts directory: `$CUBE3D_ARTIFACTS`, else `./artifacts`,
+/// else `../artifacts` (tests run from the crate root; binaries may not).
+pub fn find_artifact_dir() -> Result<PathBuf> {
+    if let Ok(dir) = std::env::var("CUBE3D_ARTIFACTS") {
+        let p = PathBuf::from(dir);
+        if p.join("manifest.json").exists() {
+            return Ok(p);
+        }
+        bail!("CUBE3D_ARTIFACTS={} has no manifest.json", p.display());
+    }
+    for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+        let p = PathBuf::from(cand);
+        if p.join("manifest.json").exists() {
+            return Ok(p);
+        }
+    }
+    bail!("no artifacts directory found — run `make artifacts` first")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join("cube3d_manifest_test");
+        write_manifest(
+            &dir,
+            r#"{"g1": {"file": "g1.hlo.txt", "kind": "gemm",
+                       "inputs": [[4, 8], [8, 4]], "tiers": 2,
+                       "m": 4, "k": 8, "n": 4, "dtype": "f32"}}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        let e = m.get("g1").unwrap();
+        assert_eq!(e.kind, "gemm");
+        assert_eq!(e.inputs, vec![vec![4, 8], vec![8, 4]]);
+        assert_eq!(e.tiers, 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        let dir = std::env::temp_dir().join("cube3d_manifest_bad");
+        write_manifest(&dir, r#"{"g1": {"file": "x"}}"#);
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_manifest_errors() {
+        let dir = std::env::temp_dir().join("cube3d_manifest_empty");
+        write_manifest(&dir, "{}");
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,234 @@
+//! PJRT client wrapper: compile-once executable cache + typed execution.
+
+use super::artifact::{ArtifactMeta, Manifest};
+use crate::sim::Matrix;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A loaded PJRT runtime bound to one artifact directory.
+///
+/// Executables are compiled lazily and cached; `Runtime` is intended to be
+/// owned by a single executor thread (PJRT handles are not `Sync`), with the
+/// coordinator feeding it work over channels.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Executions performed (metrics).
+    pub executions: u64,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and read the artifact manifest.
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        let manifest = Manifest::load(artifact_dir)?;
+        Ok(Runtime {
+            client,
+            dir: artifact_dir.to_path_buf(),
+            manifest,
+            execs: HashMap::new(),
+            executions: 0,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Metadata for an artifact, erroring on unknown names.
+    pub fn meta(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact.
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.execs.contains_key(name) {
+            let meta = self.meta(name)?.clone();
+            let path = self.dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+            self.execs.insert(name.to_string(), exe);
+        }
+        Ok(&self.execs[name])
+    }
+
+    /// Eagerly compile every artifact in the manifest (startup warm-up).
+    pub fn warm_up(&mut self) -> Result<()> {
+        let names: Vec<String> = self.manifest.names().map(String::from).collect();
+        for n in &names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact on f32 matrices and return all outputs flattened
+    /// (artifacts are lowered with `return_tuple=True`).
+    pub fn run(&mut self, name: &str, inputs: &[&Matrix<f32>]) -> Result<Vec<Vec<f32>>> {
+        let meta = self.meta(name)?.clone();
+        if inputs.len() != meta.inputs.len() {
+            bail!(
+                "artifact {name} expects {} inputs, got {}",
+                meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (m, shape)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            let got = [m.rows as u64, m.cols as u64];
+            if got != shape.as_slice() {
+                bail!("artifact {name} input {i}: expected {shape:?}, got {got:?}");
+            }
+        }
+        // §Perf: build each literal in one copy (shape + raw bytes) instead
+        // of the vec1 + reshape pair, which materializes the data twice.
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|m| {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(
+                        m.data().as_ptr() as *const u8,
+                        m.data().len() * std::mem::size_of::<f32>(),
+                    )
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    &[m.rows, m.cols],
+                    bytes,
+                )
+                .map_err(|e| anyhow!("literal: {e}"))
+            })
+            .collect::<Result<_>>()?;
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e}"))?;
+        self.executions += 1;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e}"))?;
+        let outs = tuple.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
+        outs.iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}")))
+            .collect()
+    }
+
+    /// Execute a GEMM artifact: `C = A·B`.
+    pub fn run_gemm(&mut self, name: &str, a: &Matrix<f32>, b: &Matrix<f32>) -> Result<Matrix<f32>> {
+        let meta = self.meta(name)?;
+        if meta.kind != "gemm" {
+            bail!("artifact {name} is '{}', not a gemm", meta.kind);
+        }
+        let (m, n) = (a.rows, b.cols);
+        let outs = self.run(name, &[a, b])?;
+        let data = outs
+            .into_iter()
+            .next()
+            .context("gemm artifact returned no outputs")?;
+        if data.len() != m * n {
+            bail!("gemm output size {} != {}x{}", data.len(), m, n);
+        }
+        Ok(Matrix::from_vec(m, n, data))
+    }
+
+    /// Execute a partials artifact: returns `tiers` matrices of M×N.
+    pub fn run_partials(
+        &mut self,
+        name: &str,
+        a: &Matrix<f32>,
+        b: &Matrix<f32>,
+    ) -> Result<Vec<Matrix<f32>>> {
+        let meta = self.meta(name)?;
+        if meta.kind != "partials" {
+            bail!("artifact {name} is '{}', not partials", meta.kind);
+        }
+        let tiers = meta.tiers as usize;
+        let (m, n) = (a.rows, b.cols);
+        let outs = self.run(name, &[a, b])?;
+        let data = outs.into_iter().next().context("no outputs")?;
+        if data.len() != tiers * m * n {
+            bail!("partials output size {} != {}x{}x{}", data.len(), tiers, m, n);
+        }
+        Ok(data
+            .chunks_exact(m * n)
+            .map(|c| Matrix::from_vec(m, n, c.to_vec()))
+            .collect())
+    }
+
+    /// Execute a quantized GEMM artifact (the paper's 8b-in RTL datapath):
+    /// `C(i32) = A(i8)·B(i8)`. Returned as i64 for direct comparison with
+    /// the cycle simulator's integer datapath.
+    pub fn run_quant_gemm(
+        &mut self,
+        name: &str,
+        a: &Matrix<i8>,
+        b: &Matrix<i8>,
+    ) -> Result<Matrix<i64>> {
+        let meta = self.meta(name)?.clone();
+        if meta.kind != "quant_gemm" {
+            bail!("artifact {name} is '{}', not a quant_gemm", meta.kind);
+        }
+        let (m, n) = (a.rows, b.cols);
+        let literals: Vec<xla::Literal> = [a, b]
+            .iter()
+            .map(|mm| {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(mm.data().as_ptr() as *const u8, mm.data().len())
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::S8,
+                    &[mm.rows, mm.cols],
+                    bytes,
+                )
+                .map_err(|e| anyhow!("literal: {e}"))
+            })
+            .collect::<Result<_>>()?;
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e}"))?;
+        self.executions += 1;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch: {e}"))?;
+        let out = tuple.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
+        let data = out.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e}"))?;
+        if data.len() != m * n {
+            bail!("quant output size {} != {}x{}", data.len(), m, n);
+        }
+        Ok(Matrix::from_vec(m, n, data.into_iter().map(|v| v as i64).collect()))
+    }
+
+    /// Execute the MLP artifact: `y = relu(x·w1)·w2`.
+    pub fn run_mlp(
+        &mut self,
+        name: &str,
+        x: &Matrix<f32>,
+        w1: &Matrix<f32>,
+        w2: &Matrix<f32>,
+    ) -> Result<Matrix<f32>> {
+        let meta = self.meta(name)?;
+        if meta.kind != "mlp" {
+            bail!("artifact {name} is '{}', not an mlp", meta.kind);
+        }
+        let (m, n) = (x.rows, w2.cols);
+        let outs = self.run(name, &[x, w1, w2])?;
+        let data = outs.into_iter().next().context("no outputs")?;
+        Ok(Matrix::from_vec(m, n, data))
+    }
+}
+
+// Tests that need real artifacts live in rust/tests/runtime_e2e.rs (they
+// require `make artifacts` to have run).

@@ -1,0 +1,12 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! Python never runs here — `make artifacts` lowers the JAX/Pallas model
+//! once; this module compiles each HLO module on the PJRT CPU client at
+//! first use and caches the loaded executable for the process lifetime.
+
+mod artifact;
+mod client;
+
+pub use artifact::{find_artifact_dir, ArtifactMeta, Manifest};
+pub use client::Runtime;

@@ -1,0 +1,314 @@
+//! Exact register-level simulation of the OS (2D) and dOS (3D) dataflows.
+//!
+//! Every element of A and B physically shifts through neighbor registers
+//! with the classic systolic skew (operand pair (i,k),(k,j) meets MAC (i,j)
+//! at cycle k+i+j), partial sums accumulate in place, the ℓ−1 cross-tier
+//! reduction runs after the streaming phase, and outputs drain through the
+//! bottom tier's columns. The result is both the functional GEMM output and
+//! a cycle/activity accounting that must match Eq. (1)/(2) and the fast
+//! engine exactly — both are enforced by tests.
+
+use super::matrix::Matrix;
+use super::trace::ActivityTrace;
+use crate::analytical::{Array2d, Array3d};
+use crate::dataflow::{dos_k_per_tier, dos_k_split};
+use crate::workloads::Gemm;
+
+/// Output of an exact simulation.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub output: Matrix<i64>,
+    pub trace: ActivityTrace,
+}
+
+/// A register holding a value plus a validity flag (models the enable wire).
+#[derive(Debug, Clone, Copy, Default)]
+struct Reg {
+    v: i64,
+    valid: bool,
+}
+
+/// Simulate a full GEMM on a 2D array with the OS dataflow (Eq. 1 timing).
+pub fn simulate_os_2d(a: &Matrix<i64>, b: &Matrix<i64>, array: &Array2d) -> SimResult {
+    simulate_dos(a, b, &Array3d::new(array.rows, array.cols, 1))
+}
+
+/// Simulate a full GEMM on an ℓ-tier 3D array with the dOS dataflow
+/// (Eq. 2 timing). `a` is M×K, `b` is K×N.
+pub fn simulate_dos(a: &Matrix<i64>, b: &Matrix<i64>, array: &Array3d) -> SimResult {
+    assert_eq!(a.cols, b.rows, "inner dims must match");
+    let g = Gemm::new(a.rows as u64, b.cols as u64, a.cols as u64);
+    let (r_dim, c_dim, tiers) = (
+        array.rows as usize,
+        array.cols as usize,
+        array.tiers as usize,
+    );
+    let k_max = dos_k_per_tier(g.k, array.tiers) as usize;
+    // Per-tier K ranges: [start, len] — tiers beyond the split idle entirely.
+    let chunks = dos_k_split(g.k, array.tiers);
+    let mut k_ranges: Vec<(usize, usize)> = Vec::with_capacity(tiers);
+    let mut kb = 0usize;
+    for t in 0..tiers {
+        let len = chunks.get(t).copied().unwrap_or(0) as usize;
+        k_ranges.push((kb, len));
+        kb += len;
+    }
+
+    let mut output = Matrix::<i64>::zeros(a.rows, b.cols);
+    let mut trace = ActivityTrace::default();
+
+    let mut i0 = 0usize;
+    while i0 < a.rows {
+        let rm = r_dim.min(a.rows - i0);
+        let mut j0 = 0usize;
+        while j0 < b.cols {
+            let cn = c_dim.min(b.cols - j0);
+            simulate_fold(
+                a, b, &mut output, &mut trace,
+                i0, j0, rm, cn, r_dim, c_dim, tiers, k_max, &k_ranges,
+            );
+            j0 += c_dim;
+        }
+        i0 += r_dim;
+    }
+    SimResult { output, trace }
+}
+
+/// One serialization fold: stream, reduce, drain.
+#[allow(clippy::too_many_arguments)]
+fn simulate_fold(
+    a: &Matrix<i64>,
+    b: &Matrix<i64>,
+    output: &mut Matrix<i64>,
+    trace: &mut ActivityTrace,
+    i0: usize,
+    j0: usize,
+    rm: usize,
+    cn: usize,
+    r_dim: usize,
+    c_dim: usize,
+    tiers: usize,
+    k_max: usize,
+    k_ranges: &[(usize, usize)],
+) {
+    // Per-tier register files.
+    let mut a_reg = vec![vec![Reg::default(); r_dim * c_dim]; tiers];
+    let mut b_reg = vec![vec![Reg::default(); r_dim * c_dim]; tiers];
+    let mut acc = vec![vec![0i64; r_dim * c_dim]; tiers];
+    let idx = |r: usize, c: usize| r * c_dim + c;
+
+    // ---- Streaming phase: fill (R+C−2) + compute (⌈K/ℓ⌉) cycles. ----
+    let stream_cycles = r_dim + c_dim - 2 + k_max;
+    for cyc in 0..stream_cycles {
+        for (t, &(kb, klen)) in k_ranges.iter().enumerate() {
+            // Shift A rightward: process columns high→low so each register
+            // reads its left neighbor's *previous* value.
+            for r in 0..r_dim {
+                for c in (0..c_dim).rev() {
+                    let incoming = if c == 0 {
+                        // Edge input: element k = cyc − r of this tier's chunk.
+                        let k = cyc as isize - r as isize;
+                        if r < rm && k >= 0 && (k as usize) < klen {
+                            Reg { v: a.get(i0 + r, kb + k as usize), valid: true }
+                        } else {
+                            Reg::default()
+                        }
+                    } else {
+                        a_reg[t][idx(r, c - 1)]
+                    };
+                    // Gate propagation past the active tile (control gating —
+                    // elements are dead once past column cn−1).
+                    let gated = if c >= cn { Reg::default() } else { incoming };
+                    if gated.valid {
+                        trace.h_transfers += 1;
+                    }
+                    a_reg[t][idx(r, c)] = gated;
+                }
+            }
+            // Shift B downward: rows high→low.
+            for c in 0..c_dim {
+                for r in (0..r_dim).rev() {
+                    let incoming = if r == 0 {
+                        let k = cyc as isize - c as isize;
+                        if c < cn && k >= 0 && (k as usize) < klen {
+                            Reg { v: b.get(kb + k as usize, j0 + c), valid: true }
+                        } else {
+                            Reg::default()
+                        }
+                    } else {
+                        b_reg[t][idx(r - 1, c)]
+                    };
+                    let gated = if r >= rm { Reg::default() } else { incoming };
+                    if gated.valid {
+                        trace.v_transfers += 1;
+                    }
+                    b_reg[t][idx(r, c)] = gated;
+                }
+            }
+            // MAC: consume freshly arrived operands.
+            for r in 0..rm {
+                for c in 0..cn {
+                    let (ar, br) = (a_reg[t][idx(r, c)], b_reg[t][idx(r, c)]);
+                    if ar.valid && br.valid {
+                        acc[t][idx(r, c)] += ar.v * br.v;
+                        trace.mac_ops += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- Cross-tier reduction: ℓ−1 cycles, partial sums hop down piles. ----
+    for t in (0..tiers.saturating_sub(1)).rev() {
+        // One cycle: tier t+1 sends its accumulated partials down to tier t.
+        for r in 0..rm {
+            for c in 0..cn {
+                acc[t][idx(r, c)] += acc[t + 1][idx(r, c)];
+                trace.cross_tier_transfers += 1;
+            }
+        }
+    }
+
+    // ---- Drain: R cycles; outputs shift down the bottom tier's columns. ----
+    // Column buffer models the vertical shift chain of the bottom tier.
+    for c in 0..cn {
+        let mut chain: Vec<Option<(usize, i64)>> = (0..r_dim)
+            .map(|r| {
+                if r < rm {
+                    Some((r, acc[0][idx(r, c)]))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        for _cycle in 0..r_dim {
+            // Bottom element exits the array.
+            if let Some((r, v)) = chain[r_dim - 1].take() {
+                output.set(i0 + r, j0 + c, v);
+                trace.drain_transfers += 1;
+            }
+            // Everything else shifts down one row.
+            for r in (1..r_dim).rev() {
+                if chain[r].is_none() {
+                    if let Some(item) = chain[r - 1].take() {
+                        chain[r] = Some(item);
+                        trace.drain_transfers += 1;
+                    }
+                } else if chain[r - 1].is_some() {
+                    // Lockstep shift: occupied slots all move together; the
+                    // take() order above guarantees the slot below is free.
+                    let item = chain[r - 1].take().unwrap();
+                    debug_assert!(chain[r].is_none());
+                    chain[r] = Some(item);
+                    trace.drain_transfers += 1;
+                }
+            }
+        }
+    }
+
+    // ---- Cycle accounting (must equal Eq. 2 per fold). ----
+    trace.cycles += (stream_cycles + (tiers - 1) + r_dim) as u64;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytical::{cycles_2d, cycles_3d};
+    use crate::sim::matrix::matmul_i64;
+    use crate::util::rng::Rng;
+
+    fn rand_matrix(rng: &mut Rng, rows: usize, cols: usize) -> Matrix<i64> {
+        Matrix::from_fn(rows, cols, |_, _| rng.gen_range(255) as i64 - 127)
+    }
+
+    #[test]
+    fn functional_2d_exact() {
+        let mut rng = Rng::new(1);
+        let a = rand_matrix(&mut rng, 10, 17);
+        let b = rand_matrix(&mut rng, 17, 13);
+        let r = simulate_os_2d(&a, &b, &Array2d::new(4, 5));
+        assert_eq!(r.output, matmul_i64(&a, &b));
+    }
+
+    #[test]
+    fn functional_3d_exact() {
+        let mut rng = Rng::new(2);
+        let a = rand_matrix(&mut rng, 12, 30);
+        let b = rand_matrix(&mut rng, 30, 9);
+        let r = simulate_dos(&a, &b, &Array3d::new(5, 4, 3));
+        assert_eq!(r.output, matmul_i64(&a, &b));
+    }
+
+    #[test]
+    fn cycles_match_eq1() {
+        let mut rng = Rng::new(3);
+        let a = rand_matrix(&mut rng, 11, 23);
+        let b = rand_matrix(&mut rng, 23, 7);
+        let arr = Array2d::new(4, 3);
+        let g = Gemm::new(11, 7, 23);
+        let r = simulate_os_2d(&a, &b, &arr);
+        assert_eq!(r.trace.cycles, cycles_2d(&g, &arr));
+    }
+
+    #[test]
+    fn cycles_match_eq2() {
+        let mut rng = Rng::new(4);
+        let a = rand_matrix(&mut rng, 9, 40);
+        let b = rand_matrix(&mut rng, 40, 14);
+        let arr = Array3d::new(3, 5, 4);
+        let g = Gemm::new(9, 14, 40);
+        let r = simulate_dos(&a, &b, &arr);
+        assert_eq!(r.trace.cycles, cycles_3d(&g, &arr));
+    }
+
+    #[test]
+    fn more_tiers_than_k_still_correct() {
+        let mut rng = Rng::new(5);
+        let a = rand_matrix(&mut rng, 4, 3);
+        let b = rand_matrix(&mut rng, 3, 4);
+        let r = simulate_dos(&a, &b, &Array3d::new(2, 2, 8));
+        assert_eq!(r.output, matmul_i64(&a, &b));
+    }
+
+    #[test]
+    fn single_mac_array() {
+        let mut rng = Rng::new(6);
+        let a = rand_matrix(&mut rng, 3, 5);
+        let b = rand_matrix(&mut rng, 5, 2);
+        let r = simulate_os_2d(&a, &b, &Array2d::new(1, 1));
+        assert_eq!(r.output, matmul_i64(&a, &b));
+        // τ = (2+1+5−2)·3·2 = 36
+        assert_eq!(r.trace.cycles, 36);
+    }
+
+    #[test]
+    fn mac_ops_equal_mnk() {
+        // Every product is computed exactly once, regardless of array shape.
+        let mut rng = Rng::new(7);
+        let a = rand_matrix(&mut rng, 6, 11);
+        let b = rand_matrix(&mut rng, 11, 8);
+        for arr in [Array3d::new(2, 3, 2), Array3d::new(6, 8, 1), Array3d::new(3, 3, 5)] {
+            let r = simulate_dos(&a, &b, &arr);
+            assert_eq!(r.trace.mac_ops, 6 * 11 * 8, "array {arr:?}");
+        }
+    }
+
+    #[test]
+    fn vertical_links_unused_in_2d() {
+        let mut rng = Rng::new(8);
+        let a = rand_matrix(&mut rng, 5, 9);
+        let b = rand_matrix(&mut rng, 9, 5);
+        let r = simulate_os_2d(&a, &b, &Array2d::new(3, 3));
+        assert_eq!(r.trace.cross_tier_transfers, 0);
+    }
+
+    #[test]
+    fn dos_uses_vertical_links() {
+        let mut rng = Rng::new(9);
+        let a = rand_matrix(&mut rng, 4, 12);
+        let b = rand_matrix(&mut rng, 12, 4);
+        let r = simulate_dos(&a, &b, &Array3d::new(2, 2, 3));
+        // (ℓ−1)·rm·cn per fold, 2·2=4 folds of 2x2 tiles: 2·4·4 = 32.
+        assert_eq!(r.trace.cross_tier_transfers, 32);
+    }
+}

@@ -1,0 +1,180 @@
+//! Closed-form activity model — the full-scale engine.
+//!
+//! Computes exactly the same [`ActivityTrace`] the register-level engine
+//! produces, in O(folds · ℓ) instead of O(cycles · R · C · ℓ), by counting
+//! per-fold transfers analytically:
+//!
+//! * A-stream: each of the `rm·Ks` elements of a tier's A tile hops through
+//!   `cn` links (edge input + cn−1 neighbor hops) → `rm·cn·Ks`.
+//! * B-stream: symmetric → `rm·cn·Ks`.
+//! * MACs: every product computed once → `rm·cn·Ks`.
+//! * Cross-tier reduction: `(ℓ−1)·rm·cn` partial-sum hops per fold.
+//! * Drain: output at row r makes `R−r` hops to exit →
+//!   `cn·(rm·R − rm(rm−1)/2)`.
+//!
+//! Equality with the exact engine is enforced by a property test
+//! (`rust/tests/properties.rs`).
+
+use super::trace::ActivityTrace;
+use crate::analytical::Array3d;
+use crate::dataflow::{dos_k_per_tier, dos_k_split};
+use crate::workloads::Gemm;
+
+/// Activity of a full GEMM on an ℓ-tier dOS array (ℓ=1 gives 2D OS).
+pub fn fast_activity(g: &Gemm, array: &Array3d) -> ActivityTrace {
+    let (r_dim, c_dim, tiers) = (array.rows, array.cols, array.tiers);
+    let k_max = dos_k_per_tier(g.k, tiers);
+    let chunks = dos_k_split(g.k, tiers);
+    let k_total: u64 = chunks.iter().sum();
+    debug_assert_eq!(k_total, g.k);
+
+    let mut t = ActivityTrace::default();
+    let per_fold_cycles = (r_dim + c_dim - 2 + k_max) + (tiers - 1) + r_dim;
+
+    let mut i0 = 0u64;
+    while i0 < g.m {
+        let rm = r_dim.min(g.m - i0);
+        let mut j0 = 0u64;
+        while j0 < g.n {
+            let cn = c_dim.min(g.n - j0);
+            t.cycles += per_fold_cycles;
+            // Streaming + MACs, per tier chunk.
+            t.mac_ops += rm * cn * k_total;
+            t.h_transfers += rm * cn * k_total;
+            t.v_transfers += rm * cn * k_total;
+            // Reduction hops down each pile (all ℓ−1 boundaries clock).
+            t.cross_tier_transfers += (tiers - 1) * rm * cn;
+            // Drain: Σ_{r=0}^{rm−1} (R − r) per column.
+            t.drain_transfers += cn * (rm * r_dim - rm * (rm - 1) / 2);
+            j0 += c_dim;
+        }
+        i0 += r_dim;
+    }
+    t
+}
+
+/// Per-MAC operation counts (tier-major, row-major within a tier) — the
+/// power-density map consumed by the thermal model. Entry `[t][r*C+c]` is the
+/// number of MAC operations unit (t, r, c) performs over the whole GEMM.
+pub fn per_mac_ops_map(g: &Gemm, array: &Array3d) -> Vec<Vec<u64>> {
+    let (r_dim, c_dim, tiers) = (
+        array.rows as usize,
+        array.cols as usize,
+        array.tiers as usize,
+    );
+    let chunks = dos_k_split(g.k, array.tiers);
+    let mut map = vec![vec![0u64; r_dim * c_dim]; tiers];
+
+    // Fold tile occupancy: how many folds have row-extent > r / col-extent > c.
+    // Row r of the array is active in a fold iff r < rm for that fold.
+    let mut row_active = vec![0u64; r_dim];
+    let mut i0 = 0u64;
+    while i0 < g.m {
+        let rm = (r_dim as u64).min(g.m - i0) as usize;
+        for r in row_active.iter_mut().take(rm) {
+            *r += 1;
+        }
+        i0 += r_dim as u64;
+    }
+    let mut col_active = vec![0u64; c_dim];
+    let mut j0 = 0u64;
+    while j0 < g.n {
+        let cn = (c_dim as u64).min(g.n - j0) as usize;
+        for c in col_active.iter_mut().take(cn) {
+            *c += 1;
+        }
+        j0 += c_dim as u64;
+    }
+
+    for (t, tier_map) in map.iter_mut().enumerate() {
+        let ks = chunks.get(t).copied().unwrap_or(0);
+        for r in 0..r_dim {
+            for c in 0..c_dim {
+                tier_map[r * c_dim + c] = row_active[r] * col_active[c] * ks;
+            }
+        }
+    }
+    map
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytical::{cycles_3d, Array2d};
+    use crate::sim::engine::{simulate_dos, simulate_os_2d};
+    use crate::sim::matrix::Matrix;
+    use crate::util::rng::Rng;
+
+    fn rand_matrix(rng: &mut Rng, rows: usize, cols: usize) -> Matrix<i64> {
+        Matrix::from_fn(rows, cols, |_, _| rng.gen_range(17) as i64 - 8)
+    }
+
+    #[test]
+    fn matches_exact_engine_2d() {
+        let mut rng = Rng::new(10);
+        let (m, n, k) = (13, 9, 21);
+        let a = rand_matrix(&mut rng, m, k);
+        let b = rand_matrix(&mut rng, k, n);
+        let arr2 = Array2d::new(5, 4);
+        let g = Gemm::new(m as u64, n as u64, k as u64);
+        let exact = simulate_os_2d(&a, &b, &arr2);
+        let fast = fast_activity(&g, &Array3d::new(5, 4, 1));
+        assert_eq!(exact.trace, fast);
+    }
+
+    #[test]
+    fn matches_exact_engine_3d() {
+        let mut rng = Rng::new(11);
+        let (m, n, k) = (7, 11, 29);
+        let a = rand_matrix(&mut rng, m, k);
+        let b = rand_matrix(&mut rng, k, n);
+        let arr = Array3d::new(3, 4, 4);
+        let g = Gemm::new(m as u64, n as u64, k as u64);
+        let exact = simulate_dos(&a, &b, &arr);
+        let fast = fast_activity(&g, &arr);
+        assert_eq!(exact.trace, fast);
+    }
+
+    #[test]
+    fn cycles_match_analytical() {
+        let g = Gemm::new(128, 128, 300);
+        let arr = Array3d::new(74, 74, 3);
+        assert_eq!(fast_activity(&g, &arr).cycles, cycles_3d(&g, &arr));
+    }
+
+    #[test]
+    fn mac_ops_are_mnk() {
+        let g = Gemm::new(64, 147, 255);
+        for arr in [Array3d::new(64, 147, 1), Array3d::new(32, 32, 4)] {
+            assert_eq!(fast_activity(&g, &arr).mac_ops, g.macs(), "{arr:?}");
+        }
+    }
+
+    #[test]
+    fn ops_map_sums_to_mac_ops() {
+        let g = Gemm::new(50, 33, 77);
+        let arr = Array3d::new(16, 12, 3);
+        let map = per_mac_ops_map(&g, &arr);
+        let total: u64 = map.iter().flat_map(|t| t.iter()).sum();
+        assert_eq!(total, fast_activity(&g, &arr).mac_ops);
+    }
+
+    #[test]
+    fn ops_map_edge_macs_cooler() {
+        // MACs beyond the last fold's tile extent do less work.
+        let g = Gemm::new(100, 100, 64); // 100 = 64+36: second fold partial
+        let arr = Array3d::new(64, 64, 2);
+        let map = per_mac_ops_map(&g, &arr);
+        // Row 0 active in 2 folds; row 63 active in only 1.
+        assert!(map[0][0] > map[0][63 * 64]);
+    }
+
+    #[test]
+    fn scales_to_full_size_quickly() {
+        // 2^18 MACs, the paper's largest config — must be near-instant.
+        let g = Gemm::new(64, 147, 12100);
+        let arr = Array3d::new(64, 147, 12);
+        let t = fast_activity(&g, &arr);
+        assert_eq!(t.mac_ops, g.macs());
+    }
+}

@@ -1,0 +1,124 @@
+//! Dense row-major matrix, minimal surface for the simulator and runtime
+//! comparisons.
+
+/// Row-major dense matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix<T> {
+    pub rows: usize,
+    pub cols: usize,
+    data: Vec<T>,
+}
+
+impl<T: Copy + Default> Matrix<T> {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![T::default(); rows * cols] }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> T) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m.set(i, j, f(i, j));
+            }
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<T>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> T {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: T) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+}
+
+/// Reference integer GEMM (i64 accumulate) — the oracle the exact simulator
+/// is validated against.
+pub fn matmul_i64(a: &Matrix<i64>, b: &Matrix<i64>) -> Matrix<i64> {
+    assert_eq!(a.cols, b.rows, "inner dims must match");
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for k in 0..a.cols {
+            let av = a.get(i, k);
+            if av == 0 {
+                continue;
+            }
+            for j in 0..b.cols {
+                c.set(i, j, c.get(i, j) + av * b.get(k, j));
+            }
+        }
+    }
+    c
+}
+
+/// Reference f32 GEMM for runtime (PJRT) comparisons.
+pub fn matmul_f32(a: &Matrix<f32>, b: &Matrix<f32>) -> Matrix<f32> {
+    assert_eq!(a.cols, b.rows, "inner dims must match");
+    let mut c = Matrix::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for k in 0..a.cols {
+            let av = a.get(i, k);
+            for j in 0..b.cols {
+                c.set(i, j, c.get(i, j) + av * b.get(k, j));
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_matmul() {
+        let a = Matrix::from_fn(3, 3, |i, j| if i == j { 1i64 } else { 0 });
+        let b = Matrix::from_fn(3, 2, |i, j| (i * 2 + j) as i64);
+        assert_eq!(matmul_i64(&a, &b), b);
+    }
+
+    #[test]
+    fn known_product() {
+        let a = Matrix::from_vec(2, 2, vec![1i64, 2, 3, 4]);
+        let b = Matrix::from_vec(2, 2, vec![5i64, 6, 7, 8]);
+        let c = matmul_i64(&a, &b);
+        assert_eq!(c.data(), &[19, 22, 43, 50]);
+    }
+
+    #[test]
+    fn f32_matches_i64_on_integers() {
+        let ai = Matrix::from_fn(4, 5, |i, j| (i + 2 * j) as i64 % 7 - 3);
+        let bi = Matrix::from_fn(5, 3, |i, j| (3 * i + j) as i64 % 5 - 2);
+        let af = Matrix::from_fn(4, 5, |i, j| ai.get(i, j) as f32);
+        let bf = Matrix::from_fn(5, 3, |i, j| bi.get(i, j) as f32);
+        let ci = matmul_i64(&ai, &bi);
+        let cf = matmul_f32(&af, &bf);
+        for i in 0..4 {
+            for j in 0..3 {
+                assert_eq!(ci.get(i, j) as f32, cf.get(i, j));
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dims")]
+    fn dim_mismatch_panics() {
+        let a = Matrix::<i64>::zeros(2, 3);
+        let b = Matrix::<i64>::zeros(2, 3);
+        matmul_i64(&a, &b);
+    }
+}

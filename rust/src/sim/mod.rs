@@ -1,0 +1,24 @@
+//! Cycle-accurate systolic-array simulator.
+//!
+//! Two engines share one [`ActivityTrace`] output format:
+//!
+//! * [`engine`] — an *exact* register-level simulation of the OS / dOS
+//!   dataflows: every A/B element physically shifts through neighbor links
+//!   cycle by cycle, partial sums reduce across tiers, outputs drain through
+//!   the bottom tier. Produces the functional GEMM result (validated against
+//!   a direct matmul) plus per-link-class transfer counts. Cost is
+//!   O(cycles · R · C · ℓ) — meant for small arrays and for validating:
+//!   the analytical model (cycle counts) and the fast engine (activity).
+//! * [`fast`] — closed-form per-fold activity counting with identical
+//!   semantics, O(folds · ℓ); used at full scale (2^18 MACs) to feed the
+//!   power and thermal models.
+
+mod engine;
+mod fast;
+mod matrix;
+mod trace;
+
+pub use engine::{simulate_dos, simulate_os_2d, SimResult};
+pub use fast::{fast_activity, per_mac_ops_map};
+pub use matrix::{matmul_f32, matmul_i64, Matrix};
+pub use trace::ActivityTrace;

@@ -1,0 +1,69 @@
+//! Per-link-class activity accounting shared by both simulator engines.
+//!
+//! The power model (§IV-B of the paper) hinges on the *different* switching
+//! activity of horizontal wires (used every streaming cycle) and vertical
+//! TSV/MIV links (used only for the ℓ−1 partial-sum reduction hops) — these
+//! counters are exactly that decomposition.
+
+/// Transfer / operation counts accumulated over a whole GEMM execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ActivityTrace {
+    /// Total cycles (must equal the analytical Eq. 1/2 value).
+    pub cycles: u64,
+    /// Multiply-accumulate operations executed.
+    pub mac_ops: u64,
+    /// Valid element transfers over horizontal (A-stream, intra-tier) wires,
+    /// including the array-edge input links.
+    pub h_transfers: u64,
+    /// Valid element transfers over vertical-in-plane (B-stream) wires.
+    pub v_transfers: u64,
+    /// Partial-sum hops over cross-tier links (TSVs / MIVs).
+    pub cross_tier_transfers: u64,
+    /// Output-drain hops (intra-tier, toward the bottom edge).
+    pub drain_transfers: u64,
+}
+
+impl ActivityTrace {
+    /// Merge counts from another trace (e.g. summing folds or layers).
+    /// Cycles are *added* — traces merged this way are sequential phases.
+    pub fn add(&mut self, other: &ActivityTrace) {
+        self.cycles += other.cycles;
+        self.mac_ops += other.mac_ops;
+        self.h_transfers += other.h_transfers;
+        self.v_transfers += other.v_transfers;
+        self.cross_tier_transfers += other.cross_tier_transfers;
+        self.drain_transfers += other.drain_transfers;
+    }
+
+    /// All intra-tier wire transfers (horizontal + vertical-in-plane + drain).
+    pub fn wire_transfers(&self) -> u64 {
+        self.h_transfers + self.v_transfers + self.drain_transfers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_accumulates() {
+        let mut a = ActivityTrace { cycles: 10, mac_ops: 5, ..Default::default() };
+        let b = ActivityTrace { cycles: 3, mac_ops: 2, h_transfers: 7, ..Default::default() };
+        a.add(&b);
+        assert_eq!(a.cycles, 13);
+        assert_eq!(a.mac_ops, 7);
+        assert_eq!(a.h_transfers, 7);
+    }
+
+    #[test]
+    fn wire_transfers_sums_classes() {
+        let t = ActivityTrace {
+            h_transfers: 1,
+            v_transfers: 2,
+            drain_transfers: 4,
+            cross_tier_transfers: 100,
+            ..Default::default()
+        };
+        assert_eq!(t.wire_transfers(), 7);
+    }
+}

@@ -1,0 +1,250 @@
+//! Thermal RC-grid assembly.
+
+use super::stack::ThermalParams;
+use crate::power::VerticalTech;
+
+/// A steady-state thermal network: node conductances + power injection.
+///
+/// Node layout: `spreader[0..G²]`, then per die `d`: `die_d[0..G²]`, then one
+/// lumped sink node last. Dies are ordered bottom (near sink) → top.
+#[derive(Debug, Clone)]
+pub struct Network {
+    /// Number of nodes.
+    pub n: usize,
+    /// Symmetric adjacency: `neighbors[i] = [(j, g_ij), ...]`.
+    pub neighbors: Vec<Vec<(usize, f64)>>,
+    /// Conductance from node i to ambient (nonzero only at the sink).
+    pub g_amb: Vec<f64>,
+    /// Power injected at node i, Watts.
+    pub p: Vec<f64>,
+    /// Ambient temperature, °C.
+    pub t_amb: f64,
+    /// Grid side G.
+    pub grid: usize,
+    /// Number of dies.
+    pub dies: usize,
+}
+
+impl Network {
+    /// Index of a spreader cell.
+    pub fn spreader(&self, x: usize, y: usize) -> usize {
+        x * self.grid + y
+    }
+
+    /// Index of a die cell (die 0 = bottom, nearest the sink).
+    pub fn die(&self, d: usize, x: usize, y: usize) -> usize {
+        (1 + d) * self.grid * self.grid + x * self.grid + y
+    }
+
+    /// Index of the lumped sink node.
+    pub fn sink(&self) -> usize {
+        self.n - 1
+    }
+
+    /// Temperatures of all cells of one die, given a solution vector.
+    pub fn die_temps<'a>(&self, t: &'a [f64], d: usize) -> &'a [f64] {
+        let g2 = self.grid * self.grid;
+        let start = (1 + d) * g2;
+        &t[start..start + g2]
+    }
+}
+
+/// Coarsen a per-MAC power map (row-major R×C) onto a G×G grid by summing
+/// cell powers. Preserves total power exactly.
+pub fn coarsen_power_map(map: &[f64], rows: usize, cols: usize, grid: usize) -> Vec<f64> {
+    assert_eq!(map.len(), rows * cols);
+    let mut out = vec![0.0; grid * grid];
+    for r in 0..rows {
+        let gx = r * grid / rows;
+        for c in 0..cols {
+            let gy = c * grid / cols;
+            out[gx * grid + gy] += map[r * cols + c];
+        }
+    }
+    out
+}
+
+/// Build the thermal network for a stack of `power_grids.len()` dies
+/// (bottom first), each dissipating the given G×G coarsened power map.
+/// `die_area_m2` is the per-die footprint (includes TSV/KOZ overhead for
+/// TSV stacks — this is where the "TSVs spread heat" area effect enters).
+pub fn build_network(
+    params: &ThermalParams,
+    die_area_m2: f64,
+    power_grids: &[Vec<f64>],
+    vtech: VerticalTech,
+) -> Network {
+    let g = params.grid;
+    let g2 = g * g;
+    let dies = power_grids.len();
+    assert!(dies >= 1);
+    for pg in power_grids {
+        assert_eq!(pg.len(), g2, "power grid must be G×G");
+    }
+
+    let n = (1 + dies) * g2 + 1;
+    let mut net = Network {
+        n,
+        neighbors: vec![Vec::new(); n],
+        g_amb: vec![0.0; n],
+        p: vec![0.0; n],
+        t_amb: params.ambient_c,
+        grid: g,
+        dies,
+    };
+
+    let cell_area = die_area_m2 / g2 as f64;
+    let cell_w = die_area_m2.sqrt() / g as f64;
+
+    let mut connect = |a: usize, b: usize, cond: f64| {
+        net.neighbors[a].push((b, cond));
+        net.neighbors[b].push((a, cond));
+    };
+
+    // Lateral conductance in a sheet of conductivity k and thickness t
+    // between adjacent square cells: g = k · t (width cancels).
+    let g_lat_spreader = params.k_spreader * params.t_spreader;
+    let g_lat_die = params.k_si * params.t_die;
+
+    // Lateral links.
+    for x in 0..g {
+        for y in 0..g {
+            if x + 1 < g {
+                connect(x * g + y, (x + 1) * g + y, g_lat_spreader);
+            }
+            if y + 1 < g {
+                connect(x * g + y, x * g + y + 1, g_lat_spreader);
+            }
+        }
+    }
+    for d in 0..dies {
+        let base = (1 + d) * g2;
+        for x in 0..g {
+            for y in 0..g {
+                if x + 1 < g {
+                    connect(base + x * g + y, base + (x + 1) * g + y, g_lat_die);
+                }
+                if y + 1 < g {
+                    connect(base + x * g + y, base + x * g + y + 1, g_lat_die);
+                }
+            }
+        }
+    }
+
+    // Vertical: spreader ↔ die0 through TIM (plus half-die conduction).
+    let g_tim = 1.0
+        / (params.t_tim / (params.k_tim * cell_area)
+            + 0.5 * params.t_die / (params.k_si * cell_area));
+    for i in 0..g2 {
+        connect(i, g2 + i, g_tim);
+    }
+
+    // Die ↔ die through the bond interface (TSV / MIV / F2F).
+    if dies > 1 {
+        let (k_bond, t_bond) = super::stack::bond_interface(vtech);
+        let g_bond = 1.0
+            / (t_bond / (k_bond * cell_area) + params.t_die / (params.k_si * cell_area));
+        for d in 0..dies - 1 {
+            for i in 0..g2 {
+                connect((1 + d) * g2 + i, (2 + d) * g2 + i, g_bond);
+            }
+        }
+    }
+
+    // Spreader ↔ lumped sink: per-area spreading resistance distributed
+    // over cells (small dies concentrate heat flux into the sink base).
+    let r_spread = params.r_spread_unit / die_area_m2; // K/W total
+    let g_sink_cell = (1.0 / r_spread) / g2 as f64;
+    let sink = n - 1;
+    for i in 0..g2 {
+        connect(i, sink, g_sink_cell);
+    }
+    // Sink to ambient: one physical heatsink for every configuration, so a
+    // fixed convective resistance (HotSpot-style package assumption).
+    net.g_amb[sink] = 1.0 / params.r_conv_fixed;
+
+    // Power injection.
+    for (d, pg) in power_grids.iter().enumerate() {
+        let base = (1 + d) * g2;
+        for i in 0..g2 {
+            net.p[base + i] = pg[i];
+        }
+    }
+
+    // Suppress unused warning for cell_w (kept for future anisotropy).
+    let _ = cell_w;
+    net
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::thermal::solver::solve_steady_state;
+
+    #[test]
+    fn coarsen_preserves_total() {
+        let map: Vec<f64> = (0..64 * 96).map(|i| (i % 7) as f64 * 0.01).collect();
+        let total: f64 = map.iter().sum();
+        let coarse = coarsen_power_map(&map, 64, 96, 8);
+        let ctotal: f64 = coarse.iter().sum();
+        assert!((total - ctotal).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_die_uniform_power_heats_up() {
+        let params = ThermalParams::default();
+        let g2 = params.grid * params.grid;
+        let power = vec![vec![5.0 / g2 as f64; g2]]; // 5 W total
+        let net = build_network(&params, 25e-6, &power, VerticalTech::Tsv);
+        let t = solve_steady_state(&net);
+        // Every die node must be above ambient.
+        for &temp in net.die_temps(&t, 0) {
+            assert!(temp > params.ambient_c);
+        }
+    }
+
+    #[test]
+    fn energy_balance() {
+        // Total heat out through the sink = total power in:
+        // g_amb·(T_sink − T_amb) = ΣP.
+        let params = ThermalParams::default();
+        let g2 = params.grid * params.grid;
+        let power = vec![vec![3.0 / g2 as f64; g2]];
+        let net = build_network(&params, 25e-6, &power, VerticalTech::Miv);
+        let t = solve_steady_state(&net);
+        let out = net.g_amb[net.sink()] * (t[net.sink()] - net.t_amb);
+        assert!((out - 3.0).abs() < 1e-6, "heat out {out}");
+    }
+
+    #[test]
+    fn hot_spot_is_hotter_than_edges() {
+        let params = ThermalParams::default();
+        let g = params.grid;
+        let mut pg = vec![0.0; g * g];
+        pg[(g / 2) * g + g / 2] = 4.0; // concentrated source
+        let net = build_network(&params, 25e-6, &[pg], VerticalTech::Tsv);
+        let t = solve_steady_state(&net);
+        let d = net.die_temps(&t, 0);
+        assert!(d[(g / 2) * g + g / 2] > d[0]);
+    }
+
+    #[test]
+    fn top_die_hotter_than_bottom() {
+        // Farther from the sink ⇒ hotter, for equal per-die power.
+        let params = ThermalParams::default();
+        let g2 = params.grid * params.grid;
+        let per_die = vec![2.0 / g2 as f64; g2];
+        let net = build_network(
+            &params,
+            10e-6,
+            &[per_die.clone(), per_die.clone(), per_die],
+            VerticalTech::Tsv,
+        );
+        let t = solve_steady_state(&net);
+        let mean = |d: usize| {
+            let v = net.die_temps(&t, d);
+            v.iter().sum::<f64>() / v.len() as f64
+        };
+        assert!(mean(2) > mean(0), "top {} bottom {}", mean(2), mean(0));
+    }
+}

@@ -1,0 +1,30 @@
+//! Thermal model (paper §IV-C, Fig. 8) — a HotSpot-style compact-RC grid.
+//!
+//! The paper runs HotSpot 6.0 on per-layer power maps; this module
+//! implements the same method class: each die is discretized into a G×G
+//! grid of thermal nodes, laterally coupled through silicon, vertically
+//! coupled through bond/TIM interfaces, with a copper spreader and a lumped
+//! convective heat sink at the *bottom* of the stack (the paper's "bottom"
+//! tier is the one near the sink). Steady-state temperatures solve the
+//! conductance Laplacian `G·T = P` via preconditioned conjugate gradients.
+//!
+//! TSV vs MIV differences enter in two physically-grounded ways:
+//! * the TSV bond interface (thinned silicon + copper vias) conducts better
+//!   than the monolithic ILD (dielectric with sparse nano-vias);
+//! * TSV arrays + keep-out zones enlarge the die, lowering power density.
+//!
+//! Both push TSV stacks cooler than MIV stacks — the paper's
+//! counter-intuitive Fig. 8 finding.
+
+mod grid;
+mod solver;
+mod stack;
+mod transient;
+
+pub use grid::{build_network, coarsen_power_map, Network};
+pub use solver::solve_steady_state;
+pub use transient::{node_capacitances, solve_transient, TransientResult};
+pub use stack::{
+    bond_interface, thermal_footprint_m2, thermal_study, StackSummary, ThermalParams,
+    ThermalStudy, TierTemps,
+};

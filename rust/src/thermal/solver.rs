@@ -1,0 +1,126 @@
+//! Steady-state solve of the thermal conductance system.
+//!
+//! `(L + diag(g_amb)) · T' = P`, where `L` is the graph Laplacian of the
+//! conductance network and `T' = T − T_amb`. The matrix is symmetric
+//! positive definite (connected network + at least one ambient tie), so
+//! Jacobi-preconditioned conjugate gradients converges quickly; node counts
+//! are a few thousand (G² per layer).
+
+use super::grid::Network;
+
+/// Solve for absolute temperatures (°C). Panics if CG fails to converge,
+/// which for an SPD system of this size indicates a malformed network.
+pub fn solve_steady_state(net: &Network) -> Vec<f64> {
+    let n = net.n;
+    // Diagonal: sum of incident conductances + ambient tie.
+    let mut diag = vec![0.0f64; n];
+    for i in 0..n {
+        diag[i] = net.g_amb[i] + net.neighbors[i].iter().map(|&(_, g)| g).sum::<f64>();
+    }
+
+    // Matrix-vector product y = A·x with A = L + diag(g_amb).
+    let spmv = |x: &[f64], y: &mut [f64]| {
+        for i in 0..n {
+            let mut acc = diag[i] * x[i];
+            for &(j, g) in &net.neighbors[i] {
+                acc -= g * x[j];
+            }
+            y[i] = acc;
+        }
+    };
+
+    let b = &net.p;
+    let b_norm = b.iter().map(|v| v * v).sum::<f64>().sqrt();
+    if b_norm == 0.0 {
+        return vec![net.t_amb; n];
+    }
+
+    let mut x = vec![0.0f64; n];
+    let mut r = b.clone(); // r = b − A·0
+    let mut z: Vec<f64> = r.iter().zip(&diag).map(|(ri, di)| ri / di).collect();
+    let mut p = z.clone();
+    let mut rz: f64 = r.iter().zip(&z).map(|(a, b)| a * b).sum();
+    let mut ap = vec![0.0f64; n];
+
+    let tol = 1e-10 * b_norm;
+    let max_iter = 20 * n;
+    for _ in 0..max_iter {
+        spmv(&p, &mut ap);
+        let pap: f64 = p.iter().zip(&ap).map(|(a, b)| a * b).sum();
+        let alpha = rz / pap;
+        for i in 0..n {
+            x[i] += alpha * p[i];
+            r[i] -= alpha * ap[i];
+        }
+        let r_norm = r.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if r_norm < tol {
+            return x.iter().map(|v| v + net.t_amb).collect();
+        }
+        for i in 0..n {
+            z[i] = r[i] / diag[i];
+        }
+        let rz_new: f64 = r.iter().zip(&z).map(|(a, b)| a * b).sum();
+        let beta = rz_new / rz;
+        rz = rz_new;
+        for i in 0..n {
+            p[i] = z[i] + beta * p[i];
+        }
+    }
+    panic!("CG failed to converge after {max_iter} iterations");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-built 2-node network: node0 —(g=2)— node1, node0 —(1)— ambient.
+    /// P = [0, 3]. Then T1' solves: node1: 2(T1−T0)=3; node0: 2(T0−T1)+T0=0
+    /// ⇒ T0 = 3, T1 = 4.5.
+    #[test]
+    fn two_node_analytic() {
+        let net = Network {
+            n: 2,
+            neighbors: vec![vec![(1, 2.0)], vec![(0, 2.0)]],
+            g_amb: vec![1.0, 0.0],
+            p: vec![0.0, 3.0],
+            t_amb: 45.0,
+            grid: 1,
+            dies: 1,
+        };
+        let t = solve_steady_state(&net);
+        assert!((t[0] - 48.0).abs() < 1e-6, "t0 {}", t[0]);
+        assert!((t[1] - 49.5).abs() < 1e-6, "t1 {}", t[1]);
+    }
+
+    #[test]
+    fn zero_power_is_ambient() {
+        let net = Network {
+            n: 3,
+            neighbors: vec![vec![(1, 1.0)], vec![(0, 1.0), (2, 1.0)], vec![(1, 1.0)]],
+            g_amb: vec![0.5, 0.0, 0.0],
+            p: vec![0.0; 3],
+            t_amb: 25.0,
+            grid: 1,
+            dies: 1,
+        };
+        let t = solve_steady_state(&net);
+        assert!(t.iter().all(|&v| (v - 25.0).abs() < 1e-9));
+    }
+
+    #[test]
+    fn superposition() {
+        // Linear system: doubling power doubles the rise.
+        let mk = |p: f64| Network {
+            n: 2,
+            neighbors: vec![vec![(1, 1.5)], vec![(0, 1.5)]],
+            g_amb: vec![2.0, 0.0],
+            p: vec![0.0, p],
+            t_amb: 0.0,
+            grid: 1,
+            dies: 1,
+        };
+        let t1 = solve_steady_state(&mk(1.0));
+        let t2 = solve_steady_state(&mk(2.0));
+        assert!((t2[1] - 2.0 * t1[1]).abs() < 1e-8);
+    }
+}

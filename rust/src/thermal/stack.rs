@@ -1,0 +1,232 @@
+//! Layer-stack parameters and the Fig. 8 thermal study driver.
+
+use super::grid::{build_network, coarsen_power_map};
+use super::solver::solve_steady_state;
+use crate::analytical::Array3d;
+use crate::power::{power_map, Tech, VerticalTech};
+use crate::util::stats::{boxplot, Boxplot};
+use crate::workloads::Gemm;
+
+/// Package/material constants for the compact thermal model
+/// (HotSpot-6.0-class defaults).
+#[derive(Debug, Clone)]
+pub struct ThermalParams {
+    /// Grid side per layer.
+    pub grid: usize,
+    /// Ambient temperature, °C (HotSpot default 45 °C).
+    pub ambient_c: f64,
+    /// Silicon conductivity, W/(m·K).
+    pub k_si: f64,
+    /// Die thickness, m.
+    pub t_die: f64,
+    /// Thermal-interface-material conductivity, W/(m·K) and thickness, m.
+    pub k_tim: f64,
+    pub t_tim: f64,
+    /// Copper spreader conductivity and thickness.
+    pub k_spreader: f64,
+    pub t_spreader: f64,
+    /// Fixed sink-to-ambient convection resistance, K/W (one physical
+    /// package/heatsink is assumed across all configurations, as in the
+    /// paper's HotSpot setup — so total power directly drives this drop).
+    pub r_conv_fixed: f64,
+    /// Spreader-to-sink interface resistance normalized by area, K·m²/W
+    /// (`R = r_spread_unit / die_area`): small dies concentrate flux.
+    pub r_spread_unit: f64,
+    /// Lumped heatsink thermal mass, J/K (transient mode only; sets the
+    /// slow pole of the step response, τ ≈ mass · r_conv_fixed).
+    pub sink_mass_j_per_k: f64,
+}
+
+impl Default for ThermalParams {
+    fn default() -> Self {
+        ThermalParams {
+            grid: 16,
+            ambient_c: 45.0,
+            k_si: 130.0,
+            t_die: 100e-6,
+            k_tim: 4.0,
+            t_tim: 20e-6,
+            k_spreader: 400.0,
+            t_spreader: 1e-3,
+            r_conv_fixed: 1.0,
+            r_spread_unit: 1.0e-5,
+            sink_mass_j_per_k: 150.0,
+        }
+    }
+}
+
+/// Effective (conductivity, thickness) of the die-to-die bond interface.
+///
+/// * TSV stack: thinned silicon + dense copper via arrays + µbumps — the
+///   paper's "large TSVs ... enhance heat dissipation".
+/// * MIV (monolithic): the full inter-tier BEOL stack — low-k dielectrics
+///   with metal layers and only nano-scale vias; markedly more resistive,
+///   which is why the MIV stack runs hotter in Fig. 8.
+/// * F2F: Cu-Cu hybrid bond — dense pads, good conduction.
+pub fn bond_interface(vtech: VerticalTech) -> (f64, f64) {
+    match vtech {
+        // ~15% Cu fill in a thinned-Si carrier, 25 µm bond+thin-die path.
+        VerticalTech::Tsv => (100.0, 25e-6),
+        // ~5 µm of low-k ILD + sparse metal between device tiers.
+        VerticalTech::Miv => (1.0, 5e-6),
+        // Hybrid Cu-Cu bond: dense pads, 2 µm.
+        VerticalTech::FaceToFace => (20.0, 2e-6),
+    }
+}
+
+/// Heat-generating floorplan area of one tier, m²: the active MAC grid.
+/// Via/KOZ regions dissipate no power; their conduction benefit is captured
+/// in [`bond_interface`], so the thermal footprint excludes them.
+pub fn thermal_footprint_m2(array: &Array3d, tech: &Tech) -> f64 {
+    array.rows as f64 * array.cols as f64 * tech.a_mac_m2
+}
+
+/// Temperature summary of one tier (or die region).
+#[derive(Debug, Clone)]
+pub struct TierTemps {
+    pub tier: usize,
+    pub stats: Boxplot,
+}
+
+/// Result of a full thermal study on one configuration.
+#[derive(Debug, Clone)]
+pub struct ThermalStudy {
+    /// Per-tier boxplots, bottom (near sink) first.
+    pub tiers: Vec<TierTemps>,
+    /// Boxplot over the bottom tier only (paper's "bottom" series).
+    pub bottom: Boxplot,
+    /// Boxplot over all non-bottom tiers (paper's "middle"); None for 2D.
+    pub middle: Option<Boxplot>,
+    /// Per-die footprint used, m².
+    pub die_area_m2: f64,
+    /// Total power, W.
+    pub total_power_w: f64,
+}
+
+/// Aggregated stack summary for reports.
+#[derive(Debug, Clone)]
+pub struct StackSummary {
+    pub label: String,
+    pub study: ThermalStudy,
+}
+
+/// Run the Fig. 8 pipeline for one configuration: simulate activity →
+/// per-MAC power map → coarsen per tier → RC solve → per-tier boxplots.
+///
+/// `die_area_m2` must already include the vertical-link area overhead (use
+/// [`crate::area::tier_area_m2`]) so the TSV area→heat-spreading effect is
+/// captured.
+pub fn thermal_study(
+    g: &Gemm,
+    array: &Array3d,
+    tech: &Tech,
+    vtech: VerticalTech,
+    params: &ThermalParams,
+    die_area_m2: f64,
+) -> ThermalStudy {
+    let maps = power_map(g, array, tech, vtech);
+    let total_power_w: f64 = maps.iter().flat_map(|m| m.iter()).sum();
+    let grids: Vec<Vec<f64>> = maps
+        .iter()
+        .map(|m| coarsen_power_map(m, array.rows as usize, array.cols as usize, params.grid))
+        .collect();
+    let net = build_network(params, die_area_m2, &grids, vtech);
+    let t = solve_steady_state(&net);
+
+    let tiers: Vec<TierTemps> = (0..array.tiers as usize)
+        .map(|d| TierTemps {
+            tier: d,
+            stats: boxplot(net.die_temps(&t, d)),
+        })
+        .collect();
+    let bottom = tiers[0].stats.clone();
+    let middle = if array.tiers > 1 {
+        let mut all: Vec<f64> = Vec::new();
+        for d in 1..array.tiers as usize {
+            all.extend_from_slice(net.die_temps(&t, d));
+        }
+        Some(boxplot(&all))
+    } else {
+        None
+    };
+
+    ThermalStudy {
+        tiers,
+        bottom,
+        middle,
+        die_area_m2,
+        total_power_w,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fig8_workload() -> Gemm {
+        Gemm::new(128, 128, 300)
+    }
+
+    fn run(array: Array3d, vtech: VerticalTech) -> ThermalStudy {
+        let tech = Tech::default();
+        let params = ThermalParams::default();
+        let area = thermal_footprint_m2(&array, &tech);
+        thermal_study(&fig8_workload(), &array, &tech, vtech, &params, area)
+    }
+
+    #[test]
+    fn three_d_hotter_than_2d() {
+        // Fig. 8: 3D ICs get hotter than 2D ICs (same MAC count class).
+        let t2 = run(Array3d::new(222, 222, 1), VerticalTech::Tsv);
+        let t3 = run(Array3d::new(128, 128, 3), VerticalTech::Tsv);
+        assert!(
+            t3.middle.as_ref().unwrap().median > t2.bottom.median,
+            "3D {} vs 2D {}",
+            t3.middle.unwrap().median,
+            t2.bottom.median
+        );
+    }
+
+    #[test]
+    fn miv_hotter_than_tsv() {
+        // Fig. 8's counter-intuitive finding.
+        let tsv = run(Array3d::new(128, 128, 3), VerticalTech::Tsv);
+        let miv = run(Array3d::new(128, 128, 3), VerticalTech::Miv);
+        assert!(
+            miv.middle.as_ref().unwrap().median > tsv.middle.as_ref().unwrap().median,
+            "MIV {} vs TSV {}",
+            miv.middle.unwrap().median,
+            tsv.middle.unwrap().median
+        );
+    }
+
+    #[test]
+    fn bigger_arrays_hotter() {
+        let small = run(Array3d::new(64, 64, 3), VerticalTech::Tsv);
+        let large = run(Array3d::new(128, 128, 3), VerticalTech::Tsv);
+        assert!(large.bottom.median > small.bottom.median);
+    }
+
+    #[test]
+    fn middle_hotter_than_bottom() {
+        // Tiers far from the sink run hotter.
+        let s = run(Array3d::new(128, 128, 3), VerticalTech::Miv);
+        assert!(s.middle.as_ref().unwrap().median >= s.bottom.median);
+    }
+
+    #[test]
+    fn temps_within_thermal_budget() {
+        // Paper: neither 3D variant exceeds the thermal budget (~105 °C).
+        for v in [VerticalTech::Tsv, VerticalTech::Miv] {
+            let s = run(Array3d::new(128, 128, 3), v);
+            assert!(s.middle.as_ref().unwrap().max < 105.0, "{:?}", v);
+            assert!(s.bottom.max > s.die_area_m2.sqrt() * 0.0 + 45.0); // above ambient
+        }
+    }
+
+    #[test]
+    fn study_reports_power() {
+        let s = run(Array3d::new(128, 128, 3), VerticalTech::Tsv);
+        assert!(s.total_power_w > 1.0 && s.total_power_w < 20.0);
+    }
+}

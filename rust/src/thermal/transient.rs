@@ -1,0 +1,168 @@
+//! Transient thermal simulation (HotSpot's second operating mode).
+//!
+//! The paper's Fig. 8 is steady-state; this extension answers the follow-up
+//! question a designer asks next: *how fast does the stack heat up when a
+//! large GEMM burst starts?* Each grid node gets a thermal capacitance
+//! `C = ρ·c_p·V` (silicon for die nodes, copper for the spreader, a lumped
+//! sink mass) and the network integrates `C·dT/dt = P − G·T` with forward
+//! Euler under an adaptive stability bound (`dt ≤ min C/G_i`).
+
+use super::grid::Network;
+use super::stack::ThermalParams;
+
+/// Volumetric heat capacities, J/(m³·K).
+const CV_SILICON: f64 = 1.63e6;
+const CV_COPPER: f64 = 3.45e6;
+
+/// Per-node thermal capacitances for a network built by
+/// [`super::grid::build_network`].
+pub fn node_capacitances(net: &Network, params: &ThermalParams, die_area_m2: f64) -> Vec<f64> {
+    let g2 = net.grid * net.grid;
+    let cell_area = die_area_m2 / g2 as f64;
+    let mut caps = vec![0.0; net.n];
+    for i in 0..g2 {
+        caps[i] = CV_COPPER * cell_area * params.t_spreader; // spreader cells
+    }
+    for d in 0..net.dies {
+        for i in 0..g2 {
+            caps[(1 + d) * g2 + i] = CV_SILICON * cell_area * params.t_die;
+        }
+    }
+    caps[net.sink()] = params.sink_mass_j_per_k;
+    caps
+}
+
+/// Result of a transient run.
+#[derive(Debug, Clone)]
+pub struct TransientResult {
+    /// Simulated time points, seconds.
+    pub times: Vec<f64>,
+    /// Hottest die-node temperature at each time point, °C.
+    pub max_die_temp: Vec<f64>,
+    /// Final full temperature vector.
+    pub final_temps: Vec<f64>,
+}
+
+/// Integrate from ambient for `duration` seconds, sampling `samples` points.
+/// Power is the network's `p` vector (a step applied at t = 0).
+pub fn solve_transient(
+    net: &Network,
+    params: &ThermalParams,
+    die_area_m2: f64,
+    duration: f64,
+    samples: usize,
+) -> TransientResult {
+    assert!(samples >= 2 && duration > 0.0);
+    let caps = node_capacitances(net, params, die_area_m2);
+    // Stability: dt < min_i C_i / (Σ_j g_ij + g_amb,i); use half of it.
+    let mut dt = f64::INFINITY;
+    for i in 0..net.n {
+        let g_sum: f64 =
+            net.g_amb[i] + net.neighbors[i].iter().map(|&(_, g)| g).sum::<f64>();
+        if g_sum > 0.0 {
+            dt = dt.min(caps[i] / g_sum);
+        }
+    }
+    let dt = (dt * 0.5).min(duration / samples as f64);
+
+    let g2 = net.grid * net.grid;
+    let die_range = g2..(1 + net.dies) * g2;
+    let mut t = vec![net.t_amb; net.n];
+    let mut times = Vec::with_capacity(samples);
+    let mut max_die = Vec::with_capacity(samples);
+    let sample_every = (duration / dt / samples as f64).max(1.0) as usize;
+
+    let mut step = 0usize;
+    let mut now = 0.0;
+    while now < duration {
+        // dT_i = dt/C_i · (P_i − Σ_j g_ij (T_i − T_j) − g_amb (T_i − T_amb))
+        let mut dtv = vec![0.0f64; net.n];
+        for i in 0..net.n {
+            let mut q = net.p[i] - net.g_amb[i] * (t[i] - net.t_amb);
+            for &(j, g) in &net.neighbors[i] {
+                q -= g * (t[i] - t[j]);
+            }
+            dtv[i] = dt / caps[i] * q;
+        }
+        for i in 0..net.n {
+            t[i] += dtv[i];
+        }
+        now += dt;
+        step += 1;
+        if step % sample_every == 0 && times.len() < samples {
+            times.push(now);
+            let hottest = t[die_range.clone()]
+                .iter()
+                .cloned()
+                .fold(f64::MIN, f64::max);
+            max_die.push(hottest);
+        }
+    }
+    TransientResult { times, max_die_temp: max_die, final_temps: t }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::power::VerticalTech;
+    use crate::thermal::grid::build_network;
+    use crate::thermal::solver::solve_steady_state;
+
+    /// Small grid + light sink so the slow pole (τ ≈ mass·R_conv) settles
+    /// within a test-friendly simulated duration.
+    fn small_net(power_w: f64) -> (Network, ThermalParams, f64) {
+        let mut params = ThermalParams::default();
+        params.grid = 8;
+        params.sink_mass_j_per_k = 0.5; // τ ≈ 0.5 s
+        let g2 = params.grid * params.grid;
+        let area = 10e-6;
+        let pg = vec![power_w / g2 as f64; g2];
+        let net = build_network(&params, area, &[pg], VerticalTech::Tsv);
+        (net, params, area)
+    }
+
+    #[test]
+    fn heats_monotonically_from_ambient() {
+        let (net, params, area) = small_net(5.0);
+        let r = solve_transient(&net, &params, area, 0.5, 10);
+        assert!(r.max_die_temp.first().unwrap() >= &net.t_amb);
+        for w in r.max_die_temp.windows(2) {
+            assert!(w[1] >= w[0] - 1e-6, "non-monotone heating: {w:?}");
+        }
+    }
+
+    #[test]
+    fn converges_to_steady_state() {
+        let (net, params, area) = small_net(3.0);
+        let steady = solve_steady_state(&net);
+        let r = solve_transient(&net, &params, area, 5.0, 20);
+        let g2 = params.grid * params.grid;
+        let steady_max = steady[g2..2 * g2].iter().cloned().fold(f64::MIN, f64::max);
+        let final_max = *r.max_die_temp.last().unwrap();
+        let rel = (final_max - steady_max).abs() / (steady_max - net.t_amb);
+        assert!(rel < 0.05, "transient {final_max} vs steady {steady_max}");
+    }
+
+    #[test]
+    fn zero_power_stays_ambient() {
+        let (net, params, area) = small_net(0.0);
+        let r = solve_transient(&net, &params, area, 0.1, 5);
+        for &temp in &r.final_temps {
+            assert!((temp - net.t_amb).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn time_constant_is_physical() {
+        // The stack must be visibly below its settled temperature early on
+        // (thermal mass): first sample cooler than the last.
+        let (net, params, area) = small_net(5.0);
+        let r = solve_transient(&net, &params, area, 3.0, 30);
+        assert!(
+            r.max_die_temp[0] < *r.max_die_temp.last().unwrap() - 0.5,
+            "first {} last {}",
+            r.max_die_temp[0],
+            r.max_die_temp.last().unwrap()
+        );
+    }
+}

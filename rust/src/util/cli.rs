@@ -1,0 +1,181 @@
+//! Minimal command-line argument parser (offline substitute for `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments,
+//! with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+/// Declarative option spec used for parsing + usage text.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+impl Args {
+    /// Parse `argv` (without the program/subcommand name) against `specs`.
+    /// Unknown `--options` are an error; positionals are collected in order.
+    pub fn parse(argv: &[String], specs: &[OptSpec]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                let (name, inline_val) = match rest.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (rest, None),
+                };
+                let spec = specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}"))?;
+                if spec.takes_value {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{name} requires a value"))?
+                        }
+                    };
+                    out.opts.insert(name.to_string(), v);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(format!("--{name} does not take a value"));
+                    }
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<u64>()
+                .map(Some)
+                .map_err(|_| format!("--{name}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64_or(&self, name: &str, default: u64) -> Result<u64, String> {
+        Ok(self.get_u64(name)?.unwrap_or(default))
+    }
+
+    pub fn get_f64_or(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<f64>()
+                .map_err(|_| format!("--{name}: expected number, got '{v}'")),
+        }
+    }
+
+    /// Comma-separated u64 list, e.g. `--tiers 1,2,4,8`.
+    pub fn get_u64_list(&self, name: &str) -> Result<Option<Vec<u64>>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse::<u64>()
+                        .map_err(|_| format!("--{name}: bad integer '{p}'"))
+                })
+                .collect::<Result<Vec<_>, _>>()
+                .map(Some),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Render a usage block for a subcommand.
+pub fn usage(cmd: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut s = format!("{cmd} — {about}\n\noptions:\n");
+    for o in specs {
+        let arg = if o.takes_value {
+            format!("--{} <v>", o.name)
+        } else {
+            format!("--{}", o.name)
+        };
+        s.push_str(&format!("  {:<24} {}\n", arg, o.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "macs", takes_value: true, help: "" },
+            OptSpec { name: "verbose", takes_value: false, help: "" },
+        ]
+    }
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_kv_and_flag() {
+        let a = Args::parse(&s(&["--macs", "4096", "--verbose", "pos"]), &specs()).unwrap();
+        assert_eq!(a.get_u64("macs").unwrap(), Some(4096));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["pos".to_string()]);
+    }
+
+    #[test]
+    fn parses_eq_form() {
+        let a = Args::parse(&s(&["--macs=99"]), &specs()).unwrap();
+        assert_eq!(a.get_u64("macs").unwrap(), Some(99));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(Args::parse(&s(&["--nope"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&s(&["--macs"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let sp = vec![OptSpec { name: "tiers", takes_value: true, help: "" }];
+        let a = Args::parse(&s(&["--tiers", "1,2, 4"]), &sp).unwrap();
+        assert_eq!(a.get_u64_list("tiers").unwrap(), Some(vec![1, 2, 4]));
+    }
+}

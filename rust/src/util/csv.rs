@@ -1,0 +1,93 @@
+//! CSV emission for figure data series (one file per reproduced figure).
+
+use std::io::Write;
+use std::path::Path;
+
+/// A CSV writer with a fixed header. Fields containing commas, quotes or
+/// newlines are quoted per RFC 4180.
+#[derive(Debug, Clone)]
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new<S: Into<String>, I: IntoIterator<Item = S>>(header: I) -> Self {
+        Csv {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>, I: IntoIterator<Item = S>>(&mut self, cells: I) -> &mut Self {
+        let r: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(r.len(), self.header.len(), "csv row width != header width");
+        self.rows.push(r);
+        self
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    fn escape(field: &str) -> String {
+        if field.contains(',') || field.contains('"') || field.contains('\n') {
+            format!("\"{}\"", field.replace('"', "\"\""))
+        } else {
+            field.to_string()
+        }
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        let emit = |cells: &[String], out: &mut String| {
+            let line: Vec<String> = cells.iter().map(|c| Self::escape(c)).collect();
+            out.push_str(&line.join(","));
+            out.push('\n');
+        };
+        emit(&self.header, &mut out);
+        for r in &self.rows {
+            emit(r, &mut out);
+        }
+        out
+    }
+
+    /// Write to a file, creating parent directories as needed.
+    pub fn write_to(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_string().as_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_emit() {
+        let mut c = Csv::new(["a", "b"]);
+        c.row(["1", "x,y"]);
+        assert_eq!(c.to_string(), "a,b\n1,\"x,y\"\n");
+    }
+
+    #[test]
+    fn quote_escaping() {
+        let mut c = Csv::new(["a"]);
+        c.row(["say \"hi\""]);
+        assert!(c.to_string().contains("\"say \"\"hi\"\"\""));
+    }
+
+    #[test]
+    fn writes_file() {
+        let dir = std::env::temp_dir().join("cube3d_csv_test");
+        let path = dir.join("t.csv");
+        let mut c = Csv::new(["h"]);
+        c.row(["v"]);
+        c.write_to(&path).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "h\nv\n");
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,16 @@
+//! Substrate utilities.
+//!
+//! The build environment is fully offline and only the `xla` crate's vendored
+//! dependency closure is available, so the usual ecosystem crates
+//! (`clap`, `serde`, `rand`, `rayon`, `criterion`, `proptest`) are
+//! re-implemented here as small, focused modules (see DESIGN.md §5).
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod threadpool;

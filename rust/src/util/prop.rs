@@ -1,0 +1,159 @@
+//! Mini property-based testing harness (offline substitute for `proptest`).
+//!
+//! Generates random cases from a seeded [`Rng`](super::rng::Rng), runs the
+//! property, and on failure performs greedy integer shrinking toward the
+//! lower bound of each generated value so failures are reported minimal.
+//!
+//! Usage:
+//! ```no_run
+//! use cube3d::util::prop::{Config, run_u64s};
+//! run_u64s(
+//!     Config::default().cases(64),
+//!     &[(1, 100), (1, 100)],
+//!     |vals| vals[0] + vals[1] >= vals[0],
+//! );
+//! ```
+
+use super::rng::Rng;
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_iters: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 256, seed: 0xC0DE_3D15, max_shrink_iters: 4096 }
+    }
+}
+
+impl Config {
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// Run a property over tuples of u64s drawn uniformly from inclusive ranges.
+/// Panics with the (shrunk) counterexample if the property returns false.
+pub fn run_u64s<F>(cfg: Config, ranges: &[(u64, u64)], prop: F)
+where
+    F: Fn(&[u64]) -> bool,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let vals: Vec<u64> = ranges
+            .iter()
+            .map(|&(lo, hi)| rng.gen_range_incl(lo, hi))
+            .collect();
+        if !prop(&vals) {
+            let shrunk = shrink(&vals, ranges, &prop, cfg.max_shrink_iters);
+            panic!(
+                "property failed (case {case}, seed {:#x}): counterexample {:?} (shrunk from {:?})",
+                cfg.seed, shrunk, vals
+            );
+        }
+    }
+}
+
+/// Run a property over log-uniformly drawn u64s — better coverage of the
+/// many-orders-of-magnitude parameter spaces (MAC budgets, K dims) used here.
+pub fn run_u64s_log<F>(cfg: Config, ranges: &[(u64, u64)], prop: F)
+where
+    F: Fn(&[u64]) -> bool,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let vals: Vec<u64> = ranges
+            .iter()
+            .map(|&(lo, hi)| rng.gen_log_uniform(lo.max(1), hi))
+            .collect();
+        if !prop(&vals) {
+            let shrunk = shrink(&vals, ranges, &prop, cfg.max_shrink_iters);
+            panic!(
+                "property failed (case {case}, seed {:#x}): counterexample {:?} (shrunk from {:?})",
+                cfg.seed, shrunk, vals
+            );
+        }
+    }
+}
+
+/// Per-coordinate shrink: binary-search each coordinate down to the smallest
+/// value (holding the others fixed) at which the property still fails.
+/// Iterates over coordinates until a fixpoint, since shrinking one value can
+/// unlock further shrinks in another.
+fn shrink<F>(vals: &[u64], ranges: &[(u64, u64)], prop: &F, max_iters: usize) -> Vec<u64>
+where
+    F: Fn(&[u64]) -> bool,
+{
+    let mut cur = vals.to_vec();
+    let mut iters = 0;
+    loop {
+        let mut progressed = false;
+        for i in 0..cur.len() {
+            // Invariant: prop fails at cur. Find the minimal failing value
+            // for coordinate i in [ranges[i].0, cur[i]].
+            let mut lo = ranges[i].0;
+            let mut hi = cur[i];
+            while lo < hi && iters < max_iters {
+                iters += 1;
+                let mid = lo + (hi - lo) / 2;
+                let mut cand = cur.clone();
+                cand[i] = mid;
+                if !prop(&cand) {
+                    hi = mid;
+                } else {
+                    lo = mid + 1;
+                }
+            }
+            if hi < cur[i] {
+                cur[i] = hi;
+                progressed = true;
+            }
+        }
+        if !progressed || iters >= max_iters {
+            return cur;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        run_u64s(Config::default().cases(64), &[(0, 1000)], |v| v[0] <= 1000);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        run_u64s(Config::default().cases(64), &[(0, 1000)], |v| v[0] < 500);
+    }
+
+    #[test]
+    fn shrinks_to_minimal() {
+        // Property: x < 500. Counterexample should shrink to exactly 500.
+        let r = std::panic::catch_unwind(|| {
+            run_u64s(Config::default().cases(64), &[(0, 1000)], |v| v[0] < 500);
+        });
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("[500]"), "got: {msg}");
+    }
+
+    #[test]
+    fn log_variant_respects_bounds() {
+        run_u64s_log(Config::default().cases(128), &[(1, 1 << 20)], |v| {
+            v[0] >= 1 && v[0] <= (1 << 20)
+        });
+    }
+}

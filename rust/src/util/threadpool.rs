@@ -1,0 +1,89 @@
+//! Parallel map over a work list using scoped std threads
+//! (offline substitute for `rayon`; `tokio` is likewise unavailable).
+//!
+//! DSE sweeps are embarrassingly parallel over configuration points; this
+//! gives us a work-stealing-free but perfectly adequate static chunking.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use: the machine's parallelism, capped to the
+/// work available.
+pub fn default_workers(n_items: usize) -> usize {
+    let hw = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    hw.min(n_items).max(1)
+}
+
+/// Parallel map: applies `f` to every item, preserving input order in the
+/// result. `f` must be `Sync` (called from many threads) and items are
+/// claimed atomically so uneven work self-balances.
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = default_workers(n);
+    if workers == 1 {
+        return items.iter().map(|it| f(it)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let out: Mutex<Vec<Option<R>>> = Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(&items[i]);
+                out.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    out.into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("worker missed an item"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        let out = par_map(&items, |x| x * 2);
+        assert_eq!(out, (0..1000).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<u64> = par_map(&[] as &[u64], |x| *x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn uneven_work_balances() {
+        let items: Vec<u64> = (0..64).collect();
+        let out = par_map(&items, |&x| {
+            // Uneven busy work.
+            let mut acc = 0u64;
+            for i in 0..(x * 1000) {
+                acc = acc.wrapping_add(i);
+            }
+            (x, acc)
+        });
+        for (i, (x, _)) in out.iter().enumerate() {
+            assert_eq!(i as u64, *x);
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! GEMM workload descriptor and DNN-layer → GEMM lowering.
+
+/// A GEMM workload `C(M×N) = A(M×K) · B(K×N)` — the unit of work throughout
+/// the framework, matching the paper's §III-C naming (M, N outer dims,
+/// K inner/reduction dim).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Gemm {
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+}
+
+impl Gemm {
+    pub fn new(m: u64, n: u64, k: u64) -> Self {
+        assert!(m > 0 && n > 0 && k > 0, "GEMM dims must be positive");
+        Gemm { m, n, k }
+    }
+
+    /// Total multiply-accumulate operations.
+    pub fn macs(&self) -> u64 {
+        self.m * self.n * self.k
+    }
+
+    /// Number of output elements.
+    pub fn outputs(&self) -> u64 {
+        self.m * self.n
+    }
+
+    /// The paper's Fig. 6 threshold: 3D pays off only when the MAC budget
+    /// exceeds M·N (all outputs resident at once).
+    pub fn min_macs_for_3d(&self) -> u64 {
+        self.m * self.n
+    }
+}
+
+impl std::fmt::Display for Gemm {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "M={} N={} K={}", self.m, self.n, self.k)
+    }
+}
+
+/// Kind of DNN layer, for provenance in reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    FullyConnected,
+    Lstm,
+    Attention,
+}
+
+/// A named DNN layer together with its GEMM lowering.
+#[derive(Debug, Clone)]
+pub struct LayerSpec {
+    pub name: String,
+    pub kind: LayerKind,
+    pub gemm: Gemm,
+}
+
+impl LayerSpec {
+    /// Lower a 2D convolution to GEMM via im2col, the standard systolic-array
+    /// mapping (used by SCALE-sim and by the paper's Table I):
+    ///
+    /// * `M = out_channels` (filter count)
+    /// * `K = in_channels · kh · kw` (one unrolled receptive field)
+    /// * `N = out_h · out_w · batch` (output pixels)
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv(
+        name: &str,
+        in_h: u64,
+        in_w: u64,
+        in_c: u64,
+        kh: u64,
+        kw: u64,
+        out_c: u64,
+        stride: u64,
+        pad: u64,
+        batch: u64,
+    ) -> Self {
+        assert!(stride > 0);
+        let out_h = (in_h + 2 * pad - kh) / stride + 1;
+        let out_w = (in_w + 2 * pad - kw) / stride + 1;
+        LayerSpec {
+            name: name.to_string(),
+            kind: LayerKind::Conv,
+            gemm: Gemm::new(out_c, out_h * out_w * batch, in_c * kh * kw),
+        }
+    }
+
+    /// Fully-connected layer: `M = batch`, `K = in_features`,
+    /// `N = out_features`.
+    pub fn fc(name: &str, batch: u64, in_features: u64, out_features: u64) -> Self {
+        LayerSpec {
+            name: name.to_string(),
+            kind: LayerKind::FullyConnected,
+            gemm: Gemm::new(batch, out_features, in_features),
+        }
+    }
+
+    /// LSTM cell step as one fused GEMM: the four gates computed together.
+    /// `M = batch`, `K = input + hidden`, `N = 4·hidden`.
+    pub fn lstm(name: &str, batch: u64, input: u64, hidden: u64) -> Self {
+        LayerSpec {
+            name: name.to_string(),
+            kind: LayerKind::Lstm,
+            gemm: Gemm::new(batch, 4 * hidden, input + hidden),
+        }
+    }
+
+    /// Attention projection GEMM: `M = seq·batch`, `K = d_model`, `N = d_proj`.
+    pub fn attention(name: &str, seq: u64, batch: u64, d_model: u64, d_proj: u64) -> Self {
+        LayerSpec {
+            name: name.to_string(),
+            kind: LayerKind::Attention,
+            gemm: Gemm::new(seq * batch, d_proj, d_model),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_macs() {
+        let g = Gemm::new(2, 3, 4);
+        assert_eq!(g.macs(), 24);
+        assert_eq!(g.outputs(), 6);
+        assert_eq!(g.min_macs_for_3d(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_dim_rejected() {
+        Gemm::new(0, 1, 1);
+    }
+
+    #[test]
+    fn conv_im2col_dims() {
+        // ResNet-50 conv1: 224x224x3 input, 7x7x64 filters, stride 2, pad 3.
+        let l = LayerSpec::conv("conv1", 224, 224, 3, 7, 7, 64, 2, 3, 1);
+        assert_eq!(l.gemm.m, 64);
+        assert_eq!(l.gemm.k, 3 * 7 * 7);
+        assert_eq!(l.gemm.n, 112 * 112);
+    }
+
+    #[test]
+    fn conv_no_pad() {
+        let l = LayerSpec::conv("c", 5, 5, 1, 3, 3, 8, 1, 0, 1);
+        assert_eq!(l.gemm.n, 9); // 3x3 output
+        assert_eq!(l.gemm.k, 9);
+    }
+
+    #[test]
+    fn fc_dims() {
+        let l = LayerSpec::fc("fc", 32, 2048, 1000);
+        assert_eq!(l.gemm, Gemm::new(32, 1000, 2048));
+    }
+
+    #[test]
+    fn lstm_fused_gates() {
+        let l = LayerSpec::lstm("l", 128, 1024, 1024);
+        assert_eq!(l.gemm, Gemm::new(128, 4096, 2048));
+    }
+
+    #[test]
+    fn attention_dims() {
+        let l = LayerSpec::attention("qkv", 512, 8, 512, 512);
+        assert_eq!(l.gemm, Gemm::new(4096, 512, 512));
+    }
+}

@@ -1,0 +1,105 @@
+//! Random workload generation for Fig. 7: "300 random workloads based on
+//! Resnet50 parameters".
+//!
+//! Dimensions are drawn log-uniformly from the ranges spanned by ResNet-50's
+//! GEMM-lowered layers (plus the paper's Table I ResNet rows), which is the
+//! closest reconstruction of "based on Resnet50 parameters" the paper's text
+//! admits.
+
+use super::gemm::Gemm;
+use super::models::resnet50_layers;
+use crate::util::rng::Rng;
+
+/// Ranges for the random draw. Defaults derive from ResNet-50's layer walk.
+#[derive(Debug, Clone)]
+pub struct GeneratorConfig {
+    pub m_range: (u64, u64),
+    pub n_range: (u64, u64),
+    pub k_range: (u64, u64),
+    pub count: usize,
+    pub seed: u64,
+}
+
+impl Default for GeneratorConfig {
+    fn default() -> Self {
+        Self::from_resnet50(300, 0x3D_ACCE1)
+    }
+}
+
+impl GeneratorConfig {
+    /// Derive dimension ranges from the actual ResNet-50 GEMM trace.
+    pub fn from_resnet50(count: usize, seed: u64) -> Self {
+        let model = resnet50_layers(1);
+        let gemms: Vec<Gemm> = model.layers.iter().map(|l| l.gemm).collect();
+        let range = |f: fn(&Gemm) -> u64| {
+            let lo = gemms.iter().map(f).min().unwrap();
+            let hi = gemms.iter().map(f).max().unwrap();
+            (lo, hi)
+        };
+        GeneratorConfig {
+            m_range: range(|g| g.m),
+            n_range: range(|g| g.n),
+            k_range: range(|g| g.k),
+            count,
+            seed,
+        }
+    }
+}
+
+/// Draw `cfg.count` random GEMMs, log-uniform in each dimension.
+/// Deterministic for a given seed.
+pub fn random_workloads(cfg: &GeneratorConfig) -> Vec<Gemm> {
+    let mut rng = Rng::new(cfg.seed);
+    (0..cfg.count)
+        .map(|_| {
+            Gemm::new(
+                rng.gen_log_uniform(cfg.m_range.0, cfg.m_range.1),
+                rng.gen_log_uniform(cfg.n_range.0, cfg.n_range.1),
+                rng.gen_log_uniform(cfg.k_range.0, cfg.k_range.1),
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let cfg = GeneratorConfig::default();
+        assert_eq!(random_workloads(&cfg), random_workloads(&cfg));
+    }
+
+    #[test]
+    fn respects_ranges() {
+        let cfg = GeneratorConfig::default();
+        for g in random_workloads(&cfg) {
+            assert!(g.m >= cfg.m_range.0 && g.m <= cfg.m_range.1);
+            assert!(g.n >= cfg.n_range.0 && g.n <= cfg.n_range.1);
+            assert!(g.k >= cfg.k_range.0 && g.k <= cfg.k_range.1);
+        }
+    }
+
+    #[test]
+    fn count_matches() {
+        let cfg = GeneratorConfig { count: 17, ..Default::default() };
+        assert_eq!(random_workloads(&cfg).len(), 17);
+    }
+
+    #[test]
+    fn resnet_ranges_sane() {
+        let cfg = GeneratorConfig::from_resnet50(10, 1);
+        // conv1 has K=147; the FC has N=1000; stage convs reach K=4608 etc.
+        assert!(cfg.k_range.0 < 200);
+        assert!(cfg.k_range.1 >= 4608);
+        assert!(cfg.n_range.1 >= 12544);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = GeneratorConfig { seed: 1, ..Default::default() };
+        let b = GeneratorConfig { seed: 2, ..Default::default() };
+        assert_ne!(random_workloads(&a), random_workloads(&b));
+    }
+}

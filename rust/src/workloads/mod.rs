@@ -1,0 +1,16 @@
+//! Workload library.
+//!
+//! Everything the paper evaluates is a GEMM `A(M×K) · B(K×N)`; DNN layers are
+//! lowered to GEMM dimensions the same way the paper (and SCALE-sim [13])
+//! does: convolutions via im2col, fully-connected / LSTM / attention layers
+//! directly.
+
+mod gemm;
+mod generator;
+mod models;
+mod table1;
+
+pub use gemm::{Gemm, LayerKind, LayerSpec};
+pub use generator::{random_workloads, GeneratorConfig};
+pub use models::{deepbench_gemms, gnmt_layers, resnet50_layers, transformer_layers, Model};
+pub use table1::{by_label, table1, Table1Entry};

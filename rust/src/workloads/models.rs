@@ -1,0 +1,221 @@
+//! Full-network layer walks for the DNNs the paper draws workloads from:
+//! ResNet-50 [16], GNMT [17], DeepBench [18] and the Transformer [19].
+//!
+//! These give the DSE engine and the end-to-end serving example realistic
+//! layer *traces* (not just the eight Table I rows). Convolutions are lowered
+//! with im2col (see [`LayerSpec::conv`]); batch size 1 unless noted, matching
+//! the paper's inference focus.
+
+use super::gemm::LayerSpec;
+
+/// A named network: an ordered list of GEMM-lowered layers.
+#[derive(Debug, Clone)]
+pub struct Model {
+    pub name: &'static str,
+    pub layers: Vec<LayerSpec>,
+}
+
+impl Model {
+    /// Total MAC operations over all layers.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.gemm.macs()).sum()
+    }
+}
+
+/// ResNet-50 v1 (He et al. [16]), all unique conv shapes of the four stages
+/// plus conv1 and the final FC. Repeated blocks are instantiated per
+/// repetition so the trace length matches a real inference pass.
+pub fn resnet50_layers(batch: u64) -> Model {
+    let mut layers = Vec::new();
+    // conv1: 224x224x3, 7x7/2, 64 out.
+    layers.push(LayerSpec::conv("conv1", 224, 224, 3, 7, 7, 64, 2, 3, batch));
+
+    // Bottleneck stage helper: (input side, in_c, mid_c, out_c, blocks, first stride)
+    let stages: [(u64, u64, u64, u64, u64); 4] = [
+        (56, 64, 64, 256, 3),
+        (28, 256, 128, 512, 4),
+        (14, 512, 256, 1024, 6),
+        (7, 1024, 512, 2048, 3),
+    ];
+    for (si, &(side, in_c, mid_c, out_c, blocks)) in stages.iter().enumerate() {
+        for b in 0..blocks {
+            let stage = si + 2; // conv2_x .. conv5_x
+            let in_side = if b == 0 && si > 0 { side * 2 } else { side };
+            let stride = if b == 0 && si > 0 { 2 } else { 1 };
+            let block_in_c = if b == 0 {
+                if si == 0 { in_c } else { stages[si - 1].3 }
+            } else {
+                out_c
+            };
+            // 1x1 reduce
+            layers.push(LayerSpec::conv(
+                &format!("conv{stage}_{b}_1x1a"),
+                in_side, in_side, block_in_c, 1, 1, mid_c, stride, 0, batch,
+            ));
+            // 3x3
+            layers.push(LayerSpec::conv(
+                &format!("conv{stage}_{b}_3x3"),
+                side, side, mid_c, 3, 3, mid_c, 1, 1, batch,
+            ));
+            // 1x1 expand
+            layers.push(LayerSpec::conv(
+                &format!("conv{stage}_{b}_1x1b"),
+                side, side, mid_c, 1, 1, out_c, 1, 0, batch,
+            ));
+            // Projection shortcut on the first block of each stage.
+            if b == 0 {
+                layers.push(LayerSpec::conv(
+                    &format!("conv{stage}_{b}_proj"),
+                    in_side, in_side, block_in_c, 1, 1, out_c, stride, 0, batch,
+                ));
+            }
+        }
+    }
+    layers.push(LayerSpec::fc("fc1000", batch, 2048, 1000));
+    Model { name: "resnet50", layers }
+}
+
+/// GNMT (Wu et al. [17]): 8-layer encoder + 8-layer decoder LSTM stack with
+/// 1024 hidden units, plus the attention and softmax projections. Batch and
+/// sequence length parameterized; defaults follow the paper's Table I scale.
+pub fn gnmt_layers(batch: u64, vocab: u64) -> Model {
+    let hidden = 1024;
+    let mut layers = Vec::new();
+    // Encoder: first layer is bidirectional (2x), then 7 unidirectional.
+    layers.push(LayerSpec::lstm("enc_l0_fwd", batch, hidden, hidden));
+    layers.push(LayerSpec::lstm("enc_l0_bwd", batch, hidden, hidden));
+    for i in 1..8 {
+        let input = if i == 1 { 2 * hidden } else { hidden };
+        layers.push(LayerSpec::lstm(&format!("enc_l{i}"), batch, input, hidden));
+    }
+    // Decoder: 8 layers; first consumes [embedding; context] = 2*hidden.
+    for i in 0..8 {
+        let input = if i == 0 { 2 * hidden } else { hidden };
+        layers.push(LayerSpec::lstm(&format!("dec_l{i}"), batch, input, hidden));
+    }
+    // Attention score + context projections.
+    layers.push(LayerSpec::fc("attn_query", batch, hidden, hidden));
+    layers.push(LayerSpec::fc("attn_key", batch, hidden, hidden));
+    // Output softmax projection over the vocabulary.
+    layers.push(LayerSpec::fc("softmax", batch, hidden, vocab));
+    Model { name: "gnmt", layers }
+}
+
+/// Transformer base (Vaswani et al. [19]): 6 encoder + 6 decoder blocks,
+/// d_model=512, d_ff=2048, 8 heads; seq = sequence length.
+pub fn transformer_layers(seq: u64, batch: u64) -> Model {
+    let d_model = 512;
+    let d_ff = 2048;
+    let mut layers = Vec::new();
+    let block = |prefix: &str, cross: bool, layers: &mut Vec<LayerSpec>| {
+        // QKV projections (fused as one GEMM of width 3*d_model) + output proj.
+        layers.push(LayerSpec::attention(
+            &format!("{prefix}_qkv"),
+            seq, batch, d_model, 3 * d_model,
+        ));
+        layers.push(LayerSpec::attention(
+            &format!("{prefix}_out"),
+            seq, batch, d_model, d_model,
+        ));
+        if cross {
+            layers.push(LayerSpec::attention(
+                &format!("{prefix}_cross_qkv"),
+                seq, batch, d_model, 3 * d_model,
+            ));
+            layers.push(LayerSpec::attention(
+                &format!("{prefix}_cross_out"),
+                seq, batch, d_model, d_model,
+            ));
+        }
+        // Feed-forward: two GEMMs.
+        layers.push(LayerSpec::attention(
+            &format!("{prefix}_ffn1"),
+            seq, batch, d_model, d_ff,
+        ));
+        layers.push(LayerSpec::attention(
+            &format!("{prefix}_ffn2"),
+            seq, batch, d_ff, d_model,
+        ));
+    };
+    for i in 0..6 {
+        block(&format!("enc{i}"), false, &mut layers);
+    }
+    for i in 0..6 {
+        block(&format!("dec{i}"), true, &mut layers);
+    }
+    Model { name: "transformer", layers }
+}
+
+/// DeepBench [18] inference GEMM suite (a representative subset of the
+/// published shapes, including the two Table I rows DB0/DB1).
+pub fn deepbench_gemms() -> Model {
+    let shapes: [(&'static str, u64, u64, u64); 8] = [
+        // (name, M, N, K)
+        ("db_1024x16x500000", 1024, 16, 50000),
+        ("db_35x4096x2560", 35, 4096, 2560),
+        ("db_5124x700x2048", 5124, 700, 2048),
+        ("db_3072x3000x1024", 3072, 3000, 1024),
+        ("db_512x6000x2816", 512, 6000, 2816),
+        ("db_1024x700x512", 1024, 700, 512),
+        ("db_7680x1500x2560", 7680, 1500, 2560),
+        ("db_64x1x1216", 64, 8, 1216),
+    ];
+    let layers = shapes
+        .iter()
+        .map(|&(name, m, n, k)| LayerSpec::fc(name, m, k, n))
+        .collect();
+    Model { name: "deepbench", layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet50_layer_count() {
+        let m = resnet50_layers(1);
+        // conv1 + 16 bottleneck blocks * 3 + 4 projections + fc = 1+48+4+1.
+        assert_eq!(m.layers.len(), 54);
+    }
+
+    #[test]
+    fn resnet50_macs_magnitude() {
+        // ~3.8 GMACs for batch 1 inference (well-known figure ±20% given
+        // projection-shortcut accounting).
+        let macs = resnet50_layers(1).total_macs() as f64;
+        assert!(macs > 3.0e9 && macs < 4.6e9, "got {macs:e}");
+    }
+
+    #[test]
+    fn resnet50_scales_with_batch() {
+        let m1 = resnet50_layers(1).total_macs();
+        let m4 = resnet50_layers(4).total_macs();
+        // FC layer scales in M not N; conv N scales with batch — close to 4x.
+        assert!(m4 > 3 * m1);
+    }
+
+    #[test]
+    fn gnmt_has_17_lstm_plus_proj() {
+        let m = gnmt_layers(128, 32000);
+        assert_eq!(m.layers.len(), 2 + 7 + 8 + 2 + 1);
+        // GNMT0-like row exists: an LSTM with K=2048, N=4096.
+        assert!(m
+            .layers
+            .iter()
+            .any(|l| l.gemm.k == 2048 && l.gemm.n == 4096));
+    }
+
+    #[test]
+    fn transformer_block_counts() {
+        let m = transformer_layers(512, 1);
+        // enc: 6*4 GEMMs, dec: 6*6 GEMMs.
+        assert_eq!(m.layers.len(), 6 * 4 + 6 * 6);
+    }
+
+    #[test]
+    fn deepbench_contains_table1_rows() {
+        let m = deepbench_gemms();
+        assert!(m.layers.iter().any(|l| l.gemm.k == 50000)); // DB0
+        assert!(m.layers.iter().any(|l| l.gemm.k == 2560 && l.gemm.n == 4096)); // DB1
+    }
+}

@@ -1,0 +1,76 @@
+//! Table I of the paper: exemplary layers from current DNN workloads mapped
+//! to GEMM dimensions M, K, N.
+
+use super::gemm::Gemm;
+
+/// One row of the paper's Table I.
+#[derive(Debug, Clone)]
+pub struct Table1Entry {
+    /// Network the layer is taken from.
+    pub network: &'static str,
+    /// The paper's layer label (RN0, GNMT1, ...).
+    pub layer: &'static str,
+    pub gemm: Gemm,
+}
+
+/// The paper's Table I, verbatim.
+pub fn table1() -> Vec<Table1Entry> {
+    // (network, layer, M, K, N) — note the paper's column order is M, K, N.
+    let rows: [(&'static str, &'static str, u64, u64, u64); 8] = [
+        ("Resnet50", "RN0", 64, 12100, 147),
+        ("Resnet50", "RN1", 512, 784, 128),
+        ("GNMT", "GNMT0", 128, 4096, 2048),
+        ("GNMT", "GNMT1", 320, 4096, 3072),
+        ("DeepBench", "DB0", 1024, 50000, 16),
+        ("DeepBench", "DB1", 35, 2560, 4096),
+        ("Transformer", "TF0", 31999, 84, 1024),
+        ("Transformer", "TF1", 84, 4096, 1024),
+    ];
+    rows.iter()
+        .map(|&(network, layer, m, k, n)| Table1Entry {
+            network,
+            layer,
+            gemm: Gemm::new(m, n, k),
+        })
+        .collect()
+}
+
+/// Look up a Table I entry by its paper label (e.g. `"RN0"`).
+pub fn by_label(label: &str) -> Option<Table1Entry> {
+    table1().into_iter().find(|e| e.layer == label)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn has_all_eight_rows() {
+        assert_eq!(table1().len(), 8);
+    }
+
+    #[test]
+    fn rn0_matches_paper() {
+        let e = by_label("RN0").unwrap();
+        assert_eq!(e.gemm.m, 64);
+        assert_eq!(e.gemm.k, 12100);
+        assert_eq!(e.gemm.n, 147);
+    }
+
+    #[test]
+    fn tf0_matches_paper() {
+        let e = by_label("TF0").unwrap();
+        assert_eq!((e.gemm.m, e.gemm.k, e.gemm.n), (31999, 84, 1024));
+    }
+
+    #[test]
+    fn db0_matches_paper() {
+        let e = by_label("DB0").unwrap();
+        assert_eq!((e.gemm.m, e.gemm.k, e.gemm.n), (1024, 50000, 16));
+    }
+
+    #[test]
+    fn unknown_label_is_none() {
+        assert!(by_label("nope").is_none());
+    }
+}

@@ -1,0 +1,96 @@
+//! Coordinator end-to-end: jobs through router → batcher → executor →
+//! PJRT runtime, with numerics verified (requires `make artifacts`).
+
+use cube3d::coordinator::{BatcherConfig, Coordinator, GemmJob, RouterConfig};
+use cube3d::runtime::find_artifact_dir;
+use cube3d::sim::{matmul_f32, Matrix};
+use cube3d::util::rng::Rng;
+
+fn start() -> Coordinator {
+    let dir = find_artifact_dir().expect("run `make artifacts` before cargo test");
+    Coordinator::start(&dir, RouterConfig::default(), BatcherConfig::default()).unwrap()
+}
+
+fn rand_matrix(rng: &mut Rng, rows: usize, cols: usize) -> Matrix<f32> {
+    Matrix::from_fn(rows, cols, |_, _| (rng.gen_range(200) as f32 - 100.0) / 50.0)
+}
+
+#[test]
+fn trace_of_mixed_shapes_completes_correctly() {
+    let coord = start();
+    let mut rng = Rng::new(11);
+    let mut jobs = Vec::new();
+    let mut expected = Vec::new();
+    for i in 0..10u64 {
+        let (m, k, n) = if i % 2 == 0 { (64, 256, 96) } else { (20, 30, 25) };
+        let a = rand_matrix(&mut rng, m, k);
+        let b = rand_matrix(&mut rng, k, n);
+        expected.push(matmul_f32(&a, &b));
+        jobs.push(GemmJob::new(i, format!("job{i}"), a, b));
+    }
+    let results = coord.run_trace(jobs).unwrap();
+    assert_eq!(results.len(), 10);
+    for (r, want) in results.iter().zip(&expected) {
+        assert_eq!((r.output.rows, r.output.cols), (want.rows, want.cols));
+        for i in 0..want.rows {
+            for j in 0..want.cols {
+                let (x, y) = (r.output.get(i, j), want.get(i, j));
+                assert!((x - y).abs() < 1e-3 * 1.0f32.max(x.abs()), "job {}", r.id);
+            }
+        }
+    }
+    // Even ids took the exact-artifact path; odd ids were tiled.
+    for r in &results {
+        if r.id % 2 == 0 {
+            assert_eq!(r.plan, "artifact:gemm_quickstart");
+        } else {
+            assert_eq!(r.plan, "tiled:gemm_quickstart");
+        }
+        assert!(r.modeled_speedup_3d > 0.0);
+        assert!(r.design.tiers >= 1);
+    }
+    let m = coord.finish();
+    assert_eq!(m.jobs_completed, 10);
+    assert!(m.pjrt_executions >= 10);
+    assert!(m.throughput() > 0.0);
+    assert!(m.latency_summary().unwrap().max >= m.latency_summary().unwrap().min);
+}
+
+#[test]
+fn results_preserve_submission_order_per_receiver() {
+    let coord = start();
+    let mut rng = Rng::new(12);
+    let a = rand_matrix(&mut rng, 64, 256);
+    let b = rand_matrix(&mut rng, 256, 96);
+    let r1 = coord.submit(GemmJob::new(1, "a", a.clone(), b.clone()));
+    let r2 = coord.submit(GemmJob::new(2, "b", a, b));
+    let j1 = r1.recv().unwrap().unwrap();
+    let j2 = r2.recv().unwrap().unwrap();
+    assert_eq!(j1.id, 1);
+    assert_eq!(j2.id, 2);
+    coord.finish();
+}
+
+#[test]
+fn batching_groups_same_plan_jobs() {
+    let coord = start();
+    let mut rng = Rng::new(13);
+    let mut jobs = Vec::new();
+    for i in 0..8u64 {
+        let a = rand_matrix(&mut rng, 64, 256);
+        let b = rand_matrix(&mut rng, 256, 96);
+        jobs.push(GemmJob::new(i, "same", a, b));
+    }
+    let results = coord.run_trace(jobs).unwrap();
+    assert_eq!(results.len(), 8);
+    let m = coord.finish();
+    // All jobs share one plan: fewer batches than jobs proves grouping.
+    assert!(m.batches < 8, "batches {} should be < 8", m.batches);
+}
+
+#[test]
+fn invalid_base_artifact_fails_fast() {
+    let dir = find_artifact_dir().unwrap();
+    let bad = RouterConfig { base_artifact: "nope".into(), ..Default::default() };
+    assert!(Coordinator::start(&dir, bad, BatcherConfig::default()).is_err());
+}

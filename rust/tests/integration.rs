@@ -1,0 +1,165 @@
+//! Cross-module integration tests: workload library → analytical model →
+//! simulator → power → thermal → area, exercising the same paths the paper's
+//! experiments use (no artifacts required).
+
+use cube3d::analytical::{
+    cycles_2d, cycles_3d, optimize_2d, optimize_3d, tier_sweep, Array2d, Array3d,
+};
+use cube3d::area::{perf_per_area_vs_2d, total_area_m2};
+use cube3d::dse::{evaluate_point, sweep};
+use cube3d::power::{power_map, power_summary, Tech, VerticalTech};
+use cube3d::sim::{fast_activity, matmul_i64, simulate_dos, Matrix};
+use cube3d::thermal::{thermal_footprint_m2, thermal_study, ThermalParams};
+use cube3d::util::rng::Rng;
+use cube3d::workloads::{
+    by_label, random_workloads, resnet50_layers, table1, Gemm, GeneratorConfig,
+};
+
+#[test]
+fn every_table1_layer_optimizes_and_simulates_fast() {
+    // Analytical path over the full Table I; fast activity at scale.
+    for e in table1() {
+        let g = e.gemm;
+        let d2 = optimize_2d(&g, 1 << 15);
+        let d3 = optimize_3d(&g, 1 << 15, 4);
+        assert!(d2.cycles > 0 && d3.cycles > 0, "{}", e.layer);
+        let t = fast_activity(&g, &d3.array3d());
+        assert_eq!(t.mac_ops, g.macs(), "{}", e.layer);
+        assert_eq!(t.cycles, d3.cycles, "{}", e.layer);
+    }
+}
+
+#[test]
+fn headline_speedup_reproduced() {
+    // Paper abstract: up to 9.14x speedup of 3D vs 2D (RN0, 2^18 MACs, 12 tiers).
+    let g = by_label("RN0").unwrap().gemm;
+    let pts = tier_sweep(&g, 1 << 18, &[12]);
+    let s = pts[0].speedup;
+    assert!((8.5..=10.0).contains(&s), "headline speedup {s}");
+}
+
+#[test]
+fn exact_sim_validates_model_and_matmul_on_resnet_layer() {
+    // A real (shrunken) ResNet-50 layer through the register-level engine.
+    let model = resnet50_layers(1);
+    let layer = &model.layers[0]; // conv1 im2col
+    let g = layer.gemm;
+    // Shrink dims to keep the exact engine fast, preserving aspect.
+    let m = (g.m / 4).max(1) as usize;
+    let n = (g.n / 512).max(1) as usize;
+    let k = (g.k / 4).max(1) as usize;
+    let mut rng = Rng::new(42);
+    let a = Matrix::from_fn(m, k, |_, _| rng.gen_range(255) as i64 - 127);
+    let b = Matrix::from_fn(k, n, |_, _| rng.gen_range(255) as i64 - 127);
+    let arr = Array3d::new(8, 8, 3);
+    let r = simulate_dos(&a, &b, &arr);
+    assert_eq!(r.output, matmul_i64(&a, &b));
+    let gg = Gemm::new(m as u64, n as u64, k as u64);
+    assert_eq!(r.trace.cycles, cycles_3d(&gg, &arr));
+    assert_eq!(r.trace, fast_activity(&gg, &arr));
+}
+
+#[test]
+fn power_thermal_area_compose_for_table2_config() {
+    let g = Gemm::new(128, 128, 300);
+    let arr3 = Array3d::new(128, 128, 3);
+    let tech = Tech::default();
+    for v in [VerticalTech::Tsv, VerticalTech::Miv] {
+        let p = power_summary(&g, &arr3, &tech, v);
+        assert!(p.total_w > 1.0 && p.total_w < 20.0);
+        let map = power_map(&g, &arr3, &tech, v);
+        assert_eq!(map.len(), 3);
+        let s = thermal_study(
+            &g,
+            &arr3,
+            &tech,
+            v,
+            &ThermalParams::default(),
+            thermal_footprint_m2(&arr3, &tech),
+        );
+        assert!(s.bottom.median > 45.0 && s.middle.unwrap().max < 110.0);
+        let a = total_area_m2(&arr3, &tech, v);
+        assert!(a > 0.0);
+    }
+}
+
+#[test]
+fn dse_sweep_over_random_workloads() {
+    let cfg = GeneratorConfig { count: 10, seed: 3, ..Default::default() };
+    let ws = random_workloads(&cfg);
+    let pts = sweep(&ws, &[1 << 14], &[1, 2, 4], VerticalTech::Miv, &Tech::default());
+    assert_eq!(pts.len(), 30);
+    for p in &pts {
+        assert!(p.speedup_vs_2d > 0.0);
+        assert!(p.power_w > 0.0);
+        if p.tiers == 1 {
+            assert!((p.speedup_vs_2d - 1.0).abs() < 1e-9);
+        }
+    }
+}
+
+#[test]
+fn eq1_eq2_consistency_across_module_boundaries() {
+    // The same formula must be seen by optimizer, simulator and DSE.
+    let g = Gemm::new(100, 80, 500);
+    let d = optimize_3d(&g, 2048, 4);
+    let arr = d.array3d();
+    assert_eq!(cycles_3d(&g, &arr), d.cycles);
+    let pt = evaluate_point(&g, 2048, 4, VerticalTech::Tsv, &Tech::default());
+    assert_eq!(pt.cycles, d.cycles);
+    let one_tier = optimize_3d(&g, 2048, 1);
+    assert_eq!(
+        cycles_2d(&g, &Array2d::new(one_tier.rows, one_tier.cols)),
+        one_tier.cycles
+    );
+}
+
+#[test]
+fn fig9_orderings_hold_across_budgets() {
+    let g = by_label("RN0").unwrap().gemm;
+    let tech = Tech::default();
+    for budget in [4096u64, 32768, 262144] {
+        for tiers in [2u64, 4, 8] {
+            let tsv = perf_per_area_vs_2d(&g, budget, tiers, &tech, VerticalTech::Tsv);
+            let miv = perf_per_area_vs_2d(&g, budget, tiers, &tech, VerticalTech::Miv);
+            assert!(miv > tsv, "MIV must beat TSV (budget {budget}, ℓ{tiers})");
+        }
+    }
+}
+
+#[test]
+fn thermal_orderings_for_fig8_sizes() {
+    // 3D > 2D and MIV > TSV at every Fig. 8 size.
+    let g = Gemm::new(128, 128, 300);
+    let tech = Tech::default();
+    let params = ThermalParams::default();
+    for (s3, s2) in [(64u64, 111u64), (128, 222)] {
+        let a2 = Array3d::new(s2, s2, 1);
+        let a3 = Array3d::new(s3, s3, 3);
+        let t2 = thermal_study(
+            &g, &a2, &tech, VerticalTech::Tsv, &params, thermal_footprint_m2(&a2, &tech),
+        );
+        let tsv = thermal_study(
+            &g, &a3, &tech, VerticalTech::Tsv, &params, thermal_footprint_m2(&a3, &tech),
+        );
+        let miv = thermal_study(
+            &g, &a3, &tech, VerticalTech::Miv, &params, thermal_footprint_m2(&a3, &tech),
+        );
+        let m2 = t2.bottom.median;
+        let mt = tsv.middle.unwrap().median;
+        let mm = miv.middle.unwrap().median;
+        assert!(mt > m2, "size {s3}: TSV 3D {mt} vs 2D {m2}");
+        assert!(mm > mt, "size {s3}: MIV {mm} vs TSV {mt}");
+    }
+}
+
+#[test]
+fn workload_generator_spans_resnet_space() {
+    let cfg = GeneratorConfig::from_resnet50(300, 0x3D_ACCE1);
+    let ws = random_workloads(&cfg);
+    assert_eq!(ws.len(), 300);
+    // The draw must produce both small and large K (log-uniform spread).
+    let small = ws.iter().filter(|g| g.k < 500).count();
+    let large = ws.iter().filter(|g| g.k > 2000).count();
+    assert!(small > 10 && large > 10, "small {small}, large {large}");
+}

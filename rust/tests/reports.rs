@@ -1,0 +1,126 @@
+//! Report harness: every paper table/figure regenerates, writes valid CSV +
+//! markdown, and the headline shape-observations hold.
+
+use cube3d::report;
+use std::path::PathBuf;
+
+fn out_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("cube3d_reports_{}_{name}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn table1_reproduces() {
+    let r = report::table1::report();
+    assert_eq!(r.csv.n_rows(), 8);
+    let d = out_dir("t1");
+    let (csv, md) = r.write_to(&d).unwrap();
+    assert!(csv.exists() && md.exists());
+    let text = std::fs::read_to_string(csv).unwrap();
+    assert!(text.contains("Resnet50,RN0,64,12100,147"));
+    std::fs::remove_dir_all(d).ok();
+}
+
+#[test]
+fn fig5_headline_in_band() {
+    let r = report::fig5::report();
+    // Paper: up to 9.16x at 12 tiers; our band 8.5–10.
+    let note = &r.notes[0];
+    let best: f64 = note
+        .split_whitespace()
+        .nth(2)
+        .unwrap()
+        .trim_end_matches('x')
+        .parse()
+        .unwrap();
+    assert!((8.5..=10.0).contains(&best), "{note}");
+    // 2-tier within 1.7–2.1 (paper 1.93).
+    let two: f64 = r.notes[1]
+        .split_whitespace()
+        .nth(3)
+        .unwrap()
+        .trim_end_matches('x')
+        .parse()
+        .unwrap();
+    assert!((1.7..=2.1).contains(&two), "{}", r.notes[1]);
+}
+
+#[test]
+fn fig6_threshold_and_band() {
+    let r = report::fig6::report();
+    // Max speedup at 4 tiers should be in the low single digits (paper 3.13x).
+    let last = r.notes.last().unwrap();
+    let max: f64 = last
+        .split("max speedup at 4 tiers: ")
+        .nth(1)
+        .unwrap()
+        .trim_end_matches(|c: char| !c.is_ascii_digit() && c != '.')
+        .split('x')
+        .next()
+        .unwrap()
+        .parse()
+        .unwrap();
+    assert!((2.0..=4.5).contains(&max), "{last}");
+}
+
+#[test]
+fn fig7_median_shift() {
+    let r = report::fig7::report();
+    assert_eq!(r.csv.n_rows(), 900);
+    assert!(r.notes[0].contains("shifts right"));
+}
+
+#[test]
+fn table2_power_ordering() {
+    let r = report::table2::report();
+    assert_eq!(r.csv.n_rows(), 3);
+    // Both 3D rows must show negative delta vs 2D.
+    let text = r.csv.to_string();
+    let lines: Vec<&str> = text.lines().collect();
+    for line in &lines[2..4] {
+        let delta: f64 = line.split(',').nth(2).unwrap().parse().unwrap();
+        assert!(delta < 0.0, "expected 3D below 2D: {line}");
+    }
+}
+
+#[test]
+fn fig8_within_budget() {
+    let r = report::fig8::report();
+    assert_eq!(r.csv.n_rows(), 15);
+    // Every max temperature below 110 °C.
+    for line in r.csv.to_string().lines().skip(1) {
+        let max: f64 = line.split(',').nth(6).unwrap().parse().unwrap();
+        assert!(max < 110.0, "{line}");
+        assert!(max > 45.0, "{line}");
+    }
+}
+
+#[test]
+fn fig9_bands() {
+    let r = report::fig9::report();
+    // TSV loses at 4096 MACs, MIV reaches 5–10x at 262144.
+    assert!(r.notes[0].contains("0."), "{}", r.notes[0]);
+    let miv: f64 = r.notes[2]
+        .split("up to ")
+        .nth(1)
+        .unwrap()
+        .split('x')
+        .next()
+        .unwrap()
+        .parse()
+        .unwrap();
+    assert!((5.0..=10.0).contains(&miv), "{}", r.notes[2]);
+}
+
+#[test]
+fn reproduce_all_writes_everything() {
+    let d = out_dir("all");
+    let reports = report::reproduce_all(&d).unwrap();
+    assert_eq!(reports.len(), 7);
+    for id in ["table1", "fig5", "fig6", "fig7", "table2", "fig8", "fig9"] {
+        assert!(d.join(format!("{id}.csv")).exists(), "{id}.csv");
+        assert!(d.join(format!("{id}.md")).exists(), "{id}.md");
+    }
+    std::fs::remove_dir_all(d).ok();
+}

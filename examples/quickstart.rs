@@ -1,37 +1,45 @@
 //! Quickstart: the paper's core result in 40 lines.
 //!
 //! 1. Take ResNet-50 layer RN0 (Table I: M=64, N=147, K=12100).
-//! 2. Optimize a 2D and a 12-tier 3D array under the same 2^18-MAC budget.
+//! 2. Evaluate a 12-tier scenario under a 2^18-MAC budget through the
+//!    unified `Evaluator` (2D baseline + 3D design in one metric bundle).
 //! 3. Show the 3D speedup (paper: up to 9.16x).
-//! 4. Execute the same dOS GEMM numerically through the AOT Pallas artifact
-//!    on PJRT and check it against a Rust reference matmul.
+//! 4. Execute the same dOS GEMM numerically through the runtime backend
+//!    (interpreter by default; `--features pjrt` needs the vendored `xla`
+//!    crate — see DESIGN.md §6) and check it against a Rust reference
+//!    matmul.
 //!
-//! Run: `make artifacts && cargo run --release --example quickstart`
+//! Run: `cargo run --release --example quickstart`
 
-use cube3d::analytical::{optimize_2d, optimize_3d};
+use cube3d::eval::{Evaluator, Scenario};
 use cube3d::runtime::{find_artifact_dir, Runtime};
 use cube3d::sim::{matmul_f32, Matrix};
 use cube3d::util::rng::Rng;
-use cube3d::workloads::by_label;
 
 fn main() -> anyhow::Result<()> {
     // --- Analytical: Eq. 1 vs Eq. 2 under a 2^18 MAC budget. ---
-    let g = by_label("RN0").unwrap().gemm;
-    let budget = 1u64 << 18;
-    let d2 = optimize_2d(&g, budget);
-    let d3 = optimize_3d(&g, budget, 12);
-    println!("workload RN0: {g}");
+    let evaluator = Evaluator::new();
+    let s = Scenario::builder()
+        .layer("RN0")?
+        .mac_budget(1 << 18)
+        .tiers(12)
+        .build()?;
+    let m = evaluator.evaluate(&s);
+    let d2 = m.design_2d.unwrap();
+    let d3 = m.design_3d.unwrap();
+    println!("workload {}", s.workload.description());
     println!("  2D optimum : {}x{}       -> {} cycles", d2.rows, d2.cols, d2.cycles);
     println!("  3D optimum : {}x{} x12   -> {} cycles", d3.rows, d3.cols, d3.cycles);
     println!(
-        "  3D speedup : {:.2}x (paper: up to 9.16x at 12 tiers)\n",
-        d2.cycles as f64 / d3.cycles as f64
+        "  3D speedup : {:.2}x (paper: up to 9.16x at 12 tiers)   power {:.2} W\n",
+        m.speedup_vs_2d.unwrap(),
+        m.power_w().unwrap()
     );
 
-    // --- Functional: the dOS Pallas kernel through PJRT. ---
+    // --- Functional: the dOS kernel through the runtime backend. ---
     let dir = find_artifact_dir()?;
     let mut rt = Runtime::new(&dir)?;
-    println!("PJRT platform: {}", rt.platform());
+    println!("runtime platform: {}", rt.platform());
     let mut rng = Rng::new(7);
     let a = Matrix::from_fn(64, 256, |_, _| (rng.gen_range(100) as f32 - 50.0) / 25.0);
     let b = Matrix::from_fn(256, 96, |_, _| (rng.gen_range(100) as f32 - 50.0) / 25.0);
@@ -43,7 +51,7 @@ fn main() -> anyhow::Result<()> {
             max_err = max_err.max((got.get(i, j) - want.get(i, j)).abs());
         }
     }
-    println!("dOS GEMM (4 tiers) on PJRT: max |err| vs reference = {max_err:.2e}");
+    println!("dOS GEMM (4 tiers): max |err| vs reference = {max_err:.2e}");
     assert!(max_err < 1e-3);
     println!("quickstart OK");
     Ok(())

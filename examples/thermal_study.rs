@@ -1,19 +1,19 @@
 //! Physical-design study: power + thermal + area for the paper's Table II /
-//! Fig. 8 configuration family, comparing 2D vs 3D-TSV vs 3D-MIV.
+//! Fig. 8 configuration family, comparing 2D vs 3D-TSV vs 3D-MIV — one
+//! pinned-array scenario per configuration through the full evaluator
+//! pipeline (analytical + area + power + thermal).
 //!
 //! Run: `cargo run --release --example thermal_study`
 
 use cube3d::analytical::Array3d;
-use cube3d::area::total_area_m2;
-use cube3d::power::{power_summary, Tech, VerticalTech};
-use cube3d::thermal::{thermal_footprint_m2, thermal_study, ThermalParams};
+use cube3d::eval::{shared_full_evaluator, Scenario};
+use cube3d::power::VerticalTech;
 use cube3d::util::table::Table;
 use cube3d::workloads::Gemm;
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     let g = Gemm::new(128, 128, 300); // the paper's PPA workload
-    let tech = Tech::default();
-    let params = ThermalParams::default();
+    let evaluator = shared_full_evaluator();
 
     let configs: Vec<(String, Array3d, VerticalTech)> = vec![
         ("2D 49284".into(), Array3d::new(222, 222, 1), VerticalTech::Tsv),
@@ -27,8 +27,10 @@ fn main() {
         "config", "power W", "peak W", "silicon mm²", "T bottom °C", "T middle °C", "T max °C",
     ]);
     for (label, arr, v) in configs {
-        let p = power_summary(&g, &arr, &tech, v);
-        let s = thermal_study(&g, &arr, &tech, v, &params, thermal_footprint_m2(&arr, &tech));
+        let scenario = Scenario::builder().gemm(g).array(arr).vtech(v).build()?;
+        let m = evaluator.evaluate(&scenario);
+        let p = m.power.unwrap();
+        let s = m.thermal.as_ref().unwrap();
         let (mid, max) = match &s.middle {
             Some(m) => (format!("{:.1}", m.median), m.max.max(s.bottom.max)),
             None => ("-".into(), s.bottom.max),
@@ -37,7 +39,7 @@ fn main() {
             label,
             format!("{:.2}", p.total_w),
             format!("{:.2}", p.peak_w),
-            format!("{:.2}", total_area_m2(&arr, &tech, v) * 1e6),
+            format!("{:.2}", m.area_m2.unwrap() * 1e6),
             format!("{:.1}", s.bottom.median),
             mid,
             format!("{max:.1}"),
@@ -48,4 +50,5 @@ fn main() {
     println!("expected shape (paper Fig. 8 / Table II):");
     println!("  power:  2D > 3D-TSV > 3D-MIV (dataflow effect, not static)");
     println!("  temps:  3D > 2D; MIV > TSV; larger arrays hotter; all within budget");
+    Ok(())
 }

@@ -1,6 +1,7 @@
 //! Bench F5: regenerate Fig. 5 (speedup vs tier count) and time the
-//! analytical sweep that produces it.
+//! analytical sweep that produces it, plus the evaluator's cache effect.
 
+use cube3d::eval::{Evaluator, Scenario};
 use cube3d::report::fig5;
 use cube3d::util::bench::{black_box, Bench};
 
@@ -13,18 +14,29 @@ fn main() {
     }
     println!();
 
+    let g = cube3d::workloads::Gemm::new(64, 147, 12100);
+    let scenarios: Vec<Scenario> = fig5::TIERS
+        .iter()
+        .map(|&t| Scenario::builder().gemm(g).mac_budget(1 << 18).tiers(t).build().unwrap())
+        .collect();
+
     let mut b = Bench::default();
     b.run("fig5/full_report", || {
         black_box(fig5::report());
     });
-    b.run("fig5/single_tier_sweep_2^18", || {
-        let g = cube3d::workloads::Gemm::new(64, 147, 12100);
-        black_box(cube3d::analytical::tier_sweep(&g, 1 << 18, &fig5::TIERS));
+    // Cold vs warm evaluator: the cache turns a tier sweep into hash lookups.
+    b.run("fig5/tier_sweep_cold_evaluator", || {
+        let ev = Evaluator::performance();
+        black_box(ev.evaluate_batch(&scenarios));
+    });
+    let warm = Evaluator::performance();
+    warm.evaluate_batch(&scenarios);
+    b.run("fig5/tier_sweep_warm_cache", || {
+        black_box(warm.evaluate_batch(&scenarios));
     });
 
     // §Perf before/after: the optimizer's √-breakpoint candidate walk vs the
-    // full O(budget) row scan it replaced (EXPERIMENTS.md §Perf, L3 row 1).
-    let g = cube3d::workloads::Gemm::new(64, 147, 12100);
+    // full O(budget) row scan it replaced (DESIGN.md §Perf, L3 row 1).
     b.run("perf/optimize_2d_fast_2^18", || {
         black_box(cube3d::analytical::optimize_2d(&g, 1 << 18));
     });

@@ -1,7 +1,7 @@
 //! Bench F6: regenerate Fig. 6 (speedup vs MAC budget, threshold M·N) and
-//! time the budget sweep.
+//! time the budget sweep through the evaluator.
 
-use cube3d::analytical::speedup_3d_over_2d;
+use cube3d::eval::{shared_performance_evaluator, Scenario};
 use cube3d::report::fig6;
 use cube3d::util::bench::{black_box, Bench};
 use cube3d::workloads::Gemm;
@@ -19,8 +19,20 @@ fn main() {
     b.run("fig6/full_report", || {
         black_box(fig6::report());
     });
-    let g = Gemm::new(64, 1024, 12100);
-    b.run("fig6/one_point_2^20", || {
-        black_box(speedup_3d_over_2d(&g, 1 << 20, 4));
+    let evaluator = shared_performance_evaluator();
+    let s = Scenario::builder()
+        .gemm(Gemm::new(64, 1024, 12100))
+        .mac_budget(1 << 20)
+        .tiers(4)
+        .build()
+        .unwrap();
+    b.run("fig6/one_point_2^20_warm_cache", || {
+        black_box(evaluator.evaluate(&s).speedup_vs_2d);
     });
+    println!(
+        "evaluator cache: {} points, {} hits / {} misses",
+        evaluator.cache_len(),
+        evaluator.cache_hits(),
+        evaluator.cache_misses()
+    );
 }

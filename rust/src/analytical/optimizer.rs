@@ -9,7 +9,7 @@
 //! `⌈M/f⌉`, strictly dominates all larger ones (same folds, shorter
 //! fill/drain, looser budget for the other axis). The candidate set is
 //! therefore `{⌈M/f⌉}` × `{⌈N/f⌉}`, O(√M·√N) evaluations — this is the L3
-//! hot-path optimization recorded in EXPERIMENTS.md §Perf.
+//! hot-path optimization recorded in DESIGN.md §Perf.
 
 use super::model::{cycles_3d, Array2d, Array3d};
 use crate::workloads::Gemm;
@@ -43,32 +43,26 @@ impl OptimalDesign {
 /// `τ(R) = (2R + ⌊p/R⌋ + T − 2)·⌈M/R⌉·⌈N/⌊p/R⌋⌉`, only changes behaviour at
 /// O(√p + √M) breakpoints: the distinct values of `⌊p/R⌋` and of `⌈M/R⌉`.
 /// We enumerate exactly those (plus both boundary sides of each breakpoint),
-/// which is the L3 hot-path optimization logged in EXPERIMENTS.md §Perf.
-#[allow(dead_code)] // documentation + test reference; optimize_tier streams the same set
-fn row_candidates(m_dim: u64, p: u64) -> Vec<u64> {
-    let mut out = Vec::new();
+/// which is the L3 hot-path optimization logged in DESIGN.md §Perf.
+///
+/// Streaming, no allocation: [`optimize_tier`] consumes this iterator
+/// directly (the optimizer runs ~10^4 times per Fig. 7 sweep), and the tests
+/// cover the exact same candidate set.
+///
+/// §Perf note: candidates may repeat and may fall outside `1..=p` — no
+/// sort/dedup. Evaluating a duplicate costs a few ns (Eq. 2 is closed-form)
+/// while sorting ~2k entries dominated the optimizer's profile (~40% of its
+/// runtime); the consumer filters to range, which is all correctness needs.
+fn row_candidates(m_dim: u64, p: u64) -> impl Iterator<Item = u64> {
     // Divisor-structure breakpoints of ⌊p/R⌋ and of ⌈M/R⌉: both are
-    // captured by the classic two-branch √ walk on each of p and M.
-    let push_breaks = |d: u64, out: &mut Vec<u64>| {
-        let mut v = 1u64;
-        while v * v <= d {
-            out.push(v);
-            out.push(d / v);
-            // Neighbors so both sides of each plateau are explored.
-            out.push((d / v).saturating_add(1));
-            v += 1;
-        }
+    // captured by the classic two-branch √ walk on each of p and M
+    // (plus the neighbor above each plateau, so both sides are explored).
+    let breaks = |d: u64| {
+        (1u64..)
+            .take_while(move |v| v * v <= d)
+            .flat_map(move |v| [v, d / v, (d / v).saturating_add(1)])
     };
-    push_breaks(p, &mut out);
-    push_breaks(m_dim, &mut out);
-    out.push(1);
-    out.push(p);
-    // §Perf note: no sort/dedup — evaluating a duplicate candidate costs a
-    // few ns (Eq. 2 is closed-form) while sorting ~2k entries dominated the
-    // optimizer's profile (~40% of its runtime). Filtering to range is all
-    // that's needed for correctness.
-    out.retain(|&r| r >= 1 && r <= p);
-    out
+    breaks(p).chain(breaks(m_dim)).chain([1, p])
 }
 
 /// Optimize a 2D array that instantiates `mac_budget` MACs for workload `g`
@@ -91,16 +85,13 @@ pub fn optimize_3d(g: &Gemm, mac_budget: u64, tiers: u64) -> OptimalDesign {
 
 fn optimize_tier(g: &Gemm, per_tier: u64, tiers: u64) -> OptimalDesign {
     let mut best: Option<OptimalDesign> = None;
-    // §Perf note: candidates are streamed straight into the evaluator — no
-    // per-call Vec allocation (this optimizer runs ~10^4 times per Fig. 7
-    // sweep). Same candidate set as `row_candidates` (kept for tests/docs).
-    let mut consider = |r: u64| {
+    for r in row_candidates(g.m, per_tier) {
         if r < 1 || r > per_tier {
-            return;
+            continue;
         }
         let c = per_tier / r;
         if c == 0 {
-            return;
+            continue;
         }
         let a = Array3d::new(r, c, tiers);
         let cyc = cycles_3d(g, &a);
@@ -116,23 +107,7 @@ fn optimize_tier(g: &Gemm, per_tier: u64, tiers: u64) -> OptimalDesign {
         }) {
             best = Some(cand);
         }
-    };
-    let mut v = 1u64;
-    while v * v <= per_tier {
-        consider(v);
-        consider(per_tier / v);
-        consider(per_tier / v + 1);
-        v += 1;
     }
-    let mut v = 1u64;
-    while v * v <= g.m {
-        consider(v);
-        consider(g.m / v);
-        consider(g.m / v + 1);
-        v += 1;
-    }
-    consider(1);
-    consider(per_tier);
     best.expect("optimizer found no design (budget >= 1 guarantees 1x1)")
 }
 
@@ -155,7 +130,7 @@ mod tests {
 
     #[test]
     fn row_candidates_cover_breakpoints() {
-        let c = row_candidates(147, 4096);
+        let c: Vec<u64> = row_candidates(147, 4096).collect();
         // Extremes and √-region values must be present.
         for v in [1u64, 64, 147, 4096] {
             assert!(c.contains(&v), "missing {v}");

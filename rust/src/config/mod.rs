@@ -1,7 +1,9 @@
 //! Experiment configuration: JSON-backed config system for the CLI, DSE
 //! engine and serving coordinator.
 //!
-//! A config file fully describes a reproduction run:
+//! A config file fully describes a reproduction run. The `workload` field
+//! accepts four forms — a raw GEMM, a Table I layer, a named full-network
+//! trace, or a hand-assembled trace:
 //!
 //! ```json
 //! {
@@ -14,18 +16,198 @@
 //! }
 //! ```
 //!
-//! Unknown keys are rejected so typos fail loudly.
+//! ```json
+//! {"workload": {"layer": "RN0"}}
+//! {"workload": {"model": "resnet50", "batch": 1}}
+//! {"workload": {"trace": [{"name": "l0", "m": 64, "n": 96, "k": 256}]}}
+//! ```
+//!
+//! Unknown keys are rejected so typos fail loudly. A config expands into
+//! [`crate::eval::Scenario`]s via [`crate::eval::Scenario::expand_config`].
 
 use crate::power::VerticalTech;
-use crate::util::json::Json;
-use crate::workloads::Gemm;
+use crate::util::cli::Args;
+use crate::util::json::{obj, Json};
+use crate::workloads::{Gemm, LayerSpec, Workload};
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::Path;
+
+/// Declarative workload specification — the `workload` field of a config.
+/// Resolved into a [`Workload`] (possibly a full layer trace) on demand.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadSpec {
+    /// Explicit GEMM dimensions.
+    Gemm(Gemm),
+    /// A Table I layer label (`"RN0"`, `"GNMT1"`, ...).
+    Layer(String),
+    /// A named full-network trace (`resnet50` | `gnmt` | `transformer` |
+    /// `deepbench`) at a batch size.
+    Model { name: String, batch: u64 },
+    /// A hand-assembled trace of named GEMM shapes.
+    Trace(Vec<LayerSpec>),
+}
+
+impl WorkloadSpec {
+    /// Resolve the spec into a concrete workload, erroring on unknown
+    /// layer labels / model names and empty traces.
+    pub fn resolve(&self) -> Result<Workload> {
+        match self {
+            WorkloadSpec::Gemm(g) => Ok(Workload::gemm(*g)),
+            WorkloadSpec::Layer(label) => Workload::layer(label)
+                .ok_or_else(|| anyhow!("unknown Table I layer '{label}'")),
+            WorkloadSpec::Model { name, batch } => {
+                if *batch == 0 {
+                    bail!("model batch must be ≥ 1 (got 0)");
+                }
+                Workload::model(name, *batch).ok_or_else(|| {
+                    anyhow!("unknown model '{name}' (resnet50|gnmt|transformer|deepbench)")
+                })
+            }
+            WorkloadSpec::Trace(layers) => {
+                if layers.is_empty() {
+                    bail!("trace workload must have at least one layer");
+                }
+                Ok(Workload::custom_trace("trace", layers.clone()))
+            }
+        }
+    }
+
+    /// Build the spec from CLI options: `--layer` wins, then `--model`
+    /// (with `--batch`), then `--m/--n/--k` with RN0 defaults.
+    pub fn from_args(args: &Args) -> Result<Self> {
+        if let Some(label) = args.get("layer") {
+            return Ok(WorkloadSpec::Layer(label.to_string()));
+        }
+        if let Some(name) = args.get("model") {
+            return Ok(WorkloadSpec::Model {
+                name: name.to_string(),
+                batch: args.get_u64_or("batch", 1)?,
+            });
+        }
+        Ok(WorkloadSpec::Gemm(gemm_from_dims(
+            args.get_u64_or("m", 64)?,
+            args.get_u64_or("n", 147)?,
+            args.get_u64_or("k", 12100)?,
+        )?))
+    }
+
+    fn from_json(w: &Json) -> Result<Self> {
+        let o = w.as_obj().ok_or_else(|| anyhow!("workload must be a JSON object"))?;
+        let keys: Vec<&str> = o.keys().map(String::as_str).collect();
+        let allow = |allowed: &[&str]| -> Result<()> {
+            for k in &keys {
+                if !allowed.contains(k) {
+                    bail!("unknown workload key '{k}' (allowed here: {allowed:?})");
+                }
+            }
+            Ok(())
+        };
+        if o.contains_key("layer") {
+            allow(&["layer"])?;
+            let label = w
+                .get("layer")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("workload.layer must be a string"))?;
+            return Ok(WorkloadSpec::Layer(label.to_string()));
+        }
+        if o.contains_key("model") {
+            allow(&["model", "batch"])?;
+            let name = w
+                .get("model")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("workload.model must be a string"))?;
+            let batch = match w.get("batch") {
+                None => 1,
+                Some(b) => b.as_u64().ok_or_else(|| anyhow!("workload.batch"))?,
+            };
+            return Ok(WorkloadSpec::Model { name: name.to_string(), batch });
+        }
+        if o.contains_key("trace") {
+            allow(&["trace"])?;
+            let arr = w
+                .get("trace")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("workload.trace must be an array"))?;
+            let layers = arr
+                .iter()
+                .enumerate()
+                .map(|(i, l)| {
+                    let lo = l.as_obj().ok_or_else(|| anyhow!("trace[{i}] must be an object"))?;
+                    for k in lo.keys() {
+                        if !["name", "m", "n", "k"].contains(&k.as_str()) {
+                            bail!("unknown trace[{i}] key '{k}'");
+                        }
+                    }
+                    let dim = |key: &str| -> Result<u64> {
+                        l.get(key)
+                            .and_then(Json::as_u64)
+                            .ok_or_else(|| anyhow!("trace[{i}].{key}"))
+                    };
+                    let name = match l.get("name") {
+                        None => format!("layer{i}"),
+                        Some(n) => n
+                            .as_str()
+                            .ok_or_else(|| anyhow!("trace[{i}].name must be a string"))?
+                            .to_string(),
+                    };
+                    Ok(LayerSpec::custom(
+                        &name,
+                        gemm_from_dims(dim("m")?, dim("n")?, dim("k")?)?,
+                    ))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            return Ok(WorkloadSpec::Trace(layers));
+        }
+        allow(&["m", "n", "k"])?;
+        let dim = |key: &str| -> Result<u64> {
+            w.get(key)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("workload.{key}"))
+        };
+        Ok(WorkloadSpec::Gemm(gemm_from_dims(dim("m")?, dim("n")?, dim("k")?)?))
+    }
+
+    fn to_json(&self) -> Json {
+        let num = |v: u64| Json::Num(v as f64);
+        match self {
+            WorkloadSpec::Gemm(g) => obj([("m", num(g.m)), ("n", num(g.n)), ("k", num(g.k))]),
+            WorkloadSpec::Layer(l) => obj([("layer", Json::Str(l.clone()))]),
+            WorkloadSpec::Model { name, batch } => {
+                obj([("model", Json::Str(name.clone())), ("batch", num(*batch))])
+            }
+            WorkloadSpec::Trace(layers) => obj([(
+                "trace",
+                Json::Arr(
+                    layers
+                        .iter()
+                        .map(|l| {
+                            obj([
+                                ("name", Json::Str(l.name.clone())),
+                                ("m", num(l.gemm.m)),
+                                ("n", num(l.gemm.n)),
+                                ("k", num(l.gemm.k)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            )]),
+        }
+    }
+}
+
+/// Validated [`Gemm`] construction — errors instead of panicking on zero dims
+/// so hostile configs fail cleanly.
+fn gemm_from_dims(m: u64, n: u64, k: u64) -> Result<Gemm> {
+    if m == 0 || n == 0 || k == 0 {
+        bail!("GEMM dims must be positive (got M={m} N={n} K={k})");
+    }
+    Ok(Gemm::new(m, n, k))
+}
 
 /// A fully resolved experiment configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExperimentConfig {
-    pub workload: Gemm,
+    pub workload: WorkloadSpec,
     pub mac_budgets: Vec<u64>,
     pub tiers: Vec<u64>,
     pub vertical_tech: VerticalTech,
@@ -36,7 +218,7 @@ pub struct ExperimentConfig {
 impl Default for ExperimentConfig {
     fn default() -> Self {
         ExperimentConfig {
-            workload: Gemm::new(64, 147, 12100), // RN0
+            workload: WorkloadSpec::Gemm(Gemm::new(64, 147, 12100)), // RN0
             mac_budgets: vec![1 << 12, 1 << 15, 1 << 18],
             tiers: vec![1, 2, 3, 4, 6, 8, 10, 12],
             vertical_tech: VerticalTech::Tsv,
@@ -66,10 +248,7 @@ impl ExperimentConfig {
         }
         let mut cfg = ExperimentConfig::default();
         if let Some(w) = doc.get("workload") {
-            let m = w.get("m").and_then(Json::as_u64).ok_or_else(|| anyhow!("workload.m"))?;
-            let n = w.get("n").and_then(Json::as_u64).ok_or_else(|| anyhow!("workload.n"))?;
-            let k = w.get("k").and_then(Json::as_u64).ok_or_else(|| anyhow!("workload.k"))?;
-            cfg.workload = Gemm::new(m, n, k);
+            cfg.workload = WorkloadSpec::from_json(w).context("workload")?;
         }
         if let Some(b) = doc.get("mac_budgets") {
             cfg.mac_budgets = parse_u64_array(b).context("mac_budgets")?;
@@ -101,7 +280,28 @@ impl ExperimentConfig {
         Self::from_json(&doc)
     }
 
-    /// Sanity-check ranges.
+    /// Serialize back to JSON. `from_json(to_json(cfg)) == cfg` round-trips.
+    pub fn to_json(&self) -> Json {
+        obj([
+            ("workload", self.workload.to_json()),
+            (
+                "mac_budgets",
+                Json::Arr(self.mac_budgets.iter().map(|&b| Json::Num(b as f64)).collect()),
+            ),
+            (
+                "tiers",
+                Json::Arr(self.tiers.iter().map(|&t| Json::Num(t as f64)).collect()),
+            ),
+            (
+                "vertical_tech",
+                Json::Str(self.vertical_tech.name().to_ascii_lowercase()),
+            ),
+            ("seed", Json::Num(self.seed as f64)),
+            ("out_dir", Json::Str(self.out_dir.clone())),
+        ])
+    }
+
+    /// Sanity-check ranges and resolve the workload spec.
     pub fn validate(&self) -> Result<()> {
         if self.mac_budgets.is_empty() || self.tiers.is_empty() {
             bail!("mac_budgets and tiers must be non-empty");
@@ -121,7 +321,7 @@ impl ExperimentConfig {
                 );
             }
         }
-        Ok(())
+        self.workload.resolve().map(|_| ())
     }
 }
 
@@ -156,7 +356,7 @@ mod tests {
         )
         .unwrap();
         let cfg = ExperimentConfig::from_json(&doc).unwrap();
-        assert_eq!(cfg.workload, Gemm::new(10, 20, 30));
+        assert_eq!(cfg.workload, WorkloadSpec::Gemm(Gemm::new(10, 20, 30)));
         assert_eq!(cfg.vertical_tech, VerticalTech::Miv);
         assert_eq!(cfg.seed, 3);
         assert_eq!(cfg.out_dir, "x");
@@ -172,6 +372,75 @@ mod tests {
     fn rejects_unknown_keys() {
         let doc = Json::parse(r#"{"workloda": 1}"#).unwrap();
         assert!(ExperimentConfig::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_workload_keys() {
+        let doc = Json::parse(r#"{"workload": {"m": 1, "n": 1, "kk": 1}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&doc).is_err());
+        let doc = Json::parse(r#"{"workload": {"layer": "RN0", "m": 4}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn rejects_zero_dims_cleanly() {
+        let doc = Json::parse(r#"{"workload": {"m": 0, "n": 1, "k": 1}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn parses_layer_workload() {
+        let doc = Json::parse(r#"{"workload": {"layer": "RN0"}}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&doc).unwrap();
+        let w = cfg.workload.resolve().unwrap();
+        assert_eq!(w.primary_gemm(), Gemm::new(64, 147, 12100));
+        let bad = Json::parse(r#"{"workload": {"layer": "NOPE"}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn parses_model_workload() {
+        let doc = Json::parse(r#"{"workload": {"model": "resnet50", "batch": 2}}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&doc).unwrap();
+        let w = cfg.workload.resolve().unwrap();
+        assert_eq!(w.n_layers(), 54);
+        let bad = Json::parse(r#"{"workload": {"model": "vgg"}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&bad).is_err());
+        let zero = Json::parse(r#"{"workload": {"model": "resnet50", "batch": 0}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&zero).is_err(), "batch 0 must fail loudly");
+    }
+
+    #[test]
+    fn parses_trace_workload() {
+        let doc = Json::parse(
+            r#"{"workload": {"trace": [
+                {"name": "a", "m": 4, "n": 5, "k": 6},
+                {"m": 7, "n": 8, "k": 9}
+            ]}}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&doc).unwrap();
+        let w = cfg.workload.resolve().unwrap();
+        assert_eq!(w.n_layers(), 2);
+        assert_eq!(w.gemms()[1], Gemm::new(7, 8, 9));
+        let empty = Json::parse(r#"{"workload": {"trace": []}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&empty).is_err());
+    }
+
+    #[test]
+    fn json_round_trips_every_workload_form() {
+        for w in [
+            r#"{"m": 10, "n": 20, "k": 30}"#.to_string(),
+            r#"{"layer": "GNMT1"}"#.to_string(),
+            r#"{"model": "transformer", "batch": 4}"#.to_string(),
+            r#"{"trace": [{"name": "a", "m": 4, "n": 5, "k": 6}]}"#.to_string(),
+        ] {
+            let doc = Json::parse(&format!(r#"{{"workload": {w}}}"#)).unwrap();
+            let cfg = ExperimentConfig::from_json(&doc).unwrap();
+            let re = ExperimentConfig::from_json(&Json::parse(&cfg.to_json().to_string_pretty()).unwrap())
+                .unwrap();
+            assert_eq!(cfg, re, "round-trip failed for {w}");
+        }
     }
 
     #[test]

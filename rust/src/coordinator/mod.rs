@@ -8,10 +8,11 @@
 //! dispatch, and a single **executor** thread owns the PJRT runtime and
 //! drains batches, returning results over channels.
 //!
-//! The router also consults the analytical model (Eq. 2 + optimizer) to
-//! annotate every job with the 3D design the paper's methodology would pick
-//! for it — the serving example reports both measured latency and the
-//! modeled 2D→3D speedup per request.
+//! The router also consults the shared cached [`crate::eval::Evaluator`]
+//! (Eq. 2 + optimizer behind the scenario pipeline) to annotate every job
+//! with the 3D design the paper's methodology would pick for it — the
+//! serving example reports both measured latency and the modeled 2D→3D
+//! speedup per request, and repeated shapes never re-optimize.
 
 mod batcher;
 mod job;

@@ -1,9 +1,15 @@
 //! Request router: shape → execution plan + 3D design annotation.
+//!
+//! Design annotations come from the process-wide shared
+//! [`crate::eval::Evaluator`] — repeated shapes across jobs (and across
+//! routers) hit its design-point cache instead of re-optimizing.
 
-use crate::analytical::{optimal_tier_count, optimize_2d, optimize_3d, OptimalDesign};
+use crate::analytical::OptimalDesign;
+use crate::eval::{shared_performance_evaluator, Evaluator, Scenario};
 use crate::runtime::Manifest;
 use crate::workloads::Gemm;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Routing policy parameters.
 #[derive(Debug, Clone)]
@@ -44,18 +50,27 @@ impl ExecutionPlan {
     }
 }
 
-/// The router: caches per-shape decisions (plan + modeled 3D design).
+/// The router: plans execution per shape and annotates jobs with the 3D
+/// design the paper's methodology picks, via the shared cached evaluator.
 pub struct Router {
     cfg: RouterConfig,
     /// Exact-shape index: (m, k, n) → artifact name.
     exact: HashMap<(u64, u64, u64), String>,
-    /// Design cache: workload → (design, speedup).
-    designs: HashMap<Gemm, (OptimalDesign, f64)>,
+    evaluator: Arc<Evaluator>,
 }
 
 impl Router {
-    /// Build the exact-shape index from the artifact manifest.
+    /// Build the exact-shape index from the artifact manifest; design
+    /// lookups go through the process-wide shared analytical evaluator
+    /// (the router only needs designs and speedups — no area/power cost
+    /// on the serving path).
     pub fn new(cfg: RouterConfig, manifest: &Manifest) -> Self {
+        Self::with_evaluator(cfg, manifest, shared_performance_evaluator())
+    }
+
+    /// Like [`Router::new`] with an explicit evaluator (tests, custom
+    /// pipelines).
+    pub fn with_evaluator(cfg: RouterConfig, manifest: &Manifest, evaluator: Arc<Evaluator>) -> Self {
         let mut exact = HashMap::new();
         for name in manifest.names() {
             let meta = manifest.get(name).unwrap();
@@ -65,7 +80,7 @@ impl Router {
                 exact.insert((m, k, n), name.to_string());
             }
         }
-        Router { cfg, exact, designs: HashMap::new() }
+        Router { cfg, exact, evaluator }
     }
 
     /// Choose the execution plan for a workload shape.
@@ -78,17 +93,20 @@ impl Router {
     }
 
     /// The 3D design the paper's methodology picks for this shape under the
-    /// router's MAC budget, plus its modeled speedup over 2D. Cached.
-    pub fn design_for(&mut self, g: &Gemm) -> (OptimalDesign, f64) {
-        if let Some(hit) = self.designs.get(g) {
-            return *hit;
-        }
-        let tiers = optimal_tier_count(g, self.cfg.mac_budget, self.cfg.max_tiers);
-        let d3 = optimize_3d(g, self.cfg.mac_budget, tiers);
-        let d2 = optimize_2d(g, self.cfg.mac_budget);
-        let speedup = d2.cycles as f64 / d3.cycles as f64;
-        self.designs.insert(*g, (d3, speedup));
-        (d3, speedup)
+    /// router's MAC budget (tier count auto-optimized), plus its modeled
+    /// speedup over 2D. Cached in the shared evaluator.
+    pub fn design_for(&self, g: &Gemm) -> (OptimalDesign, f64) {
+        let s = Scenario::builder()
+            .gemm(*g)
+            .mac_budget(self.cfg.mac_budget)
+            .tiers_auto(self.cfg.max_tiers)
+            .build()
+            .expect("router design scenario is always valid");
+        let m = self.evaluator.evaluate(&s);
+        (
+            m.design_3d.expect("analytical model in pipeline"),
+            m.speedup_vs_2d.expect("optimized point has a 2D baseline"),
+        )
     }
 
     pub fn config(&self) -> &RouterConfig {
@@ -146,12 +164,17 @@ mod tests {
 
     #[test]
     fn design_cache_hits() {
-        let mut r = Router::new(RouterConfig::default(), &manifest_fixture());
+        // Private evaluator so hit counts are deterministic under `cargo
+        // test`'s parallelism.
+        let ev = Arc::new(Evaluator::performance());
+        let r = Router::with_evaluator(RouterConfig::default(), &manifest_fixture(), ev.clone());
         let g = Gemm::new(64, 147, 12100);
         let (d1, s1) = r.design_for(&g);
+        assert_eq!(ev.cache_misses(), 1);
         let (d2, s2) = r.design_for(&g);
         assert_eq!(d1, d2);
         assert_eq!(s1, s2);
+        assert_eq!(ev.cache_hits(), 1, "repeated lookup must hit the cache");
         assert!(s1 > 5.0, "RN0 at 2^18 should favor 3D strongly, got {s1}");
     }
 }

@@ -1,15 +1,18 @@
 //! Design-space exploration engine: parameter sweeps over (workload ×
-//! MAC budget × tier count × vertical tech), executed in parallel, feeding
-//! the figure reproductions and the router's design choices.
+//! MAC budget × tier count × vertical tech), feeding the figure
+//! reproductions and the router's design choices.
+//!
+//! Since the `eval` redesign this module is a thin, typed wrapper over the
+//! shared [`crate::eval::Evaluator`]: every point goes through the cached
+//! scenario pipeline, so overlapping sweeps (and the router, and the CLI)
+//! never re-optimize the same design point.
 
 mod pareto;
 
 pub use pareto::{dominates, pareto_front};
 
-use crate::analytical::{optimal_tier_count, optimize_2d, optimize_3d};
-use crate::area::{perf_per_area_vs_2d, total_area_m2};
-use crate::power::{power_summary, Tech, VerticalTech};
-use crate::util::threadpool::par_map;
+use crate::eval::{shared_evaluator, shared_performance_evaluator, Metrics, Scenario};
+use crate::power::{Tech, VerticalTech};
 use crate::workloads::Gemm;
 
 /// One evaluated design point.
@@ -31,7 +34,37 @@ pub struct DsePoint {
     pub power_w: f64,
 }
 
-/// Evaluate a single design point (runtime, area, power, ratios).
+fn point_scenario(g: &Gemm, mac_budget: u64, tiers: u64, vtech: VerticalTech, tech: &Tech) -> Scenario {
+    Scenario::builder()
+        .gemm(*g)
+        .mac_budget(mac_budget)
+        .tiers(tiers)
+        .vtech(vtech)
+        .tech(tech.clone())
+        .build()
+        .expect("DSE grid point must be a valid scenario")
+}
+
+fn to_dse_point(s: &Scenario, m: &Metrics) -> DsePoint {
+    DsePoint {
+        workload: s.workload.primary_gemm(),
+        mac_budget: s.mac_budget,
+        tiers: m.tiers.expect("analytical model in pipeline"),
+        vtech: s.vtech,
+        cycles: m.cycles_3d.expect("analytical model in pipeline"),
+        speedup_vs_2d: m.speedup_vs_2d.expect("optimized point has a 2D baseline"),
+        area_m2: m.area_m2.expect("area model in pipeline"),
+        perf_per_area_vs_2d: m.perf_per_area_vs_2d.expect("area model in pipeline"),
+        power_w: m.power_w().expect("power model in pipeline"),
+    }
+}
+
+/// Evaluate a single design point (runtime, area, power, ratios) through the
+/// shared cached evaluator.
+///
+/// Panics if the point is not a representable scenario (zero MACs per tier,
+/// or more tiers than `vtech` can manufacture) — use [`sweep`], which skips
+/// infeasible grid points, when the inputs are not already validated.
 pub fn evaluate_point(
     g: &Gemm,
     mac_budget: u64,
@@ -39,23 +72,13 @@ pub fn evaluate_point(
     vtech: VerticalTech,
     tech: &Tech,
 ) -> DsePoint {
-    let d2 = optimize_2d(g, mac_budget);
-    let d3 = optimize_3d(g, mac_budget, tiers);
-    let arr = d3.array3d();
-    DsePoint {
-        workload: *g,
-        mac_budget,
-        tiers,
-        vtech,
-        cycles: d3.cycles,
-        speedup_vs_2d: d2.cycles as f64 / d3.cycles as f64,
-        area_m2: total_area_m2(&arr, tech, vtech),
-        perf_per_area_vs_2d: perf_per_area_vs_2d(g, mac_budget, tiers, tech, vtech),
-        power_w: power_summary(g, &arr, tech, vtech).total_w,
-    }
+    let s = point_scenario(g, mac_budget, tiers, vtech, tech);
+    to_dse_point(&s, &shared_evaluator().evaluate(&s))
 }
 
-/// Full cartesian sweep, parallel over points.
+/// Full cartesian sweep, parallel over points. Infeasible grid points —
+/// budgets below one MAC per tier, tier counts beyond what `vtech` can
+/// manufacture, or anything else scenario validation rejects — are skipped.
 pub fn sweep(
     workloads: &[Gemm],
     budgets: &[u64],
@@ -63,29 +86,62 @@ pub fn sweep(
     vtech: VerticalTech,
     tech: &Tech,
 ) -> Vec<DsePoint> {
-    let mut points: Vec<(Gemm, u64, u64)> = Vec::new();
+    let mut scenarios: Vec<Scenario> = Vec::new();
     for &g in workloads {
         for &b in budgets {
             for &t in tiers {
-                if b / t >= 1 {
-                    points.push((g, b, t));
+                // Feasibility is exactly "builds as a scenario" — one
+                // source of truth (ScenarioBuilder::build) instead of a
+                // hand-copied predicate that could drift from it.
+                let built = Scenario::builder()
+                    .gemm(g)
+                    .mac_budget(b)
+                    .tiers(t)
+                    .vtech(vtech)
+                    .tech(tech.clone())
+                    .build();
+                if let Ok(s) = built {
+                    scenarios.push(s);
                 }
             }
         }
     }
-    par_map(&points, |&(g, b, t)| evaluate_point(&g, b, t, vtech, tech))
+    let metrics = shared_evaluator().evaluate_batch(&scenarios);
+    scenarios
+        .iter()
+        .zip(&metrics)
+        .map(|(s, m)| to_dse_point(s, m))
+        .collect()
 }
 
 /// Fig. 7 helper: the optimal tier count for each workload at each budget,
-/// in parallel.
+/// in parallel (the analytical model resolves `TierChoice::Auto`).
 pub fn optimal_tiers_sweep(workloads: &[Gemm], budgets: &[u64], max_tiers: u64) -> Vec<(Gemm, u64, u64)> {
-    let mut points: Vec<(Gemm, u64)> = Vec::new();
+    let mut scenarios: Vec<Scenario> = Vec::new();
     for &g in workloads {
         for &b in budgets {
-            points.push((g, b));
+            scenarios.push(
+                Scenario::builder()
+                    .gemm(g)
+                    .mac_budget(b)
+                    .tiers_auto(max_tiers)
+                    .build()
+                    .expect("auto-tier scenario is always valid"),
+            );
         }
     }
-    par_map(&points, |&(g, b)| (g, b, optimal_tier_count(&g, b, max_tiers)))
+    let metrics = shared_performance_evaluator().evaluate_batch(&scenarios);
+    scenarios
+        .iter()
+        .zip(&metrics)
+        .map(|(s, m)| {
+            (
+                s.workload.primary_gemm(),
+                s.mac_budget,
+                m.tiers.expect("analytical model resolves the tier count"),
+            )
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -121,6 +177,15 @@ mod tests {
     }
 
     #[test]
+    fn skips_tiers_beyond_vtech_limit() {
+        // F2F manufactures at most 2 tiers; 4 and 8 are skipped, not a panic.
+        let g = Gemm::new(64, 147, 255);
+        let pts = sweep(&[g], &[4096], &[1, 2, 4, 8], VerticalTech::FaceToFace, &Tech::default());
+        assert_eq!(pts.len(), 2);
+        assert!(pts.iter().all(|p| p.tiers <= 2));
+    }
+
+    #[test]
     fn optimal_tiers_sweep_shape() {
         let gs = [Gemm::new(64, 147, 12100), Gemm::new(512, 128, 784)];
         let out = optimal_tiers_sweep(&gs, &[4096, 1 << 18], 16);
@@ -139,5 +204,15 @@ mod tests {
         assert!(p.power_w > 0.0);
         // MIV perf/area tracks speedup within the small area overhead.
         assert!(p.perf_per_area_vs_2d > 0.8 * p.speedup_vs_2d / 1.2);
+    }
+
+    #[test]
+    fn repeated_sweeps_hit_the_shared_cache() {
+        let g = Gemm::new(77, 33, 512);
+        let ev = shared_evaluator();
+        sweep(&[g], &[1 << 12], &[1, 2], VerticalTech::Tsv, &Tech::default());
+        let hits_before = ev.cache_hits();
+        sweep(&[g], &[1 << 12], &[1, 2], VerticalTech::Tsv, &Tech::default());
+        assert!(ev.cache_hits() >= hits_before + 2, "second sweep must be cached");
     }
 }

@@ -1,0 +1,289 @@
+//! [`Evaluator`]: a cost-model pipeline with a memoizing design-point cache
+//! and threadpool-parallel batch evaluation.
+
+use super::metrics::{aggregate, Metrics};
+use super::models::{AnalyticalModel, AreaModel, CostModel, PowerModel, ThermalModel};
+use super::scenario::{ArrayChoice, Scenario, TierChoice};
+use crate::power::VerticalTech;
+use crate::util::threadpool::par_map;
+use crate::workloads::Gemm;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+/// Cache key: the fully resolved design point. Workload labels are
+/// deliberately excluded — `conv3_1_3x3` and `conv3_2_3x3` share one entry.
+/// Technology constants participate as raw bits, so distinct `Tech`s can
+/// never collide.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct PointKey {
+    gemm: Gemm,
+    mac_budget: u64,
+    tiers: TierChoice,
+    vtech: VerticalTech,
+    array: ArrayChoice,
+    tech_bits: [u64; 11],
+}
+
+impl PointKey {
+    fn of(s: &Scenario) -> PointKey {
+        PointKey {
+            gemm: s.workload.primary_gemm(),
+            mac_budget: s.mac_budget,
+            tiers: s.tiers,
+            vtech: s.vtech,
+            array: s.array,
+            tech_bits: s.tech_bits(),
+        }
+    }
+}
+
+/// Composes a [`CostModel`] pipeline, memoizes per design point, and runs
+/// batches in parallel over the crate threadpool.
+///
+/// The cache is unbounded and keyed on the resolved point (GEMM dims ×
+/// budget × tier choice × vertical tech × technology fingerprint); identical
+/// points — repeated ResNet blocks inside one trace, repeated router lookups
+/// across a serving run, overlapping sweep grids — evaluate once.
+pub struct Evaluator {
+    models: Vec<Box<dyn CostModel>>,
+    /// RwLock: warm lookups (the steady state of sweeps and serving) take
+    /// only the read lock and proceed in parallel; writes happen once per
+    /// unique design point.
+    cache: RwLock<HashMap<PointKey, Metrics>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    model_calls: AtomicU64,
+}
+
+impl Default for Evaluator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Evaluator {
+    /// Standard pipeline: analytical + area + power (everything cheap).
+    pub fn new() -> Self {
+        Self::with_models(vec![
+            Box::new(AnalyticalModel),
+            Box::new(AreaModel),
+            Box::new(PowerModel),
+        ])
+    }
+
+    /// Analytical model only — for pure-runtime questions at scale.
+    pub fn performance() -> Self {
+        Self::with_models(vec![Box::new(AnalyticalModel)])
+    }
+
+    /// Full physical pipeline, including the (expensive) thermal solve.
+    pub fn full() -> Self {
+        Self::with_models(vec![
+            Box::new(AnalyticalModel),
+            Box::new(AreaModel),
+            Box::new(PowerModel),
+            Box::new(ThermalModel::default()),
+        ])
+    }
+
+    /// A custom pipeline. Models run in order; later models may reuse
+    /// earlier results (see [`super::models`]).
+    pub fn with_models(models: Vec<Box<dyn CostModel>>) -> Self {
+        Evaluator {
+            models,
+            cache: RwLock::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            model_calls: AtomicU64::new(0),
+        }
+    }
+
+    /// Evaluate one scenario. Trace workloads are split per layer (each an
+    /// independently cached point, evaluated in parallel) and aggregated.
+    pub fn evaluate(&self, scenario: &Scenario) -> Metrics {
+        let points = scenario.points();
+        if points.len() == 1 {
+            return self.evaluate_point(&points[0]);
+        }
+        let per_layer = par_map(&points, |p| self.evaluate_point(p));
+        aggregate(&per_layer)
+    }
+
+    /// Evaluate a batch of scenarios in parallel. All layers of all
+    /// scenarios share one flat work list, so a mixed batch of single GEMMs
+    /// and deep traces load-balances across the pool.
+    pub fn evaluate_batch(&self, scenarios: &[Scenario]) -> Vec<Metrics> {
+        let mut flat: Vec<(usize, Scenario)> = Vec::new();
+        for (i, s) in scenarios.iter().enumerate() {
+            for p in s.points() {
+                flat.push((i, p));
+            }
+        }
+        let evaluated = par_map(&flat, |(i, p)| (*i, self.evaluate_point(p)));
+        let mut grouped: Vec<Vec<Metrics>> = (0..scenarios.len()).map(|_| Vec::new()).collect();
+        for (i, m) in evaluated {
+            grouped[i].push(m);
+        }
+        grouped.iter().map(|g| aggregate(g)).collect()
+    }
+
+    fn evaluate_point(&self, point: &Scenario) -> Metrics {
+        let key = PointKey::of(point);
+        {
+            let cache = self.cache.read().unwrap();
+            if let Some(hit) = cache.get(&key) {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return hit.clone();
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        // Model execution happens outside the lock; two threads racing on
+        // the same fresh key redundantly compute the same value — harmless
+        // (the miss counter can overcount in that window, cache_len cannot).
+        let mut m = Metrics::default();
+        for model in &self.models {
+            self.model_calls.fetch_add(1, Ordering::Relaxed);
+            model.evaluate(point, &mut m);
+        }
+        self.cache.write().unwrap().insert(key, m.clone());
+        m
+    }
+
+    /// Cache hits so far (point granularity).
+    pub fn cache_hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Cache misses so far. Concurrent first-touches of the same key may
+    /// each count a miss; use [`Evaluator::cache_len`] for the exact number
+    /// of unique design points.
+    pub fn cache_misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Total cost-model invocations — stays flat across cache hits.
+    pub fn model_calls(&self) -> u64 {
+        self.model_calls.load(Ordering::Relaxed)
+    }
+
+    /// Number of cached design points (race-free dedup count).
+    pub fn cache_len(&self) -> usize {
+        self.cache.read().unwrap().len()
+    }
+
+    /// Names of the models in the pipeline, in execution order.
+    pub fn model_names(&self) -> Vec<&'static str> {
+        self.models.iter().map(|m| m.name()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytical::{optimize_2d, optimize_3d};
+    use crate::workloads::Gemm;
+
+    fn rn0_scenario() -> Scenario {
+        Scenario::builder()
+            .gemm(Gemm::new(64, 147, 12100))
+            .mac_budget(1 << 15)
+            .tiers(4)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn second_evaluation_is_a_pure_cache_hit() {
+        let ev = Evaluator::new();
+        let s = rn0_scenario();
+        let m1 = ev.evaluate(&s);
+        let calls_after_first = ev.model_calls();
+        assert_eq!(calls_after_first, 3, "one call per pipeline model");
+        assert_eq!(ev.cache_misses(), 1);
+        assert_eq!(ev.cache_hits(), 0);
+
+        let m2 = ev.evaluate(&s);
+        assert_eq!(ev.model_calls(), calls_after_first, "no model ran on the hit");
+        assert_eq!(ev.cache_hits(), 1);
+        assert_eq!(m1.cycles_3d, m2.cycles_3d);
+        assert_eq!(m1.power_w(), m2.power_w());
+    }
+
+    #[test]
+    fn labels_share_cache_entries() {
+        let ev = Evaluator::performance();
+        let plain = rn0_scenario();
+        let labelled = Scenario::builder()
+            .layer("RN0")
+            .unwrap()
+            .mac_budget(1 << 15)
+            .tiers(4)
+            .build()
+            .unwrap();
+        ev.evaluate(&plain);
+        ev.evaluate(&labelled);
+        assert_eq!(ev.cache_misses(), 1, "label must not split the cache");
+        assert_eq!(ev.cache_hits(), 1);
+    }
+
+    #[test]
+    fn batch_matches_serial_and_legacy() {
+        let ev = Evaluator::performance();
+        let gs = [Gemm::new(64, 147, 255), Gemm::new(512, 128, 784), Gemm::new(31, 17, 900)];
+        let scenarios: Vec<Scenario> = gs
+            .iter()
+            .map(|&g| Scenario::builder().gemm(g).mac_budget(4096).tiers(2).build().unwrap())
+            .collect();
+        let batch = ev.evaluate_batch(&scenarios);
+        for (g, m) in gs.iter().zip(&batch) {
+            assert_eq!(m.cycles_2d, Some(optimize_2d(g, 4096).cycles));
+            assert_eq!(m.cycles_3d, Some(optimize_3d(g, 4096, 2).cycles));
+        }
+    }
+
+    #[test]
+    fn trace_evaluation_aggregates_and_reuses_repeated_shapes() {
+        let ev = Evaluator::performance();
+        let s = Scenario::builder()
+            .model("resnet50", 1)
+            .unwrap()
+            .mac_budget(1 << 15)
+            .tiers(4)
+            .build()
+            .unwrap();
+        let m = ev.evaluate(&s);
+        assert_eq!(m.layers, 54);
+        assert_eq!(m.macs, s.workload.total_macs());
+        assert!(m.speedup_vs_2d.is_some());
+        // ResNet-50 repeats bottleneck shapes: far fewer unique points than
+        // layers. cache_len is race-free (the miss counter may overcount
+        // when identical adjacent layers are claimed concurrently).
+        assert!(ev.cache_len() < 54, "unique shapes: {}", ev.cache_len());
+
+        // A second pass over the whole trace is all hits.
+        let misses = ev.cache_misses();
+        let calls = ev.model_calls();
+        ev.evaluate(&s);
+        assert_eq!(ev.cache_misses(), misses);
+        assert_eq!(ev.model_calls(), calls);
+        assert!(ev.cache_hits() >= 54, "second pass must hit for every layer");
+    }
+
+    #[test]
+    fn different_tech_constants_split_the_cache() {
+        let ev = Evaluator::performance();
+        let a = rn0_scenario();
+        let tech = crate::power::Tech { f_clk: 2.0e9, ..Default::default() };
+        let b = Scenario::builder()
+            .gemm(Gemm::new(64, 147, 12100))
+            .mac_budget(1 << 15)
+            .tiers(4)
+            .tech(tech)
+            .build()
+            .unwrap();
+        ev.evaluate(&a);
+        ev.evaluate(&b);
+        assert_eq!(ev.cache_misses(), 2);
+    }
+}

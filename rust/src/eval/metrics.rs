@@ -1,0 +1,224 @@
+//! [`Metrics`]: the joint metric bundle a scenario evaluates to.
+
+use crate::analytical::OptimalDesign;
+use crate::power::PowerBreakdown;
+use crate::thermal::ThermalStudy;
+
+/// Everything the paper's joint analysis knows about one design point (or,
+/// aggregated, one multi-layer trace). Each cost model fills the fields it
+/// owns; fields stay `None` when the model is not in the pipeline.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    /// GEMMs aggregated into this bundle (1 for a single design point).
+    pub layers: u64,
+    /// Total MAC operations of the workload.
+    pub macs: u64,
+    /// Optimized 2D baseline (absent for pinned-array scenarios).
+    pub design_2d: Option<OptimalDesign>,
+    /// The evaluated 3D design. For traces: the design of the layer with
+    /// the most 3D cycles (the binding configuration).
+    pub design_3d: Option<OptimalDesign>,
+    /// Resolved tier count (after `TierChoice::Auto` search).
+    pub tiers: Option<u64>,
+    /// Eq. 1 runtime of the 2D baseline; summed over trace layers.
+    pub cycles_2d: Option<u64>,
+    /// Eq. 2 runtime of the 3D design; summed over trace layers.
+    pub cycles_3d: Option<u64>,
+    /// τ2D / τ3D (ratio of the cycle sums for traces).
+    pub speedup_vs_2d: Option<f64>,
+    /// Total 3D silicon area, m² (max over trace layers — the die must fit
+    /// the largest per-layer design).
+    pub area_m2: Option<f64>,
+    /// 2D baseline silicon area, m² (max over trace layers).
+    pub area_2d_m2: Option<f64>,
+    /// Fig. 9 metric: (τ2D·area2D)/(τ3D·area3D), >1 means 3D wins.
+    pub perf_per_area_vs_2d: Option<f64>,
+    /// Table II power bundle (runtime-weighted average over trace layers).
+    pub power: Option<PowerBreakdown>,
+    /// Fig. 8 thermal study (the hottest layer's study for traces).
+    pub thermal: Option<ThermalStudy>,
+}
+
+impl Metrics {
+    /// Average power in Watts, if the power model ran.
+    pub fn power_w(&self) -> Option<f64> {
+        self.power.map(|p| p.total_w)
+    }
+
+    /// Total energy in Joules, if the power model ran.
+    pub fn energy_j(&self) -> Option<f64> {
+        self.power.map(|p| p.energy_j)
+    }
+}
+
+fn add_opt(a: Option<u64>, b: Option<u64>) -> Option<u64> {
+    match (a, b) {
+        (Some(x), Some(y)) => Some(x + y),
+        (None, y) => y,
+        (x, None) => x,
+    }
+}
+
+fn max_opt(a: Option<f64>, b: Option<f64>) -> Option<f64> {
+    match (a, b) {
+        (Some(x), Some(y)) => Some(x.max(y)),
+        (None, y) => y,
+        (x, None) => x,
+    }
+}
+
+/// Runtime-weighted merge of per-layer power bundles: energies and runtimes
+/// add, average powers weight by layer runtime, peaks take the max.
+fn merge_power(parts: &[&PowerBreakdown]) -> PowerBreakdown {
+    let t: f64 = parts.iter().map(|p| p.runtime_s).sum();
+    let e: f64 = parts.iter().map(|p| p.energy_j).sum();
+    let w = |f: fn(&PowerBreakdown) -> f64| -> f64 {
+        if t > 0.0 {
+            parts.iter().map(|p| f(p) * p.runtime_s).sum::<f64>() / t
+        } else {
+            0.0
+        }
+    };
+    PowerBreakdown {
+        total_w: w(|p| p.total_w),
+        peak_w: parts.iter().map(|p| p.peak_w).fold(0.0, f64::max),
+        mult_w: w(|p| p.mult_w),
+        acc_w: w(|p| p.acc_w),
+        wire_w: w(|p| p.wire_w),
+        drain_w: w(|p| p.drain_w),
+        vertical_w: w(|p| p.vertical_w),
+        clock_w: w(|p| p.clock_w),
+        leakage_w: w(|p| p.leakage_w),
+        runtime_s: t,
+        energy_j: e,
+    }
+}
+
+/// Aggregate per-layer metrics into a trace-level bundle.
+pub(crate) fn aggregate(parts: &[Metrics]) -> Metrics {
+    if parts.len() == 1 {
+        return parts[0].clone();
+    }
+    let mut out = Metrics::default();
+    for p in parts {
+        out.layers += p.layers;
+        out.macs += p.macs;
+        out.cycles_2d = add_opt(out.cycles_2d, p.cycles_2d);
+        out.cycles_3d = add_opt(out.cycles_3d, p.cycles_3d);
+        out.area_m2 = max_opt(out.area_m2, p.area_m2);
+        out.area_2d_m2 = max_opt(out.area_2d_m2, p.area_2d_m2);
+    }
+    // The binding layer (most 3D cycles) lends the trace its design labels.
+    if let Some(dom) = parts.iter().max_by_key(|p| p.cycles_3d.unwrap_or(0)) {
+        out.design_2d = dom.design_2d;
+        out.design_3d = dom.design_3d;
+        out.tiers = dom.tiers;
+    }
+    if let (Some(c2), Some(c3)) = (out.cycles_2d, out.cycles_3d) {
+        if c3 > 0 {
+            out.speedup_vs_2d = Some(c2 as f64 / c3 as f64);
+        }
+    }
+    if let (Some(c2), Some(c3), Some(a2), Some(a3)) =
+        (out.cycles_2d, out.cycles_3d, out.area_2d_m2, out.area_m2)
+    {
+        if c3 > 0 && a3 > 0.0 {
+            out.perf_per_area_vs_2d = Some((c2 as f64 * a2) / (c3 as f64 * a3));
+        }
+    }
+    let powers: Vec<&PowerBreakdown> = parts.iter().filter_map(|p| p.power.as_ref()).collect();
+    if !powers.is_empty() {
+        out.power = Some(merge_power(&powers));
+    }
+    // Hottest layer = highest observed temperature (power density decides
+    // temperature, not total power — a small hot die beats a large warm one).
+    let peak_temp = |m: &&Metrics| -> f64 {
+        m.thermal.as_ref().map_or(f64::NEG_INFINITY, |t| {
+            t.tiers
+                .iter()
+                .map(|tt| tt.stats.max)
+                .fold(f64::NEG_INFINITY, f64::max)
+        })
+    };
+    out.thermal = parts
+        .iter()
+        .filter(|p| p.thermal.is_some())
+        .max_by(|a, b| peak_temp(a).partial_cmp(&peak_temp(b)).unwrap_or(std::cmp::Ordering::Equal))
+        .and_then(|p| p.thermal.clone());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pb(total: f64, peak: f64, runtime: f64, energy: f64) -> PowerBreakdown {
+        PowerBreakdown {
+            total_w: total,
+            peak_w: peak,
+            mult_w: 0.0,
+            acc_w: 0.0,
+            wire_w: 0.0,
+            drain_w: 0.0,
+            vertical_w: 0.0,
+            clock_w: 0.0,
+            leakage_w: 0.0,
+            runtime_s: runtime,
+            energy_j: energy,
+        }
+    }
+
+    #[test]
+    fn aggregate_sums_cycles_and_ratios_speedup() {
+        let a = Metrics {
+            layers: 1,
+            macs: 10,
+            cycles_2d: Some(100),
+            cycles_3d: Some(50),
+            ..Default::default()
+        };
+        let b = Metrics {
+            layers: 1,
+            macs: 20,
+            cycles_2d: Some(300),
+            cycles_3d: Some(150),
+            ..Default::default()
+        };
+        let m = aggregate(&[a, b]);
+        assert_eq!(m.layers, 2);
+        assert_eq!(m.macs, 30);
+        assert_eq!(m.cycles_2d, Some(400));
+        assert_eq!(m.cycles_3d, Some(200));
+        assert!((m.speedup_vs_2d.unwrap() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn aggregate_power_weights_by_runtime() {
+        let a = Metrics { power: Some(pb(2.0, 3.0, 1.0, 2.0)), ..Default::default() };
+        let b = Metrics { power: Some(pb(6.0, 8.0, 3.0, 18.0)), ..Default::default() };
+        let m = aggregate(&[a, b]);
+        let p = m.power.unwrap();
+        // (2·1 + 6·3)/4 = 5 W average, peak is the max, sums add.
+        assert!((p.total_w - 5.0).abs() < 1e-12);
+        assert!((p.peak_w - 8.0).abs() < 1e-12);
+        assert!((p.runtime_s - 4.0).abs() < 1e-12);
+        assert!((p.energy_j - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_part_passes_through() {
+        let a = Metrics { layers: 1, cycles_3d: Some(7), ..Default::default() };
+        let m = aggregate(&[a]);
+        assert_eq!(m.cycles_3d, Some(7));
+        assert!(m.speedup_vs_2d.is_none());
+    }
+
+    #[test]
+    fn area_takes_max() {
+        let a = Metrics { area_m2: Some(1.0), area_2d_m2: Some(2.0), ..Default::default() };
+        let b = Metrics { area_m2: Some(3.0), area_2d_m2: Some(1.0), ..Default::default() };
+        let m = aggregate(&[a, b]);
+        assert_eq!(m.area_m2, Some(3.0));
+        assert_eq!(m.area_2d_m2, Some(2.0));
+    }
+}

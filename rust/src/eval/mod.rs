@@ -1,0 +1,69 @@
+//! Unified evaluation API: **scenario → design point → metrics**, one seam
+//! for every consumer of the paper's models.
+//!
+//! The paper's contribution is a *joint* analysis — dataflow/performance
+//! (Eq. 1/2), area (§IV-D), power (§IV-B) and temperature (§IV-C) of the
+//! same 3D design point. This module turns that joint analysis into one
+//! composable pipeline instead of four differently-shaped free functions:
+//!
+//! * [`Scenario`] — *what* to evaluate: a workload (single GEMM, Table I
+//!   layer, or a full network trace), a MAC budget, a tier choice (fixed or
+//!   auto-optimized), the vertical interconnect technology and the
+//!   technology constants. Built fluently ([`Scenario::builder`]) or
+//!   expanded from a JSON [`crate::config::ExperimentConfig`]
+//!   ([`Scenario::expand_config`]).
+//! * [`CostModel`] — *how* to evaluate: `fn evaluate(&self, &Scenario,
+//!   &mut Metrics)`. Implemented by [`AnalyticalModel`] (Eq. 1/2 + the [13]
+//!   optimizer), [`AreaModel`] (Fig. 9), [`PowerModel`] (Table II) and
+//!   [`ThermalModel`] (Fig. 8).
+//! * [`Evaluator`] — runs a model pipeline over scenarios with a memoizing
+//!   cache keyed on the resolved design point, batching work across the
+//!   crate threadpool. Trace scenarios are split per layer, so repeated
+//!   shapes (ResNet-50's repeated bottleneck blocks, a serving trace's
+//!   repeated requests) never re-optimize.
+//!
+//! The CLI (`cube3d analyze/sweep/power/thermal/...`), the DSE engine
+//! ([`crate::dse`]), the serving coordinator's router and the report
+//! generators all obtain their metrics exclusively through this API; it is
+//! also the seam future scaling work (sharding, result caching,
+//! multi-backend) plugs into.
+
+mod evaluator;
+mod metrics;
+mod models;
+mod scenario;
+
+pub use evaluator::Evaluator;
+pub use metrics::Metrics;
+pub use models::{AnalyticalModel, AreaModel, CostModel, PowerModel, ThermalModel};
+pub use scenario::{ArrayChoice, Scenario, ScenarioBuilder, TierChoice};
+
+use std::sync::{Arc, OnceLock};
+
+static STANDARD: OnceLock<Arc<Evaluator>> = OnceLock::new();
+static PERFORMANCE: OnceLock<Arc<Evaluator>> = OnceLock::new();
+static FULL: OnceLock<Arc<Evaluator>> = OnceLock::new();
+
+/// Process-wide shared evaluator with the standard pipeline
+/// (analytical + area + power). The cache is shared by every caller — the
+/// CLI subcommands, DSE sweeps, reports — so a design point is never
+/// optimized twice in one process. Scenario-level `Tech` overrides are part
+/// of the cache key, so mixed-technology callers coexist safely.
+pub fn shared_evaluator() -> Arc<Evaluator> {
+    STANDARD.get_or_init(|| Arc::new(Evaluator::new())).clone()
+}
+
+/// Shared analytical-only evaluator for runtime-only questions
+/// (Figs. 5–7, router tier planning at scale).
+pub fn shared_performance_evaluator() -> Arc<Evaluator> {
+    PERFORMANCE
+        .get_or_init(|| Arc::new(Evaluator::performance()))
+        .clone()
+}
+
+/// Shared full-physical evaluator (analytical + area + power + thermal) for
+/// Fig. 8-class studies. Thermal solves are the expensive stage; keep this
+/// for scenarios that actually need temperatures.
+pub fn shared_full_evaluator() -> Arc<Evaluator> {
+    FULL.get_or_init(|| Arc::new(Evaluator::full())).clone()
+}

@@ -1,0 +1,251 @@
+//! [`CostModel`] and its four implementations — the paper's joint analysis
+//! as one pluggable pipeline.
+//!
+//! Models run in order and may read fields earlier models produced (the
+//! area/power/thermal models reuse the analytical stage's optimized designs
+//! instead of re-optimizing); each is also self-sufficient when run alone.
+
+use super::metrics::Metrics;
+use super::scenario::{ArrayChoice, Scenario, TierChoice};
+use crate::analytical::{cycles_3d, optimal_tier_count, optimize_2d, optimize_3d, OptimalDesign};
+use crate::area::total_area_m2;
+use crate::power::{power_summary, VerticalTech};
+use crate::thermal::{thermal_footprint_m2, thermal_study, ThermalParams};
+
+/// One facet of the paper's joint analysis: reads a (single-GEMM) scenario,
+/// writes the metric fields it owns. Models must be thread-safe — the
+/// evaluator fans scenarios out over the crate threadpool.
+pub trait CostModel: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn evaluate(&self, scenario: &Scenario, out: &mut Metrics);
+}
+
+/// Resolve the (2D baseline, 3D design, tier count) of a point scenario.
+/// Pinned arrays skip optimization and have no 2D baseline.
+fn resolve_designs(s: &Scenario) -> (Option<OptimalDesign>, OptimalDesign, u64) {
+    let g = s.workload.primary_gemm();
+    match s.array {
+        ArrayChoice::Fixed(arr) => {
+            let cycles = cycles_3d(&g, &arr);
+            let d3 = OptimalDesign {
+                rows: arr.rows,
+                cols: arr.cols,
+                tiers: arr.tiers,
+                cycles,
+                macs_used: arr.macs(),
+            };
+            (None, d3, arr.tiers)
+        }
+        ArrayChoice::Optimize => {
+            let tiers = match s.tiers {
+                TierChoice::Fixed(t) => t,
+                // The auto search only considers stacks the vertical tech
+                // can actually manufacture (Fixed tiers enforce the same
+                // limit at build()).
+                TierChoice::Auto { max_tiers } => {
+                    optimal_tier_count(&g, s.mac_budget, max_tiers.min(s.vtech.max_tiers()))
+                }
+            };
+            (
+                Some(optimize_2d(&g, s.mac_budget)),
+                optimize_3d(&g, s.mac_budget, tiers),
+                tiers,
+            )
+        }
+    }
+}
+
+/// Designs for a downstream model: prefer what the analytical stage already
+/// computed, fall back to resolving locally (standalone use).
+fn designs_from(s: &Scenario, m: &Metrics) -> (Option<OptimalDesign>, OptimalDesign) {
+    match m.design_3d {
+        Some(d3) => (m.design_2d, d3),
+        None => {
+            let (d2, d3, _) = resolve_designs(s);
+            (d2, d3)
+        }
+    }
+}
+
+/// Eq. 1 / Eq. 2 runtimes, the [13] array optimizer, and the Fig. 5/6/7
+/// speedup and tier-count analyses.
+pub struct AnalyticalModel;
+
+impl CostModel for AnalyticalModel {
+    fn name(&self) -> &'static str {
+        "analytical"
+    }
+
+    fn evaluate(&self, s: &Scenario, m: &mut Metrics) {
+        let g = s.workload.primary_gemm();
+        m.layers = 1;
+        m.macs = g.macs();
+        let (d2, d3, tiers) = resolve_designs(s);
+        m.cycles_3d = Some(d3.cycles);
+        m.tiers = Some(tiers);
+        m.design_3d = Some(d3);
+        if let Some(d2) = d2 {
+            m.cycles_2d = Some(d2.cycles);
+            m.design_2d = Some(d2);
+            m.speedup_vs_2d = Some(d2.cycles as f64 / d3.cycles as f64);
+        }
+    }
+}
+
+/// §IV-D silicon area and the Fig. 9 area-normalized-performance metric.
+pub struct AreaModel;
+
+impl CostModel for AreaModel {
+    fn name(&self) -> &'static str {
+        "area"
+    }
+
+    fn evaluate(&self, s: &Scenario, m: &mut Metrics) {
+        let (d2, d3) = designs_from(s, m);
+        let a3 = total_area_m2(&d3.array3d(), &s.tech, s.vtech);
+        m.area_m2 = Some(a3);
+        if let Some(d2) = d2 {
+            // 1-tier baseline: vertical tech is irrelevant (no via area).
+            let a2 = total_area_m2(&d2.array3d(), &s.tech, VerticalTech::Tsv);
+            m.area_2d_m2 = Some(a2);
+            m.perf_per_area_vs_2d =
+                Some((d2.cycles as f64 * a2) / (d3.cycles as f64 * a3));
+        }
+    }
+}
+
+/// §IV-B switching-activity power model (Table II).
+pub struct PowerModel;
+
+impl CostModel for PowerModel {
+    fn name(&self) -> &'static str {
+        "power"
+    }
+
+    fn evaluate(&self, s: &Scenario, m: &mut Metrics) {
+        let g = s.workload.primary_gemm();
+        let (_, d3) = designs_from(s, m);
+        m.power = Some(power_summary(&g, &d3.array3d(), &s.tech, s.vtech));
+    }
+}
+
+/// §IV-C compact-RC thermal model (Fig. 8). The solve is the expensive
+/// pipeline stage — include this model only when temperatures are needed.
+#[derive(Default)]
+pub struct ThermalModel {
+    pub params: ThermalParams,
+}
+
+impl CostModel for ThermalModel {
+    fn name(&self) -> &'static str {
+        "thermal"
+    }
+
+    fn evaluate(&self, s: &Scenario, m: &mut Metrics) {
+        let g = s.workload.primary_gemm();
+        let (_, d3) = designs_from(s, m);
+        let arr = d3.array3d();
+        m.thermal = Some(thermal_study(
+            &g,
+            &arr,
+            &s.tech,
+            s.vtech,
+            &self.params,
+            thermal_footprint_m2(&arr, &s.tech),
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytical::Array3d;
+    use crate::power::Tech;
+    use crate::workloads::Gemm;
+
+    fn point(budget: u64, tiers: u64) -> Scenario {
+        Scenario::builder()
+            .gemm(Gemm::new(64, 147, 12100))
+            .mac_budget(budget)
+            .tiers(tiers)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn analytical_matches_optimizer() {
+        let s = point(1 << 15, 4);
+        let mut m = Metrics::default();
+        AnalyticalModel.evaluate(&s, &mut m);
+        let g = s.workload.primary_gemm();
+        assert_eq!(m.cycles_2d, Some(optimize_2d(&g, 1 << 15).cycles));
+        assert_eq!(m.cycles_3d, Some(optimize_3d(&g, 1 << 15, 4).cycles));
+        assert_eq!(m.tiers, Some(4));
+        assert_eq!(m.macs, g.macs());
+    }
+
+    #[test]
+    fn auto_tiers_matches_optimal_tier_count() {
+        let s = Scenario::builder()
+            .gemm(Gemm::new(64, 147, 12100))
+            .mac_budget(1 << 18)
+            .tiers_auto(16)
+            .build()
+            .unwrap();
+        let mut m = Metrics::default();
+        AnalyticalModel.evaluate(&s, &mut m);
+        let g = s.workload.primary_gemm();
+        assert_eq!(m.tiers, Some(optimal_tier_count(&g, 1 << 18, 16)));
+    }
+
+    #[test]
+    fn fixed_array_skips_2d_baseline() {
+        let arr = Array3d::new(128, 128, 3);
+        let s = Scenario::builder()
+            .gemm(Gemm::new(128, 128, 300))
+            .array(arr)
+            .build()
+            .unwrap();
+        let mut m = Metrics::default();
+        AnalyticalModel.evaluate(&s, &mut m);
+        assert_eq!(m.cycles_3d, Some(cycles_3d(&Gemm::new(128, 128, 300), &arr)));
+        assert!(m.design_2d.is_none() && m.speedup_vs_2d.is_none());
+    }
+
+    #[test]
+    fn downstream_models_reuse_analytical_designs() {
+        let s = point(1 << 15, 4);
+        let mut m = Metrics::default();
+        AnalyticalModel.evaluate(&s, &mut m);
+        let d3 = m.design_3d.unwrap();
+        AreaModel.evaluate(&s, &mut m);
+        PowerModel.evaluate(&s, &mut m);
+        assert_eq!(
+            m.area_m2,
+            Some(total_area_m2(&d3.array3d(), &Tech::default(), s.vtech))
+        );
+        let p = m.power.unwrap();
+        let direct = power_summary(
+            &s.workload.primary_gemm(),
+            &d3.array3d(),
+            &Tech::default(),
+            s.vtech,
+        );
+        assert_eq!(p.total_w, direct.total_w);
+        assert_eq!(p.energy_j, direct.energy_j);
+    }
+
+    #[test]
+    fn standalone_power_model_self_resolves() {
+        let s = point(1 << 15, 4);
+        let mut with_analytical = Metrics::default();
+        AnalyticalModel.evaluate(&s, &mut with_analytical);
+        PowerModel.evaluate(&s, &mut with_analytical);
+        let mut standalone = Metrics::default();
+        PowerModel.evaluate(&s, &mut standalone);
+        assert_eq!(
+            with_analytical.power.unwrap().total_w,
+            standalone.power.unwrap().total_w
+        );
+    }
+}

@@ -1,0 +1,376 @@
+//! [`Scenario`]: the declarative input of the evaluation pipeline.
+
+use crate::analytical::Array3d;
+use crate::config::{parse_vtech, ExperimentConfig, WorkloadSpec};
+use crate::power::{Tech, VerticalTech};
+use crate::util::cli::Args;
+use crate::workloads::{Gemm, Workload};
+use anyhow::{anyhow, bail, Result};
+
+/// How the tier count of the 3D stack is chosen.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TierChoice {
+    /// Exactly this many tiers.
+    Fixed(u64),
+    /// Search `1..=max_tiers` for the runtime-optimal count (Fig. 7).
+    Auto { max_tiers: u64 },
+}
+
+/// How the array dimensions are chosen.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArrayChoice {
+    /// Optimize the per-tier R×C under the MAC budget (Eq. 1/2 + the [13]
+    /// optimizer) — the default.
+    Optimize,
+    /// Evaluate a pinned array (Table II / Fig. 8 style configurations);
+    /// the budget and tier choice are taken from the array itself.
+    Fixed(Array3d),
+}
+
+/// One evaluation request: workload × budget × tiers × vertical tech × tech.
+///
+/// A scenario with a trace workload is evaluated layer by layer (each layer
+/// an independently cached design point) and aggregated; see
+/// [`crate::eval::Evaluator`].
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub workload: Workload,
+    /// Total MAC budget (split evenly across tiers, Eq. 2).
+    pub mac_budget: u64,
+    pub tiers: TierChoice,
+    pub vtech: VerticalTech,
+    pub array: ArrayChoice,
+    /// Technology constants the cost models evaluate under.
+    pub tech: Tech,
+}
+
+impl Scenario {
+    pub fn builder() -> ScenarioBuilder {
+        ScenarioBuilder::default()
+    }
+
+    /// Build a scenario from CLI options (`--layer/--model/--m/n/k`,
+    /// `--macs`, `--tiers`, `--vtech`), with per-subcommand defaults for
+    /// the budget and tier count.
+    pub fn from_args(args: &Args, default_macs: u64, default_tiers: u64) -> Result<Scenario> {
+        let workload = WorkloadSpec::from_args(args)?.resolve()?;
+        Scenario::builder()
+            .workload(workload)
+            .mac_budget(args.get_u64_or("macs", default_macs)?)
+            .tiers(args.get_u64_or("tiers", default_tiers)?)
+            .vtech(parse_vtech(args.get_or("vtech", "tsv"))?)
+            .build()
+    }
+
+    /// Expand a JSON experiment config into its scenario grid
+    /// (budgets × tiers). Infeasible grid points — budgets below one MAC
+    /// per tier, or tier counts beyond what the vertical tech can
+    /// manufacture — are skipped, matching [`crate::dse::sweep`].
+    pub fn expand_config(cfg: &ExperimentConfig) -> Result<Vec<Scenario>> {
+        let workload = cfg.workload.resolve()?;
+        let mut out = Vec::new();
+        for &budget in &cfg.mac_budgets {
+            for &tiers in &cfg.tiers {
+                // Feasibility = "builds as a scenario"; grid points that
+                // fail validation (zero MACs per tier, tiers beyond the
+                // vertical tech's limit) are skipped, as in `dse::sweep`.
+                let built = Scenario::builder()
+                    .workload(workload.clone())
+                    .mac_budget(budget)
+                    .tiers(tiers)
+                    .vtech(cfg.vertical_tech)
+                    .build();
+                if let Ok(s) = built {
+                    out.push(s);
+                }
+            }
+        }
+        if out.is_empty() {
+            bail!("config expands to no feasible scenarios (every budget × tier point fails validation)");
+        }
+        Ok(out)
+    }
+
+    /// Split into single-GEMM point scenarios — one per trace layer, or just
+    /// `self` for a single-GEMM workload. These are the units the evaluator
+    /// caches on.
+    pub fn points(&self) -> Vec<Scenario> {
+        match &self.workload {
+            Workload::Gemm { .. } => vec![self.clone()],
+            Workload::Trace { layers, .. } => layers
+                .iter()
+                .map(|l| Scenario {
+                    workload: Workload::Gemm {
+                        label: Some(l.name.clone()),
+                        gemm: l.gemm,
+                    },
+                    mac_budget: self.mac_budget,
+                    tiers: self.tiers,
+                    vtech: self.vtech,
+                    array: self.array,
+                    tech: self.tech.clone(),
+                })
+                .collect(),
+        }
+    }
+
+    /// The technology constants as raw bits — the collision-free component
+    /// of the evaluator's cache key (no hashing tricks: two `Tech`s share a
+    /// key iff every field is bitwise identical).
+    pub(crate) fn tech_bits(&self) -> [u64; 11] {
+        // Exhaustive destructuring (no `..`): adding a field to Tech fails
+        // to compile here instead of silently aliasing cache entries.
+        let Tech {
+            vdd,
+            f_clk,
+            a_mac_m2,
+            e_mac_j,
+            e_hop_j,
+            e_psum_hop_j,
+            e_clk_tree_j,
+            p_leak_mac_w,
+            vertical_bits,
+            alpha,
+            miv_tier_overhead,
+        } = &self.tech;
+        [
+            vdd.to_bits(),
+            f_clk.to_bits(),
+            a_mac_m2.to_bits(),
+            e_mac_j.to_bits(),
+            e_hop_j.to_bits(),
+            e_psum_hop_j.to_bits(),
+            e_clk_tree_j.to_bits(),
+            p_leak_mac_w.to_bits(),
+            *vertical_bits,
+            alpha.to_bits(),
+            miv_tier_overhead.to_bits(),
+        ]
+    }
+}
+
+/// Fluent [`Scenario`] construction with validation at `build()`.
+#[derive(Debug, Clone)]
+pub struct ScenarioBuilder {
+    workload: Option<Workload>,
+    mac_budget: u64,
+    tiers: TierChoice,
+    vtech: VerticalTech,
+    array: ArrayChoice,
+    tech: Tech,
+}
+
+impl Default for ScenarioBuilder {
+    fn default() -> Self {
+        ScenarioBuilder {
+            workload: None,
+            mac_budget: 1 << 18,
+            tiers: TierChoice::Fixed(4),
+            vtech: VerticalTech::Tsv,
+            array: ArrayChoice::Optimize,
+            tech: Tech::default(),
+        }
+    }
+}
+
+impl ScenarioBuilder {
+    pub fn workload(mut self, w: Workload) -> Self {
+        self.workload = Some(w);
+        self
+    }
+
+    /// Single-GEMM workload.
+    pub fn gemm(self, g: Gemm) -> Self {
+        self.workload(Workload::gemm(g))
+    }
+
+    /// Table I layer by label (same lookup and errors as the JSON schema).
+    pub fn layer(self, label: &str) -> Result<Self> {
+        Ok(self.workload(WorkloadSpec::Layer(label.to_string()).resolve()?))
+    }
+
+    /// Named full-network trace at a batch size (same lookup and errors as
+    /// the JSON schema).
+    pub fn model(self, name: &str, batch: u64) -> Result<Self> {
+        Ok(self.workload(WorkloadSpec::Model { name: name.to_string(), batch }.resolve()?))
+    }
+
+    pub fn mac_budget(mut self, budget: u64) -> Self {
+        self.mac_budget = budget;
+        self
+    }
+
+    pub fn tiers(mut self, tiers: u64) -> Self {
+        self.tiers = TierChoice::Fixed(tiers);
+        self
+    }
+
+    /// Let the analytical model pick the runtime-optimal tier count
+    /// in `1..=max_tiers`.
+    pub fn tiers_auto(mut self, max_tiers: u64) -> Self {
+        self.tiers = TierChoice::Auto { max_tiers };
+        self
+    }
+
+    pub fn vtech(mut self, vtech: VerticalTech) -> Self {
+        self.vtech = vtech;
+        self
+    }
+
+    /// Pin the array dimensions (Table II / Fig. 8 configurations). The MAC
+    /// budget and tier count follow the array.
+    pub fn array(mut self, array: Array3d) -> Self {
+        self.mac_budget = array.macs();
+        self.tiers = TierChoice::Fixed(array.tiers);
+        self.array = ArrayChoice::Fixed(array);
+        self
+    }
+
+    pub fn tech(mut self, tech: Tech) -> Self {
+        self.tech = tech;
+        self
+    }
+
+    pub fn build(self) -> Result<Scenario> {
+        let workload = self
+            .workload
+            .ok_or_else(|| anyhow!("scenario needs a workload (gemm/layer/model/workload)"))?;
+        if workload.n_layers() == 0 {
+            bail!("trace workload must have at least one layer");
+        }
+        if self.mac_budget == 0 {
+            bail!("MAC budget must be positive");
+        }
+        match self.tiers {
+            TierChoice::Fixed(t) => {
+                if t == 0 {
+                    bail!("tier count must be positive");
+                }
+                if t > self.vtech.max_tiers() {
+                    bail!(
+                        "{} supports at most {} tiers (requested {t})",
+                        self.vtech.name(),
+                        self.vtech.max_tiers()
+                    );
+                }
+                if self.mac_budget / t == 0 {
+                    bail!(
+                        "budget {} too small for {t} tiers (needs ≥1 MAC per tier)",
+                        self.mac_budget
+                    );
+                }
+            }
+            TierChoice::Auto { max_tiers } => {
+                if max_tiers == 0 {
+                    bail!("auto tier search needs max_tiers ≥ 1");
+                }
+            }
+        }
+        Ok(Scenario {
+            workload,
+            mac_budget: self.mac_budget,
+            tiers: self.tiers,
+            vtech: self.vtech,
+            array: self.array,
+            tech: self.tech,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn builder_defaults_and_validation() {
+        let s = Scenario::builder().gemm(Gemm::new(4, 5, 6)).build().unwrap();
+        assert_eq!(s.mac_budget, 1 << 18);
+        assert_eq!(s.tiers, TierChoice::Fixed(4));
+        assert!(Scenario::builder().build().is_err(), "workload required");
+        assert!(Scenario::builder()
+            .gemm(Gemm::new(1, 1, 1))
+            .mac_budget(2)
+            .tiers(4)
+            .build()
+            .is_err());
+        assert!(Scenario::builder()
+            .gemm(Gemm::new(1, 1, 1))
+            .vtech(VerticalTech::FaceToFace)
+            .tiers(3)
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn fixed_array_pins_budget_and_tiers() {
+        let s = Scenario::builder()
+            .gemm(Gemm::new(128, 128, 300))
+            .array(Array3d::new(128, 128, 3))
+            .build()
+            .unwrap();
+        assert_eq!(s.mac_budget, 128 * 128 * 3);
+        assert_eq!(s.tiers, TierChoice::Fixed(3));
+        assert!(matches!(s.array, ArrayChoice::Fixed(_)));
+    }
+
+    #[test]
+    fn trace_scenarios_split_per_layer() {
+        let s = Scenario::builder()
+            .model("resnet50", 1)
+            .unwrap()
+            .mac_budget(1 << 15)
+            .tiers(4)
+            .build()
+            .unwrap();
+        let pts = s.points();
+        assert_eq!(pts.len(), 54);
+        for p in &pts {
+            assert!(matches!(p.workload, Workload::Gemm { .. }));
+            assert_eq!(p.mac_budget, 1 << 15);
+        }
+    }
+
+    #[test]
+    fn expand_config_crosses_grid_and_skips_infeasible() {
+        let doc = Json::parse(
+            r#"{"workload": {"layer": "RN0"}, "mac_budgets": [2, 4096], "tiers": [1, 4]}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&doc).unwrap();
+        let ss = Scenario::expand_config(&cfg).unwrap();
+        // budget 2 × 4 tiers is infeasible → 3 scenarios.
+        assert_eq!(ss.len(), 3);
+    }
+
+    #[test]
+    fn expand_config_skips_tiers_beyond_vtech_limit() {
+        // F2F manufactures at most 2 tiers: 1 and 2 survive, 4 is skipped.
+        let doc = Json::parse(
+            r#"{"workload": {"layer": "RN0"}, "mac_budgets": [4096],
+                "tiers": [1, 2], "vertical_tech": "f2f"}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&doc).unwrap();
+        let mut wide = cfg.clone();
+        wide.tiers = vec![1, 2, 4, 8];
+        let ss = Scenario::expand_config(&wide).unwrap();
+        assert_eq!(ss.len(), 2);
+        assert!(ss.iter().all(|s| matches!(s.tiers, TierChoice::Fixed(t) if t <= 2)));
+    }
+
+    #[test]
+    fn tech_bits_track_field_changes() {
+        let a = Scenario::builder().gemm(Gemm::new(1, 1, 1)).tiers(1).mac_budget(1).build().unwrap();
+        let tech = Tech { vdd: 0.9, ..Tech::default() };
+        let b = Scenario::builder()
+            .gemm(Gemm::new(1, 1, 1))
+            .tiers(1)
+            .mac_budget(1)
+            .tech(tech)
+            .build()
+            .unwrap();
+        assert_ne!(a.tech_bits(), b.tech_bits());
+        assert_eq!(a.tech_bits(), a.clone().tech_bits());
+    }
+}

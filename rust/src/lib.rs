@@ -17,16 +17,31 @@
 //!
 //! ## Quick tour
 //!
+//! Everything flows through one seam — a [`eval::Scenario`] describes what
+//! to evaluate, an [`eval::Evaluator`] runs the model pipeline (with a
+//! memoizing design-point cache) and returns a joint [`eval::Metrics`]
+//! bundle:
+//!
 //! ```no_run
+//! use cube3d::eval::{Evaluator, Scenario};
 //! use cube3d::workloads::Gemm;
-//! use cube3d::analytical::{optimize_2d, optimize_3d};
+//!
+//! let evaluator = Evaluator::new(); // analytical + area + power
 //!
 //! // RN0: ResNet-50 layer from Table I of the paper.
-//! let wl = Gemm::new(64, 147, 12100);
-//! let macs = 1 << 18;
-//! let d2 = optimize_2d(&wl, macs);
-//! let d3 = optimize_3d(&wl, macs, 12);
-//! println!("3D speedup at 12 tiers: {:.2}x", d2.cycles as f64 / d3.cycles as f64);
+//! let s = Scenario::builder()
+//!     .gemm(Gemm::new(64, 147, 12100))
+//!     .mac_budget(1 << 18)
+//!     .tiers(12)
+//!     .build()
+//!     .unwrap();
+//! let m = evaluator.evaluate(&s);
+//! println!("3D speedup at 12 tiers: {:.2}x", m.speedup_vs_2d.unwrap());
+//!
+//! // Or a whole network trace — every layer cached independently.
+//! let trace = Scenario::builder().model("resnet50", 1).unwrap().build().unwrap();
+//! let t = evaluator.evaluate(&trace);
+//! println!("{} layers, {:.2}x end-to-end", t.layers, t.speedup_vs_2d.unwrap());
 //! ```
 //!
 //! See `DESIGN.md` for the full system inventory and the per-experiment
@@ -38,6 +53,7 @@ pub mod config;
 pub mod coordinator;
 pub mod dataflow;
 pub mod dse;
+pub mod eval;
 pub mod memory;
 pub mod power;
 pub mod report;

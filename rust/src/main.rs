@@ -3,31 +3,33 @@
 //!
 //! Subcommands:
 //!
-//! * `analyze`   — optimize 2D + 3D designs for one workload and print the
-//!                 runtime/speedup breakdown (Eq. 1 / Eq. 2).
-//! * `sweep`     — DSE sweep over budgets × tiers for a workload.
+//! * `analyze`   — evaluate one workload (2D baseline + 3D design) and print
+//!                 the runtime/speedup breakdown (Eq. 1 / Eq. 2).
+//! * `sweep`     — DSE sweep over budgets × tiers for a workload or a whole
+//!                 network trace (`--model resnet50` or a JSON config).
 //! * `power`     — Table-II-style power analysis for a configuration.
 //! * `thermal`   — Fig.-8-style thermal study for a configuration.
 //! * `simulate`  — run the exact cycle simulator on a small GEMM and check
 //!                 it against the analytical model and a direct matmul.
 //! * `reproduce` — regenerate every paper table/figure into an output dir.
 //! * `serve`     — start the coordinator and drive a GEMM trace through the
-//!                 PJRT runtime (requires `make artifacts`).
+//!                 runtime (uses `artifacts/`).
 //! * `workloads` — print the Table I workload library.
+//!
+//! Every metric printed here comes from the shared [`cube3d::eval`]
+//! evaluator — the CLI builds a [`Scenario`] and formats the bundle.
 
-use cube3d::analytical::{breakdown_2d, breakdown_3d, optimize_2d, optimize_3d, Array3d};
-use cube3d::config::{parse_vtech, ExperimentConfig};
+use cube3d::analytical::{breakdown_2d, breakdown_3d, cycles_3d};
+use cube3d::config::{parse_vtech, ExperimentConfig, WorkloadSpec};
 use cube3d::coordinator::{BatcherConfig, Coordinator, GemmJob, RouterConfig};
-use cube3d::dse::sweep;
-use cube3d::power::{power_summary, Tech};
+use cube3d::eval::{shared_evaluator, shared_full_evaluator, shared_performance_evaluator, Scenario};
 use cube3d::report::reproduce_all;
 use cube3d::runtime::find_artifact_dir;
 use cube3d::sim::{matmul_i64, simulate_dos, Matrix};
-use cube3d::thermal::{thermal_footprint_m2, thermal_study, ThermalParams};
 use cube3d::util::cli::{usage, Args, OptSpec};
 use cube3d::util::rng::Rng;
 use cube3d::util::table::Table;
-use cube3d::workloads::{table1, Gemm};
+use cube3d::workloads::{table1, Gemm, Workload};
 use std::path::Path;
 
 fn main() {
@@ -48,6 +50,12 @@ fn workload_opts() -> Vec<OptSpec> {
         OptSpec { name: "n", takes_value: true, help: "GEMM N dimension (default 147)" },
         OptSpec { name: "k", takes_value: true, help: "GEMM K dimension (default 12100)" },
         OptSpec { name: "layer", takes_value: true, help: "Table I layer label (RN0, GNMT1, ...)" },
+        OptSpec {
+            name: "model",
+            takes_value: true,
+            help: "full network trace (resnet50|gnmt|transformer|deepbench)",
+        },
+        OptSpec { name: "batch", takes_value: true, help: "batch size for --model (default 1)" },
         OptSpec { name: "macs", takes_value: true, help: "MAC budget (default 262144)" },
         OptSpec { name: "tiers", takes_value: true, help: "tier count or list (default 4)" },
         OptSpec { name: "vtech", takes_value: true, help: "tsv|miv|f2f (default tsv)" },
@@ -58,17 +66,20 @@ fn workload_opts() -> Vec<OptSpec> {
     ]
 }
 
-fn parse_workload(args: &Args) -> anyhow::Result<Gemm> {
-    if let Some(label) = args.get("layer") {
-        let e = cube3d::workloads::by_label(label)
-            .ok_or_else(|| anyhow::anyhow!("unknown Table I layer '{label}'"))?;
-        return Ok(e.gemm);
+/// Resolve the workload options to a single GEMM for subcommands that
+/// analyze one layer at a time (dataflows, pareto, memory). Traces are
+/// truncated to their first layer, loudly.
+fn single_gemm_workload(args: &Args) -> anyhow::Result<Gemm> {
+    let w = WorkloadSpec::from_args(args)?.resolve()?;
+    if let Workload::Trace { name, layers } = &w {
+        eprintln!(
+            "note: this subcommand analyzes one layer at a time; using {} layer 1/{} ('{}')",
+            name,
+            layers.len(),
+            layers[0].name
+        );
     }
-    Ok(Gemm::new(
-        args.get_u64_or("m", 64).map_err(anyhow::Error::msg)?,
-        args.get_u64_or("n", 147).map_err(anyhow::Error::msg)?,
-        args.get_u64_or("k", 12100).map_err(anyhow::Error::msg)?,
-    ))
+    Ok(w.primary_gemm())
 }
 
 fn run(argv: &[String]) -> anyhow::Result<()> {
@@ -78,7 +89,7 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
     };
     let rest = &argv[1..];
     let specs = workload_opts();
-    let args = Args::parse(rest, &specs).map_err(anyhow::Error::msg)?;
+    let args = Args::parse(rest, &specs)?;
 
     match cmd.as_str() {
         "analyze" => cmd_analyze(&args),
@@ -103,8 +114,8 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
 fn print_help() {
     println!("cube3d — 3D-IC systolic-array DNN-accelerator co-design framework\n");
     for (c, about) in [
-        ("analyze", "optimize 2D + 3D designs for one workload (Eq. 1/2)"),
-        ("sweep", "DSE sweep over MAC budgets × tier counts"),
+        ("analyze", "evaluate 2D + 3D designs for one workload (Eq. 1/2)"),
+        ("sweep", "DSE sweep over MAC budgets × tier counts (GEMM or trace)"),
         ("power", "Table-II-style power analysis"),
         ("thermal", "Fig.-8-style thermal study"),
         ("simulate", "exact cycle simulation, checked vs model + matmul"),
@@ -121,38 +132,64 @@ fn print_help() {
 }
 
 fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
-    let g = parse_workload(args)?;
-    let macs = args.get_u64_or("macs", 1 << 18).map_err(anyhow::Error::msg)?;
-    let tiers = args.get_u64_or("tiers", 4).map_err(anyhow::Error::msg)?;
-    let d2 = optimize_2d(&g, macs);
-    let d3 = optimize_3d(&g, macs, tiers);
-    let b2 = breakdown_2d(&g, &d2.array2d());
-    let b3 = breakdown_3d(&g, &d3.array3d());
+    let s = Scenario::from_args(args, 1 << 18, 4)?;
+    let m = shared_evaluator().evaluate(&s);
+    println!(
+        "workload  {}   budget {} MACs   ({})\n",
+        s.workload.description(),
+        s.mac_budget,
+        s.vtech.name()
+    );
 
-    println!("workload  {g}   budget {macs} MACs\n");
-    let mut t = Table::new(["", "array", "cycles", "fill", "compute", "reduce", "drain", "folds"]);
-    t.row([
-        "2D".into(),
-        format!("{}x{}", d2.rows, d2.cols),
-        d2.cycles.to_string(),
-        b2.fill.to_string(),
-        b2.compute.to_string(),
-        b2.reduce.to_string(),
-        b2.drain.to_string(),
-        b2.folds.to_string(),
-    ]);
-    t.row([
-        format!("3D ℓ={tiers}"),
-        format!("{}x{}x{}", d3.rows, d3.cols, d3.tiers),
-        d3.cycles.to_string(),
-        b3.fill.to_string(),
-        b3.compute.to_string(),
-        b3.reduce.to_string(),
-        b3.drain.to_string(),
-        b3.folds.to_string(),
-    ]);
-    println!("{}", t.to_ascii());
-    println!("speedup 3D/2D: {:.3}x", d2.cycles as f64 / d3.cycles as f64);
+    match &s.workload {
+        Workload::Gemm { gemm, .. } => {
+            let d2 = m.design_2d.expect("optimized point has a 2D baseline");
+            let d3 = m.design_3d.expect("analytical model in pipeline");
+            let b2 = breakdown_2d(gemm, &d2.array2d());
+            let b3 = breakdown_3d(gemm, &d3.array3d());
+            let mut t =
+                Table::new(["", "array", "cycles", "fill", "compute", "reduce", "drain", "folds"]);
+            t.row([
+                "2D".into(),
+                format!("{}x{}", d2.rows, d2.cols),
+                d2.cycles.to_string(),
+                b2.fill.to_string(),
+                b2.compute.to_string(),
+                b2.reduce.to_string(),
+                b2.drain.to_string(),
+                b2.folds.to_string(),
+            ]);
+            t.row([
+                format!("3D ℓ={}", d3.tiers),
+                format!("{}x{}x{}", d3.rows, d3.cols, d3.tiers),
+                d3.cycles.to_string(),
+                b3.fill.to_string(),
+                b3.compute.to_string(),
+                b3.reduce.to_string(),
+                b3.drain.to_string(),
+                b3.folds.to_string(),
+            ]);
+            println!("{}", t.to_ascii());
+        }
+        Workload::Trace { .. } => {
+            let mut t = Table::new(["layers", "MACs", "cycles 2D", "cycles 3D", "binding design"]);
+            let d3 = m.design_3d.expect("analytical model in pipeline");
+            t.row([
+                m.layers.to_string(),
+                format!("{:.2e}", m.macs as f64),
+                m.cycles_2d.map_or("-".into(), |c| c.to_string()),
+                m.cycles_3d.map_or("-".into(), |c| c.to_string()),
+                format!("{}x{}x{}", d3.rows, d3.cols, d3.tiers),
+            ]);
+            println!("{}", t.to_ascii());
+        }
+    }
+    if let Some(speedup) = m.speedup_vs_2d {
+        println!("speedup 3D/2D: {speedup:.3}x");
+    }
+    if let Some(power) = m.power_w() {
+        println!("average power: {power:.2} W   area {:.2} mm²", m.area_m2.unwrap_or(0.0) * 1e6);
+    }
     Ok(())
 }
 
@@ -160,12 +197,14 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     let cfg = match args.get("config") {
         Some(path) => ExperimentConfig::from_file(Path::new(path))?,
         None => {
-            let mut c = ExperimentConfig::default();
-            c.workload = parse_workload(args)?;
-            if let Some(ts) = args.get_u64_list("tiers").map_err(anyhow::Error::msg)? {
+            let mut c = ExperimentConfig {
+                workload: WorkloadSpec::from_args(args)?,
+                ..Default::default()
+            };
+            if let Some(ts) = args.get_u64_list("tiers")? {
                 c.tiers = ts;
             }
-            if let Some(bs) = args.get_u64_list("macs").map_err(anyhow::Error::msg)? {
+            if let Some(bs) = args.get_u64_list("macs")? {
                 c.mac_budgets = bs;
             }
             if let Some(v) = args.get("vtech") {
@@ -175,39 +214,49 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
             c
         }
     };
-    let tech = Tech::default();
-    let pts = sweep(&[cfg.workload], &cfg.mac_budgets, &cfg.tiers, cfg.vertical_tech, &tech);
+    let scenarios = Scenario::expand_config(&cfg)?;
+    let metrics = shared_evaluator().evaluate_batch(&scenarios);
+
+    let workload = cfg.workload.resolve()?;
+    println!(
+        "workload {} ({})   {} scenarios\n",
+        workload.description(),
+        cfg.vertical_tech.name(),
+        scenarios.len()
+    );
     let mut t = Table::new(["MACs", "ℓ", "cycles", "speedup", "perf/area vs 2D", "power W"]);
-    for p in &pts {
+    for (s, m) in scenarios.iter().zip(&metrics) {
         t.row([
-            p.mac_budget.to_string(),
-            p.tiers.to_string(),
-            p.cycles.to_string(),
-            format!("{:.3}x", p.speedup_vs_2d),
-            format!("{:.3}x", p.perf_per_area_vs_2d),
-            format!("{:.2}", p.power_w),
+            s.mac_budget.to_string(),
+            m.tiers.map_or("-".into(), |v| v.to_string()),
+            m.cycles_3d.map_or("-".into(), |v| v.to_string()),
+            m.speedup_vs_2d.map_or("-".into(), |v| format!("{v:.3}x")),
+            m.perf_per_area_vs_2d.map_or("-".into(), |v| format!("{v:.3}x")),
+            m.power_w().map_or("-".into(), |v| format!("{v:.2}")),
         ]);
     }
-    println!("workload {} ({})\n", cfg.workload, cfg.vertical_tech.name());
     println!("{}", t.to_ascii());
     Ok(())
 }
 
 fn cmd_power(args: &Args) -> anyhow::Result<()> {
-    let g = parse_workload(args)?;
-    let macs = args.get_u64_or("macs", 49152).map_err(anyhow::Error::msg)?;
-    let tiers = args.get_u64_or("tiers", 3).map_err(anyhow::Error::msg)?;
-    let vtech = parse_vtech(args.get_or("vtech", "tsv"))?;
-    let d3 = optimize_3d(&g, macs, tiers);
-    let arr = d3.array3d();
-    let tech = Tech::default();
-    let p = power_summary(&g, &arr, &tech, vtech);
+    let s = Scenario::from_args(args, 49152, 3)?;
+    let m = shared_evaluator().evaluate(&s);
+    let p = m.power.expect("power model in pipeline");
+    let d3 = m.design_3d.expect("analytical model in pipeline");
+    // For traces the table is a runtime-weighted merge over all layers;
+    // the printed design is the binding (max-cycles) layer's array.
+    let array_label = match &s.workload {
+        Workload::Gemm { .. } => "array",
+        Workload::Trace { .. } => "binding design",
+    };
     println!(
-        "array {}x{}x{} ({})   workload {g}",
-        arr.rows,
-        arr.cols,
-        arr.tiers,
-        vtech.name()
+        "{array_label} {}x{}x{} ({})   workload {}",
+        d3.rows,
+        d3.cols,
+        d3.tiers,
+        s.vtech.name(),
+        s.workload.description()
     );
     let mut t = Table::new(["component", "W"]);
     for (n, v) in [
@@ -229,26 +278,28 @@ fn cmd_power(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_thermal(args: &Args) -> anyhow::Result<()> {
-    let g = parse_workload(args)?;
-    let macs = args.get_u64_or("macs", 49152).map_err(anyhow::Error::msg)?;
-    let tiers = args.get_u64_or("tiers", 3).map_err(anyhow::Error::msg)?;
-    let vtech = parse_vtech(args.get_or("vtech", "tsv"))?;
-    let d3 = optimize_3d(&g, macs, tiers);
-    let arr = d3.array3d();
-    let tech = Tech::default();
-    let params = ThermalParams::default();
-    let s = thermal_study(&g, &arr, &tech, vtech, &params, thermal_footprint_m2(&arr, &tech));
+    let s = Scenario::from_args(args, 49152, 3)?;
+    let m = shared_full_evaluator().evaluate(&s);
+    let study = m.thermal.expect("thermal model in pipeline");
+    // For traces the study belongs to the hottest layer, which need not be
+    // the binding (max-cycles) layer behind `m.design_3d` — describe the
+    // stack from the study itself.
+    let array_desc = match &s.workload {
+        Workload::Gemm { .. } => {
+            let d3 = m.design_3d.expect("analytical model in pipeline");
+            format!("array {}x{}x{}", d3.rows, d3.cols, d3.tiers)
+        }
+        Workload::Trace { .. } => format!("hottest layer's stack, ℓ={}", study.tiers.len()),
+    };
     println!(
-        "array {}x{}x{} ({})   workload {g}   power {:.2} W   footprint {:.2} mm²",
-        arr.rows,
-        arr.cols,
-        arr.tiers,
-        vtech.name(),
-        s.total_power_w,
-        s.die_area_m2 * 1e6
+        "{array_desc} ({})   workload {}   power {:.2} W   footprint {:.2} mm²",
+        s.vtech.name(),
+        s.workload.description(),
+        study.total_power_w,
+        study.die_area_m2 * 1e6
     );
     let mut t = Table::new(["tier", "min °C", "q1", "median", "q3", "max"]);
-    for tt in &s.tiers {
+    for tt in &study.tiers {
         t.row([
             tt.tier.to_string(),
             format!("{:.1}", tt.stats.min),
@@ -263,19 +314,19 @@ fn cmd_thermal(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
-    let m = args.get_u64_or("m", 24).map_err(anyhow::Error::msg)? as usize;
-    let n = args.get_u64_or("n", 20).map_err(anyhow::Error::msg)? as usize;
-    let k = args.get_u64_or("k", 60).map_err(anyhow::Error::msg)? as usize;
-    let tiers = args.get_u64_or("tiers", 3).map_err(anyhow::Error::msg)?;
-    let seed = args.get_u64_or("seed", 7).map_err(anyhow::Error::msg)?;
+    let m = args.get_u64_or("m", 24)? as usize;
+    let n = args.get_u64_or("n", 20)? as usize;
+    let k = args.get_u64_or("k", 60)? as usize;
+    let tiers = args.get_u64_or("tiers", 3)?;
+    let seed = args.get_u64_or("seed", 7)?;
     let mut rng = Rng::new(seed);
     let a = Matrix::from_fn(m, k, |_, _| rng.gen_range(255) as i64 - 127);
     let b = Matrix::from_fn(k, n, |_, _| rng.gen_range(255) as i64 - 127);
-    let arr = Array3d::new(8.min(m as u64), 8.min(n as u64), tiers);
+    let arr = cube3d::analytical::Array3d::new(8.min(m as u64), 8.min(n as u64), tiers);
     let r = simulate_dos(&a, &b, &arr);
     let expect = matmul_i64(&a, &b);
     let g = Gemm::new(m as u64, n as u64, k as u64);
-    let model_cycles = cube3d::analytical::cycles_3d(&g, &arr);
+    let model_cycles = cycles_3d(&g, &arr);
     println!("simulated GEMM {g} on {}x{}x{}", arr.rows, arr.cols, arr.tiers);
     println!(
         "  functional:  {}",
@@ -317,8 +368,8 @@ fn cmd_reproduce(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let dir = find_artifact_dir()?;
-    let n_jobs = args.get_u64_or("jobs", 32).map_err(anyhow::Error::msg)? as usize;
-    let seed = args.get_u64_or("seed", 7).map_err(anyhow::Error::msg)?;
+    let n_jobs = args.get_u64_or("jobs", 32)? as usize;
+    let seed = args.get_u64_or("seed", 7)?;
     println!("starting coordinator on artifacts at {}", dir.display());
     let coord = Coordinator::start(&dir, RouterConfig::default(), BatcherConfig::default())?;
 
@@ -372,19 +423,23 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_dataflows(args: &Args) -> anyhow::Result<()> {
     use cube3d::dataflow::{optimize_is_3d, optimize_ws_3d};
-    let g = parse_workload(args)?;
-    let macs = args.get_u64_or("macs", 1 << 18).map_err(anyhow::Error::msg)?;
+    let g = single_gemm_workload(args)?;
+    let macs = args.get_u64_or("macs", 1 << 18)?;
     let tiers_list = args
-        .get_u64_list("tiers")
-        .map_err(anyhow::Error::msg)?
+        .get_u64_list("tiers")?
         .unwrap_or_else(|| vec![1, 2, 4, 8, 12]);
+    let evaluator = shared_performance_evaluator();
     println!("workload {g}   budget {macs} MACs\n");
     let mut t = Table::new(["ℓ", "dOS cycles", "WS cycles", "IS cycles", "best"]);
     for &tiers in &tiers_list {
         if macs / tiers == 0 {
             continue;
         }
-        let dos = optimize_3d(&g, macs, tiers).cycles;
+        let s = Scenario::builder().gemm(g).mac_budget(macs).tiers(tiers).build()?;
+        let dos = evaluator
+            .evaluate(&s)
+            .cycles_3d
+            .expect("analytical model in pipeline");
         let (_, ws) = optimize_ws_3d(&g, macs, tiers);
         let (_, is) = optimize_is_3d(&g, macs, tiers);
         let best = if dos <= ws && dos <= is {
@@ -410,15 +465,14 @@ fn cmd_dataflows(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_pareto(args: &Args) -> anyhow::Result<()> {
     use cube3d::dse::{pareto_front, sweep};
-    let g = parse_workload(args)?;
+    use cube3d::power::Tech;
+    let g = single_gemm_workload(args)?;
     let vtech = parse_vtech(args.get_or("vtech", "miv"))?;
     let budgets = args
-        .get_u64_list("macs")
-        .map_err(anyhow::Error::msg)?
+        .get_u64_list("macs")?
         .unwrap_or_else(|| vec![4096, 32768, 262144]);
     let tiers = args
-        .get_u64_list("tiers")
-        .map_err(anyhow::Error::msg)?
+        .get_u64_list("tiers")?
         .unwrap_or_else(|| vec![1, 2, 4, 8, 12]);
     let pts = sweep(&[g], &budgets, &tiers, vtech, &Tech::default());
     let front = pareto_front(&pts);
@@ -447,11 +501,17 @@ fn cmd_memory(args: &Args) -> anyhow::Result<()> {
     use cube3d::memory::{
         bw_amplification, memory_demand, DDR4_3200, HBM2, HBM2E, LPDDR5, STACKED_3D,
     };
-    let g = parse_workload(args)?;
-    let macs = args.get_u64_or("macs", 1 << 18).map_err(anyhow::Error::msg)?;
-    let tiers = args.get_u64_or("tiers", 12).map_err(anyhow::Error::msg)?;
+    use cube3d::power::Tech;
+    let g = single_gemm_workload(args)?;
+    let s = Scenario::builder()
+        .gemm(g)
+        .mac_budget(args.get_u64_or("macs", 1 << 18)?)
+        .tiers(args.get_u64_or("tiers", 12)?)
+        .vtech(parse_vtech(args.get_or("vtech", "tsv"))?)
+        .build()?;
+    let m = shared_performance_evaluator().evaluate(&s);
+    let d3 = m.design_3d.expect("analytical model in pipeline");
     let tech = Tech::default();
-    let d3 = optimize_3d(&g, macs, tiers);
     let dem = memory_demand(&g, &d3.array3d(), &tech, 1, 2);
     println!(
         "workload {g}   design {}x{}x{}   traffic {:.2} MB   runtime {:.1} µs   required BW {:.1} GB/s\n",
@@ -475,7 +535,7 @@ fn cmd_memory(args: &Args) -> anyhow::Result<()> {
     println!(
         "3D bandwidth amplification vs 2D (same budget): {:.2}x — the reason the paper\n\
          points at 3D-stacked memory ([7], TETRIS) as the companion technology.",
-        bw_amplification(&g, macs, tiers, &tech)
+        bw_amplification(&g, s.mac_budget, d3.tiers, &tech)
     );
     Ok(())
 }

@@ -1,9 +1,9 @@
 //! Fig. 5: 3D-over-2D speedup vs tier count, for MAC budgets
 //! {2^12, 2^15, 2^18} and K ∈ {255, 4033, 12100} (M = 64, N = 147 — the
-//! ResNet-50 RN0 family).
+//! ResNet-50 RN0 family). Metric bundles come from the shared evaluator.
 
 use super::Report;
-use crate::analytical::tier_sweep;
+use crate::eval::{shared_performance_evaluator, Scenario};
 use crate::util::csv::Csv;
 use crate::util::table::Table;
 use crate::workloads::Gemm;
@@ -13,6 +13,7 @@ pub const BUDGETS: [u64; 3] = [1 << 12, 1 << 15, 1 << 18];
 pub const KS: [u64; 3] = [255, 4033, 12100];
 
 pub fn report() -> Report {
+    let evaluator = shared_performance_evaluator();
     let mut csv = Csv::new(["macs", "k", "tiers", "speedup", "cycles_3d", "cycles_2d"]);
     let mut tbl = Table::new(["MACs", "K", "ℓ=2", "ℓ=4", "ℓ=8", "ℓ=12"]);
     let mut best: (f64, u64, u64, u64) = (0.0, 0, 0, 0);
@@ -21,25 +22,37 @@ pub fn report() -> Report {
     for &budget in &BUDGETS {
         for &k in &KS {
             let g = Gemm::new(64, 147, k);
-            let pts = tier_sweep(&g, budget, &TIERS);
+            let scenarios: Vec<Scenario> = TIERS
+                .iter()
+                .map(|&tiers| {
+                    Scenario::builder()
+                        .gemm(g)
+                        .mac_budget(budget)
+                        .tiers(tiers)
+                        .build()
+                        .expect("Fig. 5 grid is valid")
+                })
+                .collect();
+            let metrics = evaluator.evaluate_batch(&scenarios);
             let mut row = vec![format!("2^{}", budget.trailing_zeros()), k.to_string()];
-            for p in &pts {
+            for (tiers, m) in TIERS.iter().zip(&metrics) {
+                let speedup = m.speedup_vs_2d.expect("optimized point");
                 csv.row([
                     budget.to_string(),
                     k.to_string(),
-                    p.tiers.to_string(),
-                    format!("{:.4}", p.speedup),
-                    p.design_3d.cycles.to_string(),
-                    p.design_2d.cycles.to_string(),
+                    tiers.to_string(),
+                    format!("{speedup:.4}"),
+                    m.cycles_3d.expect("analytical model").to_string(),
+                    m.cycles_2d.expect("analytical model").to_string(),
                 ]);
-                if [2, 4, 8, 12].contains(&p.tiers) {
-                    row.push(format!("{:.2}x", p.speedup));
+                if [2, 4, 8, 12].contains(tiers) {
+                    row.push(format!("{speedup:.2}x"));
                 }
-                if p.speedup > best.0 {
-                    best = (p.speedup, budget, k, p.tiers);
+                if speedup > best.0 {
+                    best = (speedup, budget, k, *tiers);
                 }
-                if p.tiers == 2 {
-                    best2 = best2.max(p.speedup);
+                if *tiers == 2 {
+                    best2 = best2.max(speedup);
                 }
             }
             tbl.row(row);

@@ -2,7 +2,7 @@
 //! and K ∈ {1024, 12100} (M = 64), with the N_min > M·N threshold marked.
 
 use super::Report;
-use crate::analytical::speedup_3d_over_2d;
+use crate::eval::{shared_performance_evaluator, Scenario};
 use crate::util::csv::Csv;
 use crate::util::table::Table;
 use crate::workloads::Gemm;
@@ -16,6 +16,7 @@ pub fn budgets() -> Vec<u64> {
 }
 
 pub fn report() -> Report {
+    let evaluator = shared_performance_evaluator();
     let mut csv = Csv::new(["macs", "n", "k", "speedup", "threshold_mn", "above_threshold"]);
     let mut tbl = Table::new(["N", "K", "threshold M·N", "first budget with speedup>1.1", "max speedup"]);
     let mut notes = Vec::new();
@@ -25,23 +26,33 @@ pub fn report() -> Report {
         for &k in &KS {
             let g = Gemm::new(64, n, k);
             let threshold = g.min_macs_for_3d();
+            let feasible: Vec<u64> = budgets().into_iter().filter(|b| b / TIERS >= 1).collect();
+            let scenarios: Vec<Scenario> = feasible
+                .iter()
+                .map(|&b| {
+                    Scenario::builder()
+                        .gemm(g)
+                        .mac_budget(b)
+                        .tiers(TIERS)
+                        .build()
+                        .expect("Fig. 6 grid is valid")
+                })
+                .collect();
+            let metrics = evaluator.evaluate_batch(&scenarios);
             let mut first_win: Option<u64> = None;
             let mut max_s: f64 = 0.0;
-            for &b in &budgets() {
-                if b / TIERS == 0 {
-                    continue;
-                }
-                let s = speedup_3d_over_2d(&g, b, TIERS);
+            for (b, m) in feasible.iter().zip(&metrics) {
+                let s = m.speedup_vs_2d.expect("optimized point");
                 csv.row([
                     b.to_string(),
                     n.to_string(),
                     k.to_string(),
                     format!("{s:.4}"),
                     threshold.to_string(),
-                    (b > threshold).to_string(),
+                    (*b > threshold).to_string(),
                 ]);
                 if s > 1.1 && first_win.is_none() {
-                    first_win = Some(b);
+                    first_win = Some(*b);
                 }
                 max_s = max_s.max(s);
             }

@@ -1,9 +1,10 @@
 //! Fig. 7: distribution of the *optimal* tier count over 300 random
 //! ResNet-50-derived workloads, for three MAC budgets; the median shifts
-//! right as the budget grows.
+//! right as the budget grows. Tier optimization is the evaluator's
+//! `TierChoice::Auto` resolution, batched over the threadpool.
 
 use super::Report;
-use crate::dse::optimal_tiers_sweep;
+use crate::eval::{shared_performance_evaluator, Scenario};
 use crate::util::csv::Csv;
 use crate::util::stats::median;
 use crate::util::table::Table;
@@ -17,21 +18,36 @@ pub const SEED: u64 = 0x3D_ACCE1;
 pub fn report() -> Report {
     let cfg = GeneratorConfig::from_resnet50(N_WORKLOADS, SEED);
     let workloads = random_workloads(&cfg);
+    let evaluator = shared_performance_evaluator();
 
     let mut csv = Csv::new(["macs", "m", "n", "k", "optimal_tiers"]);
     let mut tbl = Table::new(["MACs", "median optimal ℓ", "mean", "ℓ=1 count", "ℓ≥8 count"]);
     let mut medians = Vec::new();
 
     for &budget in &BUDGETS {
-        let results = optimal_tiers_sweep(&workloads, &[budget], MAX_TIERS);
-        let tiers: Vec<f64> = results.iter().map(|(_, _, t)| *t as f64).collect();
-        for (g, _, t) in &results {
+        let scenarios: Vec<Scenario> = workloads
+            .iter()
+            .map(|&g| {
+                Scenario::builder()
+                    .gemm(g)
+                    .mac_budget(budget)
+                    .tiers_auto(MAX_TIERS)
+                    .build()
+                    .expect("auto-tier scenario is always valid")
+            })
+            .collect();
+        let metrics = evaluator.evaluate_batch(&scenarios);
+        let tiers: Vec<f64> = metrics
+            .iter()
+            .map(|m| m.tiers.expect("analytical model resolves tiers") as f64)
+            .collect();
+        for (g, t) in workloads.iter().zip(&tiers) {
             csv.row([
                 budget.to_string(),
                 g.m.to_string(),
                 g.n.to_string(),
                 g.k.to_string(),
-                t.to_string(),
+                (*t as u64).to_string(),
             ]);
         }
         let med = median(&tiers);

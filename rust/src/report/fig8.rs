@@ -1,12 +1,14 @@
 //! Fig. 8: temperature boxplots for 2D arrays of {12321, 49284, 197136}
 //! MACs vs 3-tier 3D arrays of {4096, 16384, 65536} MACs/tier (TSV and
 //! MIV), workload M = N = 128, K = 300. 3D data split into *bottom* (near
-//! heatsink) and *middle* (the rest).
+//! heatsink) and *middle* (the rest). Pinned-array scenarios through the
+//! shared full-physical evaluator (thermal model included).
 
 use super::Report;
 use crate::analytical::Array3d;
-use crate::power::{Tech, VerticalTech};
-use crate::thermal::{thermal_footprint_m2, thermal_study, ThermalParams, ThermalStudy};
+use crate::eval::{shared_full_evaluator, Scenario};
+use crate::power::VerticalTech;
+use crate::thermal::ThermalStudy;
 use crate::util::csv::Csv;
 use crate::util::stats::Boxplot;
 use crate::util::table::Table;
@@ -37,11 +39,18 @@ pub fn configs() -> Vec<(String, Array3d, VerticalTech)> {
     out
 }
 
+/// One Fig. 8 configuration through the evaluator pipeline.
 pub fn run_config(arr: &Array3d, v: VerticalTech) -> ThermalStudy {
-    let tech = Tech::default();
-    let params = ThermalParams::default();
-    let area = thermal_footprint_m2(arr, &tech);
-    thermal_study(&workload(), arr, &tech, v, &params, area)
+    let s = Scenario::builder()
+        .gemm(workload())
+        .array(*arr)
+        .vtech(v)
+        .build()
+        .expect("Fig. 8 configuration is valid");
+    shared_full_evaluator()
+        .evaluate(&s)
+        .thermal
+        .expect("thermal model in pipeline")
 }
 
 fn push_box(csv: &mut Csv, tbl: &mut Table, label: &str, region: &str, b: &Boxplot) {

@@ -4,8 +4,8 @@
 //! face-to-face bonding point the paper highlights as manufacturable today.
 
 use super::Report;
-use crate::area::perf_per_area_vs_2d;
-use crate::power::{Tech, VerticalTech};
+use crate::eval::{shared_evaluator, Scenario};
+use crate::power::VerticalTech;
 use crate::util::csv::Csv;
 use crate::util::table::Table;
 use crate::workloads::Gemm;
@@ -17,9 +17,21 @@ pub fn workload() -> Gemm {
     Gemm::new(64, 147, 12100)
 }
 
+fn ppa(budget: u64, tiers: u64, vtech: VerticalTech) -> f64 {
+    let s = Scenario::builder()
+        .gemm(workload())
+        .mac_budget(budget)
+        .tiers(tiers)
+        .vtech(vtech)
+        .build()
+        .expect("Fig. 9 grid is valid");
+    shared_evaluator()
+        .evaluate(&s)
+        .perf_per_area_vs_2d
+        .expect("area model in pipeline")
+}
+
 pub fn report() -> Report {
-    let tech = Tech::default();
-    let g = workload();
     let mut csv = Csv::new(["macs", "tiers", "vtech", "perf_per_area_vs_2d"]);
     let mut tbl = Table::new(["MACs", "ℓ", "TSV", "MIV", "F2F (ℓ=2 only)"]);
     let mut tsv_large_max: f64 = 0.0;
@@ -32,12 +44,12 @@ pub fn report() -> Report {
             if budget / tiers == 0 {
                 continue;
             }
-            let tsv = perf_per_area_vs_2d(&g, budget, tiers, &tech, VerticalTech::Tsv);
-            let miv = perf_per_area_vs_2d(&g, budget, tiers, &tech, VerticalTech::Miv);
+            let tsv = ppa(budget, tiers, VerticalTech::Tsv);
+            let miv = ppa(budget, tiers, VerticalTech::Miv);
             csv.row([budget.to_string(), tiers.to_string(), "tsv".into(), format!("{tsv:.4}")]);
             csv.row([budget.to_string(), tiers.to_string(), "miv".into(), format!("{miv:.4}")]);
             let f2f = if tiers == 2 {
-                let v = perf_per_area_vs_2d(&g, budget, 2, &tech, VerticalTech::FaceToFace);
+                let v = ppa(budget, 2, VerticalTech::FaceToFace);
                 csv.row([budget.to_string(), "2".into(), "f2f".into(), format!("{v:.4}")]);
                 f2f_range = (f2f_range.0.min(v), f2f_range.1.max(v));
                 format!("{v:.2}x")

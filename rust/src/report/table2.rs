@@ -1,10 +1,12 @@
 //! Table II: total and peak power of a 3-tier 3D array (16384 MACs/tier,
 //! TSV and MIV) vs a 2D array with a similar MAC count (49284 = 222×222);
-//! workload M = N = 128, K = 300.
+//! workload M = N = 128, K = 300. Pinned-array scenarios through the
+//! shared evaluator.
 
 use super::Report;
 use crate::analytical::Array3d;
-use crate::power::{power_summary, Tech, VerticalTech};
+use crate::eval::{shared_evaluator, Scenario};
+use crate::power::{PowerBreakdown, VerticalTech};
 use crate::util::csv::Csv;
 use crate::util::table::Table;
 use crate::workloads::Gemm;
@@ -21,9 +23,21 @@ pub fn array_3d() -> Array3d {
     Array3d::new(128, 128, 3)
 }
 
+/// Power bundle of one Table II configuration via the evaluator.
+pub fn power_of(arr: Array3d, vtech: VerticalTech) -> PowerBreakdown {
+    let s = Scenario::builder()
+        .gemm(workload())
+        .array(arr)
+        .vtech(vtech)
+        .build()
+        .expect("Table II configuration is valid");
+    shared_evaluator()
+        .evaluate(&s)
+        .power
+        .expect("power model in pipeline")
+}
+
 pub fn report() -> Report {
-    let tech = Tech::default();
-    let g = workload();
     let rows = [
         ("2D", array_2d(), VerticalTech::Tsv),
         ("3D TSV", array_3d(), VerticalTech::Tsv),
@@ -34,11 +48,11 @@ pub fn report() -> Report {
         "energy_uj",
     ]);
     let mut tbl = Table::new(["", "Total Power", "Δ", "Peak Power", "Δ"]);
-    let base = power_summary(&g, &rows[0].1, &tech, rows[0].2);
+    let base = power_of(rows[0].1, rows[0].2);
     let mut notes = Vec::new();
 
     for (name, arr, v) in rows {
-        let p = power_summary(&g, &arr, &tech, v);
+        let p = power_of(arr, v);
         let d_tot = (p.total_w - base.total_w) / base.total_w * 100.0;
         let d_pk = (p.peak_w - base.peak_w) / base.peak_w * 100.0;
         csv.row([
@@ -86,11 +100,9 @@ mod tests {
     fn ordering_matches_paper() {
         // 2D > TSV > MIV in total power.
         use super::*;
-        let tech = Tech::default();
-        let g = workload();
-        let p2 = power_summary(&g, &array_2d(), &tech, VerticalTech::Tsv).total_w;
-        let pt = power_summary(&g, &array_3d(), &tech, VerticalTech::Tsv).total_w;
-        let pm = power_summary(&g, &array_3d(), &tech, VerticalTech::Miv).total_w;
+        let p2 = power_of(array_2d(), VerticalTech::Tsv).total_w;
+        let pt = power_of(array_3d(), VerticalTech::Tsv).total_w;
+        let pm = power_of(array_3d(), VerticalTech::Miv).total_w;
         assert!(p2 > pt && pt > pm, "{p2} {pt} {pm}");
     }
 }

@@ -1,0 +1,285 @@
+//! Interpreter execution backend (default build): the manifest's artifacts
+//! executed numerically on the CPU, with the same public surface, shape
+//! validation and failure behavior as the PJRT client.
+//!
+//! Artifact kinds and their semantics:
+//!
+//! * `gemm`       — `C = A·B` (f32).
+//! * `partials`   — per-tier partial sums: K split across `tiers` like the
+//!                  dOS dataflow (`dos_k_split`), one M×N partial per tier.
+//! * `quant_gemm` — `C(i32) = A(i8)·B(i8)`, returned as i64 for direct
+//!                  comparison with the cycle simulator's integer datapath.
+//! * `mlp`        — `y = relu(x·w1)·w2` (f32).
+//!
+//! Like the PJRT backend, artifacts are "loaded" lazily and cached: loading
+//! validates that the HLO text file exists and carries an `HloModule`
+//! header, so corrupt or missing artifacts fail at first use, not at
+//! construction.
+
+use super::artifact::{ArtifactMeta, Manifest};
+use crate::dataflow::dos_k_split;
+use crate::sim::{matmul_f32, Matrix};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+
+/// The interpreter runtime bound to one artifact directory.
+///
+/// Mirrors the PJRT `Runtime` API: intended to be owned by a single executor
+/// thread, with the coordinator feeding it work over channels.
+pub struct Runtime {
+    dir: PathBuf,
+    manifest: Manifest,
+    /// Artifacts whose HLO file has been validated ("loaded").
+    loaded: HashSet<String>,
+    /// Executions performed (metrics).
+    pub executions: u64,
+}
+
+impl Runtime {
+    /// Bind to an artifact directory and read its manifest.
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifact_dir)?;
+        Ok(Runtime {
+            dir: artifact_dir.to_path_buf(),
+            manifest,
+            loaded: HashSet::new(),
+            executions: 0,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        "interpreter (cpu)".to_string()
+    }
+
+    /// Metadata for an artifact, erroring on unknown names.
+    pub fn meta(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))
+    }
+
+    /// Validate (or fetch the cached validation of) an artifact's HLO file —
+    /// the interpreter's analogue of compiling it.
+    fn load(&mut self, name: &str) -> Result<()> {
+        if self.loaded.contains(name) {
+            return Ok(());
+        }
+        let meta = self.meta(name)?.clone();
+        let path = self.dir.join(&meta.file);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        if !text.contains("HloModule") {
+            bail!("{} is not HLO text (no HloModule header)", path.display());
+        }
+        self.loaded.insert(name.to_string());
+        Ok(())
+    }
+
+    /// Eagerly validate every artifact in the manifest (startup warm-up).
+    pub fn warm_up(&mut self) -> Result<()> {
+        let names: Vec<String> = self.manifest.names().map(String::from).collect();
+        for n in &names {
+            self.load(n)?;
+        }
+        Ok(())
+    }
+
+    fn check_shapes(name: &str, meta: &ArtifactMeta, got: &[[u64; 2]]) -> Result<()> {
+        if got.len() != meta.inputs.len() {
+            bail!(
+                "artifact {name} expects {} inputs, got {}",
+                meta.inputs.len(),
+                got.len()
+            );
+        }
+        for (i, (g, shape)) in got.iter().zip(&meta.inputs).enumerate() {
+            if g != shape.as_slice() {
+                bail!("artifact {name} input {i}: expected {shape:?}, got {g:?}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact on f32 matrices and return all outputs flattened
+    /// (mirrors the PJRT tuple-return convention: one flat buffer per
+    /// logical output).
+    pub fn run(&mut self, name: &str, inputs: &[&Matrix<f32>]) -> Result<Vec<Vec<f32>>> {
+        let meta = self.meta(name)?.clone();
+        let got: Vec<[u64; 2]> = inputs.iter().map(|m| [m.rows as u64, m.cols as u64]).collect();
+        Self::check_shapes(name, &meta, &got)?;
+        self.load(name)?;
+        // Counted only on success, mirroring the PJRT client's metric.
+        let outs = match meta.kind.as_str() {
+            "gemm" => Ok(vec![matmul_f32(inputs[0], inputs[1]).data().to_vec()]),
+            "partials" => {
+                let (a, b) = (inputs[0], inputs[1]);
+                let (m, n) = (a.rows, b.cols);
+                let chunks = dos_k_split(a.cols as u64, meta.tiers);
+                let mut flat = Vec::with_capacity(meta.tiers as usize * m * n);
+                let mut k0 = 0usize;
+                for &kc in &chunks {
+                    let kc = kc as usize;
+                    let a_chunk = Matrix::from_fn(m, kc, |i, j| a.get(i, k0 + j));
+                    let b_chunk = Matrix::from_fn(kc, n, |i, j| b.get(k0 + i, j));
+                    flat.extend_from_slice(matmul_f32(&a_chunk, &b_chunk).data());
+                    k0 += kc;
+                }
+                // Tiers with zero K-work contribute zero partials.
+                flat.resize(meta.tiers as usize * m * n, 0.0);
+                Ok(vec![flat])
+            }
+            "mlp" => {
+                let mut h = matmul_f32(inputs[0], inputs[1]);
+                for i in 0..h.rows {
+                    for j in 0..h.cols {
+                        h.set(i, j, h.get(i, j).max(0.0));
+                    }
+                }
+                Ok(vec![matmul_f32(&h, inputs[2]).data().to_vec()])
+            }
+            other => Err(anyhow!("artifact {name}: kind '{other}' is not f32-executable")),
+        }?;
+        self.executions += 1;
+        Ok(outs)
+    }
+
+    /// Execute a GEMM artifact: `C = A·B`.
+    pub fn run_gemm(&mut self, name: &str, a: &Matrix<f32>, b: &Matrix<f32>) -> Result<Matrix<f32>> {
+        let meta = self.meta(name)?;
+        if meta.kind != "gemm" {
+            bail!("artifact {name} is '{}', not a gemm", meta.kind);
+        }
+        let (m, n) = (a.rows, b.cols);
+        let data = self
+            .run(name, &[a, b])?
+            .into_iter()
+            .next()
+            .context("gemm artifact returned no outputs")?;
+        Ok(Matrix::from_vec(m, n, data))
+    }
+
+    /// Execute a partials artifact: returns `tiers` matrices of M×N.
+    pub fn run_partials(
+        &mut self,
+        name: &str,
+        a: &Matrix<f32>,
+        b: &Matrix<f32>,
+    ) -> Result<Vec<Matrix<f32>>> {
+        let meta = self.meta(name)?;
+        if meta.kind != "partials" {
+            bail!("artifact {name} is '{}', not partials", meta.kind);
+        }
+        let tiers = meta.tiers as usize;
+        let (m, n) = (a.rows, b.cols);
+        let data = self.run(name, &[a, b])?.into_iter().next().context("no outputs")?;
+        if data.len() != tiers * m * n {
+            bail!("partials output size {} != {}x{}x{}", data.len(), tiers, m, n);
+        }
+        Ok(data
+            .chunks_exact(m * n)
+            .map(|c| Matrix::from_vec(m, n, c.to_vec()))
+            .collect())
+    }
+
+    /// Execute a quantized GEMM artifact (the paper's 8b-in RTL datapath):
+    /// `C(i32) = A(i8)·B(i8)`, returned as i64 for direct comparison with
+    /// the cycle simulator's integer datapath.
+    pub fn run_quant_gemm(
+        &mut self,
+        name: &str,
+        a: &Matrix<i8>,
+        b: &Matrix<i8>,
+    ) -> Result<Matrix<i64>> {
+        let meta = self.meta(name)?.clone();
+        if meta.kind != "quant_gemm" {
+            bail!("artifact {name} is '{}', not a quant_gemm", meta.kind);
+        }
+        let got = [[a.rows as u64, a.cols as u64], [b.rows as u64, b.cols as u64]];
+        Self::check_shapes(name, &meta, &got)?;
+        self.load(name)?;
+        let (m, k, n) = (a.rows, a.cols, b.cols);
+        let mut out = Matrix::<i64>::zeros(m, n);
+        for i in 0..m {
+            for kk in 0..k {
+                let av = a.get(i, kk) as i64;
+                if av == 0 {
+                    continue;
+                }
+                for j in 0..n {
+                    out.set(i, j, out.get(i, j) + av * b.get(kk, j) as i64);
+                }
+            }
+        }
+        self.executions += 1;
+        // Match the S32 accumulator of the XLA kernel (wraps on overflow).
+        Ok(Matrix::from_fn(m, n, |i, j| out.get(i, j) as i32 as i64))
+    }
+
+    /// Execute the MLP artifact: `y = relu(x·w1)·w2`.
+    pub fn run_mlp(
+        &mut self,
+        name: &str,
+        x: &Matrix<f32>,
+        w1: &Matrix<f32>,
+        w2: &Matrix<f32>,
+    ) -> Result<Matrix<f32>> {
+        let meta = self.meta(name)?;
+        if meta.kind != "mlp" {
+            bail!("artifact {name} is '{}', not an mlp", meta.kind);
+        }
+        let (m, n) = (x.rows, w2.cols);
+        let data = self.run(name, &[x, w1, w2])?.into_iter().next().context("no outputs")?;
+        Ok(Matrix::from_vec(m, n, data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(name: &str, body: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("cube3d_interp_{}_{name}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        std::fs::write(d.join("manifest.json"), body).unwrap();
+        d
+    }
+
+    #[test]
+    fn gemm_kind_and_shape_enforced() {
+        let d = scratch(
+            "gemm",
+            r#"{"g": {"file": "g.hlo.txt", "kind": "gemm",
+                 "inputs": [[2, 3], [3, 2]], "tiers": 1}}"#,
+        );
+        std::fs::write(d.join("g.hlo.txt"), "HloModule g\n").unwrap();
+        let mut rt = Runtime::new(&d).unwrap();
+        let a = Matrix::from_vec(2, 3, vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = Matrix::from_vec(3, 2, vec![1.0f32, 0.0, 0.0, 1.0, 1.0, 1.0]);
+        let c = rt.run_gemm("g", &a, &b).unwrap();
+        assert_eq!(c.get(0, 0), 1.0 + 3.0);
+        assert_eq!(c.get(1, 1), 5.0 + 6.0);
+        // Wrong shape is rejected before execution.
+        assert!(rt.run_gemm("g", &b, &a).is_err());
+        assert_eq!(rt.executions, 1);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn missing_hlo_header_fails_like_a_compile_error() {
+        let d = scratch(
+            "badhlo",
+            r#"{"g": {"file": "g.hlo.txt", "kind": "gemm",
+                 "inputs": [[2, 2], [2, 2]], "tiers": 1}}"#,
+        );
+        std::fs::write(d.join("g.hlo.txt"), "this is not HLO text at all").unwrap();
+        let mut rt = Runtime::new(&d).unwrap();
+        let a = Matrix::<f32>::zeros(2, 2);
+        assert!(rt.run_gemm("g", &a, &a).is_err());
+        std::fs::remove_dir_all(&d).ok();
+    }
+}

@@ -1,12 +1,27 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! Execution runtime: loads the AOT HLO-text artifacts produced by
 //! `python/compile/aot.py` and executes them on the request path.
 //!
-//! Python never runs here — `make artifacts` lowers the JAX/Pallas model
-//! once; this module compiles each HLO module on the PJRT CPU client at
-//! first use and caches the loaded executable for the process lifetime.
+//! Two backends behind one `Runtime` type:
+//!
+//! * **PJRT** (`--features pjrt`): compiles each HLO module on the PJRT CPU
+//!   client at first use and caches the loaded executable for the process
+//!   lifetime. Requires the vendored `xla` bindings crate (see DESIGN.md §6);
+//!   Python never runs here — `make artifacts` lowers the JAX/Pallas model
+//!   once.
+//! * **Interpreter** (default): executes each artifact's documented
+//!   semantics (GEMM, per-tier partials, quantized GEMM, MLP) directly on
+//!   the CPU from the manifest shapes. No external dependencies, bit-exact
+//!   for the integer path — the offline stand-in that keeps the coordinator
+//!   and end-to-end tests runnable everywhere.
 
 mod artifact;
+#[cfg(feature = "pjrt")]
 mod client;
+#[cfg(not(feature = "pjrt"))]
+mod interp;
 
 pub use artifact::{find_artifact_dir, ArtifactMeta, Manifest};
+#[cfg(feature = "pjrt")]
 pub use client::Runtime;
+#[cfg(not(feature = "pjrt"))]
+pub use interp::Runtime;

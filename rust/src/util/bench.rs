@@ -2,7 +2,7 @@
 //!
 //! `cargo bench` targets use `harness = false` and drive this directly:
 //! warmup, N timed samples, mean/median/p95 + throughput reporting, and an
-//! optional JSON dump for EXPERIMENTS.md §Perf bookkeeping.
+//! optional JSON dump for DESIGN.md §Perf bookkeeping.
 
 use crate::util::stats::{boxplot, Boxplot};
 use std::time::Instant;

@@ -1,8 +1,10 @@
 //! Minimal command-line argument parser (offline substitute for `clap`).
 //!
 //! Supports `--flag`, `--key value`, `--key=value` and positional arguments,
-//! with typed accessors and a generated usage string.
+//! with typed accessors and a generated usage string. All accessors return
+//! [`anyhow::Result`] so callers compose with `?` directly.
 
+use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 
 /// Parsed arguments for one (sub)command.
@@ -24,7 +26,7 @@ pub struct OptSpec {
 impl Args {
     /// Parse `argv` (without the program/subcommand name) against `specs`.
     /// Unknown `--options` are an error; positionals are collected in order.
-    pub fn parse(argv: &[String], specs: &[OptSpec]) -> Result<Args, String> {
+    pub fn parse(argv: &[String], specs: &[OptSpec]) -> Result<Args> {
         let mut out = Args::default();
         let mut i = 0;
         while i < argv.len() {
@@ -37,7 +39,7 @@ impl Args {
                 let spec = specs
                     .iter()
                     .find(|s| s.name == name)
-                    .ok_or_else(|| format!("unknown option --{name}"))?;
+                    .ok_or_else(|| anyhow!("unknown option --{name}"))?;
                 if spec.takes_value {
                     let v = match inline_val {
                         Some(v) => v,
@@ -45,13 +47,13 @@ impl Args {
                             i += 1;
                             argv.get(i)
                                 .cloned()
-                                .ok_or_else(|| format!("--{name} requires a value"))?
+                                .ok_or_else(|| anyhow!("--{name} requires a value"))?
                         }
                     };
                     out.opts.insert(name.to_string(), v);
                 } else {
                     if inline_val.is_some() {
-                        return Err(format!("--{name} does not take a value"));
+                        return Err(anyhow!("--{name} does not take a value"));
                     }
                     out.flags.push(name.to_string());
                 }
@@ -75,31 +77,31 @@ impl Args {
         self.get(name).unwrap_or(default)
     }
 
-    pub fn get_u64(&self, name: &str) -> Result<Option<u64>, String> {
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>> {
         match self.get(name) {
             None => Ok(None),
             Some(v) => v
                 .parse::<u64>()
                 .map(Some)
-                .map_err(|_| format!("--{name}: expected integer, got '{v}'")),
+                .map_err(|_| anyhow!("--{name}: expected integer, got '{v}'")),
         }
     }
 
-    pub fn get_u64_or(&self, name: &str, default: u64) -> Result<u64, String> {
+    pub fn get_u64_or(&self, name: &str, default: u64) -> Result<u64> {
         Ok(self.get_u64(name)?.unwrap_or(default))
     }
 
-    pub fn get_f64_or(&self, name: &str, default: f64) -> Result<f64, String> {
+    pub fn get_f64_or(&self, name: &str, default: f64) -> Result<f64> {
         match self.get(name) {
             None => Ok(default),
             Some(v) => v
                 .parse::<f64>()
-                .map_err(|_| format!("--{name}: expected number, got '{v}'")),
+                .map_err(|_| anyhow!("--{name}: expected number, got '{v}'")),
         }
     }
 
     /// Comma-separated u64 list, e.g. `--tiers 1,2,4,8`.
-    pub fn get_u64_list(&self, name: &str) -> Result<Option<Vec<u64>>, String> {
+    pub fn get_u64_list(&self, name: &str) -> Result<Option<Vec<u64>>> {
         match self.get(name) {
             None => Ok(None),
             Some(v) => v
@@ -107,9 +109,9 @@ impl Args {
                 .map(|p| {
                     p.trim()
                         .parse::<u64>()
-                        .map_err(|_| format!("--{name}: bad integer '{p}'"))
+                        .map_err(|_| anyhow!("--{name}: bad integer '{p}'"))
                 })
-                .collect::<Result<Vec<_>, _>>()
+                .collect::<Result<Vec<_>>>()
                 .map(Some),
         }
     }
@@ -170,6 +172,13 @@ mod tests {
     #[test]
     fn missing_value_errors() {
         assert!(Args::parse(&s(&["--macs"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn errors_are_anyhow_and_descriptive() {
+        let a = Args::parse(&s(&["--macs", "notanumber"]), &specs()).unwrap();
+        let err = a.get_u64("macs").unwrap_err();
+        assert!(err.to_string().contains("--macs"), "{err}");
     }
 
     #[test]

@@ -40,16 +40,18 @@ impl std::fmt::Display for Gemm {
 }
 
 /// Kind of DNN layer, for provenance in reports.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum LayerKind {
     Conv,
     FullyConnected,
     Lstm,
     Attention,
+    /// A raw GEMM shape with no layer provenance (JSON trace configs).
+    Custom,
 }
 
 /// A named DNN layer together with its GEMM lowering.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct LayerSpec {
     pub name: String,
     pub kind: LayerKind,
@@ -113,6 +115,11 @@ impl LayerSpec {
             kind: LayerKind::Attention,
             gemm: Gemm::new(seq * batch, d_proj, d_model),
         }
+    }
+
+    /// A bare GEMM with no layer provenance (JSON trace configs).
+    pub fn custom(name: &str, gemm: Gemm) -> Self {
+        LayerSpec { name: name.to_string(), kind: LayerKind::Custom, gemm }
     }
 }
 

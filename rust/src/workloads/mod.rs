@@ -9,8 +9,10 @@ mod gemm;
 mod generator;
 mod models;
 mod table1;
+mod workload;
 
 pub use gemm::{Gemm, LayerKind, LayerSpec};
 pub use generator::{random_workloads, GeneratorConfig};
 pub use models::{deepbench_gemms, gnmt_layers, resnet50_layers, transformer_layers, Model};
 pub use table1::{by_label, table1, Table1Entry};
+pub use workload::Workload;

@@ -1,0 +1,150 @@
+//! Scenario-level workload: the thing an [`crate::eval::Evaluator`] runs —
+//! either one GEMM (a Table I row, a hand-specified shape) or a full
+//! multi-layer network trace (ResNet-50, GNMT, Transformer, DeepBench).
+
+use super::gemm::{Gemm, LayerSpec};
+use super::models::{deepbench_gemms, gnmt_layers, resnet50_layers, transformer_layers, Model};
+use super::table1::by_label;
+
+/// A workload to evaluate: one GEMM or a named layer trace.
+///
+/// Labels are provenance only — two workloads with the same GEMM dimensions
+/// evaluate identically regardless of label, and the evaluator's cache key
+/// deliberately ignores them.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Workload {
+    /// A single GEMM, optionally labelled (e.g. a Table I row).
+    Gemm { label: Option<String>, gemm: Gemm },
+    /// A named multi-layer trace; metrics aggregate over all layers.
+    Trace { name: String, layers: Vec<LayerSpec> },
+}
+
+impl Workload {
+    /// An unlabelled single GEMM.
+    pub fn gemm(g: Gemm) -> Self {
+        Workload::Gemm { label: None, gemm: g }
+    }
+
+    /// A Table I layer by its paper label (`"RN0"`, `"GNMT1"`, ...).
+    pub fn layer(label: &str) -> Option<Self> {
+        by_label(label).map(|e| Workload::Gemm {
+            label: Some(e.layer.to_string()),
+            gemm: e.gemm,
+        })
+    }
+
+    /// A full network trace by model name:
+    /// `resnet50` | `gnmt` | `transformer` | `deepbench`.
+    ///
+    /// `batch` parameterizes the trace where the model supports it
+    /// (GNMT keeps its Table-I-scale vocabulary, the Transformer its
+    /// base sequence length of 512). A `batch` of 0 is clamped to 1 here;
+    /// the config/builder path ([`crate::config::WorkloadSpec::resolve`])
+    /// rejects it loudly instead.
+    pub fn model(name: &str, batch: u64) -> Option<Self> {
+        let m = match name.to_ascii_lowercase().as_str() {
+            "resnet50" => resnet50_layers(batch.max(1)),
+            "gnmt" => gnmt_layers(batch.max(1), 32000),
+            "transformer" => transformer_layers(512, batch.max(1)),
+            "deepbench" => deepbench_gemms(),
+            _ => return None,
+        };
+        Some(Self::trace(m))
+    }
+
+    /// Wrap an existing [`Model`] layer walk.
+    pub fn trace(model: Model) -> Self {
+        Workload::Trace { name: model.name.to_string(), layers: model.layers }
+    }
+
+    /// A hand-assembled trace (JSON `"trace"` configs).
+    pub fn custom_trace(name: impl Into<String>, layers: Vec<LayerSpec>) -> Self {
+        Workload::Trace { name: name.into(), layers }
+    }
+
+    /// The single GEMM, or the first layer of a trace. Cost models consume
+    /// single-GEMM scenarios (the evaluator splits traces per layer), so for
+    /// them this is *the* workload.
+    pub fn primary_gemm(&self) -> Gemm {
+        match self {
+            Workload::Gemm { gemm, .. } => *gemm,
+            Workload::Trace { layers, .. } => {
+                layers.first().expect("trace workloads are non-empty").gemm
+            }
+        }
+    }
+
+    /// Every GEMM in order (one for a single workload).
+    pub fn gemms(&self) -> Vec<Gemm> {
+        match self {
+            Workload::Gemm { gemm, .. } => vec![*gemm],
+            Workload::Trace { layers, .. } => layers.iter().map(|l| l.gemm).collect(),
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        match self {
+            Workload::Gemm { .. } => 1,
+            Workload::Trace { layers, .. } => layers.len(),
+        }
+    }
+
+    /// Total MAC operations over all layers.
+    pub fn total_macs(&self) -> u64 {
+        self.gemms().iter().map(Gemm::macs).sum()
+    }
+
+    /// Human-readable one-liner for CLI output and report headers.
+    pub fn description(&self) -> String {
+        match self {
+            Workload::Gemm { label: Some(l), gemm } => format!("{l} ({gemm})"),
+            Workload::Gemm { label: None, gemm } => gemm.to_string(),
+            Workload::Trace { name, layers } => {
+                format!("{name} trace ({} layers, {:.2e} MACs)", layers.len(), self.total_macs() as f64)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_lookup_matches_table1() {
+        let w = Workload::layer("RN0").unwrap();
+        assert_eq!(w.primary_gemm(), Gemm::new(64, 147, 12100));
+        assert!(Workload::layer("nope").is_none());
+    }
+
+    #[test]
+    fn model_traces_resolve() {
+        let w = Workload::model("resnet50", 1).unwrap();
+        assert_eq!(w.n_layers(), 54);
+        assert!(Workload::model("gnmt", 128).is_some());
+        assert!(Workload::model("transformer", 1).is_some());
+        assert!(Workload::model("deepbench", 1).is_some());
+        assert!(Workload::model("vgg", 1).is_none());
+    }
+
+    #[test]
+    fn total_macs_sums_layers() {
+        let w = Workload::model("resnet50", 1).unwrap();
+        let direct: u64 = w.gemms().iter().map(Gemm::macs).sum();
+        assert_eq!(w.total_macs(), direct);
+        assert!(w.total_macs() > 3_000_000_000);
+    }
+
+    #[test]
+    fn description_mentions_label_and_trace_name() {
+        assert!(Workload::layer("RN0").unwrap().description().starts_with("RN0"));
+        assert!(Workload::model("gnmt", 1).unwrap().description().contains("gnmt trace"));
+    }
+
+    #[test]
+    fn labels_do_not_affect_equality_of_gemms() {
+        let a = Workload::gemm(Gemm::new(1, 2, 3)).primary_gemm();
+        let b = Workload::Gemm { label: Some("x".into()), gemm: Gemm::new(1, 2, 3) }.primary_gemm();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,187 @@
+//! Unified-evaluator API tests: schema round-trips, builder/JSON
+//! equivalence, cache behavior, trace aggregation, and a property test
+//! pinning the evaluator to the legacy free-function results.
+
+use cube3d::analytical::{optimize_2d, optimize_3d, Array3d};
+use cube3d::area::total_area_m2;
+use cube3d::config::ExperimentConfig;
+use cube3d::eval::{Evaluator, Scenario};
+use cube3d::power::{power_summary, Tech, VerticalTech};
+use cube3d::util::json::Json;
+use cube3d::util::prop::{run_u64s_log, Config};
+use cube3d::workloads::Gemm;
+use std::path::PathBuf;
+
+fn scratch_config(name: &str, body: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("cube3d_evalapi_{}_{name}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    let p = d.join("config.json");
+    std::fs::write(&p, body).unwrap();
+    p
+}
+
+#[test]
+fn scenario_config_round_trips_through_json() {
+    let doc = Json::parse(
+        r#"{"workload": {"model": "resnet50", "batch": 1},
+            "mac_budgets": [16384, 262144], "tiers": [1, 4],
+            "vertical_tech": "miv", "seed": 9, "out_dir": "o"}"#,
+    )
+    .unwrap();
+    let cfg = ExperimentConfig::from_json(&doc).unwrap();
+    let text = cfg.to_json().to_string_pretty();
+    let re = ExperimentConfig::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(cfg, re);
+}
+
+#[test]
+fn unknown_keys_rejected_at_both_levels() {
+    for bad in [
+        r#"{"workloda": {"m": 1, "n": 1, "k": 1}}"#,
+        r#"{"workload": {"m": 1, "n": 1, "k": 1, "q": 2}}"#,
+        r#"{"workload": {"model": "resnet50", "layers": 3}}"#,
+        r#"{"workload": {"trace": [{"m": 1, "n": 1, "k": 1, "x": 0}]}}"#,
+    ] {
+        let doc = Json::parse(bad).unwrap();
+        assert!(ExperimentConfig::from_json(&doc).is_err(), "accepted: {bad}");
+    }
+}
+
+#[test]
+fn builder_and_json_scenarios_share_one_cache_key() {
+    let doc = Json::parse(
+        r#"{"workload": {"layer": "RN0"}, "mac_budgets": [32768], "tiers": [4],
+            "vertical_tech": "miv"}"#,
+    )
+    .unwrap();
+    let cfg = ExperimentConfig::from_json(&doc).unwrap();
+    let from_json = Scenario::expand_config(&cfg).unwrap();
+    assert_eq!(from_json.len(), 1);
+
+    let built = Scenario::builder()
+        .layer("RN0")
+        .unwrap()
+        .mac_budget(32768)
+        .tiers(4)
+        .vtech(VerticalTech::Miv)
+        .build()
+        .unwrap();
+
+    let ev = Evaluator::new();
+    let a = ev.evaluate(&from_json[0]);
+    let b = ev.evaluate(&built);
+    assert_eq!(a.cycles_3d, b.cycles_3d);
+    assert_eq!(a.power_w(), b.power_w());
+    // The strongest equivalence check: both routes resolve to the SAME
+    // cached design point.
+    assert_eq!(ev.cache_misses(), 1);
+    assert_eq!(ev.cache_hits(), 1);
+}
+
+#[test]
+fn second_identical_evaluation_performs_no_model_calls() {
+    let ev = Evaluator::full();
+    let s = Scenario::builder()
+        .gemm(Gemm::new(64, 64, 128))
+        .array(Array3d::new(32, 32, 2))
+        .build()
+        .unwrap();
+    ev.evaluate(&s);
+    let calls = ev.model_calls();
+    assert_eq!(calls, 4, "analytical + area + power + thermal");
+    ev.evaluate(&s);
+    assert_eq!(ev.model_calls(), calls, "cache hit must not invoke models");
+    assert_eq!(ev.cache_hits(), 1);
+}
+
+#[test]
+fn resnet50_trace_sweep_config_runs_end_to_end() {
+    // The `cube3d sweep --config` path: a full ResNet-50 trace sweep from a
+    // JSON file, through config parsing → scenario expansion → batched
+    // evaluation.
+    let path = scratch_config(
+        "rn50",
+        r#"{"workload": {"model": "resnet50", "batch": 1},
+            "mac_budgets": [16384, 262144], "tiers": [1, 4]}"#,
+    );
+    let cfg = ExperimentConfig::from_file(&path).unwrap();
+    let scenarios = Scenario::expand_config(&cfg).unwrap();
+    assert_eq!(scenarios.len(), 4, "2 budgets × 2 tier counts");
+    for s in &scenarios {
+        assert_eq!(s.workload.n_layers(), 54);
+    }
+
+    let ev = Evaluator::new();
+    let metrics = ev.evaluate_batch(&scenarios);
+    for (s, m) in scenarios.iter().zip(&metrics) {
+        assert_eq!(m.layers, 54);
+        assert_eq!(m.macs, s.workload.total_macs());
+        assert!(m.cycles_3d.unwrap() > 0);
+        assert!(m.power_w().unwrap() > 0.0);
+        let speedup = m.speedup_vs_2d.unwrap();
+        match s.tiers {
+            cube3d::eval::TierChoice::Fixed(1) => {
+                assert!((speedup - 1.0).abs() < 1e-9, "1 tier ⇒ no speedup, got {speedup}")
+            }
+            _ => assert!(speedup > 0.5, "got {speedup}"),
+        }
+    }
+    // 54 layers × 4 scenarios, but repeated block shapes collapse in the
+    // cache (cache_len is the race-free dedup count).
+    assert!(ev.cache_len() < 54 * 4, "unique points: {}", ev.cache_len());
+    std::fs::remove_dir_all(path.parent().unwrap()).ok();
+}
+
+#[test]
+fn trace_and_manual_aggregation_agree() {
+    let ev = Evaluator::performance();
+    let s = Scenario::builder()
+        .model("deepbench", 1)
+        .unwrap()
+        .mac_budget(1 << 14)
+        .tiers(2)
+        .build()
+        .unwrap();
+    let whole = ev.evaluate(&s);
+    let per_layer: u64 = s
+        .points()
+        .iter()
+        .map(|p| ev.evaluate(p).cycles_3d.unwrap())
+        .sum();
+    assert_eq!(whole.cycles_3d, Some(per_layer));
+}
+
+#[test]
+fn property_evaluator_matches_legacy_free_functions() {
+    // Across random scenarios, the evaluator's bundle must be *identical*
+    // (same code path, bitwise) to the legacy free-function results.
+    let ev = Evaluator::new();
+    let tech = Tech::default();
+    run_u64s_log(
+        Config::default().cases(40).seed(0xE7A1_3D15),
+        &[(1, 400), (1, 400), (1, 4096), (16, 1 << 16), (1, 8)],
+        |v| {
+            let (m, n, k, budget, tiers) = (v[0], v[1], v[2], v[3], v[4]);
+            if budget / tiers == 0 {
+                return true;
+            }
+            let g = Gemm::new(m, n, k);
+            let s = Scenario::builder()
+                .gemm(g)
+                .mac_budget(budget)
+                .tiers(tiers)
+                .vtech(VerticalTech::Miv)
+                .build()
+                .unwrap();
+            let got = ev.evaluate(&s);
+            let d2 = optimize_2d(&g, budget);
+            let d3 = optimize_3d(&g, budget, tiers);
+            let arr = d3.array3d();
+            got.cycles_2d == Some(d2.cycles)
+                && got.cycles_3d == Some(d3.cycles)
+                && got.speedup_vs_2d == Some(d2.cycles as f64 / d3.cycles as f64)
+                && got.area_m2 == Some(total_area_m2(&arr, &tech, VerticalTech::Miv))
+                && got.power_w() == Some(power_summary(&g, &arr, &tech, VerticalTech::Miv).total_w)
+        },
+    );
+}

@@ -1,13 +1,17 @@
 //! Design-space exploration over the full Table I workload set: for each
 //! layer, find the optimal tier count and report runtime / power /
-//! perf-per-area vs 2D for both TSV and MIV stacks — the decision table a
-//! 3D-accelerator architect would actually use.
+//! perf-per-area vs 2D for both TSV and MIV stacks, plus the winning
+//! §III-C dataflow at that depth — the decision table a 3D-accelerator
+//! architect would actually use.
 //!
 //! All metrics come from one shared, cached `Evaluator`; the TSV and MIV
-//! columns are the same design points evaluated under two vertical techs.
+//! columns are the same design points evaluated under two vertical techs,
+//! and the dataflow column reuses `dse::dataflow_ablation` — the same
+//! four-way comparison the ablation report and bench run, warm-cached.
 //!
 //! Run: `cargo run --release --example design_space [budget]`
 
+use cube3d::dse::dataflow_ablation;
 use cube3d::eval::{shared_evaluator, Scenario};
 use cube3d::power::VerticalTech;
 use cube3d::util::table::Table;
@@ -22,7 +26,8 @@ fn main() -> anyhow::Result<()> {
 
     println!("DSE over Table I, MAC budget {budget}\n");
     let mut t = Table::new([
-        "layer", "M/K/N", "opt ℓ", "speedup", "TSV perf/area", "MIV perf/area", "3D power W",
+        "layer", "M/K/N", "opt ℓ", "speedup", "best df", "TSV perf/area", "MIV perf/area",
+        "3D power W",
     ]);
     for e in table1() {
         let g = e.gemm;
@@ -40,6 +45,9 @@ fn main() -> anyhow::Result<()> {
                 .build()?;
             Ok(evaluator.evaluate(&s).perf_per_area_vs_2d.unwrap())
         };
+        // Winning dataflow at the chosen depth (ties favor dOS) — the same
+        // four-way ablation the report and bench use, cached shared.
+        let (best_df, _) = dataflow_ablation(&[g], budget, tiers.max(2))[0].best();
         let miv_power = Scenario::builder()
             .gemm(g)
             .mac_budget(budget)
@@ -51,6 +59,7 @@ fn main() -> anyhow::Result<()> {
             format!("{}/{}/{}", g.m, g.k, g.n),
             tiers.to_string(),
             format!("{:.2}x", m.speedup_vs_2d.unwrap()),
+            best_df.short_name().to_string(),
             format!("{:.2}x", ppa(VerticalTech::Tsv)?),
             format!("{:.2}x", ppa(VerticalTech::Miv)?),
             format!("{:.2}", evaluator.evaluate(&miv_power).power_w().unwrap()),
@@ -58,7 +67,8 @@ fn main() -> anyhow::Result<()> {
     }
     println!("{}", t.to_ascii());
     println!(
-        "reading: ℓ=1 ⇒ stay 2D for that layer; large-K layers (RN0, DB0, GNMT*) favor deep stacks."
+        "reading: ℓ=1 ⇒ stay 2D for that layer; large-K layers (RN0, DB0, GNMT*) favor deep\n\
+         stacks and the dOS mapping; tall-M layers (TF0) prefer WS scale-out."
     );
     println!(
         "evaluator cache: {} unique design points for {} table cells",

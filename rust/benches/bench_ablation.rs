@@ -1,80 +1,85 @@
 //! Ablation bench: the design choice at the heart of the paper — mapping K
-//! to the third dimension (dOS) vs the scale-out alternatives (WS/IS with
-//! the temporal dimension split across tiers, §III-C) — evaluated over the
-//! full Table I workload set, plus the Pareto front of the RN0 design space.
-//! dOS cycles come from the shared evaluator; WS/IS from their own
-//! optimizers (they are the ablation baselines, not part of the pipeline).
+//! to the third dimension (dOS) vs the OS/WS/IS scale-out alternatives
+//! (§III-C) — evaluated over the full Table I workload set through the
+//! dataflow-generic evaluator seam, plus the Pareto front of the RN0 design
+//! space with the dataflow as a grid dimension.
+//!
+//! Also proves the §Perf claim for the unified optimizer: the streaming
+//! breakpoint-candidate walk (~500 closed-form evaluations at a 2^18
+//! budget) must return exactly the brute-force O(budget) row scan's optimum
+//! for every (layer × dataflow) pair.
 
-use cube3d::dataflow::{optimize_is_3d, optimize_ws_3d};
-use cube3d::dse::{pareto_front, sweep};
-use cube3d::eval::{shared_performance_evaluator, Evaluator, Scenario};
+use cube3d::analytical::Array3d;
+use cube3d::dataflow::Dataflow;
+use cube3d::dse::{pareto_front, sweep_dataflows};
+use cube3d::eval::{Evaluator, Scenario};
 use cube3d::power::{Tech, VerticalTech};
+use cube3d::report::ablation;
 use cube3d::util::bench::{black_box, Bench};
 use cube3d::util::table::Table;
-use cube3d::workloads::{table1, Gemm};
-
-fn dos_cycles_with(evaluator: &Evaluator, g: Gemm, budget: u64, tiers: u64) -> u64 {
-    let s = Scenario::builder()
-        .gemm(g)
-        .mac_budget(budget)
-        .tiers(tiers)
-        .build()
-        .unwrap();
-    evaluator.evaluate(&s).cycles_3d.unwrap()
-}
+use cube3d::workloads::table1;
 
 fn main() {
-    println!("== bench_ablation: dOS vs WS/IS scale-out (ℓ=8, 2^18 MACs) ==\n");
-    let budget = 1u64 << 18;
-    let tiers = 8;
-    let mut t = Table::new(["layer", "dOS cycles", "WS cycles", "IS cycles", "best"]);
-    let mut dos_wins = 0;
-    let shared = shared_performance_evaluator();
-    for e in table1() {
-        let g = e.gemm;
-        let dos = dos_cycles_with(&shared, g, budget, tiers);
-        let (_, ws) = optimize_ws_3d(&g, budget, tiers);
-        let (_, is) = optimize_is_3d(&g, budget, tiers);
-        let best = if dos <= ws && dos <= is {
-            dos_wins += 1;
-            "dOS"
-        } else if ws <= is {
-            "WS"
-        } else {
-            "IS"
-        };
-        t.row([
-            e.layer.to_string(),
-            dos.to_string(),
-            ws.to_string(),
-            is.to_string(),
-            best.to_string(),
-        ]);
-    }
-    println!("{}", t.to_ascii());
-    println!("dOS wins {dos_wins}/8 Table I layers (expected: the large-K, small-MN layers)\n");
+    println!("== bench_ablation: four-way dataflow ablation (ℓ=8, 2^18 MACs) ==\n");
+    let budget = ablation::BUDGET;
+    let tiers = ablation::TIERS;
+    let entries = table1();
 
-    // Pareto front of the RN0 design space (cycles × area × power).
+    // The table itself is the report artifact — print it rather than
+    // rebuilding it, so the bench can never drift from `reproduce`.
+    let r = ablation::report();
+    println!("{}", r.table.to_ascii());
+    for n in &r.notes {
+        println!("{n}");
+    }
+    println!();
+
+    // Fast-vs-bruteforce: the streaming breakpoint walk must match a full
+    // O(budget) row scan with C = ⌊p/R⌋, for every dataflow (DESIGN.md
+    // §Perf — the walk does ~500 evaluations instead of 32768 here).
+    let per_tier = budget / tiers;
+    let mut checked = 0u64;
+    for e in &entries {
+        for df in Dataflow::ALL {
+            let model = df.model();
+            let fast = model.optimize(&e.gemm, budget, tiers).cycles;
+            let mut brute = u64::MAX;
+            for r in 1..=per_tier {
+                let c = per_tier / r;
+                if c == 0 {
+                    continue;
+                }
+                brute = brute.min(model.cycles_3d(&e.gemm, &Array3d::new(r, c, tiers)));
+            }
+            assert_eq!(fast, brute, "walk != brute for {} / {}", e.layer, df.short_name());
+            checked += 1;
+        }
+    }
+    println!("optimizer walk == brute force for all {checked} (layer × dataflow) cases\n");
+
+    // Pareto front of the RN0 design space with the dataflow dimension.
     let g = cube3d::workloads::by_label("RN0").unwrap().gemm;
     let tech = Tech::default();
-    let pts = sweep(
+    let pts = sweep_dataflows(
         &[g],
         &[4096, 32768, 262144],
         &[1, 2, 4, 8, 12],
+        &Dataflow::ALL,
         VerticalTech::Miv,
         &tech,
     );
     let front = pareto_front(&pts);
     println!(
-        "RN0 design space: {} points, {} on the (cycles, area, power) Pareto front:",
+        "RN0 design space: {} points (4 dataflows), {} on the (cycles, area, power) Pareto front:",
         pts.len(),
         front.len()
     );
-    let mut pf = Table::new(["MACs", "ℓ", "cycles", "area mm²", "power W"]);
+    let mut pf = Table::new(["MACs", "ℓ", "df", "cycles", "area mm²", "power W"]);
     for p in &front {
         pf.row([
             p.mac_budget.to_string(),
             p.tiers.to_string(),
+            p.dataflow.short_name().to_string(),
             p.cycles.to_string(),
             format!("{:.2}", p.area_m2 * 1e6),
             format!("{:.2}", p.power_w),
@@ -83,18 +88,35 @@ fn main() {
     println!("{}", pf.to_ascii());
 
     let mut b = Bench::default();
-    // Cold evaluator per iteration: the timed dOS path does the real
-    // optimization work, comparable to the WS/IS optimizer walks beside it
-    // (the shared cache would reduce dOS to a hash lookup).
-    b.run("ablation/dos_vs_ws_is_8_layers_cold", || {
+    // Cold evaluator per iteration: the timed path does the real
+    // optimization work for all four dataflows (the shared cache would
+    // reduce every point to a hash lookup).
+    b.run("ablation/4_dataflows_8_layers_cold", || {
         let cold = Evaluator::performance();
+        let mut scenarios = Vec::new();
         for e in table1() {
-            black_box(dos_cycles_with(&cold, e.gemm, budget, tiers));
-            black_box(optimize_ws_3d(&e.gemm, budget, tiers));
-            black_box(optimize_is_3d(&e.gemm, budget, tiers));
+            for df in Dataflow::ALL {
+                scenarios.push(
+                    Scenario::builder()
+                        .gemm(e.gemm)
+                        .mac_budget(budget)
+                        .tiers(tiers)
+                        .dataflow(df)
+                        .build()
+                        .unwrap(),
+                );
+            }
+        }
+        black_box(cold.evaluate_batch(&scenarios));
+    });
+    b.run("ablation/optimizer_walk_8_layers_x4", || {
+        for e in table1() {
+            for df in Dataflow::ALL {
+                black_box(df.model().optimize(&e.gemm, budget, tiers));
+            }
         }
     });
-    b.run("ablation/pareto_front_15_points", || {
+    b.run("ablation/pareto_front_60_points", || {
         black_box(pareto_front(&pts));
     });
 }

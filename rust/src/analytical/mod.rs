@@ -10,5 +10,6 @@ mod speedup;
 pub use model::{
     breakdown_2d, breakdown_3d, cycles_2d, cycles_3d, Array2d, Array3d, RuntimeBreakdown,
 };
+pub(crate) use optimizer::optimize_dataflow;
 pub use optimizer::{optimize_2d, optimize_3d, OptimalDesign};
 pub use speedup::{optimal_tier_count, speedup_3d_over_2d, tier_sweep, TierPoint};

@@ -45,7 +45,7 @@ impl OptimalDesign {
 /// We enumerate exactly those (plus both boundary sides of each breakpoint),
 /// which is the L3 hot-path optimization logged in DESIGN.md §Perf.
 ///
-/// Streaming, no allocation: [`optimize_tier`] consumes this iterator
+/// Streaming, no allocation: [`optimize_dataflow`] consumes this iterator
 /// directly (the optimizer runs ~10^4 times per Fig. 7 sweep), and the tests
 /// cover the exact same candidate set.
 ///
@@ -69,7 +69,7 @@ fn row_candidates(m_dim: u64, p: u64) -> impl Iterator<Item = u64> {
 /// (Eq. 1): pick the aspect ratio R×C with `C = ⌊budget/R⌋` minimizing τ.
 pub fn optimize_2d(g: &Gemm, mac_budget: u64) -> OptimalDesign {
     assert!(mac_budget >= 1, "need at least one MAC");
-    optimize_tier(g, mac_budget, 1)
+    optimize_dataflow(g, mac_budget, 1, g.m, cycles_3d)
 }
 
 /// Optimize the per-tier R'×C' of a 3D array with exactly `tiers` tiers and
@@ -77,15 +77,29 @@ pub fn optimize_2d(g: &Gemm, mac_budget: u64) -> OptimalDesign {
 /// each tier gets ⌊budget/ℓ⌋ MACs ("we round down to avoid resource
 /// over-provision") and all tiers share the same dimensions.
 pub fn optimize_3d(g: &Gemm, mac_budget: u64, tiers: u64) -> OptimalDesign {
+    optimize_dataflow(g, mac_budget, tiers, g.m, cycles_3d)
+}
+
+/// Dataflow-generic optimizer core: minimize `cycles` over the streaming
+/// breakpoint candidates. `fold_dim` is the workload dimension the dataflow
+/// maps to array rows — its fold count `⌈dim/R⌉` and the column width
+/// `⌊p/R⌋` are the only R-dependent plateau functions of any of the §III-C
+/// runtime formulas, so the same O(√p + √dim) walk optimizes every
+/// [`crate::dataflow::DataflowModel`]: OS/dOS pass `g.m`, WS/IS map K to
+/// rows and pass `g.k`. `bench_ablation` keeps the walk honest against a
+/// full O(budget) row scan for all four dataflows.
+pub(crate) fn optimize_dataflow(
+    g: &Gemm,
+    mac_budget: u64,
+    tiers: u64,
+    fold_dim: u64,
+    cycles: impl Fn(&Gemm, &Array3d) -> u64,
+) -> OptimalDesign {
     assert!(tiers >= 1);
     let per_tier = mac_budget / tiers;
     assert!(per_tier >= 1, "budget {mac_budget} too small for {tiers} tiers");
-    optimize_tier(g, per_tier, tiers)
-}
-
-fn optimize_tier(g: &Gemm, per_tier: u64, tiers: u64) -> OptimalDesign {
     let mut best: Option<OptimalDesign> = None;
-    for r in row_candidates(g.m, per_tier) {
+    for r in row_candidates(fold_dim, per_tier) {
         if r < 1 || r > per_tier {
             continue;
         }
@@ -94,7 +108,7 @@ fn optimize_tier(g: &Gemm, per_tier: u64, tiers: u64) -> OptimalDesign {
             continue;
         }
         let a = Array3d::new(r, c, tiers);
-        let cyc = cycles_3d(g, &a);
+        let cyc = cycles(g, &a);
         let cand = OptimalDesign {
             rows: r,
             cols: c,

@@ -10,11 +10,15 @@
 //!   "workload": {"m": 64, "n": 147, "k": 12100},
 //!   "mac_budgets": [4096, 32768, 262144],
 //!   "tiers": [1, 2, 4, 8, 12],
+//!   "dataflows": ["dos", "ws"],
 //!   "vertical_tech": "tsv",
 //!   "seed": 7,
 //!   "out_dir": "reports"
 //! }
 //! ```
+//!
+//! `dataflows` (default `["dos"]`) selects the §III-C mappings the sweep
+//! crosses with the budget × tier grid: `os`, `ws`, `is`, `dos`.
 //!
 //! ```json
 //! {"workload": {"layer": "RN0"}}
@@ -25,6 +29,7 @@
 //! Unknown keys are rejected so typos fail loudly. A config expands into
 //! [`crate::eval::Scenario`]s via [`crate::eval::Scenario::expand_config`].
 
+use crate::dataflow::Dataflow;
 use crate::power::VerticalTech;
 use crate::util::cli::Args;
 use crate::util::json::{obj, Json};
@@ -210,6 +215,8 @@ pub struct ExperimentConfig {
     pub workload: WorkloadSpec,
     pub mac_budgets: Vec<u64>,
     pub tiers: Vec<u64>,
+    /// §III-C mappings the sweep crosses with the budget × tier grid.
+    pub dataflows: Vec<Dataflow>,
     pub vertical_tech: VerticalTech,
     pub seed: u64,
     pub out_dir: String,
@@ -221,6 +228,7 @@ impl Default for ExperimentConfig {
             workload: WorkloadSpec::Gemm(Gemm::new(64, 147, 12100)), // RN0
             mac_budgets: vec![1 << 12, 1 << 15, 1 << 18],
             tiers: vec![1, 2, 3, 4, 6, 8, 10, 12],
+            dataflows: vec![Dataflow::DistributedOutputStationary],
             vertical_tech: VerticalTech::Tsv,
             seed: 7,
             out_dir: "reports".to_string(),
@@ -232,6 +240,7 @@ const KNOWN_KEYS: &[&str] = &[
     "workload",
     "mac_budgets",
     "tiers",
+    "dataflows",
     "vertical_tech",
     "seed",
     "out_dir",
@@ -255,6 +264,20 @@ impl ExperimentConfig {
         }
         if let Some(t) = doc.get("tiers") {
             cfg.tiers = parse_u64_array(t).context("tiers")?;
+        }
+        if let Some(d) = doc.get("dataflows") {
+            cfg.dataflows = d
+                .as_arr()
+                .ok_or_else(|| anyhow!("dataflows must be an array of strings"))?
+                .iter()
+                .map(|v| {
+                    let name = v
+                        .as_str()
+                        .ok_or_else(|| anyhow!("dataflows entries must be strings"))?;
+                    parse_dataflow(name)
+                })
+                .collect::<Result<Vec<_>>>()
+                .context("dataflows")?;
         }
         if let Some(v) = doc.get("vertical_tech") {
             cfg.vertical_tech = parse_vtech(v.as_str().unwrap_or(""))?;
@@ -293,6 +316,15 @@ impl ExperimentConfig {
                 Json::Arr(self.tiers.iter().map(|&t| Json::Num(t as f64)).collect()),
             ),
             (
+                "dataflows",
+                Json::Arr(
+                    self.dataflows
+                        .iter()
+                        .map(|d| Json::Str(d.short_name().to_ascii_lowercase()))
+                        .collect(),
+                ),
+            ),
+            (
                 "vertical_tech",
                 Json::Str(self.vertical_tech.name().to_ascii_lowercase()),
             ),
@@ -305,6 +337,9 @@ impl ExperimentConfig {
     pub fn validate(&self) -> Result<()> {
         if self.mac_budgets.is_empty() || self.tiers.is_empty() {
             bail!("mac_budgets and tiers must be non-empty");
+        }
+        if self.dataflows.is_empty() {
+            bail!("dataflows must be non-empty (os|ws|is|dos)");
         }
         if self.mac_budgets.iter().any(|&b| b == 0) {
             bail!("mac budgets must be positive");
@@ -340,6 +375,17 @@ pub fn parse_vtech(s: &str) -> Result<VerticalTech> {
         "miv" => Ok(VerticalTech::Miv),
         "f2f" | "face-to-face" => Ok(VerticalTech::FaceToFace),
         other => bail!("unknown vertical_tech '{other}' (tsv|miv|f2f)"),
+    }
+}
+
+/// Parse a §III-C dataflow name (case-insensitive).
+pub fn parse_dataflow(s: &str) -> Result<Dataflow> {
+    match s.to_ascii_lowercase().as_str() {
+        "os" => Ok(Dataflow::OutputStationary),
+        "ws" => Ok(Dataflow::WeightStationary),
+        "is" => Ok(Dataflow::InputStationary),
+        "dos" | "d-os" => Ok(Dataflow::DistributedOutputStationary),
+        other => bail!("unknown dataflow '{other}' (os|ws|is|dos)"),
     }
 }
 
@@ -460,5 +506,39 @@ mod tests {
         assert_eq!(parse_vtech("TSV").unwrap(), VerticalTech::Tsv);
         assert_eq!(parse_vtech("face-to-face").unwrap(), VerticalTech::FaceToFace);
         assert!(parse_vtech("xyz").is_err());
+    }
+
+    #[test]
+    fn dataflow_parse_names() {
+        assert_eq!(parse_dataflow("OS").unwrap(), Dataflow::OutputStationary);
+        assert_eq!(parse_dataflow("ws").unwrap(), Dataflow::WeightStationary);
+        assert_eq!(parse_dataflow("is").unwrap(), Dataflow::InputStationary);
+        assert_eq!(parse_dataflow("dOS").unwrap(), Dataflow::DistributedOutputStationary);
+        assert_eq!(parse_dataflow("d-os").unwrap(), Dataflow::DistributedOutputStationary);
+        assert!(parse_dataflow("xyz").is_err());
+    }
+
+    #[test]
+    fn parses_dataflows_list_and_defaults_to_dos() {
+        let doc = Json::parse(r#"{"dataflows": ["os", "ws", "is", "dos"]}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.dataflows, Dataflow::ALL.to_vec());
+        let default = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(default.dataflows, vec![Dataflow::DistributedOutputStationary]);
+        let bad = Json::parse(r#"{"dataflows": ["nope"]}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&bad).is_err());
+        let empty = Json::parse(r#"{"dataflows": []}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&empty).is_err());
+    }
+
+    #[test]
+    fn dataflows_round_trip_through_json() {
+        let cfg = ExperimentConfig {
+            dataflows: vec![Dataflow::WeightStationary, Dataflow::DistributedOutputStationary],
+            ..Default::default()
+        };
+        let re = ExperimentConfig::from_json(&Json::parse(&cfg.to_json().to_string_pretty()).unwrap())
+            .unwrap();
+        assert_eq!(cfg, re);
     }
 }

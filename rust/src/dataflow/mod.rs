@@ -1,15 +1,20 @@
-//! Dataflow definitions (paper §III-C).
+//! Dataflow definitions (paper §III-C) and the [`DataflowModel`] seam.
 //!
 //! Three classic 2D systolic mappings (OS, WS, IS) plus the paper's
 //! contribution for 3D: **distributed output stationary (dOS)**, in which the
 //! reduction dimension K is split across tiers and partial sums are
-//! accumulated down each vertical MAC pile.
+//! accumulated down each vertical MAC pile. Each mapping is a first-class
+//! [`DataflowModel`] (closed-form runtime + optimizer + activity counters);
+//! `Dataflow::model()` dispatches, and `eval::Scenario` carries the choice
+//! end to end.
 
+mod model;
 mod ws_is;
 
+pub use model::{DataflowModel, Dos, Is, Os, Ws};
 pub use ws_is::{
-    cycles_is_2d, cycles_is_3d_scaleout, cycles_ws_2d, cycles_ws_3d_scaleout, optimize_is_3d,
-    optimize_ws_3d,
+    cycles_is_2d, cycles_is_3d_scaleout, cycles_os_3d_scaleout, cycles_ws_2d,
+    cycles_ws_3d_scaleout, optimize_is_3d, optimize_os_3d, optimize_ws_3d,
 };
 
 use crate::workloads::Gemm;
@@ -29,6 +34,15 @@ pub enum Dataflow {
 }
 
 impl Dataflow {
+    /// Every §III-C mapping, in the paper's order. The evaluation seam
+    /// iterates this for four-way ablations.
+    pub const ALL: [Dataflow; 4] = [
+        Dataflow::OutputStationary,
+        Dataflow::WeightStationary,
+        Dataflow::InputStationary,
+        Dataflow::DistributedOutputStationary,
+    ];
+
     pub fn short_name(&self) -> &'static str {
         match self {
             Dataflow::OutputStationary => "OS",
@@ -38,8 +52,20 @@ impl Dataflow {
         }
     }
 
+    /// The [`DataflowModel`] implementing this mapping — the single
+    /// dispatch point every layer (analytical, sim, eval) shares.
+    pub fn model(&self) -> &'static dyn DataflowModel {
+        match self {
+            Dataflow::OutputStationary => &Os,
+            Dataflow::WeightStationary => &Ws,
+            Dataflow::InputStationary => &Is,
+            Dataflow::DistributedOutputStationary => &Dos,
+        }
+    }
+
     /// Does this dataflow use the vertical (cross-tier) links?
-    /// Only dOS does; WS/IS in 3D degenerate to scaled-out model parallelism.
+    /// Only dOS does; OS/WS/IS in 3D degenerate to scaled-out model
+    /// parallelism.
     pub fn uses_vertical_links(&self) -> bool {
         matches!(self, Dataflow::DistributedOutputStationary)
     }

@@ -1,0 +1,236 @@
+//! [`DataflowModel`]: one seam from the analytical model to the simulator
+//! to the evaluator, per §III-C mapping.
+//!
+//! Every layer of the crate that cares about *which* dataflow runs the GEMM
+//! goes through this trait: the closed-form runtimes (Eq. 1/2 and the
+//! scale-out analogues), the budget-constrained array optimizer (all four
+//! share the streaming breakpoint-candidate walk of
+//! `analytical/optimizer.rs`), and the closed-form activity counters that
+//! are property-tested against the exact register-level engines in
+//! [`crate::sim`]. The evaluator's [`crate::eval::AnalyticalModel`]
+//! resolves scenarios through `Dataflow::model()`, so a `Scenario` with a
+//! different dataflow is a different (independently cached) design point.
+
+use super::ws_is::{
+    cycles_is_2d, cycles_is_3d_scaleout, cycles_os_3d_scaleout, cycles_ws_2d,
+    cycles_ws_3d_scaleout,
+};
+use super::Dataflow;
+use crate::analytical::{optimize_3d, optimize_dataflow, Array2d, Array3d, OptimalDesign};
+use crate::sim::{
+    fast_activity, fast_activity_is, fast_activity_os_scaleout, fast_activity_ws, ActivityTrace,
+};
+use crate::workloads::Gemm;
+
+/// One §III-C mapping as a pluggable model: closed-form runtime, optimal
+/// array search, and activity counting. Implementations must be thread-safe
+/// — the evaluator fans design points out over the crate threadpool.
+pub trait DataflowModel: Send + Sync {
+    /// Which mapping this is.
+    fn dataflow(&self) -> Dataflow;
+
+    /// Closed-form runtime on a single-tier R×C array.
+    fn cycles_2d(&self, g: &Gemm, a: &Array2d) -> u64;
+
+    /// Closed-form runtime on an ℓ-tier stack (ℓ=1 must equal
+    /// [`DataflowModel::cycles_2d`]).
+    fn cycles_3d(&self, g: &Gemm, a: &Array3d) -> u64;
+
+    /// Budget-constrained optimal array: the per-tier R×C (full-budget
+    /// policy, `C = ⌊p/R⌋`) minimizing [`DataflowModel::cycles_3d`], found
+    /// with the shared streaming breakpoint-candidate walk.
+    fn optimize(&self, g: &Gemm, mac_budget: u64, tiers: u64) -> OptimalDesign;
+
+    /// Closed-form [`ActivityTrace`] — exactly what the register-level
+    /// engine for this dataflow counts (enforced by property tests).
+    fn activity(&self, g: &Gemm, a: &Array3d) -> ActivityTrace;
+
+    /// Runtime-optimal tier count in `1..=max_tiers` under `mac_budget`
+    /// (Fig. 7's question, asked per dataflow).
+    fn optimal_tiers(&self, g: &Gemm, mac_budget: u64, max_tiers: u64) -> u64 {
+        let mut best_t = 1;
+        let mut best_cycles = u64::MAX;
+        for t in 1..=max_tiers {
+            if mac_budget / t == 0 {
+                break;
+            }
+            let d = self.optimize(g, mac_budget, t);
+            if d.cycles < best_cycles {
+                best_cycles = d.cycles;
+                best_t = t;
+            }
+        }
+        best_t
+    }
+}
+
+/// Output stationary: M→rows, N→cols spatial, K temporal; 3D = whole
+/// serialization folds dealt across independent tiers.
+pub struct Os;
+
+/// Weight stationary: B pinned (K→rows, N→cols), M temporal; 3D = temporal
+/// M split across tiers (scale-out).
+pub struct Ws;
+
+/// Input stationary: A pinned (K→rows, M→cols), N temporal; 3D = temporal
+/// N split across tiers (scale-out).
+pub struct Is;
+
+/// Distributed output stationary — the paper's dOS: OS per tier with K
+/// split across tiers and a cross-tier partial-sum reduction.
+pub struct Dos;
+
+impl DataflowModel for Os {
+    fn dataflow(&self) -> Dataflow {
+        Dataflow::OutputStationary
+    }
+
+    fn cycles_2d(&self, g: &Gemm, a: &Array2d) -> u64 {
+        crate::analytical::cycles_2d(g, a)
+    }
+
+    fn cycles_3d(&self, g: &Gemm, a: &Array3d) -> u64 {
+        cycles_os_3d_scaleout(g, a)
+    }
+
+    fn optimize(&self, g: &Gemm, mac_budget: u64, tiers: u64) -> OptimalDesign {
+        optimize_dataflow(g, mac_budget, tiers, g.m, cycles_os_3d_scaleout)
+    }
+
+    fn activity(&self, g: &Gemm, a: &Array3d) -> ActivityTrace {
+        fast_activity_os_scaleout(g, a)
+    }
+}
+
+impl DataflowModel for Ws {
+    fn dataflow(&self) -> Dataflow {
+        Dataflow::WeightStationary
+    }
+
+    fn cycles_2d(&self, g: &Gemm, a: &Array2d) -> u64 {
+        cycles_ws_2d(g, a)
+    }
+
+    fn cycles_3d(&self, g: &Gemm, a: &Array3d) -> u64 {
+        cycles_ws_3d_scaleout(g, a)
+    }
+
+    fn optimize(&self, g: &Gemm, mac_budget: u64, tiers: u64) -> OptimalDesign {
+        // WS maps K to rows: fold breakpoints come from K, not M.
+        optimize_dataflow(g, mac_budget, tiers, g.k, cycles_ws_3d_scaleout)
+    }
+
+    fn activity(&self, g: &Gemm, a: &Array3d) -> ActivityTrace {
+        fast_activity_ws(g, a)
+    }
+}
+
+impl DataflowModel for Is {
+    fn dataflow(&self) -> Dataflow {
+        Dataflow::InputStationary
+    }
+
+    fn cycles_2d(&self, g: &Gemm, a: &Array2d) -> u64 {
+        cycles_is_2d(g, a)
+    }
+
+    fn cycles_3d(&self, g: &Gemm, a: &Array3d) -> u64 {
+        cycles_is_3d_scaleout(g, a)
+    }
+
+    fn optimize(&self, g: &Gemm, mac_budget: u64, tiers: u64) -> OptimalDesign {
+        optimize_dataflow(g, mac_budget, tiers, g.k, cycles_is_3d_scaleout)
+    }
+
+    fn activity(&self, g: &Gemm, a: &Array3d) -> ActivityTrace {
+        fast_activity_is(g, a)
+    }
+}
+
+impl DataflowModel for Dos {
+    fn dataflow(&self) -> Dataflow {
+        Dataflow::DistributedOutputStationary
+    }
+
+    fn cycles_2d(&self, g: &Gemm, a: &Array2d) -> u64 {
+        crate::analytical::cycles_2d(g, a)
+    }
+
+    fn cycles_3d(&self, g: &Gemm, a: &Array3d) -> u64 {
+        crate::analytical::cycles_3d(g, a)
+    }
+
+    fn optimize(&self, g: &Gemm, mac_budget: u64, tiers: u64) -> OptimalDesign {
+        optimize_3d(g, mac_budget, tiers)
+    }
+
+    fn activity(&self, g: &Gemm, a: &Array3d) -> ActivityTrace {
+        fast_activity(g, a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytical::{optimize_2d, speedup_3d_over_2d};
+
+    #[test]
+    fn dos_model_is_bitwise_the_legacy_optimizer() {
+        // The refactor must not perturb a single dOS headline number.
+        let g = Gemm::new(64, 147, 12100);
+        let m = Dataflow::DistributedOutputStationary.model();
+        assert_eq!(m.optimize(&g, 1 << 18, 12), optimize_3d(&g, 1 << 18, 12));
+        assert_eq!(m.optimize(&g, 1 << 18, 1), optimize_2d(&g, 1 << 18));
+        let d2 = m.optimize(&g, 1 << 18, 1).cycles as f64;
+        let d3 = m.optimize(&g, 1 << 18, 12).cycles as f64;
+        assert_eq!(d2 / d3, speedup_3d_over_2d(&g, 1 << 18, 12));
+    }
+
+    #[test]
+    fn one_tier_3d_reduces_to_2d_for_every_dataflow() {
+        let g = Gemm::new(31, 17, 900);
+        let (a3, a2) = (Array3d::new(8, 6, 1), Array2d::new(8, 6));
+        for df in Dataflow::ALL {
+            let m = df.model();
+            assert_eq!(m.cycles_3d(&g, &a3), m.cycles_2d(&g, &a2), "{}", df.short_name());
+        }
+    }
+
+    #[test]
+    fn optimize_respects_budget_for_every_dataflow() {
+        let g = Gemm::new(100, 80, 500);
+        for df in Dataflow::ALL {
+            let d = df.model().optimize(&g, 4096, 4);
+            assert!(d.macs_used <= 4096, "{}", df.short_name());
+            assert_eq!(d.tiers, 4);
+            assert!(d.cycles > 0);
+        }
+    }
+
+    #[test]
+    fn activity_cycles_match_closed_form_for_every_dataflow() {
+        let g = Gemm::new(50, 33, 77);
+        let a = Array3d::new(16, 12, 3);
+        for df in Dataflow::ALL {
+            let m = df.model();
+            assert_eq!(m.activity(&g, &a).cycles, m.cycles_3d(&g, &a), "{}", df.short_name());
+            assert_eq!(m.activity(&g, &a).mac_ops, g.macs(), "{}", df.short_name());
+        }
+    }
+
+    #[test]
+    fn optimal_tiers_favor_dos_on_large_k() {
+        // RN0: dOS wants a deep stack; WS gains little from more tiers
+        // (the temporal dim M=64 is small).
+        let g = Gemm::new(64, 147, 12100);
+        let dos_t = Dataflow::DistributedOutputStationary.model().optimal_tiers(&g, 1 << 18, 16);
+        assert!(dos_t > 4, "dOS tiers {dos_t}");
+    }
+
+    #[test]
+    fn model_round_trips_dataflow() {
+        for df in Dataflow::ALL {
+            assert_eq!(df.model().dataflow(), df);
+        }
+    }
+}

@@ -1,5 +1,6 @@
-//! WS / IS dataflow runtime models (paper §III-C) and their 3D
-//! "scale-out" variants — the baselines that make dOS interesting.
+//! Closed-form runtime models for the scale-out dataflow baselines
+//! (paper §III-C): WS / IS on 2D arrays and the 3D "scale-out" variants of
+//! OS / WS / IS — the alternatives that make dOS interesting.
 //!
 //! Following SCALE-sim's methodology [13] (the paper's source for Eq. 1):
 //!
@@ -12,9 +13,13 @@
 //! "half of the rows in matrix A would be used in the top tier"), which is
 //! pure model parallelism: no cross-tier traffic, runtime divides by ℓ on
 //! the streaming term only — a scaled-out 2D system, not a true 3D design.
-//! `cube3d` implements them as the ablation baseline for dOS.
+//! OS has no free temporal dimension to split (its temporal dim K is what
+//! dOS distributes *with* a reduction), so its scale-out variant distributes
+//! whole serialization folds across tiers instead. `cube3d` implements all
+//! three as the ablation baselines for dOS; the exact register-level
+//! counterparts live in [`crate::sim`].
 
-use crate::analytical::{Array2d, Array3d};
+use crate::analytical::{optimize_dataflow, Array2d, Array3d, OptimalDesign};
 use crate::workloads::Gemm;
 
 /// Eq. (1)-analogue for the WS dataflow on a 2D array.
@@ -48,61 +53,41 @@ pub fn cycles_is_3d_scaleout(g: &Gemm, a: &Array3d) -> u64 {
     per_fold * folds
 }
 
+/// OS on an ℓ-tier stack: serialization folds (the ⌈M/R⌉·⌈N/C⌉ output
+/// tiles) distributed across tiers, each tier an independent 2D OS array.
+/// OS's temporal dim is K — the dim dOS splits *with* a cross-tier
+/// reduction — so fold distribution is the only reduction-free scale-out.
+/// With ℓ = 1 this reduces exactly to Eq. (1).
+pub fn cycles_os_3d_scaleout(g: &Gemm, a: &Array3d) -> u64 {
+    let folds = g.m.div_ceil(a.rows) * g.n.div_ceil(a.cols);
+    let per_fold = 2 * a.rows + a.cols + g.k - 2;
+    per_fold * folds.div_ceil(a.tiers)
+}
+
 /// Optimize WS (resp. IS) dims under a per-tier budget with the same
-/// full-budget policy as the OS optimizer: C = ⌊p/R⌋.
+/// full-budget policy as the OS/dOS optimizer (`C = ⌊p/R⌋`) and the same
+/// streaming breakpoint-candidate walk — WS/IS map K to rows, so the fold
+/// breakpoints come from K instead of M (see `analytical/optimizer.rs`).
 pub fn optimize_ws_3d(g: &Gemm, mac_budget: u64, tiers: u64) -> (Array3d, u64) {
-    optimize_with(g, mac_budget, tiers, cycles_ws_3d_scaleout)
+    let d = optimize_dataflow(g, mac_budget, tiers, g.k, cycles_ws_3d_scaleout);
+    (d.array3d(), d.cycles)
 }
 
 /// See [`optimize_ws_3d`].
 pub fn optimize_is_3d(g: &Gemm, mac_budget: u64, tiers: u64) -> (Array3d, u64) {
-    optimize_with(g, mac_budget, tiers, cycles_is_3d_scaleout)
+    let d = optimize_dataflow(g, mac_budget, tiers, g.k, cycles_is_3d_scaleout);
+    (d.array3d(), d.cycles)
 }
 
-fn optimize_with(
-    g: &Gemm,
-    mac_budget: u64,
-    tiers: u64,
-    f: fn(&Gemm, &Array3d) -> u64,
-) -> (Array3d, u64) {
-    let p = (mac_budget / tiers).max(1);
-    let mut best: Option<(Array3d, u64)> = None;
-    // Same √-breakpoint candidate walk as the OS optimizer.
-    let mut cands = Vec::new();
-    let mut v = 1u64;
-    while v * v <= p {
-        cands.push(v);
-        cands.push(p / v);
-        cands.push((p / v) + 1);
-        v += 1;
-    }
-    let mut vk = 1u64;
-    while vk * vk <= g.k {
-        cands.push(g.k.div_ceil(vk));
-        cands.push(vk);
-        vk += 1;
-    }
-    cands.retain(|&r| r >= 1 && r <= p);
-    cands.sort_unstable();
-    cands.dedup();
-    for r in cands {
-        let c = p / r;
-        if c == 0 {
-            continue;
-        }
-        let arr = Array3d::new(r, c, tiers);
-        let cyc = f(g, &arr);
-        if best.map_or(true, |(_, b)| cyc < b) {
-            best = Some((arr, cyc));
-        }
-    }
-    best.expect("budget >= 1 guarantees a design")
+/// OS scale-out optimizer (fold dim M, like dOS).
+pub fn optimize_os_3d(g: &Gemm, mac_budget: u64, tiers: u64) -> OptimalDesign {
+    optimize_dataflow(g, mac_budget, tiers, g.m, cycles_os_3d_scaleout)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::analytical::optimize_3d;
+    use crate::analytical::{cycles_2d, optimize_3d};
 
     #[test]
     fn ws_formula_literal() {
@@ -127,6 +112,7 @@ mod tests {
         let a2 = Array2d::new(16, 16);
         assert_eq!(cycles_ws_3d_scaleout(&g, &a3), cycles_ws_2d(&g, &a2));
         assert_eq!(cycles_is_3d_scaleout(&g, &a3), cycles_is_2d(&g, &a2));
+        assert_eq!(cycles_os_3d_scaleout(&g, &a3), cycles_2d(&g, &a2));
     }
 
     #[test]
@@ -137,6 +123,15 @@ mod tests {
         let a4 = Array3d::new(32, 32, 4);
         let s = cycles_ws_3d_scaleout(&g, &a1) as f64 / cycles_ws_3d_scaleout(&g, &a4) as f64;
         assert!(s > 1.0 && s < 4.0, "{s}");
+    }
+
+    #[test]
+    fn os_scaleout_splits_folds() {
+        // 4 folds over 2 tiers: exactly half the 2D runtime.
+        let g = Gemm::new(64, 64, 100);
+        let a2 = Array3d::new(32, 32, 1);
+        let a3 = Array3d::new(32, 32, 2);
+        assert_eq!(cycles_os_3d_scaleout(&g, &a3) * 2, cycles_os_3d_scaleout(&g, &a2));
     }
 
     #[test]
@@ -167,5 +162,40 @@ mod tests {
         let g = Gemm::new(100, 100, 1000);
         let (arr, _) = optimize_ws_3d(&g, 4096, 4);
         assert!(arr.rows * arr.cols <= 1024);
+    }
+
+    /// Brute-force reference for the scale-out optimizers: scan every row
+    /// count with C = ⌊p/R⌋ (the walk-vs-brute check at full 2^18 scale
+    /// lives in `bench_ablation`).
+    fn brute(g: &Gemm, budget: u64, tiers: u64, f: fn(&Gemm, &Array3d) -> u64) -> u64 {
+        let p = budget / tiers;
+        let mut best = u64::MAX;
+        for r in 1..=p {
+            let c = p / r;
+            if c == 0 {
+                continue;
+            }
+            best = best.min(f(g, &Array3d::new(r, c, tiers)));
+        }
+        best
+    }
+
+    #[test]
+    fn streaming_walk_matches_brute_force() {
+        for (m, n, k, budget, tiers) in [
+            (64u64, 147u64, 255u64, 1024u64, 2u64),
+            (31, 17, 900, 512, 4),
+            (1000, 147, 300, 2048, 3),
+            (7, 200, 50, 128, 1),
+            (1, 1, 1, 4, 2),
+        ] {
+            let g = Gemm::new(m, n, k);
+            let (_, ws) = optimize_ws_3d(&g, budget, tiers);
+            assert_eq!(ws, brute(&g, budget, tiers, cycles_ws_3d_scaleout), "WS {g}");
+            let (_, is) = optimize_is_3d(&g, budget, tiers);
+            assert_eq!(is, brute(&g, budget, tiers, cycles_is_3d_scaleout), "IS {g}");
+            let os = optimize_os_3d(&g, budget, tiers).cycles;
+            assert_eq!(os, brute(&g, budget, tiers, cycles_os_3d_scaleout), "OS {g}");
+        }
     }
 }

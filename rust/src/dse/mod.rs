@@ -1,16 +1,19 @@
 //! Design-space exploration engine: parameter sweeps over (workload ×
-//! MAC budget × tier count × vertical tech), feeding the figure
-//! reproductions and the router's design choices.
+//! dataflow × MAC budget × tier count × vertical tech), feeding the figure
+//! reproductions, the dOS-vs-scale-out ablation and the router's design
+//! choices.
 //!
 //! Since the `eval` redesign this module is a thin, typed wrapper over the
 //! shared [`crate::eval::Evaluator`]: every point goes through the cached
 //! scenario pipeline, so overlapping sweeps (and the router, and the CLI)
-//! never re-optimize the same design point.
+//! never re-optimize the same design point — and since the dataflow became
+//! a scenario axis, the four-way §III-C ablation is just a wider grid.
 
 mod pareto;
 
 pub use pareto::{dominates, pareto_front};
 
+use crate::dataflow::Dataflow;
 use crate::eval::{shared_evaluator, shared_performance_evaluator, Metrics, Scenario};
 use crate::power::{Tech, VerticalTech};
 use crate::workloads::Gemm;
@@ -19,12 +22,13 @@ use crate::workloads::Gemm;
 #[derive(Debug, Clone)]
 pub struct DsePoint {
     pub workload: Gemm,
+    pub dataflow: Dataflow,
     pub mac_budget: u64,
     pub tiers: u64,
     pub vtech: VerticalTech,
     /// Optimized 3D runtime (cycles); for tiers=1 this is the 2D runtime.
     pub cycles: u64,
-    /// Speedup vs the optimized 2D array with the same budget.
+    /// Speedup vs the optimized 2D array (same budget, same dataflow).
     pub speedup_vs_2d: f64,
     /// Total silicon area, m².
     pub area_m2: f64,
@@ -48,6 +52,7 @@ fn point_scenario(g: &Gemm, mac_budget: u64, tiers: u64, vtech: VerticalTech, te
 fn to_dse_point(s: &Scenario, m: &Metrics) -> DsePoint {
     DsePoint {
         workload: s.workload.primary_gemm(),
+        dataflow: s.dataflow,
         mac_budget: s.mac_budget,
         tiers: m.tiers.expect("analytical model in pipeline"),
         vtech: s.vtech,
@@ -76,9 +81,10 @@ pub fn evaluate_point(
     to_dse_point(&s, &shared_evaluator().evaluate(&s))
 }
 
-/// Full cartesian sweep, parallel over points. Infeasible grid points —
-/// budgets below one MAC per tier, tier counts beyond what `vtech` can
-/// manufacture, or anything else scenario validation rejects — are skipped.
+/// Full cartesian sweep under the default dOS dataflow, parallel over
+/// points. Infeasible grid points — budgets below one MAC per tier, tier
+/// counts beyond what `vtech` can manufacture, or anything else scenario
+/// validation rejects — are skipped.
 pub fn sweep(
     workloads: &[Gemm],
     budgets: &[u64],
@@ -86,22 +92,47 @@ pub fn sweep(
     vtech: VerticalTech,
     tech: &Tech,
 ) -> Vec<DsePoint> {
+    sweep_dataflows(
+        workloads,
+        budgets,
+        tiers,
+        &[Dataflow::DistributedOutputStationary],
+        vtech,
+        tech,
+    )
+}
+
+/// Full cartesian sweep with the dataflow as an explicit grid dimension —
+/// the §III-C four-way comparison (and the Pareto front over it) is
+/// `sweep_dataflows(…, &Dataflow::ALL, …)`. Infeasible grid points are
+/// skipped, as in [`sweep`].
+pub fn sweep_dataflows(
+    workloads: &[Gemm],
+    budgets: &[u64],
+    tiers: &[u64],
+    dataflows: &[Dataflow],
+    vtech: VerticalTech,
+    tech: &Tech,
+) -> Vec<DsePoint> {
     let mut scenarios: Vec<Scenario> = Vec::new();
     for &g in workloads {
         for &b in budgets {
             for &t in tiers {
-                // Feasibility is exactly "builds as a scenario" — one
-                // source of truth (ScenarioBuilder::build) instead of a
-                // hand-copied predicate that could drift from it.
-                let built = Scenario::builder()
-                    .gemm(g)
-                    .mac_budget(b)
-                    .tiers(t)
-                    .vtech(vtech)
-                    .tech(tech.clone())
-                    .build();
-                if let Ok(s) = built {
-                    scenarios.push(s);
+                for &df in dataflows {
+                    // Feasibility is exactly "builds as a scenario" — one
+                    // source of truth (ScenarioBuilder::build) instead of a
+                    // hand-copied predicate that could drift from it.
+                    let built = Scenario::builder()
+                        .gemm(g)
+                        .mac_budget(b)
+                        .tiers(t)
+                        .dataflow(df)
+                        .vtech(vtech)
+                        .tech(tech.clone())
+                        .build();
+                    if let Ok(s) = built {
+                        scenarios.push(s);
+                    }
                 }
             }
         }
@@ -111,6 +142,79 @@ pub fn sweep(
         .iter()
         .zip(&metrics)
         .map(|(s, m)| to_dse_point(s, m))
+        .collect()
+}
+
+/// One row of the dOS-vs-scale-out ablation: a workload's optimized 3D
+/// runtime under every §III-C dataflow at the same budget and tier count.
+#[derive(Debug, Clone)]
+pub struct AblationRow {
+    pub workload: Gemm,
+    /// (dataflow, optimized 3D cycles), in [`Dataflow::ALL`] order.
+    pub cycles: Vec<(Dataflow, u64)>,
+}
+
+impl AblationRow {
+    /// The winning dataflow. Ties favor dOS, keeping the comparison
+    /// conservative toward the paper's contribution.
+    pub fn best(&self) -> (Dataflow, u64) {
+        let mut best = self
+            .cycles
+            .iter()
+            .find(|(d, _)| *d == Dataflow::DistributedOutputStationary)
+            .or_else(|| self.cycles.first())
+            .copied()
+            .expect("ablation row has at least one dataflow");
+        for &(d, c) in &self.cycles {
+            if c < best.1 {
+                best = (d, c);
+            }
+        }
+        best
+    }
+}
+
+/// The §III-C ablation through the shared cached evaluator: every workload
+/// × every dataflow at one budget/tier point, batched in parallel. A warm
+/// re-run (same grid) is pure cache hits.
+///
+/// Panics if the (budget, tiers) point is not a representable scenario —
+/// like [`evaluate_point`], this is the pre-validated-inputs entry point;
+/// grid callers that may hold infeasible points should pre-check with
+/// `Scenario::builder` (as `cube3d dataflows` does) or use
+/// [`sweep_dataflows`], which skips them.
+pub fn dataflow_ablation(workloads: &[Gemm], mac_budget: u64, tiers: u64) -> Vec<AblationRow> {
+    let mut scenarios: Vec<Scenario> = Vec::new();
+    for &g in workloads {
+        for df in Dataflow::ALL {
+            scenarios.push(
+                Scenario::builder()
+                    .gemm(g)
+                    .mac_budget(mac_budget)
+                    .tiers(tiers)
+                    .dataflow(df)
+                    .build()
+                    .expect("ablation grid point must be a valid scenario"),
+            );
+        }
+    }
+    let metrics = shared_performance_evaluator().evaluate_batch(&scenarios);
+    let width = Dataflow::ALL.len();
+    workloads
+        .iter()
+        .enumerate()
+        .map(|(i, &g)| AblationRow {
+            workload: g,
+            cycles: (0..width)
+                .map(|j| {
+                    let idx = i * width + j;
+                    (
+                        scenarios[idx].dataflow,
+                        metrics[idx].cycles_3d.expect("analytical model in pipeline"),
+                    )
+                })
+                .collect(),
+        })
         .collect()
 }
 
@@ -214,5 +318,52 @@ mod tests {
         let hits_before = ev.cache_hits();
         sweep(&[g], &[1 << 12], &[1, 2], VerticalTech::Tsv, &Tech::default());
         assert!(ev.cache_hits() >= hits_before + 2, "second sweep must be cached");
+    }
+
+    #[test]
+    fn dataflow_sweep_widens_the_grid() {
+        let g = Gemm::new(64, 147, 255);
+        let pts = sweep_dataflows(
+            &[g],
+            &[4096],
+            &[1, 2],
+            &Dataflow::ALL,
+            VerticalTech::Miv,
+            &Tech::default(),
+        );
+        assert_eq!(pts.len(), 8, "1 workload × 1 budget × 2 tiers × 4 dataflows");
+        for df in Dataflow::ALL {
+            assert_eq!(pts.iter().filter(|p| p.dataflow == df).count(), 2);
+        }
+        // Plain sweep is the dOS-only slice.
+        let dos = sweep(&[g], &[4096], &[1, 2], VerticalTech::Miv, &Tech::default());
+        assert!(dos.iter().all(|p| p.dataflow == Dataflow::DistributedOutputStationary));
+    }
+
+    #[test]
+    fn ablation_reproduces_the_dos_claim_on_rn0() {
+        // RN0 (large K, small M·N) is the paper's headline dOS case.
+        let g = Gemm::new(64, 147, 12100);
+        let rows = dataflow_ablation(&[g], 1 << 18, 8);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].cycles.len(), 4);
+        let (best, cycles) = rows[0].best();
+        assert_eq!(best, Dataflow::DistributedOutputStationary, "dOS must win RN0");
+        assert!(cycles > 0);
+        // A warm re-run of the same grid is pure cache hits.
+        let ev = shared_performance_evaluator();
+        let hits_before = ev.cache_hits();
+        let again = dataflow_ablation(&[g], 1 << 18, 8);
+        assert!(ev.cache_hits() >= hits_before + 4, "warm ablation must hit per dataflow");
+        assert_eq!(again[0].cycles, rows[0].cycles);
+    }
+
+    #[test]
+    fn ablation_prefers_ws_on_tall_m() {
+        // TF0: huge temporal M, tiny K — the scale-out baselines win.
+        let g = Gemm::new(31999, 1024, 84);
+        let rows = dataflow_ablation(&[g], 1 << 14, 8);
+        let (best, _) = rows[0].best();
+        assert_ne!(best, Dataflow::DistributedOutputStationary);
     }
 }

@@ -4,20 +4,28 @@
 use super::metrics::{aggregate, Metrics};
 use super::models::{AnalyticalModel, AreaModel, CostModel, PowerModel, ThermalModel};
 use super::scenario::{ArrayChoice, Scenario, TierChoice};
+use crate::dataflow::Dataflow;
 use crate::power::VerticalTech;
 use crate::util::threadpool::par_map;
 use crate::workloads::Gemm;
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::RwLock;
 
+/// Default memo-cache bound: generous enough that no real sweep, trace or
+/// serving run evicts (a million design points), small enough that a
+/// long-lived server cannot grow without limit.
+pub const DEFAULT_CACHE_CAPACITY: usize = 1 << 20;
+
 /// Cache key: the fully resolved design point. Workload labels are
 /// deliberately excluded — `conv3_1_3x3` and `conv3_2_3x3` share one entry.
-/// Technology constants participate as raw bits, so distinct `Tech`s can
-/// never collide.
+/// The dataflow participates: the same GEMM under WS and dOS are different
+/// design points. Technology constants participate as raw bits, so distinct
+/// `Tech`s can never collide.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 struct PointKey {
     gemm: Gemm,
+    dataflow: Dataflow,
     mac_budget: u64,
     tiers: TierChoice,
     vtech: VerticalTech,
@@ -29,6 +37,7 @@ impl PointKey {
     fn of(s: &Scenario) -> PointKey {
         PointKey {
             gemm: s.workload.primary_gemm(),
+            dataflow: s.dataflow,
             mac_budget: s.mac_budget,
             tiers: s.tiers,
             vtech: s.vtech,
@@ -38,21 +47,32 @@ impl PointKey {
     }
 }
 
+/// Map + FIFO insertion order behind one lock, so eviction stays O(1) and
+/// consistent with the map under concurrent inserts.
+struct CacheState {
+    map: HashMap<PointKey, Metrics>,
+    order: VecDeque<PointKey>,
+}
+
 /// Composes a [`CostModel`] pipeline, memoizes per design point, and runs
 /// batches in parallel over the crate threadpool.
 ///
-/// The cache is unbounded and keyed on the resolved point (GEMM dims ×
-/// budget × tier choice × vertical tech × technology fingerprint); identical
-/// points — repeated ResNet blocks inside one trace, repeated router lookups
-/// across a serving run, overlapping sweep grids — evaluate once.
+/// The cache is bounded (FIFO eviction at [`DEFAULT_CACHE_CAPACITY`],
+/// tunable via [`Evaluator::with_cache_capacity`]) and keyed on the
+/// resolved point (GEMM dims × dataflow × budget × tier choice × vertical
+/// tech × technology fingerprint); identical points — repeated ResNet
+/// blocks inside one trace, repeated router lookups across a serving run,
+/// overlapping sweep grids — evaluate once.
 pub struct Evaluator {
     models: Vec<Box<dyn CostModel>>,
     /// RwLock: warm lookups (the steady state of sweeps and serving) take
     /// only the read lock and proceed in parallel; writes happen once per
     /// unique design point.
-    cache: RwLock<HashMap<PointKey, Metrics>>,
+    cache: RwLock<CacheState>,
+    capacity: usize,
     hits: AtomicU64,
     misses: AtomicU64,
+    evictions: AtomicU64,
     model_calls: AtomicU64,
 }
 
@@ -92,11 +112,21 @@ impl Evaluator {
     pub fn with_models(models: Vec<Box<dyn CostModel>>) -> Self {
         Evaluator {
             models,
-            cache: RwLock::new(HashMap::new()),
+            cache: RwLock::new(CacheState { map: HashMap::new(), order: VecDeque::new() }),
+            capacity: DEFAULT_CACHE_CAPACITY,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
             model_calls: AtomicU64::new(0),
         }
+    }
+
+    /// Bound the memo cache at `capacity` design points (≥ 1); the oldest
+    /// entry is evicted first (FIFO — simple, O(1), and fair for the
+    /// sweep/serving access patterns where reuse is temporally clustered).
+    pub fn with_cache_capacity(mut self, capacity: usize) -> Self {
+        self.capacity = capacity.max(1);
+        self
     }
 
     /// Evaluate one scenario. Trace workloads are split per layer (each an
@@ -132,7 +162,7 @@ impl Evaluator {
         let key = PointKey::of(point);
         {
             let cache = self.cache.read().unwrap();
-            if let Some(hit) = cache.get(&key) {
+            if let Some(hit) = cache.map.get(&key) {
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 return hit.clone();
             }
@@ -146,7 +176,21 @@ impl Evaluator {
             self.model_calls.fetch_add(1, Ordering::Relaxed);
             model.evaluate(point, &mut m);
         }
-        self.cache.write().unwrap().insert(key, m.clone());
+        let mut cache = self.cache.write().unwrap();
+        if cache.map.insert(key.clone(), m.clone()).is_none() {
+            cache.order.push_back(key);
+            while cache.map.len() > self.capacity {
+                // FIFO eviction; the queue can only hold keys the map holds
+                // (racing duplicate inserts never push twice).
+                match cache.order.pop_front() {
+                    Some(old) => {
+                        cache.map.remove(&old);
+                        self.evictions.fetch_add(1, Ordering::Relaxed);
+                    }
+                    None => break,
+                }
+            }
+        }
         m
     }
 
@@ -167,9 +211,19 @@ impl Evaluator {
         self.model_calls.load(Ordering::Relaxed)
     }
 
-    /// Number of cached design points (race-free dedup count).
+    /// Entries evicted so far (FIFO order, once the capacity is reached).
+    pub fn cache_evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// The memo-cache bound (design points).
+    pub fn cache_capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Number of cached design points (race-free dedup count, ≤ capacity).
     pub fn cache_len(&self) -> usize {
-        self.cache.read().unwrap().len()
+        self.cache.read().unwrap().map.len()
     }
 
     /// Names of the models in the pipeline, in execution order.
@@ -268,6 +322,48 @@ mod tests {
         assert_eq!(ev.cache_misses(), misses);
         assert_eq!(ev.model_calls(), calls);
         assert!(ev.cache_hits() >= 54, "second pass must hit for every layer");
+    }
+
+    #[test]
+    fn bounded_cache_evicts_fifo_and_counts() {
+        let ev = Evaluator::performance().with_cache_capacity(2);
+        assert_eq!(ev.cache_capacity(), 2);
+        let s = |k: u64| {
+            Scenario::builder()
+                .gemm(Gemm::new(8, 8, k))
+                .mac_budget(64)
+                .tiers(2)
+                .build()
+                .unwrap()
+        };
+        ev.evaluate(&s(10)); // cache: [10]
+        ev.evaluate(&s(20)); // cache: [10, 20]
+        ev.evaluate(&s(30)); // evicts 10 → [20, 30]
+        assert_eq!(ev.cache_misses(), 3);
+        assert_eq!(ev.cache_evictions(), 1);
+        assert_eq!(ev.cache_len(), 2);
+
+        ev.evaluate(&s(20)); // retained → hit
+        assert_eq!(ev.cache_hits(), 1);
+        ev.evaluate(&s(10)); // evicted → miss again, evicts 30
+        assert_eq!(ev.cache_misses(), 4);
+        assert_eq!(ev.cache_evictions(), 2);
+        assert_eq!(ev.cache_len(), 2);
+    }
+
+    #[test]
+    fn dataflow_splits_the_cache_key() {
+        let ev = Evaluator::performance();
+        let base = Scenario::builder()
+            .gemm(Gemm::new(64, 147, 12100))
+            .mac_budget(1 << 15)
+            .tiers(4);
+        let dos = base.clone().build().unwrap();
+        let ws = base.dataflow(crate::dataflow::Dataflow::WeightStationary).build().unwrap();
+        ev.evaluate(&dos);
+        ev.evaluate(&ws);
+        assert_eq!(ev.cache_misses(), 2, "WS and dOS are distinct design points");
+        assert_ne!(ev.evaluate(&dos).cycles_3d, ev.evaluate(&ws).cycles_3d);
     }
 
     #[test]

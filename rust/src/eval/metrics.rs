@@ -1,6 +1,7 @@
 //! [`Metrics`]: the joint metric bundle a scenario evaluates to.
 
 use crate::analytical::OptimalDesign;
+use crate::dataflow::Dataflow;
 use crate::power::PowerBreakdown;
 use crate::thermal::ThermalStudy;
 
@@ -13,6 +14,8 @@ pub struct Metrics {
     pub layers: u64,
     /// Total MAC operations of the workload.
     pub macs: u64,
+    /// §III-C mapping the designs were resolved under.
+    pub dataflow: Option<Dataflow>,
     /// Optimized 2D baseline (absent for pinned-array scenarios).
     pub design_2d: Option<OptimalDesign>,
     /// The evaluated 3D design. For traces: the design of the layer with
@@ -113,6 +116,7 @@ pub(crate) fn aggregate(parts: &[Metrics]) -> Metrics {
         out.design_2d = dom.design_2d;
         out.design_3d = dom.design_3d;
         out.tiers = dom.tiers;
+        out.dataflow = dom.dataflow;
     }
     if let (Some(c2), Some(c3)) = (out.cycles_2d, out.cycles_3d) {
         if c3 > 0 {

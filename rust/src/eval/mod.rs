@@ -7,20 +7,26 @@
 //! composable pipeline instead of four differently-shaped free functions:
 //!
 //! * [`Scenario`] — *what* to evaluate: a workload (single GEMM, Table I
-//!   layer, or a full network trace), a MAC budget, a tier choice (fixed or
-//!   auto-optimized), the vertical interconnect technology and the
-//!   technology constants. Built fluently ([`Scenario::builder`]) or
-//!   expanded from a JSON [`crate::config::ExperimentConfig`]
+//!   layer, or a full network trace), a §III-C dataflow (OS/WS/IS/dOS —
+//!   default dOS), a MAC budget, a tier choice (fixed or auto-optimized),
+//!   the vertical interconnect technology and the technology constants.
+//!   Built fluently ([`Scenario::builder`]), from CLI args
+//!   (`Scenario::from_args`, `--dataflow`), or expanded from a JSON
+//!   [`crate::config::ExperimentConfig`]
 //!   ([`Scenario::expand_config`]).
 //! * [`CostModel`] — *how* to evaluate: `fn evaluate(&self, &Scenario,
-//!   &mut Metrics)`. Implemented by [`AnalyticalModel`] (Eq. 1/2 + the [13]
-//!   optimizer), [`AreaModel`] (Fig. 9), [`PowerModel`] (Table II) and
+//!   &mut Metrics)`. Implemented by [`AnalyticalModel`] (the scenario's
+//!   [`crate::dataflow::DataflowModel`] + the [13] optimizer),
+//!   [`AreaModel`] (Fig. 9), [`PowerModel`] (Table II) and
 //!   [`ThermalModel`] (Fig. 8).
 //! * [`Evaluator`] — runs a model pipeline over scenarios with a memoizing
-//!   cache keyed on the resolved design point, batching work across the
-//!   crate threadpool. Trace scenarios are split per layer, so repeated
-//!   shapes (ResNet-50's repeated bottleneck blocks, a serving trace's
-//!   repeated requests) never re-optimize.
+//!   cache keyed on the resolved design point (dataflow included — the
+//!   four-way ablation sweeps warm-hit per mapping), batching work across
+//!   the crate threadpool. The cache is bounded with FIFO eviction
+//!   ([`DEFAULT_CACHE_CAPACITY`], tunable per instance). Trace scenarios
+//!   are split per layer, so repeated shapes (ResNet-50's repeated
+//!   bottleneck blocks, a serving trace's repeated requests) never
+//!   re-optimize.
 //!
 //! The CLI (`cube3d analyze/sweep/power/thermal/...`), the DSE engine
 //! ([`crate::dse`]), the serving coordinator's router and the report
@@ -33,7 +39,7 @@ mod metrics;
 mod models;
 mod scenario;
 
-pub use evaluator::Evaluator;
+pub use evaluator::{Evaluator, DEFAULT_CACHE_CAPACITY};
 pub use metrics::Metrics;
 pub use models::{AnalyticalModel, AreaModel, CostModel, PowerModel, ThermalModel};
 pub use scenario::{ArrayChoice, Scenario, ScenarioBuilder, TierChoice};

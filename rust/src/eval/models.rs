@@ -7,7 +7,7 @@
 
 use super::metrics::Metrics;
 use super::scenario::{ArrayChoice, Scenario, TierChoice};
-use crate::analytical::{cycles_3d, optimal_tier_count, optimize_2d, optimize_3d, OptimalDesign};
+use crate::analytical::OptimalDesign;
 use crate::area::total_area_m2;
 use crate::power::{power_summary, VerticalTech};
 use crate::thermal::{thermal_footprint_m2, thermal_study, ThermalParams};
@@ -20,13 +20,16 @@ pub trait CostModel: Send + Sync {
     fn evaluate(&self, scenario: &Scenario, out: &mut Metrics);
 }
 
-/// Resolve the (2D baseline, 3D design, tier count) of a point scenario.
-/// Pinned arrays skip optimization and have no 2D baseline.
+/// Resolve the (2D baseline, 3D design, tier count) of a point scenario
+/// under its dataflow's [`crate::dataflow::DataflowModel`]. The 2D baseline
+/// is the same dataflow optimized at ℓ=1 (for dOS that is exactly the OS
+/// Eq. 1 baseline). Pinned arrays skip optimization and have no 2D baseline.
 fn resolve_designs(s: &Scenario) -> (Option<OptimalDesign>, OptimalDesign, u64) {
     let g = s.workload.primary_gemm();
+    let model = s.dataflow.model();
     match s.array {
         ArrayChoice::Fixed(arr) => {
-            let cycles = cycles_3d(&g, &arr);
+            let cycles = model.cycles_3d(&g, &arr);
             let d3 = OptimalDesign {
                 rows: arr.rows,
                 cols: arr.cols,
@@ -43,12 +46,12 @@ fn resolve_designs(s: &Scenario) -> (Option<OptimalDesign>, OptimalDesign, u64) 
                 // can actually manufacture (Fixed tiers enforce the same
                 // limit at build()).
                 TierChoice::Auto { max_tiers } => {
-                    optimal_tier_count(&g, s.mac_budget, max_tiers.min(s.vtech.max_tiers()))
+                    model.optimal_tiers(&g, s.mac_budget, max_tiers.min(s.vtech.max_tiers()))
                 }
             };
             (
-                Some(optimize_2d(&g, s.mac_budget)),
-                optimize_3d(&g, s.mac_budget, tiers),
+                Some(model.optimize(&g, s.mac_budget, 1)),
+                model.optimize(&g, s.mac_budget, tiers),
                 tiers,
             )
         }
@@ -67,8 +70,9 @@ fn designs_from(s: &Scenario, m: &Metrics) -> (Option<OptimalDesign>, OptimalDes
     }
 }
 
-/// Eq. 1 / Eq. 2 runtimes, the [13] array optimizer, and the Fig. 5/6/7
-/// speedup and tier-count analyses.
+/// §III-C runtimes (Eq. 1/2 for dOS, the scale-out analogues for OS/WS/IS),
+/// the [13] array optimizer, and the Fig. 5/6/7 speedup and tier-count
+/// analyses — all resolved through the scenario's dataflow model.
 pub struct AnalyticalModel;
 
 impl CostModel for AnalyticalModel {
@@ -80,6 +84,7 @@ impl CostModel for AnalyticalModel {
         let g = s.workload.primary_gemm();
         m.layers = 1;
         m.macs = g.macs();
+        m.dataflow = Some(s.dataflow);
         let (d2, d3, tiers) = resolve_designs(s);
         m.cycles_3d = Some(d3.cycles);
         m.tiers = Some(tiers);
@@ -114,7 +119,10 @@ impl CostModel for AreaModel {
     }
 }
 
-/// §IV-B switching-activity power model (Table II).
+/// §IV-B switching-activity power model (Table II). The RTL activity is the
+/// paper's (ungated OS/dOS streaming); for OS/WS/IS scale-out scenarios it
+/// is applied to the dataflow's optimized array as an approximation — the
+/// paper characterizes power for dOS only.
 pub struct PowerModel;
 
 impl CostModel for PowerModel {
@@ -159,7 +167,8 @@ impl CostModel for ThermalModel {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::analytical::Array3d;
+    use crate::analytical::{cycles_3d, optimal_tier_count, optimize_2d, optimize_3d, Array3d};
+    use crate::dataflow::Dataflow;
     use crate::power::Tech;
     use crate::workloads::Gemm;
 
@@ -182,6 +191,28 @@ mod tests {
         assert_eq!(m.cycles_3d, Some(optimize_3d(&g, 1 << 15, 4).cycles));
         assert_eq!(m.tiers, Some(4));
         assert_eq!(m.macs, g.macs());
+        assert_eq!(m.dataflow, Some(Dataflow::DistributedOutputStationary));
+    }
+
+    #[test]
+    fn analytical_resolves_through_the_scenario_dataflow() {
+        use crate::dataflow::optimize_ws_3d;
+        let g = Gemm::new(64, 147, 12100);
+        let s = Scenario::builder()
+            .gemm(g)
+            .mac_budget(1 << 15)
+            .tiers(4)
+            .dataflow(Dataflow::WeightStationary)
+            .build()
+            .unwrap();
+        let mut m = Metrics::default();
+        AnalyticalModel.evaluate(&s, &mut m);
+        let (_, ws) = optimize_ws_3d(&g, 1 << 15, 4);
+        assert_eq!(m.cycles_3d, Some(ws));
+        assert_eq!(m.dataflow, Some(Dataflow::WeightStationary));
+        // The 2D baseline is WS at one tier, not the OS Eq. 1 baseline.
+        let (_, ws2d) = optimize_ws_3d(&g, 1 << 15, 1);
+        assert_eq!(m.cycles_2d, Some(ws2d));
     }
 
     #[test]

@@ -1,7 +1,8 @@
 //! [`Scenario`]: the declarative input of the evaluation pipeline.
 
 use crate::analytical::Array3d;
-use crate::config::{parse_vtech, ExperimentConfig, WorkloadSpec};
+use crate::config::{parse_dataflow, parse_vtech, ExperimentConfig, WorkloadSpec};
+use crate::dataflow::Dataflow;
 use crate::power::{Tech, VerticalTech};
 use crate::util::cli::Args;
 use crate::workloads::{Gemm, Workload};
@@ -27,7 +28,8 @@ pub enum ArrayChoice {
     Fixed(Array3d),
 }
 
-/// One evaluation request: workload × budget × tiers × vertical tech × tech.
+/// One evaluation request: workload × dataflow × budget × tiers × vertical
+/// tech × tech.
 ///
 /// A scenario with a trace workload is evaluated layer by layer (each layer
 /// an independently cached design point) and aggregated; see
@@ -35,6 +37,9 @@ pub enum ArrayChoice {
 #[derive(Debug, Clone)]
 pub struct Scenario {
     pub workload: Workload,
+    /// §III-C mapping the analytical stage resolves designs under
+    /// (default dOS — the paper's contribution).
+    pub dataflow: Dataflow,
     /// Total MAC budget (split evenly across tiers, Eq. 2).
     pub mac_budget: u64,
     pub tiers: TierChoice,
@@ -50,8 +55,8 @@ impl Scenario {
     }
 
     /// Build a scenario from CLI options (`--layer/--model/--m/n/k`,
-    /// `--macs`, `--tiers`, `--vtech`), with per-subcommand defaults for
-    /// the budget and tier count.
+    /// `--macs`, `--tiers`, `--vtech`, `--dataflow`), with per-subcommand
+    /// defaults for the budget and tier count.
     pub fn from_args(args: &Args, default_macs: u64, default_tiers: u64) -> Result<Scenario> {
         let workload = WorkloadSpec::from_args(args)?.resolve()?;
         Scenario::builder()
@@ -59,29 +64,33 @@ impl Scenario {
             .mac_budget(args.get_u64_or("macs", default_macs)?)
             .tiers(args.get_u64_or("tiers", default_tiers)?)
             .vtech(parse_vtech(args.get_or("vtech", "tsv"))?)
+            .dataflow(parse_dataflow(args.get_or("dataflow", "dos"))?)
             .build()
     }
 
     /// Expand a JSON experiment config into its scenario grid
-    /// (budgets × tiers). Infeasible grid points — budgets below one MAC
-    /// per tier, or tier counts beyond what the vertical tech can
-    /// manufacture — are skipped, matching [`crate::dse::sweep`].
+    /// (budgets × tiers × dataflows). Infeasible grid points — budgets
+    /// below one MAC per tier, or tier counts beyond what the vertical
+    /// tech can manufacture — are skipped, matching [`crate::dse::sweep`].
     pub fn expand_config(cfg: &ExperimentConfig) -> Result<Vec<Scenario>> {
         let workload = cfg.workload.resolve()?;
         let mut out = Vec::new();
         for &budget in &cfg.mac_budgets {
             for &tiers in &cfg.tiers {
-                // Feasibility = "builds as a scenario"; grid points that
-                // fail validation (zero MACs per tier, tiers beyond the
-                // vertical tech's limit) are skipped, as in `dse::sweep`.
-                let built = Scenario::builder()
-                    .workload(workload.clone())
-                    .mac_budget(budget)
-                    .tiers(tiers)
-                    .vtech(cfg.vertical_tech)
-                    .build();
-                if let Ok(s) = built {
-                    out.push(s);
+                for &dataflow in &cfg.dataflows {
+                    // Feasibility = "builds as a scenario"; grid points that
+                    // fail validation (zero MACs per tier, tiers beyond the
+                    // vertical tech's limit) are skipped, as in `dse::sweep`.
+                    let built = Scenario::builder()
+                        .workload(workload.clone())
+                        .mac_budget(budget)
+                        .tiers(tiers)
+                        .vtech(cfg.vertical_tech)
+                        .dataflow(dataflow)
+                        .build();
+                    if let Ok(s) = built {
+                        out.push(s);
+                    }
                 }
             }
         }
@@ -104,6 +113,7 @@ impl Scenario {
                         label: Some(l.name.clone()),
                         gemm: l.gemm,
                     },
+                    dataflow: self.dataflow,
                     mac_budget: self.mac_budget,
                     tiers: self.tiers,
                     vtech: self.vtech,
@@ -153,6 +163,7 @@ impl Scenario {
 #[derive(Debug, Clone)]
 pub struct ScenarioBuilder {
     workload: Option<Workload>,
+    dataflow: Dataflow,
     mac_budget: u64,
     tiers: TierChoice,
     vtech: VerticalTech,
@@ -164,6 +175,7 @@ impl Default for ScenarioBuilder {
     fn default() -> Self {
         ScenarioBuilder {
             workload: None,
+            dataflow: Dataflow::DistributedOutputStationary,
             mac_budget: 1 << 18,
             tiers: TierChoice::Fixed(4),
             vtech: VerticalTech::Tsv,
@@ -193,6 +205,12 @@ impl ScenarioBuilder {
     /// the JSON schema).
     pub fn model(self, name: &str, batch: u64) -> Result<Self> {
         Ok(self.workload(WorkloadSpec::Model { name: name.to_string(), batch }.resolve()?))
+    }
+
+    /// Evaluate under a §III-C dataflow other than the default dOS.
+    pub fn dataflow(mut self, dataflow: Dataflow) -> Self {
+        self.dataflow = dataflow;
+        self
     }
 
     pub fn mac_budget(mut self, budget: u64) -> Self {
@@ -268,6 +286,7 @@ impl ScenarioBuilder {
         }
         Ok(Scenario {
             workload,
+            dataflow: self.dataflow,
             mac_budget: self.mac_budget,
             tiers: self.tiers,
             vtech: self.vtech,
@@ -287,6 +306,7 @@ mod tests {
         let s = Scenario::builder().gemm(Gemm::new(4, 5, 6)).build().unwrap();
         assert_eq!(s.mac_budget, 1 << 18);
         assert_eq!(s.tiers, TierChoice::Fixed(4));
+        assert_eq!(s.dataflow, Dataflow::DistributedOutputStationary);
         assert!(Scenario::builder().build().is_err(), "workload required");
         assert!(Scenario::builder()
             .gemm(Gemm::new(1, 1, 1))
@@ -357,6 +377,39 @@ mod tests {
         let ss = Scenario::expand_config(&wide).unwrap();
         assert_eq!(ss.len(), 2);
         assert!(ss.iter().all(|s| matches!(s.tiers, TierChoice::Fixed(t) if t <= 2)));
+    }
+
+    #[test]
+    fn dataflow_axis_flows_through_builder_config_and_points() {
+        let s = Scenario::builder()
+            .gemm(Gemm::new(4, 5, 6))
+            .dataflow(Dataflow::WeightStationary)
+            .build()
+            .unwrap();
+        assert_eq!(s.dataflow, Dataflow::WeightStationary);
+
+        // Trace points inherit the dataflow.
+        let t = Scenario::builder()
+            .model("deepbench", 1)
+            .unwrap()
+            .dataflow(Dataflow::InputStationary)
+            .build()
+            .unwrap();
+        assert!(t.points().iter().all(|p| p.dataflow == Dataflow::InputStationary));
+
+        // Config grid crosses dataflows with budgets × tiers.
+        let doc = Json::parse(
+            r#"{"workload": {"layer": "RN0"}, "mac_budgets": [4096], "tiers": [1, 4],
+                "dataflows": ["dos", "ws", "os"]}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&doc).unwrap();
+        let ss = Scenario::expand_config(&cfg).unwrap();
+        assert_eq!(ss.len(), 6);
+        assert_eq!(
+            ss.iter().filter(|s| s.dataflow == Dataflow::WeightStationary).count(),
+            2
+        );
     }
 
     #[test]

@@ -42,6 +42,18 @@
 //! let trace = Scenario::builder().model("resnet50", 1).unwrap().build().unwrap();
 //! let t = evaluator.evaluate(&trace);
 //! println!("{} layers, {:.2}x end-to-end", t.layers, t.speedup_vs_2d.unwrap());
+//!
+//! // The §III-C dataflow is a scenario axis (default dOS): the same
+//! // pipeline answers "what if this layer ran weight-stationary?".
+//! use cube3d::dataflow::Dataflow;
+//! let ws = Scenario::builder()
+//!     .gemm(Gemm::new(64, 147, 12100))
+//!     .mac_budget(1 << 18)
+//!     .tiers(12)
+//!     .dataflow(Dataflow::WeightStationary)
+//!     .build()
+//!     .unwrap();
+//! println!("WS cycles: {}", evaluator.evaluate(&ws).cycles_3d.unwrap());
 //! ```
 //!
 //! See `DESIGN.md` for the full system inventory and the per-experiment

@@ -19,13 +19,14 @@
 //! Every metric printed here comes from the shared [`cube3d::eval`]
 //! evaluator — the CLI builds a [`Scenario`] and formats the bundle.
 
-use cube3d::analytical::{breakdown_2d, breakdown_3d, cycles_3d};
-use cube3d::config::{parse_vtech, ExperimentConfig, WorkloadSpec};
+use cube3d::analytical::{breakdown_2d, breakdown_3d};
+use cube3d::config::{parse_dataflow, parse_vtech, ExperimentConfig, WorkloadSpec};
 use cube3d::coordinator::{BatcherConfig, Coordinator, GemmJob, RouterConfig};
+use cube3d::dataflow::Dataflow;
 use cube3d::eval::{shared_evaluator, shared_full_evaluator, shared_performance_evaluator, Scenario};
 use cube3d::report::reproduce_all;
 use cube3d::runtime::find_artifact_dir;
-use cube3d::sim::{matmul_i64, simulate_dos, Matrix};
+use cube3d::sim::{matmul_i64, simulate_dataflow, Matrix};
 use cube3d::util::cli::{usage, Args, OptSpec};
 use cube3d::util::rng::Rng;
 use cube3d::util::table::Table;
@@ -59,11 +60,21 @@ fn workload_opts() -> Vec<OptSpec> {
         OptSpec { name: "macs", takes_value: true, help: "MAC budget (default 262144)" },
         OptSpec { name: "tiers", takes_value: true, help: "tier count or list (default 4)" },
         OptSpec { name: "vtech", takes_value: true, help: "tsv|miv|f2f (default tsv)" },
+        OptSpec {
+            name: "dataflow",
+            takes_value: true,
+            help: "os|ws|is|dos, or a comma list for sweep (default dos)",
+        },
         OptSpec { name: "config", takes_value: true, help: "JSON experiment config file" },
         OptSpec { name: "out-dir", takes_value: true, help: "output directory (default reports)" },
         OptSpec { name: "jobs", takes_value: true, help: "serve: number of jobs (default 32)" },
         OptSpec { name: "seed", takes_value: true, help: "random seed (default 7)" },
     ]
+}
+
+/// Comma-separated `--dataflow` list (sweep/pareto grids).
+fn parse_dataflow_list(s: &str) -> anyhow::Result<Vec<Dataflow>> {
+    s.split(',').map(|p| parse_dataflow(p.trim())).collect()
 }
 
 /// Resolve the workload options to a single GEMM for subcommands that
@@ -122,7 +133,7 @@ fn print_help() {
         ("reproduce", "regenerate every paper table/figure"),
         ("serve", "run the serving coordinator on a GEMM trace"),
         ("workloads", "print the Table I workload library"),
-        ("dataflows", "compare OS/dOS vs WS/IS scale-out on a workload"),
+        ("dataflows", "four-way OS/WS/IS/dOS comparison on a workload"),
         ("pareto", "Pareto front (cycles/area/power) of a design space"),
         ("memory", "off-chip bandwidth demand + feasibility per memory tech"),
     ] {
@@ -135,14 +146,19 @@ fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
     let s = Scenario::from_args(args, 1 << 18, 4)?;
     let m = shared_evaluator().evaluate(&s);
     println!(
-        "workload  {}   budget {} MACs   ({})\n",
+        "workload  {}   dataflow {}   budget {} MACs   ({})\n",
         s.workload.description(),
+        s.dataflow.short_name(),
         s.mac_budget,
         s.vtech.name()
     );
 
     match &s.workload {
-        Workload::Gemm { gemm, .. } => {
+        // The fill/compute/reduce/drain decomposition is the Eq. 1/2 (dOS)
+        // phase structure; other dataflows get the plain cycle comparison.
+        Workload::Gemm { gemm, .. }
+            if s.dataflow == Dataflow::DistributedOutputStationary =>
+        {
             let d2 = m.design_2d.expect("optimized point has a 2D baseline");
             let d3 = m.design_3d.expect("analytical model in pipeline");
             let b2 = breakdown_2d(gemm, &d2.array2d());
@@ -168,6 +184,18 @@ fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
                 b3.reduce.to_string(),
                 b3.drain.to_string(),
                 b3.folds.to_string(),
+            ]);
+            println!("{}", t.to_ascii());
+        }
+        Workload::Gemm { .. } => {
+            let d2 = m.design_2d.expect("optimized point has a 2D baseline");
+            let d3 = m.design_3d.expect("analytical model in pipeline");
+            let mut t = Table::new(["", "array", "cycles"]);
+            t.row(["2D".into(), format!("{}x{}", d2.rows, d2.cols), d2.cycles.to_string()]);
+            t.row([
+                format!("3D ℓ={} (scale-out)", d3.tiers),
+                format!("{}x{}x{}", d3.rows, d3.cols, d3.tiers),
+                d3.cycles.to_string(),
             ]);
             println!("{}", t.to_ascii());
         }
@@ -210,6 +238,9 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
             if let Some(v) = args.get("vtech") {
                 c.vertical_tech = parse_vtech(v)?;
             }
+            if let Some(dfs) = args.get("dataflow") {
+                c.dataflows = parse_dataflow_list(dfs)?;
+            }
             c.validate()?;
             c
         }
@@ -224,11 +255,12 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         cfg.vertical_tech.name(),
         scenarios.len()
     );
-    let mut t = Table::new(["MACs", "ℓ", "cycles", "speedup", "perf/area vs 2D", "power W"]);
+    let mut t = Table::new(["MACs", "ℓ", "df", "cycles", "speedup", "perf/area vs 2D", "power W"]);
     for (s, m) in scenarios.iter().zip(&metrics) {
         t.row([
             s.mac_budget.to_string(),
             m.tiers.map_or("-".into(), |v| v.to_string()),
+            s.dataflow.short_name().to_string(),
             m.cycles_3d.map_or("-".into(), |v| v.to_string()),
             m.speedup_vs_2d.map_or("-".into(), |v| format!("{v:.3}x")),
             m.perf_per_area_vs_2d.map_or("-".into(), |v| format!("{v:.3}x")),
@@ -319,21 +351,28 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let k = args.get_u64_or("k", 60)? as usize;
     let tiers = args.get_u64_or("tiers", 3)?;
     let seed = args.get_u64_or("seed", 7)?;
+    let dataflow = parse_dataflow(args.get_or("dataflow", "dos"))?;
     let mut rng = Rng::new(seed);
     let a = Matrix::from_fn(m, k, |_, _| rng.gen_range(255) as i64 - 127);
     let b = Matrix::from_fn(k, n, |_, _| rng.gen_range(255) as i64 - 127);
     let arr = cube3d::analytical::Array3d::new(8.min(m as u64), 8.min(n as u64), tiers);
-    let r = simulate_dos(&a, &b, &arr);
+    let r = simulate_dataflow(dataflow, &a, &b, &arr);
     let expect = matmul_i64(&a, &b);
     let g = Gemm::new(m as u64, n as u64, k as u64);
-    let model_cycles = cycles_3d(&g, &arr);
-    println!("simulated GEMM {g} on {}x{}x{}", arr.rows, arr.cols, arr.tiers);
+    let model_cycles = dataflow.model().cycles_3d(&g, &arr);
+    println!(
+        "simulated GEMM {g} ({}) on {}x{}x{}",
+        dataflow.short_name(),
+        arr.rows,
+        arr.cols,
+        arr.tiers
+    );
     println!(
         "  functional:  {}",
         if r.output == expect { "OK (matches matmul)" } else { "MISMATCH" }
     );
     println!(
-        "  cycles:      {} (analytical Eq.2: {model_cycles}) {}",
+        "  cycles:      {} (closed form: {model_cycles}) {}",
         r.trace.cycles,
         if r.trace.cycles == model_cycles { "OK" } else { "MISMATCH" }
     );
@@ -422,49 +461,36 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_dataflows(args: &Args) -> anyhow::Result<()> {
-    use cube3d::dataflow::{optimize_is_3d, optimize_ws_3d};
+    use cube3d::dse::dataflow_ablation;
     let g = single_gemm_workload(args)?;
     let macs = args.get_u64_or("macs", 1 << 18)?;
     let tiers_list = args
         .get_u64_list("tiers")?
         .unwrap_or_else(|| vec![1, 2, 4, 8, 12]);
-    let evaluator = shared_performance_evaluator();
     println!("workload {g}   budget {macs} MACs\n");
-    let mut t = Table::new(["ℓ", "dOS cycles", "WS cycles", "IS cycles", "best"]);
+    let mut t = Table::new(["ℓ", "OS cycles", "WS cycles", "IS cycles", "dOS cycles", "best"]);
     for &tiers in &tiers_list {
-        if macs / tiers == 0 {
+        // Feasibility = "builds as a scenario", as everywhere else.
+        if Scenario::builder().gemm(g).mac_budget(macs).tiers(tiers).build().is_err() {
             continue;
         }
-        let s = Scenario::builder().gemm(g).mac_budget(macs).tiers(tiers).build()?;
-        let dos = evaluator
-            .evaluate(&s)
-            .cycles_3d
-            .expect("analytical model in pipeline");
-        let (_, ws) = optimize_ws_3d(&g, macs, tiers);
-        let (_, is) = optimize_is_3d(&g, macs, tiers);
-        let best = if dos <= ws && dos <= is {
-            "dOS"
-        } else if ws <= is {
-            "WS (scale-out)"
-        } else {
-            "IS (scale-out)"
-        };
-        t.row([
-            tiers.to_string(),
-            dos.to_string(),
-            ws.to_string(),
-            is.to_string(),
-            best.to_string(),
-        ]);
+        // One row per tier count, all four dataflows through the shared
+        // cached evaluator (a repeated invocation is pure cache hits).
+        let row = dataflow_ablation(&[g], macs, tiers).remove(0);
+        let (best, _) = row.best();
+        let mut cells = vec![tiers.to_string()];
+        cells.extend(row.cycles.iter().map(|(_, c)| c.to_string()));
+        cells.push(best.short_name().to_string());
+        t.row(cells);
     }
     println!("{}", t.to_ascii());
     println!("dOS maps K to the 3rd dimension (cross-tier reduction);");
-    println!("WS/IS split their temporal dim across tiers (pure scale-out, §III-C).");
+    println!("OS/WS/IS split folds or their temporal dim across tiers (pure scale-out, §III-C).");
     Ok(())
 }
 
 fn cmd_pareto(args: &Args) -> anyhow::Result<()> {
-    use cube3d::dse::{pareto_front, sweep};
+    use cube3d::dse::{pareto_front, sweep_dataflows};
     use cube3d::power::Tech;
     let g = single_gemm_workload(args)?;
     let vtech = parse_vtech(args.get_or("vtech", "miv"))?;
@@ -474,7 +500,11 @@ fn cmd_pareto(args: &Args) -> anyhow::Result<()> {
     let tiers = args
         .get_u64_list("tiers")?
         .unwrap_or_else(|| vec![1, 2, 4, 8, 12]);
-    let pts = sweep(&[g], &budgets, &tiers, vtech, &Tech::default());
+    let dataflows = match args.get("dataflow") {
+        None => vec![Dataflow::DistributedOutputStationary],
+        Some(dfs) => parse_dataflow_list(dfs)?,
+    };
+    let pts = sweep_dataflows(&[g], &budgets, &tiers, &dataflows, vtech, &Tech::default());
     let front = pareto_front(&pts);
     println!(
         "workload {g} ({}): {} design points, {} Pareto-optimal\n",
@@ -482,11 +512,12 @@ fn cmd_pareto(args: &Args) -> anyhow::Result<()> {
         pts.len(),
         front.len()
     );
-    let mut t = Table::new(["MACs", "ℓ", "cycles", "area mm²", "power W", "speedup vs 2D"]);
+    let mut t = Table::new(["MACs", "ℓ", "df", "cycles", "area mm²", "power W", "speedup vs 2D"]);
     for p in &front {
         t.row([
             p.mac_budget.to_string(),
             p.tiers.to_string(),
+            p.dataflow.short_name().to_string(),
             p.cycles.to_string(),
             format!("{:.2}", p.area_m2 * 1e6),
             format!("{:.2}", p.power_w),

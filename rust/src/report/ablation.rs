@@ -1,0 +1,78 @@
+//! Ablation: the design choice at the heart of the paper — mapping K to the
+//! third dimension (dOS) vs the OS/WS/IS scale-out alternatives (§III-C) —
+//! over the full Table I workload set, through the shared cached evaluator.
+
+use super::Report;
+use crate::dataflow::Dataflow;
+use crate::dse::dataflow_ablation;
+use crate::util::csv::Csv;
+use crate::util::table::Table;
+use crate::workloads::table1;
+
+pub const BUDGET: u64 = 1 << 18;
+pub const TIERS: u64 = 8;
+
+pub fn report() -> Report {
+    let entries = table1();
+    let gemms: Vec<_> = entries.iter().map(|e| e.gemm).collect();
+    let rows = dataflow_ablation(&gemms, BUDGET, TIERS);
+
+    let mut csv = Csv::new(["layer", "dataflow", "cycles", "best"]);
+    let mut tbl = Table::new(["layer", "OS", "WS", "IS", "dOS", "best"]);
+    let mut dos_wins = 0;
+    for (e, row) in entries.iter().zip(&rows) {
+        let (best, _) = row.best();
+        if best == Dataflow::DistributedOutputStationary {
+            dos_wins += 1;
+        }
+        let mut cells = vec![e.layer.to_string()];
+        for &(df, cycles) in &row.cycles {
+            csv.row([
+                e.layer.to_string(),
+                df.short_name().to_string(),
+                cycles.to_string(),
+                (df == best).to_string(),
+            ]);
+            cells.push(cycles.to_string());
+        }
+        cells.push(best.short_name().to_string());
+        tbl.row(cells);
+    }
+
+    Report {
+        id: "ablation",
+        title: "Ablation: dOS vs OS/WS/IS scale-out (ℓ=8, 2^18 MACs)",
+        csv,
+        table: tbl,
+        notes: vec![format!(
+            "dOS wins {dos_wins}/{} Table I layers — the large-K, small-M·N layers (§III-C)",
+            entries.len()
+        )],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_every_layer_and_dataflow() {
+        let r = report();
+        // 8 layers × 4 dataflows.
+        assert_eq!(r.csv.n_rows(), 32);
+        assert!(r.notes[0].contains("dOS wins"), "{}", r.notes[0]);
+    }
+
+    #[test]
+    fn rn0_headline_goes_to_dos() {
+        let entries = table1();
+        let rows = dataflow_ablation(
+            &entries.iter().map(|e| e.gemm).collect::<Vec<_>>(),
+            BUDGET,
+            TIERS,
+        );
+        let rn0 = entries.iter().position(|e| e.layer == "RN0").unwrap();
+        let (best, _) = rows[rn0].best();
+        assert_eq!(best, Dataflow::DistributedOutputStationary);
+    }
+}

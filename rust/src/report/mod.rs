@@ -10,7 +10,9 @@
 //! | T2 | Table II — power 2D vs 3D-TSV vs 3D-MIV  | [`table2::report`] |
 //! | F8 | Fig. 8   — temperature boxplots          | [`fig8::report`]   |
 //! | F9 | Fig. 9   — perf-per-area vs tier count   | [`fig9::report`]   |
+//! | AB | §III-C   — dOS vs OS/WS/IS ablation      | [`ablation::report`] |
 
+pub mod ablation;
 pub mod fig5;
 pub mod fig6;
 pub mod fig7;
@@ -68,6 +70,7 @@ pub fn reproduce_all(dir: &Path) -> Result<Vec<Report>> {
         table2::report(),
         fig8::report(),
         fig9::report(),
+        ablation::report(),
     ];
     for r in &reports {
         r.write_to(dir)?;

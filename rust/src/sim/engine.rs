@@ -1,17 +1,30 @@
-//! Exact register-level simulation of the OS (2D) and dOS (3D) dataflows.
+//! Exact register-level simulation of all four §III-C dataflows.
 //!
-//! Every element of A and B physically shifts through neighbor registers
-//! with the classic systolic skew (operand pair (i,k),(k,j) meets MAC (i,j)
-//! at cycle k+i+j), partial sums accumulate in place, the ℓ−1 cross-tier
-//! reduction runs after the streaming phase, and outputs drain through the
-//! bottom tier's columns. The result is both the functional GEMM output and
-//! a cycle/activity accounting that must match Eq. (1)/(2) and the fast
-//! engine exactly — both are enforced by tests.
+//! * **OS / dOS** ([`simulate_os_2d`], [`simulate_dos`],
+//!   [`simulate_os_3d_scaleout`]): every element of A and B physically
+//!   shifts through neighbor registers with the classic systolic skew
+//!   (operand pair (i,k),(k,j) meets MAC (i,j) at cycle k+i+j), partial
+//!   sums accumulate in place, the ℓ−1 cross-tier reduction runs after the
+//!   streaming phase (dOS only), and outputs drain through the columns. The
+//!   OS scale-out variant distributes whole serialization folds across
+//!   independent tiers.
+//! * **WS / IS** ([`simulate_ws`], [`simulate_is`]): each fold starts with a
+//!   pinned-operand *load phase* (R cycles — the stationary tile shifts down
+//!   into place), then the temporal dimension streams through while partial
+//!   sums ripple down the columns and retire at the bottom edge. In 3D the
+//!   temporal dimension is split across tiers (scale-out, no vertical
+//!   links). IS is WS with the operand roles swapped (Oᵀ = Bᵀ·Aᵀ), and is
+//!   simulated exactly that way.
+//!
+//! Every engine produces both the functional GEMM output and a
+//! cycle/activity accounting that must match the closed-form §III-C models
+//! and the fast counters in [`super::fast`] exactly — all enforced by
+//! property tests ([`crate::dataflow::DataflowModel`] is the seam).
 
 use super::matrix::Matrix;
 use super::trace::ActivityTrace;
 use crate::analytical::{Array2d, Array3d};
-use crate::dataflow::{dos_k_per_tier, dos_k_split};
+use crate::dataflow::{dos_k_per_tier, dos_k_split, Dataflow};
 use crate::workloads::Gemm;
 
 /// Output of an exact simulation.
@@ -31,6 +44,22 @@ struct Reg {
 /// Simulate a full GEMM on a 2D array with the OS dataflow (Eq. 1 timing).
 pub fn simulate_os_2d(a: &Matrix<i64>, b: &Matrix<i64>, array: &Array2d) -> SimResult {
     simulate_dos(a, b, &Array3d::new(array.rows, array.cols, 1))
+}
+
+/// Dispatch to the exact engine for any §III-C dataflow — the simulator-side
+/// face of the [`crate::dataflow::DataflowModel`] seam.
+pub fn simulate_dataflow(
+    dataflow: Dataflow,
+    a: &Matrix<i64>,
+    b: &Matrix<i64>,
+    array: &Array3d,
+) -> SimResult {
+    match dataflow {
+        Dataflow::OutputStationary => simulate_os_3d_scaleout(a, b, array),
+        Dataflow::WeightStationary => simulate_ws(a, b, array),
+        Dataflow::InputStationary => simulate_is(a, b, array),
+        Dataflow::DistributedOutputStationary => simulate_dos(a, b, array),
+    }
 }
 
 /// Simulate a full GEMM on an ℓ-tier 3D array with the dOS dataflow
@@ -67,10 +96,50 @@ pub fn simulate_dos(a: &Matrix<i64>, b: &Matrix<i64>, array: &Array3d) -> SimRes
                 a, b, &mut output, &mut trace,
                 i0, j0, rm, cn, r_dim, c_dim, tiers, k_max, &k_ranges,
             );
+            // Cycle accounting (must equal Eq. 2 per fold): stream + reduce
+            // + drain; folds run back to back.
+            trace.cycles += (r_dim + c_dim - 2 + k_max + (tiers - 1) + r_dim) as u64;
             j0 += c_dim;
         }
         i0 += r_dim;
     }
+    SimResult { output, trace }
+}
+
+/// Simulate a GEMM on an ℓ-tier stack with the OS scale-out dataflow:
+/// serialization folds are dealt round-robin to tiers, each tier an
+/// independent 2D OS array (no cross-tier links; the critical path is the
+/// most-loaded tier).
+pub fn simulate_os_3d_scaleout(a: &Matrix<i64>, b: &Matrix<i64>, array: &Array3d) -> SimResult {
+    assert_eq!(a.cols, b.rows, "inner dims must match");
+    let (r_dim, c_dim, tiers) = (
+        array.rows as usize,
+        array.cols as usize,
+        array.tiers as usize,
+    );
+    let k = a.cols;
+    // Each fold runs the full K temporally on its tier — a 1-tier fold.
+    let k_ranges = [(0usize, k)];
+    let mut output = Matrix::<i64>::zeros(a.rows, b.cols);
+    let mut trace = ActivityTrace::default();
+    let mut folds = 0u64;
+    let mut i0 = 0usize;
+    while i0 < a.rows {
+        let rm = r_dim.min(a.rows - i0);
+        let mut j0 = 0usize;
+        while j0 < b.cols {
+            let cn = c_dim.min(b.cols - j0);
+            simulate_fold(
+                a, b, &mut output, &mut trace,
+                i0, j0, rm, cn, r_dim, c_dim, 1, k, &k_ranges,
+            );
+            folds += 1;
+            j0 += c_dim;
+        }
+        i0 += r_dim;
+    }
+    let per_fold = (2 * r_dim + c_dim - 2 + k) as u64;
+    trace.cycles = per_fold * folds.div_ceil(tiers as u64);
     SimResult { output, trace }
 }
 
@@ -205,9 +274,175 @@ fn simulate_fold(
             }
         }
     }
+}
 
-    // ---- Cycle accounting (must equal Eq. 2 per fold). ----
-    trace.cycles += (stream_cycles + (tiers - 1) + r_dim) as u64;
+/// Simulate a full GEMM with the WS dataflow on an ℓ-tier scale-out stack
+/// (ℓ=1 ⇒ the 2D WS array). B is pinned (K→rows, N→cols); the temporal M
+/// dimension is split across tiers. `a` is M×K, `b` is K×N.
+pub fn simulate_ws(a: &Matrix<i64>, b: &Matrix<i64>, array: &Array3d) -> SimResult {
+    assert_eq!(a.cols, b.rows, "inner dims must match");
+    let g = Gemm::new(a.rows as u64, b.cols as u64, a.cols as u64);
+    let (r_dim, c_dim) = (array.rows as usize, array.cols as usize);
+    // Temporal M split across tiers (even chunks, like dOS splits K); tiers
+    // beyond the split idle entirely. Lockstep across tiers ⇒ the streaming
+    // phase covers the largest chunk, ⌈M/ℓ⌉.
+    let m_max = dos_k_per_tier(g.m, array.tiers) as usize;
+    let chunks = dos_k_split(g.m, array.tiers);
+    let mut m_ranges: Vec<(usize, usize)> = Vec::with_capacity(chunks.len());
+    let mut mb = 0usize;
+    for &len in &chunks {
+        m_ranges.push((mb, len as usize));
+        mb += len as usize;
+    }
+
+    let mut output = Matrix::<i64>::zeros(a.rows, b.cols);
+    let mut trace = ActivityTrace::default();
+
+    let mut k0 = 0usize;
+    while k0 < a.cols {
+        let km = r_dim.min(a.cols - k0);
+        let mut j0 = 0usize;
+        while j0 < b.cols {
+            let cn = c_dim.min(b.cols - j0);
+            simulate_ws_fold(
+                a, b, &mut output, &mut trace,
+                k0, j0, km, cn, r_dim, c_dim, m_max, &m_ranges,
+            );
+            // Per-fold cycles: load R + stream (⌈M/ℓ⌉ + R + C − 2).
+            trace.cycles += (r_dim + (m_max + r_dim + c_dim - 2)) as u64;
+            j0 += c_dim;
+        }
+        k0 += r_dim;
+    }
+    SimResult { output, trace }
+}
+
+/// Simulate a full GEMM with the IS dataflow: A pinned (K→rows, M→cols),
+/// N temporal. IS is exactly WS with the operand roles swapped
+/// (Oᵀ = Bᵀ·Aᵀ), so it runs on the WS engine with transposed operands; in
+/// the trace, `h_transfers` are the streamed-B hops and `v_transfers` the
+/// pinned-A load hops.
+pub fn simulate_is(a: &Matrix<i64>, b: &Matrix<i64>, array: &Array3d) -> SimResult {
+    let r = simulate_ws(&b.transpose(), &a.transpose(), array);
+    SimResult { output: r.output.transpose(), trace: r.trace }
+}
+
+/// A partial sum rippling down a WS column, tagged with its destination
+/// output row (the temporal index within the tier's M chunk).
+#[derive(Debug, Clone, Copy, Default)]
+struct Psum {
+    v: i64,
+    m: usize,
+    valid: bool,
+}
+
+/// One WS serialization fold: load the stationary B tile, stream the
+/// temporal dimension, retire psums at the bottom edge.
+#[allow(clippy::too_many_arguments)]
+fn simulate_ws_fold(
+    a: &Matrix<i64>,
+    b: &Matrix<i64>,
+    output: &mut Matrix<i64>,
+    trace: &mut ActivityTrace,
+    k0: usize,
+    j0: usize,
+    km: usize,
+    cn: usize,
+    r_dim: usize,
+    c_dim: usize,
+    m_max: usize,
+    m_ranges: &[(usize, usize)],
+) {
+    let idx = |r: usize, c: usize| r * c_dim + c;
+    let n_tiers = m_ranges.len();
+
+    // ---- Load phase: R cycles. The B tile is replicated into every active
+    // tier, streamed down the in-plane vertical wires bottom-row-first; the
+    // weight pinned at row r makes r+1 hops (edge input + r neighbor hops).
+    let mut w = vec![vec![Reg::default(); r_dim * c_dim]; n_tiers];
+    for tier in w.iter_mut() {
+        for r in 0..km {
+            for c in 0..cn {
+                trace.v_transfers += r as u64 + 1;
+                tier[idx(r, c)] = Reg { v: b.get(k0 + r, j0 + c), valid: true };
+            }
+        }
+    }
+
+    // ---- Streaming phase: ⌈M/ℓ⌉ + R + C − 2 cycles, lockstep across tiers.
+    let mut a_reg = vec![vec![Reg::default(); r_dim * c_dim]; n_tiers];
+    let mut p_reg = vec![vec![Psum::default(); r_dim * c_dim]; n_tiers];
+    let stream_cycles = m_max + r_dim + c_dim - 2;
+    for cyc in 0..stream_cycles {
+        for (t, &(mb, mlen)) in m_ranges.iter().enumerate() {
+            // Shift A rightward (columns high→low): temporal element
+            // m = cyc − r of this tier's M chunk enters row r (row skew).
+            for r in 0..r_dim {
+                for c in (0..c_dim).rev() {
+                    let incoming = if c == 0 {
+                        let m = cyc as isize - r as isize;
+                        if r < km && m >= 0 && (m as usize) < mlen {
+                            Reg { v: a.get(mb + m as usize, k0 + r), valid: true }
+                        } else {
+                            Reg::default()
+                        }
+                    } else {
+                        a_reg[t][idx(r, c - 1)]
+                    };
+                    // Control gating past the active tile, as in the OS engine.
+                    let gated = if c >= cn { Reg::default() } else { incoming };
+                    if gated.valid {
+                        trace.h_transfers += 1;
+                    }
+                    a_reg[t][idx(r, c)] = gated;
+                }
+            }
+            // Shift psums downward (rows high→low): a fresh zero psum for
+            // temporal m = cyc − c enters the top of column c (column skew,
+            // aligned so psum m meets A element m at every row).
+            for c in 0..c_dim {
+                for r in (0..r_dim).rev() {
+                    let incoming = if r == 0 {
+                        let m = cyc as isize - c as isize;
+                        if c < cn && m >= 0 && (m as usize) < mlen {
+                            Psum { v: 0, m: m as usize, valid: true }
+                        } else {
+                            Psum::default()
+                        }
+                    } else {
+                        p_reg[t][idx(r - 1, c)]
+                    };
+                    if incoming.valid {
+                        trace.drain_transfers += 1;
+                    }
+                    p_reg[t][idx(r, c)] = incoming;
+                }
+            }
+            // MAC: psum m and A element m are co-located at (r, c) at cycle
+            // m + r + c; the pinned weight joins the product.
+            for r in 0..km {
+                for c in 0..cn {
+                    let (ar, pr) = (a_reg[t][idx(r, c)], p_reg[t][idx(r, c)]);
+                    if ar.valid && pr.valid {
+                        debug_assert!(w[t][idx(r, c)].valid);
+                        p_reg[t][idx(r, c)].v += w[t][idx(r, c)].v * ar.v;
+                        trace.mac_ops += 1;
+                    }
+                }
+            }
+            // Retire the bottom row: a psum that crossed all R rows exits to
+            // the output buffer (accumulating across K-folds).
+            for c in 0..cn {
+                let pr = p_reg[t][idx(r_dim - 1, c)];
+                if pr.valid {
+                    let cur = output.get(mb + pr.m, j0 + c);
+                    output.set(mb + pr.m, j0 + c, cur + pr.v);
+                    trace.drain_transfers += 1;
+                    p_reg[t][idx(r_dim - 1, c)] = Psum::default();
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -310,5 +545,92 @@ mod tests {
         let r = simulate_dos(&a, &b, &Array3d::new(2, 2, 3));
         // (ℓ−1)·rm·cn per fold, 2·2=4 folds of 2x2 tiles: 2·4·4 = 32.
         assert_eq!(r.trace.cross_tier_transfers, 32);
+    }
+
+    #[test]
+    fn ws_functional_and_cycles_2d() {
+        use crate::dataflow::cycles_ws_2d;
+        let mut rng = Rng::new(20);
+        let a = rand_matrix(&mut rng, 10, 17);
+        let b = rand_matrix(&mut rng, 17, 13);
+        let r = simulate_ws(&a, &b, &Array3d::new(4, 5, 1));
+        assert_eq!(r.output, matmul_i64(&a, &b));
+        let g = Gemm::new(10, 13, 17);
+        assert_eq!(r.trace.cycles, cycles_ws_2d(&g, &Array2d::new(4, 5)));
+        assert_eq!(r.trace.cross_tier_transfers, 0, "scale-out uses no vertical links");
+    }
+
+    #[test]
+    fn ws_functional_and_cycles_3d_scaleout() {
+        use crate::dataflow::cycles_ws_3d_scaleout;
+        let mut rng = Rng::new(21);
+        let a = rand_matrix(&mut rng, 23, 11);
+        let b = rand_matrix(&mut rng, 11, 9);
+        let arr = Array3d::new(3, 4, 4);
+        let r = simulate_ws(&a, &b, &arr);
+        assert_eq!(r.output, matmul_i64(&a, &b));
+        let g = Gemm::new(23, 9, 11);
+        assert_eq!(r.trace.cycles, cycles_ws_3d_scaleout(&g, &arr));
+        assert_eq!(r.trace.mac_ops, 23 * 11 * 9);
+    }
+
+    #[test]
+    fn is_functional_and_cycles() {
+        use crate::dataflow::{cycles_is_2d, cycles_is_3d_scaleout};
+        let mut rng = Rng::new(22);
+        let a = rand_matrix(&mut rng, 7, 19);
+        let b = rand_matrix(&mut rng, 19, 21);
+        let g = Gemm::new(7, 21, 19);
+        let r2 = simulate_is(&a, &b, &Array3d::new(5, 3, 1));
+        assert_eq!(r2.output, matmul_i64(&a, &b));
+        assert_eq!(r2.trace.cycles, cycles_is_2d(&g, &Array2d::new(5, 3)));
+        let arr = Array3d::new(4, 4, 3);
+        let r3 = simulate_is(&a, &b, &arr);
+        assert_eq!(r3.output, matmul_i64(&a, &b));
+        assert_eq!(r3.trace.cycles, cycles_is_3d_scaleout(&g, &arr));
+        assert_eq!(r3.trace.mac_ops, 7 * 19 * 21);
+    }
+
+    #[test]
+    fn os_scaleout_functional_and_cycles() {
+        use crate::dataflow::cycles_os_3d_scaleout;
+        let mut rng = Rng::new(23);
+        let a = rand_matrix(&mut rng, 13, 8);
+        let b = rand_matrix(&mut rng, 8, 11);
+        let arr = Array3d::new(4, 4, 3);
+        let r = simulate_os_3d_scaleout(&a, &b, &arr);
+        assert_eq!(r.output, matmul_i64(&a, &b));
+        let g = Gemm::new(13, 11, 8);
+        assert_eq!(r.trace.cycles, cycles_os_3d_scaleout(&g, &arr));
+        assert_eq!(r.trace.cross_tier_transfers, 0);
+        // ℓ=1 scale-out is exactly the 2D OS engine.
+        let one = simulate_os_3d_scaleout(&a, &b, &Array3d::new(4, 4, 1));
+        let two_d = simulate_os_2d(&a, &b, &Array2d::new(4, 4));
+        assert_eq!(one.trace, two_d.trace);
+        assert_eq!(one.output, two_d.output);
+    }
+
+    #[test]
+    fn dispatch_covers_all_dataflows() {
+        let mut rng = Rng::new(24);
+        let a = rand_matrix(&mut rng, 6, 9);
+        let b = rand_matrix(&mut rng, 9, 5);
+        let arr = Array3d::new(3, 3, 2);
+        let expect = matmul_i64(&a, &b);
+        for df in Dataflow::ALL {
+            let r = simulate_dataflow(df, &a, &b, &arr);
+            assert_eq!(r.output, expect, "{}", df.short_name());
+        }
+    }
+
+    #[test]
+    fn ws_single_mac_array() {
+        let mut rng = Rng::new(25);
+        let a = rand_matrix(&mut rng, 3, 5);
+        let b = rand_matrix(&mut rng, 5, 2);
+        let r = simulate_ws(&a, &b, &Array3d::new(1, 1, 1));
+        assert_eq!(r.output, matmul_i64(&a, &b));
+        // folds = 5·2 = 10; per fold = 1 + (3 + 1 + 1 − 2) = 4.
+        assert_eq!(r.trace.cycles, 40);
     }
 }

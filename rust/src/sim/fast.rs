@@ -1,8 +1,9 @@
-//! Closed-form activity model — the full-scale engine.
+//! Closed-form activity models — the full-scale engines, one per dataflow.
 //!
-//! Computes exactly the same [`ActivityTrace`] the register-level engine
-//! produces, in O(folds · ℓ) instead of O(cycles · R · C · ℓ), by counting
-//! per-fold transfers analytically:
+//! Each computes exactly the same [`ActivityTrace`] its register-level
+//! counterpart produces, in O(folds · ℓ) instead of O(cycles · R · C · ℓ),
+//! by counting per-fold transfers analytically. For OS/dOS
+//! ([`fast_activity`]):
 //!
 //! * A-stream: each of the `rm·Ks` elements of a tier's A tile hops through
 //!   `cn` links (edge input + cn−1 neighbor hops) → `rm·cn·Ks`.
@@ -12,7 +13,19 @@
 //! * Drain: output at row r makes `R−r` hops to exit →
 //!   `cn·(rm·R − rm(rm−1)/2)`.
 //!
-//! Equality with the exact engine is enforced by a property test
+//! For WS ([`fast_activity_ws`], tile km×cn, temporal chunk `mt` per tier):
+//!
+//! * Load: the stationary tile is replicated into every active tier; the
+//!   weight pinned at row r makes r+1 hops → `cn·km(km+1)/2` per tier.
+//! * Stream + MACs: `mt·km·cn` per tier (summing to `M·km·cn` per fold).
+//! * Psum pipeline: inject + R−1 inter-row hops + retire →
+//!   `mt·cn·(R+1)` drain transfers per tier.
+//!
+//! IS is WS with swapped operands ([`fast_activity_is`]); OS scale-out
+//! ([`fast_activity_os_scaleout`]) keeps the 2D OS transfer totals and
+//! divides only the critical path (folds dealt round-robin to tiers).
+//!
+//! Equality with the exact engines is enforced by property tests
 //! (`rust/tests/properties.rs`).
 
 use super::trace::ActivityTrace;
@@ -50,6 +63,58 @@ pub fn fast_activity(g: &Gemm, array: &Array3d) -> ActivityTrace {
         }
         i0 += r_dim;
     }
+    t
+}
+
+/// Activity of a full GEMM on an ℓ-tier WS scale-out stack (ℓ=1 gives the
+/// 2D WS array): B pinned, temporal M split across tiers.
+pub fn fast_activity_ws(g: &Gemm, array: &Array3d) -> ActivityTrace {
+    let (r_dim, c_dim) = (array.rows, array.cols);
+    let m_max = dos_k_per_tier(g.m, array.tiers);
+    let chunks = dos_k_split(g.m, array.tiers);
+    let active_tiers = chunks.len() as u64;
+
+    let mut t = ActivityTrace::default();
+    let per_fold_cycles = r_dim + (m_max + r_dim + c_dim - 2);
+
+    let mut k0 = 0u64;
+    while k0 < g.k {
+        let km = r_dim.min(g.k - k0);
+        let mut j0 = 0u64;
+        while j0 < g.n {
+            let cn = c_dim.min(g.n - j0);
+            t.cycles += per_fold_cycles;
+            // Load: the B tile replicated per active tier, row r's weight
+            // making r+1 hops down the in-plane vertical wires.
+            t.v_transfers += active_tiers * cn * (km * (km + 1) / 2);
+            // A-stream + MACs: each tier streams its own M chunk; the
+            // chunks sum to M.
+            t.h_transfers += g.m * km * cn;
+            t.mac_ops += g.m * km * cn;
+            // Psum pipeline: inject + (R−1) inter-row hops + retire.
+            t.drain_transfers += g.m * cn * (r_dim + 1);
+            j0 += c_dim;
+        }
+        k0 += r_dim;
+    }
+    t
+}
+
+/// Activity for the IS dataflow: WS with the operand roles (and M/N)
+/// swapped — `h_transfers` are streamed-B hops, `v_transfers` pinned-A
+/// load hops, matching [`super::engine::simulate_is`].
+pub fn fast_activity_is(g: &Gemm, array: &Array3d) -> ActivityTrace {
+    fast_activity_ws(&Gemm::new(g.n, g.m, g.k), array)
+}
+
+/// Activity for OS scale-out: transfer totals are exactly the 2D OS array's
+/// (every fold runs once, on some tier); only the critical path shrinks —
+/// folds are dealt round-robin, so cycles = per-fold × ⌈folds/ℓ⌉.
+pub fn fast_activity_os_scaleout(g: &Gemm, array: &Array3d) -> ActivityTrace {
+    let mut t = fast_activity(g, &Array3d::new(array.rows, array.cols, 1));
+    let folds = g.m.div_ceil(array.rows) * g.n.div_ceil(array.cols);
+    let per_fold = 2 * array.rows + array.cols + g.k - 2;
+    t.cycles = per_fold * folds.div_ceil(array.tiers);
     t
 }
 
@@ -176,5 +241,56 @@ mod tests {
         let arr = Array3d::new(64, 147, 12);
         let t = fast_activity(&g, &arr);
         assert_eq!(t.mac_ops, g.macs());
+    }
+
+    #[test]
+    fn ws_matches_exact_engine() {
+        use crate::sim::engine::simulate_ws;
+        let mut rng = Rng::new(12);
+        let (m, n, k) = (15, 9, 22);
+        let a = rand_matrix(&mut rng, m, k);
+        let b = rand_matrix(&mut rng, k, n);
+        let g = Gemm::new(m as u64, n as u64, k as u64);
+        for arr in [Array3d::new(5, 4, 1), Array3d::new(3, 4, 4), Array3d::new(4, 4, 20)] {
+            let exact = simulate_ws(&a, &b, &arr);
+            assert_eq!(exact.trace, fast_activity_ws(&g, &arr), "{arr:?}");
+        }
+    }
+
+    #[test]
+    fn is_matches_exact_engine() {
+        use crate::sim::engine::simulate_is;
+        let mut rng = Rng::new(13);
+        let (m, n, k) = (8, 14, 19);
+        let a = rand_matrix(&mut rng, m, k);
+        let b = rand_matrix(&mut rng, k, n);
+        let g = Gemm::new(m as u64, n as u64, k as u64);
+        let arr = Array3d::new(4, 3, 3);
+        assert_eq!(simulate_is(&a, &b, &arr).trace, fast_activity_is(&g, &arr));
+    }
+
+    #[test]
+    fn os_scaleout_matches_exact_engine() {
+        use crate::sim::engine::simulate_os_3d_scaleout;
+        let mut rng = Rng::new(14);
+        let (m, n, k) = (13, 11, 8);
+        let a = rand_matrix(&mut rng, m, k);
+        let b = rand_matrix(&mut rng, k, n);
+        let g = Gemm::new(m as u64, n as u64, k as u64);
+        let arr = Array3d::new(4, 4, 3);
+        let exact = simulate_os_3d_scaleout(&a, &b, &arr);
+        assert_eq!(exact.trace, fast_activity_os_scaleout(&g, &arr));
+    }
+
+    #[test]
+    fn ws_mac_ops_are_mnk_and_no_vertical_links() {
+        let g = Gemm::new(64, 147, 255);
+        for arr in [Array3d::new(16, 16, 1), Array3d::new(32, 32, 4)] {
+            let t = fast_activity_ws(&g, &arr);
+            assert_eq!(t.mac_ops, g.macs(), "{arr:?}");
+            assert_eq!(t.cross_tier_transfers, 0, "{arr:?}");
+            let ti = fast_activity_is(&g, &arr);
+            assert_eq!(ti.mac_ops, g.macs(), "{arr:?}");
+        }
     }
 }

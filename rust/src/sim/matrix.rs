@@ -44,6 +44,12 @@ impl<T: Copy + Default> Matrix<T> {
     pub fn data(&self) -> &[T] {
         &self.data
     }
+
+    /// Transposed copy (used by the IS simulator, which runs WS on swapped
+    /// operands: Oᵀ = Bᵀ·Aᵀ).
+    pub fn transpose(&self) -> Matrix<T> {
+        Matrix::from_fn(self.cols, self.rows, |i, j| self.get(j, i))
+    }
 }
 
 /// Reference integer GEMM (i64 accumulate) — the oracle the exact simulator
@@ -112,6 +118,15 @@ mod tests {
                 assert_eq!(ci.get(i, j) as f32, cf.get(i, j));
             }
         }
+    }
+
+    #[test]
+    fn transpose_round_trips() {
+        let a = Matrix::from_fn(3, 5, |i, j| (i * 7 + j) as i64);
+        let t = a.transpose();
+        assert_eq!((t.rows, t.cols), (5, 3));
+        assert_eq!(t.get(4, 2), a.get(2, 4));
+        assert_eq!(t.transpose(), a);
     }
 
     #[test]

@@ -1,24 +1,33 @@
 //! Cycle-accurate systolic-array simulator.
 //!
-//! Two engines share one [`ActivityTrace`] output format:
+//! Two engines share one [`ActivityTrace`] output format, both
+//! dataflow-generic across all four §III-C mappings (OS, WS, IS, dOS):
 //!
-//! * [`engine`] — an *exact* register-level simulation of the OS / dOS
-//!   dataflows: every A/B element physically shifts through neighbor links
-//!   cycle by cycle, partial sums reduce across tiers, outputs drain through
-//!   the bottom tier. Produces the functional GEMM result (validated against
-//!   a direct matmul) plus per-link-class transfer counts. Cost is
-//!   O(cycles · R · C · ℓ) — meant for small arrays and for validating:
-//!   the analytical model (cycle counts) and the fast engine (activity).
+//! * [`engine`] — an *exact* register-level simulation: every operand
+//!   element physically shifts through neighbor links cycle by cycle
+//!   (with WS/IS adding a pinned-operand load phase and psums rippling
+//!   down the columns), partial sums reduce across tiers (dOS), and
+//!   outputs drain/retire at the array edge. Produces the functional GEMM
+//!   result (validated against a direct matmul) plus per-link-class
+//!   transfer counts. Cost is O(cycles · R · C · ℓ) — meant for small
+//!   arrays and for validating the closed-form models and the fast
+//!   engine. [`simulate_dataflow`] dispatches on [`crate::dataflow::Dataflow`].
 //! * [`fast`] — closed-form per-fold activity counting with identical
 //!   semantics, O(folds · ℓ); used at full scale (2^18 MACs) to feed the
-//!   power and thermal models.
+//!   power and thermal models, and exposed per dataflow through
+//!   [`crate::dataflow::DataflowModel::activity`].
 
 mod engine;
 mod fast;
 mod matrix;
 mod trace;
 
-pub use engine::{simulate_dos, simulate_os_2d, SimResult};
-pub use fast::{fast_activity, per_mac_ops_map};
+pub use engine::{
+    simulate_dataflow, simulate_dos, simulate_is, simulate_os_2d, simulate_os_3d_scaleout,
+    simulate_ws, SimResult,
+};
+pub use fast::{
+    fast_activity, fast_activity_is, fast_activity_os_scaleout, fast_activity_ws, per_mac_ops_map,
+};
 pub use matrix::{matmul_f32, matmul_i64, Matrix};
 pub use trace::ActivityTrace;

@@ -5,6 +5,7 @@
 use cube3d::analytical::{optimize_2d, optimize_3d, Array3d};
 use cube3d::area::total_area_m2;
 use cube3d::config::ExperimentConfig;
+use cube3d::dataflow::Dataflow;
 use cube3d::eval::{Evaluator, Scenario};
 use cube3d::power::{power_summary, Tech, VerticalTech};
 use cube3d::util::json::Json;
@@ -149,6 +150,61 @@ fn trace_and_manual_aggregation_agree() {
         .map(|p| ev.evaluate(p).cycles_3d.unwrap())
         .sum();
     assert_eq!(whole.cycles_3d, Some(per_layer));
+}
+
+#[test]
+fn dataflow_participates_in_memoization() {
+    // Same GEMM, budget, tiers, tech — four dataflows must be four distinct
+    // design points, and a warm four-way re-sweep must be pure cache hits.
+    let ev = Evaluator::performance();
+    let scenario = |df: Dataflow| {
+        Scenario::builder()
+            .gemm(Gemm::new(64, 147, 12100))
+            .mac_budget(1 << 15)
+            .tiers(4)
+            .dataflow(df)
+            .build()
+            .unwrap()
+    };
+    for df in Dataflow::ALL {
+        ev.evaluate(&scenario(df));
+    }
+    assert_eq!(ev.cache_misses(), 4, "each dataflow is its own cache key");
+    assert_eq!(ev.cache_len(), 4);
+    let calls = ev.model_calls();
+    for df in Dataflow::ALL {
+        ev.evaluate(&scenario(df));
+    }
+    assert_eq!(ev.model_calls(), calls, "warm re-sweep runs no models");
+    assert_eq!(ev.cache_hits(), 4);
+}
+
+#[test]
+fn dataflow_config_sweeps_end_to_end() {
+    // A four-way ablation grid from JSON through expand_config → batched
+    // evaluation; dOS must win RN0 at every tier count > 1.
+    let doc = Json::parse(
+        r#"{"workload": {"layer": "RN0"}, "mac_budgets": [262144], "tiers": [8],
+            "dataflows": ["os", "ws", "is", "dos"]}"#,
+    )
+    .unwrap();
+    let cfg = ExperimentConfig::from_json(&doc).unwrap();
+    let scenarios = Scenario::expand_config(&cfg).unwrap();
+    assert_eq!(scenarios.len(), 4);
+    let ev = Evaluator::performance();
+    let metrics = ev.evaluate_batch(&scenarios);
+    let cycles_of = |df: Dataflow| -> u64 {
+        scenarios
+            .iter()
+            .zip(&metrics)
+            .find(|(s, _)| s.dataflow == df)
+            .map(|(_, m)| m.cycles_3d.unwrap())
+            .unwrap()
+    };
+    let dos = cycles_of(Dataflow::DistributedOutputStationary);
+    for df in [Dataflow::OutputStationary, Dataflow::WeightStationary, Dataflow::InputStationary] {
+        assert!(dos < cycles_of(df), "dOS must win RN0 vs {}", df.short_name());
+    }
 }
 
 #[test]

@@ -4,8 +4,14 @@
 
 use cube3d::analytical::{cycles_2d, cycles_3d, optimize_2d, optimize_3d, Array2d, Array3d};
 use cube3d::coordinator::{Batcher, BatcherConfig, ExecutionPlan, GemmJob};
-use cube3d::dataflow::{dos_k_per_tier, dos_k_split};
-use cube3d::sim::{fast_activity, matmul_i64, simulate_dos, Matrix};
+use cube3d::dataflow::{
+    cycles_is_2d, cycles_is_3d_scaleout, cycles_ws_2d, cycles_ws_3d_scaleout, dos_k_per_tier,
+    dos_k_split, Dataflow,
+};
+use cube3d::sim::{
+    fast_activity, fast_activity_is, fast_activity_ws, matmul_i64, simulate_dataflow,
+    simulate_dos, simulate_is, simulate_ws, Matrix,
+};
 use cube3d::util::prop::{run_u64s, run_u64s_log, Config};
 use cube3d::util::rng::Rng;
 use cube3d::workloads::Gemm;
@@ -85,6 +91,79 @@ fn prop_budget_doubling_bounded_regression() {
             t2 <= 3 * t1
         },
     );
+}
+
+#[test]
+fn prop_ws_exact_sim_matches_closed_form_and_fast_counters() {
+    // WS invariant: register-level sim == matmul, cycle count ==
+    // cycles_ws_2d / cycles_ws_3d_scaleout, activity == the fast counters.
+    run_u64s(
+        Config::default().cases(20).seed(0x57_BEEF),
+        &[(1, 16), (1, 16), (1, 36), (1, 6), (1, 6), (1, 4)],
+        |v| {
+            let (m, n, k) = (v[0] as usize, v[1] as usize, v[2] as usize);
+            let arr = Array3d::new(v[3], v[4], v[5]);
+            let mut rng = Rng::new(v.iter().sum::<u64>() ^ 0x57);
+            let a = Matrix::from_fn(m, k, |_, _| rng.gen_range(31) as i64 - 15);
+            let b = Matrix::from_fn(k, n, |_, _| rng.gen_range(31) as i64 - 15);
+            let r = simulate_ws(&a, &b, &arr);
+            let g = Gemm::new(m as u64, n as u64, k as u64);
+            let cycles_ok = if arr.tiers == 1 {
+                r.trace.cycles == cycles_ws_2d(&g, &Array2d::new(arr.rows, arr.cols))
+            } else {
+                true
+            } && r.trace.cycles == cycles_ws_3d_scaleout(&g, &arr);
+            r.output == matmul_i64(&a, &b) && cycles_ok && r.trace == fast_activity_ws(&g, &arr)
+        },
+    );
+}
+
+#[test]
+fn prop_is_exact_sim_matches_closed_form_and_fast_counters() {
+    run_u64s(
+        Config::default().cases(20).seed(0x15_BEEF),
+        &[(1, 16), (1, 16), (1, 36), (1, 6), (1, 6), (1, 4)],
+        |v| {
+            let (m, n, k) = (v[0] as usize, v[1] as usize, v[2] as usize);
+            let arr = Array3d::new(v[3], v[4], v[5]);
+            let mut rng = Rng::new(v.iter().sum::<u64>() ^ 0x15);
+            let a = Matrix::from_fn(m, k, |_, _| rng.gen_range(31) as i64 - 15);
+            let b = Matrix::from_fn(k, n, |_, _| rng.gen_range(31) as i64 - 15);
+            let r = simulate_is(&a, &b, &arr);
+            let g = Gemm::new(m as u64, n as u64, k as u64);
+            let cycles_ok = if arr.tiers == 1 {
+                r.trace.cycles == cycles_is_2d(&g, &Array2d::new(arr.rows, arr.cols))
+            } else {
+                true
+            } && r.trace.cycles == cycles_is_3d_scaleout(&g, &arr);
+            r.output == matmul_i64(&a, &b) && cycles_ok && r.trace == fast_activity_is(&g, &arr)
+        },
+    );
+}
+
+#[test]
+fn prop_every_dataflow_sim_matches_its_model() {
+    // The seam invariant across all four mappings: the exact engine, the
+    // closed-form runtime and the fast activity counters agree.
+    for df in Dataflow::ALL {
+        let model = df.model();
+        run_u64s(
+            Config::default().cases(10).seed(0xDF_u64 + df.short_name().len() as u64),
+            &[(1, 12), (1, 12), (1, 30), (1, 5), (1, 5), (1, 3)],
+            |v| {
+                let (m, n, k) = (v[0] as usize, v[1] as usize, v[2] as usize);
+                let arr = Array3d::new(v[3], v[4], v[5]);
+                let mut rng = Rng::new(v.iter().sum());
+                let a = Matrix::from_fn(m, k, |_, _| rng.gen_range(31) as i64 - 15);
+                let b = Matrix::from_fn(k, n, |_, _| rng.gen_range(31) as i64 - 15);
+                let r = simulate_dataflow(df, &a, &b, &arr);
+                let g = Gemm::new(m as u64, n as u64, k as u64);
+                r.output == matmul_i64(&a, &b)
+                    && r.trace.cycles == model.cycles_3d(&g, &arr)
+                    && r.trace == model.activity(&g, &arr)
+            },
+        );
+    }
 }
 
 #[test]

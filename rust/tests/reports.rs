@@ -114,11 +114,22 @@ fn fig9_bands() {
 }
 
 #[test]
+fn ablation_four_way_coverage() {
+    let r = report::ablation::report();
+    // 8 Table I layers × 4 dataflows.
+    assert_eq!(r.csv.n_rows(), 32);
+    // RN0 (large K) must be a dOS win; the note records the tally.
+    let text = r.csv.to_string();
+    assert!(text.contains("RN0,dOS"), "{text}");
+    assert!(r.notes[0].contains("dOS wins"), "{}", r.notes[0]);
+}
+
+#[test]
 fn reproduce_all_writes_everything() {
     let d = out_dir("all");
     let reports = report::reproduce_all(&d).unwrap();
-    assert_eq!(reports.len(), 7);
-    for id in ["table1", "fig5", "fig6", "fig7", "table2", "fig8", "fig9"] {
+    assert_eq!(reports.len(), 8);
+    for id in ["table1", "fig5", "fig6", "fig7", "table2", "fig8", "fig9", "ablation"] {
         assert!(d.join(format!("{id}.csv")).exists(), "{id}.csv");
         assert!(d.join(format!("{id}.md")).exists(), "{id}.md");
     }

@@ -20,6 +20,11 @@
 //! `dataflows` (default `["dos"]`) selects the §III-C mappings the sweep
 //! crosses with the budget × tier grid: `os`, `ws`, `is`, `dos`.
 //!
+//! `batches` (default 16) and `strategies` (default `["dp"]`; `dp` |
+//! `greedy`) parameterize `schedule` mode — the pipeline depth in items and
+//! the tier-partition strategies the `cube3d schedule` sweep compares (see
+//! `configs/gnmt_pipeline.json`).
+//!
 //! ```json
 //! {"workload": {"layer": "RN0"}}
 //! {"workload": {"model": "resnet50", "batch": 1}}
@@ -31,6 +36,7 @@
 
 use crate::dataflow::Dataflow;
 use crate::power::VerticalTech;
+use crate::schedule::PartitionStrategy;
 use crate::util::cli::Args;
 use crate::util::json::{obj, Json};
 use crate::workloads::{Gemm, LayerSpec, Workload};
@@ -218,6 +224,10 @@ pub struct ExperimentConfig {
     /// §III-C mappings the sweep crosses with the budget × tier grid.
     pub dataflows: Vec<Dataflow>,
     pub vertical_tech: VerticalTech,
+    /// `schedule` mode: inputs streamed through the layer pipeline.
+    pub batches: u64,
+    /// `schedule` mode: partition strategies the sweep compares (dp|greedy).
+    pub strategies: Vec<PartitionStrategy>,
     pub seed: u64,
     pub out_dir: String,
 }
@@ -230,6 +240,8 @@ impl Default for ExperimentConfig {
             tiers: vec![1, 2, 3, 4, 6, 8, 10, 12],
             dataflows: vec![Dataflow::DistributedOutputStationary],
             vertical_tech: VerticalTech::Tsv,
+            batches: 16,
+            strategies: vec![PartitionStrategy::Dp],
             seed: 7,
             out_dir: "reports".to_string(),
         }
@@ -242,6 +254,8 @@ const KNOWN_KEYS: &[&str] = &[
     "tiers",
     "dataflows",
     "vertical_tech",
+    "batches",
+    "strategies",
     "seed",
     "out_dir",
 ];
@@ -281,6 +295,25 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get("vertical_tech") {
             cfg.vertical_tech = parse_vtech(v.as_str().unwrap_or(""))?;
+        }
+        if let Some(b) = doc.get("batches") {
+            cfg.batches = b
+                .as_u64()
+                .ok_or_else(|| anyhow!("batches must be a non-negative integer"))?;
+        }
+        if let Some(st) = doc.get("strategies") {
+            cfg.strategies = st
+                .as_arr()
+                .ok_or_else(|| anyhow!("strategies must be an array of strings"))?
+                .iter()
+                .map(|v| {
+                    let name = v
+                        .as_str()
+                        .ok_or_else(|| anyhow!("strategies entries must be strings"))?;
+                    parse_strategy(name)
+                })
+                .collect::<Result<Vec<_>>>()
+                .context("strategies")?;
         }
         if let Some(s) = doc.get("seed") {
             cfg.seed = s.as_u64().ok_or_else(|| anyhow!("seed must be a non-negative integer"))?;
@@ -328,6 +361,16 @@ impl ExperimentConfig {
                 "vertical_tech",
                 Json::Str(self.vertical_tech.name().to_ascii_lowercase()),
             ),
+            ("batches", Json::Num(self.batches as f64)),
+            (
+                "strategies",
+                Json::Arr(
+                    self.strategies
+                        .iter()
+                        .map(|s| Json::Str(s.name().to_string()))
+                        .collect(),
+                ),
+            ),
             ("seed", Json::Num(self.seed as f64)),
             ("out_dir", Json::Str(self.out_dir.clone())),
         ])
@@ -340,6 +383,12 @@ impl ExperimentConfig {
         }
         if self.dataflows.is_empty() {
             bail!("dataflows must be non-empty (os|ws|is|dos)");
+        }
+        if self.strategies.is_empty() {
+            bail!("strategies must be non-empty (dp|greedy)");
+        }
+        if self.batches == 0 {
+            bail!("batches must be ≥ 1");
         }
         if self.mac_budgets.iter().any(|&b| b == 0) {
             bail!("mac budgets must be positive");
@@ -375,6 +424,15 @@ pub fn parse_vtech(s: &str) -> Result<VerticalTech> {
         "miv" => Ok(VerticalTech::Miv),
         "f2f" | "face-to-face" => Ok(VerticalTech::FaceToFace),
         other => bail!("unknown vertical_tech '{other}' (tsv|miv|f2f)"),
+    }
+}
+
+/// Parse a schedule partition-strategy name (case-insensitive).
+pub fn parse_strategy(s: &str) -> Result<PartitionStrategy> {
+    match s.to_ascii_lowercase().as_str() {
+        "dp" => Ok(PartitionStrategy::Dp),
+        "greedy" => Ok(PartitionStrategy::Greedy),
+        other => bail!("unknown partition strategy '{other}' (dp|greedy)"),
     }
 }
 
@@ -529,6 +587,42 @@ mod tests {
         assert!(ExperimentConfig::from_json(&bad).is_err());
         let empty = Json::parse(r#"{"dataflows": []}"#).unwrap();
         assert!(ExperimentConfig::from_json(&empty).is_err());
+    }
+
+    #[test]
+    fn strategy_parse_names() {
+        assert_eq!(parse_strategy("dp").unwrap(), PartitionStrategy::Dp);
+        assert_eq!(parse_strategy("GREEDY").unwrap(), PartitionStrategy::Greedy);
+        assert!(parse_strategy("optimal").is_err());
+    }
+
+    #[test]
+    fn parses_schedule_keys_and_defaults() {
+        let doc = Json::parse(r#"{"batches": 32, "strategies": ["dp", "greedy"]}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.batches, 32);
+        assert_eq!(cfg.strategies, vec![PartitionStrategy::Dp, PartitionStrategy::Greedy]);
+        let default = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(default.batches, 16);
+        assert_eq!(default.strategies, vec![PartitionStrategy::Dp]);
+        let zero = Json::parse(r#"{"batches": 0}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&zero).is_err());
+        let empty = Json::parse(r#"{"strategies": []}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&empty).is_err());
+        let bad = Json::parse(r#"{"strategies": ["magic"]}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn schedule_keys_round_trip_through_json() {
+        let cfg = ExperimentConfig {
+            batches: 64,
+            strategies: vec![PartitionStrategy::Greedy, PartitionStrategy::Dp],
+            ..Default::default()
+        };
+        let re = ExperimentConfig::from_json(&Json::parse(&cfg.to_json().to_string_pretty()).unwrap())
+            .unwrap();
+        assert_eq!(cfg, re);
     }
 
     #[test]

@@ -8,15 +8,24 @@
 //! scenario pipeline, so overlapping sweeps (and the router, and the CLI)
 //! never re-optimize the same design point — and since the dataflow became
 //! a scenario axis, the four-way §III-C ablation is just a wider grid.
+//!
+//! Whole-network schedules are a sweep axis too: [`sweep_partitions`] grids
+//! budgets × tiers × partition strategies through
+//! [`crate::eval::Evaluator::evaluate_network`], and [`partition_ablation`]
+//! pits the exact DP partitioner against the greedy baseline.
 
 mod pareto;
 
-pub use pareto::{dominates, pareto_front};
+pub use pareto::{
+    dominates, dominates_by, pareto_front, pareto_front_by, schedule_front, Objective,
+    DSE_OBJECTIVES, SCHEDULE_OBJECTIVES,
+};
 
 use crate::dataflow::Dataflow;
 use crate::eval::{shared_evaluator, shared_performance_evaluator, Metrics, Scenario};
 use crate::power::{Tech, VerticalTech};
-use crate::workloads::Gemm;
+use crate::schedule::{NetworkMetrics, PartitionStrategy, ScheduleSpec};
+use crate::workloads::{Gemm, Workload};
 
 /// One evaluated design point.
 #[derive(Debug, Clone)]
@@ -218,6 +227,133 @@ pub fn dataflow_ablation(workloads: &[Gemm], mac_budget: u64, tiers: u64) -> Vec
         .collect()
 }
 
+/// One evaluated network-schedule point: a whole trace pipelined across a
+/// stack's tiers (the network-level analogue of [`DsePoint`]).
+#[derive(Debug, Clone)]
+pub struct SchedulePoint {
+    pub mac_budget: u64,
+    pub tiers: u64,
+    /// §III-C mapping the per-stage designs were resolved under.
+    pub dataflow: Dataflow,
+    pub strategy: PartitionStrategy,
+    /// Stages actually used (≤ tiers; the partitioner may leave tiers idle).
+    pub stages: usize,
+    /// Steady-state initiation interval, cycles/item.
+    pub interval_cycles: u64,
+    /// End-to-end latency for the sweep's batch count.
+    pub latency_cycles: u64,
+    pub throughput_per_s: f64,
+    pub bottleneck_stage: usize,
+    /// Activation bytes crossing tier boundaries per item.
+    pub vertical_traffic_bytes: u64,
+    /// Steady-state throughput vs the whole-budget 2D reference.
+    pub speedup_vs_2d: f64,
+}
+
+fn to_schedule_point(budget: u64, dataflow: Dataflow, m: &NetworkMetrics) -> SchedulePoint {
+    SchedulePoint {
+        mac_budget: budget,
+        tiers: m.tiers,
+        dataflow,
+        strategy: m.strategy,
+        stages: m.stages.len(),
+        interval_cycles: m.interval_cycles,
+        latency_cycles: m.latency_cycles,
+        throughput_per_s: m.throughput_per_s,
+        bottleneck_stage: m.bottleneck_stage,
+        vertical_traffic_bytes: m.vertical_traffic_bytes,
+        speedup_vs_2d: m.speedup_vs_2d,
+    }
+}
+
+/// Schedule-mode sweep: the workload pipelined on every budget × tier ×
+/// dataflow × strategy grid point, through the shared performance evaluator
+/// (per-stage costs are memoized design points shared across the whole
+/// grid). The dataflow crosses the grid exactly as in [`sweep_dataflows`] —
+/// per-stage designs resolve under it. Infeasible grid points are skipped,
+/// as in [`sweep`].
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_partitions(
+    workload: &Workload,
+    budgets: &[u64],
+    tiers: &[u64],
+    dataflows: &[Dataflow],
+    strategies: &[PartitionStrategy],
+    vtech: VerticalTech,
+    tech: &Tech,
+    batches: u64,
+) -> Vec<SchedulePoint> {
+    let ev = shared_performance_evaluator();
+    let mut out = Vec::new();
+    for &b in budgets {
+        for &t in tiers {
+            for &df in dataflows {
+                for &strategy in strategies {
+                    let built = Scenario::builder()
+                        .workload(workload.clone())
+                        .mac_budget(b)
+                        .tiers(t)
+                        .dataflow(df)
+                        .vtech(vtech)
+                        .tech(tech.clone())
+                        .schedule(ScheduleSpec { strategy, batches })
+                        .build();
+                    let Ok(s) = built else { continue };
+                    let Ok(m) = ev.evaluate_network(&s) else { continue };
+                    out.push(to_schedule_point(b, df, &m));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Partition-strategy ablation: DP vs greedy bottleneck at each tier count.
+#[derive(Debug, Clone)]
+pub struct PartitionAblationRow {
+    pub tiers: u64,
+    pub dp_interval: u64,
+    pub greedy_interval: u64,
+    /// greedy / DP interval — ≥ 1 by construction (the DP is exact over the
+    /// same cost space), pinned by `tests/schedule.rs`.
+    pub advantage: f64,
+}
+
+/// The schedule analogue of [`dataflow_ablation`]: for each tier count,
+/// pipeline the workload under both partition strategies and compare
+/// bottlenecks. Infeasible tier counts are skipped.
+pub fn partition_ablation(
+    workload: &Workload,
+    mac_budget: u64,
+    tiers: &[u64],
+    batches: u64,
+) -> Vec<PartitionAblationRow> {
+    let ev = shared_performance_evaluator();
+    tiers
+        .iter()
+        .filter_map(|&t| {
+            let interval_of = |strategy: PartitionStrategy| -> Option<u64> {
+                let s = Scenario::builder()
+                    .workload(workload.clone())
+                    .mac_budget(mac_budget)
+                    .tiers(t)
+                    .schedule(ScheduleSpec { strategy, batches })
+                    .build()
+                    .ok()?;
+                ev.evaluate_network(&s).ok().map(|m| m.interval_cycles)
+            };
+            let dp = interval_of(PartitionStrategy::Dp)?;
+            let greedy = interval_of(PartitionStrategy::Greedy)?;
+            Some(PartitionAblationRow {
+                tiers: t,
+                dp_interval: dp,
+                greedy_interval: greedy,
+                advantage: greedy as f64 / dp as f64,
+            })
+        })
+        .collect()
+}
+
 /// Fig. 7 helper: the optimal tier count for each workload at each budget,
 /// in parallel (the analytical model resolves `TierChoice::Auto`).
 pub fn optimal_tiers_sweep(workloads: &[Gemm], budgets: &[u64], max_tiers: u64) -> Vec<(Gemm, u64, u64)> {
@@ -356,6 +492,70 @@ mod tests {
         let again = dataflow_ablation(&[g], 1 << 18, 8);
         assert!(ev.cache_hits() >= hits_before + 4, "warm ablation must hit per dataflow");
         assert_eq!(again[0].cycles, rows[0].cycles);
+    }
+
+    #[test]
+    fn sweep_partitions_covers_grid_and_skips_infeasible() {
+        let w = Workload::model("gnmt", 1).unwrap();
+        let pts = sweep_partitions(
+            &w,
+            &[1 << 18],
+            &[1, 2, 4],
+            &[Dataflow::DistributedOutputStationary, Dataflow::WeightStationary],
+            &PartitionStrategy::ALL,
+            VerticalTech::Tsv,
+            &Tech::default(),
+            8,
+        );
+        assert_eq!(pts.len(), 12, "1 budget × 3 tiers × 2 dataflows × 2 strategies");
+        for p in &pts {
+            assert!(p.stages as u64 <= p.tiers);
+            assert!(p.interval_cycles > 0);
+            if p.tiers == 1 {
+                assert!((p.speedup_vs_2d - 1.0).abs() < 1e-12);
+            }
+        }
+        // The dataflow axis reaches the per-stage designs: WS and dOS
+        // pipelines of the same stack disagree on the interval somewhere.
+        assert!(
+            pts.iter().any(|p| {
+                p.dataflow == Dataflow::WeightStationary
+                    && pts.iter().any(|q| {
+                        q.dataflow == Dataflow::DistributedOutputStationary
+                            && q.tiers == p.tiers
+                            && q.strategy == p.strategy
+                            && q.interval_cycles != p.interval_cycles
+                    })
+            }),
+            "dataflow must change schedule intervals"
+        );
+        // F2F caps the stack at 2 tiers: taller grid points are skipped.
+        let f2f = sweep_partitions(
+            &w,
+            &[1 << 18],
+            &[1, 2, 4, 8],
+            &[Dataflow::DistributedOutputStationary],
+            &[PartitionStrategy::Dp],
+            VerticalTech::FaceToFace,
+            &Tech::default(),
+            8,
+        );
+        assert_eq!(f2f.len(), 2);
+    }
+
+    #[test]
+    fn partition_ablation_dp_never_loses() {
+        let w = Workload::model("gnmt", 1).unwrap();
+        let rows = partition_ablation(&w, 1 << 18, &[1, 2, 4, 8], 16);
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            assert!(
+                r.dp_interval <= r.greedy_interval,
+                "DP must beat or match greedy at ℓ={}",
+                r.tiers
+            );
+            assert!(r.advantage >= 1.0);
+        }
     }
 
     #[test]

@@ -1,30 +1,75 @@
-//! Pareto-front analysis over DSE points: runtime vs silicon area vs power.
+//! Pareto-front analysis over evaluated design points.
 //!
-//! The paper reads its Fig. 9 as a two-objective trade (runtime, area);
-//! this generalizes to the three-objective front an architect would use to
-//! pick a 3D configuration.
+//! The dominance check is generic over **metric accessors** — a front is
+//! defined by a list of minimized objectives, so new point types (the
+//! network-schedule points, with throughput as inverse interval) participate
+//! without a copy-pasted front. The paper reads its Fig. 9 as a
+//! two-objective trade (runtime, area); [`pareto_front`] keeps the
+//! three-objective (cycles, area, power) front an architect would use to
+//! pick a 3D configuration, and [`schedule_front`] trades steady-state
+//! interval against vertical traffic for pipelined network schedules.
 
-use super::DsePoint;
+use super::{DsePoint, SchedulePoint};
 
-/// `a` dominates `b` iff it is no worse in all objectives and strictly
-/// better in at least one (lower cycles, lower area, lower power).
-pub fn dominates(a: &DsePoint, b: &DsePoint) -> bool {
-    let no_worse =
-        a.cycles <= b.cycles && a.area_m2 <= b.area_m2 && a.power_w <= b.power_w;
-    let strictly = a.cycles < b.cycles || a.area_m2 < b.area_m2 || a.power_w < b.power_w;
-    no_worse && strictly
+/// One minimized objective read off a point.
+pub type Objective<T> = fn(&T) -> f64;
+
+/// `a` dominates `b` under `objectives` iff it is no worse in every
+/// objective and strictly better in at least one (all minimized; encode
+/// maximized metrics as their negation or inverse).
+pub fn dominates_by<T>(a: &T, b: &T, objectives: &[Objective<T>]) -> bool {
+    let mut strictly = false;
+    for obj in objectives {
+        let (x, y) = (obj(a), obj(b));
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strictly = true;
+        }
+    }
+    strictly
 }
 
-/// Extract the Pareto-optimal subset (O(n²), n is small for DSE sweeps).
-/// Points are returned in ascending cycle order.
-pub fn pareto_front(points: &[DsePoint]) -> Vec<DsePoint> {
-    let mut front: Vec<DsePoint> = points
+/// Extract the Pareto-optimal subset under `objectives` (O(n²), n is small
+/// for DSE sweeps). Points are returned ascending in the first objective.
+pub fn pareto_front_by<T: Clone>(points: &[T], objectives: &[Objective<T>]) -> Vec<T> {
+    let mut front: Vec<T> = points
         .iter()
-        .filter(|p| !points.iter().any(|q| dominates(q, p)))
+        .filter(|p| !points.iter().any(|q| dominates_by(q, p, objectives)))
         .cloned()
         .collect();
-    front.sort_by_key(|p| p.cycles);
+    if let Some(first) = objectives.first() {
+        front.sort_by(|a, b| {
+            first(a).partial_cmp(&first(b)).unwrap_or(std::cmp::Ordering::Equal)
+        });
+    }
     front
+}
+
+/// The classic DSE objectives: runtime, silicon area, average power.
+pub const DSE_OBJECTIVES: [Objective<DsePoint>; 3] =
+    [|p| p.cycles as f64, |p| p.area_m2, |p| p.power_w];
+
+/// Network-schedule objectives: steady-state interval (inverse throughput)
+/// and vertical activation traffic shipped per item.
+pub const SCHEDULE_OBJECTIVES: [Objective<SchedulePoint>; 2] =
+    [|p| p.interval_cycles as f64, |p| p.vertical_traffic_bytes as f64];
+
+/// `a` dominates `b` on (cycles, area, power) — the [`DSE_OBJECTIVES`] view.
+pub fn dominates(a: &DsePoint, b: &DsePoint) -> bool {
+    dominates_by(a, b, &DSE_OBJECTIVES)
+}
+
+/// Pareto front over (cycles, area, power), ascending in cycles.
+pub fn pareto_front(points: &[DsePoint]) -> Vec<DsePoint> {
+    pareto_front_by(points, &DSE_OBJECTIVES)
+}
+
+/// Pareto front over (interval, vertical traffic) for schedule sweeps —
+/// throughput participates as its inverse, no bespoke dominance code.
+pub fn schedule_front(points: &[SchedulePoint]) -> Vec<SchedulePoint> {
+    pareto_front_by(points, &SCHEDULE_OBJECTIVES)
 }
 
 #[cfg(test)]
@@ -78,5 +123,43 @@ mod tests {
                 assert!(pts.iter().any(|q| dominates(q, p)));
             }
         }
+    }
+
+    #[test]
+    fn generic_front_on_a_custom_type() {
+        #[derive(Debug, Clone, PartialEq)]
+        struct P(f64, f64);
+        let objs: [Objective<P>; 2] = [|p| p.0, |p| p.1];
+        let pts = vec![P(1.0, 4.0), P(2.0, 2.0), P(3.0, 3.0), P(4.0, 1.0)];
+        // (3,3) is dominated by (2,2); the rest trade off.
+        let front = pareto_front_by(&pts, &objs);
+        assert_eq!(front, vec![P(1.0, 4.0), P(2.0, 2.0), P(4.0, 1.0)]);
+        assert!(dominates_by(&P(2.0, 2.0), &P(3.0, 3.0), &objs));
+        assert!(!dominates_by(&P(2.0, 2.0), &P(2.0, 2.0), &objs), "no self-domination");
+    }
+
+    #[test]
+    fn schedule_front_trades_interval_against_traffic() {
+        use crate::schedule::PartitionStrategy;
+        let mk = |interval: u64, traffic: u64| SchedulePoint {
+            mac_budget: 1 << 18,
+            tiers: 4,
+            dataflow: crate::dataflow::Dataflow::DistributedOutputStationary,
+            strategy: PartitionStrategy::Dp,
+            stages: 4,
+            interval_cycles: interval,
+            latency_cycles: interval * 8,
+            throughput_per_s: 1.0e9 / interval as f64,
+            bottleneck_stage: 0,
+            vertical_traffic_bytes: traffic,
+            speedup_vs_2d: 1.0,
+        };
+        let pts = vec![mk(100, 50), mk(80, 90), mk(120, 90), mk(80, 40)];
+        let front = schedule_front(&pts);
+        // (80,40) is no worse than every other point in both objectives and
+        // strictly better in at least one — the front collapses to it.
+        assert_eq!(front.len(), 1);
+        assert_eq!(front[0].interval_cycles, 80);
+        assert_eq!(front[0].vertical_traffic_bytes, 40);
     }
 }

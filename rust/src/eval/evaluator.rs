@@ -194,6 +194,17 @@ impl Evaluator {
         m
     }
 
+    /// Evaluate the scenario's workload as a whole-network layer pipeline
+    /// on its design point (`schedule` mode): per-stage costs and the 2D
+    /// reference flow through this evaluator's memo cache. See
+    /// [`crate::schedule::evaluate_network`].
+    pub fn evaluate_network(
+        &self,
+        scenario: &Scenario,
+    ) -> anyhow::Result<crate::schedule::NetworkMetrics> {
+        crate::schedule::evaluate_network(self, scenario)
+    }
+
     /// Cache hits so far (point granularity).
     pub fn cache_hits(&self) -> u64 {
         self.hits.load(Ordering::Relaxed)

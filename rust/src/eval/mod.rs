@@ -33,6 +33,12 @@
 //! generators all obtain their metrics exclusively through this API; it is
 //! also the seam future scaling work (sharding, result caching,
 //! multi-backend) plugs into.
+//!
+//! A scenario carrying a [`crate::schedule::ScheduleSpec`] (builder
+//! `.schedule(…)`) additionally evaluates in **schedule mode** —
+//! [`Evaluator::evaluate_network`] partitions the trace across the stack's
+//! tiers and returns whole-network [`crate::schedule::NetworkMetrics`],
+//! with every per-stage cost a memoized design point of the same cache.
 
 mod evaluator;
 mod metrics;

@@ -4,6 +4,7 @@ use crate::analytical::Array3d;
 use crate::config::{parse_dataflow, parse_vtech, ExperimentConfig, WorkloadSpec};
 use crate::dataflow::Dataflow;
 use crate::power::{Tech, VerticalTech};
+use crate::schedule::ScheduleSpec;
 use crate::util::cli::Args;
 use crate::workloads::{Gemm, Workload};
 use anyhow::{anyhow, bail, Result};
@@ -47,6 +48,12 @@ pub struct Scenario {
     pub array: ArrayChoice,
     /// Technology constants the cost models evaluate under.
     pub tech: Tech,
+    /// `schedule` mode: evaluate the workload as a layer pipeline across
+    /// the stack's tiers ([`crate::schedule::evaluate_network`]) instead of
+    /// per-layer vertical GEMM parallelism. `None` (the default) keeps the
+    /// per-layer pipeline; the spec does not participate in the evaluator's
+    /// design-point cache key (point metrics are schedule-independent).
+    pub schedule: Option<ScheduleSpec>,
 }
 
 impl Scenario {
@@ -119,6 +126,7 @@ impl Scenario {
                     vtech: self.vtech,
                     array: self.array,
                     tech: self.tech.clone(),
+                    schedule: None,
                 })
                 .collect(),
         }
@@ -169,6 +177,7 @@ pub struct ScenarioBuilder {
     vtech: VerticalTech,
     array: ArrayChoice,
     tech: Tech,
+    schedule: Option<ScheduleSpec>,
 }
 
 impl Default for ScenarioBuilder {
@@ -181,6 +190,7 @@ impl Default for ScenarioBuilder {
             vtech: VerticalTech::Tsv,
             array: ArrayChoice::Optimize,
             tech: Tech::default(),
+            schedule: None,
         }
     }
 }
@@ -249,6 +259,14 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Opt into `schedule` mode: the workload is evaluated as a layer
+    /// pipeline across the stack's tiers under the spec's partition
+    /// strategy and pipeline depth (see [`crate::schedule`]).
+    pub fn schedule(mut self, spec: ScheduleSpec) -> Self {
+        self.schedule = Some(spec);
+        self
+    }
+
     pub fn build(self) -> Result<Scenario> {
         let workload = self
             .workload
@@ -292,6 +310,7 @@ impl ScenarioBuilder {
             vtech: self.vtech,
             array: self.array,
             tech: self.tech,
+            schedule: self.schedule,
         })
     }
 }
@@ -410,6 +429,24 @@ mod tests {
             ss.iter().filter(|s| s.dataflow == Dataflow::WeightStationary).count(),
             2
         );
+    }
+
+    #[test]
+    fn schedule_spec_flows_through_builder_and_not_into_points() {
+        use crate::schedule::{PartitionStrategy, ScheduleSpec};
+        let plain = Scenario::builder().gemm(Gemm::new(4, 5, 6)).build().unwrap();
+        assert!(plain.schedule.is_none(), "schedule mode is opt-in");
+
+        let spec = ScheduleSpec { strategy: PartitionStrategy::Greedy, batches: 4 };
+        let s = Scenario::builder()
+            .model("gnmt", 1)
+            .unwrap()
+            .schedule(spec)
+            .build()
+            .unwrap();
+        assert_eq!(s.schedule, Some(spec));
+        // Per-layer points are schedule-independent design points.
+        assert!(s.points().iter().all(|p| p.schedule.is_none()));
     }
 
     #[test]

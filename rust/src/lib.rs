@@ -70,6 +70,7 @@ pub mod memory;
 pub mod power;
 pub mod report;
 pub mod runtime;
+pub mod schedule;
 pub mod sim;
 pub mod thermal;
 pub mod util;

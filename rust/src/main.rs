@@ -14,13 +14,16 @@
 //! * `reproduce` — regenerate every paper table/figure into an output dir.
 //! * `serve`     — start the coordinator and drive a GEMM trace through the
 //!                 runtime (uses `artifacts/`).
+//! * `schedule`  — partition a whole network across the stack's tiers and
+//!                 evaluate the layer pipeline (latency, steady-state
+//!                 throughput, bottleneck stage, vertical traffic).
 //! * `workloads` — print the Table I workload library.
 //!
 //! Every metric printed here comes from the shared [`cube3d::eval`]
 //! evaluator — the CLI builds a [`Scenario`] and formats the bundle.
 
 use cube3d::analytical::{breakdown_2d, breakdown_3d};
-use cube3d::config::{parse_dataflow, parse_vtech, ExperimentConfig, WorkloadSpec};
+use cube3d::config::{parse_dataflow, parse_strategy, parse_vtech, ExperimentConfig, WorkloadSpec};
 use cube3d::coordinator::{BatcherConfig, Coordinator, GemmJob, RouterConfig};
 use cube3d::dataflow::Dataflow;
 use cube3d::eval::{shared_evaluator, shared_full_evaluator, shared_performance_evaluator, Scenario};
@@ -64,6 +67,16 @@ fn workload_opts() -> Vec<OptSpec> {
             name: "dataflow",
             takes_value: true,
             help: "os|ws|is|dos, or a comma list for sweep (default dos)",
+        },
+        OptSpec {
+            name: "strategy",
+            takes_value: true,
+            help: "schedule: tier-partition strategy, dp|greedy (default dp)",
+        },
+        OptSpec {
+            name: "batches",
+            takes_value: true,
+            help: "schedule: inputs streamed through the pipeline (default 16)",
         },
         OptSpec { name: "config", takes_value: true, help: "JSON experiment config file" },
         OptSpec { name: "out-dir", takes_value: true, help: "output directory (default reports)" },
@@ -110,6 +123,7 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "simulate" => cmd_simulate(&args),
         "reproduce" => cmd_reproduce(&args),
         "serve" => cmd_serve(&args),
+        "schedule" => cmd_schedule(&args),
         "workloads" => cmd_workloads(),
         "dataflows" => cmd_dataflows(&args),
         "pareto" => cmd_pareto(&args),
@@ -132,6 +146,7 @@ fn print_help() {
         ("simulate", "exact cycle simulation, checked vs model + matmul"),
         ("reproduce", "regenerate every paper table/figure"),
         ("serve", "run the serving coordinator on a GEMM trace"),
+        ("schedule", "tier-partition a network and evaluate the layer pipeline"),
         ("workloads", "print the Table I workload library"),
         ("dataflows", "four-way OS/WS/IS/dOS comparison on a workload"),
         ("pareto", "Pareto front (cycles/area/power) of a design space"),
@@ -456,6 +471,110 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         m.pjrt_executions,
         m.throughput(),
         m.p95_latency_us()
+    );
+    Ok(())
+}
+
+fn cmd_schedule(args: &Args) -> anyhow::Result<()> {
+    use cube3d::power::Tech;
+    use cube3d::schedule::ScheduleSpec;
+
+    // Config path: sweep the whole budget × tier × dataflow × strategy grid.
+    if let Some(path) = args.get("config") {
+        let cfg = ExperimentConfig::from_file(Path::new(path))?;
+        let workload = cfg.workload.resolve()?;
+        let pts = cube3d::dse::sweep_partitions(
+            &workload,
+            &cfg.mac_budgets,
+            &cfg.tiers,
+            &cfg.dataflows,
+            &cfg.strategies,
+            cfg.vertical_tech,
+            &Tech::default(),
+            cfg.batches,
+        );
+        if pts.is_empty() {
+            anyhow::bail!("config expands to no feasible schedule points");
+        }
+        println!(
+            "workload {} ({})   {} schedule points   {} batches\n",
+            workload.description(),
+            cfg.vertical_tech.name(),
+            pts.len(),
+            cfg.batches
+        );
+        let mut t = Table::new([
+            "MACs",
+            "ℓ",
+            "df",
+            "strategy",
+            "stages",
+            "interval",
+            "latency",
+            "tput/s",
+            "tput vs 2D",
+            "bottleneck",
+        ]);
+        for p in &pts {
+            t.row([
+                p.mac_budget.to_string(),
+                p.tiers.to_string(),
+                p.dataflow.short_name().to_string(),
+                p.strategy.name().to_string(),
+                p.stages.to_string(),
+                p.interval_cycles.to_string(),
+                p.latency_cycles.to_string(),
+                format!("{:.0}", p.throughput_per_s),
+                format!("{:.3}x", p.speedup_vs_2d),
+                p.bottleneck_stage.to_string(),
+            ]);
+        }
+        println!("{}", t.to_ascii());
+        return Ok(());
+    }
+
+    // Single design point: the full per-stage breakdown.
+    let strategy = parse_strategy(args.get_or("strategy", "dp"))?;
+    let batches = args.get_u64_or("batches", 16)?;
+    let mut s = Scenario::from_args(args, 1 << 18, 4)?;
+    s.schedule = Some(ScheduleSpec { strategy, batches });
+    let m = shared_performance_evaluator().evaluate_network(&s)?;
+    println!(
+        "workload {}   dataflow {}   budget {} MACs   ℓ={} ({})   strategy {}   batches {}\n",
+        s.workload.description(),
+        s.dataflow.short_name(),
+        s.mac_budget,
+        m.tiers,
+        s.vtech.name(),
+        m.strategy.name(),
+        m.batches
+    );
+    let mut t = Table::new(["stage", "layers", "compute cycles", "in KB", "in cycles", "stage cycles"]);
+    for st in &m.stages {
+        t.row([
+            st.stage.to_string(),
+            format!("{}..{}", st.first_layer, st.first_layer + st.n_layers - 1),
+            st.compute_cycles.to_string(),
+            st.in_traffic.map_or("-".into(), |b| format!("{:.1}", b.bytes as f64 / 1e3)),
+            st.in_traffic.map_or("-".into(), |b| b.cycles.to_string()),
+            st.cycles.to_string(),
+        ]);
+    }
+    println!("{}", t.to_ascii());
+    println!(
+        "bottleneck stage {}   steady-state interval {} cycles   throughput {:.0} items/s",
+        m.bottleneck_stage, m.interval_cycles, m.throughput_per_s
+    );
+    println!(
+        "model latency ({} items): {} cycles   2D baseline (whole budget, 1 tier): {} cycles/item",
+        m.batches, m.latency_cycles, m.baseline_2d_cycles
+    );
+    println!(
+        "throughput vs 2D: {:.3}x   batch latency vs 2D: {:.3}x   vertical traffic {:.1} KB/item ({:.3} µJ)",
+        m.speedup_vs_2d,
+        m.latency_speedup_vs_2d,
+        m.vertical_traffic_bytes as f64 / 1e3,
+        m.vertical_energy_j * 1e6
     );
     Ok(())
 }

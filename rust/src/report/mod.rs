@@ -11,6 +11,7 @@
 //! | F8 | Fig. 8   — temperature boxplots          | [`fig8::report`]   |
 //! | F9 | Fig. 9   — perf-per-area vs tier count   | [`fig9::report`]   |
 //! | AB | §III-C   — dOS vs OS/WS/IS ablation      | [`ablation::report`] |
+//! | SC | §V ext.  — network schedule / pipelining | [`schedule::report`] |
 
 pub mod ablation;
 pub mod fig5;
@@ -18,6 +19,7 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig8;
 pub mod fig9;
+pub mod schedule;
 pub mod table1;
 pub mod table2;
 
@@ -71,6 +73,7 @@ pub fn reproduce_all(dir: &Path) -> Result<Vec<Report>> {
         fig8::report(),
         fig9::report(),
         ablation::report(),
+        schedule::report(),
     ];
     for r in &reports {
         r.write_to(dir)?;

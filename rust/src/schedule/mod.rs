@@ -1,0 +1,39 @@
+//! Whole-network tier partitioning & layer-pipeline scheduling on 3D stacks.
+//!
+//! The paper's per-layer analysis asks how one GEMM exploits the third
+//! dimension (dOS: K across tiers). This module asks the *network-level*
+//! question the headline §V results imply — which layers should share a
+//! tier, and what does the model-level latency/throughput picture look like
+//! when the stack runs as a layer pipeline:
+//!
+//! * [`partition`] / [`PartitionStrategy`] — assign layers to tiers as
+//!   contiguous pipeline stages: an exact bottleneck-minimizing DP
+//!   ([`partition_dp`]) ablated against a greedy mean-load baseline
+//!   ([`partition_greedy`]).
+//! * [`PipelineModel`] — the steady-state/fill/drain algebra of
+//!   batch-pipelined execution (initiation interval = bottleneck stage).
+//! * [`boundary_traffic`] — activations crossing a tier boundary are
+//!   serialized over the TSV/MIV links and charged per-bit via-capacitance
+//!   energy, so partitions pay for what they ship.
+//! * [`evaluate_network`] / [`NetworkMetrics`] — the driver: per-layer
+//!   stage costs and the 2D reference both flow through the memoizing
+//!   [`crate::eval::Evaluator`]; a [`crate::eval::Scenario`] opts in by
+//!   carrying a [`ScheduleSpec`] (builder `.schedule(…)`, CLI
+//!   `cube3d schedule`, JSON `batches`/`strategies` keys).
+//!
+//! Consumers: `Evaluator::evaluate_network`, `dse::{sweep_partitions,
+//! partition_ablation, schedule_front}`, `report::schedule`, and the
+//! `schedule` CLI subcommand.
+
+mod network;
+mod partition;
+mod pipeline;
+mod traffic;
+
+pub use network::{evaluate_network, NetworkMetrics, ScheduleSpec, StageMetrics};
+pub use partition::{
+    bottleneck_of, partition, partition_dp, partition_greedy, PartitionStrategy, StageRange,
+    TierPartition,
+};
+pub use pipeline::PipelineModel;
+pub use traffic::{boundary_traffic, BoundaryTraffic, ACTIVATION_BYTES};

@@ -1,0 +1,324 @@
+//! [`TierPartitioner`] strategies: assign a network's layers to the tiers
+//! of a 3D stack as contiguous pipeline stages.
+//!
+//! The cost space is fixed up front — per-layer cycles on one tier's MAC
+//! budget plus, for every layer a stage *starts* at, the vertical transfer
+//! cycles of the activations entering that stage (see
+//! [`super::traffic`]) — so both strategies optimize the same objective and
+//! their bottlenecks are directly comparable:
+//!
+//! * [`partition_dp`] — exact contiguous-split dynamic program minimizing
+//!   the bottleneck stage (O(ℓ·L²), L ≤ a few hundred layers).
+//! * [`partition_greedy`] — the classic forward scan toward the mean stage
+//!   load, traffic-blind while cutting (the baseline the DP is ablated
+//!   against in `dse::partition_ablation`).
+
+use anyhow::{bail, Result};
+
+/// How layers are assigned to pipeline stages (tiers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PartitionStrategy {
+    /// Contiguous-split dynamic program minimizing the bottleneck stage.
+    Dp,
+    /// Greedy forward scan toward the mean stage load (baseline).
+    Greedy,
+}
+
+impl PartitionStrategy {
+    pub const ALL: [PartitionStrategy; 2] = [PartitionStrategy::Dp, PartitionStrategy::Greedy];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PartitionStrategy::Dp => "dp",
+            PartitionStrategy::Greedy => "greedy",
+        }
+    }
+}
+
+/// One pipeline stage: layers `[first, first + n_layers)` on one tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageRange {
+    pub first: usize,
+    pub n_layers: usize,
+}
+
+/// A contiguous layer→tier assignment with its evaluated bottleneck.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TierPartition {
+    pub strategy: PartitionStrategy,
+    /// In layer order; every layer belongs to exactly one stage.
+    pub stages: Vec<StageRange>,
+    /// max over stages of (stage compute + incoming vertical transfer).
+    pub bottleneck_cycles: u64,
+}
+
+/// Dispatch on the strategy. `boundary_cycles[i]` is the vertical-transfer
+/// cost charged when a stage starts at layer `i` (`boundary_cycles[0]` is
+/// ignored — the first stage is fed from memory, not from a tier below);
+/// `max_stages` is the tier count of the stack.
+pub fn partition(
+    strategy: PartitionStrategy,
+    layer_cycles: &[u64],
+    boundary_cycles: &[u64],
+    max_stages: u64,
+) -> Result<TierPartition> {
+    match strategy {
+        PartitionStrategy::Dp => partition_dp(layer_cycles, boundary_cycles, max_stages),
+        PartitionStrategy::Greedy => partition_greedy(layer_cycles, boundary_cycles, max_stages),
+    }
+}
+
+fn check_inputs(layer_cycles: &[u64], boundary_cycles: &[u64], max_stages: u64) -> Result<()> {
+    if layer_cycles.is_empty() {
+        bail!("cannot partition an empty layer list");
+    }
+    if boundary_cycles.len() != layer_cycles.len() {
+        bail!(
+            "boundary_cycles length {} must match layer count {}",
+            boundary_cycles.len(),
+            layer_cycles.len()
+        );
+    }
+    if max_stages == 0 {
+        bail!("partitioning needs at least one stage");
+    }
+    Ok(())
+}
+
+/// Cycles of the stage covering layers `[i, j)`: compute plus the incoming
+/// vertical transfer (stages starting at layer 0 read from memory for free —
+/// off-chip traffic is `crate::memory`'s concern, not the stack's).
+fn stage_cost(prefix: &[u64], boundary_cycles: &[u64], i: usize, j: usize) -> u64 {
+    let compute = prefix[j] - prefix[i];
+    if i == 0 {
+        compute
+    } else {
+        compute + boundary_cycles[i]
+    }
+}
+
+/// The evaluated bottleneck of an explicit stage list (shared by both
+/// strategies, so greedy's result is scored under the DP's exact objective).
+pub fn bottleneck_of(stages: &[StageRange], layer_cycles: &[u64], boundary_cycles: &[u64]) -> u64 {
+    let mut prefix = vec![0u64; layer_cycles.len() + 1];
+    for (i, &c) in layer_cycles.iter().enumerate() {
+        prefix[i + 1] = prefix[i] + c;
+    }
+    stages
+        .iter()
+        .map(|st| stage_cost(&prefix, boundary_cycles, st.first, st.first + st.n_layers))
+        .max()
+        .unwrap_or(0)
+}
+
+/// Exact contiguous-split DP: minimize the bottleneck stage over every
+/// partition of the layer list into **at most** `max_stages` contiguous
+/// stages (fewer stages can win when boundary traffic dominates; unused
+/// tiers idle). `f[s][j]` = minimal bottleneck covering the first `j` layers
+/// with exactly `s` stages.
+pub fn partition_dp(
+    layer_cycles: &[u64],
+    boundary_cycles: &[u64],
+    max_stages: u64,
+) -> Result<TierPartition> {
+    check_inputs(layer_cycles, boundary_cycles, max_stages)?;
+    let l = layer_cycles.len();
+    let s_max = (max_stages as usize).min(l);
+    let mut prefix = vec![0u64; l + 1];
+    for (i, &c) in layer_cycles.iter().enumerate() {
+        prefix[i + 1] = prefix[i] + c;
+    }
+    const INF: u64 = u64::MAX;
+    let mut f = vec![vec![INF; l + 1]; s_max + 1];
+    let mut cut = vec![vec![0usize; l + 1]; s_max + 1];
+    f[0][0] = 0;
+    for s in 1..=s_max {
+        for j in s..=l {
+            // The last stage is [i, j); earlier stages cover [0, i) with s-1.
+            for i in (s - 1)..j {
+                if f[s - 1][i] == INF {
+                    continue;
+                }
+                let cost = stage_cost(&prefix, boundary_cycles, i, j);
+                let bottleneck = f[s - 1][i].max(cost);
+                if bottleneck < f[s][j] {
+                    f[s][j] = bottleneck;
+                    cut[s][j] = i;
+                }
+            }
+        }
+    }
+    let mut best_s = 1;
+    for s in 2..=s_max {
+        if f[s][l] < f[best_s][l] {
+            best_s = s;
+        }
+    }
+    let mut stages = Vec::with_capacity(best_s);
+    let mut j = l;
+    let mut s = best_s;
+    while s > 0 {
+        let i = cut[s][j];
+        stages.push(StageRange { first: i, n_layers: j - i });
+        j = i;
+        s -= 1;
+    }
+    stages.reverse();
+    Ok(TierPartition {
+        strategy: PartitionStrategy::Dp,
+        stages,
+        bottleneck_cycles: f[best_s][l],
+    })
+}
+
+/// Greedy baseline: scan forward accumulating compute cycles, cutting a
+/// stage whenever the next layer would push it past the mean stage load
+/// (total / max_stages). Cuts are traffic-blind — the resulting partition is
+/// still *scored* with boundary costs included, so DP-vs-greedy compares
+/// like with like.
+pub fn partition_greedy(
+    layer_cycles: &[u64],
+    boundary_cycles: &[u64],
+    max_stages: u64,
+) -> Result<TierPartition> {
+    check_inputs(layer_cycles, boundary_cycles, max_stages)?;
+    let l = layer_cycles.len();
+    let s_max = (max_stages as usize).min(l);
+    let total: u64 = layer_cycles.iter().sum();
+    let target = total.div_ceil(s_max as u64);
+    let mut stages: Vec<StageRange> = Vec::new();
+    let mut start = 0usize;
+    let mut acc = 0u64;
+    for (i, &c) in layer_cycles.iter().enumerate() {
+        // Close the open stage before layer i when it would overflow the
+        // target — as long as a stage remains for the rest of the walk.
+        if i > start && acc + c > target && stages.len() + 2 <= s_max {
+            stages.push(StageRange { first: start, n_layers: i - start });
+            start = i;
+            acc = 0;
+        }
+        acc += c;
+    }
+    stages.push(StageRange { first: start, n_layers: l - start });
+    let bottleneck = bottleneck_of(&stages, layer_cycles, boundary_cycles);
+    Ok(TierPartition { strategy: PartitionStrategy::Greedy, stages, bottleneck_cycles: bottleneck })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn covers_all(p: &TierPartition, n: usize) {
+        let mut next = 0usize;
+        for st in &p.stages {
+            assert_eq!(st.first, next, "stages must be contiguous and ordered");
+            assert!(st.n_layers > 0, "stages must be non-empty");
+            next = st.first + st.n_layers;
+        }
+        assert_eq!(next, n, "stages must cover every layer");
+    }
+
+    #[test]
+    fn single_stage_is_the_sum() {
+        let cycles = [5, 7, 11];
+        let bounds = [0, 3, 3];
+        for strat in PartitionStrategy::ALL {
+            let p = partition(strat, &cycles, &bounds, 1).unwrap();
+            assert_eq!(p.stages.len(), 1);
+            assert_eq!(p.bottleneck_cycles, 23);
+            covers_all(&p, 3);
+        }
+    }
+
+    #[test]
+    fn dp_balances_a_simple_split() {
+        // [10, 10, 10, 10] into 2 stages, free boundaries: 20/20.
+        let cycles = [10, 10, 10, 10];
+        let bounds = [0, 0, 0, 0];
+        let p = partition_dp(&cycles, &bounds, 2).unwrap();
+        assert_eq!(p.bottleneck_cycles, 20);
+        assert_eq!(p.stages.len(), 2);
+        covers_all(&p, 4);
+    }
+
+    #[test]
+    fn dp_avoids_expensive_boundaries() {
+        // Splitting anywhere costs 100 in transfer; the sum is only 30 —
+        // the DP must keep everything on one tier even with 4 available.
+        let cycles = [10, 10, 10];
+        let bounds = [0, 100, 100];
+        let p = partition_dp(&cycles, &bounds, 4).unwrap();
+        assert_eq!(p.stages.len(), 1);
+        assert_eq!(p.bottleneck_cycles, 30);
+    }
+
+    #[test]
+    fn dp_pays_for_what_it_ships() {
+        // A cheap boundary after layer 0 and an expensive one after layer 1:
+        // the DP cuts at the cheap one.
+        let cycles = [10, 10, 10];
+        let bounds = [0, 1, 50];
+        let p = partition_dp(&cycles, &bounds, 2).unwrap();
+        assert_eq!(p.stages.len(), 2);
+        assert_eq!(p.stages[1].first, 1, "cut must land on the cheap boundary");
+        assert_eq!(p.bottleneck_cycles, 21); // 10 | (1 + 20)
+    }
+
+    #[test]
+    fn greedy_respects_the_stage_budget() {
+        let cycles: Vec<u64> = (1..=20).collect();
+        let bounds = vec![0u64; 20];
+        for s in 1..=8u64 {
+            let p = partition_greedy(&cycles, &bounds, s).unwrap();
+            assert!(p.stages.len() <= s as usize);
+            covers_all(&p, 20);
+        }
+    }
+
+    #[test]
+    fn dp_never_worse_than_greedy() {
+        // Deterministic spot-check (the random-graph property lives in
+        // tests/schedule.rs): a skewed load where greedy overfills stage 1.
+        let cycles = [100, 1, 1, 1, 1, 1, 95];
+        let bounds = [0, 2, 2, 2, 2, 2, 2];
+        for s in 1..=7u64 {
+            let dp = partition_dp(&cycles, &bounds, s).unwrap();
+            let gr = partition_greedy(&cycles, &bounds, s).unwrap();
+            assert!(dp.bottleneck_cycles <= gr.bottleneck_cycles, "s={s}");
+        }
+    }
+
+    #[test]
+    fn more_stages_than_layers_is_fine() {
+        let cycles = [4, 4];
+        let bounds = [0, 0];
+        let p = partition_dp(&cycles, &bounds, 16).unwrap();
+        assert_eq!(p.stages.len(), 2);
+        assert_eq!(p.bottleneck_cycles, 4);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert!(partition_dp(&[], &[], 2).is_err());
+        assert!(partition_dp(&[1], &[0, 0], 2).is_err());
+        assert!(partition_dp(&[1], &[0], 0).is_err());
+        assert!(partition_greedy(&[], &[], 2).is_err());
+    }
+
+    #[test]
+    fn bottleneck_of_matches_reported() {
+        let cycles = [3, 9, 2, 8, 5];
+        let bounds = [0, 4, 1, 7, 2];
+        for strat in PartitionStrategy::ALL {
+            for s in 1..=5u64 {
+                let p = partition(strat, &cycles, &bounds, s).unwrap();
+                assert_eq!(
+                    p.bottleneck_cycles,
+                    bottleneck_of(&p.stages, &cycles, &bounds),
+                    "{} s={s}",
+                    strat.name()
+                );
+            }
+        }
+    }
+}

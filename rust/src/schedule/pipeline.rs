@@ -1,0 +1,118 @@
+//! [`PipelineModel`]: steady-state and fill/drain algebra of batch-pipelined
+//! layer execution.
+//!
+//! Once the partitioner has fixed per-stage cycles (compute + incoming
+//! vertical transfer), pipelined execution over `Q` inputs is closed-form:
+//! the first item walks every stage (fill, which includes the last stage's
+//! drain), and each further item completes one steady-state **initiation
+//! interval** — the bottleneck stage — later:
+//!
+//! ```text
+//! latency(Q) = Σ_s c_s + (Q − 1) · max_s c_s
+//! ```
+
+use anyhow::{bail, Result};
+
+/// Evaluated pipeline over fixed per-stage cycles.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PipelineModel {
+    /// Per-item cycles of each stage (compute + incoming vertical transfer).
+    pub stage_cycles: Vec<u64>,
+}
+
+impl PipelineModel {
+    pub fn new(stage_cycles: Vec<u64>) -> Result<Self> {
+        if stage_cycles.is_empty() {
+            bail!("pipeline needs at least one stage");
+        }
+        Ok(PipelineModel { stage_cycles })
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.stage_cycles.len()
+    }
+
+    /// Steady-state initiation interval: the bottleneck stage's cycles.
+    pub fn interval_cycles(&self) -> u64 {
+        *self.stage_cycles.iter().max().expect("pipeline is non-empty")
+    }
+
+    /// Index of the bottleneck stage (first of equals).
+    pub fn bottleneck_stage(&self) -> usize {
+        let max = self.interval_cycles();
+        self.stage_cycles
+            .iter()
+            .position(|&c| c == max)
+            .expect("pipeline is non-empty")
+    }
+
+    /// Fill latency: the first item's walk through every stage (the last
+    /// stage's completion is the pipeline's drain).
+    pub fn fill_cycles(&self) -> u64 {
+        self.stage_cycles.iter().sum()
+    }
+
+    /// End-to-end latency of `batches` items (`batches` is clamped to ≥ 1;
+    /// saturating, so absurd item counts cap at `u64::MAX` instead of
+    /// wrapping).
+    pub fn latency_cycles(&self, batches: u64) -> u64 {
+        self.fill_cycles()
+            .saturating_add((batches.max(1) - 1).saturating_mul(self.interval_cycles()))
+    }
+
+    /// Steady-state throughput in items per second at clock `f_clk` (Hz).
+    pub fn throughput_per_s(&self, f_clk: f64) -> f64 {
+        f_clk / self.interval_cycles() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_stage_degenerates_to_serial() {
+        let p = PipelineModel::new(vec![100]).unwrap();
+        assert_eq!(p.interval_cycles(), 100);
+        assert_eq!(p.bottleneck_stage(), 0);
+        assert_eq!(p.latency_cycles(1), 100);
+        assert_eq!(p.latency_cycles(8), 800);
+    }
+
+    #[test]
+    fn bottleneck_sets_the_interval() {
+        let p = PipelineModel::new(vec![10, 40, 20]).unwrap();
+        assert_eq!(p.interval_cycles(), 40);
+        assert_eq!(p.bottleneck_stage(), 1);
+        assert_eq!(p.fill_cycles(), 70);
+        // 70 + 3·40.
+        assert_eq!(p.latency_cycles(4), 190);
+    }
+
+    #[test]
+    fn batch_one_latency_is_the_fill() {
+        let p = PipelineModel::new(vec![7, 3, 9]).unwrap();
+        assert_eq!(p.latency_cycles(1), p.fill_cycles());
+        assert_eq!(p.latency_cycles(0), p.fill_cycles(), "batch 0 clamps to 1");
+    }
+
+    #[test]
+    fn latency_dominates_interval_times_batches() {
+        // fill ≥ interval ⇒ latency(Q) ≥ Q·interval.
+        let p = PipelineModel::new(vec![5, 12, 8, 12]).unwrap();
+        for q in 1..20u64 {
+            assert!(p.latency_cycles(q) >= q * p.interval_cycles());
+        }
+    }
+
+    #[test]
+    fn throughput_is_clock_over_interval() {
+        let p = PipelineModel::new(vec![10, 50]).unwrap();
+        assert!((p.throughput_per_s(1.0e9) - 2.0e7).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_pipeline_rejected() {
+        assert!(PipelineModel::new(vec![]).is_err());
+    }
+}

@@ -1,0 +1,103 @@
+//! Inter-layer activation traffic across tier boundaries.
+//!
+//! When consecutive layers land on different tiers, the producer's output
+//! activations must cross the vertical interface. The stack pays twice:
+//!
+//! * **cycles** — the tensor is serialized over the boundary's TSV/MIV
+//!   links (`tech.vertical_bits` bits per link per cycle), charged to the
+//!   receiving stage so partitions pay for what they ship;
+//! * **energy** — every link-level transfer toggles the via capacitance
+//!   ([`crate::power::Tech::e_vertical_j`]: ~10 fF TSV vs ~0.2 fF MIV, the
+//!   same constants the dOS psum reduction is charged with).
+//!
+//! The byte accounting mirrors [`crate::memory`]: 8-bit operands (a layer's
+//! 16-bit outputs are requantized before feeding the next layer, as in the
+//! paper's fixed-point RTL).
+
+use crate::power::{Tech, VerticalTech};
+use crate::workloads::Gemm;
+
+/// Bytes per activation element crossing the vertical interface.
+pub const ACTIVATION_BYTES: u64 = 1;
+
+/// Cost of shipping one layer's output activations across one tier boundary.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BoundaryTraffic {
+    /// Activation bytes crossing (producer M·N outputs × 1 byte).
+    pub bytes: u64,
+    /// Serialized transfer cycles over the boundary's links (≥ 1).
+    pub cycles: u64,
+    /// Link-level transfer events (each moves `vertical_bits` bits).
+    pub link_transfers: u64,
+    /// Dynamic energy of the crossing, Joules.
+    pub energy_j: f64,
+}
+
+/// Model one boundary crossing: `prev_out` is the producer layer's GEMM
+/// (its M·N outputs are the activations shipped), `links` the number of
+/// vertical MAC-pair links the boundary exposes — dOS gives every MAC a
+/// link to its upstairs neighbour, so a stack with `p` MACs per tier
+/// exposes `p` links per boundary.
+pub fn boundary_traffic(
+    prev_out: &Gemm,
+    links: u64,
+    tech: &Tech,
+    vtech: VerticalTech,
+) -> BoundaryTraffic {
+    let bytes = prev_out.outputs() * ACTIVATION_BYTES;
+    let bits = bytes * 8;
+    let link_bits = tech.vertical_bits.max(1);
+    let per_cycle = links.max(1) * link_bits;
+    let link_transfers = bits.div_ceil(link_bits);
+    BoundaryTraffic {
+        bytes,
+        cycles: bits.div_ceil(per_cycle).max(1),
+        link_transfers,
+        energy_j: link_transfers as f64 * tech.e_vertical_j(vtech),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_follow_producer_outputs() {
+        let g = Gemm::new(64, 147, 12100);
+        let t = boundary_traffic(&g, 4096, &Tech::default(), VerticalTech::Tsv);
+        assert_eq!(t.bytes, 64 * 147);
+        assert!(t.cycles >= 1);
+        assert!(t.energy_j > 0.0);
+    }
+
+    #[test]
+    fn wider_interfaces_ship_faster_for_the_same_energy() {
+        let g = Gemm::new(512, 512, 64);
+        let tech = Tech::default();
+        let narrow = boundary_traffic(&g, 64, &tech, VerticalTech::Tsv);
+        let wide = boundary_traffic(&g, 65536, &tech, VerticalTech::Tsv);
+        assert!(narrow.cycles > wide.cycles);
+        // Energy is per-bit, not per-cycle: identical either way.
+        assert_eq!(narrow.link_transfers, wide.link_transfers);
+        assert!((narrow.energy_j - wide.energy_j).abs() < 1e-18);
+    }
+
+    #[test]
+    fn miv_crossing_is_cheaper_than_tsv() {
+        let g = Gemm::new(128, 128, 9);
+        let tech = Tech::default();
+        let tsv = boundary_traffic(&g, 1024, &tech, VerticalTech::Tsv);
+        let miv = boundary_traffic(&g, 1024, &tech, VerticalTech::Miv);
+        assert_eq!(tsv.bytes, miv.bytes);
+        assert_eq!(tsv.cycles, miv.cycles, "latency is link-count bound, not tech bound");
+        assert!(tsv.energy_j > 4.0 * miv.energy_j, "via capacitance decides the energy");
+    }
+
+    #[test]
+    fn tiny_tensors_still_cost_a_cycle() {
+        let g = Gemm::new(1, 1, 1);
+        let t = boundary_traffic(&g, 65536, &Tech::default(), VerticalTech::Miv);
+        assert_eq!(t.cycles, 1);
+        assert_eq!(t.link_transfers, 1);
+    }
+}

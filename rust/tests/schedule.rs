@@ -1,0 +1,219 @@
+//! Whole-network schedule tests: the pipeline algebra invariants, the
+//! DP-vs-greedy partitioner guarantee (on random graphs and on every
+//! shipped config), and the end-to-end acceptance path — ResNet-50, GNMT
+//! and the Transformer pipelined on 2D and 3D design points.
+
+use cube3d::config::ExperimentConfig;
+use cube3d::eval::{Evaluator, Scenario};
+use cube3d::schedule::{
+    bottleneck_of, partition_dp, partition_greedy, PartitionStrategy, PipelineModel, ScheduleSpec,
+};
+use cube3d::util::prop::{run_u64s, Config};
+use cube3d::util::rng::Rng;
+use std::path::PathBuf;
+
+fn configs_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../configs")
+}
+
+fn network_scenario(model: &str, budget: u64, tiers: u64, strategy: PartitionStrategy) -> Scenario {
+    Scenario::builder()
+        .model(model, 1)
+        .unwrap()
+        .mac_budget(budget)
+        .tiers(tiers)
+        .schedule(ScheduleSpec { strategy, batches: 16 })
+        .build()
+        .unwrap()
+}
+
+/// Acceptance: every full network evaluates end to end on 2D (ℓ=1) and 3D
+/// (ℓ=4, 8) design points, reporting model latency, steady-state throughput
+/// and the bottleneck stage — with the cross-metric identities intact.
+#[test]
+fn all_three_networks_schedule_on_2d_and_3d_points() {
+    let ev = Evaluator::performance();
+    for model in ["resnet50", "gnmt", "transformer"] {
+        for tiers in [1u64, 4, 8] {
+            let s = network_scenario(model, 1 << 18, tiers, PartitionStrategy::Dp);
+            let m = ev.evaluate_network(&s).unwrap();
+            assert_eq!(m.tiers, tiers, "{model}");
+            assert!(m.stages.len() as u64 <= tiers, "{model} ℓ={tiers}");
+            assert!(m.interval_cycles > 0 && m.latency_cycles > 0);
+            assert!(m.throughput_per_s > 0.0);
+            assert!(m.bottleneck_stage < m.stages.len());
+            // The bottleneck stage is exactly the interval.
+            assert_eq!(m.stages[m.bottleneck_stage].cycles, m.interval_cycles, "{model}");
+            // Latency = fill + (Q-1)·interval.
+            let fill: u64 = m.stages.iter().map(|st| st.cycles).sum();
+            assert_eq!(m.latency_cycles, fill + (m.batches - 1) * m.interval_cycles, "{model}");
+            if tiers == 1 {
+                // 2D point: one stage, no vertical traffic, speedup 1.
+                assert_eq!(m.stages.len(), 1);
+                assert_eq!(m.vertical_traffic_bytes, 0);
+                assert!((m.speedup_vs_2d - 1.0).abs() < 1e-12, "{model}");
+            } else if m.stages.len() > 1 {
+                assert!(m.vertical_traffic_bytes > 0, "{model} must pay for shipped activations");
+                assert!(m.vertical_energy_j > 0.0, "{model}");
+            }
+        }
+    }
+}
+
+/// Acceptance: the DP partition beats or matches the greedy baseline on
+/// every shipped config — every (budget × tier) grid point of every
+/// `configs/*.json` whose workload resolves.
+#[test]
+fn dp_beats_or_matches_greedy_on_every_shipped_config() {
+    let dir = configs_dir();
+    let mut checked_configs = 0;
+    let mut entries: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("configs dir {}: {e}", dir.display()))
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .collect();
+    entries.sort();
+    assert!(!entries.is_empty(), "no shipped configs found in {}", dir.display());
+    let ev = Evaluator::performance();
+    for path in entries {
+        let cfg = ExperimentConfig::from_file(&path)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        let workload = cfg.workload.resolve().unwrap();
+        let mut checked_points = 0;
+        for &budget in &cfg.mac_budgets {
+            for &tiers in &cfg.tiers {
+                for &df in &cfg.dataflows {
+                    let interval_of = |strategy: PartitionStrategy| -> Option<u64> {
+                        let s = Scenario::builder()
+                            .workload(workload.clone())
+                            .mac_budget(budget)
+                            .tiers(tiers)
+                            .dataflow(df)
+                            .vtech(cfg.vertical_tech)
+                            .schedule(ScheduleSpec { strategy, batches: cfg.batches })
+                            .build()
+                            .ok()?;
+                        ev.evaluate_network(&s).ok().map(|m| m.interval_cycles)
+                    };
+                    let (Some(dp), Some(greedy)) =
+                        (interval_of(PartitionStrategy::Dp), interval_of(PartitionStrategy::Greedy))
+                    else {
+                        continue;
+                    };
+                    assert!(
+                        dp <= greedy,
+                        "{}: DP interval {dp} > greedy {greedy} at budget {budget}, ℓ={tiers}",
+                        path.display()
+                    );
+                    checked_points += 1;
+                }
+            }
+        }
+        assert!(checked_points > 0, "{}: no feasible grid points", path.display());
+        checked_configs += 1;
+    }
+    assert!(checked_configs >= 5, "expected the full shipped config set, saw {checked_configs}");
+}
+
+/// Property: steady-state throughput never exceeds the bottleneck stage's
+/// own throughput (interval ≥ every stage), and the batch-1 latency is at
+/// least the sum of per-stage latencies.
+#[test]
+fn prop_pipeline_invariants() {
+    run_u64s(
+        Config::default().cases(256),
+        &[(1, 8), (1, 100_000), (1, 64)],
+        |v| {
+            let n_stages = v[0] as usize;
+            // Derive deterministic per-stage cycles from the drawn seed.
+            let mut rng = Rng::new(v[1]);
+            let cycles: Vec<u64> = (0..n_stages).map(|_| rng.gen_range(100_000) + 1).collect();
+            let p = PipelineModel::new(cycles.clone()).unwrap();
+            let interval = p.interval_cycles();
+            let batches = v[2];
+            // 1/interval ≤ 1/c_s for every stage s ⇔ interval ≥ c_s.
+            cycles.iter().all(|&c| interval >= c)
+                && p.latency_cycles(1) >= cycles.iter().sum::<u64>()
+                && p.latency_cycles(1) == p.fill_cycles()
+                && p.latency_cycles(batches) >= batches * interval
+                && p.latency_cycles(batches)
+                    == p.fill_cycles() + (batches - 1) * interval
+        },
+    );
+}
+
+/// Property: the DP partitioner is never worse than the greedy baseline on
+/// random layer graphs (random per-layer cycles and boundary costs, random
+/// stage budgets), and both cover the graph exactly.
+#[test]
+fn prop_dp_never_worse_than_greedy_on_random_graphs() {
+    run_u64s(
+        Config::default().cases(200).seed(0x5EED),
+        &[(1, 64), (1, u64::MAX / 2), (1, 16)],
+        |v| {
+            let n_layers = v[0] as usize;
+            let mut rng = Rng::new(v[1]);
+            let cycles: Vec<u64> = (0..n_layers).map(|_| rng.gen_range(10_000) + 1).collect();
+            let mut bounds: Vec<u64> = (0..n_layers).map(|_| rng.gen_range(5_000)).collect();
+            bounds[0] = 0;
+            let max_stages = v[2];
+            let dp = partition_dp(&cycles, &bounds, max_stages).unwrap();
+            let gr = partition_greedy(&cycles, &bounds, max_stages).unwrap();
+            let covers = |p: &cube3d::schedule::TierPartition| {
+                let mut next = 0usize;
+                for st in &p.stages {
+                    if st.first != next || st.n_layers == 0 {
+                        return false;
+                    }
+                    next = st.first + st.n_layers;
+                }
+                next == n_layers && p.stages.len() as u64 <= max_stages
+            };
+            covers(&dp)
+                && covers(&gr)
+                && dp.bottleneck_cycles <= gr.bottleneck_cycles
+                && dp.bottleneck_cycles == bottleneck_of(&dp.stages, &cycles, &bounds)
+                && gr.bottleneck_cycles == bottleneck_of(&gr.stages, &cycles, &bounds)
+        },
+    );
+}
+
+/// Property: the DP bottleneck respects its analytic bounds — at least the
+/// heaviest single layer and the mean stage load, at most the full serial
+/// sum (the one-stage fallback is always available).
+#[test]
+fn prop_dp_bottleneck_bounds() {
+    run_u64s(
+        Config::default().cases(200).seed(0xB07713),
+        &[(1, 48), (1, u64::MAX / 2), (1, 12)],
+        |v| {
+            let n_layers = v[0] as usize;
+            let mut rng = Rng::new(v[1]);
+            let cycles: Vec<u64> = (0..n_layers).map(|_| rng.gen_range(10_000) + 1).collect();
+            let bounds = vec![0u64; n_layers];
+            let max_stages = v[2];
+            let dp = partition_dp(&cycles, &bounds, max_stages).unwrap();
+            let total: u64 = cycles.iter().sum();
+            let heaviest = *cycles.iter().max().unwrap();
+            let stages = max_stages.min(n_layers as u64);
+            dp.bottleneck_cycles >= heaviest
+                && dp.bottleneck_cycles >= total.div_ceil(stages)
+                && dp.bottleneck_cycles <= total
+        },
+    );
+}
+
+/// Pipelining a deep batch through GNMT on a tall stack beats the 2D
+/// reference — the workload-property headline the subsystem exists for.
+#[test]
+fn gnmt_pipeline_throughput_beats_2d() {
+    let ev = Evaluator::performance();
+    let m = ev
+        .evaluate_network(&network_scenario("gnmt", 1 << 18, 8, PartitionStrategy::Dp))
+        .unwrap();
+    assert!(m.speedup_vs_2d > 2.0, "GNMT at ℓ=8 must pipeline well, got {:.3}x", m.speedup_vs_2d);
+    // Deeper batches amortize the fill: latency speedup approaches the
+    // throughput speedup from below.
+    assert!(m.latency_speedup_vs_2d > 1.0);
+    assert!(m.latency_speedup_vs_2d <= m.speedup_vs_2d + 1e-9);
+}

@@ -67,6 +67,7 @@ fn main() {
         &Dataflow::ALL,
         VerticalTech::Miv,
         &tech,
+        &cube3d::eval::Constraints::NONE,
     );
     let front = pareto_front(&pts);
     println!(

@@ -1,0 +1,91 @@
+//! Bench SC: partitioner + whole-network schedule evaluation wall time on
+//! the shipped pipeline configs — the first entry of the BENCH trajectory
+//! for the schedule subsystem.
+//!
+//! Three tiers of cost are timed separately:
+//! * the bare contiguous-split DP / greedy partitioners (pure algorithm);
+//! * `evaluate_network` cold vs warm (how much the memoized stage substrate
+//!   buys across repeated evaluations);
+//! * the full `sweep_partitions` grid of each shipped config, physical
+//!   closure (power + heterogeneous thermal solve) included — the exact
+//!   path `cube3d schedule --config` drives.
+
+use cube3d::config::ExperimentConfig;
+use cube3d::dse::sweep_partitions;
+use cube3d::eval::{Constraints, Evaluator, Scenario};
+use cube3d::power::Tech;
+use cube3d::schedule::{partition_dp, partition_greedy, ScheduleSpec};
+use cube3d::util::bench::{black_box, Bench};
+use cube3d::util::rng::Rng;
+use std::path::PathBuf;
+
+fn config_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../configs").join(name)
+}
+
+fn main() {
+    println!("== bench_schedule: partitioner + network-eval wall time ==\n");
+    let mut b = Bench::default();
+
+    // Bare partitioners on a synthetic 256-layer graph, 8 stages — the
+    // O(ℓ·L²) DP against the O(L) greedy scan, same cost space.
+    let mut rng = Rng::new(7);
+    let cycles: Vec<u64> = (0..256).map(|_| rng.gen_range(100_000) + 1).collect();
+    let mut bounds: Vec<u64> = (0..256).map(|_| rng.gen_range(10_000)).collect();
+    bounds[0] = 0;
+    b.run("partition/dp_256_layers_8_stages", || {
+        black_box(partition_dp(&cycles, &bounds, 8).unwrap());
+    });
+    b.run("partition/greedy_256_layers_8_stages", || {
+        black_box(partition_greedy(&cycles, &bounds, 8).unwrap());
+    });
+
+    // Network evaluation, cold vs warm, on the GNMT pipeline scenario
+    // (performance pipeline: isolates the partition + pipeline + memoized
+    // substrate cost from the physical closure).
+    let gnmt = Scenario::builder()
+        .model("gnmt", 1)
+        .unwrap()
+        .mac_budget(1 << 18)
+        .tiers(8)
+        .schedule(ScheduleSpec::default())
+        .build()
+        .unwrap();
+    b.run("network/gnmt_l8_cold_evaluator", || {
+        let ev = Evaluator::performance();
+        black_box(ev.evaluate_network(&gnmt).unwrap());
+    });
+    let warm = Evaluator::performance();
+    warm.evaluate_network(&gnmt).unwrap();
+    b.run("network/gnmt_l8_warm_cache", || {
+        black_box(warm.evaluate_network(&gnmt).unwrap());
+    });
+    // The same point with physical closure (power + thermal network pass).
+    let full = Evaluator::full();
+    full.evaluate_network(&gnmt).unwrap();
+    b.run("network/gnmt_l8_warm_physical", || {
+        black_box(full.evaluate_network(&gnmt).unwrap());
+    });
+
+    // The shipped config grids end to end — what CI's schedule smoke and
+    // `cube3d schedule --config` pay.
+    for name in ["gnmt_pipeline.json", "transformer_pipeline.json"] {
+        let cfg = ExperimentConfig::from_file(&config_path(name))
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        let workload = cfg.workload.resolve().unwrap();
+        let label = format!("sweep/{}", name.trim_end_matches(".json"));
+        b.run(&label, || {
+            black_box(sweep_partitions(
+                &workload,
+                &cfg.mac_budgets,
+                &cfg.tiers,
+                &cfg.dataflows,
+                &cfg.strategies,
+                cfg.vertical_tech,
+                &Tech::default(),
+                cfg.batches,
+                &Constraints::NONE,
+            ));
+        });
+    }
+}

@@ -25,6 +25,12 @@
 //! the tier-partition strategies the `cube3d schedule` sweep compares (see
 //! `configs/gnmt_pipeline.json`).
 //!
+//! `max_temp_c` and `power_budget_w` (both optional, positive numbers) set
+//! physical feasibility limits — sweeps mark grid points violating them and
+//! the constrained Pareto fronts exclude them (see
+//! [`crate::eval::Constraints`]). A `max_temp_c` limit pulls the thermal
+//! model into the sweep's evaluator pipeline.
+//!
 //! ```json
 //! {"workload": {"layer": "RN0"}}
 //! {"workload": {"model": "resnet50", "batch": 1}}
@@ -35,6 +41,7 @@
 //! [`crate::eval::Scenario`]s via [`crate::eval::Scenario::expand_config`].
 
 use crate::dataflow::Dataflow;
+use crate::eval::Constraints;
 use crate::power::VerticalTech;
 use crate::schedule::PartitionStrategy;
 use crate::util::cli::Args;
@@ -228,6 +235,8 @@ pub struct ExperimentConfig {
     pub batches: u64,
     /// `schedule` mode: partition strategies the sweep compares (dp|greedy).
     pub strategies: Vec<PartitionStrategy>,
+    /// Physical feasibility limits (`max_temp_c`, `power_budget_w` keys).
+    pub constraints: Constraints,
     pub seed: u64,
     pub out_dir: String,
 }
@@ -242,6 +251,7 @@ impl Default for ExperimentConfig {
             vertical_tech: VerticalTech::Tsv,
             batches: 16,
             strategies: vec![PartitionStrategy::Dp],
+            constraints: Constraints::NONE,
             seed: 7,
             out_dir: "reports".to_string(),
         }
@@ -256,6 +266,8 @@ const KNOWN_KEYS: &[&str] = &[
     "vertical_tech",
     "batches",
     "strategies",
+    "max_temp_c",
+    "power_budget_w",
     "seed",
     "out_dir",
 ];
@@ -282,16 +294,16 @@ impl ExperimentConfig {
         if let Some(d) = doc.get("dataflows") {
             cfg.dataflows = d
                 .as_arr()
-                .ok_or_else(|| anyhow!("dataflows must be an array of strings"))?
+                .ok_or_else(|| anyhow!("dataflows must be an array of strings (got {d})"))?
                 .iter()
-                .map(|v| {
+                .enumerate()
+                .map(|(i, v)| {
                     let name = v
                         .as_str()
-                        .ok_or_else(|| anyhow!("dataflows entries must be strings"))?;
-                    parse_dataflow(name)
+                        .ok_or_else(|| anyhow!("dataflows[{i}] must be a string (got {v})"))?;
+                    parse_dataflow(name).map_err(|e| anyhow!("dataflows[{i}]: {e}"))
                 })
-                .collect::<Result<Vec<_>>>()
-                .context("dataflows")?;
+                .collect::<Result<Vec<_>>>()?;
         }
         if let Some(v) = doc.get("vertical_tech") {
             cfg.vertical_tech = parse_vtech(v.as_str().unwrap_or(""))?;
@@ -304,16 +316,28 @@ impl ExperimentConfig {
         if let Some(st) = doc.get("strategies") {
             cfg.strategies = st
                 .as_arr()
-                .ok_or_else(|| anyhow!("strategies must be an array of strings"))?
+                .ok_or_else(|| anyhow!("strategies must be an array of strings (got {st})"))?
                 .iter()
-                .map(|v| {
+                .enumerate()
+                .map(|(i, v)| {
                     let name = v
                         .as_str()
-                        .ok_or_else(|| anyhow!("strategies entries must be strings"))?;
-                    parse_strategy(name)
+                        .ok_or_else(|| anyhow!("strategies[{i}] must be a string (got {v})"))?;
+                    parse_strategy(name).map_err(|e| anyhow!("strategies[{i}]: {e}"))
                 })
-                .collect::<Result<Vec<_>>>()
-                .context("strategies")?;
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(v) = doc.get("max_temp_c") {
+            cfg.constraints.max_temp_c = Some(
+                v.as_f64()
+                    .ok_or_else(|| anyhow!("max_temp_c must be a number (got {v})"))?,
+            );
+        }
+        if let Some(v) = doc.get("power_budget_w") {
+            cfg.constraints.power_budget_w = Some(
+                v.as_f64()
+                    .ok_or_else(|| anyhow!("power_budget_w must be a number (got {v})"))?,
+            );
         }
         if let Some(s) = doc.get("seed") {
             cfg.seed = s.as_u64().ok_or_else(|| anyhow!("seed must be a non-negative integer"))?;
@@ -338,7 +362,7 @@ impl ExperimentConfig {
 
     /// Serialize back to JSON. `from_json(to_json(cfg)) == cfg` round-trips.
     pub fn to_json(&self) -> Json {
-        obj([
+        let mut items: Vec<(&'static str, Json)> = vec![
             ("workload", self.workload.to_json()),
             (
                 "mac_budgets",
@@ -373,7 +397,16 @@ impl ExperimentConfig {
             ),
             ("seed", Json::Num(self.seed as f64)),
             ("out_dir", Json::Str(self.out_dir.clone())),
-        ])
+        ];
+        // Constraints are opt-in: absent limits stay absent so the
+        // round-trip preserves "unconstrained".
+        if let Some(t) = self.constraints.max_temp_c {
+            items.push(("max_temp_c", Json::Num(t)));
+        }
+        if let Some(p) = self.constraints.power_budget_w {
+            items.push(("power_budget_w", Json::Num(p)));
+        }
+        obj(items)
     }
 
     /// Sanity-check ranges and resolve the workload spec.
@@ -405,6 +438,7 @@ impl ExperimentConfig {
                 );
             }
         }
+        self.constraints.validate()?;
         self.workload.resolve().map(|_| ())
     }
 }
@@ -611,6 +645,55 @@ mod tests {
         assert!(ExperimentConfig::from_json(&empty).is_err());
         let bad = Json::parse(r#"{"strategies": ["magic"]}"#).unwrap();
         assert!(ExperimentConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn parses_constraint_keys_and_defaults_to_none() {
+        let doc = Json::parse(r#"{"max_temp_c": 105, "power_budget_w": 8.5}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.constraints.max_temp_c, Some(105.0));
+        assert_eq!(cfg.constraints.power_budget_w, Some(8.5));
+        let default = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert!(default.constraints.is_empty());
+    }
+
+    #[test]
+    fn constraint_errors_name_key_and_value() {
+        let bad_type = Json::parse(r#"{"max_temp_c": "hot"}"#).unwrap();
+        let msg = format!("{}", ExperimentConfig::from_json(&bad_type).unwrap_err());
+        assert!(msg.contains("max_temp_c") && msg.contains("hot"), "{msg}");
+        let bad_range = Json::parse(r#"{"power_budget_w": 0}"#).unwrap();
+        let msg = format!("{}", ExperimentConfig::from_json(&bad_range).unwrap_err());
+        assert!(msg.contains("power_budget_w") && msg.contains('0'), "{msg}");
+    }
+
+    #[test]
+    fn strategy_and_dataflow_errors_name_key_index_and_value() {
+        let bad = Json::parse(r#"{"strategies": ["dp", "magic"]}"#).unwrap();
+        let msg = format!("{}", ExperimentConfig::from_json(&bad).unwrap_err());
+        assert!(msg.contains("strategies[1]") && msg.contains("magic"), "{msg}");
+        let bad = Json::parse(r#"{"strategies": [3]}"#).unwrap();
+        let msg = format!("{}", ExperimentConfig::from_json(&bad).unwrap_err());
+        assert!(msg.contains("strategies[0]") && msg.contains('3'), "{msg}");
+        let bad = Json::parse(r#"{"dataflows": ["dos", "nope"]}"#).unwrap();
+        let msg = format!("{}", ExperimentConfig::from_json(&bad).unwrap_err());
+        assert!(msg.contains("dataflows[1]") && msg.contains("nope"), "{msg}");
+    }
+
+    #[test]
+    fn constraints_round_trip_through_json() {
+        let cfg = ExperimentConfig {
+            constraints: Constraints { max_temp_c: Some(95.0), power_budget_w: Some(7.25) },
+            ..Default::default()
+        };
+        let re = ExperimentConfig::from_json(&Json::parse(&cfg.to_json().to_string_pretty()).unwrap())
+            .unwrap();
+        assert_eq!(cfg, re);
+        // Unconstrained configs stay unconstrained through the round-trip.
+        let plain = ExperimentConfig::default();
+        let re = ExperimentConfig::from_json(&Json::parse(&plain.to_json().to_string_pretty()).unwrap())
+            .unwrap();
+        assert_eq!(plain, re);
     }
 
     #[test]

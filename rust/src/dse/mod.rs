@@ -11,21 +11,34 @@
 //!
 //! Whole-network schedules are a sweep axis too: [`sweep_partitions`] grids
 //! budgets × tiers × partition strategies through
-//! [`crate::eval::Evaluator::evaluate_network`], and [`partition_ablation`]
-//! pits the exact DP partitioner against the greedy baseline.
+//! [`crate::eval::Evaluator::evaluate_network`] (physical closure included:
+//! every schedule point carries stack power and the heterogeneous thermal
+//! solve), and [`partition_ablation`] pits the exact DP partitioner against
+//! the greedy baseline.
+//!
+//! Physical [`Constraints`] are a sweep axis as well: constrained sweeps
+//! mark each point feasible/infeasible (never silently dropping it), and
+//! the constrained Pareto fronts ([`constrained_front`],
+//! [`constrained_schedule_front`]) answer "fastest feasible design"
+//! directly.
 
 mod pareto;
 
 pub use pareto::{
-    dominates, dominates_by, pareto_front, pareto_front_by, schedule_front, Objective,
-    DSE_OBJECTIVES, SCHEDULE_OBJECTIVES,
+    constrained_front, constrained_schedule_front, dominates, dominates_by, pareto_front,
+    pareto_front_by, pareto_front_feasible_by, schedule_front, Objective, DSE_OBJECTIVES,
+    SCHEDULE_OBJECTIVES,
 };
 
 use crate::dataflow::Dataflow;
-use crate::eval::{shared_evaluator, shared_performance_evaluator, Metrics, Scenario};
+use crate::eval::{
+    shared_evaluator, shared_full_evaluator, shared_performance_evaluator,
+    shared_schedule_evaluator, Constraints, Metrics, Scenario,
+};
 use crate::power::{Tech, VerticalTech};
 use crate::schedule::{NetworkMetrics, PartitionStrategy, ScheduleSpec};
 use crate::workloads::{Gemm, Workload};
+use std::sync::Arc;
 
 /// One evaluated design point.
 #[derive(Debug, Clone)]
@@ -45,17 +58,25 @@ pub struct DsePoint {
     pub perf_per_area_vs_2d: f64,
     /// Average power, W.
     pub power_w: f64,
+    /// Hottest stack node, °C — present when the sweep ran the thermal
+    /// model (it does whenever a `max_temp_c` constraint is set).
+    pub peak_temp_c: Option<f64>,
+    /// True iff the sweep's [`Constraints`] are verified satisfied
+    /// (vacuously true for unconstrained sweeps). Infeasible points stay in
+    /// the sweep output *marked*; the constrained fronts skip them.
+    pub feasible: bool,
 }
 
 fn point_scenario(g: &Gemm, mac_budget: u64, tiers: u64, vtech: VerticalTech, tech: &Tech) -> Scenario {
-    Scenario::builder()
-        .gemm(*g)
-        .mac_budget(mac_budget)
-        .tiers(tiers)
-        .vtech(vtech)
-        .tech(tech.clone())
-        .build()
-        .expect("DSE grid point must be a valid scenario")
+    Scenario::design_point(
+        *g,
+        mac_budget,
+        tiers,
+        Dataflow::DistributedOutputStationary,
+        vtech,
+        tech.clone(),
+    )
+    .expect("DSE grid point must be a valid scenario")
 }
 
 fn to_dse_point(s: &Scenario, m: &Metrics) -> DsePoint {
@@ -70,6 +91,19 @@ fn to_dse_point(s: &Scenario, m: &Metrics) -> DsePoint {
         area_m2: m.area_m2.expect("area model in pipeline"),
         perf_per_area_vs_2d: m.perf_per_area_vs_2d.expect("area model in pipeline"),
         power_w: m.power_w().expect("power model in pipeline"),
+        peak_temp_c: m.peak_temp_c(),
+        feasible: s.constraints.is_satisfied(m.power_w(), m.peak_temp_c()),
+    }
+}
+
+/// The shared evaluator a constrained sweep needs: temperature limits pull
+/// in the (expensive) thermal model, everything else runs the standard
+/// analytical + area + power pipeline.
+fn evaluator_for(constraints: &Constraints) -> Arc<crate::eval::Evaluator> {
+    if constraints.max_temp_c.is_some() {
+        shared_full_evaluator()
+    } else {
+        shared_evaluator()
     }
 }
 
@@ -108,13 +142,19 @@ pub fn sweep(
         &[Dataflow::DistributedOutputStationary],
         vtech,
         tech,
+        &Constraints::NONE,
     )
 }
 
 /// Full cartesian sweep with the dataflow as an explicit grid dimension —
 /// the §III-C four-way comparison (and the Pareto front over it) is
-/// `sweep_dataflows(…, &Dataflow::ALL, …)`. Infeasible grid points are
-/// skipped, as in [`sweep`].
+/// `sweep_dataflows(…, &Dataflow::ALL, …)`. Grid points that don't build as
+/// scenarios are skipped, as in [`sweep`]; points violating `constraints`
+/// are kept but *marked* infeasible (`DsePoint::feasible`), so the
+/// constrained fronts can exclude them while reports still show what was
+/// ruled out. A `max_temp_c` limit routes the sweep through the full
+/// evaluator (thermal model included).
+#[allow(clippy::too_many_arguments)]
 pub fn sweep_dataflows(
     workloads: &[Gemm],
     budgets: &[u64],
@@ -122,13 +162,14 @@ pub fn sweep_dataflows(
     dataflows: &[Dataflow],
     vtech: VerticalTech,
     tech: &Tech,
+    constraints: &Constraints,
 ) -> Vec<DsePoint> {
     let mut scenarios: Vec<Scenario> = Vec::new();
     for &g in workloads {
         for &b in budgets {
             for &t in tiers {
                 for &df in dataflows {
-                    // Feasibility is exactly "builds as a scenario" — one
+                    // Buildability is exactly "builds as a scenario" — one
                     // source of truth (ScenarioBuilder::build) instead of a
                     // hand-copied predicate that could drift from it.
                     let built = Scenario::builder()
@@ -138,6 +179,7 @@ pub fn sweep_dataflows(
                         .dataflow(df)
                         .vtech(vtech)
                         .tech(tech.clone())
+                        .constraints(*constraints)
                         .build();
                     if let Ok(s) = built {
                         scenarios.push(s);
@@ -146,7 +188,7 @@ pub fn sweep_dataflows(
             }
         }
     }
-    let metrics = shared_evaluator().evaluate_batch(&scenarios);
+    let metrics = evaluator_for(constraints).evaluate_batch(&scenarios);
     scenarios
         .iter()
         .zip(&metrics)
@@ -248,9 +290,22 @@ pub struct SchedulePoint {
     pub vertical_traffic_bytes: u64,
     /// Steady-state throughput vs the whole-budget 2D reference.
     pub speedup_vs_2d: f64,
+    /// Total steady-state stack power, W (power model's network pass).
+    pub power_w: Option<f64>,
+    /// Hottest die node of the heterogeneous stack solve, °C.
+    pub peak_temp_c: Option<f64>,
+    /// True iff the sweep's [`Constraints`] are verified satisfied
+    /// (vacuously true when unconstrained). Marked, not skipped — the
+    /// constrained schedule front does the skipping.
+    pub feasible: bool,
 }
 
-fn to_schedule_point(budget: u64, dataflow: Dataflow, m: &NetworkMetrics) -> SchedulePoint {
+fn to_schedule_point(
+    budget: u64,
+    dataflow: Dataflow,
+    m: &NetworkMetrics,
+    constraints: &Constraints,
+) -> SchedulePoint {
     SchedulePoint {
         mac_budget: budget,
         tiers: m.tiers,
@@ -263,15 +318,22 @@ fn to_schedule_point(budget: u64, dataflow: Dataflow, m: &NetworkMetrics) -> Sch
         bottleneck_stage: m.bottleneck_stage,
         vertical_traffic_bytes: m.vertical_traffic_bytes,
         speedup_vs_2d: m.speedup_vs_2d,
+        power_w: m.power_w,
+        peak_temp_c: m.peak_temp_c(),
+        feasible: constraints.is_satisfied(m.power_w, m.peak_temp_c()),
     }
 }
 
 /// Schedule-mode sweep: the workload pipelined on every budget × tier ×
-/// dataflow × strategy grid point, through the shared performance evaluator
-/// (per-stage costs are memoized design points shared across the whole
-/// grid). The dataflow crosses the grid exactly as in [`sweep_dataflows`] —
-/// per-stage designs resolve under it. Infeasible grid points are skipped,
-/// as in [`sweep`].
+/// dataflow × strategy grid point, through the shared *schedule* evaluator
+/// — per-stage costs are memoized design points shared across the whole
+/// grid, and every grid point closes the physical loop (stack power, the
+/// heterogeneous thermal solve; per-layer point thermals are skipped as
+/// nothing reads them), so "fastest thermally-feasible stack" is a directly
+/// sweepable question. The dataflow crosses the grid exactly as in
+/// [`sweep_dataflows`] — per-stage designs resolve under it. Grid points
+/// that don't build are skipped, as in [`sweep`]; points violating
+/// `constraints` are kept and marked (`SchedulePoint::feasible`).
 #[allow(clippy::too_many_arguments)]
 pub fn sweep_partitions(
     workload: &Workload,
@@ -282,8 +344,9 @@ pub fn sweep_partitions(
     vtech: VerticalTech,
     tech: &Tech,
     batches: u64,
+    constraints: &Constraints,
 ) -> Vec<SchedulePoint> {
-    let ev = shared_performance_evaluator();
+    let ev = shared_schedule_evaluator();
     let mut out = Vec::new();
     for &b in budgets {
         for &t in tiers {
@@ -297,10 +360,11 @@ pub fn sweep_partitions(
                         .vtech(vtech)
                         .tech(tech.clone())
                         .schedule(ScheduleSpec { strategy, batches })
+                        .constraints(*constraints)
                         .build();
                     let Ok(s) = built else { continue };
                     let Ok(m) = ev.evaluate_network(&s) else { continue };
-                    out.push(to_schedule_point(b, df, &m));
+                    out.push(to_schedule_point(b, df, &m, constraints));
                 }
             }
         }
@@ -466,6 +530,7 @@ mod tests {
             &Dataflow::ALL,
             VerticalTech::Miv,
             &Tech::default(),
+            &Constraints::NONE,
         );
         assert_eq!(pts.len(), 8, "1 workload × 1 budget × 2 tiers × 4 dataflows");
         for df in Dataflow::ALL {
@@ -506,6 +571,7 @@ mod tests {
             VerticalTech::Tsv,
             &Tech::default(),
             8,
+            &Constraints::NONE,
         );
         assert_eq!(pts.len(), 12, "1 budget × 3 tiers × 2 dataflows × 2 strategies");
         for p in &pts {
@@ -539,8 +605,67 @@ mod tests {
             VerticalTech::FaceToFace,
             &Tech::default(),
             8,
+            &Constraints::NONE,
         );
         assert_eq!(f2f.len(), 2);
+    }
+
+    #[test]
+    fn schedule_sweep_closes_the_physical_loop() {
+        let w = Workload::model("gnmt", 1).unwrap();
+        let pts = sweep_partitions(
+            &w,
+            &[1 << 18],
+            &[1, 4],
+            &[Dataflow::DistributedOutputStationary],
+            &[PartitionStrategy::Dp],
+            VerticalTech::Tsv,
+            &Tech::default(),
+            8,
+            &Constraints::NONE,
+        );
+        assert_eq!(pts.len(), 2);
+        for p in &pts {
+            assert!(p.power_w.unwrap() > 0.0, "schedule sweeps always carry power");
+            assert!(p.peak_temp_c.unwrap() > 45.0, "and the stack thermal solve");
+            assert!(p.feasible, "unconstrained points are vacuously feasible");
+        }
+    }
+
+    #[test]
+    fn constrained_sweeps_mark_infeasible_points() {
+        let g = Gemm::new(64, 147, 12100);
+        // An absurdly tight power budget: every point is marked infeasible
+        // but still reported.
+        let tight = Constraints { max_temp_c: None, power_budget_w: Some(1e-6) };
+        let pts = sweep_dataflows(
+            &[g],
+            &[4096, 1 << 15],
+            &[1, 2],
+            &[Dataflow::DistributedOutputStationary],
+            VerticalTech::Tsv,
+            &Tech::default(),
+            &tight,
+        );
+        assert_eq!(pts.len(), 4, "infeasible points are marked, not dropped");
+        assert!(pts.iter().all(|p| !p.feasible));
+        assert!(constrained_front(&pts).is_empty(), "nothing feasible ⇒ empty front");
+
+        // A loose budget keeps everything feasible; a temperature limit
+        // additionally pulls the thermal model in, so peak_temp_c is known.
+        let loose = Constraints { max_temp_c: Some(1000.0), power_budget_w: Some(1000.0) };
+        let pts = sweep_dataflows(
+            &[g],
+            &[4096],
+            &[1, 2],
+            &[Dataflow::DistributedOutputStationary],
+            VerticalTech::Tsv,
+            &Tech::default(),
+            &loose,
+        );
+        assert!(pts.iter().all(|p| p.feasible));
+        assert!(pts.iter().all(|p| p.peak_temp_c.is_some()));
+        assert_eq!(constrained_front(&pts).len(), pareto_front(&pts).len());
     }
 
     #[test]

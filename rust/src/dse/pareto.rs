@@ -8,6 +8,11 @@
 //! three-objective (cycles, area, power) front an architect would use to
 //! pick a 3D configuration, and [`schedule_front`] trades steady-state
 //! interval against vertical traffic for pipelined network schedules.
+//! The constrained variants ([`constrained_front`],
+//! [`constrained_schedule_front`], generic
+//! [`pareto_front_feasible_by`]) drop physically infeasible points —
+//! over temperature ceiling or power budget — before the dominance pass,
+//! so "fastest feasible design" is the first element of the answer.
 
 use super::{DsePoint, SchedulePoint};
 
@@ -70,6 +75,31 @@ pub fn pareto_front(points: &[DsePoint]) -> Vec<DsePoint> {
 /// throughput participates as its inverse, no bespoke dominance code.
 pub fn schedule_front(points: &[SchedulePoint]) -> Vec<SchedulePoint> {
     pareto_front_by(points, &SCHEDULE_OBJECTIVES)
+}
+
+/// Constrained front: drop constraint-infeasible points *before* the
+/// dominance pass. The order matters — an infeasible point must neither
+/// appear on the front nor shadow a feasible one it dominates, so filtering
+/// after `pareto_front_by` would be wrong (a dominated-but-feasible point
+/// would be lost).
+pub fn pareto_front_feasible_by<T: Clone>(
+    points: &[T],
+    objectives: &[Objective<T>],
+    feasible: fn(&T) -> bool,
+) -> Vec<T> {
+    let kept: Vec<T> = points.iter().filter(|p| feasible(p)).cloned().collect();
+    pareto_front_by(&kept, objectives)
+}
+
+/// The (cycles, area, power) front over constraint-feasible points only —
+/// "fastest thermally-feasible design" is its first element.
+pub fn constrained_front(points: &[DsePoint]) -> Vec<DsePoint> {
+    pareto_front_feasible_by(points, &DSE_OBJECTIVES, |p| p.feasible)
+}
+
+/// The (interval, traffic) schedule front over feasible points only.
+pub fn constrained_schedule_front(points: &[SchedulePoint]) -> Vec<SchedulePoint> {
+    pareto_front_feasible_by(points, &SCHEDULE_OBJECTIVES, |p| p.feasible)
 }
 
 #[cfg(test)]
@@ -153,6 +183,9 @@ mod tests {
             bottleneck_stage: 0,
             vertical_traffic_bytes: traffic,
             speedup_vs_2d: 1.0,
+            power_w: None,
+            peak_temp_c: None,
+            feasible: true,
         };
         let pts = vec![mk(100, 50), mk(80, 90), mk(120, 90), mk(80, 40)];
         let front = schedule_front(&pts);
@@ -161,5 +194,16 @@ mod tests {
         assert_eq!(front.len(), 1);
         assert_eq!(front[0].interval_cycles, 80);
         assert_eq!(front[0].vertical_traffic_bytes, 40);
+
+        // Constrained: the winner turns infeasible; the front re-forms from
+        // the feasible survivors — including (100,50), which the infeasible
+        // point dominated (filter-then-front, not front-then-filter).
+        let mut pts = pts;
+        pts[3].feasible = false;
+        let cfront = constrained_schedule_front(&pts);
+        assert!(cfront.iter().all(|p| p.feasible));
+        assert_eq!(cfront.len(), 2);
+        assert!(cfront.iter().any(|p| p.interval_cycles == 100 && p.vertical_traffic_bytes == 50));
+        assert!(cfront.iter().any(|p| p.interval_cycles == 80 && p.vertical_traffic_bytes == 90));
     }
 }

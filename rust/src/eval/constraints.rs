@@ -1,0 +1,146 @@
+//! [`Constraints`]: physical design limits as a first-class scenario axis.
+//!
+//! The paper's applicability claim (§V, Fig. 8) is that the 3D stack "draws
+//! similar power as 2D-ICs and is not thermal limited" — a claim about
+//! *limits*, not metrics. This module turns those limits into data the DSE
+//! layer can sweep against: a scenario may carry a peak-temperature ceiling
+//! and/or a power budget, evaluated points are marked feasible/infeasible,
+//! and the constrained Pareto fronts ([`crate::dse::constrained_front`])
+//! answer "fastest thermally-feasible stack" directly.
+//!
+//! Constraints never change what a design point *computes* — they classify
+//! the result — so they are deliberately excluded from the evaluator's
+//! design-point cache key (like [`crate::schedule::ScheduleSpec`]).
+
+use anyhow::{bail, Result};
+
+/// Physical feasibility limits a scenario is evaluated against.
+///
+/// `None` fields are unconstrained. An empty set (the default) marks every
+/// point feasible.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Constraints {
+    /// Peak junction temperature ceiling, °C (checked against the hottest
+    /// thermal-grid node of the stack — the thermal model must be in the
+    /// evaluator pipeline for the check to pass).
+    pub max_temp_c: Option<f64>,
+    /// Average-power budget, W (checked against the power model's
+    /// steady-state total).
+    pub power_budget_w: Option<f64>,
+}
+
+impl Constraints {
+    /// No limits: every point is feasible.
+    pub const NONE: Constraints = Constraints { max_temp_c: None, power_budget_w: None };
+
+    /// True when no limit is set.
+    pub fn is_empty(&self) -> bool {
+        self.max_temp_c.is_none() && self.power_budget_w.is_none()
+    }
+
+    /// Reject nonsensical limits, naming the offending key and value — the
+    /// single validation shared by the scenario builder, the JSON config
+    /// and the CLI flags.
+    pub fn validate(&self) -> Result<()> {
+        for (key, limit) in [
+            ("max_temp_c", self.max_temp_c),
+            ("power_budget_w", self.power_budget_w),
+        ] {
+            if let Some(v) = limit {
+                if !v.is_finite() || v <= 0.0 {
+                    bail!("{key} must be a positive finite number (got {v})");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Human-readable violations of these limits by a point with the given
+    /// metrics. A limit whose metric is unavailable is a violation too —
+    /// "cannot verify" must never silently pass for feasible (the message
+    /// names the missing model).
+    pub fn violations(&self, power_w: Option<f64>, peak_temp_c: Option<f64>) -> Vec<String> {
+        let mut out = Vec::new();
+        if let Some(limit) = self.power_budget_w {
+            match power_w {
+                Some(p) if p > limit => {
+                    out.push(format!("power {p:.2} W exceeds power_budget_w {limit:.2} W"));
+                }
+                Some(_) => {}
+                None => out.push(format!(
+                    "power_budget_w {limit:.2} W set but no power metric (add the power model to the evaluator pipeline)"
+                )),
+            }
+        }
+        if let Some(limit) = self.max_temp_c {
+            match peak_temp_c {
+                Some(t) if t > limit => {
+                    out.push(format!("peak temperature {t:.1} °C exceeds max_temp_c {limit:.1} °C"));
+                }
+                Some(_) => {}
+                None => out.push(format!(
+                    "max_temp_c {limit:.1} °C set but no thermal metric (add the thermal model to the evaluator pipeline)"
+                )),
+            }
+        }
+        out
+    }
+
+    /// True iff every set limit is verified satisfied (missing metrics for a
+    /// set limit count as unsatisfied, see [`Constraints::violations`]).
+    pub fn is_satisfied(&self, power_w: Option<f64>, peak_temp_c: Option<f64>) -> bool {
+        self.violations(power_w, peak_temp_c).is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_constraints_accept_everything() {
+        let c = Constraints::NONE;
+        assert!(c.is_empty());
+        assert!(c.is_satisfied(None, None));
+        assert!(c.is_satisfied(Some(1e9), Some(1e9)));
+    }
+
+    #[test]
+    fn limits_are_checked_against_metrics() {
+        let c = Constraints { max_temp_c: Some(105.0), power_budget_w: Some(10.0) };
+        assert!(c.is_satisfied(Some(6.5), Some(80.0)));
+        assert!(!c.is_satisfied(Some(12.0), Some(80.0)));
+        assert!(!c.is_satisfied(Some(6.5), Some(110.0)));
+        let v = c.violations(Some(12.0), Some(110.0));
+        assert_eq!(v.len(), 2);
+        assert!(v[0].contains("power_budget_w") && v[0].contains("12.00"));
+        assert!(v[1].contains("max_temp_c") && v[1].contains("110.0"));
+    }
+
+    #[test]
+    fn validate_names_key_and_value() {
+        assert!(Constraints::NONE.validate().is_ok());
+        assert!(Constraints { max_temp_c: Some(105.0), power_budget_w: Some(8.0) }
+            .validate()
+            .is_ok());
+        for (c, key) in [
+            (Constraints { max_temp_c: Some(0.0), power_budget_w: None }, "max_temp_c"),
+            (Constraints { max_temp_c: None, power_budget_w: Some(-2.0) }, "power_budget_w"),
+            (Constraints { max_temp_c: Some(f64::NAN), power_budget_w: None }, "max_temp_c"),
+        ] {
+            let msg = format!("{}", c.validate().unwrap_err());
+            assert!(msg.contains(key), "{msg}");
+        }
+    }
+
+    #[test]
+    fn missing_metric_for_a_set_limit_is_a_violation() {
+        let c = Constraints { max_temp_c: Some(105.0), power_budget_w: None };
+        assert!(!c.is_satisfied(Some(5.0), None));
+        let v = c.violations(Some(5.0), None);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].contains("thermal model"), "{}", v[0]);
+        // Boundary values are feasible (limits are inclusive).
+        assert!(c.is_satisfied(None, Some(105.0)));
+    }
+}

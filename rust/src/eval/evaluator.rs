@@ -196,13 +196,30 @@ impl Evaluator {
 
     /// Evaluate the scenario's workload as a whole-network layer pipeline
     /// on its design point (`schedule` mode): per-stage costs and the 2D
-    /// reference flow through this evaluator's memo cache. See
+    /// reference flow through this evaluator's memo cache, and the pipeline
+    /// models' network passes ([`CostModel::evaluate_network`]) close the
+    /// physical loop (area/power/thermal) over the resolved stages. See
     /// [`crate::schedule::evaluate_network`].
     pub fn evaluate_network(
         &self,
         scenario: &Scenario,
     ) -> anyhow::Result<crate::schedule::NetworkMetrics> {
         crate::schedule::evaluate_network(self, scenario)
+    }
+
+    /// Run every pipeline model's network pass over a resolved multi-stage
+    /// design, in pipeline order (the schedule driver calls this once, on
+    /// the winning stack height). Not counted in [`Evaluator::model_calls`],
+    /// which tracks point-pass invocations.
+    pub(crate) fn run_network_models(
+        &self,
+        scenario: &Scenario,
+        resolved: &super::models::ResolvedNetwork,
+        out: &mut crate::schedule::NetworkMetrics,
+    ) {
+        for model in &self.models {
+            model.evaluate_network(scenario, resolved, out);
+        }
     }
 
     /// Cache hits so far (point granularity).

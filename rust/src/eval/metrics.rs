@@ -52,6 +52,12 @@ impl Metrics {
     pub fn energy_j(&self) -> Option<f64> {
         self.power.map(|p| p.energy_j)
     }
+
+    /// Hottest thermal-grid node across all tiers, °C, if the thermal model
+    /// ran — the value physical constraints ([`super::Constraints`]) check.
+    pub fn peak_temp_c(&self) -> Option<f64> {
+        self.thermal.as_ref().map(ThermalStudy::peak_c)
+    }
 }
 
 fn add_opt(a: Option<u64>, b: Option<u64>) -> Option<u64> {

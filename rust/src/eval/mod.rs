@@ -39,15 +39,34 @@
 //! [`Evaluator::evaluate_network`] partitions the trace across the stack's
 //! tiers and returns whole-network [`crate::schedule::NetworkMetrics`],
 //! with every per-stage cost a memoized design point of the same cache.
+//! The cost models close the physical loop over such multi-stage designs
+//! too: each [`CostModel`] has a network pass
+//! ([`CostModel::evaluate_network`]) that consumes the resolved per-stage
+//! design points ([`ResolvedNetwork`]) — the area/power models fill stack
+//! area and duty-cycled per-stage power, and the thermal model stacks the
+//! stages' *heterogeneous* per-die power maps into one RC solve (each tier
+//! runs different layers, so per-die power differs — exactly the
+//! configurations where thermal feasibility is least obvious).
+//!
+//! Scenarios may also carry physical [`Constraints`] (`max_temp_c`,
+//! `power_budget_w`; builder `.max_temp_c(…)`/`.power_budget_w(…)`, JSON
+//! keys of the same names, CLI `--max-temp`/`--power-budget`). Constraints
+//! classify evaluated points as feasible/infeasible — see
+//! [`crate::dse::constrained_front`] — without changing what a point
+//! computes, so they stay outside the design-point cache key.
 
+mod constraints;
 mod evaluator;
 mod metrics;
 mod models;
 mod scenario;
 
+pub use constraints::Constraints;
 pub use evaluator::{Evaluator, DEFAULT_CACHE_CAPACITY};
 pub use metrics::Metrics;
-pub use models::{AnalyticalModel, AreaModel, CostModel, PowerModel, ThermalModel};
+pub use models::{
+    AnalyticalModel, AreaModel, CostModel, PowerModel, ResolvedNetwork, ThermalModel,
+};
 pub use scenario::{ArrayChoice, Scenario, ScenarioBuilder, TierChoice};
 
 use std::sync::{Arc, OnceLock};
@@ -55,6 +74,7 @@ use std::sync::{Arc, OnceLock};
 static STANDARD: OnceLock<Arc<Evaluator>> = OnceLock::new();
 static PERFORMANCE: OnceLock<Arc<Evaluator>> = OnceLock::new();
 static FULL: OnceLock<Arc<Evaluator>> = OnceLock::new();
+static SCHEDULE: OnceLock<Arc<Evaluator>> = OnceLock::new();
 
 /// Process-wide shared evaluator with the standard pipeline
 /// (analytical + area + power). The cache is shared by every caller — the
@@ -78,4 +98,22 @@ pub fn shared_performance_evaluator() -> Arc<Evaluator> {
 /// for scenarios that actually need temperatures.
 pub fn shared_full_evaluator() -> Arc<Evaluator> {
     FULL.get_or_init(|| Arc::new(Evaluator::full())).clone()
+}
+
+/// Shared evaluator for whole-network schedule evaluation: analytical +
+/// area + power point passes, but the thermal model contributes only its
+/// *network* pass ([`ThermalModel::network_pass_only`]) — schedule mode
+/// solves one heterogeneous stack per evaluated network and never reads
+/// per-layer point thermals, so per-point solves would be pure waste.
+pub fn shared_schedule_evaluator() -> Arc<Evaluator> {
+    SCHEDULE
+        .get_or_init(|| {
+            Arc::new(Evaluator::with_models(vec![
+                Box::new(AnalyticalModel),
+                Box::new(AreaModel),
+                Box::new(PowerModel),
+                Box::new(ThermalModel::network_pass_only()),
+            ]))
+        })
+        .clone()
 }

@@ -4,13 +4,45 @@
 //! Models run in order and may read fields earlier models produced (the
 //! area/power/thermal models reuse the analytical stage's optimized designs
 //! instead of re-optimizing); each is also self-sufficient when run alone.
+//!
+//! Each model has two passes. The **point pass** ([`CostModel::evaluate`])
+//! is the paper's per-GEMM joint analysis. The **network pass**
+//! ([`CostModel::evaluate_network`]) closes the physical loop over a
+//! *resolved multi-stage design* — a whole trace partitioned into pipeline
+//! stages across a stack's tiers ([`ResolvedNetwork`]): the area model
+//! sizes the die for the largest stage design, the power model duty-cycles
+//! every stage's energy by the pipeline's initiation interval, and the
+//! thermal model stacks per-die **heterogeneous** power maps (each tier
+//! runs different layers) into one RC solve. The driver is
+//! [`crate::schedule::evaluate_network`]; the per-stage substrate it hands
+//! over is built from the same memoized evaluator points as everything
+//! else.
 
 use super::metrics::Metrics;
 use super::scenario::{ArrayChoice, Scenario, TierChoice};
-use crate::analytical::OptimalDesign;
-use crate::area::total_area_m2;
-use crate::power::{power_summary, VerticalTech};
-use crate::thermal::{thermal_footprint_m2, thermal_study, ThermalParams};
+use crate::analytical::{Array3d, OptimalDesign};
+use crate::area::{tier_area_m2, total_area_m2};
+use crate::power::{power_map, power_summary, VerticalTech};
+use crate::schedule::NetworkMetrics;
+use crate::thermal::{
+    coarsen_power_map, stack_study, thermal_footprint_m2, thermal_study, ThermalParams,
+};
+use crate::workloads::Gemm;
+
+/// A resolved multi-stage design: the per-stage layer design points of a
+/// partitioned network schedule, ready for the cost models' network passes.
+/// `out.stages` (in the [`NetworkMetrics`] being filled) says which slice of
+/// `gemms`/`stage_points` each pipeline stage covers.
+pub struct ResolvedNetwork<'a> {
+    /// The trace's layers, in order.
+    pub gemms: &'a [Gemm],
+    /// Per-layer point metrics on one tier's budget (the stage substrate) —
+    /// `stage_points[i]` is `gemms[i]` optimized at `B/ℓ`, one tier.
+    pub stage_points: &'a [Metrics],
+    /// Per-layer point metrics on the whole budget, one tier (the 2D
+    /// reference the schedule is compared against).
+    pub base_points: &'a [Metrics],
+}
 
 /// One facet of the paper's joint analysis: reads a (single-GEMM) scenario,
 /// writes the metric fields it owns. Models must be thread-safe — the
@@ -18,6 +50,20 @@ use crate::thermal::{thermal_footprint_m2, thermal_study, ThermalParams};
 pub trait CostModel: Send + Sync {
     fn name(&self) -> &'static str;
     fn evaluate(&self, scenario: &Scenario, out: &mut Metrics);
+
+    /// Network pass: consume a resolved multi-stage design and fill the
+    /// physical fields this model owns on the network bundle. The default
+    /// is a no-op — a model that only knows single points simply leaves its
+    /// network fields `None` (mirroring how absent pipeline models leave
+    /// point fields `None`).
+    fn evaluate_network(
+        &self,
+        scenario: &Scenario,
+        resolved: &ResolvedNetwork,
+        out: &mut NetworkMetrics,
+    ) {
+        let _ = (scenario, resolved, out);
+    }
 }
 
 /// Resolve the (2D baseline, 3D design, tier count) of a point scenario
@@ -97,6 +143,20 @@ impl CostModel for AnalyticalModel {
     }
 }
 
+/// The largest per-stage design of a resolved network, as the ℓ-tier array
+/// the stack's die must physically fit. `None` when any stage point lacks a
+/// design (no analytical model in the pipeline).
+fn largest_stage_array(r: &ResolvedNetwork, tiers: u64) -> Option<Array3d> {
+    let mut best: Option<OptimalDesign> = None;
+    for m in r.stage_points {
+        let d = m.design_3d?;
+        if best.map_or(true, |b| d.rows * d.cols > b.rows * b.cols) {
+            best = Some(d);
+        }
+    }
+    best.map(|d| Array3d::new(d.rows, d.cols, tiers))
+}
+
 /// §IV-D silicon area and the Fig. 9 area-normalized-performance metric.
 pub struct AreaModel;
 
@@ -117,6 +177,25 @@ impl CostModel for AreaModel {
                 Some((d2.cycles as f64 * a2) / (d3.cycles as f64 * a3));
         }
     }
+
+    fn evaluate_network(&self, s: &Scenario, r: &ResolvedNetwork, out: &mut NetworkMetrics) {
+        // The stack ships one die floorplan: it must fit the largest stage
+        // design, and every tier pays that footprint (plus the via arrays
+        // the stack height implies).
+        let Some(arr) = largest_stage_array(r, out.tiers) else { return };
+        let die = tier_area_m2(&arr, &s.tech, s.vtech);
+        out.die_area_m2 = Some(die);
+        out.area_m2 = Some(die * out.tiers as f64);
+        // The 2D reference die fits the largest whole-budget layer design.
+        let a2 = r
+            .base_points
+            .iter()
+            .filter_map(|m| m.area_m2)
+            .fold(f64::NEG_INFINITY, f64::max);
+        if a2.is_finite() {
+            out.area_2d_m2 = Some(a2);
+        }
+    }
 }
 
 /// §IV-B switching-activity power model (Table II). The RTL activity is the
@@ -135,6 +214,42 @@ impl CostModel for PowerModel {
         let (_, d3) = designs_from(s, m);
         m.power = Some(power_summary(&g, &d3.array3d(), &s.tech, s.vtech));
     }
+
+    fn evaluate_network(&self, s: &Scenario, r: &ResolvedNetwork, out: &mut NetworkMetrics) {
+        // Steady state: every stage processes one item per initiation
+        // interval, so a stage's average power is its per-item energy
+        // (compute + the vertical crossing feeding it) over the interval
+        // time. Stages lighter than the bottleneck are duty-cycled — their
+        // idle fraction is charged zero, a deliberate lower bound noted in
+        // DESIGN.md.
+        if out.interval_cycles == 0
+            || r.stage_points.iter().any(|m| m.power.is_none())
+        {
+            return;
+        }
+        let t_interval = out.interval_cycles as f64 * s.tech.t_cycle_s();
+        let mut total_w = 0.0;
+        for st in out.stages.iter_mut() {
+            let mut energy_j: f64 = r.stage_points
+                [st.first_layer..st.first_layer + st.n_layers]
+                .iter()
+                .filter_map(|m| m.energy_j())
+                .sum();
+            if let Some(tr) = st.in_traffic {
+                energy_j += tr.energy_j;
+            }
+            st.energy_per_item_j = Some(energy_j);
+            st.power_w = Some(energy_j / t_interval);
+            total_w += energy_j / t_interval;
+        }
+        out.power_w = Some(total_w);
+        // 2D reference: the same layers back-to-back on the whole budget —
+        // all energy in one die, at the 2D runtime.
+        if out.baseline_2d_cycles > 0 && r.base_points.iter().all(|m| m.power.is_some()) {
+            let e2: f64 = r.base_points.iter().filter_map(|m| m.energy_j()).sum();
+            out.power_2d_w = Some(e2 / (out.baseline_2d_cycles as f64 * s.tech.t_cycle_s()));
+        }
+    }
 }
 
 /// §IV-C compact-RC thermal model (Fig. 8). The solve is the expensive
@@ -142,6 +257,19 @@ impl CostModel for PowerModel {
 #[derive(Default)]
 pub struct ThermalModel {
     pub params: ThermalParams,
+    /// Skip the per-point solve and keep only the network pass. Schedule
+    /// sweeps want the *stack* solve but never read per-layer point
+    /// thermals — paying a point solve per unique stage substrate would be
+    /// pure waste (see [`crate::eval::shared_schedule_evaluator`]).
+    pub network_only: bool,
+}
+
+impl ThermalModel {
+    /// A thermal model that contributes only the heterogeneous-stack
+    /// network pass (no per-point solves).
+    pub fn network_pass_only() -> Self {
+        ThermalModel { params: ThermalParams::default(), network_only: true }
+    }
 }
 
 impl CostModel for ThermalModel {
@@ -150,6 +278,9 @@ impl CostModel for ThermalModel {
     }
 
     fn evaluate(&self, s: &Scenario, m: &mut Metrics) {
+        if self.network_only {
+            return;
+        }
         let g = s.workload.primary_gemm();
         let (_, d3) = designs_from(s, m);
         let arr = d3.array3d();
@@ -161,6 +292,70 @@ impl CostModel for ThermalModel {
             &self.params,
             thermal_footprint_m2(&arr, &s.tech),
         ));
+    }
+
+    fn evaluate_network(&self, s: &Scenario, r: &ResolvedNetwork, out: &mut NetworkMetrics) {
+        // Heterogeneous stack: die d dissipates stage d's power map — each
+        // layer's per-MAC map coarsened onto the grid and duty-cycled by
+        // cycles/interval (steady state: that layer runs for its share of
+        // every interval), plus the incoming vertical crossing's energy
+        // spread uniformly. Stage 0 sits at the bottom, near the sink (it
+        // is memory-fed); tiers beyond the last stage idle at zero power
+        // but still conduct. Uniform per-die maps reduce this exactly to
+        // the homogeneous [`thermal_study`] path (pinned in
+        // tests/physical.rs).
+        if out.interval_cycles == 0
+            || r.stage_points
+                .iter()
+                .any(|m| m.design_3d.is_none() || m.cycles_3d.is_none())
+        {
+            return;
+        }
+        let grid = self.params.grid;
+        let g2 = grid * grid;
+        let t_interval = out.interval_cycles as f64 * s.tech.t_cycle_s();
+        // Same active-MAC footprint convention as the point pass: the die
+        // area is the largest stage design's heat-generating grid.
+        let footprint = r
+            .stage_points
+            .iter()
+            .filter_map(|m| m.design_3d)
+            .map(|d| thermal_footprint_m2(&d.array3d(), &s.tech))
+            .fold(f64::NEG_INFINITY, f64::max);
+        if !footprint.is_finite() || footprint <= 0.0 {
+            return;
+        }
+        let mut grids: Vec<Vec<f64>> = Vec::with_capacity(out.tiers as usize);
+        for st in &out.stages {
+            let mut die = vec![0.0f64; g2];
+            for l in st.first_layer..st.first_layer + st.n_layers {
+                let m = &r.stage_points[l];
+                let arr = m.design_3d.expect("checked above").array3d();
+                let maps = power_map(&r.gemms[l], &arr, &s.tech, s.vtech);
+                let coarse = coarsen_power_map(
+                    &maps[0],
+                    arr.rows as usize,
+                    arr.cols as usize,
+                    grid,
+                );
+                let duty =
+                    m.cycles_3d.expect("checked above") as f64 / out.interval_cycles as f64;
+                for (acc, v) in die.iter_mut().zip(&coarse) {
+                    *acc += v * duty;
+                }
+            }
+            if let Some(tr) = st.in_traffic {
+                let w = tr.energy_j / t_interval / g2 as f64;
+                for acc in die.iter_mut() {
+                    *acc += w;
+                }
+            }
+            grids.push(die);
+        }
+        while grids.len() < out.tiers as usize {
+            grids.push(vec![0.0; g2]);
+        }
+        out.thermal = Some(stack_study(&self.params, footprint, &grids, s.vtech));
     }
 }
 

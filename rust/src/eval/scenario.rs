@@ -1,5 +1,6 @@
 //! [`Scenario`]: the declarative input of the evaluation pipeline.
 
+use super::constraints::Constraints;
 use crate::analytical::Array3d;
 use crate::config::{parse_dataflow, parse_vtech, ExperimentConfig, WorkloadSpec};
 use crate::dataflow::Dataflow;
@@ -54,6 +55,11 @@ pub struct Scenario {
     /// per-layer pipeline; the spec does not participate in the evaluator's
     /// design-point cache key (point metrics are schedule-independent).
     pub schedule: Option<ScheduleSpec>,
+    /// Physical feasibility limits (peak temperature, power budget) the
+    /// evaluated point is classified against. Limits never change computed
+    /// metrics, so — like `schedule` — they are excluded from the
+    /// evaluator's design-point cache key.
+    pub constraints: Constraints,
 }
 
 impl Scenario {
@@ -62,8 +68,9 @@ impl Scenario {
     }
 
     /// Build a scenario from CLI options (`--layer/--model/--m/n/k`,
-    /// `--macs`, `--tiers`, `--vtech`, `--dataflow`), with per-subcommand
-    /// defaults for the budget and tier count.
+    /// `--macs`, `--tiers`, `--vtech`, `--dataflow`, `--max-temp`,
+    /// `--power-budget`), with per-subcommand defaults for the budget and
+    /// tier count.
     pub fn from_args(args: &Args, default_macs: u64, default_tiers: u64) -> Result<Scenario> {
         let workload = WorkloadSpec::from_args(args)?.resolve()?;
         Scenario::builder()
@@ -72,6 +79,31 @@ impl Scenario {
             .tiers(args.get_u64_or("tiers", default_tiers)?)
             .vtech(parse_vtech(args.get_or("vtech", "tsv"))?)
             .dataflow(parse_dataflow(args.get_or("dataflow", "dos"))?)
+            .constraints(Constraints {
+                max_temp_c: args.get_f64("max-temp")?,
+                power_budget_w: args.get_f64("power-budget")?,
+            })
+            .build()
+    }
+
+    /// One single-GEMM design point — the shared constructor behind DSE grid
+    /// points and schedule stage substrates (formerly duplicated builder
+    /// boilerplate in `dse::point_scenario` and `schedule::layer_point`).
+    pub fn design_point(
+        g: Gemm,
+        mac_budget: u64,
+        tiers: u64,
+        dataflow: Dataflow,
+        vtech: VerticalTech,
+        tech: Tech,
+    ) -> Result<Scenario> {
+        Scenario::builder()
+            .gemm(g)
+            .mac_budget(mac_budget)
+            .tiers(tiers)
+            .dataflow(dataflow)
+            .vtech(vtech)
+            .tech(tech)
             .build()
     }
 
@@ -94,6 +126,7 @@ impl Scenario {
                         .tiers(tiers)
                         .vtech(cfg.vertical_tech)
                         .dataflow(dataflow)
+                        .constraints(cfg.constraints)
                         .build();
                     if let Ok(s) = built {
                         out.push(s);
@@ -127,6 +160,7 @@ impl Scenario {
                     array: self.array,
                     tech: self.tech.clone(),
                     schedule: None,
+                    constraints: self.constraints,
                 })
                 .collect(),
         }
@@ -178,6 +212,7 @@ pub struct ScenarioBuilder {
     array: ArrayChoice,
     tech: Tech,
     schedule: Option<ScheduleSpec>,
+    constraints: Constraints,
 }
 
 impl Default for ScenarioBuilder {
@@ -191,6 +226,7 @@ impl Default for ScenarioBuilder {
             array: ArrayChoice::Optimize,
             tech: Tech::default(),
             schedule: None,
+            constraints: Constraints::NONE,
         }
     }
 }
@@ -267,6 +303,25 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Physical feasibility limits the evaluated point is classified
+    /// against (peak temperature ceiling, power budget).
+    pub fn constraints(mut self, constraints: Constraints) -> Self {
+        self.constraints = constraints;
+        self
+    }
+
+    /// Peak junction-temperature ceiling, °C.
+    pub fn max_temp_c(mut self, limit: f64) -> Self {
+        self.constraints.max_temp_c = Some(limit);
+        self
+    }
+
+    /// Average-power budget, W.
+    pub fn power_budget_w(mut self, limit: f64) -> Self {
+        self.constraints.power_budget_w = Some(limit);
+        self
+    }
+
     pub fn build(self) -> Result<Scenario> {
         let workload = self
             .workload
@@ -302,6 +357,7 @@ impl ScenarioBuilder {
                 }
             }
         }
+        self.constraints.validate()?;
         Ok(Scenario {
             workload,
             dataflow: self.dataflow,
@@ -311,6 +367,7 @@ impl ScenarioBuilder {
             array: self.array,
             tech: self.tech,
             schedule: self.schedule,
+            constraints: self.constraints,
         })
     }
 }
@@ -447,6 +504,80 @@ mod tests {
         assert_eq!(s.schedule, Some(spec));
         // Per-layer points are schedule-independent design points.
         assert!(s.points().iter().all(|p| p.schedule.is_none()));
+    }
+
+    #[test]
+    fn constraints_flow_through_builder_points_and_config() {
+        let plain = Scenario::builder().gemm(Gemm::new(4, 5, 6)).build().unwrap();
+        assert!(plain.constraints.is_empty(), "constraints are opt-in");
+
+        let s = Scenario::builder()
+            .model("gnmt", 1)
+            .unwrap()
+            .max_temp_c(105.0)
+            .power_budget_w(8.0)
+            .build()
+            .unwrap();
+        assert_eq!(s.constraints.max_temp_c, Some(105.0));
+        assert_eq!(s.constraints.power_budget_w, Some(8.0));
+        // Per-layer points inherit the limits (classification only — the
+        // limits are outside the evaluator's cache key).
+        assert!(s.points().iter().all(|p| p.constraints == s.constraints));
+
+        let doc = Json::parse(
+            r#"{"workload": {"layer": "RN0"}, "mac_budgets": [4096], "tiers": [1, 2],
+                "max_temp_c": 90.5, "power_budget_w": 7.0}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&doc).unwrap();
+        let ss = Scenario::expand_config(&cfg).unwrap();
+        assert!(ss.iter().all(|s| s.constraints.max_temp_c == Some(90.5)
+            && s.constraints.power_budget_w == Some(7.0)));
+    }
+
+    #[test]
+    fn nonpositive_constraints_rejected_with_key_and_value() {
+        let err = Scenario::builder()
+            .gemm(Gemm::new(4, 5, 6))
+            .max_temp_c(-3.0)
+            .build()
+            .unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("max_temp_c") && msg.contains("-3"), "{msg}");
+        assert!(Scenario::builder()
+            .gemm(Gemm::new(4, 5, 6))
+            .power_budget_w(f64::NAN)
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn design_point_matches_builder() {
+        let g = Gemm::new(64, 147, 255);
+        let p = Scenario::design_point(
+            g,
+            4096,
+            2,
+            Dataflow::WeightStationary,
+            VerticalTech::Miv,
+            Tech::default(),
+        )
+        .unwrap();
+        assert_eq!(p.workload.primary_gemm(), g);
+        assert_eq!(p.mac_budget, 4096);
+        assert_eq!(p.tiers, TierChoice::Fixed(2));
+        assert_eq!(p.dataflow, Dataflow::WeightStationary);
+        assert_eq!(p.vtech, VerticalTech::Miv);
+        // Same validation as the builder: infeasible points error.
+        assert!(Scenario::design_point(
+            g,
+            2,
+            4,
+            Dataflow::DistributedOutputStationary,
+            VerticalTech::Tsv,
+            Tech::default()
+        )
+        .is_err());
     }
 
     #[test]

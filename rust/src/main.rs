@@ -16,7 +16,10 @@
 //!                 runtime (uses `artifacts/`).
 //! * `schedule`  — partition a whole network across the stack's tiers and
 //!                 evaluate the layer pipeline (latency, steady-state
-//!                 throughput, bottleneck stage, vertical traffic).
+//!                 throughput, bottleneck stage, vertical traffic, per-stage
+//!                 power and the heterogeneous-stack temperatures; `--json`
+//!                 for machine-readable output, `--max-temp`/`--power-budget`
+//!                 to check physical feasibility).
 //! * `workloads` — print the Table I workload library.
 //!
 //! Every metric printed here comes from the shared [`cube3d::eval`]
@@ -26,11 +29,14 @@ use cube3d::analytical::{breakdown_2d, breakdown_3d};
 use cube3d::config::{parse_dataflow, parse_strategy, parse_vtech, ExperimentConfig, WorkloadSpec};
 use cube3d::coordinator::{BatcherConfig, Coordinator, GemmJob, RouterConfig};
 use cube3d::dataflow::Dataflow;
-use cube3d::eval::{shared_evaluator, shared_full_evaluator, shared_performance_evaluator, Scenario};
+use cube3d::eval::{
+    shared_evaluator, shared_full_evaluator, shared_performance_evaluator, Constraints, Scenario,
+};
 use cube3d::report::reproduce_all;
 use cube3d::runtime::find_artifact_dir;
 use cube3d::sim::{matmul_i64, simulate_dataflow, Matrix};
 use cube3d::util::cli::{usage, Args, OptSpec};
+use cube3d::util::json::{obj, Json};
 use cube3d::util::rng::Rng;
 use cube3d::util::table::Table;
 use cube3d::workloads::{table1, Gemm, Workload};
@@ -77,6 +83,21 @@ fn workload_opts() -> Vec<OptSpec> {
             name: "batches",
             takes_value: true,
             help: "schedule: inputs streamed through the pipeline (default 16)",
+        },
+        OptSpec {
+            name: "max-temp",
+            takes_value: true,
+            help: "constraint: peak junction temperature ceiling, °C",
+        },
+        OptSpec {
+            name: "power-budget",
+            takes_value: true,
+            help: "constraint: average-power budget, W",
+        },
+        OptSpec {
+            name: "json",
+            takes_value: false,
+            help: "schedule: machine-readable JSON output instead of tables",
         },
         OptSpec { name: "config", takes_value: true, help: "JSON experiment config file" },
         OptSpec { name: "out-dir", takes_value: true, help: "output directory (default reports)" },
@@ -260,8 +281,16 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
             c
         }
     };
+    let mut cfg = cfg;
+    cfg.constraints = constraints_from_args(args, cfg.constraints)?;
     let scenarios = Scenario::expand_config(&cfg)?;
-    let metrics = shared_evaluator().evaluate_batch(&scenarios);
+    // A temperature ceiling needs the thermal model to verify feasibility.
+    let ev = if cfg.constraints.max_temp_c.is_some() {
+        shared_full_evaluator()
+    } else {
+        shared_evaluator()
+    };
+    let metrics = ev.evaluate_batch(&scenarios);
 
     let workload = cfg.workload.resolve()?;
     println!(
@@ -270,9 +299,15 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         cfg.vertical_tech.name(),
         scenarios.len()
     );
-    let mut t = Table::new(["MACs", "ℓ", "df", "cycles", "speedup", "perf/area vs 2D", "power W"]);
+    let constrained = !cfg.constraints.is_empty();
+    let mut header =
+        vec!["MACs", "ℓ", "df", "cycles", "speedup", "perf/area vs 2D", "power W"];
+    if constrained {
+        header.push("feasible");
+    }
+    let mut t = Table::new(header);
     for (s, m) in scenarios.iter().zip(&metrics) {
-        t.row([
+        let mut row = vec![
             s.mac_budget.to_string(),
             m.tiers.map_or("-".into(), |v| v.to_string()),
             s.dataflow.short_name().to_string(),
@@ -280,7 +315,12 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
             m.speedup_vs_2d.map_or("-".into(), |v| format!("{v:.3}x")),
             m.perf_per_area_vs_2d.map_or("-".into(), |v| format!("{v:.3}x")),
             m.power_w().map_or("-".into(), |v| format!("{v:.2}")),
-        ]);
+        ];
+        if constrained {
+            let ok = cfg.constraints.is_satisfied(m.power_w(), m.peak_temp_c());
+            row.push(if ok { "yes".into() } else { "NO".to_string() });
+        }
+        t.row(row);
     }
     println!("{}", t.to_ascii());
     Ok(())
@@ -475,6 +515,81 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Physical limits from the CLI flags, merged over `base` (a config file's
+/// limits) — a flag given on the command line wins. Validated here so a bad
+/// flag errors loudly instead of silently emptying a sweep (every grid
+/// point would fail scenario validation).
+fn constraints_from_args(args: &Args, base: Constraints) -> anyhow::Result<Constraints> {
+    let mut c = base;
+    if let Some(t) = args.get_f64("max-temp")? {
+        c.max_temp_c = Some(t);
+    }
+    if let Some(p) = args.get_f64("power-budget")? {
+        c.power_budget_w = Some(p);
+    }
+    c.validate()?;
+    Ok(c)
+}
+
+fn fmt_opt(v: Option<f64>, digits: usize) -> String {
+    v.map_or("-".into(), |x| format!("{x:.digits$}"))
+}
+
+fn opt_num(v: Option<f64>) -> Json {
+    v.map_or(Json::Null, Json::Num)
+}
+
+/// The single-point `schedule` result as a JSON document (`--json`).
+fn network_json(s: &Scenario, m: &cube3d::schedule::NetworkMetrics, feasible: Option<bool>) -> Json {
+    let stages: Vec<Json> = m
+        .stages
+        .iter()
+        .map(|st| {
+            obj([
+                ("stage", Json::Num(st.stage as f64)),
+                ("first_layer", Json::Num(st.first_layer as f64)),
+                ("n_layers", Json::Num(st.n_layers as f64)),
+                ("compute_cycles", Json::Num(st.compute_cycles as f64)),
+                ("cycles", Json::Num(st.cycles as f64)),
+                (
+                    "in_bytes",
+                    st.in_traffic.map_or(Json::Null, |b| Json::Num(b.bytes as f64)),
+                ),
+                (
+                    "in_cycles",
+                    st.in_traffic.map_or(Json::Null, |b| Json::Num(b.cycles as f64)),
+                ),
+                ("power_w", opt_num(st.power_w)),
+                ("energy_per_item_j", opt_num(st.energy_per_item_j)),
+            ])
+        })
+        .collect();
+    obj([
+        ("workload", Json::Str(m.workload.clone())),
+        ("dataflow", Json::Str(s.dataflow.short_name().to_string())),
+        ("vertical_tech", Json::Str(s.vtech.name().to_string())),
+        ("mac_budget", Json::Num(s.mac_budget as f64)),
+        ("tiers", Json::Num(m.tiers as f64)),
+        ("strategy", Json::Str(m.strategy.name().to_string())),
+        ("batches", Json::Num(m.batches as f64)),
+        ("interval_cycles", Json::Num(m.interval_cycles as f64)),
+        ("latency_cycles", Json::Num(m.latency_cycles as f64)),
+        ("throughput_per_s", Json::Num(m.throughput_per_s)),
+        ("speedup_vs_2d", Json::Num(m.speedup_vs_2d)),
+        ("bottleneck_stage", Json::Num(m.bottleneck_stage as f64)),
+        ("vertical_traffic_bytes", Json::Num(m.vertical_traffic_bytes as f64)),
+        ("vertical_energy_j", Json::Num(m.vertical_energy_j)),
+        ("baseline_2d_cycles", Json::Num(m.baseline_2d_cycles as f64)),
+        ("power_w", opt_num(m.power_w)),
+        ("power_2d_w", opt_num(m.power_2d_w)),
+        ("area_m2", opt_num(m.area_m2)),
+        ("peak_temp_c", opt_num(m.peak_temp_c())),
+        ("mean_temp_c", opt_num(m.mean_temp_c())),
+        ("feasible", feasible.map_or(Json::Null, Json::Bool)),
+        ("stages", Json::Arr(stages)),
+    ])
+}
+
 fn cmd_schedule(args: &Args) -> anyhow::Result<()> {
     use cube3d::power::Tech;
     use cube3d::schedule::ScheduleSpec;
@@ -482,6 +597,7 @@ fn cmd_schedule(args: &Args) -> anyhow::Result<()> {
     // Config path: sweep the whole budget × tier × dataflow × strategy grid.
     if let Some(path) = args.get("config") {
         let cfg = ExperimentConfig::from_file(Path::new(path))?;
+        let constraints = constraints_from_args(args, cfg.constraints)?;
         let workload = cfg.workload.resolve()?;
         let pts = cube3d::dse::sweep_partitions(
             &workload,
@@ -492,9 +608,35 @@ fn cmd_schedule(args: &Args) -> anyhow::Result<()> {
             cfg.vertical_tech,
             &Tech::default(),
             cfg.batches,
+            &constraints,
         );
         if pts.is_empty() {
             anyhow::bail!("config expands to no feasible schedule points");
+        }
+        if args.flag("json") {
+            let rows: Vec<Json> = pts
+                .iter()
+                .map(|p| {
+                    obj([
+                        ("mac_budget", Json::Num(p.mac_budget as f64)),
+                        ("tiers", Json::Num(p.tiers as f64)),
+                        ("dataflow", Json::Str(p.dataflow.short_name().to_string())),
+                        ("strategy", Json::Str(p.strategy.name().to_string())),
+                        ("stages", Json::Num(p.stages as f64)),
+                        ("interval_cycles", Json::Num(p.interval_cycles as f64)),
+                        ("latency_cycles", Json::Num(p.latency_cycles as f64)),
+                        ("throughput_per_s", Json::Num(p.throughput_per_s)),
+                        ("speedup_vs_2d", Json::Num(p.speedup_vs_2d)),
+                        ("bottleneck_stage", Json::Num(p.bottleneck_stage as f64)),
+                        ("vertical_traffic_bytes", Json::Num(p.vertical_traffic_bytes as f64)),
+                        ("power_w", opt_num(p.power_w)),
+                        ("peak_temp_c", opt_num(p.peak_temp_c)),
+                        ("feasible", Json::Bool(p.feasible)),
+                    ])
+                })
+                .collect();
+            println!("{}", Json::Arr(rows).to_string_pretty());
+            return Ok(());
         }
         println!(
             "workload {} ({})   {} schedule points   {} batches\n",
@@ -503,42 +645,64 @@ fn cmd_schedule(args: &Args) -> anyhow::Result<()> {
             pts.len(),
             cfg.batches
         );
-        let mut t = Table::new([
+        let mut header = vec![
             "MACs",
             "ℓ",
             "df",
             "strategy",
             "stages",
             "interval",
-            "latency",
             "tput/s",
             "tput vs 2D",
-            "bottleneck",
-        ]);
+            "power W",
+            "peak °C",
+        ];
+        if !constraints.is_empty() {
+            header.push("feasible");
+        }
+        let mut t = Table::new(header);
         for p in &pts {
-            t.row([
+            let mut row = vec![
                 p.mac_budget.to_string(),
                 p.tiers.to_string(),
                 p.dataflow.short_name().to_string(),
                 p.strategy.name().to_string(),
                 p.stages.to_string(),
                 p.interval_cycles.to_string(),
-                p.latency_cycles.to_string(),
                 format!("{:.0}", p.throughput_per_s),
                 format!("{:.3}x", p.speedup_vs_2d),
-                p.bottleneck_stage.to_string(),
-            ]);
+                fmt_opt(p.power_w, 2),
+                fmt_opt(p.peak_temp_c, 1),
+            ];
+            if !constraints.is_empty() {
+                row.push(if p.feasible { "yes".into() } else { "NO".to_string() });
+            }
+            t.row(row);
         }
         println!("{}", t.to_ascii());
+        if !constraints.is_empty() {
+            let infeasible = pts.iter().filter(|p| !p.feasible).count();
+            println!("{infeasible} of {} points violate the constraints", pts.len());
+        }
         return Ok(());
     }
 
-    // Single design point: the full per-stage breakdown.
+    // Single design point: the full per-stage breakdown, physical closure
+    // included (power + heterogeneous-stack thermal solve).
     let strategy = parse_strategy(args.get_or("strategy", "dp"))?;
     let batches = args.get_u64_or("batches", 16)?;
     let mut s = Scenario::from_args(args, 1 << 18, 4)?;
     s.schedule = Some(ScheduleSpec { strategy, batches });
-    let m = shared_performance_evaluator().evaluate_network(&s)?;
+    let m = cube3d::eval::shared_schedule_evaluator().evaluate_network(&s)?;
+    let feasible = if s.constraints.is_empty() {
+        None
+    } else {
+        Some(s.constraints.is_satisfied(m.power_w, m.peak_temp_c()))
+    };
+    if args.flag("json") {
+        println!("{}", network_json(&s, &m, feasible).to_string_pretty());
+        return Ok(());
+    }
     println!(
         "workload {}   dataflow {}   budget {} MACs   ℓ={} ({})   strategy {}   batches {}\n",
         s.workload.description(),
@@ -549,7 +713,15 @@ fn cmd_schedule(args: &Args) -> anyhow::Result<()> {
         m.strategy.name(),
         m.batches
     );
-    let mut t = Table::new(["stage", "layers", "compute cycles", "in KB", "in cycles", "stage cycles"]);
+    let mut t = Table::new([
+        "stage",
+        "layers",
+        "compute cycles",
+        "in KB",
+        "in cycles",
+        "stage cycles",
+        "power W",
+    ]);
     for st in &m.stages {
         t.row([
             st.stage.to_string(),
@@ -558,6 +730,7 @@ fn cmd_schedule(args: &Args) -> anyhow::Result<()> {
             st.in_traffic.map_or("-".into(), |b| format!("{:.1}", b.bytes as f64 / 1e3)),
             st.in_traffic.map_or("-".into(), |b| b.cycles.to_string()),
             st.cycles.to_string(),
+            fmt_opt(st.power_w, 3),
         ]);
     }
     println!("{}", t.to_ascii());
@@ -576,6 +749,23 @@ fn cmd_schedule(args: &Args) -> anyhow::Result<()> {
         m.vertical_traffic_bytes as f64 / 1e3,
         m.vertical_energy_j * 1e6
     );
+    println!(
+        "stack power {} W (2D reference {} W)   peak temp {} °C   mean {} °C   area {} mm²",
+        fmt_opt(m.power_w, 2),
+        fmt_opt(m.power_2d_w, 2),
+        fmt_opt(m.peak_temp_c(), 1),
+        fmt_opt(m.mean_temp_c(), 1),
+        fmt_opt(m.area_m2.map(|a| a * 1e6), 2),
+    );
+    match feasible {
+        Some(true) => println!("constraints: satisfied"),
+        Some(false) => {
+            for v in s.constraints.violations(m.power_w, m.peak_temp_c()) {
+                println!("constraint VIOLATED: {v}");
+            }
+        }
+        None => {}
+    }
     Ok(())
 }
 
@@ -609,10 +799,11 @@ fn cmd_dataflows(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_pareto(args: &Args) -> anyhow::Result<()> {
-    use cube3d::dse::{pareto_front, sweep_dataflows};
+    use cube3d::dse::{constrained_front, pareto_front, sweep_dataflows};
     use cube3d::power::Tech;
     let g = single_gemm_workload(args)?;
     let vtech = parse_vtech(args.get_or("vtech", "miv"))?;
+    let constraints = constraints_from_args(args, Constraints::NONE)?;
     let budgets = args
         .get_u64_list("macs")?
         .unwrap_or_else(|| vec![4096, 32768, 262144]);
@@ -623,15 +814,44 @@ fn cmd_pareto(args: &Args) -> anyhow::Result<()> {
         None => vec![Dataflow::DistributedOutputStationary],
         Some(dfs) => parse_dataflow_list(dfs)?,
     };
-    let pts = sweep_dataflows(&[g], &budgets, &tiers, &dataflows, vtech, &Tech::default());
-    let front = pareto_front(&pts);
+    let pts = sweep_dataflows(
+        &[g],
+        &budgets,
+        &tiers,
+        &dataflows,
+        vtech,
+        &Tech::default(),
+        &constraints,
+    );
+    let unconstrained = pareto_front(&pts);
+    let front = if constraints.is_empty() {
+        unconstrained
+    } else {
+        // Infeasible sweep points are excluded *before* the dominance pass;
+        // report how many points the constraints ruled off the raw front.
+        let excluded = unconstrained.iter().filter(|p| !p.feasible).count();
+        println!(
+            "constraints exclude {excluded} of {} unconstrained-Pareto-optimal points",
+            unconstrained.len()
+        );
+        constrained_front(&pts)
+    };
     println!(
         "workload {g} ({}): {} design points, {} Pareto-optimal\n",
         vtech.name(),
         pts.len(),
         front.len()
     );
-    let mut t = Table::new(["MACs", "ℓ", "df", "cycles", "area mm²", "power W", "speedup vs 2D"]);
+    let mut t = Table::new([
+        "MACs",
+        "ℓ",
+        "df",
+        "cycles",
+        "area mm²",
+        "power W",
+        "peak °C",
+        "speedup vs 2D",
+    ]);
     for p in &front {
         t.row([
             p.mac_budget.to_string(),
@@ -640,6 +860,7 @@ fn cmd_pareto(args: &Args) -> anyhow::Result<()> {
             p.cycles.to_string(),
             format!("{:.2}", p.area_m2 * 1e6),
             format!("{:.2}", p.power_w),
+            fmt_opt(p.peak_temp_c, 1),
             format!("{:.2}x", p.speedup_vs_2d),
         ]);
     }

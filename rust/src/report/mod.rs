@@ -12,6 +12,7 @@
 //! | F9 | Fig. 9   — perf-per-area vs tier count   | [`fig9::report`]   |
 //! | AB | §III-C   — dOS vs OS/WS/IS ablation      | [`ablation::report`] |
 //! | SC | §V ext.  — network schedule / pipelining | [`schedule::report`] |
+//! | TS | §V ext.  — schedule power/thermal vs 2D  | [`thermal_schedule::report`] |
 
 pub mod ablation;
 pub mod fig5;
@@ -22,6 +23,7 @@ pub mod fig9;
 pub mod schedule;
 pub mod table1;
 pub mod table2;
+pub mod thermal_schedule;
 
 use crate::util::csv::Csv;
 use crate::util::table::Table;
@@ -74,6 +76,7 @@ pub fn reproduce_all(dir: &Path) -> Result<Vec<Report>> {
         fig9::report(),
         ablation::report(),
         schedule::report(),
+        thermal_schedule::report(),
     ];
     for r in &reports {
         r.write_to(dir)?;

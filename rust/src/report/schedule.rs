@@ -7,6 +7,7 @@
 use super::Report;
 use crate::dataflow::Dataflow;
 use crate::dse::{partition_ablation, sweep_partitions};
+use crate::eval::Constraints;
 use crate::power::{Tech, VerticalTech};
 use crate::schedule::PartitionStrategy;
 use crate::util::csv::Csv;
@@ -52,6 +53,7 @@ pub fn report() -> Report {
             VerticalTech::Tsv,
             &Tech::default(),
             BATCHES,
+            &Constraints::NONE,
         );
         for p in &pts {
             csv.row([
@@ -141,6 +143,7 @@ mod tests {
             VerticalTech::Tsv,
             &Tech::default(),
             BATCHES,
+            &Constraints::NONE,
         );
         assert!(pts[0].speedup_vs_2d > 2.0, "got {:.3}x", pts[0].speedup_vs_2d);
     }

@@ -19,11 +19,18 @@
 //!   stage costs and the 2D reference both flow through the memoizing
 //!   [`crate::eval::Evaluator`]; a [`crate::eval::Scenario`] opts in by
 //!   carrying a [`ScheduleSpec`] (builder `.schedule(…)`, CLI
-//!   `cube3d schedule`, JSON `batches`/`strategies` keys).
+//!   `cube3d schedule`, JSON `batches`/`strategies` keys). After the
+//!   interval-optimal stack is chosen, the evaluator's cost models close
+//!   the physical loop over the resolved stages
+//!   ([`crate::eval::CostModel::evaluate_network`]): stack area, per-stage
+//!   duty-cycled power, and the *heterogeneous* per-die thermal solve —
+//!   each tier dissipates its own stage's power map.
 //!
 //! Consumers: `Evaluator::evaluate_network`, `dse::{sweep_partitions,
-//! partition_ablation, schedule_front}`, `report::schedule`, and the
-//! `schedule` CLI subcommand.
+//! partition_ablation, schedule_front, constrained_schedule_front}`,
+//! `report::{schedule, thermal_schedule}`, and the `schedule` CLI
+//! subcommand (`--json` for machine-readable output; `--max-temp` /
+//! `--power-budget` mark infeasible points).
 
 mod network;
 mod partition;

@@ -9,11 +9,21 @@
 //! scenario's dataflow) and the 2D reference (every layer back-to-back on
 //! the whole budget, one tier) both come from [`Evaluator::evaluate_batch`]
 //! — every point an independently memoized design point.
+//!
+//! Physical closure: after the interval-optimal stack is chosen, the
+//! evaluator's cost models run their network passes
+//! ([`crate::eval::CostModel::evaluate_network`]) over the resolved stages,
+//! filling [`NetworkMetrics`]' area/power/thermal fields — including the
+//! heterogeneous-stack thermal solve, where each die dissipates its own
+//! stage's power map. Pipelines without those models (e.g.
+//! [`Evaluator::performance`]) leave the fields `None`; timing is identical
+//! either way.
 
 use super::partition::{partition, PartitionStrategy};
 use super::pipeline::PipelineModel;
 use super::traffic::{boundary_traffic, BoundaryTraffic};
-use crate::eval::{ArrayChoice, Evaluator, Metrics, Scenario, TierChoice};
+use crate::eval::{ArrayChoice, Evaluator, Metrics, ResolvedNetwork, Scenario, TierChoice};
+use crate::thermal::ThermalStudy;
 use crate::workloads::Gemm;
 use anyhow::{anyhow, bail, Result};
 
@@ -45,6 +55,12 @@ pub struct StageMetrics {
     pub in_traffic: Option<BoundaryTraffic>,
     /// compute + incoming transfer: what the pipeline algebra sees.
     pub cycles: u64,
+    /// Energy the stage spends per item (layer compute + the incoming
+    /// vertical crossing), J — power model's network pass.
+    pub energy_per_item_j: Option<f64>,
+    /// Steady-state average power of the stage's die (per-item energy over
+    /// the initiation interval — lighter stages duty-cycle), W.
+    pub power_w: Option<f64>,
 }
 
 /// Everything a schedule evaluation knows about one (workload × design
@@ -77,6 +93,35 @@ pub struct NetworkMetrics {
     pub speedup_vs_2d: f64,
     /// Batch-latency gain vs the 2D reference for `batches` items.
     pub latency_speedup_vs_2d: f64,
+    /// Total steady-state stack power (sum of the duty-cycled stage
+    /// powers), W — power model's network pass.
+    pub power_w: Option<f64>,
+    /// 2D reference average power (same layers back-to-back on the whole
+    /// budget), W.
+    pub power_2d_w: Option<f64>,
+    /// Total stack silicon area (ℓ dies sized for the largest stage
+    /// design), m² — area model's network pass.
+    pub area_m2: Option<f64>,
+    /// Per-die footprint (largest stage design + via arrays), m².
+    pub die_area_m2: Option<f64>,
+    /// 2D reference silicon area, m².
+    pub area_2d_m2: Option<f64>,
+    /// Heterogeneous-stack thermal solve — stage s's power map on die s,
+    /// bottom (near sink) first — thermal model's network pass.
+    pub thermal: Option<ThermalStudy>,
+}
+
+impl NetworkMetrics {
+    /// Hottest thermal-grid node across all dies, °C — the value physical
+    /// constraints ([`crate::eval::Constraints`]) check.
+    pub fn peak_temp_c(&self) -> Option<f64> {
+        self.thermal.as_ref().map(ThermalStudy::peak_c)
+    }
+
+    /// Node-weighted mean stack temperature, °C.
+    pub fn mean_temp_c(&self) -> Option<f64> {
+        self.thermal.as_ref().map(ThermalStudy::mean_c)
+    }
 }
 
 /// Evaluate the scenario's workload as a layer pipeline on its design
@@ -107,19 +152,34 @@ pub fn evaluate_network(ev: &Evaluator, s: &Scenario) -> Result<NetworkMetrics> 
         .iter()
         .map(|&g| layer_point(s, g, s.mac_budget))
         .collect::<Result<Vec<_>>>()?;
+    let base_metrics = ev.evaluate_batch(&base_points);
     let mut baseline_2d = 0u64;
-    for m in &ev.evaluate_batch(&base_points) {
+    for m in &base_metrics {
         baseline_2d += cycles_of(m)?;
     }
-    let mut best: Option<NetworkMetrics> = None;
+    let mut best: Option<(NetworkMetrics, Vec<Metrics>)> = None;
     for &t in &tier_candidates {
-        let m = evaluate_at_tiers(ev, s, &spec, t, &gemms, baseline_2d)?;
+        let (m, pts) = evaluate_at_tiers(ev, s, &spec, t, &gemms, baseline_2d)?;
         // Ties favor the shorter stack (candidates ascend).
-        if best.as_ref().map_or(true, |b| m.interval_cycles < b.interval_cycles) {
-            best = Some(m);
+        if best.as_ref().map_or(true, |(b, _)| m.interval_cycles < b.interval_cycles) {
+            best = Some((m, pts));
         }
     }
-    Ok(best.expect("at least one tier candidate evaluated"))
+    let (mut m, stage_points) = best.expect("at least one tier candidate evaluated");
+    // Physical closure: the evaluator's cost models run their network
+    // passes over the winning resolved multi-stage design — area, power and
+    // the heterogeneous-stack thermal solve fill the fields they own
+    // (models absent from the pipeline leave them `None`).
+    ev.run_network_models(
+        s,
+        &ResolvedNetwork {
+            gemms: &gemms,
+            stage_points: &stage_points,
+            base_points: &base_metrics,
+        },
+        &mut m,
+    );
+    Ok(m)
 }
 
 fn cycles_of(m: &Metrics) -> Result<u64> {
@@ -128,14 +188,7 @@ fn cycles_of(m: &Metrics) -> Result<u64> {
 }
 
 fn layer_point(s: &Scenario, g: Gemm, budget: u64) -> Result<Scenario> {
-    Scenario::builder()
-        .gemm(g)
-        .mac_budget(budget)
-        .tiers(1)
-        .dataflow(s.dataflow)
-        .vtech(s.vtech)
-        .tech(s.tech.clone())
-        .build()
+    Scenario::design_point(g, budget, 1, s.dataflow, s.vtech, s.tech.clone())
 }
 
 fn evaluate_at_tiers(
@@ -145,20 +198,22 @@ fn evaluate_at_tiers(
     tiers: u64,
     gemms: &[Gemm],
     baseline_2d: u64,
-) -> Result<NetworkMetrics> {
+) -> Result<(NetworkMetrics, Vec<Metrics>)> {
     let per_tier_budget = s.mac_budget / tiers;
     if per_tier_budget == 0 {
         bail!("budget {} too small for {tiers} tiers", s.mac_budget);
     }
 
     // Stage substrate: each layer on one tier's budget, single tier — a
-    // memoized design point per unique shape.
-    let stage_points: Vec<Scenario> = gemms
+    // memoized design point per unique shape. The full metrics bundles are
+    // kept: the winning stack's physical network passes read designs and
+    // per-layer power off them.
+    let stage_scenarios: Vec<Scenario> = gemms
         .iter()
         .map(|&g| layer_point(s, g, per_tier_budget))
         .collect::<Result<Vec<_>>>()?;
-    let per_layer: Vec<u64> = ev
-        .evaluate_batch(&stage_points)
+    let stage_points = ev.evaluate_batch(&stage_scenarios);
+    let per_layer: Vec<u64> = stage_points
         .iter()
         .map(cycles_of)
         .collect::<Result<Vec<_>>>()?;
@@ -191,6 +246,8 @@ fn evaluate_at_tiers(
             compute_cycles: compute,
             in_traffic: tr,
             cycles,
+            energy_per_item_j: None,
+            power_w: None,
         });
         stage_cycles.push(cycles);
     }
@@ -199,7 +256,7 @@ fn evaluate_at_tiers(
     let interval = pipe.interval_cycles();
     debug_assert_eq!(interval, part.bottleneck_cycles);
     let latency = pipe.latency_cycles(spec.batches);
-    Ok(NetworkMetrics {
+    let metrics = NetworkMetrics {
         workload: s.workload.description(),
         layers: gemms.len() as u64,
         tiers,
@@ -215,7 +272,14 @@ fn evaluate_at_tiers(
         speedup_vs_2d: baseline_2d as f64 / interval as f64,
         latency_speedup_vs_2d: spec.batches.max(1) as f64 * baseline_2d as f64 / latency as f64,
         stages,
-    })
+        power_w: None,
+        power_2d_w: None,
+        area_m2: None,
+        die_area_m2: None,
+        area_2d_m2: None,
+        thermal: None,
+    };
+    Ok((metrics, stage_points))
 }
 
 #[cfg(test)]
@@ -322,6 +386,35 @@ mod tests {
         let m = evaluate_network(&ev, &s).unwrap();
         assert_eq!(m.latency_cycles, u64::MAX, "saturated, not wrapped");
         assert!(m.latency_speedup_vs_2d.is_finite() && m.latency_speedup_vs_2d > 0.0);
+    }
+
+    #[test]
+    fn physical_passes_fill_network_fields() {
+        let ev = Evaluator::full();
+        let m = evaluate_network(&ev, &gnmt_scenario(4, PartitionStrategy::Dp)).unwrap();
+        // Per-stage powers sum to the stack total; every physical field of
+        // the full pipeline is populated.
+        let total: f64 = m.stages.iter().map(|s| s.power_w.unwrap()).sum();
+        assert!((total - m.power_w.unwrap()).abs() < 1e-9);
+        assert!(m.power_w.unwrap() > 0.0);
+        assert!(m.power_2d_w.unwrap() > 0.0);
+        assert!(m.area_m2.unwrap() > 0.0 && m.area_2d_m2.unwrap() > 0.0);
+        assert!(m.die_area_m2.unwrap() < m.area_m2.unwrap());
+        assert!(m.peak_temp_c().unwrap() > 45.0, "stack must heat above ambient");
+        assert!(m.mean_temp_c().unwrap() <= m.peak_temp_c().unwrap());
+        assert_eq!(
+            m.thermal.as_ref().unwrap().tiers.len(),
+            4,
+            "idle tiers stay in the stack as zero-power conductors"
+        );
+
+        // A performance-only pipeline leaves physical fields None and the
+        // timing unchanged — physics classifies, it never re-times.
+        let perf = Evaluator::performance();
+        let p = evaluate_network(&perf, &gnmt_scenario(4, PartitionStrategy::Dp)).unwrap();
+        assert!(p.power_w.is_none() && p.thermal.is_none() && p.area_m2.is_none());
+        assert_eq!(p.interval_cycles, m.interval_cycles);
+        assert_eq!(p.latency_cycles, m.latency_cycles);
     }
 
     #[test]

@@ -25,6 +25,6 @@ pub use grid::{build_network, coarsen_power_map, Network};
 pub use solver::solve_steady_state;
 pub use transient::{node_capacitances, solve_transient, TransientResult};
 pub use stack::{
-    bond_interface, thermal_footprint_m2, thermal_study, StackSummary, ThermalParams,
-    ThermalStudy, TierTemps,
+    bond_interface, stack_study, thermal_footprint_m2, thermal_study, StackSummary,
+    ThermalParams, ThermalStudy, TierTemps,
 };

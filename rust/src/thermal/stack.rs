@@ -82,14 +82,14 @@ pub fn thermal_footprint_m2(array: &Array3d, tech: &Tech) -> f64 {
 }
 
 /// Temperature summary of one tier (or die region).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TierTemps {
     pub tier: usize,
     pub stats: Boxplot,
 }
 
 /// Result of a full thermal study on one configuration.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ThermalStudy {
     /// Per-tier boxplots, bottom (near sink) first.
     pub tiers: Vec<TierTemps>,
@@ -101,6 +101,27 @@ pub struct ThermalStudy {
     pub die_area_m2: f64,
     /// Total power, W.
     pub total_power_w: f64,
+}
+
+impl ThermalStudy {
+    /// Hottest grid node across all dies, °C — the value physical
+    /// constraints ([`crate::eval::Constraints`]) check.
+    pub fn peak_c(&self) -> f64 {
+        self.tiers
+            .iter()
+            .map(|tt| tt.stats.max)
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Node-weighted mean temperature over the whole stack, °C.
+    pub fn mean_c(&self) -> f64 {
+        let (mut sum, mut n) = (0.0f64, 0usize);
+        for tt in &self.tiers {
+            sum += tt.stats.mean * tt.stats.n as f64;
+            n += tt.stats.n;
+        }
+        sum / n.max(1) as f64
+    }
 }
 
 /// Aggregated stack summary for reports.
@@ -116,6 +137,13 @@ pub struct StackSummary {
 /// `die_area_m2` must already include the vertical-link area overhead (use
 /// [`crate::area::tier_area_m2`]) so the TSV area→heat-spreading effect is
 /// captured.
+///
+/// This is the *homogeneous* driver — every die dissipates the same GEMM's
+/// per-tier maps. The general entry point is [`stack_study`], which takes
+/// arbitrary per-die power grids (heterogeneous stacks where each tier runs
+/// different layers); this function is exactly `stack_study` over the
+/// coarsened [`power_map`] of `g` on `array`, pinned bit-for-bit by
+/// `tests/physical.rs`.
 pub fn thermal_study(
     g: &Gemm,
     array: &Array3d,
@@ -125,24 +153,40 @@ pub fn thermal_study(
     die_area_m2: f64,
 ) -> ThermalStudy {
     let maps = power_map(g, array, tech, vtech);
-    let total_power_w: f64 = maps.iter().flat_map(|m| m.iter()).sum();
     let grids: Vec<Vec<f64>> = maps
         .iter()
         .map(|m| coarsen_power_map(m, array.rows as usize, array.cols as usize, params.grid))
         .collect();
-    let net = build_network(params, die_area_m2, &grids, vtech);
+    stack_study(params, die_area_m2, &grids, vtech)
+}
+
+/// General stack driver: solve a stack of `power_grids.len()` dies (bottom,
+/// near the sink, first), each dissipating its own G×G coarsened power map.
+/// This is the heterogeneous entry point the schedule pipeline uses — each
+/// pipeline stage contributes a different per-die map (its layers' power,
+/// duty-cycled by the initiation interval), and idle tiers enter as
+/// all-zero grids that still conduct heat.
+pub fn stack_study(
+    params: &ThermalParams,
+    die_area_m2: f64,
+    power_grids: &[Vec<f64>],
+    vtech: VerticalTech,
+) -> ThermalStudy {
+    let total_power_w: f64 = power_grids.iter().flat_map(|m| m.iter()).sum();
+    let net = build_network(params, die_area_m2, power_grids, vtech);
     let t = solve_steady_state(&net);
 
-    let tiers: Vec<TierTemps> = (0..array.tiers as usize)
+    let dies = power_grids.len();
+    let tiers: Vec<TierTemps> = (0..dies)
         .map(|d| TierTemps {
             tier: d,
             stats: boxplot(net.die_temps(&t, d)),
         })
         .collect();
     let bottom = tiers[0].stats.clone();
-    let middle = if array.tiers > 1 {
+    let middle = if dies > 1 {
         let mut all: Vec<f64> = Vec::new();
-        for d in 1..array.tiers as usize {
+        for d in 1..dies {
             all.extend_from_slice(net.die_temps(&t, d));
         }
         Some(boxplot(&all))

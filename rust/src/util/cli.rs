@@ -91,13 +91,18 @@ impl Args {
         Ok(self.get_u64(name)?.unwrap_or(default))
     }
 
-    pub fn get_f64_or(&self, name: &str, default: f64) -> Result<f64> {
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>> {
         match self.get(name) {
-            None => Ok(default),
+            None => Ok(None),
             Some(v) => v
                 .parse::<f64>()
+                .map(Some)
                 .map_err(|_| anyhow!("--{name}: expected number, got '{v}'")),
         }
+    }
+
+    pub fn get_f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        Ok(self.get_f64(name)?.unwrap_or(default))
     }
 
     /// Comma-separated u64 list, e.g. `--tiers 1,2,4,8`.

@@ -1,0 +1,262 @@
+//! Physical-closure tests: the heterogeneous thermal stack driver
+//! (energy balance, monotonicity, bit-for-bit agreement with the
+//! homogeneous path), the schedule pipeline's power/thermal fields on the
+//! shipped configs, and the constraint-aware DSE acceptance path — a
+//! `max_temp_c` limit excluding an otherwise-Pareto-optimal point.
+
+use cube3d::analytical::Array3d;
+use cube3d::config::ExperimentConfig;
+use cube3d::dse::{constrained_front, pareto_front, sweep_dataflows, sweep_partitions};
+use cube3d::eval::Constraints;
+use cube3d::power::{power_map, Tech, VerticalTech};
+use cube3d::schedule::PartitionStrategy;
+use cube3d::thermal::{
+    build_network, coarsen_power_map, solve_steady_state, stack_study, thermal_footprint_m2,
+    thermal_study, ThermalParams,
+};
+use cube3d::util::rng::Rng;
+use cube3d::util::stats::boxplot;
+use cube3d::workloads::Gemm;
+use std::path::PathBuf;
+
+fn configs_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../configs")
+}
+
+/// Regression pin for the stack-driver refactor: `thermal_study` (now a
+/// thin wrapper over the heterogeneous `stack_study`) must reproduce the
+/// pre-refactor composition — power map → coarsen → build → solve →
+/// per-tier boxplots — *exactly*, temperature for temperature.
+#[test]
+fn homogeneous_path_reproduces_prerefactor_numbers_exactly() {
+    let g = Gemm::new(128, 128, 300);
+    let tech = Tech::default();
+    let params = ThermalParams::default();
+    for (arr, vtech) in [
+        (Array3d::new(222, 222, 1), VerticalTech::Tsv),
+        (Array3d::new(128, 128, 3), VerticalTech::Tsv),
+        (Array3d::new(128, 128, 3), VerticalTech::Miv),
+    ] {
+        let area = thermal_footprint_m2(&arr, &tech);
+        let study = thermal_study(&g, &arr, &tech, vtech, &params, area);
+
+        // The pre-refactor body, inlined.
+        let maps = power_map(&g, &arr, &tech, vtech);
+        let raw_total: f64 = maps.iter().flat_map(|m| m.iter()).sum();
+        let grids: Vec<Vec<f64>> = maps
+            .iter()
+            .map(|m| coarsen_power_map(m, arr.rows as usize, arr.cols as usize, params.grid))
+            .collect();
+        let net = build_network(&params, area, &grids, vtech);
+        let t = solve_steady_state(&net);
+
+        assert_eq!(study.tiers.len(), arr.tiers as usize);
+        for d in 0..arr.tiers as usize {
+            let expect = boxplot(net.die_temps(&t, d));
+            assert_eq!(study.tiers[d].stats, expect, "tier {d} of {arr:?} ({vtech:?})");
+        }
+        assert_eq!(study.bottom, study.tiers[0].stats);
+        // Total power: coarsening preserves the sum (different summation
+        // association only).
+        assert!(
+            (study.total_power_w - raw_total).abs() <= 1e-9 * raw_total.max(1.0),
+            "total {} vs raw {}",
+            study.total_power_w,
+            raw_total
+        );
+    }
+}
+
+/// Uniform per-die grids through the heterogeneous driver are exactly the
+/// homogeneous stack (same grids ⇒ same network ⇒ same solve).
+#[test]
+fn uniform_maps_reproduce_homogeneous_results_bit_for_bit() {
+    let params = ThermalParams::default();
+    let g2 = params.grid * params.grid;
+    let per_die: Vec<f64> = (0..g2).map(|i| 2.0e-2 + (i % 5) as f64 * 1e-3).collect();
+    let grids = vec![per_die.clone(), per_die.clone(), per_die];
+    let hetero = stack_study(&params, 25e-6, &grids, VerticalTech::Tsv);
+
+    let net = build_network(&params, 25e-6, &grids, VerticalTech::Tsv);
+    let t = solve_steady_state(&net);
+    for d in 0..3 {
+        assert_eq!(hetero.tiers[d].stats, boxplot(net.die_temps(&t, d)), "die {d}");
+    }
+    assert_eq!(hetero.tiers.len(), 3);
+    assert!(hetero.middle.is_some());
+}
+
+/// Energy balance on a *heterogeneous* stack: all injected power — however
+/// unevenly distributed across dies — leaves through the sink.
+#[test]
+fn heterogeneous_stack_conserves_energy() {
+    let params = ThermalParams::default();
+    let g2 = params.grid * params.grid;
+    let die_powers = [3.5f64, 0.25, 1.0, 0.0]; // die 3 idles, still conducts
+    let grids: Vec<Vec<f64>> = die_powers
+        .iter()
+        .map(|&p| vec![p / g2 as f64; g2])
+        .collect();
+    let total: f64 = die_powers.iter().sum();
+    for vtech in [VerticalTech::Tsv, VerticalTech::Miv] {
+        let net = build_network(&params, 25e-6, &grids, vtech);
+        let t = solve_steady_state(&net);
+        let out = net.g_amb[net.sink()] * (t[net.sink()] - net.t_amb);
+        assert!((out - total).abs() < 1e-6, "{vtech:?}: heat out {out} vs in {total}");
+    }
+}
+
+/// Monotonicity: raising one die's power never cools any node of the stack
+/// (the conductance Laplacian is an M-matrix — its inverse is nonnegative).
+#[test]
+fn raising_one_dies_power_never_cools_any_node() {
+    let params = ThermalParams::default();
+    let g2 = params.grid * params.grid;
+    let mut rng = Rng::new(0xD1E5);
+    let base: Vec<Vec<f64>> = (0..3)
+        .map(|_| (0..g2).map(|_| rng.gen_range(1000) as f64 * 1e-4).collect())
+        .collect();
+    let solve = |grids: &[Vec<f64>]| {
+        let net = build_network(&params, 25e-6, grids, VerticalTech::Miv);
+        solve_steady_state(&net)
+    };
+    let t0 = solve(&base);
+    for die in 0..3 {
+        for cell in [0usize, g2 / 2, g2 - 1] {
+            let mut bumped = base.clone();
+            bumped[die][cell] += 0.75;
+            let t1 = solve(&bumped);
+            for (i, (a, b)) in t0.iter().zip(&t1).enumerate() {
+                assert!(
+                    b >= &(a - 1e-6),
+                    "node {i} cooled ({a} -> {b}) after heating die {die} cell {cell}"
+                );
+            }
+            // And the bumped cell itself strictly heats.
+            let idx = (1 + die) * g2 + cell;
+            assert!(t1[idx] > t0[idx] + 1e-6, "heated cell must get hotter");
+        }
+    }
+}
+
+/// Acceptance: the shipped GNMT pipeline config reports per-stage power and
+/// stack temperatures on every grid point — the data `cube3d schedule
+/// --config configs/gnmt_pipeline.json` renders.
+#[test]
+fn gnmt_pipeline_config_carries_power_and_temperature() {
+    let cfg = ExperimentConfig::from_file(&configs_dir().join("gnmt_pipeline.json")).unwrap();
+    let workload = cfg.workload.resolve().unwrap();
+    let pts = sweep_partitions(
+        &workload,
+        &cfg.mac_budgets,
+        &cfg.tiers,
+        &cfg.dataflows,
+        &cfg.strategies,
+        cfg.vertical_tech,
+        &Tech::default(),
+        cfg.batches,
+        &Constraints::NONE,
+    );
+    assert!(!pts.is_empty());
+    for p in &pts {
+        let power = p.power_w.expect("schedule sweeps close the physical loop");
+        let peak = p.peak_temp_c.expect("heterogeneous stack solve ran");
+        assert!(power > 0.0 && power < 200.0, "power {power} W out of band");
+        assert!(peak > 45.0 && peak < 250.0, "peak {peak} °C out of band");
+        assert!(p.feasible, "unconstrained sweep points are vacuously feasible");
+    }
+}
+
+/// Acceptance: a `max_temp_c` constraint excludes at least one
+/// otherwise-Pareto-optimal point of a shipped config's design space, while
+/// the constrained front stays non-empty and verified feasible.
+#[test]
+fn max_temp_excludes_a_pareto_point_on_a_shipped_config() {
+    let cfg = ExperimentConfig::from_file(&configs_dir().join("rn0_tsv_sweep.json")).unwrap();
+    let g = cfg.workload.resolve().unwrap().primary_gemm();
+    let tech = Tech::default();
+    // First pass with an unreachable ceiling: identical metrics (the limit
+    // only classifies), but the thermal model runs so front temperatures
+    // are known.
+    let loose = Constraints { max_temp_c: Some(1e6), power_budget_w: None };
+    let pts = sweep_dataflows(
+        &[g],
+        &cfg.mac_budgets,
+        &cfg.tiers,
+        &cfg.dataflows,
+        cfg.vertical_tech,
+        &tech,
+        &loose,
+    );
+    let front = pareto_front(&pts);
+    assert!(front.len() >= 2, "need a front with a temperature spread");
+    let temps: Vec<f64> = front.iter().map(|p| p.peak_temp_c.unwrap()).collect();
+    let hottest = temps.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let coolest = temps.iter().cloned().fold(f64::INFINITY, f64::min);
+    assert!(
+        hottest > coolest + 0.1,
+        "shipped config's front spans temperatures ({coolest}..{hottest})"
+    );
+
+    // Second pass with the ceiling between the front's extremes: the hotter
+    // front points become infeasible and leave the constrained front.
+    let limit = 0.5 * (hottest + coolest);
+    let tight = Constraints { max_temp_c: Some(limit), power_budget_w: None };
+    let pts2 = sweep_dataflows(
+        &[g],
+        &cfg.mac_budgets,
+        &cfg.tiers,
+        &cfg.dataflows,
+        cfg.vertical_tech,
+        &tech,
+        &tight,
+    );
+    let cfront = constrained_front(&pts2);
+    assert!(!cfront.is_empty(), "a feasible design must survive");
+    assert!(
+        cfront.iter().all(|p| p.feasible && p.peak_temp_c.unwrap() <= limit),
+        "constrained front must be verified feasible"
+    );
+    let excluded: Vec<_> = front
+        .iter()
+        .filter(|p| p.peak_temp_c.unwrap() > limit)
+        .collect();
+    assert!(!excluded.is_empty(), "the ceiling must rule out a former front point");
+    for ex in excluded {
+        assert!(
+            !cfront.iter().any(|p| p.mac_budget == ex.mac_budget
+                && p.tiers == ex.tiers
+                && p.dataflow == ex.dataflow),
+            "excluded point {:?} reappeared on the constrained front",
+            (ex.mac_budget, ex.tiers)
+        );
+    }
+}
+
+/// Schedule-mode constraint flow: an absurd power budget marks every
+/// pipeline point infeasible; a permissive one accepts all — on the same
+/// shipped transformer config.
+#[test]
+fn schedule_constraints_classify_the_transformer_pipeline() {
+    let cfg =
+        ExperimentConfig::from_file(&configs_dir().join("transformer_pipeline.json")).unwrap();
+    let workload = cfg.workload.resolve().unwrap();
+    let run = |constraints: &Constraints| {
+        sweep_partitions(
+            &workload,
+            &cfg.mac_budgets,
+            &[cfg.tiers[0]],
+            &cfg.dataflows,
+            &[PartitionStrategy::Dp],
+            cfg.vertical_tech,
+            &Tech::default(),
+            cfg.batches,
+            constraints,
+        )
+    };
+    let tight = run(&Constraints { max_temp_c: None, power_budget_w: Some(1e-9) });
+    assert!(!tight.is_empty());
+    assert!(tight.iter().all(|p| !p.feasible));
+    let loose = run(&Constraints { max_temp_c: Some(1e6), power_budget_w: Some(1e6) });
+    assert!(loose.iter().all(|p| p.feasible));
+}

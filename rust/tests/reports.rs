@@ -128,8 +128,19 @@ fn ablation_four_way_coverage() {
 fn reproduce_all_writes_everything() {
     let d = out_dir("all");
     let reports = report::reproduce_all(&d).unwrap();
-    assert_eq!(reports.len(), 9);
-    for id in ["table1", "fig5", "fig6", "fig7", "table2", "fig8", "fig9", "ablation", "schedule"] {
+    assert_eq!(reports.len(), 10);
+    for id in [
+        "table1",
+        "fig5",
+        "fig6",
+        "fig7",
+        "table2",
+        "fig8",
+        "fig9",
+        "ablation",
+        "schedule",
+        "thermal_schedule",
+    ] {
         assert!(d.join(format!("{id}.csv")).exists(), "{id}.csv");
         assert!(d.join(format!("{id}.md")).exists(), "{id}.md");
     }

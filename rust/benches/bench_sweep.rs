@@ -1,0 +1,135 @@
+//! Bench SW: campaign engine throughput — points/sec of the **serial**
+//! one-point-at-a-time runner vs the **parallel** chunked runner, on the
+//! shipped sweep configs. This is the perf gate the `campaign/` refactor is
+//! held to: the parallel campaign must clearly beat serial on the
+//! `rn0_tsv_sweep` grid.
+//!
+//! Every sample runs on a **fresh** evaluator (cold memo cache) so the two
+//! modes pay identical model work and the comparison isolates the runner.
+//! Results are written to `BENCH_sweep.json` at the repository root — the
+//! checked-in copy is the perf trajectory; regenerate it with
+//! `cargo bench --bench bench_sweep` (values are machine-dependent; the
+//! file records the worker count it was measured with).
+
+use cube3d::campaign::{Campaign, CampaignMode};
+use cube3d::config::ExperimentConfig;
+use cube3d::eval::Evaluator;
+use cube3d::util::bench::{black_box, Bench};
+use cube3d::util::json::{obj, Json};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..")
+}
+
+/// A fresh evaluator matching what the campaign would pick for the mode —
+/// cold cache per sample, identical pipelines for serial and parallel.
+fn fresh_evaluator(mode: CampaignMode) -> Arc<Evaluator> {
+    Arc::new(match mode {
+        CampaignMode::Point => Evaluator::new(),
+        CampaignMode::Network => Evaluator::schedule_pipeline(),
+    })
+}
+
+struct ConfigRun {
+    name: &'static str,
+    points: usize,
+    serial_pts_per_s: f64,
+    parallel_pts_per_s: f64,
+}
+
+impl ConfigRun {
+    fn speedup(&self) -> f64 {
+        self.parallel_pts_per_s / self.serial_pts_per_s
+    }
+}
+
+fn bench_config(b: &mut Bench, name: &'static str, mode: CampaignMode) -> ConfigRun {
+    let path = repo_root().join("configs").join(name);
+    let cfg = ExperimentConfig::from_file(&path).unwrap_or_else(|e| panic!("{name}: {e}"));
+    let campaign = Campaign::from_config(&cfg, mode).expect("shipped config builds a campaign");
+    // Completed points per run (grid minus infeasible skips), for the
+    // points/sec normalization.
+    let points = campaign
+        .clone()
+        .with_evaluator(fresh_evaluator(mode))
+        .run()
+        .points
+        .len();
+    let stem = name.trim_end_matches(".json");
+    let serial = b
+        .run(&format!("campaign/{stem}_serial"), || {
+            let c = campaign.clone().with_evaluator(fresh_evaluator(mode));
+            black_box(c.run_serial());
+        })
+        .mean_s();
+    let parallel = b
+        .run(&format!("campaign/{stem}_parallel"), || {
+            let c = campaign.clone().with_evaluator(fresh_evaluator(mode));
+            black_box(c.run());
+        })
+        .mean_s();
+    let run = ConfigRun {
+        name,
+        points,
+        serial_pts_per_s: points as f64 / serial,
+        parallel_pts_per_s: points as f64 / parallel,
+    };
+    println!(
+        "  {stem}: {} points   serial {:.1} pts/s   parallel {:.1} pts/s   ({:.2}x)",
+        run.points,
+        run.serial_pts_per_s,
+        run.parallel_pts_per_s,
+        run.speedup()
+    );
+    run
+}
+
+fn main() {
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("== bench_sweep: campaign points/sec, serial vs parallel ({workers} workers) ==\n");
+    let mut b = Bench::default();
+
+    let runs = vec![
+        bench_config(&mut b, "rn0_tsv_sweep.json", CampaignMode::Point),
+        bench_config(&mut b, "gnmt_pipeline.json", CampaignMode::Network),
+    ];
+
+    let doc = obj([
+        ("bench", Json::Str("bench_sweep".to_string())),
+        (
+            "note",
+            Json::Str(
+                "campaign points/sec, serial vs parallel on fresh evaluators; \
+                 regenerate with `cargo bench --bench bench_sweep` (machine-dependent)"
+                    .to_string(),
+            ),
+        ),
+        ("populated", Json::Bool(true)),
+        ("workers", Json::Num(workers as f64)),
+        (
+            "configs",
+            Json::Arr(
+                runs.iter()
+                    .map(|r| {
+                        obj([
+                            ("config", Json::Str(r.name.to_string())),
+                            ("points", Json::Num(r.points as f64)),
+                            ("serial_points_per_sec", Json::Num(r.serial_pts_per_s)),
+                            ("parallel_points_per_sec", Json::Num(r.parallel_pts_per_s)),
+                            ("parallel_over_serial", Json::Num(r.speedup())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "samples",
+            Json::Arr(b.results().iter().map(|r| r.to_json()).collect()),
+        ),
+    ]);
+    let out = repo_root().join("BENCH_sweep.json");
+    std::fs::write(&out, doc.to_string_pretty() + "\n").expect("write BENCH_sweep.json");
+    println!("\nwrote {}", out.display());
+}

@@ -1,0 +1,148 @@
+//! [`Axis`]: one architectural dimension of a campaign grid, with the
+//! values swept along it.
+//!
+//! Every knob the paper (and the extensions layered on it) sweeps —
+//! MAC budget, stack height, vertical technology, §III-C dataflow,
+//! pipeline depth, partition strategy, physical constraint levels — is one
+//! enum variant here. Adding a sweep dimension means adding a variant (and
+//! a [`PointSpec`](super::PointSpec) field it overrides), not a fourth
+//! hand-rolled sweep function.
+
+use crate::dataflow::Dataflow;
+use crate::eval::Constraints;
+use crate::power::VerticalTech;
+use crate::schedule::PartitionStrategy;
+
+/// One swept dimension: the axis identity plus the ordered values it takes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Axis {
+    /// Total MAC budgets (`mac_budgets` config key).
+    MacBudget(Vec<u64>),
+    /// Stack heights (`tiers` config key).
+    Tiers(Vec<u64>),
+    /// Vertical interconnect technologies.
+    VerticalTech(Vec<VerticalTech>),
+    /// §III-C mappings (`dataflows` config key).
+    Dataflow(Vec<Dataflow>),
+    /// Pipeline depths in items (`batches`, schedule mode).
+    Batches(Vec<u64>),
+    /// Tier-partition strategies (`strategies`, schedule mode).
+    Strategy(Vec<PartitionStrategy>),
+    /// Physical feasibility levels (e.g. a ladder of power budgets).
+    Constraints(Vec<Constraints>),
+}
+
+impl Axis {
+    /// Short stable name used in point labels and progress output.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Axis::MacBudget(_) => "macs",
+            Axis::Tiers(_) => "tiers",
+            Axis::VerticalTech(_) => "vtech",
+            Axis::Dataflow(_) => "df",
+            Axis::Batches(_) => "batches",
+            Axis::Strategy(_) => "strategy",
+            Axis::Constraints(_) => "limits",
+        }
+    }
+
+    /// Number of values swept along this axis.
+    pub fn len(&self) -> usize {
+        match self {
+            Axis::MacBudget(v) => v.len(),
+            Axis::Tiers(v) => v.len(),
+            Axis::VerticalTech(v) => v.len(),
+            Axis::Dataflow(v) => v.len(),
+            Axis::Batches(v) => v.len(),
+            Axis::Strategy(v) => v.len(),
+            Axis::Constraints(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The `i`-th value on this axis (panics when out of range — the grid
+    /// iterator only decodes in-range indices).
+    pub fn value(&self, i: usize) -> AxisValue {
+        match self {
+            Axis::MacBudget(v) => AxisValue::MacBudget(v[i]),
+            Axis::Tiers(v) => AxisValue::Tiers(v[i]),
+            Axis::VerticalTech(v) => AxisValue::VerticalTech(v[i]),
+            Axis::Dataflow(v) => AxisValue::Dataflow(v[i]),
+            Axis::Batches(v) => AxisValue::Batches(v[i]),
+            Axis::Strategy(v) => AxisValue::Strategy(v[i]),
+            Axis::Constraints(v) => AxisValue::Constraints(v[i]),
+        }
+    }
+}
+
+/// One coordinate: a single value on one axis.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AxisValue {
+    MacBudget(u64),
+    Tiers(u64),
+    VerticalTech(VerticalTech),
+    Dataflow(Dataflow),
+    Batches(u64),
+    Strategy(PartitionStrategy),
+    Constraints(Constraints),
+}
+
+impl AxisValue {
+    /// Deterministic `name=value` fragment for point labels (ASCII, no
+    /// spaces — labels are the identity resumable JSONL runs match on).
+    pub fn label(&self) -> String {
+        match self {
+            AxisValue::MacBudget(b) => format!("macs={b}"),
+            AxisValue::Tiers(t) => format!("tiers={t}"),
+            AxisValue::VerticalTech(v) => format!("vtech={}", v.name().to_ascii_lowercase()),
+            AxisValue::Dataflow(d) => format!("df={}", d.short_name().to_ascii_lowercase()),
+            AxisValue::Batches(b) => format!("batches={b}"),
+            AxisValue::Strategy(s) => format!("strategy={}", s.name()),
+            AxisValue::Constraints(c) => {
+                let fmt = |v: Option<f64>| v.map_or("-".to_string(), |x| format!("{x}"));
+                format!("limits=t{},p{}", fmt(c.max_temp_c), fmt(c.power_budget_w))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axis_names_lens_and_values() {
+        let a = Axis::MacBudget(vec![4096, 32768]);
+        assert_eq!(a.name(), "macs");
+        assert_eq!(a.len(), 2);
+        assert!(!a.is_empty());
+        assert_eq!(a.value(1), AxisValue::MacBudget(32768));
+        assert!(Axis::Tiers(vec![]).is_empty());
+        assert_eq!(Axis::Dataflow(Dataflow::ALL.to_vec()).len(), 4);
+    }
+
+    #[test]
+    fn labels_are_stable_and_ascii() {
+        assert_eq!(AxisValue::MacBudget(4096).label(), "macs=4096");
+        assert_eq!(AxisValue::Tiers(8).label(), "tiers=8");
+        assert_eq!(AxisValue::VerticalTech(VerticalTech::Tsv).label(), "vtech=tsv");
+        assert_eq!(
+            AxisValue::Dataflow(Dataflow::DistributedOutputStationary).label(),
+            "df=dos"
+        );
+        assert_eq!(AxisValue::Strategy(PartitionStrategy::Greedy).label(), "strategy=greedy");
+        assert_eq!(AxisValue::Batches(32).label(), "batches=32");
+        let c = Constraints { max_temp_c: Some(105.0), power_budget_w: None };
+        assert_eq!(AxisValue::Constraints(c).label(), "limits=t105,p-");
+        for v in [
+            AxisValue::MacBudget(1),
+            AxisValue::VerticalTech(VerticalTech::Miv),
+            AxisValue::Constraints(Constraints::NONE),
+        ] {
+            assert!(v.label().is_ascii());
+        }
+    }
+}

@@ -1,0 +1,181 @@
+//! [`Grid`]: an ordered set of [`Axis`]es with a **lazy** cartesian
+//! iterator — grid points are decoded from a flat index on demand, so a
+//! billion-point campaign costs O(axes) memory until points are evaluated.
+//!
+//! Iteration order is the nested-loop order of the legacy sweep functions:
+//! the first axis is the outermost loop, the last axis the innermost —
+//! `dse::sweep_dataflows` is exactly `Grid[MacBudget, Tiers, Dataflow]`.
+
+use super::axis::{Axis, AxisValue};
+
+/// Ordered axis set defining a campaign's cartesian design space.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Grid {
+    axes: Vec<Axis>,
+}
+
+impl Grid {
+    pub fn new() -> Grid {
+        Grid { axes: Vec::new() }
+    }
+
+    /// Append an axis (builder style). Earlier axes iterate slower.
+    pub fn axis(mut self, axis: Axis) -> Grid {
+        self.axes.push(axis);
+        self
+    }
+
+    pub fn axes(&self) -> &[Axis] {
+        &self.axes
+    }
+
+    /// Total number of grid points: the product of the axis lengths
+    /// (1 for the empty grid — one point with no overrides; 0 when any
+    /// axis is empty).
+    pub fn n_points(&self) -> usize {
+        self.axes.iter().map(Axis::len).product()
+    }
+
+    /// Decode flat index `i` (row-major, last axis fastest) into one value
+    /// per axis. Panics when `i >= n_points()`.
+    pub fn point(&self, i: usize) -> Vec<AxisValue> {
+        assert!(i < self.n_points(), "grid index {i} out of range");
+        let mut values = vec![None; self.axes.len()];
+        let mut rest = i;
+        for (j, axis) in self.axes.iter().enumerate().rev() {
+            values[j] = Some(axis.value(rest % axis.len()));
+            rest /= axis.len();
+        }
+        values.into_iter().map(|v| v.expect("every axis decoded")).collect()
+    }
+
+    /// Lazy iterator over all points, in nested-loop order.
+    pub fn iter(&self) -> GridIter<'_> {
+        GridIter { grid: self, next: 0, total: self.n_points() }
+    }
+
+    /// The `name=value/...` label of a decoded point — the stable identity
+    /// resumable campaign runs match completed work on.
+    pub fn label(values: &[AxisValue]) -> String {
+        values
+            .iter()
+            .map(AxisValue::label)
+            .collect::<Vec<_>>()
+            .join("/")
+    }
+}
+
+/// One decoded grid point: its flat index and one value per axis.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GridPoint {
+    pub index: usize,
+    pub values: Vec<AxisValue>,
+}
+
+impl GridPoint {
+    pub fn label(&self) -> String {
+        Grid::label(&self.values)
+    }
+}
+
+/// Lazy cartesian iterator — O(axes) state, decodes on `next()`.
+pub struct GridIter<'a> {
+    grid: &'a Grid,
+    next: usize,
+    total: usize,
+}
+
+impl Iterator for GridIter<'_> {
+    type Item = GridPoint;
+
+    fn next(&mut self) -> Option<GridPoint> {
+        if self.next >= self.total {
+            return None;
+        }
+        let index = self.next;
+        self.next += 1;
+        Some(GridPoint { index, values: self.grid.point(index) })
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let rem = self.total - self.next;
+        (rem, Some(rem))
+    }
+}
+
+impl ExactSizeIterator for GridIter<'_> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::Dataflow;
+
+    fn grid() -> Grid {
+        Grid::new()
+            .axis(Axis::MacBudget(vec![10, 20]))
+            .axis(Axis::Tiers(vec![1, 2, 4]))
+            .axis(Axis::Dataflow(vec![
+                Dataflow::DistributedOutputStationary,
+                Dataflow::WeightStationary,
+            ]))
+    }
+
+    #[test]
+    fn lazy_iteration_matches_nested_loops() {
+        let g = grid();
+        assert_eq!(g.n_points(), 12);
+        let mut expected = Vec::new();
+        for &b in &[10u64, 20] {
+            for &t in &[1u64, 2, 4] {
+                for &df in &[Dataflow::DistributedOutputStationary, Dataflow::WeightStationary] {
+                    expected.push(vec![
+                        AxisValue::MacBudget(b),
+                        AxisValue::Tiers(t),
+                        AxisValue::Dataflow(df),
+                    ]);
+                }
+            }
+        }
+        let got: Vec<Vec<AxisValue>> = g.iter().map(|p| p.values).collect();
+        assert_eq!(got, expected, "iterator must replicate nested-loop order");
+        // Indices are sequential and size_hint is exact.
+        assert_eq!(g.iter().len(), 12);
+        for (i, p) in g.iter().enumerate() {
+            assert_eq!(p.index, i);
+        }
+    }
+
+    #[test]
+    fn labels_are_unique_and_deterministic() {
+        let g = grid();
+        let labels: Vec<String> = g.iter().map(|p| p.label()).collect();
+        assert_eq!(labels[0], "macs=10/tiers=1/df=dos");
+        assert_eq!(labels[11], "macs=20/tiers=4/df=ws");
+        let mut dedup = labels.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), labels.len(), "labels are the point identity");
+    }
+
+    #[test]
+    fn empty_and_degenerate_grids() {
+        // No axes: a single point with no overrides (the base spec).
+        let g = Grid::new();
+        assert_eq!(g.n_points(), 1);
+        let pts: Vec<GridPoint> = g.iter().collect();
+        assert_eq!(pts.len(), 1);
+        assert!(pts[0].values.is_empty());
+        // An empty axis collapses the whole grid.
+        let g = Grid::new().axis(Axis::Tiers(vec![]));
+        assert_eq!(g.n_points(), 0);
+        assert_eq!(g.iter().count(), 0);
+    }
+
+    #[test]
+    fn point_decode_round_trips_every_index() {
+        let g = grid();
+        for (i, p) in g.iter().enumerate() {
+            assert_eq!(g.point(i), p.values);
+        }
+    }
+}

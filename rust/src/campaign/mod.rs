@@ -1,0 +1,37 @@
+//! Campaign engine: the one design-space-exploration substrate every sweep
+//! family runs on.
+//!
+//! The paper's central results (§IV–V) are cross-products of architectural
+//! axes — MAC budget × stack height × vertical technology × §III-C dataflow
+//! × (for network schedules) partition strategy and pipeline depth — and
+//! the repo used to hold one hand-rolled nested loop per product shape.
+//! This module replaces that trio with one generic engine:
+//!
+//! * [`Axis`] — one swept dimension (`enum` over every architectural knob;
+//!   a new sweep dimension is one new variant, not a new sweep function).
+//! * [`Grid`] — an ordered axis set with a **lazy** cartesian iterator
+//!   (O(axes) memory however large the product) and deterministic
+//!   `name=value/...` point labels.
+//! * [`Campaign`] — streams grid points through the shared
+//!   [`crate::eval::Evaluator`] in chunked parallel batches, maintains an
+//!   **incremental** Pareto front ([`crate::dse::ParetoSet`]: insert-time
+//!   dominance instead of a post-hoc pass over a materialized `Vec`), and
+//!   optionally streams each completed point as one JSONL line
+//!   ([`Campaign::run_streaming`]) — restart the same campaign on the same
+//!   file and every completed point is skipped, with the final front
+//!   bit-identical to an uninterrupted run.
+//!
+//! The legacy sweep entry points (`dse::sweep`, `dse::sweep_dataflows`,
+//! `dse::sweep_partitions`) are thin campaign instances, and the CLI's
+//! `sweep`/`pareto`/`schedule --config`/`dataflows` subcommands all build
+//! their campaign through one [`Campaign::from_config`] path.
+
+mod axis;
+mod grid;
+mod point;
+mod runner;
+
+pub use axis::{Axis, AxisValue};
+pub use grid::{Grid, GridIter, GridPoint};
+pub use point::{CampaignPoint, PointSpec, PointView};
+pub use runner::{dse_view, schedule_view, Campaign, CampaignMode, CampaignOutcome};

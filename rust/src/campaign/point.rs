@@ -1,0 +1,360 @@
+//! [`PointSpec`] — the fully resolved coordinates of one grid point — and
+//! [`CampaignPoint`] — one evaluated, labelled result.
+//!
+//! The legacy typed point structs ([`DsePoint`], [`SchedulePoint`]) are
+//! *views* over a campaign point: the campaign evaluates and persists
+//! generic points, and consumers read the typed view their sweep family
+//! produces. A point's JSON form is one JSONL line of a resumable campaign
+//! run; `from_json(to_json(p)) == p` round-trips bit-exactly (the JSON
+//! writer prints `f64`s in Rust's shortest round-trip form), which is what
+//! lets a resumed run reproduce the exact front of a clean one.
+
+use crate::config::{parse_dataflow, parse_strategy, parse_vtech};
+use crate::dataflow::Dataflow;
+use crate::dse::{DsePoint, SchedulePoint};
+use crate::eval::Constraints;
+use crate::power::VerticalTech;
+use crate::schedule::PartitionStrategy;
+use crate::util::json::{obj, opt_num, Json};
+use crate::workloads::Gemm;
+use anyhow::{anyhow, bail, Result};
+
+use super::axis::AxisValue;
+
+/// The fully resolved coordinates of one grid point: the campaign's base
+/// values with the point's axis values applied on top.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PointSpec {
+    pub mac_budget: u64,
+    pub tiers: u64,
+    pub vtech: VerticalTech,
+    pub dataflow: Dataflow,
+    /// Pipeline depth in items (schedule mode).
+    pub batches: u64,
+    /// Tier-partition strategy (schedule mode).
+    pub strategy: PartitionStrategy,
+    pub constraints: Constraints,
+}
+
+impl Default for PointSpec {
+    /// Matches the [`crate::eval::ScenarioBuilder`] defaults.
+    fn default() -> Self {
+        PointSpec {
+            mac_budget: 1 << 18,
+            tiers: 4,
+            vtech: VerticalTech::Tsv,
+            dataflow: Dataflow::DistributedOutputStationary,
+            batches: 16,
+            strategy: PartitionStrategy::Dp,
+            constraints: Constraints::NONE,
+        }
+    }
+}
+
+impl PointSpec {
+    /// Override the field the axis value addresses.
+    pub fn apply(&mut self, v: AxisValue) {
+        match v {
+            AxisValue::MacBudget(b) => self.mac_budget = b,
+            AxisValue::Tiers(t) => self.tiers = t,
+            AxisValue::VerticalTech(vt) => self.vtech = vt,
+            AxisValue::Dataflow(df) => self.dataflow = df,
+            AxisValue::Batches(b) => self.batches = b,
+            AxisValue::Strategy(s) => self.strategy = s,
+            AxisValue::Constraints(c) => self.constraints = c,
+        }
+    }
+
+    /// The spec with every value of one grid point applied.
+    pub fn with_values(mut self, values: &[AxisValue]) -> PointSpec {
+        for &v in values {
+            self.apply(v);
+        }
+        self
+    }
+}
+
+/// The typed result a campaign point carries: the per-layer DSE view or the
+/// whole-network schedule view — the same structs the legacy sweep families
+/// returned, now one enum over a shared generic point.
+#[derive(Debug, Clone)]
+pub enum PointView {
+    Dse(DsePoint),
+    Schedule(SchedulePoint),
+}
+
+/// One evaluated grid point: a stable label (its identity in resumable
+/// JSONL runs) plus the typed metric view.
+#[derive(Debug, Clone)]
+pub struct CampaignPoint {
+    pub label: String,
+    pub view: PointView,
+}
+
+fn get_u64(j: &Json, key: &str) -> Result<u64> {
+    j.get(key)
+        .and_then(Json::as_u64)
+        .ok_or_else(|| anyhow!("campaign point field '{key}' must be a non-negative integer"))
+}
+
+fn get_f64(j: &Json, key: &str) -> Result<f64> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("campaign point field '{key}' must be a number"))
+}
+
+fn get_opt_f64(j: &Json, key: &str) -> Result<Option<f64>> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => v
+            .as_f64()
+            .map(Some)
+            .ok_or_else(|| anyhow!("campaign point field '{key}' must be a number or null")),
+    }
+}
+
+fn get_str<'a>(j: &'a Json, key: &str) -> Result<&'a str> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("campaign point field '{key}' must be a string"))
+}
+
+fn get_bool(j: &Json, key: &str) -> Result<bool> {
+    j.get(key)
+        .and_then(Json::as_bool)
+        .ok_or_else(|| anyhow!("campaign point field '{key}' must be a boolean"))
+}
+
+impl CampaignPoint {
+    /// The DSE view, when this campaign evaluated per-layer design points.
+    pub fn dse(&self) -> Option<&DsePoint> {
+        match &self.view {
+            PointView::Dse(p) => Some(p),
+            PointView::Schedule(_) => None,
+        }
+    }
+
+    /// The schedule view, when this campaign evaluated network pipelines.
+    pub fn schedule(&self) -> Option<&SchedulePoint> {
+        match &self.view {
+            PointView::Schedule(p) => Some(p),
+            PointView::Dse(_) => None,
+        }
+    }
+
+    /// True iff the point satisfied its campaign's constraints.
+    pub fn feasible(&self) -> bool {
+        match &self.view {
+            PointView::Dse(p) => p.feasible,
+            PointView::Schedule(p) => p.feasible,
+        }
+    }
+
+    /// One JSONL line of a campaign result stream. Integer metrics ride in
+    /// JSON numbers, exact up to 2^53 (guarded below) — cycle counts beyond
+    /// that (~3 months of a GHz clock on one point) are outside the
+    /// model's regime.
+    pub fn to_json(&self) -> Json {
+        let num = |v: u64| {
+            debug_assert!(v <= (1u64 << 53), "u64 metric {v} exceeds exact f64 range");
+            Json::Num(v as f64)
+        };
+        match &self.view {
+            PointView::Dse(p) => obj([
+                ("label", Json::Str(self.label.clone())),
+                ("kind", Json::Str("dse".to_string())),
+                ("m", num(p.workload.m)),
+                ("n", num(p.workload.n)),
+                ("k", num(p.workload.k)),
+                ("dataflow", Json::Str(p.dataflow.short_name().to_ascii_lowercase())),
+                ("mac_budget", num(p.mac_budget)),
+                ("tiers", num(p.tiers)),
+                ("vtech", Json::Str(p.vtech.name().to_ascii_lowercase())),
+                ("cycles", num(p.cycles)),
+                ("speedup_vs_2d", Json::Num(p.speedup_vs_2d)),
+                ("area_m2", Json::Num(p.area_m2)),
+                ("perf_per_area_vs_2d", Json::Num(p.perf_per_area_vs_2d)),
+                ("power_w", Json::Num(p.power_w)),
+                ("peak_temp_c", opt_num(p.peak_temp_c)),
+                ("feasible", Json::Bool(p.feasible)),
+            ]),
+            PointView::Schedule(p) => obj([
+                ("label", Json::Str(self.label.clone())),
+                ("kind", Json::Str("schedule".to_string())),
+                ("mac_budget", num(p.mac_budget)),
+                ("tiers", num(p.tiers)),
+                ("dataflow", Json::Str(p.dataflow.short_name().to_ascii_lowercase())),
+                ("strategy", Json::Str(p.strategy.name().to_string())),
+                ("stages", num(p.stages as u64)),
+                ("interval_cycles", num(p.interval_cycles)),
+                ("latency_cycles", num(p.latency_cycles)),
+                ("throughput_per_s", Json::Num(p.throughput_per_s)),
+                ("bottleneck_stage", num(p.bottleneck_stage as u64)),
+                ("vertical_traffic_bytes", num(p.vertical_traffic_bytes)),
+                ("speedup_vs_2d", Json::Num(p.speedup_vs_2d)),
+                ("power_w", opt_num(p.power_w)),
+                ("peak_temp_c", opt_num(p.peak_temp_c)),
+                ("feasible", Json::Bool(p.feasible)),
+            ]),
+        }
+    }
+
+    /// Parse one JSONL line back into a point (exact inverse of
+    /// [`CampaignPoint::to_json`]).
+    pub fn from_json(j: &Json) -> Result<CampaignPoint> {
+        let label = get_str(j, "label")?.to_string();
+        let view = match get_str(j, "kind")? {
+            "dse" => PointView::Dse(DsePoint {
+                workload: Gemm::new(get_u64(j, "m")?, get_u64(j, "n")?, get_u64(j, "k")?),
+                dataflow: parse_dataflow(get_str(j, "dataflow")?)?,
+                mac_budget: get_u64(j, "mac_budget")?,
+                tiers: get_u64(j, "tiers")?,
+                vtech: parse_vtech(get_str(j, "vtech")?)?,
+                cycles: get_u64(j, "cycles")?,
+                speedup_vs_2d: get_f64(j, "speedup_vs_2d")?,
+                area_m2: get_f64(j, "area_m2")?,
+                perf_per_area_vs_2d: get_f64(j, "perf_per_area_vs_2d")?,
+                power_w: get_f64(j, "power_w")?,
+                peak_temp_c: get_opt_f64(j, "peak_temp_c")?,
+                feasible: get_bool(j, "feasible")?,
+            }),
+            "schedule" => PointView::Schedule(SchedulePoint {
+                mac_budget: get_u64(j, "mac_budget")?,
+                tiers: get_u64(j, "tiers")?,
+                dataflow: parse_dataflow(get_str(j, "dataflow")?)?,
+                strategy: parse_strategy(get_str(j, "strategy")?)?,
+                stages: get_u64(j, "stages")? as usize,
+                interval_cycles: get_u64(j, "interval_cycles")?,
+                latency_cycles: get_u64(j, "latency_cycles")?,
+                throughput_per_s: get_f64(j, "throughput_per_s")?,
+                bottleneck_stage: get_u64(j, "bottleneck_stage")? as usize,
+                vertical_traffic_bytes: get_u64(j, "vertical_traffic_bytes")?,
+                speedup_vs_2d: get_f64(j, "speedup_vs_2d")?,
+                power_w: get_opt_f64(j, "power_w")?,
+                peak_temp_c: get_opt_f64(j, "peak_temp_c")?,
+                feasible: get_bool(j, "feasible")?,
+            }),
+            other => bail!("unknown campaign point kind '{other}' (dse|schedule)"),
+        };
+        Ok(CampaignPoint { label, view })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dse_point() -> CampaignPoint {
+        CampaignPoint {
+            label: "macs=4096/tiers=2/df=dos".to_string(),
+            view: PointView::Dse(DsePoint {
+                workload: Gemm::new(64, 147, 12100),
+                dataflow: Dataflow::DistributedOutputStationary,
+                mac_budget: 4096,
+                tiers: 2,
+                vtech: VerticalTech::Miv,
+                cycles: 123456,
+                speedup_vs_2d: 1.9182817349382347,
+                area_m2: 1.2345e-6,
+                perf_per_area_vs_2d: 1.7320508075688772,
+                power_w: 3.141592653589793,
+                peak_temp_c: None,
+                feasible: true,
+            }),
+        }
+    }
+
+    fn schedule_point() -> CampaignPoint {
+        CampaignPoint {
+            label: "macs=65536/tiers=4/df=ws/strategy=greedy".to_string(),
+            view: PointView::Schedule(SchedulePoint {
+                mac_budget: 65536,
+                tiers: 4,
+                dataflow: Dataflow::WeightStationary,
+                strategy: PartitionStrategy::Greedy,
+                stages: 3,
+                interval_cycles: 9876,
+                latency_cycles: 111_222,
+                throughput_per_s: 101_234.56789012345,
+                bottleneck_stage: 1,
+                vertical_traffic_bytes: 4096,
+                speedup_vs_2d: 2.718281828459045,
+                power_w: Some(7.77),
+                peak_temp_c: Some(88.12345678901234),
+                feasible: false,
+            }),
+        }
+    }
+
+    #[test]
+    fn json_round_trips_bit_exactly() {
+        for p in [dse_point(), schedule_point()] {
+            let line = p.to_json().to_string_compact();
+            let back = CampaignPoint::from_json(&Json::parse(&line).unwrap()).unwrap();
+            assert_eq!(back.label, p.label);
+            match (&p.view, &back.view) {
+                (PointView::Dse(a), PointView::Dse(b)) => {
+                    assert_eq!(a.workload, b.workload);
+                    assert_eq!(a.cycles, b.cycles);
+                    assert_eq!(a.speedup_vs_2d.to_bits(), b.speedup_vs_2d.to_bits());
+                    assert_eq!(a.area_m2.to_bits(), b.area_m2.to_bits());
+                    assert_eq!(a.power_w.to_bits(), b.power_w.to_bits());
+                    assert_eq!(a.peak_temp_c, b.peak_temp_c);
+                    assert_eq!(a.feasible, b.feasible);
+                }
+                (PointView::Schedule(a), PointView::Schedule(b)) => {
+                    assert_eq!(a.interval_cycles, b.interval_cycles);
+                    assert_eq!(a.throughput_per_s.to_bits(), b.throughput_per_s.to_bits());
+                    assert_eq!(a.power_w, b.power_w);
+                    assert_eq!(
+                        a.peak_temp_c.unwrap().to_bits(),
+                        b.peak_temp_c.unwrap().to_bits()
+                    );
+                    assert_eq!(a.strategy, b.strategy);
+                    assert_eq!(a.feasible, b.feasible);
+                }
+                _ => panic!("round trip changed the point kind"),
+            }
+        }
+    }
+
+    #[test]
+    fn spec_applies_axis_values_over_base() {
+        let spec = PointSpec::default().with_values(&[
+            AxisValue::MacBudget(4096),
+            AxisValue::Tiers(8),
+            AxisValue::Dataflow(Dataflow::InputStationary),
+            AxisValue::Strategy(PartitionStrategy::Greedy),
+        ]);
+        assert_eq!(spec.mac_budget, 4096);
+        assert_eq!(spec.tiers, 8);
+        assert_eq!(spec.dataflow, Dataflow::InputStationary);
+        assert_eq!(spec.strategy, PartitionStrategy::Greedy);
+        // Untouched fields keep the base values.
+        assert_eq!(spec.vtech, VerticalTech::Tsv);
+        assert_eq!(spec.batches, 16);
+        assert!(spec.constraints.is_empty());
+    }
+
+    #[test]
+    fn views_are_typed_accessors() {
+        let d = dse_point();
+        assert!(d.dse().is_some() && d.schedule().is_none());
+        assert!(d.feasible());
+        let s = schedule_point();
+        assert!(s.schedule().is_some() && s.dse().is_none());
+        assert!(!s.feasible());
+    }
+
+    #[test]
+    fn malformed_lines_error_cleanly() {
+        for bad in [
+            r#"{"kind": "dse"}"#,
+            r#"{"label": "x", "kind": "nope"}"#,
+            r#"{"label": "x", "kind": "dse", "m": "many"}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(CampaignPoint::from_json(&j).is_err(), "{bad}");
+        }
+    }
+}

@@ -40,6 +40,7 @@
 //! Unknown keys are rejected so typos fail loudly. A config expands into
 //! [`crate::eval::Scenario`]s via [`crate::eval::Scenario::expand_config`].
 
+use crate::campaign::{Axis, CampaignMode, Grid};
 use crate::dataflow::Dataflow;
 use crate::eval::Constraints;
 use crate::power::VerticalTech;
@@ -409,6 +410,22 @@ impl ExperimentConfig {
         obj(items)
     }
 
+    /// The config's grid keys as one campaign [`Grid`] — the single place
+    /// `mac_budgets`/`tiers`/`dataflows` (and, in network mode,
+    /// `strategies`) become sweep axes. Every `cube3d` subcommand that
+    /// sweeps builds its campaign from this grid, so the config parses into
+    /// axes exactly once.
+    pub fn grid(&self, mode: CampaignMode) -> Grid {
+        let grid = Grid::new()
+            .axis(Axis::MacBudget(self.mac_budgets.clone()))
+            .axis(Axis::Tiers(self.tiers.clone()))
+            .axis(Axis::Dataflow(self.dataflows.clone()));
+        match mode {
+            CampaignMode::Point => grid,
+            CampaignMode::Network => grid.axis(Axis::Strategy(self.strategies.clone())),
+        }
+    }
+
     /// Sanity-check ranges and resolve the workload spec.
     pub fn validate(&self) -> Result<()> {
         if self.mac_budgets.is_empty() || self.tiers.is_empty() {
@@ -484,6 +501,23 @@ pub fn parse_dataflow(s: &str) -> Result<Dataflow> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn grid_keys_parse_once_into_axes() {
+        let doc = Json::parse(
+            r#"{"mac_budgets": [64, 128], "tiers": [1, 2, 4],
+                "dataflows": ["dos", "ws"], "strategies": ["dp", "greedy"]}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&doc).unwrap();
+        let point = cfg.grid(CampaignMode::Point);
+        assert_eq!(point.axes().len(), 3);
+        assert_eq!(point.n_points(), 12, "2 budgets × 3 tiers × 2 dataflows");
+        let network = cfg.grid(CampaignMode::Network);
+        assert_eq!(network.axes().len(), 4);
+        assert_eq!(network.n_points(), 24, "…× 2 strategies");
+        assert!(matches!(network.axes()[3], Axis::Strategy(_)));
+    }
 
     #[test]
     fn parses_full_config() {

@@ -3,14 +3,18 @@
 //! reproductions, the dOS-vs-scale-out ablation and the router's design
 //! choices.
 //!
-//! Since the `eval` redesign this module is a thin, typed wrapper over the
-//! shared [`crate::eval::Evaluator`]: every point goes through the cached
-//! scenario pipeline, so overlapping sweeps (and the router, and the CLI)
-//! never re-optimize the same design point — and since the dataflow became
-//! a scenario axis, the four-way §III-C ablation is just a wider grid.
+//! Since the `campaign` refactor the three sweep families are thin
+//! [`crate::campaign::Campaign`] instances: every grid is a
+//! [`crate::campaign::Grid`] of [`crate::campaign::Axis`]es streamed
+//! through the shared [`crate::eval::Evaluator`] in parallel chunks, and
+//! the typed point structs ([`DsePoint`], [`SchedulePoint`]) are views over
+//! the campaign's generic points. These wrappers keep the legacy
+//! signatures (and bit-identical results — pinned by `tests/campaign.rs`)
+//! for callers that want a typed `Vec` rather than a streaming run; use a
+//! `Campaign` directly for resumable JSONL streams and incremental fronts.
 //!
 //! Whole-network schedules are a sweep axis too: [`sweep_partitions`] grids
-//! budgets × tiers × partition strategies through
+//! budgets × tiers × dataflows × partition strategies through
 //! [`crate::eval::Evaluator::evaluate_network`] (physical closure included:
 //! every schedule point carries stack power and the heterogeneous thermal
 //! solve), and [`partition_ablation`] pits the exact DP partitioner against
@@ -26,19 +30,18 @@ mod pareto;
 
 pub use pareto::{
     constrained_front, constrained_schedule_front, dominates, dominates_by, pareto_front,
-    pareto_front_by, pareto_front_feasible_by, schedule_front, Objective, DSE_OBJECTIVES,
-    SCHEDULE_OBJECTIVES,
+    pareto_front_by, pareto_front_feasible_by, schedule_front, Objective, ParetoSet,
+    DSE_OBJECTIVES, SCHEDULE_OBJECTIVES,
 };
 
+use crate::campaign::{dse_view, Axis, Campaign, CampaignMode, Grid, PointSpec};
 use crate::dataflow::Dataflow;
 use crate::eval::{
-    shared_evaluator, shared_full_evaluator, shared_performance_evaluator,
-    shared_schedule_evaluator, Constraints, Metrics, Scenario,
+    shared_evaluator, shared_performance_evaluator, Constraints, Scenario, TierChoice,
 };
 use crate::power::{Tech, VerticalTech};
-use crate::schedule::{NetworkMetrics, PartitionStrategy, ScheduleSpec};
+use crate::schedule::{PartitionStrategy, ScheduleSpec};
 use crate::workloads::{Gemm, Workload};
-use std::sync::Arc;
 
 /// One evaluated design point.
 #[derive(Debug, Clone)]
@@ -67,46 +70,6 @@ pub struct DsePoint {
     pub feasible: bool,
 }
 
-fn point_scenario(g: &Gemm, mac_budget: u64, tiers: u64, vtech: VerticalTech, tech: &Tech) -> Scenario {
-    Scenario::design_point(
-        *g,
-        mac_budget,
-        tiers,
-        Dataflow::DistributedOutputStationary,
-        vtech,
-        tech.clone(),
-    )
-    .expect("DSE grid point must be a valid scenario")
-}
-
-fn to_dse_point(s: &Scenario, m: &Metrics) -> DsePoint {
-    DsePoint {
-        workload: s.workload.primary_gemm(),
-        dataflow: s.dataflow,
-        mac_budget: s.mac_budget,
-        tiers: m.tiers.expect("analytical model in pipeline"),
-        vtech: s.vtech,
-        cycles: m.cycles_3d.expect("analytical model in pipeline"),
-        speedup_vs_2d: m.speedup_vs_2d.expect("optimized point has a 2D baseline"),
-        area_m2: m.area_m2.expect("area model in pipeline"),
-        perf_per_area_vs_2d: m.perf_per_area_vs_2d.expect("area model in pipeline"),
-        power_w: m.power_w().expect("power model in pipeline"),
-        peak_temp_c: m.peak_temp_c(),
-        feasible: s.constraints.is_satisfied(m.power_w(), m.peak_temp_c()),
-    }
-}
-
-/// The shared evaluator a constrained sweep needs: temperature limits pull
-/// in the (expensive) thermal model, everything else runs the standard
-/// analytical + area + power pipeline.
-fn evaluator_for(constraints: &Constraints) -> Arc<crate::eval::Evaluator> {
-    if constraints.max_temp_c.is_some() {
-        shared_full_evaluator()
-    } else {
-        shared_evaluator()
-    }
-}
-
 /// Evaluate a single design point (runtime, area, power, ratios) through the
 /// shared cached evaluator.
 ///
@@ -120,8 +83,16 @@ pub fn evaluate_point(
     vtech: VerticalTech,
     tech: &Tech,
 ) -> DsePoint {
-    let s = point_scenario(g, mac_budget, tiers, vtech, tech);
-    to_dse_point(&s, &shared_evaluator().evaluate(&s))
+    let s = Scenario::design_point(
+        *g,
+        mac_budget,
+        tiers,
+        Dataflow::DistributedOutputStationary,
+        vtech,
+        tech.clone(),
+    )
+    .expect("DSE grid point must be a valid scenario");
+    dse_view(&s, &shared_evaluator().evaluate(&s))
 }
 
 /// Full cartesian sweep under the default dOS dataflow, parallel over
@@ -148,12 +119,12 @@ pub fn sweep(
 
 /// Full cartesian sweep with the dataflow as an explicit grid dimension —
 /// the §III-C four-way comparison (and the Pareto front over it) is
-/// `sweep_dataflows(…, &Dataflow::ALL, …)`. Grid points that don't build as
-/// scenarios are skipped, as in [`sweep`]; points violating `constraints`
-/// are kept but *marked* infeasible (`DsePoint::feasible`), so the
-/// constrained fronts can exclude them while reports still show what was
-/// ruled out. A `max_temp_c` limit routes the sweep through the full
-/// evaluator (thermal model included).
+/// `sweep_dataflows(…, &Dataflow::ALL, …)`. A thin point-mode
+/// [`Campaign`]: grid points that don't build as scenarios are skipped;
+/// points violating `constraints` are kept but *marked* infeasible
+/// (`DsePoint::feasible`), so the constrained fronts can exclude them while
+/// reports still show what was ruled out. A `max_temp_c` limit routes the
+/// campaign through the full evaluator (thermal model included).
 #[allow(clippy::too_many_arguments)]
 pub fn sweep_dataflows(
     workloads: &[Gemm],
@@ -164,36 +135,18 @@ pub fn sweep_dataflows(
     tech: &Tech,
     constraints: &Constraints,
 ) -> Vec<DsePoint> {
-    let mut scenarios: Vec<Scenario> = Vec::new();
-    for &g in workloads {
-        for &b in budgets {
-            for &t in tiers {
-                for &df in dataflows {
-                    // Buildability is exactly "builds as a scenario" — one
-                    // source of truth (ScenarioBuilder::build) instead of a
-                    // hand-copied predicate that could drift from it.
-                    let built = Scenario::builder()
-                        .gemm(g)
-                        .mac_budget(b)
-                        .tiers(t)
-                        .dataflow(df)
-                        .vtech(vtech)
-                        .tech(tech.clone())
-                        .constraints(*constraints)
-                        .build();
-                    if let Ok(s) = built {
-                        scenarios.push(s);
-                    }
-                }
-            }
-        }
-    }
-    let metrics = evaluator_for(constraints).evaluate_batch(&scenarios);
-    scenarios
-        .iter()
-        .zip(&metrics)
-        .map(|(s, m)| to_dse_point(s, m))
-        .collect()
+    Campaign::new(
+        workloads.iter().map(|&g| Workload::gemm(g)).collect(),
+        Grid::new()
+            .axis(Axis::MacBudget(budgets.to_vec()))
+            .axis(Axis::Tiers(tiers.to_vec()))
+            .axis(Axis::Dataflow(dataflows.to_vec())),
+        CampaignMode::Point,
+    )
+    .base(PointSpec { vtech, constraints: *constraints, ..PointSpec::default() })
+    .tech(tech.clone())
+    .run()
+    .dse_points()
 }
 
 /// One row of the dOS-vs-scale-out ablation: a workload's optimized 3D
@@ -239,13 +192,15 @@ pub fn dataflow_ablation(workloads: &[Gemm], mac_budget: u64, tiers: u64) -> Vec
     for &g in workloads {
         for df in Dataflow::ALL {
             scenarios.push(
-                Scenario::builder()
-                    .gemm(g)
-                    .mac_budget(mac_budget)
-                    .tiers(tiers)
-                    .dataflow(df)
-                    .build()
-                    .expect("ablation grid point must be a valid scenario"),
+                Scenario::design_point(
+                    g,
+                    mac_budget,
+                    tiers,
+                    df,
+                    VerticalTech::Tsv,
+                    Tech::default(),
+                )
+                .expect("ablation grid point must be a valid scenario"),
             );
         }
     }
@@ -300,40 +255,17 @@ pub struct SchedulePoint {
     pub feasible: bool,
 }
 
-fn to_schedule_point(
-    budget: u64,
-    dataflow: Dataflow,
-    m: &NetworkMetrics,
-    constraints: &Constraints,
-) -> SchedulePoint {
-    SchedulePoint {
-        mac_budget: budget,
-        tiers: m.tiers,
-        dataflow,
-        strategy: m.strategy,
-        stages: m.stages.len(),
-        interval_cycles: m.interval_cycles,
-        latency_cycles: m.latency_cycles,
-        throughput_per_s: m.throughput_per_s,
-        bottleneck_stage: m.bottleneck_stage,
-        vertical_traffic_bytes: m.vertical_traffic_bytes,
-        speedup_vs_2d: m.speedup_vs_2d,
-        power_w: m.power_w,
-        peak_temp_c: m.peak_temp_c(),
-        feasible: constraints.is_satisfied(m.power_w, m.peak_temp_c()),
-    }
-}
-
 /// Schedule-mode sweep: the workload pipelined on every budget × tier ×
-/// dataflow × strategy grid point, through the shared *schedule* evaluator
-/// — per-stage costs are memoized design points shared across the whole
-/// grid, and every grid point closes the physical loop (stack power, the
-/// heterogeneous thermal solve; per-layer point thermals are skipped as
-/// nothing reads them), so "fastest thermally-feasible stack" is a directly
-/// sweepable question. The dataflow crosses the grid exactly as in
-/// [`sweep_dataflows`] — per-stage designs resolve under it. Grid points
-/// that don't build are skipped, as in [`sweep`]; points violating
-/// `constraints` are kept and marked (`SchedulePoint::feasible`).
+/// dataflow × strategy grid point — a thin network-mode [`Campaign`] over
+/// the shared *schedule* evaluator. Per-stage costs are memoized design
+/// points shared across the whole grid, and every grid point closes the
+/// physical loop (stack power, the heterogeneous thermal solve; per-layer
+/// point thermals are skipped as nothing reads them), so "fastest
+/// thermally-feasible stack" is a directly sweepable question. The dataflow
+/// crosses the grid exactly as in [`sweep_dataflows`] — per-stage designs
+/// resolve under it. Grid points that don't build are skipped, as in
+/// [`sweep`]; points violating `constraints` are kept and marked
+/// (`SchedulePoint::feasible`).
 #[allow(clippy::too_many_arguments)]
 pub fn sweep_partitions(
     workload: &Workload,
@@ -346,30 +278,19 @@ pub fn sweep_partitions(
     batches: u64,
     constraints: &Constraints,
 ) -> Vec<SchedulePoint> {
-    let ev = shared_schedule_evaluator();
-    let mut out = Vec::new();
-    for &b in budgets {
-        for &t in tiers {
-            for &df in dataflows {
-                for &strategy in strategies {
-                    let built = Scenario::builder()
-                        .workload(workload.clone())
-                        .mac_budget(b)
-                        .tiers(t)
-                        .dataflow(df)
-                        .vtech(vtech)
-                        .tech(tech.clone())
-                        .schedule(ScheduleSpec { strategy, batches })
-                        .constraints(*constraints)
-                        .build();
-                    let Ok(s) = built else { continue };
-                    let Ok(m) = ev.evaluate_network(&s) else { continue };
-                    out.push(to_schedule_point(b, df, &m, constraints));
-                }
-            }
-        }
-    }
-    out
+    Campaign::new(
+        vec![workload.clone()],
+        Grid::new()
+            .axis(Axis::MacBudget(budgets.to_vec()))
+            .axis(Axis::Tiers(tiers.to_vec()))
+            .axis(Axis::Dataflow(dataflows.to_vec()))
+            .axis(Axis::Strategy(strategies.to_vec())),
+        CampaignMode::Network,
+    )
+    .base(PointSpec { vtech, batches, constraints: *constraints, ..PointSpec::default() })
+    .tech(tech.clone())
+    .run()
+    .schedule_points()
 }
 
 /// Partition-strategy ablation: DP vs greedy bottleneck at each tier count.
@@ -397,13 +318,16 @@ pub fn partition_ablation(
         .iter()
         .filter_map(|&t| {
             let interval_of = |strategy: PartitionStrategy| -> Option<u64> {
-                let s = Scenario::builder()
-                    .workload(workload.clone())
-                    .mac_budget(mac_budget)
-                    .tiers(t)
-                    .schedule(ScheduleSpec { strategy, batches })
-                    .build()
-                    .ok()?;
+                let s = Scenario::network_point(
+                    workload.clone(),
+                    mac_budget,
+                    t,
+                    Dataflow::DistributedOutputStationary,
+                    VerticalTech::Tsv,
+                    Tech::default(),
+                    ScheduleSpec { strategy, batches },
+                )
+                .ok()?;
                 ev.evaluate_network(&s).ok().map(|m| m.interval_cycles)
             };
             let dp = interval_of(PartitionStrategy::Dp)?;
@@ -425,12 +349,15 @@ pub fn optimal_tiers_sweep(workloads: &[Gemm], budgets: &[u64], max_tiers: u64) 
     for &g in workloads {
         for &b in budgets {
             scenarios.push(
-                Scenario::builder()
-                    .gemm(g)
-                    .mac_budget(b)
-                    .tiers_auto(max_tiers)
-                    .build()
-                    .expect("auto-tier scenario is always valid"),
+                Scenario::design_point(
+                    g,
+                    b,
+                    TierChoice::Auto { max_tiers },
+                    Dataflow::DistributedOutputStationary,
+                    VerticalTech::Tsv,
+                    Tech::default(),
+                )
+                .expect("auto-tier scenario is always valid"),
             );
         }
     }

@@ -77,6 +77,71 @@ pub fn schedule_front(points: &[SchedulePoint]) -> Vec<SchedulePoint> {
     pareto_front_by(points, &SCHEDULE_OBJECTIVES)
 }
 
+/// An **incrementally** maintained Pareto front: dominance is checked at
+/// insert time, so a streaming campaign never materializes the full point
+/// set before filtering — the front is live after every chunk.
+///
+/// Equivalent to [`pareto_front_by`] over the same insertion sequence
+/// (pinned by a property test in `tests/campaign.rs`): a candidate
+/// dominated by a member is rejected, an accepted candidate evicts every
+/// member it dominates, and mutually non-dominating duplicates are all
+/// kept, exactly as the batch filter keeps them.
+pub struct ParetoSet<T> {
+    objectives: Vec<Objective<T>>,
+    /// Current front members, in insertion order (survivors keep their
+    /// relative order, so `into_front`'s stable sort ties break exactly as
+    /// the batch filter's input-order ties do).
+    members: Vec<T>,
+}
+
+impl<T: Clone> ParetoSet<T> {
+    pub fn new(objectives: &[Objective<T>]) -> ParetoSet<T> {
+        ParetoSet { objectives: objectives.to_vec(), members: Vec::new() }
+    }
+
+    /// Offer one point. Returns true iff it joined the front (evicting any
+    /// members it dominates).
+    pub fn insert(&mut self, candidate: T) -> bool {
+        if self
+            .members
+            .iter()
+            .any(|m| dominates_by(m, &candidate, &self.objectives))
+        {
+            return false;
+        }
+        self.members
+            .retain(|m| !dominates_by(&candidate, m, &self.objectives));
+        self.members.push(candidate);
+        true
+    }
+
+    /// Current front size.
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// The live front, in insertion order.
+    pub fn members(&self) -> &[T] {
+        &self.members
+    }
+
+    /// Finish: the front ascending in the first objective — the same order
+    /// [`pareto_front_by`] returns.
+    pub fn into_front(mut self) -> Vec<T> {
+        if let Some(first) = self.objectives.first() {
+            let first = *first;
+            self.members.sort_by(|a, b| {
+                first(a).partial_cmp(&first(b)).unwrap_or(std::cmp::Ordering::Equal)
+            });
+        }
+        self.members
+    }
+}
+
 /// Constrained front: drop constraint-infeasible points *before* the
 /// dominance pass. The order matters — an infeasible point must neither
 /// appear on the front nor shadow a feasible one it dominates, so filtering
@@ -166,6 +231,29 @@ mod tests {
         assert_eq!(front, vec![P(1.0, 4.0), P(2.0, 2.0), P(4.0, 1.0)]);
         assert!(dominates_by(&P(2.0, 2.0), &P(3.0, 3.0), &objs));
         assert!(!dominates_by(&P(2.0, 2.0), &P(2.0, 2.0), &objs), "no self-domination");
+    }
+
+    #[test]
+    fn incremental_front_matches_batch_front() {
+        #[derive(Debug, Clone, PartialEq)]
+        struct P(f64, f64);
+        let objs: [Objective<P>; 2] = [|p| p.0, |p| p.1];
+        let pts = vec![
+            P(3.0, 3.0), // dominated later by (2,2)
+            P(1.0, 4.0),
+            P(2.0, 2.0),
+            P(2.0, 2.0), // duplicate: mutually non-dominating, both kept
+            P(4.0, 1.0),
+            P(5.0, 5.0), // dominated on arrival
+        ];
+        let mut set = ParetoSet::new(&objs);
+        let accepted: Vec<bool> = pts.iter().map(|p| set.insert(p.clone())).collect();
+        assert_eq!(accepted, vec![true, true, true, true, true, false]);
+        assert_eq!(set.len(), 4, "(3,3) was evicted when (2,2) arrived");
+        assert!(!set.is_empty());
+        let incremental = set.into_front();
+        let batch = pareto_front_by(&pts, &objs);
+        assert_eq!(incremental, batch);
     }
 
     #[test]

@@ -54,6 +54,32 @@ struct CacheState {
     order: VecDeque<PointKey>,
 }
 
+/// One snapshot of an evaluator's memo-cache counters — what `--json` CLI
+/// output and campaign outcomes report.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Unique design points currently cached (race-free, ≤ capacity).
+    pub len: usize,
+    pub capacity: usize,
+}
+
+impl CacheStats {
+    /// The `"cache"` object embedded in machine-readable CLI output.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{obj, Json};
+        obj([
+            ("hits", Json::Num(self.hits as f64)),
+            ("misses", Json::Num(self.misses as f64)),
+            ("evictions", Json::Num(self.evictions as f64)),
+            ("len", Json::Num(self.len as f64)),
+            ("capacity", Json::Num(self.capacity as f64)),
+        ])
+    }
+}
+
 /// Composes a [`CostModel`] pipeline, memoizes per design point, and runs
 /// batches in parallel over the crate threadpool.
 ///
@@ -104,6 +130,22 @@ impl Evaluator {
             Box::new(AreaModel),
             Box::new(PowerModel),
             Box::new(ThermalModel::default()),
+        ])
+    }
+
+    /// The schedule-mode pipeline: analytical + area + power point passes,
+    /// thermal contributing only its network pass (schedule mode solves one
+    /// heterogeneous stack per network and never reads per-layer point
+    /// thermals). The single definition behind
+    /// [`crate::eval::shared_schedule_evaluator`], the campaign benches and
+    /// the legacy-equivalence tests — they must all measure the same
+    /// pipeline.
+    pub fn schedule_pipeline() -> Self {
+        Self::with_models(vec![
+            Box::new(AnalyticalModel),
+            Box::new(AreaModel),
+            Box::new(PowerModel),
+            Box::new(ThermalModel::network_pass_only()),
         ])
     }
 
@@ -252,6 +294,18 @@ impl Evaluator {
     /// Number of cached design points (race-free dedup count, ≤ capacity).
     pub fn cache_len(&self) -> usize {
         self.cache.read().unwrap().map.len()
+    }
+
+    /// One consistent snapshot of every cache counter — the bundle CLI
+    /// `--json` output and campaign outcomes embed.
+    pub fn cache_stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.cache_hits(),
+            misses: self.cache_misses(),
+            evictions: self.cache_evictions(),
+            len: self.cache_len(),
+            capacity: self.capacity,
+        }
     }
 
     /// Names of the models in the pipeline, in execution order.

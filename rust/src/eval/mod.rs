@@ -62,7 +62,7 @@ mod models;
 mod scenario;
 
 pub use constraints::Constraints;
-pub use evaluator::{Evaluator, DEFAULT_CACHE_CAPACITY};
+pub use evaluator::{CacheStats, Evaluator, DEFAULT_CACHE_CAPACITY};
 pub use metrics::Metrics;
 pub use models::{
     AnalyticalModel, AreaModel, CostModel, PowerModel, ResolvedNetwork, ThermalModel,
@@ -107,13 +107,6 @@ pub fn shared_full_evaluator() -> Arc<Evaluator> {
 /// per-layer point thermals, so per-point solves would be pure waste.
 pub fn shared_schedule_evaluator() -> Arc<Evaluator> {
     SCHEDULE
-        .get_or_init(|| {
-            Arc::new(Evaluator::with_models(vec![
-                Box::new(AnalyticalModel),
-                Box::new(AreaModel),
-                Box::new(PowerModel),
-                Box::new(ThermalModel::network_pass_only()),
-            ]))
-        })
+        .get_or_init(|| Arc::new(Evaluator::schedule_pipeline()))
         .clone()
 }

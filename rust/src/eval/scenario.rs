@@ -19,6 +19,15 @@ pub enum TierChoice {
     Auto { max_tiers: u64 },
 }
 
+impl From<u64> for TierChoice {
+    /// A bare tier count is a fixed stack height — lets the shared point
+    /// constructors ([`Scenario::design_point`], [`Scenario::network_point`])
+    /// take either a count or an auto-search bound.
+    fn from(tiers: u64) -> TierChoice {
+        TierChoice::Fixed(tiers)
+    }
+}
+
 /// How the array dimensions are chosen.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ArrayChoice {
@@ -89,10 +98,12 @@ impl Scenario {
     /// One single-GEMM design point — the shared constructor behind DSE grid
     /// points and schedule stage substrates (formerly duplicated builder
     /// boilerplate in `dse::point_scenario` and `schedule::layer_point`).
+    /// `tiers` takes a fixed count (`u64`) or an explicit [`TierChoice`]
+    /// (`TierChoice::Auto` for Fig. 7-style optimal-tier searches).
     pub fn design_point(
         g: Gemm,
         mac_budget: u64,
-        tiers: u64,
+        tiers: impl Into<TierChoice>,
         dataflow: Dataflow,
         vtech: VerticalTech,
         tech: Tech,
@@ -100,10 +111,35 @@ impl Scenario {
         Scenario::builder()
             .gemm(g)
             .mac_budget(mac_budget)
-            .tiers(tiers)
+            .tier_choice(tiers.into())
             .dataflow(dataflow)
             .vtech(vtech)
             .tech(tech)
+            .build()
+    }
+
+    /// One whole-network schedule point: [`Scenario::design_point`]'s
+    /// sibling for pipelined traces — the shared constructor behind
+    /// `dse::sweep_partitions` grid points and `dse::partition_ablation`
+    /// rows.
+    #[allow(clippy::too_many_arguments)]
+    pub fn network_point(
+        workload: Workload,
+        mac_budget: u64,
+        tiers: impl Into<TierChoice>,
+        dataflow: Dataflow,
+        vtech: VerticalTech,
+        tech: Tech,
+        spec: ScheduleSpec,
+    ) -> Result<Scenario> {
+        Scenario::builder()
+            .workload(workload)
+            .mac_budget(mac_budget)
+            .tier_choice(tiers.into())
+            .dataflow(dataflow)
+            .vtech(vtech)
+            .tech(tech)
+            .schedule(spec)
             .build()
     }
 
@@ -266,6 +302,12 @@ impl ScenarioBuilder {
 
     pub fn tiers(mut self, tiers: u64) -> Self {
         self.tiers = TierChoice::Fixed(tiers);
+        self
+    }
+
+    /// Set the tier choice directly (fixed count or auto search).
+    pub fn tier_choice(mut self, tiers: TierChoice) -> Self {
+        self.tiers = tiers;
         self
     }
 
@@ -557,7 +599,7 @@ mod tests {
         let p = Scenario::design_point(
             g,
             4096,
-            2,
+            2u64,
             Dataflow::WeightStationary,
             VerticalTech::Miv,
             Tech::default(),
@@ -572,10 +614,52 @@ mod tests {
         assert!(Scenario::design_point(
             g,
             2,
-            4,
+            4u64,
             Dataflow::DistributedOutputStationary,
             VerticalTech::Tsv,
             Tech::default()
+        )
+        .is_err());
+        // An explicit TierChoice opts into the Fig. 7 auto search.
+        let auto = Scenario::design_point(
+            g,
+            4096,
+            TierChoice::Auto { max_tiers: 8 },
+            Dataflow::DistributedOutputStationary,
+            VerticalTech::Tsv,
+            Tech::default(),
+        )
+        .unwrap();
+        assert_eq!(auto.tiers, TierChoice::Auto { max_tiers: 8 });
+    }
+
+    #[test]
+    fn network_point_matches_builder() {
+        use crate::schedule::{PartitionStrategy, ScheduleSpec};
+        let w = Workload::model("gnmt", 1).unwrap();
+        let spec = ScheduleSpec { strategy: PartitionStrategy::Greedy, batches: 8 };
+        let s = Scenario::network_point(
+            w.clone(),
+            1 << 18,
+            4u64,
+            Dataflow::WeightStationary,
+            VerticalTech::Tsv,
+            Tech::default(),
+            spec,
+        )
+        .unwrap();
+        assert_eq!(s.schedule, Some(spec));
+        assert_eq!(s.tiers, TierChoice::Fixed(4));
+        assert_eq!(s.dataflow, Dataflow::WeightStationary);
+        // Same validation as the builder.
+        assert!(Scenario::network_point(
+            w,
+            2,
+            4u64,
+            Dataflow::DistributedOutputStationary,
+            VerticalTech::Tsv,
+            Tech::default(),
+            spec,
         )
         .is_err());
     }

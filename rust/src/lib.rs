@@ -61,6 +61,7 @@
 
 pub mod analytical;
 pub mod area;
+pub mod campaign;
 pub mod config;
 pub mod coordinator;
 pub mod dataflow;

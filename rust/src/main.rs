@@ -6,7 +6,11 @@
 //! * `analyze`   — evaluate one workload (2D baseline + 3D design) and print
 //!                 the runtime/speedup breakdown (Eq. 1 / Eq. 2).
 //! * `sweep`     — DSE sweep over budgets × tiers for a workload or a whole
-//!                 network trace (`--model resnet50` or a JSON config).
+//!                 network trace (`--model resnet50` or a JSON config). Runs
+//!                 as a `campaign` (chunked parallel batches, incremental
+//!                 Pareto front); `--jsonl FILE` streams each completed
+//!                 point and resumes an interrupted run, `--json` emits the
+//!                 points + front + evaluator cache stats.
 //! * `power`     — Table-II-style power analysis for a configuration.
 //! * `thermal`   — Fig.-8-style thermal study for a configuration.
 //! * `simulate`  — run the exact cycle simulator on a small GEMM and check
@@ -26,6 +30,7 @@
 //! evaluator — the CLI builds a [`Scenario`] and formats the bundle.
 
 use cube3d::analytical::{breakdown_2d, breakdown_3d};
+use cube3d::campaign::{Campaign, CampaignMode, CampaignOutcome};
 use cube3d::config::{parse_dataflow, parse_strategy, parse_vtech, ExperimentConfig, WorkloadSpec};
 use cube3d::coordinator::{BatcherConfig, Coordinator, GemmJob, RouterConfig};
 use cube3d::dataflow::Dataflow;
@@ -36,7 +41,7 @@ use cube3d::report::reproduce_all;
 use cube3d::runtime::find_artifact_dir;
 use cube3d::sim::{matmul_i64, simulate_dataflow, Matrix};
 use cube3d::util::cli::{usage, Args, OptSpec};
-use cube3d::util::json::{obj, Json};
+use cube3d::util::json::{obj, opt_num, Json};
 use cube3d::util::rng::Rng;
 use cube3d::util::table::Table;
 use cube3d::workloads::{table1, Gemm, Workload};
@@ -97,7 +102,12 @@ fn workload_opts() -> Vec<OptSpec> {
         OptSpec {
             name: "json",
             takes_value: false,
-            help: "schedule: machine-readable JSON output instead of tables",
+            help: "sweep/pareto/schedule: machine-readable JSON output (incl. cache stats)",
+        },
+        OptSpec {
+            name: "jsonl",
+            takes_value: true,
+            help: "sweep/pareto/schedule: stream points to a resumable JSONL file",
         },
         OptSpec { name: "config", takes_value: true, help: "JSON experiment config file" },
         OptSpec { name: "out-dir", takes_value: true, help: "output directory (default reports)" },
@@ -257,6 +267,42 @@ fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Run a campaign, streaming to `--jsonl` (resumable) when given.
+fn run_campaign(campaign: &Campaign, args: &Args) -> anyhow::Result<CampaignOutcome> {
+    let outcome = match args.get("jsonl") {
+        Some(path) => campaign.run_streaming(Path::new(path))?,
+        None => campaign.run(),
+    };
+    if outcome.resumed > 0 {
+        eprintln!(
+            "resumed {} completed points from the JSONL stream ({} evaluated fresh)",
+            outcome.resumed,
+            outcome.points.len() - outcome.resumed
+        );
+    }
+    Ok(outcome)
+}
+
+/// The `--json` document every campaign-backed subcommand emits: all
+/// completed points, the incremental fronts (by label), resume/skip
+/// counters and the evaluator's cache stats.
+fn campaign_json(outcome: &CampaignOutcome) -> Json {
+    let labels = |pts: &[cube3d::campaign::CampaignPoint]| {
+        Json::Arr(pts.iter().map(|p| Json::Str(p.label.clone())).collect())
+    };
+    obj([
+        (
+            "points",
+            Json::Arr(outcome.points.iter().map(|p| p.to_json()).collect()),
+        ),
+        ("front", labels(&outcome.front)),
+        ("feasible_front", labels(&outcome.feasible_front)),
+        ("resumed", Json::Num(outcome.resumed as f64)),
+        ("skipped", Json::Num(outcome.skipped as f64)),
+        ("cache", outcome.cache.to_json()),
+    ])
+}
+
 fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     let cfg = match args.get("config") {
         Some(path) => ExperimentConfig::from_file(Path::new(path))?,
@@ -283,21 +329,22 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     };
     let mut cfg = cfg;
     cfg.constraints = constraints_from_args(args, cfg.constraints)?;
-    let scenarios = Scenario::expand_config(&cfg)?;
-    // A temperature ceiling needs the thermal model to verify feasibility.
-    let ev = if cfg.constraints.max_temp_c.is_some() {
-        shared_full_evaluator()
-    } else {
-        shared_evaluator()
-    };
-    let metrics = ev.evaluate_batch(&scenarios);
+    let campaign = Campaign::from_config(&cfg, CampaignMode::Point)?;
+    let outcome = run_campaign(&campaign, args)?;
+    if outcome.points.is_empty() {
+        anyhow::bail!("config expands to no feasible scenarios (every budget × tier point fails validation)");
+    }
+    if args.flag("json") {
+        println!("{}", campaign_json(&outcome).to_string_pretty());
+        return Ok(());
+    }
 
     let workload = cfg.workload.resolve()?;
     println!(
         "workload {} ({})   {} scenarios\n",
         workload.description(),
         cfg.vertical_tech.name(),
-        scenarios.len()
+        outcome.points.len()
     );
     let constrained = !cfg.constraints.is_empty();
     let mut header =
@@ -306,19 +353,18 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
         header.push("feasible");
     }
     let mut t = Table::new(header);
-    for (s, m) in scenarios.iter().zip(&metrics) {
+    for p in outcome.points.iter().filter_map(|p| p.dse()) {
         let mut row = vec![
-            s.mac_budget.to_string(),
-            m.tiers.map_or("-".into(), |v| v.to_string()),
-            s.dataflow.short_name().to_string(),
-            m.cycles_3d.map_or("-".into(), |v| v.to_string()),
-            m.speedup_vs_2d.map_or("-".into(), |v| format!("{v:.3}x")),
-            m.perf_per_area_vs_2d.map_or("-".into(), |v| format!("{v:.3}x")),
-            m.power_w().map_or("-".into(), |v| format!("{v:.2}")),
+            p.mac_budget.to_string(),
+            p.tiers.to_string(),
+            p.dataflow.short_name().to_string(),
+            p.cycles.to_string(),
+            format!("{:.3}x", p.speedup_vs_2d),
+            format!("{:.3}x", p.perf_per_area_vs_2d),
+            format!("{:.2}", p.power_w),
         ];
         if constrained {
-            let ok = cfg.constraints.is_satisfied(m.power_w(), m.peak_temp_c());
-            row.push(if ok { "yes".into() } else { "NO".to_string() });
+            row.push(if p.feasible { "yes".into() } else { "NO".to_string() });
         }
         t.row(row);
     }
@@ -512,6 +558,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         m.throughput(),
         m.p95_latency_us()
     );
+    // The router annotates every job's design through the shared evaluator;
+    // its cache behavior is part of the serve story.
+    let cache = shared_performance_evaluator().cache_stats();
+    println!(
+        "router design cache: {} hits / {} misses ({} unique design points)",
+        cache.hits, cache.misses, cache.len
+    );
     Ok(())
 }
 
@@ -533,10 +586,6 @@ fn constraints_from_args(args: &Args, base: Constraints) -> anyhow::Result<Const
 
 fn fmt_opt(v: Option<f64>, digits: usize) -> String {
     v.map_or("-".into(), |x| format!("{x:.digits$}"))
-}
-
-fn opt_num(v: Option<f64>) -> Json {
-    v.map_or(Json::Null, Json::Num)
 }
 
 /// The single-point `schedule` result as a JSON document (`--json`).
@@ -587,57 +636,34 @@ fn network_json(s: &Scenario, m: &cube3d::schedule::NetworkMetrics, feasible: Op
         ("mean_temp_c", opt_num(m.mean_temp_c())),
         ("feasible", feasible.map_or(Json::Null, Json::Bool)),
         ("stages", Json::Arr(stages)),
+        // Evaluator cache behavior of the run (shared schedule evaluator).
+        (
+            "cache",
+            cube3d::eval::shared_schedule_evaluator().cache_stats().to_json(),
+        ),
     ])
 }
 
 fn cmd_schedule(args: &Args) -> anyhow::Result<()> {
-    use cube3d::power::Tech;
     use cube3d::schedule::ScheduleSpec;
 
-    // Config path: sweep the whole budget × tier × dataflow × strategy grid.
+    // Config path: sweep the whole budget × tier × dataflow × strategy grid
+    // as a network-mode campaign.
     if let Some(path) = args.get("config") {
-        let cfg = ExperimentConfig::from_file(Path::new(path))?;
-        let constraints = constraints_from_args(args, cfg.constraints)?;
-        let workload = cfg.workload.resolve()?;
-        let pts = cube3d::dse::sweep_partitions(
-            &workload,
-            &cfg.mac_budgets,
-            &cfg.tiers,
-            &cfg.dataflows,
-            &cfg.strategies,
-            cfg.vertical_tech,
-            &Tech::default(),
-            cfg.batches,
-            &constraints,
-        );
-        if pts.is_empty() {
+        let mut cfg = ExperimentConfig::from_file(Path::new(path))?;
+        cfg.constraints = constraints_from_args(args, cfg.constraints)?;
+        let constraints = cfg.constraints;
+        let campaign = Campaign::from_config(&cfg, CampaignMode::Network)?;
+        let outcome = run_campaign(&campaign, args)?;
+        if outcome.points.is_empty() {
             anyhow::bail!("config expands to no feasible schedule points");
         }
         if args.flag("json") {
-            let rows: Vec<Json> = pts
-                .iter()
-                .map(|p| {
-                    obj([
-                        ("mac_budget", Json::Num(p.mac_budget as f64)),
-                        ("tiers", Json::Num(p.tiers as f64)),
-                        ("dataflow", Json::Str(p.dataflow.short_name().to_string())),
-                        ("strategy", Json::Str(p.strategy.name().to_string())),
-                        ("stages", Json::Num(p.stages as f64)),
-                        ("interval_cycles", Json::Num(p.interval_cycles as f64)),
-                        ("latency_cycles", Json::Num(p.latency_cycles as f64)),
-                        ("throughput_per_s", Json::Num(p.throughput_per_s)),
-                        ("speedup_vs_2d", Json::Num(p.speedup_vs_2d)),
-                        ("bottleneck_stage", Json::Num(p.bottleneck_stage as f64)),
-                        ("vertical_traffic_bytes", Json::Num(p.vertical_traffic_bytes as f64)),
-                        ("power_w", opt_num(p.power_w)),
-                        ("peak_temp_c", opt_num(p.peak_temp_c)),
-                        ("feasible", Json::Bool(p.feasible)),
-                    ])
-                })
-                .collect();
-            println!("{}", Json::Arr(rows).to_string_pretty());
+            println!("{}", campaign_json(&outcome).to_string_pretty());
             return Ok(());
         }
+        let pts: Vec<cube3d::dse::SchedulePoint> = outcome.schedule_points();
+        let workload = cfg.workload.resolve()?;
         println!(
             "workload {} ({})   {} schedule points   {} batches\n",
             workload.description(),
@@ -689,6 +715,12 @@ fn cmd_schedule(args: &Args) -> anyhow::Result<()> {
 
     // Single design point: the full per-stage breakdown, physical closure
     // included (power + heterogeneous-stack thermal solve).
+    if args.get("jsonl").is_some() {
+        anyhow::bail!(
+            "--jsonl streams campaign sweeps; single-point `schedule` runs have nothing to \
+             resume (use `schedule --config <file> --jsonl <stream>`)"
+        );
+    }
     let strategy = parse_strategy(args.get_or("strategy", "dp"))?;
     let batches = args.get_u64_or("batches", 16)?;
     let mut s = Scenario::from_args(args, 1 << 18, 4)?;
@@ -770,22 +802,42 @@ fn cmd_schedule(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_dataflows(args: &Args) -> anyhow::Result<()> {
-    use cube3d::dse::dataflow_ablation;
+    use cube3d::dse::AblationRow;
     let g = single_gemm_workload(args)?;
     let macs = args.get_u64_or("macs", 1 << 18)?;
     let tiers_list = args
         .get_u64_list("tiers")?
         .unwrap_or_else(|| vec![1, 2, 4, 8, 12]);
+    // The four-way grid is a point-mode campaign over (tiers × dataflows) —
+    // infeasible tier counts are skipped by the runner, exactly as the old
+    // hand-rolled loop skipped them.
+    let cfg = ExperimentConfig {
+        workload: WorkloadSpec::Gemm(g),
+        mac_budgets: vec![macs],
+        tiers: tiers_list.clone(),
+        dataflows: Dataflow::ALL.to_vec(),
+        ..Default::default()
+    };
+    let outcome = Campaign::from_config(&cfg, CampaignMode::Point)?.run();
     println!("workload {g}   budget {macs} MACs\n");
     let mut t = Table::new(["ℓ", "OS cycles", "WS cycles", "IS cycles", "dOS cycles", "best"]);
     for &tiers in &tiers_list {
-        // Feasibility = "builds as a scenario", as everywhere else.
-        if Scenario::builder().gemm(g).mac_budget(macs).tiers(tiers).build().is_err() {
+        // One row per feasible tier count, in Dataflow::ALL order.
+        let cycles: Vec<(Dataflow, u64)> = Dataflow::ALL
+            .iter()
+            .filter_map(|&df| {
+                outcome
+                    .points
+                    .iter()
+                    .filter_map(|p| p.dse())
+                    .find(|p| p.tiers == tiers && p.dataflow == df)
+                    .map(|p| (df, p.cycles))
+            })
+            .collect();
+        if cycles.len() != Dataflow::ALL.len() {
             continue;
         }
-        // One row per tier count, all four dataflows through the shared
-        // cached evaluator (a repeated invocation is pure cache hits).
-        let row = dataflow_ablation(&[g], macs, tiers).remove(0);
+        let row = AblationRow { workload: g, cycles };
         let (best, _) = row.best();
         let mut cells = vec![tiers.to_string()];
         cells.extend(row.cycles.iter().map(|(_, c)| c.to_string()));
@@ -799,47 +851,57 @@ fn cmd_dataflows(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_pareto(args: &Args) -> anyhow::Result<()> {
-    use cube3d::dse::{constrained_front, pareto_front, sweep_dataflows};
-    use cube3d::power::Tech;
-    let g = single_gemm_workload(args)?;
-    let vtech = parse_vtech(args.get_or("vtech", "miv"))?;
-    let constraints = constraints_from_args(args, Constraints::NONE)?;
-    let budgets = args
-        .get_u64_list("macs")?
-        .unwrap_or_else(|| vec![4096, 32768, 262144]);
-    let tiers = args
-        .get_u64_list("tiers")?
-        .unwrap_or_else(|| vec![1, 2, 4, 8, 12]);
-    let dataflows = match args.get("dataflow") {
-        None => vec![Dataflow::DistributedOutputStationary],
-        Some(dfs) => parse_dataflow_list(dfs)?,
+    // Same campaign path as `sweep`, read through the incremental fronts.
+    let cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::from_file(Path::new(path))?,
+        None => ExperimentConfig {
+            workload: WorkloadSpec::Gemm(single_gemm_workload(args)?),
+            mac_budgets: args
+                .get_u64_list("macs")?
+                .unwrap_or_else(|| vec![4096, 32768, 262144]),
+            tiers: args
+                .get_u64_list("tiers")?
+                .unwrap_or_else(|| vec![1, 2, 4, 8, 12]),
+            dataflows: match args.get("dataflow") {
+                None => vec![Dataflow::DistributedOutputStationary],
+                Some(dfs) => parse_dataflow_list(dfs)?,
+            },
+            vertical_tech: parse_vtech(args.get_or("vtech", "miv"))?,
+            ..Default::default()
+        },
     };
-    let pts = sweep_dataflows(
-        &[g],
-        &budgets,
-        &tiers,
-        &dataflows,
-        vtech,
-        &Tech::default(),
-        &constraints,
-    );
-    let unconstrained = pareto_front(&pts);
-    let front = if constraints.is_empty() {
-        unconstrained
+    let mut cfg = cfg;
+    cfg.constraints = constraints_from_args(args, cfg.constraints)?;
+    let constraints = cfg.constraints;
+    let vtech = cfg.vertical_tech;
+    let campaign = Campaign::from_config(&cfg, CampaignMode::Point)?;
+    let outcome = run_campaign(&campaign, args)?;
+    if args.flag("json") {
+        println!("{}", campaign_json(&outcome).to_string_pretty());
+        return Ok(());
+    }
+    let workload = cfg.workload.resolve()?;
+    let front: Vec<cube3d::dse::DsePoint> = if constraints.is_empty() {
+        outcome.front.iter().filter_map(|p| p.dse().cloned()).collect()
     } else {
         // Infeasible sweep points are excluded *before* the dominance pass;
         // report how many points the constraints ruled off the raw front.
-        let excluded = unconstrained.iter().filter(|p| !p.feasible).count();
+        let excluded = outcome.front.iter().filter(|p| !p.feasible()).count();
         println!(
             "constraints exclude {excluded} of {} unconstrained-Pareto-optimal points",
-            unconstrained.len()
+            outcome.front.len()
         );
-        constrained_front(&pts)
+        outcome
+            .feasible_front
+            .iter()
+            .filter_map(|p| p.dse().cloned())
+            .collect()
     };
     println!(
-        "workload {g} ({}): {} design points, {} Pareto-optimal\n",
+        "workload {} ({}): {} design points, {} Pareto-optimal\n",
+        workload.description(),
         vtech.name(),
-        pts.len(),
+        outcome.points.len(),
         front.len()
     );
     let mut t = Table::new([

@@ -188,7 +188,7 @@ fn cycles_of(m: &Metrics) -> Result<u64> {
 }
 
 fn layer_point(s: &Scenario, g: Gemm, budget: u64) -> Result<Scenario> {
-    Scenario::design_point(g, budget, 1, s.dataflow, s.vtech, s.tech.clone())
+    Scenario::design_point(g, budget, 1u64, s.dataflow, s.vtech, s.tech.clone())
 }
 
 fn evaluate_at_tiers(

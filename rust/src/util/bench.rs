@@ -45,6 +45,19 @@ impl BenchResult {
             self.iters_per_sample,
         )
     }
+
+    /// The JSON form checked into `BENCH_*.json` perf-trajectory artifacts.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{obj, Json};
+        obj([
+            ("name", Json::Str(self.name.clone())),
+            ("mean_s", Json::Num(self.stats.mean)),
+            ("median_s", Json::Num(self.stats.median)),
+            ("q3_s", Json::Num(self.stats.q3)),
+            ("samples", Json::Num(self.samples as f64)),
+            ("iters_per_sample", Json::Num(self.iters_per_sample as f64)),
+        ])
+    }
 }
 
 /// Benchmark runner with fixed warmup + sample counts.

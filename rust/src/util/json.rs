@@ -156,6 +156,12 @@ pub fn num_arr<I: IntoIterator<Item = f64>>(items: I) -> Json {
     Json::Arr(items.into_iter().map(Json::Num).collect())
 }
 
+/// Optional-metric encoding shared by the CLI and campaign streams:
+/// `Some(x)` → `Json::Num(x)`, `None` → `Json::Null`.
+pub fn opt_num(v: Option<f64>) -> Json {
+    v.map_or(Json::Null, Json::Num)
+}
+
 fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
     if let Some(w) = indent {
         out.push('\n');

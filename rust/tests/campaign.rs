@@ -1,0 +1,469 @@
+//! Campaign-engine acceptance: the three legacy sweep families are pinned
+//! **bit-identical** to hand-rolled replicas of their pre-refactor loops on
+//! every shipped config, the lazy grid enumerates exactly the legacy point
+//! sets, the incremental Pareto front equals the batch front on random
+//! point sets, and interrupted JSONL streams resume to the clean run's
+//! exact result.
+
+use cube3d::campaign::{
+    dse_view, schedule_view, Axis, Campaign, CampaignMode, CampaignPoint, Grid, PointSpec,
+};
+use cube3d::config::ExperimentConfig;
+use cube3d::dataflow::Dataflow;
+use cube3d::dse::{
+    pareto_front_by, sweep_dataflows, DsePoint, Objective, ParetoSet, SchedulePoint,
+    DSE_OBJECTIVES,
+};
+use cube3d::eval::{
+    shared_evaluator, shared_full_evaluator, shared_schedule_evaluator, Constraints, Evaluator,
+    Scenario,
+};
+use cube3d::power::{Tech, VerticalTech};
+use cube3d::schedule::ScheduleSpec;
+use cube3d::util::json::Json;
+use cube3d::util::rng::Rng;
+use cube3d::workloads::Gemm;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn configs_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../configs")
+}
+
+fn shipped_configs() -> Vec<PathBuf> {
+    let mut entries: Vec<_> = std::fs::read_dir(configs_dir())
+        .expect("configs dir")
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .collect();
+    entries.sort();
+    assert!(!entries.is_empty(), "no shipped configs found");
+    entries
+}
+
+/// The pre-refactor `cmd_sweep`/`sweep_dataflows` pipeline, verbatim:
+/// expand the config grid with nested loops, batch through the evaluator
+/// the legacy `evaluator_for` would pick, type the points.
+fn legacy_point_sweep(cfg: &ExperimentConfig) -> Vec<DsePoint> {
+    let workload = cfg.workload.resolve().unwrap();
+    let mut scenarios: Vec<Scenario> = Vec::new();
+    for &budget in &cfg.mac_budgets {
+        for &tiers in &cfg.tiers {
+            for &dataflow in &cfg.dataflows {
+                let built = Scenario::builder()
+                    .workload(workload.clone())
+                    .mac_budget(budget)
+                    .tiers(tiers)
+                    .dataflow(dataflow)
+                    .vtech(cfg.vertical_tech)
+                    .constraints(cfg.constraints)
+                    .build();
+                if let Ok(s) = built {
+                    scenarios.push(s);
+                }
+            }
+        }
+    }
+    let ev = if cfg.constraints.max_temp_c.is_some() {
+        shared_full_evaluator()
+    } else {
+        shared_evaluator()
+    };
+    let metrics = ev.evaluate_batch(&scenarios);
+    scenarios.iter().zip(&metrics).map(|(s, m)| dse_view(s, m)).collect()
+}
+
+/// The pre-refactor `sweep_partitions` loop, verbatim: serial nested loops,
+/// one `evaluate_network` per grid point, failures skipped.
+fn legacy_schedule_sweep(cfg: &ExperimentConfig) -> Vec<SchedulePoint> {
+    let ev = shared_schedule_evaluator();
+    let workload = cfg.workload.resolve().unwrap();
+    let mut out = Vec::new();
+    for &b in &cfg.mac_budgets {
+        for &t in &cfg.tiers {
+            for &df in &cfg.dataflows {
+                for &strategy in &cfg.strategies {
+                    let built = Scenario::builder()
+                        .workload(workload.clone())
+                        .mac_budget(b)
+                        .tiers(t)
+                        .dataflow(df)
+                        .vtech(cfg.vertical_tech)
+                        .schedule(ScheduleSpec { strategy, batches: cfg.batches })
+                        .constraints(cfg.constraints)
+                        .build();
+                    let Ok(s) = built else { continue };
+                    let Ok(m) = ev.evaluate_network(&s) else { continue };
+                    out.push(schedule_view(&s, &m));
+                }
+            }
+        }
+    }
+    out
+}
+
+fn assert_dse_points_bit_identical(a: &[DsePoint], b: &[DsePoint], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: point count");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.workload, y.workload, "{ctx}[{i}]");
+        assert_eq!(x.dataflow, y.dataflow, "{ctx}[{i}]");
+        assert_eq!(x.mac_budget, y.mac_budget, "{ctx}[{i}]");
+        assert_eq!(x.tiers, y.tiers, "{ctx}[{i}]");
+        assert_eq!(x.vtech, y.vtech, "{ctx}[{i}]");
+        assert_eq!(x.cycles, y.cycles, "{ctx}[{i}]");
+        assert_eq!(x.speedup_vs_2d.to_bits(), y.speedup_vs_2d.to_bits(), "{ctx}[{i}]");
+        assert_eq!(x.area_m2.to_bits(), y.area_m2.to_bits(), "{ctx}[{i}]");
+        assert_eq!(
+            x.perf_per_area_vs_2d.to_bits(),
+            y.perf_per_area_vs_2d.to_bits(),
+            "{ctx}[{i}]"
+        );
+        assert_eq!(x.power_w.to_bits(), y.power_w.to_bits(), "{ctx}[{i}]");
+        assert_eq!(
+            x.peak_temp_c.map(f64::to_bits),
+            y.peak_temp_c.map(f64::to_bits),
+            "{ctx}[{i}]"
+        );
+        assert_eq!(x.feasible, y.feasible, "{ctx}[{i}]");
+    }
+}
+
+fn assert_schedule_points_bit_identical(a: &[SchedulePoint], b: &[SchedulePoint], ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: point count");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.mac_budget, y.mac_budget, "{ctx}[{i}]");
+        assert_eq!(x.tiers, y.tiers, "{ctx}[{i}]");
+        assert_eq!(x.dataflow, y.dataflow, "{ctx}[{i}]");
+        assert_eq!(x.strategy, y.strategy, "{ctx}[{i}]");
+        assert_eq!(x.stages, y.stages, "{ctx}[{i}]");
+        assert_eq!(x.interval_cycles, y.interval_cycles, "{ctx}[{i}]");
+        assert_eq!(x.latency_cycles, y.latency_cycles, "{ctx}[{i}]");
+        assert_eq!(x.throughput_per_s.to_bits(), y.throughput_per_s.to_bits(), "{ctx}[{i}]");
+        assert_eq!(x.bottleneck_stage, y.bottleneck_stage, "{ctx}[{i}]");
+        assert_eq!(x.vertical_traffic_bytes, y.vertical_traffic_bytes, "{ctx}[{i}]");
+        assert_eq!(x.speedup_vs_2d.to_bits(), y.speedup_vs_2d.to_bits(), "{ctx}[{i}]");
+        assert_eq!(x.power_w.map(f64::to_bits), y.power_w.map(f64::to_bits), "{ctx}[{i}]");
+        assert_eq!(
+            x.peak_temp_c.map(f64::to_bits),
+            y.peak_temp_c.map(f64::to_bits),
+            "{ctx}[{i}]"
+        );
+        assert_eq!(x.feasible, y.feasible, "{ctx}[{i}]");
+    }
+}
+
+/// Acceptance: the campaign-backed point sweep is bit-identical to the
+/// legacy pipeline on every shipped config, Pareto front included.
+#[test]
+fn campaign_matches_legacy_point_sweep_on_every_shipped_config() {
+    for path in shipped_configs() {
+        let name = path.file_name().unwrap().to_string_lossy().to_string();
+        let cfg = ExperimentConfig::from_file(&path).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let legacy = legacy_point_sweep(&cfg);
+        // A fresh evaluator on the campaign side: equality must come from
+        // recomputation, not from retrieving the legacy run's cache entries.
+        let outcome = Campaign::from_config(&cfg, CampaignMode::Point)
+            .unwrap()
+            .with_evaluator(Arc::new(Evaluator::new()))
+            .run();
+        let campaign_pts = outcome.dse_points();
+        assert_dse_points_bit_identical(&campaign_pts, &legacy, &name);
+
+        // The incremental front equals the legacy post-hoc front, in order.
+        let legacy_front = pareto_front_by(&legacy, &DSE_OBJECTIVES);
+        let campaign_front: Vec<DsePoint> =
+            outcome.front.iter().filter_map(|p| p.dse().cloned()).collect();
+        assert_dse_points_bit_identical(&campaign_front, &legacy_front, &format!("{name} front"));
+    }
+}
+
+/// Acceptance: the campaign-backed schedule sweep is bit-identical to the
+/// legacy serial loop on the shipped pipeline configs.
+#[test]
+fn campaign_matches_legacy_schedule_sweep_on_pipeline_configs() {
+    for name in ["gnmt_pipeline.json", "transformer_pipeline.json"] {
+        let cfg = ExperimentConfig::from_file(&configs_dir().join(name))
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        let legacy = legacy_schedule_sweep(&cfg);
+        assert!(!legacy.is_empty(), "{name} produces schedule points");
+        // Fresh schedule-pipeline evaluator, as in the point-mode test.
+        let campaign = Campaign::from_config(&cfg, CampaignMode::Network)
+            .unwrap()
+            .with_evaluator(Arc::new(Evaluator::schedule_pipeline()))
+            .run();
+        assert_schedule_points_bit_identical(&campaign.schedule_points(), &legacy, name);
+    }
+}
+
+/// The non-config entry point keeps its exact legacy behavior too —
+/// including multi-workload ordering and infeasible-point skipping.
+#[test]
+fn sweep_dataflows_matches_inline_legacy_loop() {
+    let gs = [Gemm::new(64, 147, 12100), Gemm::new(512, 128, 784), Gemm::new(8, 8, 8)];
+    // Budget 2 at 4 tiers is infeasible, so the skip path is exercised too.
+    let budgets = [2u64, 4096, 1 << 15];
+    let tiers = [1u64, 2, 4];
+    let dataflows = [Dataflow::DistributedOutputStationary, Dataflow::WeightStationary];
+    let tech = Tech::default();
+    let got = sweep_dataflows(
+        &gs,
+        &budgets,
+        &tiers,
+        &dataflows,
+        VerticalTech::Miv,
+        &tech,
+        &Constraints::NONE,
+    );
+
+    // Verbatim pre-refactor loop: workload → budget → tiers → dataflow.
+    let mut scenarios: Vec<Scenario> = Vec::new();
+    for &g in &gs {
+        for &b in &budgets {
+            for &t in &tiers {
+                for &df in &dataflows {
+                    let built = Scenario::builder()
+                        .gemm(g)
+                        .mac_budget(b)
+                        .tiers(t)
+                        .dataflow(df)
+                        .vtech(VerticalTech::Miv)
+                        .tech(tech.clone())
+                        .build();
+                    if let Ok(s) = built {
+                        scenarios.push(s);
+                    }
+                }
+            }
+        }
+    }
+    let metrics = shared_evaluator().evaluate_batch(&scenarios);
+    let legacy: Vec<DsePoint> =
+        scenarios.iter().zip(&metrics).map(|(s, m)| dse_view(s, m)).collect();
+    assert!(legacy.len() < gs.len() * budgets.len() * tiers.len() * dataflows.len());
+    assert_dse_points_bit_identical(&got, &legacy, "sweep_dataflows");
+}
+
+/// Property: the lazy grid iterator enumerates exactly the legacy nested
+/// loops' point set (same order, same labels) on every shipped config, for
+/// both sweep families.
+#[test]
+fn grid_enumerates_legacy_point_sets_on_every_shipped_config() {
+    for path in shipped_configs() {
+        let cfg = ExperimentConfig::from_file(&path).unwrap();
+        // Point family: budgets × tiers × dataflows.
+        let mut legacy = Vec::new();
+        for &b in &cfg.mac_budgets {
+            for &t in &cfg.tiers {
+                for &df in &cfg.dataflows {
+                    legacy.push(format!(
+                        "macs={b}/tiers={t}/df={}",
+                        df.short_name().to_ascii_lowercase()
+                    ));
+                }
+            }
+        }
+        let grid = cfg.grid(CampaignMode::Point);
+        assert_eq!(grid.n_points(), legacy.len());
+        let got: Vec<String> = grid.iter().map(|p| p.label()).collect();
+        assert_eq!(got, legacy, "{}", path.display());
+
+        // Schedule family adds the strategy axis, innermost.
+        let mut legacy = Vec::new();
+        for &b in &cfg.mac_budgets {
+            for &t in &cfg.tiers {
+                for &df in &cfg.dataflows {
+                    for &st in &cfg.strategies {
+                        legacy.push(format!(
+                            "macs={b}/tiers={t}/df={}/strategy={}",
+                            df.short_name().to_ascii_lowercase(),
+                            st.name()
+                        ));
+                    }
+                }
+            }
+        }
+        let grid = cfg.grid(CampaignMode::Network);
+        let got: Vec<String> = grid.iter().map(|p| p.label()).collect();
+        assert_eq!(got, legacy, "{} (network)", path.display());
+    }
+}
+
+/// Property: on random axis sets, the lazy iterator yields exactly the
+/// cartesian product with unique labels and a round-tripping index decode.
+#[test]
+fn grid_iterator_covers_random_axis_sets() {
+    let mut rng = Rng::new(0x3D_C0DE);
+    for _ in 0..50 {
+        let budgets: Vec<u64> = (0..rng.gen_range(3) + 1).map(|i| 1024 << i).collect();
+        let tiers: Vec<u64> = (0..rng.gen_range(4) + 1).map(|i| i + 1).collect();
+        let n_df = rng.gen_range(4) as usize + 1;
+        let dataflows: Vec<Dataflow> = Dataflow::ALL[..n_df].to_vec();
+        let grid = Grid::new()
+            .axis(Axis::MacBudget(budgets.clone()))
+            .axis(Axis::Tiers(tiers.clone()))
+            .axis(Axis::Dataflow(dataflows.clone()));
+        let expect = budgets.len() * tiers.len() * dataflows.len();
+        assert_eq!(grid.n_points(), expect);
+        let mut labels: Vec<String> = grid.iter().map(|p| p.label()).collect();
+        assert_eq!(labels.len(), expect);
+        for (i, p) in grid.iter().enumerate() {
+            assert_eq!(p.index, i);
+            assert_eq!(grid.point(i), p.values);
+        }
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), expect, "labels must be unique");
+    }
+}
+
+/// Property: insert-time dominance equals the batch Pareto filter on random
+/// point sets (duplicates and ties included — small discrete coordinates
+/// force plenty of both).
+#[test]
+fn incremental_pareto_front_equals_batch_front_on_random_points() {
+    #[derive(Debug, Clone, PartialEq)]
+    struct P(f64, f64, f64);
+    let objs: [Objective<P>; 3] = [|p| p.0, |p| p.1, |p| p.2];
+    let mut rng = Rng::new(0xFACADE);
+    for _ in 0..100 {
+        let n = rng.gen_range(60) as usize + 1;
+        let pts: Vec<P> = (0..n)
+            .map(|_| {
+                P(
+                    rng.gen_range(6) as f64,
+                    rng.gen_range(6) as f64,
+                    rng.gen_range(6) as f64,
+                )
+            })
+            .collect();
+        let mut set = ParetoSet::new(&objs);
+        for p in &pts {
+            set.insert(p.clone());
+        }
+        assert_eq!(set.into_front(), pareto_front_by(&pts, &objs));
+    }
+}
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("cube3d_campaign_{}_{tag}.jsonl", std::process::id()))
+}
+
+fn rn0_campaign() -> Campaign {
+    let cfg = ExperimentConfig::from_file(&configs_dir().join("rn0_tsv_sweep.json")).unwrap();
+    Campaign::from_config(&cfg, CampaignMode::Point).unwrap()
+}
+
+fn assert_same_outcome_points(a: &[CampaignPoint], b: &[CampaignPoint], ctx: &str) {
+    let da: Vec<DsePoint> = a.iter().filter_map(|p| p.dse().cloned()).collect();
+    let db: Vec<DsePoint> = b.iter().filter_map(|p| p.dse().cloned()).collect();
+    assert_eq!(
+        a.iter().map(|p| &p.label).collect::<Vec<_>>(),
+        b.iter().map(|p| &p.label).collect::<Vec<_>>(),
+        "{ctx}: labels"
+    );
+    assert_dse_points_bit_identical(&da, &db, ctx);
+}
+
+/// Acceptance: a campaign interrupted mid-stream (simulated by truncating
+/// its JSONL to a prefix plus a torn line) resumes by skipping every
+/// completed point and finishes with the clean run's exact points and
+/// front.
+#[test]
+fn jsonl_resume_skips_completed_points_and_reproduces_the_front() {
+    let campaign = rn0_campaign();
+    let path = tmp_path("resume");
+    let _ = std::fs::remove_file(&path);
+
+    let clean = campaign.run_streaming(&path).unwrap();
+    assert_eq!(clean.resumed, 0);
+    assert!(!clean.points.is_empty());
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(
+        lines.len(),
+        clean.points.len() + 1,
+        "a fingerprint header plus one JSONL line per point"
+    );
+    assert!(lines[0].contains("\"campaign\""), "line 1 is the campaign header");
+    for line in &lines[1..] {
+        let j = Json::parse(line).unwrap();
+        CampaignPoint::from_json(&j).unwrap();
+    }
+
+    // Kill simulation: keep the header, the first half of the points, and
+    // a torn line.
+    let keep = clean.points.len() / 2;
+    let mut partial = lines[..keep + 1].join("\n");
+    partial.push_str("\n{\"label\":\"torn-mid-write");
+    std::fs::write(&path, partial).unwrap();
+
+    let resumed = campaign.run_streaming(&path).unwrap();
+    assert_eq!(resumed.resumed, keep, "every stored point is skipped");
+    assert_same_outcome_points(&resumed.points, &clean.points, "resumed vs clean");
+    assert_same_outcome_points(&resumed.front, &clean.front, "resumed front");
+    assert_same_outcome_points(
+        &resumed.feasible_front,
+        &clean.feasible_front,
+        "resumed feasible front",
+    );
+    // The stream is whole again: all lines parse, header + one per point.
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(text.lines().count(), clean.points.len() + 1);
+
+    // A third run resumes everything and evaluates nothing new.
+    let third = campaign.run_streaming(&path).unwrap();
+    assert_eq!(third.resumed, clean.points.len());
+    assert_same_outcome_points(&third.points, &clean.points, "fully resumed");
+
+    let _ = std::fs::remove_file(&path);
+}
+
+/// A stream written by one campaign refuses to resume a different one —
+/// point labels only carry axis coordinates, so the header is what stops
+/// e.g. a MIV sweep's metrics being silently reused for a TSV sweep.
+#[test]
+fn resume_rejects_a_stream_from_a_different_campaign() {
+    let path = tmp_path("mismatch");
+    let _ = std::fs::remove_file(&path);
+    rn0_campaign().run_streaming(&path).unwrap();
+
+    // Same axes, different vertical tech in the base spec.
+    let mut cfg =
+        ExperimentConfig::from_file(&configs_dir().join("rn0_tsv_sweep.json")).unwrap();
+    cfg.vertical_tech = cube3d::power::VerticalTech::Miv;
+    let other = Campaign::from_config(&cfg, CampaignMode::Point).unwrap();
+    let err = other.run_streaming(&path).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("different campaign"), "{msg}");
+    // The original stream survives the rejected attempt untouched.
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(text.lines().count(), 25, "header + 24 points intact");
+
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Constraint levels sweep like any other dimension: each grid point is
+/// classified against its own level (a `max_temp_c` level would further
+/// upgrade the whole campaign to the thermal pipeline).
+#[test]
+fn constraint_levels_are_a_sweep_axis() {
+    let levels = vec![
+        Constraints::NONE,
+        Constraints { max_temp_c: None, power_budget_w: Some(1e-6) },
+    ];
+    let outcome = Campaign::new(
+        vec![cube3d::workloads::Workload::gemm(Gemm::new(64, 147, 255))],
+        Grid::new()
+            .axis(Axis::Tiers(vec![1, 2]))
+            .axis(Axis::Constraints(levels)),
+        CampaignMode::Point,
+    )
+    .base(PointSpec { mac_budget: 4096, ..PointSpec::default() })
+    .run();
+    assert_eq!(outcome.points.len(), 4, "2 tiers × 2 constraint levels");
+    let feas: Vec<bool> = outcome.points.iter().map(|p| p.feasible()).collect();
+    assert_eq!(feas, vec![true, false, true, false]);
+    // The feasible front only ever holds unconstrained-level points.
+    assert!(outcome.feasible_front.iter().all(|p| p.feasible()));
+    assert!(!outcome.feasible_front.is_empty());
+}

@@ -79,7 +79,7 @@ fn main() -> anyhow::Result<()> {
     println!("{}", t.to_ascii());
 
     let speedups: Vec<f64> = results.iter().map(|r| r.modeled_speedup_3d).collect();
-    let m = coord.finish();
+    let m = coord.finish()?;
     println!("numerics: max relative error {max_err:.2e} (all {n_jobs} outputs verified)");
     println!(
         "latency:  p50 {:.0} µs   p95 {:.0} µs   throughput {:.1} jobs/s   wall {:.2} s",

@@ -56,7 +56,7 @@ fn main() {
             .collect();
         let results = coord.run_trace(jobs).unwrap();
         black_box(results.len());
-        let m = coord.finish();
+        let m = coord.finish().unwrap();
         black_box(m.jobs_completed);
     });
 

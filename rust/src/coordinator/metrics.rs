@@ -1,36 +1,34 @@
-//! Serving metrics: counters plus a latency reservoir with percentiles.
+//! Coordinator-facing metrics: the legacy counter/summary API, now derived
+//! from the serving pool's streaming histograms ([`PoolMetrics`]).
 
-use crate::util::stats::{boxplot, Boxplot};
+use crate::serve::{HistSnapshot, PoolMetrics};
+use crate::util::stats::Boxplot;
 use std::time::Duration;
 
-/// Aggregated coordinator metrics.
+/// Aggregated coordinator metrics (the 1-shard view of a pool snapshot).
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
     pub jobs_completed: u64,
     pub batches: u64,
     pub pjrt_executions: u64,
     pub tiled_folds: u64,
-    latencies_us: Vec<f64>,
-    exec_us: Vec<f64>,
-    started: Option<std::time::Instant>,
     pub wall: Duration,
+    latency: HistSnapshot,
+    exec: HistSnapshot,
 }
 
 impl Metrics {
-    pub fn start(&mut self) {
-        self.started = Some(std::time::Instant::now());
-    }
-
-    pub fn stop(&mut self) {
-        if let Some(s) = self.started.take() {
-            self.wall += s.elapsed();
+    /// Collapse a pool snapshot into the legacy aggregate view.
+    pub fn from_pool(p: &PoolMetrics) -> Self {
+        Metrics {
+            jobs_completed: p.completed(),
+            batches: p.batches(),
+            pjrt_executions: p.executions(),
+            tiled_folds: p.tiled_folds(),
+            wall: p.wall,
+            latency: p.latency(),
+            exec: p.exec_latency(),
         }
-    }
-
-    pub fn record_job(&mut self, total: Duration, exec: Duration) {
-        self.jobs_completed += 1;
-        self.latencies_us.push(total.as_secs_f64() * 1e6);
-        self.exec_us.push(exec.as_secs_f64() * 1e6);
     }
 
     /// Jobs per second over the recorded wall time.
@@ -43,52 +41,53 @@ impl Metrics {
         }
     }
 
-    /// End-to-end latency distribution (µs).
+    /// End-to-end latency distribution (µs; quartiles are streaming
+    /// histogram estimates, min/max/mean are exact).
     pub fn latency_summary(&self) -> Option<Boxplot> {
-        if self.latencies_us.is_empty() {
-            None
-        } else {
-            Some(boxplot(&self.latencies_us))
-        }
+        self.latency.boxplot()
     }
 
     /// Executor-only latency distribution (µs).
     pub fn exec_summary(&self) -> Option<Boxplot> {
-        if self.exec_us.is_empty() {
-            None
-        } else {
-            Some(boxplot(&self.exec_us))
-        }
+        self.exec.boxplot()
     }
 
     pub fn p95_latency_us(&self) -> f64 {
-        if self.latencies_us.is_empty() {
-            return 0.0;
-        }
-        let mut v = self.latencies_us.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        crate::util::stats::quantile(&v, 0.95)
+        self.latency.quantile_us(0.95)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::serve::LatencyHistogram;
+
+    fn hist(samples: &[u64]) -> HistSnapshot {
+        let h = LatencyHistogram::default();
+        for &s in samples {
+            h.record(Duration::from_micros(s));
+        }
+        h.snapshot()
+    }
 
     #[test]
-    fn records_and_summarizes() {
-        let mut m = Metrics::default();
-        m.start();
-        for i in 1..=10 {
-            m.record_job(Duration::from_micros(i * 100), Duration::from_micros(i * 50));
-        }
-        m.stop();
-        assert_eq!(m.jobs_completed, 10);
+    fn summaries_from_histograms() {
+        let m = Metrics {
+            jobs_completed: 10,
+            batches: 3,
+            pjrt_executions: 10,
+            tiled_folds: 0,
+            wall: Duration::from_secs(1),
+            latency: hist(&[100, 200, 300, 400, 500, 600, 700, 800, 900, 1000]),
+            exec: hist(&[50, 100, 150]),
+        };
         let s = m.latency_summary().unwrap();
         assert_eq!(s.n, 10);
         assert!(s.max >= s.min);
+        assert!(s.median >= s.q1 && s.q3 >= s.median);
         assert!(m.p95_latency_us() >= s.median);
-        assert!(m.throughput() > 0.0);
+        assert!((m.throughput() - 10.0).abs() < 1e-9);
+        assert_eq!(m.exec_summary().unwrap().n, 3);
     }
 
     #[test]

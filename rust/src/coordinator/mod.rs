@@ -5,8 +5,11 @@
 //! (an exact-shape AOT artifact when one exists, otherwise tiled execution
 //! over a base artifact — the runtime-level analogue of the paper's
 //! serialization folds), the **batcher** groups same-plan jobs to amortize
-//! dispatch, and a single **executor** thread owns the PJRT runtime and
-//! drains batches, returning results over channels.
+//! dispatch, and an **executor** thread owns the PJRT runtime and drains
+//! batches, returning results over channels. Since the [`crate::serve`]
+//! subsystem landed, the [`Coordinator`] is the 1-shard special case of
+//! its [`crate::serve::ShardPool`] — same router/batcher, plus graceful
+//! executor-failure semantics (typed errors instead of panics).
 //!
 //! The router also consults the shared cached [`crate::eval::Evaluator`]
 //! (Eq. 2 + optimizer behind the scenario pipeline) to annotate every job

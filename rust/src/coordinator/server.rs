@@ -1,187 +1,113 @@
-//! The coordinator: submit queue → router → batcher → executor thread.
+//! The coordinator: the 1-shard special case of the sharded serving pool.
 //!
-//! `tokio` is unavailable offline, so the leader/worker topology uses std
-//! threads and mpsc channels: one executor thread owns the PJRT [`Runtime`]
-//! (PJRT handles are not `Sync`); the public handle is `Send + Clone`-free
-//! but cheap to drive from the caller's thread.
+//! Historically this module owned its own executor thread; that machinery
+//! now lives in [`crate::serve`] (N shards, admission control, graceful
+//! failure) and the `Coordinator` is a thin façade over a
+//! [`ShardPool`] with one shard and an unbounded queue — preserving the
+//! original submit/run_trace/finish semantics while gaining the pool's
+//! fault tolerance: an executor panic surfaces as a typed
+//! [`ServeError`] and every pending reply channel is drained with an
+//! error instead of hanging (or aborting the process, as the old
+//! `expect("executor panicked")` did).
 
-use super::batcher::{Batcher, BatcherConfig};
+use super::batcher::BatcherConfig;
 use super::job::{GemmJob, JobResult};
-use super::router::{ExecutionPlan, Router, RouterConfig};
 use super::metrics::Metrics;
-use super::tiler::tiled_gemm;
-use crate::runtime::Runtime;
+use super::router::RouterConfig;
+use crate::serve::{ServeConfig, ServeError, ServeReply, ShardPool};
 use anyhow::{anyhow, Result};
 use std::path::Path;
 use std::sync::mpsc;
-use std::time::Instant;
-
-enum Command {
-    Run(GemmJob, Instant, mpsc::Sender<Result<JobResult>>),
-    Shutdown,
-}
 
 /// Handle to a running coordinator.
 pub struct Coordinator {
-    tx: mpsc::Sender<Command>,
-    worker: Option<std::thread::JoinHandle<Metrics>>,
+    pool: Option<ShardPool>,
 }
 
 impl Coordinator {
-    /// Start the executor thread: loads the runtime, warms up the
-    /// executable cache, builds the router from the manifest.
+    /// Start the executor: loads the runtime, warms up the executable
+    /// cache, builds the router from the manifest.
     pub fn start(
         artifact_dir: &Path,
         router_cfg: RouterConfig,
         batcher_cfg: BatcherConfig,
     ) -> Result<Self> {
-        let (tx, rx) = mpsc::channel::<Command>();
-        let dir = artifact_dir.to_path_buf();
-        // Fail fast: validate the runtime on the caller's thread first.
-        {
-            let rt = Runtime::new(&dir)?;
-            if rt.manifest().get(&router_cfg.base_artifact).is_none() {
-                return Err(anyhow!(
-                    "base artifact '{}' not in manifest",
-                    router_cfg.base_artifact
-                ));
-            }
-        }
-        let worker = std::thread::Builder::new()
-            .name("cube3d-executor".into())
-            .spawn(move || executor_loop(&dir, router_cfg, batcher_cfg, rx))
-            .expect("spawn executor");
-        Ok(Coordinator { tx, worker: Some(worker) })
+        let cfg = ServeConfig {
+            shards: 1,
+            // The coordinator predates admission control; keep its queue
+            // unbounded so run_trace of arbitrary size never rejects.
+            max_depth: usize::MAX,
+            router: router_cfg,
+            batcher: batcher_cfg,
+        };
+        Ok(Coordinator { pool: Some(ShardPool::start(artifact_dir, cfg)?) })
     }
 
-    /// Submit a job; returns a receiver for its result.
-    pub fn submit(&self, job: GemmJob) -> mpsc::Receiver<Result<JobResult>> {
-        let (rtx, rrx) = mpsc::channel();
-        let _ = self.tx.send(Command::Run(job, Instant::now(), rtx));
-        rrx
+    fn pool(&self) -> &ShardPool {
+        self.pool.as_ref().expect("pool present until finish")
+    }
+
+    /// Submit a job; returns a receiver for its reply. The reply arrives
+    /// exactly once — as a [`crate::serve::ServeOutput`] or a typed
+    /// [`ServeError`] (e.g. `ShardFailed` if the executor panicked while
+    /// the job was queued).
+    pub fn submit(&self, job: GemmJob) -> mpsc::Receiver<ServeReply> {
+        match self.pool().submit_job(job) {
+            Ok(rx) => rx,
+            // 1 shard + unbounded depth: only possible refusal is a dead
+            // executor. Surface it through the same reply channel.
+            Err(e) => {
+                let (tx, rx) = mpsc::channel();
+                let _ = tx.send(Err(e));
+                rx
+            }
+        }
     }
 
     /// Drive a whole trace through the queue and collect results in order.
+    /// Errors name the failing job (id + label), not just the transport.
     pub fn run_trace(&self, jobs: Vec<GemmJob>) -> Result<Vec<JobResult>> {
+        let idents: Vec<(u64, String)> = jobs.iter().map(|j| (j.id, j.label.clone())).collect();
         let receivers: Vec<_> = jobs.into_iter().map(|j| self.submit(j)).collect();
         receivers
             .into_iter()
-            .map(|r| r.recv().map_err(|e| anyhow!("executor died: {e}"))?)
+            .zip(idents)
+            .map(|(rx, (id, label))| {
+                let reply = rx
+                    .recv()
+                    .map_err(|_| anyhow!("job {id} ('{label}'): executor died before replying"))?;
+                let out = reply.map_err(|e| anyhow!("job {id} ('{label}') failed: {e}"))?;
+                out.into_gemm()
+                    .ok_or_else(|| anyhow!("job {id} ('{label}'): unexpected non-GEMM reply"))
+            })
             .collect()
     }
 
-    /// Shut down and return the executor's metrics.
-    pub fn finish(mut self) -> Metrics {
-        let _ = self.tx.send(Command::Shutdown);
-        self.worker
-            .take()
-            .expect("finish called once")
-            .join()
-            .expect("executor panicked")
+    /// Shut down and return the executor's metrics. If the executor
+    /// panicked, returns the typed [`ServeError::ShardPanicked`] instead
+    /// of propagating the panic — pending submissions have already been
+    /// answered with errors, so no caller is left hanging.
+    pub fn finish(mut self) -> Result<Metrics, ServeError> {
+        let pm = self.pool.take().expect("finish called once").finish();
+        if let Some(s) = pm.shards.iter().find(|s| s.panicked) {
+            return Err(ServeError::ShardPanicked { shard: s.shard, completed: s.completed });
+        }
+        Ok(Metrics::from_pool(&pm))
+    }
+
+    /// Live metrics snapshot (without shutting down).
+    pub fn metrics(&self) -> Metrics {
+        Metrics::from_pool(&self.pool().metrics())
+    }
+
+    /// Fault-injection hook shared with the pool (tests).
+    #[doc(hidden)]
+    pub fn poison_executor(&self) {
+        self.pool().poison_shard(0);
     }
 }
 
-impl Drop for Coordinator {
-    fn drop(&mut self) {
-        let _ = self.tx.send(Command::Shutdown);
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
-    }
-}
-
-fn executor_loop(
-    dir: &Path,
-    router_cfg: RouterConfig,
-    batcher_cfg: BatcherConfig,
-    rx: mpsc::Receiver<Command>,
-) -> Metrics {
-    let mut rt = Runtime::new(dir).expect("runtime validated at start");
-    let _ = rt.warm_up();
-    let mut router = Router::new(router_cfg, rt.manifest());
-    let mut batcher = Batcher::new(batcher_cfg);
-    let mut metrics = Metrics::default();
-    metrics.start();
-    // Reply channels per job id.
-    let mut replies: std::collections::HashMap<u64, (mpsc::Sender<Result<JobResult>>, Instant)> =
-        std::collections::HashMap::new();
-
-    let mut shutdown = false;
-    while !shutdown || !batcher.is_empty() {
-        // Ingest: block for the first command when idle, then drain.
-        if batcher.is_empty() && !shutdown {
-            match rx.recv() {
-                Ok(cmd) => ingest(cmd, &mut batcher, &mut router, &mut replies, &mut shutdown),
-                Err(_) => break,
-            }
-        }
-        while let Ok(cmd) = rx.try_recv() {
-            ingest(cmd, &mut batcher, &mut router, &mut replies, &mut shutdown);
-            if batcher.ready() {
-                break;
-            }
-        }
-        // Drain one batch.
-        if let Some(batch) = batcher.next_batch() {
-            metrics.batches += 1;
-            for (job, _) in batch.jobs {
-                let (reply, submit_t) = replies
-                    .remove(&job.id)
-                    .expect("every queued job has a reply channel");
-                let g = job.gemm();
-                let (design, speedup) = router.design_for(&g);
-                let exec_start = Instant::now();
-                let (result, folds) = match &batch.plan {
-                    ExecutionPlan::Exact { artifact } => {
-                        (rt.run_gemm(artifact, &job.a, &job.b), 1u64)
-                    }
-                    ExecutionPlan::Tiled { artifact } => {
-                        match tiled_gemm(&mut rt, artifact, &job.a, &job.b) {
-                            Ok((out, folds)) => (Ok(out), folds),
-                            Err(e) => (Err(e), 0),
-                        }
-                    }
-                };
-                let exec_time = exec_start.elapsed();
-                let total_time = submit_t.elapsed();
-                metrics.tiled_folds += folds.saturating_sub(1);
-                let msg = result.map(|output| {
-                    metrics.record_job(total_time, exec_time);
-                    JobResult {
-                        id: job.id,
-                        label: job.label.clone(),
-                        output,
-                        exec_time,
-                        total_time,
-                        plan: batch.plan.describe(),
-                        design,
-                        modeled_speedup_3d: speedup,
-                    }
-                });
-                let _ = reply.send(msg);
-            }
-        }
-    }
-    metrics.pjrt_executions = rt.executions;
-    metrics.stop();
-    metrics
-}
-
-fn ingest(
-    cmd: Command,
-    batcher: &mut Batcher,
-    router: &mut Router,
-    replies: &mut std::collections::HashMap<u64, (mpsc::Sender<Result<JobResult>>, Instant)>,
-    shutdown: &mut bool,
-) {
-    match cmd {
-        Command::Run(job, t, reply) => {
-            let plan = router.plan(&job.gemm());
-            replies.insert(job.id, (reply, t));
-            batcher.push(job, plan);
-        }
-        Command::Shutdown => *shutdown = true,
-    }
-}
+// Drop: the pool (if finish was not called) shuts its shard down and
+// joins without propagating worker panics.
 
 // Integration tests (require artifacts) live in rust/tests/coordinator_e2e.rs.

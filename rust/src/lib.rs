@@ -13,7 +13,9 @@
 //!   the paper), a cycle-accurate systolic-array simulator with per-link
 //!   activity traces, power / thermal / area models, a design-space
 //!   exploration engine, a PJRT runtime that executes the AOT artifacts, and
-//!   a serving coordinator (router + batcher) used by the end-to-end driver.
+//!   and a sharded serving engine (router + continuous batcher + admission
+//!   control, [`serve`]) used by the end-to-end driver and load-test
+//!   harness.
 //!
 //! ## Quick tour
 //!
@@ -72,6 +74,7 @@ pub mod power;
 pub mod report;
 pub mod runtime;
 pub mod schedule;
+pub mod serve;
 pub mod sim;
 pub mod thermal;
 pub mod util;

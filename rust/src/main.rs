@@ -16,8 +16,14 @@
 //! * `simulate`  — run the exact cycle simulator on a small GEMM and check
 //!                 it against the analytical model and a direct matmul.
 //! * `reproduce` — regenerate every paper table/figure into an output dir.
-//! * `serve`     — start the coordinator and drive a GEMM trace through the
-//!                 runtime (uses `artifacts/`).
+//! * `serve`     — start the serving engine (1-shard coordinator or an
+//!                 N-shard pool, `--shards`) and drive a GEMM trace through
+//!                 the runtime (uses `artifacts/`).
+//! * `loadtest`  — open-loop load test of the sharded serving engine:
+//!                 target-QPS ramp, mixed GEMM/analyze request mix, optional
+//!                 mid-run shard kill; writes a `BENCH_serve.json`
+//!                 trajectory artifact (per-shard p50/p95/p99, queue depths,
+//!                 batch occupancy, cache stats).
 //! * `schedule`  — partition a whole network across the stack's tiers and
 //!                 evaluate the layer pipeline (latency, steady-state
 //!                 throughput, bottleneck stage, vertical traffic, per-stage
@@ -113,6 +119,51 @@ fn workload_opts() -> Vec<OptSpec> {
         OptSpec { name: "out-dir", takes_value: true, help: "output directory (default reports)" },
         OptSpec { name: "jobs", takes_value: true, help: "serve: number of jobs (default 32)" },
         OptSpec { name: "seed", takes_value: true, help: "random seed (default 7)" },
+        OptSpec {
+            name: "shards",
+            takes_value: true,
+            help: "serve: shard count; loadtest: comma list of shard counts (default 1,2)",
+        },
+        OptSpec {
+            name: "requests",
+            takes_value: true,
+            help: "loadtest: requests offered per run (default 5000)",
+        },
+        OptSpec {
+            name: "qps-start",
+            takes_value: true,
+            help: "loadtest: arrival rate at ramp start, 0 = unthrottled (default 0)",
+        },
+        OptSpec {
+            name: "qps-end",
+            takes_value: true,
+            help: "loadtest: arrival rate at ramp end (default 0)",
+        },
+        OptSpec {
+            name: "analyze-frac",
+            takes_value: true,
+            help: "loadtest: fraction of analyze (model-plane) requests (default 0.3)",
+        },
+        OptSpec {
+            name: "max-depth",
+            takes_value: true,
+            help: "serve/loadtest: per-shard admission bound (default 256)",
+        },
+        OptSpec {
+            name: "kill-shard",
+            takes_value: true,
+            help: "loadtest: fault injection — poison this shard mid-run",
+        },
+        OptSpec {
+            name: "kill-after",
+            takes_value: true,
+            help: "loadtest: submissions before the kill fires (default 0)",
+        },
+        OptSpec {
+            name: "out",
+            takes_value: true,
+            help: "loadtest: artifact path (default BENCH_serve.json)",
+        },
     ]
 }
 
@@ -154,6 +205,7 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "simulate" => cmd_simulate(&args),
         "reproduce" => cmd_reproduce(&args),
         "serve" => cmd_serve(&args),
+        "loadtest" => cmd_loadtest(&args),
         "schedule" => cmd_schedule(&args),
         "workloads" => cmd_workloads(),
         "dataflows" => cmd_dataflows(&args),
@@ -176,7 +228,8 @@ fn print_help() {
         ("thermal", "Fig.-8-style thermal study"),
         ("simulate", "exact cycle simulation, checked vs model + matmul"),
         ("reproduce", "regenerate every paper table/figure"),
-        ("serve", "run the serving coordinator on a GEMM trace"),
+        ("serve", "run the serving engine (1-shard or --shards N) on a GEMM trace"),
+        ("loadtest", "open-loop load test of the shard pool → BENCH_serve.json"),
         ("schedule", "tier-partition a network and evaluate the layer pipeline"),
         ("workloads", "print the Table I workload library"),
         ("dataflows", "four-way OS/WS/IS/dOS comparison on a workload"),
@@ -510,8 +563,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let dir = find_artifact_dir()?;
     let n_jobs = args.get_u64_or("jobs", 32)? as usize;
     let seed = args.get_u64_or("seed", 7)?;
-    println!("starting coordinator on artifacts at {}", dir.display());
-    let coord = Coordinator::start(&dir, RouterConfig::default(), BatcherConfig::default())?;
+    let shards = args.get_u64_or("shards", 1)? as usize;
 
     // Build a trace: quickstart-shaped jobs (exact-artifact fast path)
     // interleaved with small Table-I-derived shapes (tiled path).
@@ -536,6 +588,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         jobs.push(GemmJob::new(i, label, a, b));
     }
 
+    if shards > 1 {
+        return serve_on_pool(&dir, shards, args.get_u64_or("max-depth", 256)? as usize, jobs);
+    }
+
+    println!("starting coordinator on artifacts at {}", dir.display());
+    let coord = Coordinator::start(&dir, RouterConfig::default(), BatcherConfig::default())?;
     let results = coord.run_trace(jobs)?;
     let mut t = Table::new(["id", "label", "plan", "exec µs", "modeled 3D design", "modeled speedup"]);
     for r in results.iter().take(12) {
@@ -549,7 +607,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         ]);
     }
     println!("{}", t.to_ascii());
-    let m = coord.finish();
+    let m = coord.finish()?;
     println!(
         "jobs {}   batches {}   pjrt execs {}   throughput {:.1} jobs/s   p95 latency {:.0} µs",
         m.jobs_completed,
@@ -565,6 +623,127 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         "router design cache: {} hits / {} misses ({} unique design points)",
         cache.hits, cache.misses, cache.len
     );
+    Ok(())
+}
+
+/// The `--shards N` serve path: same trace, N-shard pool, per-shard stats.
+fn serve_on_pool(
+    dir: &Path,
+    shards: usize,
+    max_depth: usize,
+    jobs: Vec<GemmJob>,
+) -> anyhow::Result<()> {
+    use cube3d::serve::{ServeConfig, ShardPool};
+    println!("starting {shards}-shard pool on artifacts at {}", dir.display());
+    let pool = ShardPool::start(dir, ServeConfig { shards, max_depth, ..ServeConfig::default() })?;
+    let receivers: Vec<_> = jobs
+        .into_iter()
+        .map(|j| pool.submit_job(j).map_err(anyhow::Error::from))
+        .collect::<anyhow::Result<_>>()?;
+    let mut ok = 0u64;
+    for rx in receivers {
+        match rx.recv()? {
+            Ok(_) => ok += 1,
+            Err(e) => eprintln!("job failed: {e}"),
+        }
+    }
+    let m = pool.finish();
+    let lat = m.latency();
+    println!(
+        "jobs {ok}   throughput {:.1} jobs/s   p50 {:.0} µs   p99 {:.0} µs   lost {}",
+        m.throughput(),
+        lat.quantile_us(0.50),
+        lat.quantile_us(0.99),
+        m.lost()
+    );
+    let mut t = Table::new(["shard", "completed", "batches", "occupancy", "peak depth", "execs"]);
+    for s in &m.shards {
+        t.row([
+            s.shard.to_string(),
+            s.completed.to_string(),
+            s.batches.to_string(),
+            format!("{:.2}", s.batch_occupancy()),
+            s.peak_depth.to_string(),
+            s.executions.to_string(),
+        ]);
+    }
+    println!("{}", t.to_ascii());
+    Ok(())
+}
+
+fn cmd_loadtest(args: &Args) -> anyhow::Result<()> {
+    use cube3d::serve::{loadtest::run_loadtest, LoadtestConfig};
+    let dir = find_artifact_dir()?;
+    let mut cfg = match args.get("config") {
+        Some(path) => LoadtestConfig::load(Path::new(path))?,
+        None => LoadtestConfig::default(),
+    };
+    if let Some(list) = args.get_u64_list("shards")? {
+        cfg.shards = list.into_iter().map(|v| v as usize).collect();
+    }
+    if let Some(v) = args.get("requests") {
+        cfg.requests = v.parse()?;
+    }
+    if let Some(v) = args.get_f64("qps-start")? {
+        cfg.qps_start = v;
+    }
+    if let Some(v) = args.get_f64("qps-end")? {
+        cfg.qps_end = v;
+    }
+    if let Some(v) = args.get_f64("analyze-frac")? {
+        cfg.analyze_frac = v;
+    }
+    if let Some(v) = args.get("max-depth") {
+        cfg.max_depth = v.parse()?;
+    }
+    if let Some(v) = args.get("kill-shard") {
+        cfg.kill_shard = Some(v.parse()?);
+    }
+    if let Some(v) = args.get("kill-after") {
+        cfg.kill_after = v.parse()?;
+    }
+    if let Some(v) = args.get("seed") {
+        cfg.seed = v.parse()?;
+    }
+    cfg.validate()?;
+    let out = args.get_or("out", "BENCH_serve.json");
+
+    println!(
+        "loadtest: {} requests per run, shard counts {:?}, qps {}→{}, analyze {:.0}%, depth {}",
+        cfg.requests,
+        cfg.shards,
+        cfg.qps_start,
+        cfg.qps_end,
+        cfg.analyze_frac * 100.0,
+        cfg.max_depth
+    );
+    let (doc, runs) = run_loadtest(&dir, &cfg)?;
+    let mut t = Table::new(["shards", "offered", "tput/s", "p50 µs", "p99 µs", "lost"]);
+    for r in &runs {
+        t.row([
+            r.shards.to_string(),
+            r.offered.to_string(),
+            format!("{:.1}", r.throughput),
+            format!("{:.0}", r.p50_us),
+            format!("{:.0}", r.p99_us),
+            r.lost.to_string(),
+        ]);
+    }
+    println!("{}", t.to_ascii());
+    if let (Some(base), Some(multi)) = (
+        runs.iter().find(|r| r.shards == 1),
+        runs.iter().filter(|r| r.shards > 1).max_by_key(|r| r.shards),
+    ) {
+        if base.throughput > 0.0 {
+            println!(
+                "scaling: {} shards sustain {:.2}x the 1-shard throughput",
+                multi.shards,
+                multi.throughput / base.throughput
+            );
+        }
+    }
+    std::fs::write(out, doc.to_string_pretty())?;
+    println!("wrote {out}");
     Ok(())
 }
 

@@ -1,0 +1,491 @@
+//! Open-loop load-test harness for the shard pool.
+//!
+//! Requests arrive on a schedule the *generator* controls (open loop: the
+//! arrival process does not slow down when the server does — the honest
+//! way to measure a serving system, since closed-loop generators hide
+//! queueing collapse). The generator ramps its target QPS linearly from
+//! `qps_start` to `qps_end` over the run (`0` = no throttle, i.e. a
+//! capacity probe), draws each request from a weighted GEMM/analyze mix,
+//! and drops the reply receivers — accounting is done by the pool's
+//! reply-time stats, so the invariant checked at the end is exact:
+//! `accepted == completed + failed` (zero lost jobs).
+//!
+//! One run per configured shard count, on the identical request sequence
+//! (same seed), makes the scaling claim directly comparable; an optional
+//! mid-run shard kill turns the same harness into a fault-injection
+//! campaign. The trajectory (periodic metric snapshots) and final
+//! summaries are written as the `BENCH_serve.json` artifact.
+
+use super::pool::{ServeConfig, ShardPool};
+use super::request::{AnalyzeRequest, ServeRequest};
+use crate::coordinator::GemmJob;
+use crate::sim::Matrix;
+use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
+use crate::workloads::{table1, Gemm};
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+/// One entry of the request mix: a GEMM shape with a sampling weight.
+#[derive(Debug, Clone)]
+pub struct MixEntry {
+    pub label: String,
+    pub gemm: Gemm,
+    pub weight: f64,
+}
+
+/// Load-test configuration (JSON file + CLI overrides).
+#[derive(Debug, Clone)]
+pub struct LoadtestConfig {
+    /// Shard counts to run, each on the identical request sequence.
+    pub shards: Vec<usize>,
+    /// Requests offered per run.
+    pub requests: u64,
+    /// Target arrival rate at the start / end of the run (linear ramp
+    /// between them). `0` disables throttling: a capacity probe.
+    pub qps_start: f64,
+    pub qps_end: f64,
+    /// Fraction of requests that are model-plane analyze queries.
+    pub analyze_frac: f64,
+    /// Per-shard admission bound (in-flight requests).
+    pub max_depth: usize,
+    /// Weighted data-plane shapes. Empty = built-in default mix.
+    pub mix: Vec<MixEntry>,
+    /// MAC budget for analyze queries.
+    pub mac_budget: u64,
+    /// Fault injection: poison this shard after `kill_after` submissions.
+    pub kill_shard: Option<usize>,
+    pub kill_after: u64,
+    /// RNG seed (same seed ⇒ identical request sequence across runs).
+    pub seed: u64,
+    /// Trajectory sampling period.
+    pub sample_every: Duration,
+}
+
+impl Default for LoadtestConfig {
+    fn default() -> Self {
+        LoadtestConfig {
+            shards: vec![1, 2],
+            requests: 5_000,
+            qps_start: 0.0,
+            qps_end: 0.0,
+            analyze_frac: 0.3,
+            max_depth: 256,
+            mix: Vec::new(),
+            mac_budget: 1 << 18,
+            kill_shard: None,
+            kill_after: 0,
+            seed: 42,
+            sample_every: Duration::from_millis(250),
+        }
+    }
+}
+
+impl LoadtestConfig {
+    /// Default data-plane mix: the quickstart artifact's exact shape
+    /// (batched, cache-warm path) plus two tiled shapes of different
+    /// sizes — so both router plans and several shard-routing keys are
+    /// exercised.
+    pub fn default_mix() -> Vec<MixEntry> {
+        vec![
+            MixEntry { label: "exact64".into(), gemm: Gemm::new(64, 96, 256), weight: 0.6 },
+            MixEntry { label: "tiled20".into(), gemm: Gemm::new(20, 25, 30), weight: 0.3 },
+            MixEntry { label: "tiled100".into(), gemm: Gemm::new(100, 60, 80), weight: 0.1 },
+        ]
+    }
+
+    /// Parse from a JSON document (see `configs/serve_loadtest.json`).
+    /// Unknown keys are ignored; missing keys keep their defaults.
+    pub fn from_json(doc: &Json) -> Result<Self> {
+        let mut cfg = LoadtestConfig::default();
+        let num = |k: &str| doc.get(k).and_then(Json::as_f64);
+        if let Some(Json::Arr(xs)) = doc.get("shards") {
+            cfg.shards = xs
+                .iter()
+                .map(|x| {
+                    x.as_u64()
+                        .map(|v| v as usize)
+                        .ok_or_else(|| anyhow!("shards entries must be positive integers"))
+                })
+                .collect::<Result<_>>()?;
+        }
+        if let Some(v) = doc.get("requests").and_then(Json::as_u64) {
+            cfg.requests = v;
+        }
+        if let Some(v) = num("qps_start") {
+            cfg.qps_start = v;
+        }
+        if let Some(v) = num("qps_end") {
+            cfg.qps_end = v;
+        }
+        if let Some(v) = num("analyze_frac") {
+            cfg.analyze_frac = v;
+        }
+        if let Some(v) = doc.get("max_depth").and_then(Json::as_u64) {
+            cfg.max_depth = v as usize;
+        }
+        if let Some(v) = doc.get("mac_budget").and_then(Json::as_u64) {
+            cfg.mac_budget = v;
+        }
+        if let Some(v) = doc.get("seed").and_then(Json::as_u64) {
+            cfg.seed = v;
+        }
+        if let Some(v) = doc.get("kill_shard").and_then(Json::as_u64) {
+            cfg.kill_shard = Some(v as usize);
+        }
+        if let Some(v) = doc.get("kill_after").and_then(Json::as_u64) {
+            cfg.kill_after = v;
+        }
+        if let Some(v) = num("sample_every_ms") {
+            cfg.sample_every = Duration::from_millis(v.max(1.0) as u64);
+        }
+        if let Some(Json::Arr(xs)) = doc.get("mix") {
+            cfg.mix = xs
+                .iter()
+                .map(|e| {
+                    let dim = |k: &str| {
+                        e.get(k)
+                            .and_then(Json::as_u64)
+                            .ok_or_else(|| anyhow!("mix entry needs numeric '{k}'"))
+                    };
+                    Ok(MixEntry {
+                        label: e
+                            .get("label")
+                            .and_then(Json::as_str)
+                            .unwrap_or("mix")
+                            .to_string(),
+                        gemm: Gemm::new(dim("m")?, dim("n")?, dim("k")?),
+                        weight: e.get("weight").and_then(Json::as_f64).unwrap_or(1.0),
+                    })
+                })
+                .collect::<Result<_>>()?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading loadtest config {}", path.display()))?;
+        let doc = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        Self::from_json(&doc)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.shards.is_empty() || self.shards.contains(&0) {
+            return Err(anyhow!("shards must be a non-empty list of positive counts"));
+        }
+        if self.requests == 0 {
+            return Err(anyhow!("requests must be positive"));
+        }
+        if !(0.0..=1.0).contains(&self.analyze_frac) {
+            return Err(anyhow!("analyze_frac must be in [0, 1]"));
+        }
+        if self.qps_start < 0.0 || self.qps_end < 0.0 {
+            return Err(anyhow!("qps must be non-negative (0 = unthrottled)"));
+        }
+        if self.max_depth == 0 {
+            return Err(anyhow!("max_depth must be positive"));
+        }
+        Ok(())
+    }
+
+    fn effective_mix(&self) -> Vec<MixEntry> {
+        if self.mix.is_empty() {
+            Self::default_mix()
+        } else {
+            self.mix.clone()
+        }
+    }
+}
+
+/// The pre-generated request sequence (identical across shard counts).
+struct RequestPlan {
+    /// (mix index or analyze marker, request id). Analyze shapes come
+    /// from the paper's Table I, cycling.
+    kinds: Vec<PlannedKind>,
+    /// One matrix pair per data-plane mix entry, cloned per request.
+    inputs: Vec<(Matrix<f32>, Matrix<f32>)>,
+    mix: Vec<MixEntry>,
+    /// Analyze-shape pool: the paper's Table I layers.
+    analyze: Vec<(&'static str, Gemm)>,
+}
+
+#[derive(Clone, Copy)]
+enum PlannedKind {
+    Gemm { mix: usize },
+    Analyze { table1: usize },
+}
+
+fn build_plan(cfg: &LoadtestConfig) -> RequestPlan {
+    let mix = cfg.effective_mix();
+    let mut rng = Rng::new(cfg.seed);
+    let inputs: Vec<(Matrix<f32>, Matrix<f32>)> = mix
+        .iter()
+        .map(|e| {
+            let (m, k, n) = (e.gemm.m as usize, e.gemm.k as usize, e.gemm.n as usize);
+            let mut f = |_: usize, _: usize| (rng.gen_range(200) as f32 - 100.0) / 50.0;
+            (Matrix::from_fn(m, k, &mut f), Matrix::from_fn(k, n, &mut f))
+        })
+        .collect();
+    let total_w: f64 = mix.iter().map(|e| e.weight.max(0.0)).sum();
+    let t1 = table1();
+    let kinds = (0..cfg.requests)
+        .map(|i| {
+            if rng.gen_f64() < cfg.analyze_frac {
+                PlannedKind::Analyze { table1: i as usize % t1.len() }
+            } else {
+                let mut pick = rng.gen_f64() * total_w.max(f64::MIN_POSITIVE);
+                let mut idx = 0;
+                for (j, e) in mix.iter().enumerate() {
+                    idx = j;
+                    pick -= e.weight.max(0.0);
+                    if pick <= 0.0 {
+                        break;
+                    }
+                }
+                PlannedKind::Gemm { mix: idx }
+            }
+        })
+        .collect();
+    let analyze = t1.iter().map(|e| (e.layer, e.gemm)).collect();
+    RequestPlan { kinds, inputs, mix, analyze }
+}
+
+fn make_request(plan: &RequestPlan, i: u64, mac_budget: u64) -> ServeRequest {
+    match plan.kinds[i as usize] {
+        PlannedKind::Gemm { mix } => {
+            let (a, b) = &plan.inputs[mix];
+            ServeRequest::Gemm(GemmJob::new(i, plan.mix[mix].label.clone(), a.clone(), b.clone()))
+        }
+        PlannedKind::Analyze { table1: t } => {
+            let (layer, gemm) = plan.analyze[t];
+            ServeRequest::Analyze(AnalyzeRequest::new(i, layer, gemm, mac_budget))
+        }
+    }
+}
+
+/// Summary of one run (one shard count) of the load test.
+pub struct RunReport {
+    pub shards: usize,
+    pub offered: u64,
+    pub throughput: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub lost: u64,
+    pub json: Json,
+}
+
+/// Drive one pool configuration through the full request sequence.
+fn run_one(artifact_dir: &Path, cfg: &LoadtestConfig, shards: usize) -> Result<RunReport> {
+    let pool = ShardPool::start(
+        artifact_dir,
+        ServeConfig { shards, max_depth: cfg.max_depth, ..ServeConfig::default() },
+    )?;
+    let plan = build_plan(cfg);
+    let start = Instant::now();
+    let mut trajectory: Vec<Json> = Vec::new();
+    let mut last_sample = start;
+    let mut pool_down = 0u64;
+    let mut killed = false;
+
+    for i in 0..cfg.requests {
+        // Linear QPS ramp; qps 0 = no throttle.
+        let frac = if cfg.requests > 1 { i as f64 / (cfg.requests - 1) as f64 } else { 0.0 };
+        let qps = cfg.qps_start + (cfg.qps_end - cfg.qps_start) * frac;
+        if qps > 0.0 {
+            let target = start + Duration::from_secs_f64(i as f64 / qps);
+            let now = Instant::now();
+            if target > now {
+                std::thread::sleep(target - now);
+            }
+        }
+        if let Some(k) = cfg.kill_shard {
+            if !killed && i >= cfg.kill_after && k < shards {
+                pool.poison_shard(k);
+                killed = true;
+            }
+        }
+        match pool.submit(make_request(&plan, i, cfg.mac_budget)) {
+            Ok(_rx) => {} // open loop: receiver dropped, stats are reply-time
+            Err(e) if e.is_rejection() => {} // counted by the shard
+            Err(_) => pool_down += 1,
+        }
+        if last_sample.elapsed() >= cfg.sample_every {
+            last_sample = Instant::now();
+            trajectory.push(sample(&pool, start, i + 1, pool_down));
+        }
+    }
+
+    // Drain: the arrival process is done; wait until every admitted
+    // request has been answered (bounded queues ⇒ bounded drain time).
+    let drain_deadline = Instant::now() + Duration::from_secs(300);
+    loop {
+        let m = pool.metrics();
+        if m.lost() == 0 {
+            break;
+        }
+        if Instant::now() > drain_deadline {
+            return Err(anyhow!(
+                "drain timeout: {} admitted requests still unanswered",
+                m.lost()
+            ));
+        }
+        trajectory.push(sample(&pool, start, cfg.requests, pool_down));
+        std::thread::sleep(cfg.sample_every.min(Duration::from_millis(100)));
+    }
+    let wall = start.elapsed();
+    let m = pool.finish();
+    let lat = m.latency();
+    let offered = cfg.requests;
+    // Offered-rate throughput: completed work over the *run* wall clock
+    // (submission + drain), comparable across shard counts.
+    let throughput = if wall.as_secs_f64() > 0.0 {
+        m.completed() as f64 / wall.as_secs_f64()
+    } else {
+        0.0
+    };
+    let json = obj([
+        ("shards", Json::Num(shards as f64)),
+        ("offered", Json::Num(offered as f64)),
+        ("pool_down_errors", Json::Num(pool_down as f64)),
+        ("wall_s", Json::Num(wall.as_secs_f64())),
+        ("throughput_per_s", Json::Num(throughput)),
+        ("summary", m.to_json()),
+        ("trajectory", Json::Arr(trajectory)),
+    ]);
+    Ok(RunReport {
+        shards,
+        offered,
+        throughput,
+        p50_us: lat.quantile_us(0.50),
+        p99_us: lat.quantile_us(0.99),
+        lost: m.lost(),
+        json,
+    })
+}
+
+fn sample(pool: &ShardPool, start: Instant, offered: u64, pool_down: u64) -> Json {
+    let m = pool.metrics();
+    obj([
+        ("t_s", Json::Num(start.elapsed().as_secs_f64())),
+        ("offered", Json::Num(offered as f64)),
+        ("pool_down_errors", Json::Num(pool_down as f64)),
+        ("accepted", Json::Num(m.accepted() as f64)),
+        ("completed", Json::Num(m.completed() as f64)),
+        ("failed", Json::Num(m.failed() as f64)),
+        ("rejected", Json::Num(m.rejected() as f64)),
+        ("depth", Json::Arr(m.shards.iter().map(|s| Json::Num(s.depth as f64)).collect())),
+        ("alive", Json::Arr(m.shards.iter().map(|s| Json::Bool(s.alive)).collect())),
+    ])
+}
+
+/// Run the full campaign (one run per configured shard count) and return
+/// the `BENCH_serve.json` document plus per-run reports.
+pub fn run_loadtest(artifact_dir: &Path, cfg: &LoadtestConfig) -> Result<(Json, Vec<RunReport>)> {
+    cfg.validate()?;
+    let mut runs = Vec::new();
+    for &shards in &cfg.shards {
+        runs.push(run_one(artifact_dir, cfg, shards)?);
+    }
+    let scaling = match (
+        runs.iter().find(|r| r.shards == 1),
+        runs.iter().filter(|r| r.shards > 1).max_by_key(|r| r.shards),
+    ) {
+        (Some(base), Some(multi)) if base.throughput > 0.0 => Some(obj([
+            ("base_shards", Json::Num(base.shards as f64)),
+            ("multi_shards", Json::Num(multi.shards as f64)),
+            ("base_throughput_per_s", Json::Num(base.throughput)),
+            ("multi_throughput_per_s", Json::Num(multi.throughput)),
+            ("speedup", Json::Num(multi.throughput / base.throughput)),
+        ])),
+        _ => None,
+    };
+    let doc = obj([
+        ("schema", Json::Str("cube3d/BENCH_serve/v1".into())),
+        (
+            "config",
+            obj([
+                ("requests", Json::Num(cfg.requests as f64)),
+                ("qps_start", Json::Num(cfg.qps_start)),
+                ("qps_end", Json::Num(cfg.qps_end)),
+                ("analyze_frac", Json::Num(cfg.analyze_frac)),
+                ("max_depth", Json::Num(cfg.max_depth as f64)),
+                ("seed", Json::Num(cfg.seed as f64)),
+                (
+                    "kill_shard",
+                    cfg.kill_shard.map_or(Json::Null, |k| Json::Num(k as f64)),
+                ),
+                ("kill_after", Json::Num(cfg.kill_after as f64)),
+            ]),
+        ),
+        ("runs", Json::Arr(runs.iter().map(|r| r.json.clone()).collect())),
+        ("scaling", scaling.unwrap_or(Json::Null)),
+    ]);
+    Ok((doc, runs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_parses_and_validates() {
+        let doc = Json::parse(
+            r#"{
+                "shards": [1, 2], "requests": 500, "qps_start": 100.0,
+                "qps_end": 0, "analyze_frac": 0.25, "max_depth": 32,
+                "seed": 7, "mix": [
+                    {"label": "a", "m": 64, "n": 96, "k": 256, "weight": 2.0},
+                    {"label": "b", "m": 20, "n": 25, "k": 30}
+                ]
+            }"#,
+        )
+        .unwrap();
+        let cfg = LoadtestConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.shards, vec![1, 2]);
+        assert_eq!(cfg.requests, 500);
+        assert_eq!(cfg.max_depth, 32);
+        assert_eq!(cfg.mix.len(), 2);
+        assert_eq!(cfg.mix[0].gemm, Gemm::new(64, 96, 256));
+        assert_eq!(cfg.mix[1].weight, 1.0);
+    }
+
+    #[test]
+    fn config_rejects_bad_values() {
+        for bad in [
+            r#"{"shards": []}"#,
+            r#"{"shards": [0]}"#,
+            r#"{"requests": 0}"#,
+            r#"{"analyze_frac": 1.5}"#,
+            r#"{"max_depth": 0}"#,
+        ] {
+            let doc = Json::parse(bad).unwrap();
+            assert!(LoadtestConfig::from_json(&doc).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn plan_is_deterministic_for_a_seed() {
+        let cfg = LoadtestConfig { requests: 200, ..Default::default() };
+        let (p1, p2) = (build_plan(&cfg), build_plan(&cfg));
+        for i in 0..200u64 {
+            let a = make_request(&p1, i, cfg.mac_budget);
+            let b = make_request(&p2, i, cfg.mac_budget);
+            assert_eq!(a.shape(), b.shape(), "request {i} differs between plans");
+            assert_eq!(a.id(), b.id());
+        }
+    }
+
+    #[test]
+    fn plan_respects_analyze_fraction() {
+        let cfg =
+            LoadtestConfig { requests: 2000, analyze_frac: 0.5, ..Default::default() };
+        let p = build_plan(&cfg);
+        let analyze =
+            p.kinds.iter().filter(|k| matches!(k, PlannedKind::Analyze { .. })).count();
+        let frac = analyze as f64 / 2000.0;
+        assert!((0.4..=0.6).contains(&frac), "analyze fraction {frac}");
+    }
+}

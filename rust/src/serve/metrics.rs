@@ -1,0 +1,494 @@
+//! Serving observability: lock-free per-shard counters and gauges plus
+//! streaming log-bucketed latency histograms with p50/p95/p99 estimation.
+//!
+//! Workers record into [`ShardStats`] (atomics only — no allocation, no
+//! locks on the hot path, O(1) memory regardless of how many requests a
+//! load test drives). Readers take [`ShardMetrics`]/[`PoolMetrics`]
+//! snapshots at any time — the load-test harness samples them into the
+//! `BENCH_serve.json` trajectory while the run is live.
+
+use crate::eval::CacheStats;
+use crate::util::json::{obj, Json};
+use crate::util::stats::Boxplot;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::time::Duration;
+
+/// Histogram resolution: buckets per ×2 of latency.
+const BUCKETS_PER_OCTAVE: usize = 4;
+/// Octaves covered: 1 µs … 2^28 µs ≈ 268 s.
+const OCTAVES: usize = 28;
+const N_BUCKETS: usize = BUCKETS_PER_OCTAVE * OCTAVES;
+
+fn bucket_index(us: f64) -> usize {
+    if us <= 1.0 {
+        0
+    } else {
+        ((us.log2() * BUCKETS_PER_OCTAVE as f64) as usize).min(N_BUCKETS - 1)
+    }
+}
+
+/// Geometric midpoint of bucket `i`, µs.
+fn bucket_value(i: usize) -> f64 {
+    ((i as f64 + 0.5) / BUCKETS_PER_OCTAVE as f64).exp2()
+}
+
+/// Streaming latency histogram: log-spaced buckets (≤ ~9% relative error
+/// per estimate at 4 buckets/octave), atomically updatable from worker
+/// threads, constant memory. Exact min/max/mean are tracked alongside the
+/// buckets; quantile estimates are clamped into `[min, max]`.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    min_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            min_us: AtomicU64::new(u64::MAX),
+            max_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record(&self, d: Duration) {
+        let us = d.as_secs_f64() * 1e6;
+        self.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let ns = d.as_nanos().min(u64::MAX as u128) as u64;
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        let us_int = us.round().max(0.0) as u64;
+        self.min_us.fetch_min(us_int, Ordering::Relaxed);
+        self.max_us.fetch_max(us_int, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum_ns: self.sum_ns.load(Ordering::Relaxed),
+            min_us: self.min_us.load(Ordering::Relaxed),
+            max_us: self.max_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time copy of a [`LatencyHistogram`]; mergeable across shards
+/// for aggregate percentiles.
+#[derive(Debug, Clone)]
+pub struct HistSnapshot {
+    buckets: Vec<u64>,
+    pub count: u64,
+    sum_ns: u64,
+    min_us: u64,
+    max_us: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        // `min_us: u64::MAX` (not 0) so merging into a default-seeded
+        // accumulator preserves the true minimum.
+        HistSnapshot { buckets: Vec::new(), count: 0, sum_ns: 0, min_us: u64::MAX, max_us: 0 }
+    }
+}
+
+impl HistSnapshot {
+    /// Fold another shard's histogram into this one.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        if self.buckets.is_empty() {
+            self.buckets = vec![0; N_BUCKETS];
+        }
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+        self.min_us = self.min_us.min(other.min_us);
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    /// Quantile estimate in µs (`q` in `[0, 1]`). 0 when empty.
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return bucket_value(i).clamp(self.min_us as f64, self.max_us as f64);
+            }
+        }
+        self.max_us as f64
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / 1e3 / self.count as f64
+        }
+    }
+
+    pub fn min_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min_us as f64
+        }
+    }
+
+    pub fn max_us(&self) -> f64 {
+        self.max_us as f64
+    }
+
+    /// Legacy five-number summary (quartiles are histogram estimates).
+    pub fn boxplot(&self) -> Option<Boxplot> {
+        if self.count == 0 {
+            return None;
+        }
+        Some(Boxplot {
+            min: self.min_us(),
+            q1: self.quantile_us(0.25),
+            median: self.quantile_us(0.5),
+            q3: self.quantile_us(0.75),
+            max: self.max_us(),
+            mean: self.mean_us(),
+            n: self.count as usize,
+        })
+    }
+
+    /// The `latency_us` object of the metrics JSON schema.
+    pub fn to_json(&self) -> Json {
+        obj([
+            ("count", Json::Num(self.count as f64)),
+            ("mean", Json::Num(self.mean_us())),
+            ("p50", Json::Num(self.quantile_us(0.50))),
+            ("p95", Json::Num(self.quantile_us(0.95))),
+            ("p99", Json::Num(self.quantile_us(0.99))),
+            ("min", Json::Num(self.min_us())),
+            ("max", Json::Num(self.max_us())),
+        ])
+    }
+}
+
+/// Per-shard live counters/gauges, shared (`Arc`) between the shard worker,
+/// the submit path and metric readers.
+#[derive(Debug, Default)]
+pub struct ShardStats {
+    /// Requests admitted past admission control.
+    pub submitted: AtomicU64,
+    /// Requests answered successfully.
+    pub completed: AtomicU64,
+    /// Requests answered with an error (exec failures + shard-failure
+    /// drains).
+    pub failed: AtomicU64,
+    /// Requests rejected synchronously by admission control.
+    pub rejected: AtomicU64,
+    /// Analyze-class requests among `submitted`.
+    pub analyze: AtomicU64,
+    /// Batches drained by the worker.
+    pub batches: AtomicU64,
+    /// Jobs across those batches (occupancy = batched_jobs / batches).
+    pub batched_jobs: AtomicU64,
+    /// Extra tiled folds beyond one execution per job.
+    pub tiled_folds: AtomicU64,
+    /// Runtime executions (copied from the runtime after each batch).
+    pub executions: AtomicU64,
+    /// Queue-depth gauge: admitted but not yet answered.
+    pub depth: AtomicUsize,
+    /// High-water mark of `depth`.
+    pub peak_depth: AtomicU64,
+    /// Set when the worker loop panicked (fault injection, runtime bug).
+    pub panicked: AtomicBool,
+    /// End-to-end (submit → reply) latency of successful requests, µs.
+    pub latency: LatencyHistogram,
+    /// Executor-only latency of successful requests, µs.
+    pub exec: LatencyHistogram,
+}
+
+impl ShardStats {
+    /// Record a successful reply.
+    pub(crate) fn record_ok(&self, total: Duration, exec: Duration) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.latency.record(total);
+        self.exec.record(exec);
+    }
+
+    pub(crate) fn snapshot(&self, shard: usize, alive: bool) -> ShardMetrics {
+        ShardMetrics {
+            shard,
+            alive,
+            panicked: self.panicked.load(Ordering::Relaxed),
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            analyze: self.analyze.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_jobs: self.batched_jobs.load(Ordering::Relaxed),
+            tiled_folds: self.tiled_folds.load(Ordering::Relaxed),
+            executions: self.executions.load(Ordering::Relaxed),
+            depth: self.depth.load(Ordering::Relaxed),
+            peak_depth: self.peak_depth.load(Ordering::Relaxed),
+            latency: self.latency.snapshot(),
+            exec: self.exec.snapshot(),
+        }
+    }
+}
+
+/// A point-in-time view of one shard.
+#[derive(Debug, Clone)]
+pub struct ShardMetrics {
+    pub shard: usize,
+    pub alive: bool,
+    pub panicked: bool,
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub rejected: u64,
+    pub analyze: u64,
+    pub batches: u64,
+    pub batched_jobs: u64,
+    pub tiled_folds: u64,
+    pub executions: u64,
+    pub depth: usize,
+    pub peak_depth: u64,
+    pub latency: HistSnapshot,
+    pub exec: HistSnapshot,
+}
+
+impl ShardMetrics {
+    /// Mean jobs per drained batch.
+    pub fn batch_occupancy(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_jobs as f64 / self.batches as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj([
+            ("shard", Json::Num(self.shard as f64)),
+            ("alive", Json::Bool(self.alive)),
+            ("panicked", Json::Bool(self.panicked)),
+            ("submitted", Json::Num(self.submitted as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("failed", Json::Num(self.failed as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("analyze", Json::Num(self.analyze as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("batch_occupancy", Json::Num(self.batch_occupancy())),
+            ("tiled_folds", Json::Num(self.tiled_folds as f64)),
+            ("executions", Json::Num(self.executions as f64)),
+            ("depth", Json::Num(self.depth as f64)),
+            ("peak_depth", Json::Num(self.peak_depth as f64)),
+            ("latency_us", self.latency.to_json()),
+            ("exec_us", self.exec.to_json()),
+        ])
+    }
+}
+
+/// Aggregate view of the whole pool (per-shard snapshots + evaluator cache
+/// stats + wall time since the pool started).
+#[derive(Debug, Clone)]
+pub struct PoolMetrics {
+    pub wall: Duration,
+    pub shards: Vec<ShardMetrics>,
+    /// The shared evaluator's design-point cache behavior (analyze route +
+    /// router design annotations).
+    pub cache: CacheStats,
+}
+
+impl PoolMetrics {
+    fn sum(&self, f: impl Fn(&ShardMetrics) -> u64) -> u64 {
+        self.shards.iter().map(f).sum()
+    }
+
+    /// Requests admitted across all shards.
+    pub fn accepted(&self) -> u64 {
+        self.sum(|s| s.submitted)
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.sum(|s| s.completed)
+    }
+
+    pub fn failed(&self) -> u64 {
+        self.sum(|s| s.failed)
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.sum(|s| s.rejected)
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.sum(|s| s.batches)
+    }
+
+    pub fn tiled_folds(&self) -> u64 {
+        self.sum(|s| s.tiled_folds)
+    }
+
+    pub fn executions(&self) -> u64 {
+        self.sum(|s| s.executions)
+    }
+
+    /// Admitted requests not yet answered. After a graceful
+    /// [`crate::serve::ShardPool::finish`] this must be 0 — every admitted
+    /// request gets exactly one reply, error replies included.
+    pub fn lost(&self) -> u64 {
+        self.accepted() - self.completed() - self.failed()
+    }
+
+    /// Shards whose worker panicked.
+    pub fn panicked_shards(&self) -> usize {
+        self.shards.iter().filter(|s| s.panicked).count()
+    }
+
+    /// Merged end-to-end latency histogram across shards.
+    pub fn latency(&self) -> HistSnapshot {
+        let mut h = HistSnapshot::default();
+        for s in &self.shards {
+            h.merge(&s.latency);
+        }
+        h
+    }
+
+    /// Merged executor-only latency histogram across shards.
+    pub fn exec_latency(&self) -> HistSnapshot {
+        let mut h = HistSnapshot::default();
+        for s in &self.shards {
+            h.merge(&s.exec);
+        }
+        h
+    }
+
+    /// Completed requests per second of wall time.
+    pub fn throughput(&self) -> f64 {
+        let secs = self.wall.as_secs_f64();
+        if secs == 0.0 {
+            0.0
+        } else {
+            self.completed() as f64 / secs
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj([
+            ("wall_s", Json::Num(self.wall.as_secs_f64())),
+            ("accepted", Json::Num(self.accepted() as f64)),
+            ("completed", Json::Num(self.completed() as f64)),
+            ("failed", Json::Num(self.failed() as f64)),
+            ("rejected", Json::Num(self.rejected() as f64)),
+            ("lost", Json::Num(self.lost() as f64)),
+            ("throughput_per_s", Json::Num(self.throughput())),
+            ("latency_us", self.latency().to_json()),
+            ("exec_us", self.exec_latency().to_json()),
+            ("shards", Json::Arr(self.shards.iter().map(|s| s.to_json()).collect())),
+            ("cache", self.cache.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles_bracket_samples() {
+        let h = LatencyHistogram::default();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i));
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 1000);
+        let p50 = s.quantile_us(0.5);
+        let p99 = s.quantile_us(0.99);
+        // Log buckets: estimates within one bucket width (≤ ~19% at 4/oct).
+        assert!((400.0..=650.0).contains(&p50), "p50 {p50}");
+        assert!((800.0..=1000.0).contains(&p99), "p99 {p99}");
+        assert!(p50 <= p99);
+        assert_eq!(s.min_us(), 1.0);
+        assert_eq!(s.max_us(), 1000.0);
+        assert!((s.mean_us() - 500.5).abs() < 1.0, "mean {}", s.mean_us());
+    }
+
+    #[test]
+    fn empty_histogram_is_safe() {
+        let s = LatencyHistogram::default().snapshot();
+        assert_eq!(s.quantile_us(0.99), 0.0);
+        assert_eq!(s.mean_us(), 0.0);
+        assert_eq!(s.min_us(), 0.0);
+        assert!(s.boxplot().is_none());
+    }
+
+    #[test]
+    fn merge_combines_shard_histograms() {
+        let a = LatencyHistogram::default();
+        let b = LatencyHistogram::default();
+        for _ in 0..100 {
+            a.record(Duration::from_micros(10));
+            b.record(Duration::from_micros(1000));
+        }
+        let mut m = a.snapshot();
+        m.merge(&b.snapshot());
+        assert_eq!(m.count, 200);
+        assert!(m.quantile_us(0.25) < 20.0);
+        assert!(m.quantile_us(0.95) > 500.0);
+        let bp = m.boxplot().unwrap();
+        assert_eq!(bp.n, 200);
+        assert!(bp.max >= bp.min);
+        // Merging into a default-seeded accumulator (as PoolMetrics does)
+        // must preserve the true extrema.
+        let mut agg = HistSnapshot::default();
+        agg.merge(&m);
+        assert_eq!(agg.min_us(), 10.0);
+        assert_eq!(agg.max_us(), 1000.0);
+    }
+
+    #[test]
+    fn quantiles_are_monotone_in_q() {
+        let h = LatencyHistogram::default();
+        for i in [1u64, 5, 20, 80, 300, 1200, 5000, 20000] {
+            for _ in 0..10 {
+                h.record(Duration::from_micros(i));
+            }
+        }
+        let s = h.snapshot();
+        let mut last = 0.0;
+        for q in [0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 1.0] {
+            let v = s.quantile_us(q);
+            assert!(v >= last, "quantile not monotone at q={q}: {v} < {last}");
+            last = v;
+        }
+    }
+
+    #[test]
+    fn shard_stats_snapshot_roundtrip() {
+        let st = ShardStats::default();
+        st.submitted.fetch_add(5, Ordering::Relaxed);
+        st.record_ok(Duration::from_micros(100), Duration::from_micros(40));
+        st.batches.fetch_add(1, Ordering::Relaxed);
+        st.batched_jobs.fetch_add(4, Ordering::Relaxed);
+        let m = st.snapshot(3, true);
+        assert_eq!(m.shard, 3);
+        assert!(m.alive);
+        assert_eq!(m.submitted, 5);
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.batch_occupancy(), 4.0);
+        // JSON shape sanity.
+        let j = m.to_json();
+        assert!(j.get("latency_us").is_some());
+        assert_eq!(j.get("submitted").and_then(|v| v.as_u64()), Some(5));
+    }
+}

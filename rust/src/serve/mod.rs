@@ -1,0 +1,49 @@
+//! Layer 3½ — the sharded serving engine.
+//!
+//! The paper's 9.14× 3D-over-2D headline only matters in production if a
+//! serving layer keeps those stacks saturated under real traffic. This
+//! module scales the single-executor [`crate::coordinator`] into an
+//! N-shard pool:
+//!
+//! * **Shape-sharded runtimes** — each shard owns its own
+//!   [`crate::runtime::Runtime`] (and warm executable cache); requests
+//!   route by a deterministic FNV-1a hash of their GEMM shape
+//!   ([`shard_for_shape`]), so a shape's warm state is never duplicated.
+//! * **Continuous batching** — each shard runs the coordinator's
+//!   plan-grouped [`crate::coordinator::Batcher`] independently; batches
+//!   form from whatever has arrived, with no cross-shard barrier.
+//! * **Admission control** — bounded in-flight depth per shard; overload
+//!   returns a synchronous, typed [`ServeError::Rejected`] instead of
+//!   growing memory ([`ShardPool::submit`]).
+//! * **Graceful shard failure** — a panicked shard answers its in-flight
+//!   requests with typed [`ServeError::ShardFailed`] errors and the pool
+//!   keeps serving on the remaining shards (zero lost jobs — see the
+//!   protocol writeup in [`mod@self::shard`]'s docs).
+//! * **Observability** — per-shard and aggregate [`PoolMetrics`] with
+//!   streaming p50/p95/p99 latency histograms, queue-depth gauges,
+//!   batch-occupancy and evaluator-cache counters, all JSON-dumpable and
+//!   readable while the pool is live.
+//!
+//! Two request classes share the queue ([`ServeRequest`]): data-plane GEMM
+//! execution and model-plane *analyze* queries answered by the shared
+//! cached [`crate::eval::Evaluator`]. The [`loadtest`] harness drives the
+//! pool with an open-loop arrival process (target-QPS ramp, mixed request
+//! classes, optional mid-run shard kill) and writes a `BENCH_serve.json`
+//! trajectory artifact; `cube3d loadtest` is the CLI entry point.
+//!
+//! The single-threaded [`crate::coordinator::Coordinator`] is now the
+//! 1-shard special case of this pool (unbounded depth, same semantics).
+
+pub mod loadtest;
+mod metrics;
+mod pool;
+mod request;
+mod shard;
+
+pub use loadtest::{LoadtestConfig, MixEntry};
+pub use metrics::{HistSnapshot, LatencyHistogram, PoolMetrics, ShardMetrics, ShardStats};
+pub use pool::{ServeConfig, ShardPool};
+pub use request::{
+    AnalyzeRequest, AnalyzeResult, ServeError, ServeOutput, ServeReply, ServeRequest,
+};
+pub use shard::{shard_for_shape, PauseGuard};

@@ -1,0 +1,203 @@
+//! The shard pool: N shards behind one submit front end, with deterministic
+//! shape routing, failover, and pool-level observability.
+
+use super::metrics::PoolMetrics;
+use super::request::{ServeError, ServeReply, ServeRequest};
+use super::shard::{shard_for_shape, PauseGuard, Shard};
+use crate::coordinator::{BatcherConfig, GemmJob, RouterConfig};
+use crate::eval::{shared_evaluator, Evaluator};
+use crate::runtime::Runtime;
+use anyhow::{anyhow, Result};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+/// Pool topology and admission policy.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Number of shards; each owns a full `Runtime` + executable cache.
+    pub shards: usize,
+    /// Admission bound: max in-flight (admitted, unanswered) requests per
+    /// shard. Submissions beyond it get a synchronous
+    /// [`ServeError::Rejected`].
+    pub max_depth: usize,
+    pub router: RouterConfig,
+    pub batcher: BatcherConfig,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            shards: 2,
+            max_depth: 256,
+            router: RouterConfig::default(),
+            batcher: BatcherConfig::default(),
+        }
+    }
+}
+
+/// Handle to a running shard pool.
+///
+/// ```no_run
+/// use cube3d::serve::{ServeConfig, ServeRequest, ShardPool};
+/// use cube3d::coordinator::GemmJob;
+/// use cube3d::sim::Matrix;
+/// # fn main() -> anyhow::Result<()> {
+/// let pool = ShardPool::start(std::path::Path::new("artifacts"), ServeConfig::default())?;
+/// let job = GemmJob::new(1, "req", Matrix::zeros(64, 256), Matrix::zeros(256, 96));
+/// let rx = pool.submit(ServeRequest::Gemm(job)).map_err(|e| anyhow::anyhow!(e))?;
+/// let result = rx.recv()?;
+/// println!("lost jobs: {}", pool.finish().lost());
+/// # Ok(()) }
+/// ```
+pub struct ShardPool {
+    shards: Vec<Shard>,
+    ticket: AtomicU64,
+    started: Instant,
+    evaluator: Arc<Evaluator>,
+}
+
+impl ShardPool {
+    /// Start `cfg.shards` shard workers over one artifact directory. The
+    /// runtime and base artifact are validated on the caller's thread
+    /// before any worker spawns (fail fast, like `Coordinator::start`).
+    pub fn start(artifact_dir: &Path, cfg: ServeConfig) -> Result<Self> {
+        Self::start_with_evaluator(artifact_dir, cfg, shared_evaluator())
+    }
+
+    /// Like [`ShardPool::start`] with an explicit analyze-route evaluator
+    /// (tests, custom pipelines). The router keeps its own performance
+    /// evaluator; this one answers `ServeRequest::Analyze`.
+    pub fn start_with_evaluator(
+        artifact_dir: &Path,
+        cfg: ServeConfig,
+        evaluator: Arc<Evaluator>,
+    ) -> Result<Self> {
+        if cfg.shards == 0 {
+            return Err(anyhow!("serve pool needs at least one shard"));
+        }
+        if cfg.max_depth == 0 {
+            return Err(anyhow!("max_depth 0 would reject every request"));
+        }
+        {
+            let rt = Runtime::new(artifact_dir)?;
+            if rt.manifest().get(&cfg.router.base_artifact).is_none() {
+                return Err(anyhow!(
+                    "base artifact '{}' not in manifest",
+                    cfg.router.base_artifact
+                ));
+            }
+        }
+        let shards = (0..cfg.shards)
+            .map(|i| {
+                Shard::start(
+                    i,
+                    artifact_dir.to_path_buf(),
+                    cfg.router.clone(),
+                    cfg.batcher.clone(),
+                    evaluator.clone(),
+                    cfg.max_depth,
+                )
+            })
+            .collect();
+        Ok(ShardPool { shards, ticket: AtomicU64::new(1), started: Instant::now(), evaluator })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard a request routes to (before failover).
+    pub fn home_shard(&self, req: &ServeRequest) -> usize {
+        shard_for_shape(&req.shape(), self.shards.len())
+    }
+
+    /// Submit a request. On `Ok` the request is admitted and its reply —
+    /// success or typed error — will arrive exactly once on the returned
+    /// receiver. `Err` is synchronous: [`ServeError::Rejected`]
+    /// (backpressure; the request was never enqueued) or
+    /// [`ServeError::PoolDown`] (no live shard).
+    ///
+    /// Routing is shape-deterministic; failover to the next live shard
+    /// happens only when the home shard is dead, so executable caches
+    /// stay disjoint while shards are healthy.
+    pub fn submit(&self, req: ServeRequest) -> Result<mpsc::Receiver<ServeReply>, ServeError> {
+        let n = self.shards.len();
+        let home = self.home_shard(&req);
+        let (tx, rx) = mpsc::channel();
+        let ticket = self.ticket.fetch_add(1, Ordering::Relaxed);
+        let mut req = req;
+        for probe in 0..n {
+            let shard = &self.shards[(home + probe) % n];
+            match shard.submit(ticket, req, tx.clone()) {
+                Ok(()) => return Ok(rx),
+                Err((r, super::shard::Refusal::Dead)) => req = r,
+                Err((r, super::shard::Refusal::Full { depth, bound })) => {
+                    return Err(ServeError::Rejected {
+                        shard: shard.index,
+                        id: r.id(),
+                        label: r.label().to_string(),
+                        depth,
+                        bound,
+                    })
+                }
+            }
+        }
+        Err(ServeError::PoolDown { id: req.id(), label: req.label().to_string(), shards: n })
+    }
+
+    /// Convenience wrapper for data-plane jobs.
+    pub fn submit_job(&self, job: GemmJob) -> Result<mpsc::Receiver<ServeReply>, ServeError> {
+        self.submit(ServeRequest::Gemm(job))
+    }
+
+    pub fn is_alive(&self, shard: usize) -> bool {
+        self.shards[shard].is_alive()
+    }
+
+    /// Shards currently serving.
+    pub fn live_shards(&self) -> usize {
+        self.shards.iter().filter(|s| s.is_alive()).count()
+    }
+
+    /// Park one shard's worker (determinism hook for tests): the returned
+    /// guard keeps it parked; commands queue behind it. `None` if down.
+    pub fn pause_shard(&self, shard: usize) -> Option<PauseGuard> {
+        self.shards[shard].pause()
+    }
+
+    /// Fault injection: panic one shard's worker. Its in-flight requests
+    /// drain as [`ServeError::ShardFailed`]; the pool keeps serving.
+    pub fn poison_shard(&self, shard: usize) {
+        self.shards[shard].poison();
+    }
+
+    /// Live snapshot of pool + per-shard metrics (non-blocking reads of
+    /// the workers' atomics — safe to call at any frequency).
+    pub fn metrics(&self) -> PoolMetrics {
+        PoolMetrics {
+            wall: self.started.elapsed(),
+            shards: self
+                .shards
+                .iter()
+                .map(|s| s.stats.snapshot(s.index, s.is_alive()))
+                .collect(),
+            cache: self.evaluator.cache_stats(),
+        }
+    }
+
+    /// Graceful shutdown: every shard drains its queue, all workers join,
+    /// and the final metrics snapshot is returned. Shard panics do not
+    /// propagate — they are visible as [`super::ShardMetrics::panicked`]
+    /// (and every affected request already got its typed error reply).
+    pub fn finish(mut self) -> PoolMetrics {
+        for s in &self.shards {
+            s.shutdown();
+        }
+        for s in &mut self.shards {
+            s.join();
+        }
+        self.metrics()
+    }
+}

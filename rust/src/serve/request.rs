@@ -1,0 +1,216 @@
+//! Request, reply and typed-error vocabulary of the serving engine.
+//!
+//! Two request classes share the submit queue:
+//!
+//! * **Gemm** — data-plane execution of `A·B` on the shard's runtime (the
+//!   coordinator's [`GemmJob`], answered with a [`JobResult`]).
+//! * **Analyze** — model-plane query answered by the shared cached
+//!   [`crate::eval::Evaluator`]: "what 3D design would the paper's
+//!   methodology pick for this shape, and how fast is it?". Repeated
+//!   shapes hit the process-wide design-point cache instead of
+//!   re-optimizing, so a serving mix heavy on analyze traffic is cheap.
+//!
+//! Every submission is answered exactly once with a [`ServeReply`]:
+//! success carries a [`ServeOutput`], failure a typed [`ServeError`] —
+//! admission-control rejections, per-job execution errors and whole-shard
+//! failures are all distinguishable by the caller.
+
+use crate::analytical::OptimalDesign;
+use crate::coordinator::{GemmJob, JobResult};
+use crate::dataflow::Dataflow;
+use crate::workloads::Gemm;
+use std::time::Duration;
+
+/// A serving request: data-plane GEMM execution or a model-plane analyze
+/// query. Both are routed by their GEMM shape (see
+/// [`crate::serve::shard_for_shape`]).
+#[derive(Debug)]
+pub enum ServeRequest {
+    /// Execute `A·B` on the shard's runtime.
+    Gemm(GemmJob),
+    /// Evaluate the paper's models for a shape via the shared cached
+    /// evaluator.
+    Analyze(AnalyzeRequest),
+}
+
+impl ServeRequest {
+    /// Caller-assigned request id (echoed in the reply).
+    pub fn id(&self) -> u64 {
+        match self {
+            ServeRequest::Gemm(j) => j.id,
+            ServeRequest::Analyze(a) => a.id,
+        }
+    }
+
+    /// Human-readable provenance label.
+    pub fn label(&self) -> &str {
+        match self {
+            ServeRequest::Gemm(j) => &j.label,
+            ServeRequest::Analyze(a) => &a.label,
+        }
+    }
+
+    /// The GEMM shape the request is about — the shard-routing key.
+    pub fn shape(&self) -> Gemm {
+        match self {
+            ServeRequest::Gemm(j) => j.gemm(),
+            ServeRequest::Analyze(a) => a.gemm,
+        }
+    }
+}
+
+/// A model-plane query: the 3D design + modeled speedup/power/area for a
+/// GEMM shape under a MAC budget (tier count auto-optimized up to
+/// `max_tiers`).
+#[derive(Debug, Clone)]
+pub struct AnalyzeRequest {
+    pub id: u64,
+    pub label: String,
+    pub gemm: Gemm,
+    pub mac_budget: u64,
+    pub max_tiers: u64,
+    pub dataflow: Dataflow,
+}
+
+impl AnalyzeRequest {
+    pub fn new(id: u64, label: impl Into<String>, gemm: Gemm, mac_budget: u64) -> Self {
+        AnalyzeRequest {
+            id,
+            label: label.into(),
+            gemm,
+            mac_budget,
+            max_tiers: 12,
+            dataflow: Dataflow::DistributedOutputStationary,
+        }
+    }
+}
+
+/// A completed analyze query.
+#[derive(Debug, Clone)]
+pub struct AnalyzeResult {
+    pub id: u64,
+    pub label: String,
+    /// The 3D design the methodology picks for the shape.
+    pub design: OptimalDesign,
+    pub cycles_3d: u64,
+    pub speedup_vs_2d: f64,
+    /// Average power of the 3D design, W (None if the evaluator pipeline
+    /// has no power model).
+    pub power_w: Option<f64>,
+    /// 3D silicon area, m² (None without an area model).
+    pub area_m2: Option<f64>,
+    /// Time the query spent in the evaluator (cache hits are ~ns).
+    pub exec_time: Duration,
+    /// Total time from submit to reply.
+    pub total_time: Duration,
+}
+
+/// Successful reply payload.
+#[derive(Debug)]
+pub enum ServeOutput {
+    Gemm(Box<JobResult>),
+    Analyze(AnalyzeResult),
+}
+
+impl ServeOutput {
+    /// End-to-end latency (submit → reply) of the request.
+    pub fn total_time(&self) -> Duration {
+        match self {
+            ServeOutput::Gemm(r) => r.total_time,
+            ServeOutput::Analyze(r) => r.total_time,
+        }
+    }
+
+    pub fn label(&self) -> &str {
+        match self {
+            ServeOutput::Gemm(r) => &r.label,
+            ServeOutput::Analyze(r) => &r.label,
+        }
+    }
+
+    /// The GEMM result, if this was a data-plane request.
+    pub fn into_gemm(self) -> Option<JobResult> {
+        match self {
+            ServeOutput::Gemm(r) => Some(*r),
+            ServeOutput::Analyze(_) => None,
+        }
+    }
+
+    /// The analyze result, if this was a model-plane request.
+    pub fn into_analyze(self) -> Option<AnalyzeResult> {
+        match self {
+            ServeOutput::Analyze(r) => Some(r),
+            ServeOutput::Gemm(_) => None,
+        }
+    }
+}
+
+/// Typed serving errors. `Rejected` is returned *synchronously* from
+/// [`crate::serve::ShardPool::submit`] (admission control never enqueues);
+/// the rest arrive as replies on the submission's channel.
+#[derive(Debug, thiserror::Error)]
+pub enum ServeError {
+    /// Admission control: the target shard's queue is at its depth bound.
+    /// The request was not enqueued — retry later or shed load.
+    #[error(
+        "shard {shard} rejected job {id} ('{label}'): queue depth {depth} at bound {bound}"
+    )]
+    Rejected { shard: usize, id: u64, label: String, depth: usize, bound: usize },
+    /// Every shard is down; nothing can accept the request.
+    #[error("no live shard for job {id} ('{label}'): all {shards} shards are down")]
+    PoolDown { id: u64, label: String, shards: usize },
+    /// The shard failed (panicked) before this in-flight request executed;
+    /// its reply channel was drained with this error instead of hanging.
+    #[error("shard {shard} failed; job {id} ('{label}') was drained without executing")]
+    ShardFailed { shard: usize, id: u64, label: String },
+    /// The shard panicked. Reported by [`crate::coordinator::Coordinator::finish`]
+    /// (and visible per shard in [`crate::serve::ShardMetrics::panicked`]).
+    #[error("shard {shard} executor panicked after {completed} completed jobs")]
+    ShardPanicked { shard: usize, completed: u64 },
+    /// The job itself failed to execute (runtime error, bad artifact, …).
+    #[error("job {id} ('{label}') failed on shard {shard}: {msg}")]
+    Exec { shard: usize, id: u64, label: String, msg: String },
+    /// The request was malformed (e.g. an analyze scenario that fails
+    /// validation).
+    #[error("invalid request {id} ('{label}'): {msg}")]
+    Invalid { id: u64, label: String, msg: String },
+}
+
+impl ServeError {
+    /// True for admission-control rejections (the backpressure signal).
+    pub fn is_rejection(&self) -> bool {
+        matches!(self, ServeError::Rejected { .. })
+    }
+}
+
+/// Every submission is answered exactly once with one of these.
+pub type ServeReply = Result<ServeOutput, ServeError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Matrix;
+
+    #[test]
+    fn request_shape_is_routing_key() {
+        let j = GemmJob::new(1, "g", Matrix::zeros(3, 5), Matrix::zeros(5, 7));
+        let r = ServeRequest::Gemm(j);
+        assert_eq!(r.shape(), Gemm::new(3, 7, 5));
+        assert_eq!(r.id(), 1);
+        assert_eq!(r.label(), "g");
+
+        let a = AnalyzeRequest::new(9, "rn0", Gemm::new(64, 147, 12100), 1 << 18);
+        let r = ServeRequest::Analyze(a);
+        assert_eq!(r.shape(), Gemm::new(64, 147, 12100));
+        assert_eq!(r.id(), 9);
+    }
+
+    #[test]
+    fn rejection_is_typed() {
+        let e = ServeError::Rejected { shard: 1, id: 7, label: "x".into(), depth: 64, bound: 64 };
+        assert!(e.is_rejection());
+        assert!(e.to_string().contains("queue depth 64"));
+        let e = ServeError::ShardFailed { shard: 0, id: 7, label: "x".into() };
+        assert!(!e.is_rejection());
+    }
+}

@@ -1,0 +1,487 @@
+//! One serving shard: a worker thread owning its own [`Runtime`] (and thus
+//! its own warm executable cache), a router, and a continuous batcher —
+//! plus the in-flight bookkeeping that makes shard failure graceful.
+//!
+//! ## The zero-lost-job protocol
+//!
+//! Every admitted request is answered exactly once, even if the shard
+//! worker panics mid-load. The invariant is held by one mutex,
+//! [`Inflight`], shared between the submit path and the worker:
+//!
+//! * **Submit** takes the lock, checks `alive`, enforces the depth bound,
+//!   and inserts a [`Pending`] (reply channel + timing + caller identity)
+//!   — all before the command is sent to the worker. A dead shard is
+//!   detected synchronously; a full shard rejects synchronously.
+//! * **Reply** (worker, normal path) removes the `Pending` under the lock
+//!   and sends exactly one [`ServeReply`].
+//! * **Drain** (after the worker exits — panic or shutdown) takes the
+//!   lock, flips `alive` to false, and answers every remaining `Pending`
+//!   with a typed [`ServeError::ShardFailed`]. Because `alive` and the
+//!   map change under the same lock, a submission races with a dying
+//!   shard in only two ways: it observes `alive == false` and fails over,
+//!   or its `Pending` is already in the map and the drain answers it.
+//!
+//! The worker body runs under `catch_unwind`; the drain runs *after* it on
+//! the same thread, so a panic anywhere in the serving loop (including the
+//! [`ShardCommand::Poison`] fault-injection hook) degrades to a batch of
+//! typed errors instead of a poisoned process.
+
+use super::metrics::ShardStats;
+use super::request::{
+    AnalyzeRequest, AnalyzeResult, ServeError, ServeOutput, ServeReply, ServeRequest,
+};
+use crate::coordinator::{
+    tiled_gemm, Batcher, BatcherConfig, ExecutionPlan, GemmJob, Router, RouterConfig,
+};
+use crate::eval::{Evaluator, Scenario};
+use crate::runtime::Runtime;
+use crate::workloads::Gemm;
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Mutex, MutexGuard};
+use std::time::Instant;
+
+/// Deterministic shape → shard routing: FNV-1a over the `(m, k, n)` key.
+/// A shape always lands on the same shard (for a fixed shard count), so
+/// its warm executable / tiling state is never duplicated across runtimes.
+pub fn shard_for_shape(g: &Gemm, shards: usize) -> usize {
+    assert!(shards > 0, "shard_for_shape needs at least one shard");
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for v in [g.m, g.k, g.n] {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    (h % shards as u64) as usize
+}
+
+/// Commands on a shard's queue. `Pause` and `Poison` are fault-injection /
+/// determinism hooks used by the tests and the load-test harness.
+pub(crate) enum ShardCommand {
+    Run { ticket: u64, req: ServeRequest },
+    /// Park the worker: send `ack`, then block until `release` disconnects.
+    Pause { ack: mpsc::Sender<()>, release: mpsc::Receiver<()> },
+    /// Panic the worker loop (exercises the drain path under load).
+    Poison,
+    Shutdown,
+}
+
+/// An admitted, not-yet-answered request.
+pub(crate) struct Pending {
+    reply: mpsc::Sender<ServeReply>,
+    submit: Instant,
+    /// Caller-assigned id/label (the in-shard key is the pool ticket).
+    id: u64,
+    label: String,
+}
+
+/// The shared submit/worker bookkeeping — see the module docs.
+pub(crate) struct Inflight {
+    pub alive: bool,
+    map: HashMap<u64, Pending>,
+}
+
+/// Mutex poisoning is not an error state here: the drain path must run
+/// even after a panic elsewhere, so locks always recover the inner value.
+fn lock(m: &Mutex<Inflight>) -> MutexGuard<'_, Inflight> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Why a shard refused a submission (mapped to [`ServeError`] by the pool).
+pub(crate) enum Refusal {
+    /// Worker exited; the pool should fail over to another shard.
+    Dead,
+    /// Admission control: depth bound hit. Not retried on other shards —
+    /// spilling would defeat both backpressure and cache affinity.
+    Full { depth: usize, bound: usize },
+}
+
+/// Handle to one running shard.
+pub(crate) struct Shard {
+    pub index: usize,
+    tx: mpsc::Sender<ShardCommand>,
+    inflight: Arc<Mutex<Inflight>>,
+    pub stats: Arc<ShardStats>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    max_depth: usize,
+}
+
+impl Shard {
+    /// Spawn the shard worker. The runtime/artifact combination is
+    /// validated by the pool before any shard spawns, so the worker's own
+    /// `Runtime::new` failure mode is "panics, gets drained" — loud in
+    /// tests, graceful in serving.
+    pub fn start(
+        index: usize,
+        artifact_dir: PathBuf,
+        router_cfg: RouterConfig,
+        batcher_cfg: BatcherConfig,
+        evaluator: Arc<Evaluator>,
+        max_depth: usize,
+    ) -> Self {
+        let (tx, rx) = mpsc::channel::<ShardCommand>();
+        let inflight = Arc::new(Mutex::new(Inflight { alive: true, map: HashMap::new() }));
+        let stats = Arc::new(ShardStats::default());
+        let (inf_worker, stats_worker) = (inflight.clone(), stats.clone());
+        let (inf_drain, stats_drain) = (inflight.clone(), stats.clone());
+        let worker = std::thread::Builder::new()
+            .name(format!("cube3d-shard-{index}"))
+            .spawn(move || {
+                // The worker (and the command receiver it owns) lives inside
+                // catch_unwind; by the time the drain below runs, `rx` is
+                // gone and no new Pending can observe `alive == true`.
+                let body = catch_unwind(AssertUnwindSafe(move || {
+                    let mut w = ShardWorker::new(
+                        index, &artifact_dir, router_cfg, batcher_cfg, evaluator, inf_worker,
+                        stats_worker, rx,
+                    );
+                    w.run();
+                }));
+                drain_after_exit(index, body.is_err(), &inf_drain, &stats_drain);
+            })
+            .expect("spawn shard worker");
+        Shard { index, tx, inflight, stats, worker: Some(worker), max_depth }
+    }
+
+    /// Admission control + registration. On `Ok` the request is in flight
+    /// and will be answered exactly once on `reply`.
+    pub fn submit(
+        &self,
+        ticket: u64,
+        req: ServeRequest,
+        reply: mpsc::Sender<ServeReply>,
+    ) -> Result<(), (ServeRequest, Refusal)> {
+        let mut inf = lock(&self.inflight);
+        if !inf.alive {
+            return Err((req, Refusal::Dead));
+        }
+        let depth = inf.map.len();
+        if depth >= self.max_depth {
+            drop(inf);
+            self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err((req, Refusal::Full { depth, bound: self.max_depth }));
+        }
+        let pending =
+            Pending { reply, submit: Instant::now(), id: req.id(), label: req.label().to_string() };
+        inf.map.insert(ticket, pending);
+        let depth = inf.map.len();
+        self.stats.depth.store(depth, Ordering::Relaxed);
+        self.stats.peak_depth.fetch_max(depth as u64, Ordering::Relaxed);
+        self.stats.submitted.fetch_add(1, Ordering::Relaxed);
+        if matches!(req, ServeRequest::Analyze(_)) {
+            self.stats.analyze.fetch_add(1, Ordering::Relaxed);
+        }
+        // Send under the lock: if the worker just died, the drain is
+        // serialized behind us and will answer this Pending.
+        let _ = self.tx.send(ShardCommand::Run { ticket, req });
+        Ok(())
+    }
+
+    pub fn is_alive(&self) -> bool {
+        lock(&self.inflight).alive
+    }
+
+    /// Park the worker (determinism hook): returns once the worker has
+    /// acknowledged it is parked; dropping the guard releases it. `None`
+    /// if the shard is down.
+    pub fn pause(&self) -> Option<PauseGuard> {
+        let (ack_tx, ack_rx) = mpsc::channel();
+        let (rel_tx, rel_rx) = mpsc::channel();
+        self.tx.send(ShardCommand::Pause { ack: ack_tx, release: rel_rx }).ok()?;
+        ack_rx.recv().ok()?;
+        Some(PauseGuard { _release: rel_tx })
+    }
+
+    /// Fault injection: panic the worker loop.
+    pub fn poison(&self) {
+        let _ = self.tx.send(ShardCommand::Poison);
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(ShardCommand::Shutdown);
+    }
+
+    pub fn join(&mut self) {
+        self.shutdown();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Shard {
+    fn drop(&mut self) {
+        self.join();
+    }
+}
+
+/// Held while a shard worker is parked; dropping it releases the worker.
+pub struct PauseGuard {
+    _release: mpsc::Sender<()>,
+}
+
+/// Answer every in-flight request of an exited worker with a typed error
+/// and mark the shard dead. Runs on the worker thread, after the loop
+/// exits — normally (empty map, pure flag flip) or by panic.
+fn drain_after_exit(
+    index: usize,
+    panicked: bool,
+    inflight: &Mutex<Inflight>,
+    stats: &ShardStats,
+) {
+    if panicked {
+        stats.panicked.store(true, Ordering::Relaxed);
+    }
+    let pendings = {
+        let mut inf = lock(inflight);
+        inf.alive = false;
+        std::mem::take(&mut inf.map)
+    };
+    stats.depth.store(0, Ordering::Relaxed);
+    for (_, p) in pendings {
+        stats.failed.fetch_add(1, Ordering::Relaxed);
+        let _ = p
+            .reply
+            .send(Err(ServeError::ShardFailed { shard: index, id: p.id, label: p.label }));
+    }
+}
+
+struct ShardWorker {
+    index: usize,
+    rt: Runtime,
+    router: Router,
+    batcher: Batcher,
+    evaluator: Arc<Evaluator>,
+    inflight: Arc<Mutex<Inflight>>,
+    stats: Arc<ShardStats>,
+    rx: mpsc::Receiver<ShardCommand>,
+    shutdown: bool,
+}
+
+impl ShardWorker {
+    #[allow(clippy::too_many_arguments)]
+    fn new(
+        index: usize,
+        dir: &std::path::Path,
+        router_cfg: RouterConfig,
+        batcher_cfg: BatcherConfig,
+        evaluator: Arc<Evaluator>,
+        inflight: Arc<Mutex<Inflight>>,
+        stats: Arc<ShardStats>,
+        rx: mpsc::Receiver<ShardCommand>,
+    ) -> Self {
+        let mut rt = Runtime::new(dir).expect("runtime validated at pool start");
+        let _ = rt.warm_up();
+        let router = Router::new(router_cfg, rt.manifest());
+        let batcher = Batcher::new(batcher_cfg);
+        ShardWorker {
+            index,
+            rt,
+            router,
+            batcher,
+            evaluator,
+            inflight,
+            stats,
+            rx,
+            shutdown: false,
+        }
+    }
+
+    fn run(&mut self) {
+        while !self.shutdown || !self.batcher.is_empty() {
+            // Ingest: block for the first command when idle, then drain
+            // the channel (continuous batching — batches form from
+            // whatever has arrived, no barrier).
+            if self.batcher.is_empty() && !self.shutdown {
+                match self.rx.recv() {
+                    Ok(cmd) => self.ingest(cmd),
+                    Err(_) => break, // all submit handles gone
+                }
+            }
+            while let Ok(cmd) = self.rx.try_recv() {
+                self.ingest(cmd);
+                if self.batcher.ready() {
+                    break;
+                }
+            }
+            self.drain_one_batch();
+        }
+    }
+
+    fn ingest(&mut self, cmd: ShardCommand) {
+        match cmd {
+            ShardCommand::Run { ticket, req } => match req {
+                ServeRequest::Gemm(mut job) => {
+                    let plan = self.router.plan(&job.gemm());
+                    // In-shard identity is the pool ticket; the caller's id
+                    // travels in the Pending.
+                    job.id = ticket;
+                    self.batcher.push(job, plan);
+                }
+                // Analyze queries are model-plane (µs-scale on a cache
+                // hit) — answered inline, never batched behind GEMMs.
+                ServeRequest::Analyze(a) => self.serve_analyze(ticket, a),
+            },
+            ShardCommand::Pause { ack, release } => {
+                let _ = ack.send(());
+                let _ = release.recv(); // parked until the guard drops
+            }
+            ShardCommand::Poison => panic!("shard {} poisoned by fault injection", self.index),
+            ShardCommand::Shutdown => self.shutdown = true,
+        }
+    }
+
+    /// Remove and return the `Pending` for a ticket, updating the gauge.
+    fn take_pending(&self, ticket: u64) -> Option<Pending> {
+        let mut inf = lock(&self.inflight);
+        let p = inf.map.remove(&ticket);
+        self.stats.depth.store(inf.map.len(), Ordering::Relaxed);
+        p
+    }
+
+    fn serve_analyze(&mut self, ticket: u64, a: AnalyzeRequest) {
+        let Some(pending) = self.take_pending(ticket) else { return };
+        let exec_start = Instant::now();
+        let scenario = Scenario::builder()
+            .gemm(a.gemm)
+            .mac_budget(a.mac_budget)
+            .tiers_auto(a.max_tiers)
+            .dataflow(a.dataflow)
+            .build();
+        let reply = match scenario {
+            Err(e) => Err(ServeError::Invalid {
+                id: pending.id,
+                label: pending.label.clone(),
+                msg: e.to_string(),
+            }),
+            Ok(s) => {
+                let m = self.evaluator.evaluate(&s);
+                let exec_time = exec_start.elapsed();
+                let total_time = pending.submit.elapsed();
+                match (m.design_3d, m.cycles_3d) {
+                    (Some(design), Some(cycles_3d)) => Ok(ServeOutput::Analyze(AnalyzeResult {
+                        id: pending.id,
+                        label: pending.label.clone(),
+                        design,
+                        cycles_3d,
+                        speedup_vs_2d: m.speedup_vs_2d.unwrap_or(1.0),
+                        power_w: m.power_w(),
+                        area_m2: m.area_m2,
+                        exec_time,
+                        total_time,
+                    })),
+                    _ => Err(ServeError::Exec {
+                        shard: self.index,
+                        id: pending.id,
+                        label: pending.label.clone(),
+                        msg: "evaluator pipeline produced no 3D design".into(),
+                    }),
+                }
+            }
+        };
+        self.finish_reply(&pending, reply, exec_start.elapsed());
+    }
+
+    fn drain_one_batch(&mut self) {
+        let Some(batch) = self.batcher.next_batch() else { return };
+        self.stats.batches.fetch_add(1, Ordering::Relaxed);
+        self.stats.batched_jobs.fetch_add(batch.jobs.len() as u64, Ordering::Relaxed);
+        for (job, _) in batch.jobs {
+            let ticket = job.id;
+            let Some(pending) = self.take_pending(ticket) else { continue };
+            let g = job.gemm();
+            let (design, speedup) = self.router.design_for(&g);
+            let exec_start = Instant::now();
+            let (result, folds) = match &batch.plan {
+                ExecutionPlan::Exact { artifact } => {
+                    (self.rt.run_gemm(artifact, &job.a, &job.b), 1u64)
+                }
+                ExecutionPlan::Tiled { artifact } => {
+                    match tiled_gemm(&mut self.rt, artifact, &job.a, &job.b) {
+                        Ok((out, folds)) => (Ok(out), folds),
+                        Err(e) => (Err(e), 0),
+                    }
+                }
+            };
+            let exec_time = exec_start.elapsed();
+            let total_time = pending.submit.elapsed();
+            self.stats.tiled_folds.fetch_add(folds.saturating_sub(1), Ordering::Relaxed);
+            let reply = match result {
+                Ok(output) => Ok(ServeOutput::Gemm(Box::new(crate::coordinator::JobResult {
+                    id: pending.id,
+                    label: pending.label.clone(),
+                    output,
+                    exec_time,
+                    total_time,
+                    plan: batch.plan.describe(),
+                    design,
+                    modeled_speedup_3d: speedup,
+                }))),
+                Err(e) => Err(ServeError::Exec {
+                    shard: self.index,
+                    id: pending.id,
+                    label: pending.label.clone(),
+                    msg: e.to_string(),
+                }),
+            };
+            self.finish_reply(&pending, reply, exec_time);
+        }
+        self.stats.executions.store(self.rt.executions, Ordering::Relaxed);
+    }
+
+    /// Record stats and send the single reply for a request. Stats are
+    /// recorded *here*, at reply time, so callers that drop their receiver
+    /// (the open-loop load generator) still produce exact accounting.
+    fn finish_reply(&self, pending: &Pending, reply: ServeReply, exec: std::time::Duration) {
+        match &reply {
+            Ok(_) => self.stats.record_ok(pending.submit.elapsed(), exec),
+            Err(_) => {
+                self.stats.failed.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let _ = pending.reply.send(reply);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routing_is_deterministic_and_spread() {
+        let shapes = [
+            Gemm::new(64, 96, 256),
+            Gemm::new(20, 25, 30),
+            Gemm::new(64, 147, 12100),
+            Gemm::new(512, 512, 512),
+            Gemm::new(1, 1000, 1),
+            Gemm::new(32, 10, 784),
+        ];
+        for n in 1..=8 {
+            let mut hit = vec![false; n];
+            for g in &shapes {
+                let s = shard_for_shape(g, n);
+                assert!(s < n);
+                assert_eq!(s, shard_for_shape(g, n), "same shape, same shard");
+                hit[s] = true;
+            }
+            if n <= 3 {
+                assert!(hit.iter().all(|&h| h), "{n} shards should all see traffic");
+            }
+        }
+        // Distinct shapes must not all collapse onto one shard.
+        let n4: std::collections::HashSet<usize> =
+            shapes.iter().map(|g| shard_for_shape(g, 4)).collect();
+        assert!(n4.len() > 1, "hash must spread shapes across shards");
+    }
+
+    #[test]
+    fn shard_one_maps_everything_to_zero() {
+        for g in [Gemm::new(1, 2, 3), Gemm::new(999, 999, 999)] {
+            assert_eq!(shard_for_shape(&g, 1), 0);
+        }
+    }
+}

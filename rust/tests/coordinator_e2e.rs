@@ -49,7 +49,7 @@ fn trace_of_mixed_shapes_completes_correctly() {
         assert!(r.modeled_speedup_3d > 0.0);
         assert!(r.design.tiers >= 1);
     }
-    let m = coord.finish();
+    let m = coord.finish().unwrap();
     assert_eq!(m.jobs_completed, 10);
     assert!(m.pjrt_executions >= 10);
     assert!(m.throughput() > 0.0);
@@ -64,11 +64,11 @@ fn results_preserve_submission_order_per_receiver() {
     let b = rand_matrix(&mut rng, 256, 96);
     let r1 = coord.submit(GemmJob::new(1, "a", a.clone(), b.clone()));
     let r2 = coord.submit(GemmJob::new(2, "b", a, b));
-    let j1 = r1.recv().unwrap().unwrap();
-    let j2 = r2.recv().unwrap().unwrap();
+    let j1 = r1.recv().unwrap().unwrap().into_gemm().unwrap();
+    let j2 = r2.recv().unwrap().unwrap().into_gemm().unwrap();
     assert_eq!(j1.id, 1);
     assert_eq!(j2.id, 2);
-    coord.finish();
+    coord.finish().unwrap();
 }
 
 #[test]
@@ -83,9 +83,29 @@ fn batching_groups_same_plan_jobs() {
     }
     let results = coord.run_trace(jobs).unwrap();
     assert_eq!(results.len(), 8);
-    let m = coord.finish();
+    let m = coord.finish().unwrap();
     // All jobs share one plan: fewer batches than jobs proves grouping.
     assert!(m.batches < 8, "batches {} should be < 8", m.batches);
+}
+
+#[test]
+fn finish_after_executor_panic_is_typed_error_not_abort() {
+    use cube3d::serve::ServeError;
+    let coord = start();
+    coord.poison_executor();
+    // Submissions racing the panic either get a typed error reply on their
+    // channel or (once the shard is marked dead) a synchronous PoolDown
+    // reply — never a hang, never a lost job.
+    let mut rng = Rng::new(14);
+    let a = rand_matrix(&mut rng, 64, 256);
+    let b = rand_matrix(&mut rng, 256, 96);
+    let rx = coord.submit(GemmJob::new(7, "after-panic", a, b));
+    let reply = rx.recv().expect("reply channel must not hang after a panic");
+    assert!(reply.is_err(), "job submitted around a panic must error");
+    match coord.finish() {
+        Err(ServeError::ShardPanicked { shard, .. }) => assert_eq!(shard, 0),
+        other => panic!("expected ShardPanicked, got {other:?}"),
+    }
 }
 
 #[test]

@@ -1,0 +1,239 @@
+//! Serving-engine end-to-end: shard routing, continuous batching,
+//! admission control, analyze route and fault injection (requires
+//! `make artifacts`).
+//!
+//! Determinism notes: the `pause_shard` hook parks a worker so queues can
+//! be filled without racing it; poisoning a *paused* shard guarantees the
+//! panic is processed before any queued job executes (commands are FIFO
+//! and fewer than `max_batch` jobs never form a batch during ingest).
+
+use cube3d::coordinator::GemmJob;
+use cube3d::runtime::find_artifact_dir;
+use cube3d::serve::{
+    shard_for_shape, AnalyzeRequest, ServeConfig, ServeError, ServeRequest, ShardPool,
+};
+use cube3d::sim::{matmul_f32, Matrix};
+use cube3d::util::rng::Rng;
+use cube3d::workloads::Gemm;
+
+fn start(shards: usize, max_depth: usize) -> ShardPool {
+    let dir = find_artifact_dir().expect("run `make artifacts` before cargo test");
+    let cfg = ServeConfig { shards, max_depth, ..ServeConfig::default() };
+    ShardPool::start(&dir, cfg).unwrap()
+}
+
+fn rand_matrix(rng: &mut Rng, rows: usize, cols: usize) -> Matrix<f32> {
+    Matrix::from_fn(rows, cols, |_, _| (rng.gen_range(200) as f32 - 100.0) / 50.0)
+}
+
+/// A quickstart-shaped job (exact-artifact plan, shape 64×256 · 256×96).
+fn quickstart_job(rng: &mut Rng, id: u64) -> GemmJob {
+    GemmJob::new(id, format!("q{id}"), rand_matrix(rng, 64, 256), rand_matrix(rng, 256, 96))
+}
+
+/// Small tiled-plan shapes whose routing key lands on the given shard of a
+/// 2-shard pool (searched, so the test is robust to hash details).
+fn shape_on_shard(target: usize, skip: usize) -> Gemm {
+    let mut found = 0;
+    for k in 8..512u64 {
+        let g = Gemm::new(16, 24, k);
+        if shard_for_shape(&g, 2) == target {
+            if found == skip {
+                return g;
+            }
+            found += 1;
+        }
+    }
+    panic!("no shape found for shard {target}");
+}
+
+fn job_for(rng: &mut Rng, id: u64, g: Gemm) -> GemmJob {
+    GemmJob::new(
+        id,
+        format!("s{id}"),
+        rand_matrix(rng, g.m as usize, g.k as usize),
+        rand_matrix(rng, g.k as usize, g.n as usize),
+    )
+}
+
+#[test]
+fn pool_serves_gemm_and_analyze_correctly() {
+    let pool = start(2, 64);
+    let mut rng = Rng::new(21);
+
+    // Data plane: verify numerics through the pool.
+    let a = rand_matrix(&mut rng, 64, 256);
+    let b = rand_matrix(&mut rng, 256, 96);
+    let want = matmul_f32(&a, &b);
+    let rx = pool.submit_job(GemmJob::new(1, "check", a, b)).unwrap();
+    let r = rx.recv().unwrap().unwrap().into_gemm().unwrap();
+    assert_eq!(r.id, 1);
+    assert_eq!(r.label, "check");
+    for i in 0..want.rows {
+        for j in 0..want.cols {
+            let (x, y) = (r.output.get(i, j), want.get(i, j));
+            assert!((x - y).abs() < 1e-3 * 1.0f32.max(x.abs()));
+        }
+    }
+
+    // Model plane: RN0 through the shared cached evaluator.
+    let req = AnalyzeRequest::new(2, "RN0", Gemm::new(64, 147, 12100), 1 << 18);
+    let rx = pool.submit(ServeRequest::Analyze(req)).unwrap();
+    let out = rx.recv().unwrap().unwrap().into_analyze().unwrap();
+    assert_eq!(out.id, 2);
+    assert!(out.design.tiers >= 1);
+    assert!(out.speedup_vs_2d > 1.0, "RN0 at 2^18 MACs should favor 3D");
+    assert!(out.cycles_3d > 0);
+
+    let m = pool.finish();
+    assert_eq!(m.accepted(), 2);
+    assert_eq!(m.completed(), 2);
+    assert_eq!(m.lost(), 0);
+}
+
+#[test]
+fn same_shape_always_routes_to_one_shard() {
+    let pool = start(2, 256);
+    let mut rng = Rng::new(22);
+    let g = Gemm::new(64, 96, 256);
+    let home = shard_for_shape(&g, 2);
+    assert_eq!(home, pool.home_shard(&ServeRequest::Gemm(quickstart_job(&mut rng, 0))));
+    let receivers: Vec<_> = (0..10)
+        .map(|i| pool.submit_job(quickstart_job(&mut rng, i)).unwrap())
+        .collect();
+    for rx in receivers {
+        rx.recv().unwrap().unwrap();
+    }
+    let m = pool.finish();
+    assert_eq!(m.shards[home].submitted, 10, "all jobs on the home shard");
+    assert_eq!(m.shards[1 - home].submitted, 0, "other shard stays cold");
+    assert_eq!(m.lost(), 0);
+}
+
+#[test]
+fn backpressure_rejects_beyond_bound_and_loses_nothing() {
+    let bound = 4;
+    let pool = start(1, bound);
+    let mut rng = Rng::new(23);
+    // Park the worker so admitted jobs stay in flight.
+    let guard = pool.pause_shard(0).expect("shard alive");
+    let receivers: Vec<_> = (0..bound as u64)
+        .map(|i| pool.submit_job(quickstart_job(&mut rng, i)).unwrap())
+        .collect();
+    // The bound is hit: the next submission is rejected synchronously.
+    match pool.submit_job(quickstart_job(&mut rng, 99)) {
+        Err(ServeError::Rejected { depth, bound: b, .. }) => {
+            assert_eq!(depth, bound);
+            assert_eq!(b, bound);
+        }
+        other => panic!("expected Rejected, got {:?}", other.is_ok()),
+    }
+    drop(guard); // release the worker; the queue drains
+    for rx in receivers {
+        assert!(rx.recv().unwrap().is_ok(), "admitted jobs complete after release");
+    }
+    let m = pool.finish();
+    assert_eq!(m.accepted(), bound as u64);
+    assert_eq!(m.completed(), bound as u64);
+    assert_eq!(m.rejected(), 1);
+    assert_eq!(m.lost(), 0);
+}
+
+#[test]
+fn killing_one_shard_mid_load_drains_errors_and_pool_keeps_serving() {
+    let pool = start(2, 256);
+    let mut rng = Rng::new(24);
+    let victim = 0usize;
+
+    // Park the victim, queue jobs on both shards, then poison the victim —
+    // FIFO order guarantees its queued jobs never execute (3 < max_batch).
+    let guard = pool.pause_shard(victim).expect("victim alive");
+    let mut receivers = Vec::new();
+    for i in 0..3u64 {
+        let g = shape_on_shard(victim, i as usize);
+        receivers.push((pool.submit_job(job_for(&mut rng, i, g)).unwrap(), true));
+    }
+    for i in 10..13u64 {
+        let g = shape_on_shard(1 - victim, (i - 10) as usize);
+        receivers.push((pool.submit_job(job_for(&mut rng, i, g)).unwrap(), false));
+    }
+    pool.poison_shard(victim);
+    drop(guard);
+
+    // Every submission gets exactly one reply: typed errors on the dead
+    // shard, results on the survivor.
+    for (rx, on_victim) in receivers {
+        let reply = rx.recv().expect("no reply channel may hang");
+        if on_victim {
+            match reply {
+                Err(ServeError::ShardFailed { shard, .. }) => assert_eq!(shard, victim),
+                other => panic!("expected ShardFailed, got ok={}", other.is_ok()),
+            }
+        } else {
+            assert!(reply.is_ok(), "survivor shard must keep serving");
+        }
+    }
+
+    // The pool is still serving: shapes homed on the dead shard fail over.
+    assert!(!pool.is_alive(victim));
+    assert_eq!(pool.live_shards(), 1);
+    let g = shape_on_shard(victim, 7);
+    let rx = pool.submit_job(job_for(&mut rng, 100, g)).unwrap();
+    assert!(rx.recv().unwrap().is_ok(), "failover to the live shard");
+
+    let m = pool.finish();
+    assert_eq!(m.panicked_shards(), 1);
+    assert_eq!(m.shards[victim].failed, 3, "in-flight jobs drained as errors");
+    assert_eq!(m.completed(), 4);
+    assert_eq!(m.lost(), 0, "zero lost (unanswered) jobs");
+}
+
+#[test]
+fn all_shards_down_is_synchronous_pool_down() {
+    let pool = start(1, 16);
+    let mut rng = Rng::new(25);
+    let guard = pool.pause_shard(0).expect("alive");
+    pool.poison_shard(0);
+    drop(guard);
+    // Wait until the drain marks the shard dead.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    while pool.is_alive(0) {
+        assert!(std::time::Instant::now() < deadline, "shard never marked dead");
+        std::thread::yield_now();
+    }
+    match pool.submit_job(quickstart_job(&mut rng, 1)) {
+        Err(ServeError::PoolDown { shards, .. }) => assert_eq!(shards, 1),
+        other => panic!("expected PoolDown, got ok={}", other.is_ok()),
+    }
+    let m = pool.finish();
+    assert_eq!(m.lost(), 0);
+}
+
+#[test]
+fn pool_metrics_expose_batching_and_cache() {
+    let pool = start(1, 256);
+    let mut rng = Rng::new(26);
+    // Park the worker so all 8 same-plan jobs are queued when it wakes:
+    // they must then form exactly one batch (8 < max_batch).
+    let guard = pool.pause_shard(0).expect("alive");
+    let receivers: Vec<_> = (0..8)
+        .map(|i| pool.submit_job(quickstart_job(&mut rng, i)).unwrap())
+        .collect();
+    drop(guard);
+    for rx in receivers {
+        rx.recv().unwrap().unwrap();
+    }
+    let m = pool.finish();
+    assert_eq!(m.completed(), 8);
+    assert_eq!(m.batches(), 1, "same-plan jobs must group into one batch");
+    assert!(m.shards[0].batch_occupancy() > 7.9);
+    assert!(m.executions() >= 8);
+    let lat = m.latency();
+    assert_eq!(lat.count, 8);
+    assert!(lat.quantile_us(0.99) >= lat.quantile_us(0.50));
+    // JSON dump has the documented shape.
+    let j = m.to_json();
+    for key in ["accepted", "completed", "lost", "latency_us", "shards", "cache"] {
+        assert!(j.get(key).is_some(), "metrics JSON missing '{key}'");
+    }
+}

@@ -1,0 +1,237 @@
+//! Bench JSON: pull-parser / incremental-writer throughput vs the tree
+//! `Json` on the two hot wire formats — campaign JSONL resume lines and
+//! serve request lines. This is the perf gate the `util/json_stream`
+//! refactor is held to: the zero-allocation pull scan must clearly beat
+//! tree parsing (CI's json-smoke job enforces ≥2×).
+//!
+//! The campaign corpus is generated with `Campaign::write_synthetic_stream`
+//! (the same deterministic stream `cube3d gen-jsonl` and the CI million-line
+//! resume gate use), replicated to a few MB so MB/s is stable. Results are
+//! written to `BENCH_json.json` at the repository root — regenerate with
+//! `cargo bench --bench bench_json` (values are machine-dependent).
+
+use cube3d::campaign::{Campaign, CampaignMode, CampaignPoint};
+use cube3d::config::ExperimentConfig;
+use cube3d::serve::WireRequest;
+use cube3d::util::bench::{black_box, Bench};
+use cube3d::util::json::{obj, Json};
+use cube3d::util::json_stream::{Event, JsonWriter, PullParser};
+use cube3d::workloads::Gemm;
+use std::path::PathBuf;
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..")
+}
+
+/// Drive the pull-parser over a whole document, counting events — the pure
+/// structural scan, no tree and no typed decode.
+fn pull_scan(line: &str) -> u64 {
+    let mut p = PullParser::new(line);
+    let mut n = 0u64;
+    loop {
+        match p.next_event().expect("corpus line is valid JSON") {
+            Event::End => return n,
+            _ => n += 1,
+        }
+    }
+}
+
+/// Campaign JSONL corpus: the synthetic completed stream for a shipped
+/// sweep config, line-replicated until it holds at least `min_bytes`.
+fn campaign_corpus(min_bytes: usize) -> Vec<String> {
+    let path = repo_root().join("configs").join("rn0_tsv_sweep.json");
+    let cfg = ExperimentConfig::from_file(&path).expect("shipped config parses");
+    let campaign = Campaign::from_config(&cfg, CampaignMode::Point).expect("shipped config builds");
+    let tmp = std::env::temp_dir().join(format!("cube3d_bench_json_{}.jsonl", std::process::id()));
+    campaign.write_synthetic_stream(&tmp).expect("synthetic stream");
+    let text = std::fs::read_to_string(&tmp).expect("read synthetic stream");
+    let _ = std::fs::remove_file(&tmp);
+    // Skip the fingerprint header: the corpus is metric lines only.
+    let base: Vec<String> = text.lines().skip(1).map(str::to_string).collect();
+    assert!(!base.is_empty(), "synthetic stream produced no points");
+    let mut lines = Vec::new();
+    let mut bytes = 0usize;
+    while bytes < min_bytes {
+        for l in &base {
+            bytes += l.len();
+            lines.push(l.clone());
+        }
+    }
+    lines
+}
+
+/// Serve wire corpus: the loadtest's request classes, alternating.
+fn wire_corpus(n: usize) -> Vec<String> {
+    let shapes = [("exact64", Gemm::new(64, 96, 256)), ("tiled20", Gemm::new(20, 25, 30))];
+    let mut w = JsonWriter::with_capacity(256);
+    (0..n)
+        .map(|i| {
+            let (label, gemm) = shapes[i % shapes.len()];
+            let wire = if i % 3 == 0 {
+                WireRequest::analyze(i as u64, label, gemm, 1 << 18)
+            } else {
+                WireRequest::gemm(i as u64, label, gemm, i as u64)
+            };
+            w.clear();
+            wire.write_compact(&mut w);
+            w.as_str().to_string()
+        })
+        .collect()
+}
+
+fn mb(bytes: usize) -> f64 {
+    bytes as f64 / (1024.0 * 1024.0)
+}
+
+fn main() {
+    println!("== bench_json: pull-parser / incremental writer vs tree Json ==\n");
+    let mut b = Bench::default();
+
+    // --- campaign JSONL: parse throughput ---------------------------------
+    let lines = campaign_corpus(2 << 20);
+    let bytes: usize = lines.iter().map(String::len).sum();
+    println!("campaign corpus: {} lines, {:.2} MiB", lines.len(), mb(bytes));
+
+    let tree_parse = b
+        .run("json/campaign_tree_parse", || {
+            for l in &lines {
+                black_box(Json::parse(l).expect("valid"));
+            }
+        })
+        .mean_s();
+    let pull = b
+        .run("json/campaign_pull_scan", || {
+            for l in &lines {
+                black_box(pull_scan(l));
+            }
+        })
+        .mean_s();
+    let tree_decode = b
+        .run("json/campaign_tree_decode", || {
+            for l in &lines {
+                let doc = Json::parse(l).expect("valid");
+                black_box(CampaignPoint::from_json(&doc).expect("decodes"));
+            }
+        })
+        .mean_s();
+    let pull_decode = b
+        .run("json/campaign_pull_decode", || {
+            for l in &lines {
+                black_box(CampaignPoint::from_jsonl_line(l).expect("decodes"));
+            }
+        })
+        .mean_s();
+    let (tree_mb_s, pull_mb_s) = (mb(bytes) / tree_parse, mb(bytes) / pull);
+    println!(
+        "  parse: tree {tree_mb_s:.1} MB/s   pull scan {pull_mb_s:.1} MB/s   ({:.2}x)",
+        pull_mb_s / tree_mb_s
+    );
+    println!(
+        "  typed decode: tree {:.0} lines/s   pull {:.0} lines/s   ({:.2}x)",
+        lines.len() as f64 / tree_decode,
+        lines.len() as f64 / pull_decode,
+        tree_decode / pull_decode
+    );
+
+    // --- campaign JSONL: write throughput ---------------------------------
+    let points: Vec<CampaignPoint> = lines
+        .iter()
+        .map(|l| CampaignPoint::from_jsonl_line(l).expect("decodes"))
+        .collect();
+    let tree_write = b
+        .run("json/campaign_tree_write", || {
+            for p in &points {
+                black_box(p.to_json().to_string_compact());
+            }
+        })
+        .mean_s();
+    let mut wbuf = JsonWriter::with_capacity(512);
+    let stream_write = b
+        .run("json/campaign_stream_write", || {
+            for p in &points {
+                wbuf.clear();
+                p.write_jsonl(&mut wbuf);
+                black_box(wbuf.as_str().len());
+            }
+        })
+        .mean_s();
+    println!(
+        "  write: tree {:.1} MB/s   stream {:.1} MB/s   ({:.2}x)",
+        mb(bytes) / tree_write,
+        mb(bytes) / stream_write,
+        tree_write / stream_write
+    );
+
+    // --- serve wire requests: admission-path parse ------------------------
+    let wires = wire_corpus(4096);
+    let wire_bytes: usize = wires.iter().map(String::len).sum();
+    let wire_tree = b
+        .run("json/wire_tree_parse", || {
+            for l in &wires {
+                let doc = Json::parse(l).expect("valid");
+                black_box(WireRequest::from_json(&doc).expect("valid request"));
+            }
+        })
+        .mean_s();
+    let wire_pull = b
+        .run("json/wire_pull_parse", || {
+            for l in &wires {
+                black_box(WireRequest::parse(l).expect("valid request"));
+            }
+        })
+        .mean_s();
+    println!(
+        "  wire: tree {:.0} req/s   pull {:.0} req/s   ({:.2}x)\n",
+        wires.len() as f64 / wire_tree,
+        wires.len() as f64 / wire_pull,
+        wire_tree / wire_pull
+    );
+
+    let doc = obj([
+        ("bench", Json::Str("bench_json".to_string())),
+        (
+            "note",
+            Json::Str(
+                "pull-parser / incremental-writer throughput vs tree Json on campaign \
+                 JSONL and serve wire lines; regenerate with `cargo bench --bench \
+                 bench_json` (machine-dependent). CI's json-smoke job gates \
+                 campaign.pull_over_tree >= 2."
+                    .to_string(),
+            ),
+        ),
+        ("populated", Json::Bool(true)),
+        (
+            "campaign",
+            obj([
+                ("lines", Json::Num(lines.len() as f64)),
+                ("bytes", Json::Num(bytes as f64)),
+                ("tree_parse_mb_per_s", Json::Num(tree_mb_s)),
+                ("pull_scan_mb_per_s", Json::Num(pull_mb_s)),
+                ("pull_over_tree", Json::Num(pull_mb_s / tree_mb_s)),
+                ("tree_decode_lines_per_s", Json::Num(lines.len() as f64 / tree_decode)),
+                ("pull_decode_lines_per_s", Json::Num(lines.len() as f64 / pull_decode)),
+                ("decode_pull_over_tree", Json::Num(tree_decode / pull_decode)),
+                ("tree_write_mb_per_s", Json::Num(mb(bytes) / tree_write)),
+                ("stream_write_mb_per_s", Json::Num(mb(bytes) / stream_write)),
+                ("write_stream_over_tree", Json::Num(tree_write / stream_write)),
+            ]),
+        ),
+        (
+            "wire",
+            obj([
+                ("requests", Json::Num(wires.len() as f64)),
+                ("bytes", Json::Num(wire_bytes as f64)),
+                ("tree_parse_per_s", Json::Num(wires.len() as f64 / wire_tree)),
+                ("pull_parse_per_s", Json::Num(wires.len() as f64 / wire_pull)),
+                ("pull_over_tree", Json::Num(wire_tree / wire_pull)),
+            ]),
+        ),
+        (
+            "samples",
+            Json::Arr(b.results().iter().map(|r| r.to_json()).collect()),
+        ),
+    ]);
+    let out = repo_root().join("BENCH_json.json");
+    std::fs::write(&out, doc.to_string_pretty() + "\n").expect("write BENCH_json.json");
+    println!("wrote {}", out.display());
+}

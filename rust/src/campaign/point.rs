@@ -16,6 +16,7 @@ use crate::eval::Constraints;
 use crate::power::VerticalTech;
 use crate::schedule::PartitionStrategy;
 use crate::util::json::{obj, opt_num, Json};
+use crate::util::json_stream::{JsonWriter, PullParser, RawStr};
 use crate::workloads::Gemm;
 use anyhow::{anyhow, bail, Result};
 
@@ -89,6 +90,14 @@ pub enum PointView {
 pub struct CampaignPoint {
     pub label: String,
     pub view: PointView,
+}
+
+/// Read a string value as owned text; `None` when the value is not a string.
+fn read_owned_str(p: &mut PullParser<'_>) -> Option<String> {
+    p.read_str()
+        .ok()
+        .and_then(|s| s.decode().ok())
+        .map(|c| c.into_owned())
 }
 
 fn get_u64(j: &Json, key: &str) -> Result<u64> {
@@ -197,6 +206,245 @@ impl CampaignPoint {
                 ("feasible", Json::Bool(p.feasible)),
             ]),
         }
+    }
+
+    /// Stream one JSONL line through the incremental writer — the hot-path
+    /// twin of [`CampaignPoint::to_json`]. Keys are written in sorted
+    /// (BTreeMap) order so the bytes are identical to
+    /// `to_json().to_string_compact()`; `tests/json_stream.rs` pins the
+    /// equality and CI `diff`s a resumed stream against a clean one.
+    pub fn write_jsonl(&self, w: &mut JsonWriter) {
+        let check = |v: u64| {
+            debug_assert!(v <= (1u64 << 53), "u64 metric {v} exceeds exact f64 range");
+            v
+        };
+        w.begin_obj();
+        match &self.view {
+            PointView::Dse(p) => {
+                w.key("area_m2");
+                w.num_f64(p.area_m2);
+                w.key("cycles");
+                w.num_u64(check(p.cycles));
+                w.key("dataflow");
+                w.str(&p.dataflow.short_name().to_ascii_lowercase());
+                w.key("feasible");
+                w.bool(p.feasible);
+                w.key("k");
+                w.num_u64(check(p.workload.k));
+                w.key("kind");
+                w.str("dse");
+                w.key("label");
+                w.str(&self.label);
+                w.key("m");
+                w.num_u64(check(p.workload.m));
+                w.key("mac_budget");
+                w.num_u64(check(p.mac_budget));
+                w.key("n");
+                w.num_u64(check(p.workload.n));
+                w.key("peak_temp_c");
+                w.opt_num(p.peak_temp_c);
+                w.key("perf_per_area_vs_2d");
+                w.num_f64(p.perf_per_area_vs_2d);
+                w.key("power_w");
+                w.num_f64(p.power_w);
+                w.key("speedup_vs_2d");
+                w.num_f64(p.speedup_vs_2d);
+                w.key("tiers");
+                w.num_u64(check(p.tiers));
+                w.key("vtech");
+                w.str(&p.vtech.name().to_ascii_lowercase());
+            }
+            PointView::Schedule(p) => {
+                w.key("bottleneck_stage");
+                w.num_u64(check(p.bottleneck_stage as u64));
+                w.key("dataflow");
+                w.str(&p.dataflow.short_name().to_ascii_lowercase());
+                w.key("feasible");
+                w.bool(p.feasible);
+                w.key("interval_cycles");
+                w.num_u64(check(p.interval_cycles));
+                w.key("kind");
+                w.str("schedule");
+                w.key("label");
+                w.str(&self.label);
+                w.key("latency_cycles");
+                w.num_u64(check(p.latency_cycles));
+                w.key("mac_budget");
+                w.num_u64(check(p.mac_budget));
+                w.key("peak_temp_c");
+                w.opt_num(p.peak_temp_c);
+                w.key("power_w");
+                w.opt_num(p.power_w);
+                w.key("speedup_vs_2d");
+                w.num_f64(p.speedup_vs_2d);
+                w.key("stages");
+                w.num_u64(check(p.stages as u64));
+                w.key("strategy");
+                w.str(p.strategy.name());
+                w.key("throughput_per_s");
+                w.num_f64(p.throughput_per_s);
+                w.key("tiers");
+                w.num_u64(check(p.tiers));
+                w.key("vertical_traffic_bytes");
+                w.num_u64(check(p.vertical_traffic_bytes));
+            }
+        }
+        w.end();
+    }
+
+    /// Parse one JSONL line through the pull-parser — no `Json` tree, one
+    /// transient point in memory however long the stream. Accepts exactly
+    /// what [`CampaignPoint::from_json`] accepts (unknown keys skipped,
+    /// duplicates last-wins, same per-field error text); the differential
+    /// tests hold the two parsers equal on valid lines, torn tails and
+    /// truncation prefixes.
+    pub fn from_jsonl_line(line: &str) -> Result<CampaignPoint> {
+        let mut p = PullParser::new(line);
+        let mut label: Option<String> = None;
+        let mut kind: Option<String> = None;
+        let mut dataflow: Option<String> = None;
+        let mut vtech: Option<String> = None;
+        let mut strategy: Option<String> = None;
+        // Integer-valued metric slots (u64) and float slots, union of both
+        // views. `power_w`/`peak_temp_c` are double-optional: outer = key
+        // present, inner = non-null.
+        let mut u: [Option<u64>; 11] = [None; 11];
+        const M: usize = 0;
+        const N: usize = 1;
+        const K: usize = 2;
+        const MAC_BUDGET: usize = 3;
+        const TIERS: usize = 4;
+        const CYCLES: usize = 5;
+        const STAGES: usize = 6;
+        const INTERVAL: usize = 7;
+        const LATENCY: usize = 8;
+        const BOTTLENECK: usize = 9;
+        const VTRAFFIC: usize = 10;
+        let mut speedup: Option<f64> = None;
+        let mut area: Option<f64> = None;
+        let mut perf_per_area: Option<f64> = None;
+        let mut throughput: Option<f64> = None;
+        let mut power: Option<Option<f64>> = None;
+        let mut peak_temp: Option<Option<f64>> = None;
+        let mut feasible: Option<bool> = None;
+
+        let int_err =
+            |key: &str| anyhow!("campaign point field '{key}' must be a non-negative integer");
+        let num_err = |key: &str| anyhow!("campaign point field '{key}' must be a number");
+        let str_err = |key: &str| anyhow!("campaign point field '{key}' must be a string");
+
+        p.expect_obj_begin()
+            .map_err(|e| anyhow!("campaign point line: {e}"))?;
+        while let Some(key) = p.next_field().map_err(|e| anyhow!("campaign point line: {e}"))? {
+            let u_slot = |k: &RawStr<'_>| -> Option<usize> {
+                for (slot, name) in [
+                    (M, "m"),
+                    (N, "n"),
+                    (K, "k"),
+                    (MAC_BUDGET, "mac_budget"),
+                    (TIERS, "tiers"),
+                    (CYCLES, "cycles"),
+                    (STAGES, "stages"),
+                    (INTERVAL, "interval_cycles"),
+                    (LATENCY, "latency_cycles"),
+                    (BOTTLENECK, "bottleneck_stage"),
+                    (VTRAFFIC, "vertical_traffic_bytes"),
+                ] {
+                    if k.is(name) {
+                        return Some(slot);
+                    }
+                }
+                None
+            };
+            if key.is("label") {
+                label = Some(read_owned_str(&mut p).ok_or_else(|| str_err("label"))?);
+            } else if key.is("kind") {
+                kind = Some(read_owned_str(&mut p).ok_or_else(|| str_err("kind"))?);
+            } else if key.is("dataflow") {
+                dataflow = Some(read_owned_str(&mut p).ok_or_else(|| str_err("dataflow"))?);
+            } else if key.is("vtech") {
+                vtech = Some(read_owned_str(&mut p).ok_or_else(|| str_err("vtech"))?);
+            } else if key.is("strategy") {
+                strategy = Some(read_owned_str(&mut p).ok_or_else(|| str_err("strategy"))?);
+            } else if let Some(slot) = u_slot(&key) {
+                let name = [
+                    "m",
+                    "n",
+                    "k",
+                    "mac_budget",
+                    "tiers",
+                    "cycles",
+                    "stages",
+                    "interval_cycles",
+                    "latency_cycles",
+                    "bottleneck_stage",
+                    "vertical_traffic_bytes",
+                ][slot];
+                u[slot] = Some(p.read_u64().map_err(|_| int_err(name))?);
+            } else if key.is("speedup_vs_2d") {
+                speedup = Some(p.read_f64().map_err(|_| num_err("speedup_vs_2d"))?);
+            } else if key.is("area_m2") {
+                area = Some(p.read_f64().map_err(|_| num_err("area_m2"))?);
+            } else if key.is("perf_per_area_vs_2d") {
+                perf_per_area = Some(p.read_f64().map_err(|_| num_err("perf_per_area_vs_2d"))?);
+            } else if key.is("throughput_per_s") {
+                throughput = Some(p.read_f64().map_err(|_| num_err("throughput_per_s"))?);
+            } else if key.is("power_w") {
+                power = Some(p.read_opt_f64().map_err(|_| num_err("power_w"))?);
+            } else if key.is("peak_temp_c") {
+                peak_temp = Some(p.read_opt_f64().map_err(|_| num_err("peak_temp_c"))?);
+            } else if key.is("feasible") {
+                feasible = p
+                    .read_bool()
+                    .map(Some)
+                    .map_err(|_| anyhow!("campaign point field 'feasible' must be a boolean"))?;
+            } else {
+                p.skip_value()
+                    .map_err(|e| anyhow!("campaign point line: {e}"))?;
+            }
+        }
+        p.expect_end()
+            .map_err(|e| anyhow!("campaign point line: {e}"))?;
+
+        let label = label.ok_or_else(|| str_err("label"))?;
+        let ru = |slot: usize, name: &str| u[slot].ok_or_else(|| int_err(name));
+        let view = match kind.ok_or_else(|| str_err("kind"))?.as_str() {
+            "dse" => PointView::Dse(DsePoint {
+                workload: Gemm::new(ru(M, "m")?, ru(N, "n")?, ru(K, "k")?),
+                dataflow: parse_dataflow(&dataflow.ok_or_else(|| str_err("dataflow"))?)?,
+                mac_budget: ru(MAC_BUDGET, "mac_budget")?,
+                tiers: ru(TIERS, "tiers")?,
+                vtech: parse_vtech(&vtech.ok_or_else(|| str_err("vtech"))?)?,
+                cycles: ru(CYCLES, "cycles")?,
+                speedup_vs_2d: speedup.ok_or_else(|| num_err("speedup_vs_2d"))?,
+                area_m2: area.ok_or_else(|| num_err("area_m2"))?,
+                perf_per_area_vs_2d: perf_per_area
+                    .ok_or_else(|| num_err("perf_per_area_vs_2d"))?,
+                power_w: power.flatten().ok_or_else(|| num_err("power_w"))?,
+                peak_temp_c: peak_temp.flatten(),
+                feasible: feasible
+                    .ok_or_else(|| anyhow!("campaign point field 'feasible' must be a boolean"))?,
+            }),
+            "schedule" => PointView::Schedule(SchedulePoint {
+                mac_budget: ru(MAC_BUDGET, "mac_budget")?,
+                tiers: ru(TIERS, "tiers")?,
+                dataflow: parse_dataflow(&dataflow.ok_or_else(|| str_err("dataflow"))?)?,
+                strategy: parse_strategy(&strategy.ok_or_else(|| str_err("strategy"))?)?,
+                stages: ru(STAGES, "stages")? as usize,
+                interval_cycles: ru(INTERVAL, "interval_cycles")?,
+                latency_cycles: ru(LATENCY, "latency_cycles")?,
+                throughput_per_s: throughput.ok_or_else(|| num_err("throughput_per_s"))?,
+                bottleneck_stage: ru(BOTTLENECK, "bottleneck_stage")? as usize,
+                vertical_traffic_bytes: ru(VTRAFFIC, "vertical_traffic_bytes")?,
+                speedup_vs_2d: speedup.ok_or_else(|| num_err("speedup_vs_2d"))?,
+                power_w: power.flatten(),
+                peak_temp_c: peak_temp.flatten(),
+                feasible: feasible
+                    .ok_or_else(|| anyhow!("campaign point field 'feasible' must be a boolean"))?,
+            }),
+            other => bail!("unknown campaign point kind '{other}' (dse|schedule)"),
+        };
+        Ok(CampaignPoint { label, view })
     }
 
     /// Parse one JSONL line back into a point (exact inverse of
@@ -344,6 +592,41 @@ mod tests {
         let s = schedule_point();
         assert!(s.schedule().is_some() && s.dse().is_none());
         assert!(!s.feasible());
+    }
+
+    #[test]
+    fn streaming_writer_is_bit_identical_to_tree() {
+        let mut w = JsonWriter::new();
+        for p in [dse_point(), schedule_point()] {
+            w.clear();
+            p.write_jsonl(&mut w);
+            assert_eq!(w.as_str(), p.to_json().to_string_compact());
+        }
+    }
+
+    #[test]
+    fn pull_parse_agrees_with_tree_parse_on_lines() {
+        for p in [dse_point(), schedule_point()] {
+            let line = p.to_json().to_string_compact();
+            let streamed = CampaignPoint::from_jsonl_line(&line).unwrap();
+            let tree = CampaignPoint::from_json(&Json::parse(&line).unwrap()).unwrap();
+            assert_eq!(
+                streamed.to_json().to_string_compact(),
+                tree.to_json().to_string_compact()
+            );
+            // Both reject every strict prefix the same way (torn tails).
+            for cut in 1..line.len() {
+                let torn = &line[..cut];
+                assert_eq!(
+                    CampaignPoint::from_jsonl_line(torn).is_ok(),
+                    Json::parse(torn)
+                        .map_err(anyhow::Error::from)
+                        .and_then(|j| CampaignPoint::from_json(&j))
+                        .is_ok(),
+                    "prefix {cut} of {line}"
+                );
+            }
+        }
     }
 
     #[test]

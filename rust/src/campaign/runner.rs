@@ -16,11 +16,11 @@ use crate::eval::{
 use crate::power::Tech;
 use crate::schedule::{NetworkMetrics, ScheduleSpec};
 use crate::util::json::{obj, Json};
+use crate::util::json_stream::{JsonWriter, PullParser};
 use crate::util::threadpool::par_map;
 use crate::workloads::Workload;
 use anyhow::{bail, Context, Result};
-use std::collections::HashMap;
-use std::io::Write;
+use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::Path;
 use std::sync::Arc;
 
@@ -65,7 +65,13 @@ const NETWORK_OBJECTIVES: [Objective<CampaignPoint>; 2] = [
 #[derive(Debug, Clone)]
 pub struct CampaignOutcome {
     /// Every completed point, in grid order (resumed points included).
+    /// Empty on the streaming-callback runs ([`Campaign::run_each`] /
+    /// [`Campaign::run_streaming_each`]), which hand each point to the
+    /// caller instead of materializing the set — see `completed`.
     pub points: Vec<CampaignPoint>,
+    /// Completed points (resumed included) whether or not they were
+    /// collected into `points` — the O(1)-memory runs report size here.
+    pub completed: usize,
     /// Incrementally maintained Pareto front over all completed points
     /// (ascending in the first objective, like `pareto_front_by`).
     pub front: Vec<CampaignPoint>,
@@ -301,13 +307,15 @@ impl Campaign {
     /// Parallel in-memory run (chunked `evaluate_batch` over the crate
     /// threadpool).
     pub fn run(&self) -> CampaignOutcome {
-        self.run_inner(true, None).expect("in-memory campaign run performs no I/O")
+        self.run_inner(true, None, true, None)
+            .expect("in-memory campaign run performs no I/O")
     }
 
     /// One-point-at-a-time run — the baseline `bench_sweep` compares the
     /// parallel runner against.
     pub fn run_serial(&self) -> CampaignOutcome {
-        self.run_inner(false, None).expect("in-memory campaign run performs no I/O")
+        self.run_inner(false, None, true, None)
+            .expect("in-memory campaign run performs no I/O")
     }
 
     /// Parallel run streaming every completed point as one JSONL line to
@@ -319,102 +327,90 @@ impl Campaign {
     /// tech, full grid); resuming a stream whose header belongs to a
     /// different campaign is an error, never a silent reuse.
     pub fn run_streaming(&self, path: &Path) -> Result<CampaignOutcome> {
-        self.run_inner(true, Some(path))
+        self.run_inner(true, Some(path), true, None)
     }
 
-    fn run_inner(&self, parallel: bool, jsonl: Option<&Path>) -> Result<CampaignOutcome> {
+    /// Parallel run handing each completed point (grid order, resumed
+    /// included) to `on_point` instead of collecting them —
+    /// `CampaignOutcome::points` comes back empty and memory stays O(front),
+    /// independent of grid size.
+    pub fn run_each(
+        &self,
+        on_point: &mut dyn FnMut(&CampaignPoint) -> Result<()>,
+    ) -> Result<CampaignOutcome> {
+        self.run_inner(true, None, false, Some(on_point))
+    }
+
+    /// [`Campaign::run_streaming`] with the [`Campaign::run_each`] callback
+    /// contract: resumable JSONL persistence *and* O(1) memory in
+    /// completed-point count — stored lines are pull-parsed one at a time
+    /// (never materialized as a set) and fresh lines stream out through the
+    /// incremental writer. This is the `--jsonl --json` CLI path; the CI
+    /// `json-smoke` job gates its RSS on a million-line stream.
+    pub fn run_streaming_each(
+        &self,
+        path: &Path,
+        on_point: &mut dyn FnMut(&CampaignPoint) -> Result<()>,
+    ) -> Result<CampaignOutcome> {
+        self.run_inner(true, Some(path), false, Some(on_point))
+    }
+
+    fn run_inner(
+        &self,
+        parallel: bool,
+        jsonl: Option<&Path>,
+        collect: bool,
+        on_point: Option<&mut dyn FnMut(&CampaignPoint) -> Result<()>>,
+    ) -> Result<CampaignOutcome> {
         let ev = self.pick_evaluator();
         let objectives = self.objectives();
-        let mut done: HashMap<String, CampaignPoint> = HashMap::new();
-        let mut sink: Option<std::fs::File> = None;
+        let mut stored: Option<StoredPoints> = None;
+        let mut col = Collector {
+            collect,
+            on_point,
+            sink: None,
+            wbuf: JsonWriter::with_capacity(512),
+            points: Vec::new(),
+            completed: 0,
+            front: ParetoSet::new(objectives),
+            feasible_front: ParetoSet::new(objectives),
+        };
         if let Some(path) = jsonl {
             let expected = self.fingerprint();
-            let (header, prior) = load_jsonl(path)?;
-            if (header.is_some() || !prior.is_empty()) && header.as_deref() != Some(expected.as_str())
-            {
-                bail!(
-                    "campaign stream {} belongs to a different campaign (header mismatch); \
-                     resume with the original config or start a fresh --jsonl file",
-                    path.display()
-                );
-            }
-            // Rewrite header + good lines to a sibling temp file and rename
-            // over the stream: a torn tail from a killed run can never
-            // corrupt the first appended line, and a crash *during this
-            // rewrite* leaves the original stream untouched.
-            let tmp = path.with_extension("jsonl.tmp");
-            {
-                let mut file = std::fs::File::create(&tmp)
-                    .with_context(|| format!("creating campaign stream {}", tmp.display()))?;
-                writeln!(
-                    file,
-                    "{}",
-                    obj([("campaign", Json::Str(expected))]).to_string_compact()
-                )?;
-                for p in &prior {
-                    writeln!(file, "{}", p.to_json().to_string_compact())?;
-                }
-                file.flush()?;
-            }
-            std::fs::rename(&tmp, path)
-                .with_context(|| format!("replacing campaign stream {}", path.display()))?;
-            for p in prior {
-                done.insert(p.label.clone(), p);
-            }
-            sink = Some(
+            prepare_stream(path, &expected)?;
+            stored = Some(StoredPoints::open(path)?);
+            col.sink = Some(BufWriter::new(
                 std::fs::OpenOptions::new()
                     .append(true)
                     .open(path)
                     .with_context(|| format!("opening campaign stream {}", path.display()))?,
-            );
+            ));
         }
 
-        let mut points: Vec<CampaignPoint> = Vec::new();
-        let mut front = ParetoSet::new(objectives);
-        let mut feasible_front = ParetoSet::new(objectives);
         let mut resumed = 0usize;
         let mut skipped = 0usize;
         let mut pending: Vec<(String, Scenario)> = Vec::new();
         let chunk = if parallel { CHUNK } else { 1 };
 
-        let complete = |p: CampaignPoint,
-                            fresh: bool,
-                            sink: &mut Option<std::fs::File>,
-                            points: &mut Vec<CampaignPoint>,
-                            front: &mut ParetoSet<CampaignPoint>,
-                            feasible_front: &mut ParetoSet<CampaignPoint>|
-         -> Result<()> {
-            if fresh {
-                if let Some(file) = sink {
-                    writeln!(file, "{}", p.to_json().to_string_compact())?;
-                }
-            }
-            front.insert(p.clone());
-            if p.feasible() {
-                feasible_front.insert(p.clone());
-            }
-            points.push(p);
-            Ok(())
-        };
-
         for wi in 0..self.workloads.len() {
             for gp in self.grid.iter() {
                 let label = self.point_label(wi, &gp);
-                if let Some(prior) = done.remove(&label) {
+                // Stored streams are written in grid order, so resume is a
+                // one-lookahead merge: if the next stored line is this grid
+                // point, it is consumed in place — no label set, no point
+                // map, O(1) memory however long the stream.
+                let prior = match stored.as_mut() {
+                    Some(s) => s.take_if(&label)?,
+                    None => None,
+                };
+                if let Some(prior) = prior {
                     // Preserve grid order: everything queued before this
                     // point must land in the result first.
                     for p in self.evaluate_chunk(&ev, &mut pending, parallel, &mut skipped) {
-                        complete(p, true, &mut sink, &mut points, &mut front, &mut feasible_front)?;
+                        col.complete(p, true)?;
                     }
                     resumed += 1;
-                    complete(
-                        prior,
-                        false,
-                        &mut sink,
-                        &mut points,
-                        &mut front,
-                        &mut feasible_front,
-                    )?;
+                    col.complete(prior, false)?;
                     continue;
                 }
                 let spec = self.base.with_values(&gp.values);
@@ -427,29 +423,110 @@ impl Campaign {
                 }
                 if pending.len() >= chunk {
                     for p in self.evaluate_chunk(&ev, &mut pending, parallel, &mut skipped) {
-                        complete(p, true, &mut sink, &mut points, &mut front, &mut feasible_front)?;
+                        col.complete(p, true)?;
                     }
-                    if let Some(file) = &mut sink {
-                        file.flush()?;
-                    }
+                    col.flush()?;
                 }
             }
         }
         for p in self.evaluate_chunk(&ev, &mut pending, parallel, &mut skipped) {
-            complete(p, true, &mut sink, &mut points, &mut front, &mut feasible_front)?;
+            col.complete(p, true)?;
         }
-        if let Some(file) = &mut sink {
-            file.flush()?;
-        }
+        col.flush()?;
 
         Ok(CampaignOutcome {
-            points,
-            front: front.into_front(),
-            feasible_front: feasible_front.into_front(),
+            points: col.points,
+            completed: col.completed,
+            front: col.front.into_front(),
+            feasible_front: col.feasible_front.into_front(),
             resumed,
             skipped,
             cache: ev.cache_stats(),
         })
+    }
+
+    /// Generate a fully *completed* stream for this campaign without
+    /// evaluating anything: the fingerprint header plus one deterministic
+    /// synthetic metric line per grid point, all through the incremental
+    /// writer. This backs `cube3d gen-jsonl`, `bench_json` and the CI
+    /// million-line O(1)-resume gate; a subsequent `--jsonl` run resumes
+    /// every line without building a single scenario.
+    pub fn write_synthetic_stream(&self, path: &Path) -> Result<usize> {
+        let mut out = BufWriter::new(
+            std::fs::File::create(path)
+                .with_context(|| format!("creating campaign stream {}", path.display()))?,
+        );
+        let mut w = JsonWriter::with_capacity(512);
+        w.begin_obj();
+        w.key("campaign");
+        w.str(&self.fingerprint());
+        w.end();
+        out.write_all(w.as_str().as_bytes())?;
+        out.write_all(b"\n")?;
+        let mut i = 0u64;
+        for wi in 0..self.workloads.len() {
+            for gp in self.grid.iter() {
+                let label = self.point_label(wi, &gp);
+                let spec = self.base.with_values(&gp.values);
+                let p = self.synthetic_point(wi, &spec, label, i);
+                w.clear();
+                p.write_jsonl(&mut w);
+                out.write_all(w.as_str().as_bytes())?;
+                out.write_all(b"\n")?;
+                i += 1;
+            }
+        }
+        out.flush()?;
+        Ok(i as usize)
+    }
+
+    /// Deterministic pseudo-metrics for [`Campaign::write_synthetic_stream`].
+    /// All Pareto objectives derive monotonically from one per-point scalar,
+    /// so the front over any prefix is a single point and resume cost is
+    /// dominated by parsing, which is exactly what the benches and the RSS
+    /// gate want to measure. Non-objective metrics vary irregularly to
+    /// exercise shortest-f64 printing.
+    fn synthetic_point(&self, wi: usize, spec: &PointSpec, label: String, i: u64) -> CampaignPoint {
+        let v = 1_000 + i.wrapping_mul(2_654_435_761) % 1_000_003;
+        let frac = |m: u64| (i.wrapping_mul(48_271) % m) as f64 / m as f64;
+        match self.mode {
+            CampaignMode::Point => CampaignPoint {
+                label,
+                view: PointView::Dse(DsePoint {
+                    workload: self.workloads[wi].primary_gemm(),
+                    dataflow: spec.dataflow,
+                    mac_budget: spec.mac_budget,
+                    tiers: spec.tiers,
+                    vtech: spec.vtech,
+                    cycles: v,
+                    speedup_vs_2d: 1.0 + frac(911) * 2.5,
+                    area_m2: v as f64 * 1.7e-10,
+                    perf_per_area_vs_2d: 1.0 + frac(613),
+                    power_w: v as f64 * 3.3e-4,
+                    peak_temp_c: if i % 3 == 0 { None } else { Some(40.0 + frac(307) * 60.0) },
+                    feasible: i % 5 != 0,
+                }),
+            },
+            CampaignMode::Network => CampaignPoint {
+                label,
+                view: PointView::Schedule(SchedulePoint {
+                    mac_budget: spec.mac_budget,
+                    tiers: spec.tiers,
+                    dataflow: spec.dataflow,
+                    strategy: spec.strategy,
+                    stages: 1 + (i % 7) as usize,
+                    interval_cycles: v,
+                    latency_cycles: v * 3 + 17,
+                    throughput_per_s: 1e5 * (1.0 + frac(1013)),
+                    bottleneck_stage: (i % 4) as usize,
+                    vertical_traffic_bytes: v * 11,
+                    speedup_vs_2d: 1.0 + frac(797) * 3.0,
+                    power_w: if i % 4 == 0 { None } else { Some(5.0 + frac(683) * 10.0) },
+                    peak_temp_c: Some(40.0 + frac(577) * 70.0),
+                    feasible: i % 6 != 0,
+                }),
+            },
+        }
     }
 
     /// Evaluate and drain the pending chunk, in order.
@@ -543,33 +620,211 @@ pub fn schedule_view(s: &Scenario, m: &NetworkMetrics) -> SchedulePoint {
     }
 }
 
-/// Parse an existing campaign stream into its header fingerprint and
-/// completed points, dropping a torn trailing line (a killed run may die
-/// mid-write) and any other malformed line.
-fn load_jsonl(path: &Path) -> Result<(Option<String>, Vec<CampaignPoint>)> {
-    if !path.exists() {
-        return Ok((None, Vec::new()));
+/// Completion bookkeeping for one campaign run: JSONL persistence through
+/// the reusable incremental writer, the optional per-point callback, the
+/// incremental fronts, and (only when collecting) the materialized point
+/// set. Everything here is O(front) except the opt-in `points` vec.
+struct Collector<'a> {
+    collect: bool,
+    on_point: Option<&'a mut dyn FnMut(&CampaignPoint) -> Result<()>>,
+    sink: Option<BufWriter<std::fs::File>>,
+    wbuf: JsonWriter,
+    points: Vec<CampaignPoint>,
+    completed: usize,
+    front: ParetoSet<CampaignPoint>,
+    feasible_front: ParetoSet<CampaignPoint>,
+}
+
+impl Collector<'_> {
+    fn complete(&mut self, p: CampaignPoint, fresh: bool) -> Result<()> {
+        if fresh {
+            if let Some(file) = &mut self.sink {
+                self.wbuf.clear();
+                p.write_jsonl(&mut self.wbuf);
+                file.write_all(self.wbuf.as_str().as_bytes())?;
+                file.write_all(b"\n")?;
+            }
+        }
+        if let Some(f) = self.on_point.as_mut() {
+            f(&p)?;
+        }
+        self.completed += 1;
+        self.front.insert(p.clone());
+        if p.feasible() {
+            self.feasible_front.insert(p.clone());
+        }
+        if self.collect {
+            self.points.push(p);
+        }
+        Ok(())
     }
-    let text = std::fs::read_to_string(path)
+
+    /// Push buffered fresh lines to the OS — called per chunk, so a killed
+    /// run loses at most one chunk of completed work.
+    fn flush(&mut self) -> Result<()> {
+        if let Some(file) = &mut self.sink {
+            file.flush()?;
+        }
+        Ok(())
+    }
+}
+
+/// Pull-parse one line as a campaign fingerprint header
+/// (`{"campaign":"<fingerprint>"}`); `None` when the line is anything else.
+fn parse_header_line(line: &str) -> Option<String> {
+    let mut p = PullParser::new(line);
+    p.expect_obj_begin().ok()?;
+    let mut fp = None;
+    while let Some(key) = p.next_field().ok()? {
+        if key.is("campaign") {
+            fp = Some(p.read_str().ok()?.decode().ok()?.into_owned());
+        } else {
+            p.skip_value().ok()?;
+        }
+    }
+    p.expect_end().ok()?;
+    fp
+}
+
+/// Validate and normalize an existing campaign stream in O(1) memory:
+/// verify the fingerprint header (pull-parsed, never a tree), then rewrite
+/// `header + every valid point line` to a sibling temp file and rename it
+/// over the stream — a torn tail from a killed run can never corrupt the
+/// first appended line, and a crash *during* the rewrite leaves the
+/// original stream untouched. A fingerprint mismatch is an error quoting
+/// both fingerprints, raised before anything is written.
+fn prepare_stream(path: &Path, expected: &str) -> Result<()> {
+    let header_line = {
+        let mut w = JsonWriter::new();
+        w.begin_obj();
+        w.key("campaign");
+        w.str(expected);
+        w.end();
+        w.into_string()
+    };
+    if !path.exists() {
+        let mut file = BufWriter::new(
+            std::fs::File::create(path)
+                .with_context(|| format!("creating campaign stream {}", path.display()))?,
+        );
+        writeln!(file, "{header_line}")?;
+        file.flush()?;
+        return Ok(());
+    }
+    let file = std::fs::File::open(path)
         .with_context(|| format!("reading campaign stream {}", path.display()))?;
-    let mut header = None;
-    let mut out = Vec::new();
-    for line in text.lines() {
-        let line = line.trim();
-        if line.is_empty() {
+    let mut lines = BufReader::new(file).lines();
+    // Pass 1: find the header before touching anything on disk. A valid
+    // completed point before any header means the stream belongs to some
+    // campaign but can't prove which — reject it rather than guess. Torn
+    // or foreign lines before any real content are dropped.
+    let mut found_header = false;
+    for line in lines.by_ref() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() {
             continue;
         }
-        if let Ok(j) = Json::parse(line) {
-            if let Some(c) = j.get("campaign").and_then(Json::as_str) {
-                header = Some(c.to_string());
-                continue;
+        if let Some(found) = parse_header_line(t) {
+            if found != expected {
+                bail!(
+                    "campaign stream {} belongs to a different campaign (header mismatch); \
+                     resume with the original config or start a fresh --jsonl file\n  \
+                     expected fingerprint: {expected}\n  \
+                     found fingerprint:    {found}",
+                    path.display()
+                );
             }
-            if let Ok(p) = CampaignPoint::from_json(&j) {
-                out.push(p);
-            }
+            found_header = true;
+            break;
+        }
+        if CampaignPoint::from_jsonl_line(t).is_ok() {
+            bail!(
+                "campaign stream {} belongs to a different campaign (header mismatch): \
+                 completed points precede any campaign header; \
+                 resume with the original config or start a fresh --jsonl file\n  \
+                 expected fingerprint: {expected}\n  \
+                 found fingerprint:    <none>",
+                path.display()
+            );
         }
     }
-    Ok((header, out))
+    // Pass 2: stream the remaining lines through a validating rewrite —
+    // one transient point at a time, valid lines copied byte-for-byte.
+    let tmp = path.with_extension("jsonl.tmp");
+    {
+        let mut out = BufWriter::new(
+            std::fs::File::create(&tmp)
+                .with_context(|| format!("creating campaign stream {}", tmp.display()))?,
+        );
+        writeln!(out, "{header_line}")?;
+        if found_header {
+            for line in lines {
+                let line = line?;
+                let t = line.trim();
+                if t.is_empty() {
+                    continue;
+                }
+                if CampaignPoint::from_jsonl_line(t).is_ok() {
+                    out.write_all(t.as_bytes())?;
+                    out.write_all(b"\n")?;
+                }
+            }
+        }
+        out.flush()?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("replacing campaign stream {}", path.display()))?;
+    Ok(())
+}
+
+/// One-lookahead cursor over a prepared campaign stream: holds exactly one
+/// parsed point at a time, however many millions of lines the file has.
+/// Stored streams are grid-ordered (fresh points append in evaluation
+/// order), so the runner consumes them as an ordered merge.
+struct StoredPoints {
+    lines: std::io::Lines<BufReader<std::fs::File>>,
+    next: Option<CampaignPoint>,
+}
+
+impl StoredPoints {
+    fn open(path: &Path) -> Result<StoredPoints> {
+        let file = std::fs::File::open(path)
+            .with_context(|| format!("reading campaign stream {}", path.display()))?;
+        let mut lines = BufReader::new(file).lines();
+        // Skip the fingerprint header `prepare_stream` just wrote.
+        let _ = lines.next().transpose()?;
+        let mut s = StoredPoints { lines, next: None };
+        s.advance()?;
+        Ok(s)
+    }
+
+    fn advance(&mut self) -> Result<()> {
+        self.next = None;
+        for line in self.lines.by_ref() {
+            let line = line?;
+            let t = line.trim();
+            if t.is_empty() {
+                continue;
+            }
+            if let Ok(p) = CampaignPoint::from_jsonl_line(t) {
+                self.next = Some(p);
+                return Ok(());
+            }
+        }
+        Ok(())
+    }
+
+    /// Consume and return the next stored point iff its label is `label`.
+    fn take_if(&mut self, label: &str) -> Result<Option<CampaignPoint>> {
+        if self.next.as_ref().is_some_and(|p| p.label == label) {
+            let p = self.next.take();
+            self.advance()?;
+            Ok(p)
+        } else {
+            Ok(None)
+        }
+    }
 }
 
 #[cfg(test)]

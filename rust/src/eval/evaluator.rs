@@ -78,6 +78,23 @@ impl CacheStats {
             ("capacity", Json::Num(self.capacity as f64)),
         ])
     }
+
+    /// The same object through the incremental writer — keys in the tree's
+    /// `BTreeMap` order, so the bytes match `to_json().to_string_compact()`.
+    pub fn write_compact(&self, w: &mut crate::util::json_stream::JsonWriter) {
+        w.begin_obj();
+        w.key("capacity");
+        w.num_u64(self.capacity as u64);
+        w.key("evictions");
+        w.num_u64(self.evictions);
+        w.key("hits");
+        w.num_u64(self.hits);
+        w.key("len");
+        w.num_u64(self.len as u64);
+        w.key("misses");
+        w.num_u64(self.misses);
+        w.end();
+    }
 }
 
 /// Composes a [`CostModel`] pipeline, memoizes per design point, and runs

@@ -31,6 +31,11 @@
 //!                 for machine-readable output, `--max-temp`/`--power-budget`
 //!                 to check physical feasibility).
 //! * `workloads` — print the Table I workload library.
+//! * `gen-jsonl` — synthesize a fully *completed* campaign JSONL stream for
+//!                 a config (fingerprint header + one deterministic line per
+//!                 grid point) without evaluating anything — the fixture
+//!                 behind `bench_json` and the CI constant-memory resume
+//!                 gate.
 //!
 //! Every metric printed here comes from the shared [`cube3d::eval`]
 //! evaluator — the CLI builds a [`Scenario`] and formats the bundle.
@@ -48,6 +53,7 @@ use cube3d::runtime::find_artifact_dir;
 use cube3d::sim::{matmul_i64, simulate_dataflow, Matrix};
 use cube3d::util::cli::{usage, Args, OptSpec};
 use cube3d::util::json::{obj, opt_num, Json};
+use cube3d::util::json_stream::JsonWriter;
 use cube3d::util::rng::Rng;
 use cube3d::util::table::Table;
 use cube3d::workloads::{table1, Gemm, Workload};
@@ -116,6 +122,11 @@ fn workload_opts() -> Vec<OptSpec> {
             help: "sweep/pareto/schedule: stream points to a resumable JSONL file",
         },
         OptSpec { name: "config", takes_value: true, help: "JSON experiment config file" },
+        OptSpec {
+            name: "mode",
+            takes_value: true,
+            help: "gen-jsonl: campaign mode the stream encodes, point|network (default point)",
+        },
         OptSpec { name: "out-dir", takes_value: true, help: "output directory (default reports)" },
         OptSpec { name: "jobs", takes_value: true, help: "serve: number of jobs (default 32)" },
         OptSpec { name: "seed", takes_value: true, help: "random seed (default 7)" },
@@ -208,6 +219,7 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "loadtest" => cmd_loadtest(&args),
         "schedule" => cmd_schedule(&args),
         "workloads" => cmd_workloads(),
+        "gen-jsonl" => cmd_gen_jsonl(&args),
         "dataflows" => cmd_dataflows(&args),
         "pareto" => cmd_pareto(&args),
         "memory" => cmd_memory(&args),
@@ -232,6 +244,7 @@ fn print_help() {
         ("loadtest", "open-loop load test of the shard pool → BENCH_serve.json"),
         ("schedule", "tier-partition a network and evaluate the layer pipeline"),
         ("workloads", "print the Table I workload library"),
+        ("gen-jsonl", "synthesize a fully completed campaign JSONL stream (bench/CI fixture)"),
         ("dataflows", "four-way OS/WS/IS/dOS comparison on a workload"),
         ("pareto", "Pareto front (cycles/area/power) of a design space"),
         ("memory", "off-chip bandwidth demand + feasibility per memory tech"),
@@ -326,34 +339,70 @@ fn run_campaign(campaign: &Campaign, args: &Args) -> anyhow::Result<CampaignOutc
         Some(path) => campaign.run_streaming(Path::new(path))?,
         None => campaign.run(),
     };
+    report_resume(&outcome);
+    Ok(outcome)
+}
+
+fn report_resume(outcome: &CampaignOutcome) {
     if outcome.resumed > 0 {
         eprintln!(
             "resumed {} completed points from the JSONL stream ({} evaluated fresh)",
             outcome.resumed,
-            outcome.points.len() - outcome.resumed
+            outcome.completed - outcome.resumed
         );
     }
-    Ok(outcome)
 }
 
 /// The `--json` document every campaign-backed subcommand emits: all
 /// completed points, the incremental fronts (by label), resume/skip
-/// counters and the evaluator's cache stats.
-fn campaign_json(outcome: &CampaignOutcome) -> Json {
-    let labels = |pts: &[cube3d::campaign::CampaignPoint]| {
-        Json::Arr(pts.iter().map(|p| Json::Str(p.label.clone())).collect())
+/// counters and the evaluator's cache stats. Streamed: each point goes to
+/// stdout through the incremental [`JsonWriter`] as its chunk completes and
+/// is never materialized, so memory stays O(front) however large the grid —
+/// with `--jsonl` this is the constant-memory resume path the CI
+/// `json-smoke` job gates on a million-line stream.
+fn stream_campaign_json(campaign: &Campaign, args: &Args) -> anyhow::Result<CampaignOutcome> {
+    use std::io::Write;
+    let stdout = std::io::stdout();
+    let mut out = std::io::BufWriter::new(stdout.lock());
+    out.write_all(b"{\"points\":[")?;
+    let mut wbuf = JsonWriter::with_capacity(512);
+    let mut first = true;
+    let mut on_point = |p: &cube3d::campaign::CampaignPoint| -> anyhow::Result<()> {
+        if !first {
+            out.write_all(b",")?;
+        }
+        first = false;
+        wbuf.clear();
+        p.write_jsonl(&mut wbuf);
+        out.write_all(wbuf.as_str().as_bytes())?;
+        Ok(())
     };
-    obj([
-        (
-            "points",
-            Json::Arr(outcome.points.iter().map(|p| p.to_json()).collect()),
-        ),
-        ("front", labels(&outcome.front)),
-        ("feasible_front", labels(&outcome.feasible_front)),
-        ("resumed", Json::Num(outcome.resumed as f64)),
-        ("skipped", Json::Num(outcome.skipped as f64)),
-        ("cache", outcome.cache.to_json()),
-    ])
+    let outcome = match args.get("jsonl") {
+        Some(path) => campaign.run_streaming_each(Path::new(path), &mut on_point)?,
+        None => campaign.run_each(&mut on_point)?,
+    };
+    let labels = |w: &mut JsonWriter, pts: &[cube3d::campaign::CampaignPoint]| {
+        w.clear();
+        w.begin_arr();
+        for p in pts {
+            w.str(&p.label);
+        }
+        w.end();
+    };
+    out.write_all(b"],\"front\":")?;
+    labels(&mut wbuf, &outcome.front);
+    out.write_all(wbuf.as_str().as_bytes())?;
+    out.write_all(b",\"feasible_front\":")?;
+    labels(&mut wbuf, &outcome.feasible_front);
+    out.write_all(wbuf.as_str().as_bytes())?;
+    write!(out, ",\"resumed\":{},\"skipped\":{},\"cache\":", outcome.resumed, outcome.skipped)?;
+    wbuf.clear();
+    outcome.cache.write_compact(&mut wbuf);
+    out.write_all(wbuf.as_str().as_bytes())?;
+    out.write_all(b"}\n")?;
+    out.flush()?;
+    report_resume(&outcome);
+    Ok(outcome)
 }
 
 fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
@@ -383,13 +432,16 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     let mut cfg = cfg;
     cfg.constraints = constraints_from_args(args, cfg.constraints)?;
     let campaign = Campaign::from_config(&cfg, CampaignMode::Point)?;
+    if args.flag("json") {
+        let outcome = stream_campaign_json(&campaign, args)?;
+        if outcome.completed == 0 {
+            anyhow::bail!("config expands to no feasible scenarios (every budget × tier point fails validation)");
+        }
+        return Ok(());
+    }
     let outcome = run_campaign(&campaign, args)?;
     if outcome.points.is_empty() {
         anyhow::bail!("config expands to no feasible scenarios (every budget × tier point fails validation)");
-    }
-    if args.flag("json") {
-        println!("{}", campaign_json(&outcome).to_string_pretty());
-        return Ok(());
     }
 
     let workload = cfg.workload.resolve()?;
@@ -588,8 +640,17 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         jobs.push(GemmJob::new(i, label, a, b));
     }
 
-    if shards > 1 {
-        return serve_on_pool(&dir, shards, args.get_u64_or("max-depth", 256)? as usize, jobs);
+    // `--json` routes through the shard pool even at 1 shard: the pool's
+    // metrics dump is the machine-readable surface (streamed through the
+    // incremental writer, no tree).
+    if shards > 1 || args.flag("json") {
+        return serve_on_pool(
+            &dir,
+            shards.max(1),
+            args.get_u64_or("max-depth", 256)? as usize,
+            jobs,
+            args.flag("json"),
+        );
     }
 
     println!("starting coordinator on artifacts at {}", dir.display());
@@ -627,14 +688,19 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 }
 
 /// The `--shards N` serve path: same trace, N-shard pool, per-shard stats.
+/// With `json`, the pool's full metrics dump streams to stdout through the
+/// incremental writer instead of the tables.
 fn serve_on_pool(
     dir: &Path,
     shards: usize,
     max_depth: usize,
     jobs: Vec<GemmJob>,
+    json: bool,
 ) -> anyhow::Result<()> {
     use cube3d::serve::{ServeConfig, ShardPool};
-    println!("starting {shards}-shard pool on artifacts at {}", dir.display());
+    if !json {
+        println!("starting {shards}-shard pool on artifacts at {}", dir.display());
+    }
     let pool = ShardPool::start(dir, ServeConfig { shards, max_depth, ..ServeConfig::default() })?;
     let receivers: Vec<_> = jobs
         .into_iter()
@@ -648,6 +714,12 @@ fn serve_on_pool(
         }
     }
     let m = pool.finish();
+    if json {
+        let mut w = JsonWriter::with_capacity(4096);
+        m.write_compact(&mut w);
+        println!("{}", w.as_str());
+        return Ok(());
+    }
     let lat = m.latency();
     println!(
         "jobs {ok}   throughput {:.1} jobs/s   p50 {:.0} µs   p99 {:.0} µs   lost {}",
@@ -833,13 +905,16 @@ fn cmd_schedule(args: &Args) -> anyhow::Result<()> {
         cfg.constraints = constraints_from_args(args, cfg.constraints)?;
         let constraints = cfg.constraints;
         let campaign = Campaign::from_config(&cfg, CampaignMode::Network)?;
+        if args.flag("json") {
+            let outcome = stream_campaign_json(&campaign, args)?;
+            if outcome.completed == 0 {
+                anyhow::bail!("config expands to no feasible schedule points");
+            }
+            return Ok(());
+        }
         let outcome = run_campaign(&campaign, args)?;
         if outcome.points.is_empty() {
             anyhow::bail!("config expands to no feasible schedule points");
-        }
-        if args.flag("json") {
-            println!("{}", campaign_json(&outcome).to_string_pretty());
-            return Ok(());
         }
         let pts: Vec<cube3d::dse::SchedulePoint> = outcome.schedule_points();
         let workload = cfg.workload.resolve()?;
@@ -1054,11 +1129,11 @@ fn cmd_pareto(args: &Args) -> anyhow::Result<()> {
     let constraints = cfg.constraints;
     let vtech = cfg.vertical_tech;
     let campaign = Campaign::from_config(&cfg, CampaignMode::Point)?;
-    let outcome = run_campaign(&campaign, args)?;
     if args.flag("json") {
-        println!("{}", campaign_json(&outcome).to_string_pretty());
+        stream_campaign_json(&campaign, args)?;
         return Ok(());
     }
+    let outcome = run_campaign(&campaign, args)?;
     let workload = cfg.workload.resolve()?;
     let front: Vec<cube3d::dse::DsePoint> = if constraints.is_empty() {
         outcome.front.iter().filter_map(|p| p.dse().cloned()).collect()
@@ -1149,6 +1224,30 @@ fn cmd_memory(args: &Args) -> anyhow::Result<()> {
          points at 3D-stacked memory ([7], TETRIS) as the companion technology.",
         bw_amplification(&g, s.mac_budget, d3.tiers, &tech)
     );
+    Ok(())
+}
+
+/// `gen-jsonl`: a fully completed, resumable campaign stream for a config,
+/// written through the incremental writer without evaluating a single
+/// scenario. A later `sweep/schedule --jsonl` run on the same config resumes
+/// every line — which is exactly what the `bench_json` parse benchmark and
+/// the CI million-line RSS gate exercise.
+fn cmd_gen_jsonl(args: &Args) -> anyhow::Result<()> {
+    let Some(cfg_path) = args.get("config") else {
+        anyhow::bail!("gen-jsonl needs --config <experiment config> (the campaign to synthesize)");
+    };
+    let Some(out) = args.get("jsonl") else {
+        anyhow::bail!("gen-jsonl needs --jsonl <output stream path>");
+    };
+    let mode = match args.get_or("mode", "point") {
+        "point" => CampaignMode::Point,
+        "network" => CampaignMode::Network,
+        other => anyhow::bail!("unknown campaign mode '{other}' (point|network)"),
+    };
+    let cfg = ExperimentConfig::from_file(Path::new(cfg_path))?;
+    let campaign = Campaign::from_config(&cfg, mode)?;
+    let n = campaign.write_synthetic_stream(Path::new(out))?;
+    println!("wrote {n} synthetic completed points to {out}");
     Ok(())
 }
 

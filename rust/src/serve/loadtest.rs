@@ -13,14 +13,20 @@
 //! One run per configured shard count, on the identical request sequence
 //! (same seed), makes the scaling claim directly comparable; an optional
 //! mid-run shard kill turns the same harness into a fault-injection
-//! campaign. The trajectory (periodic metric snapshots) and final
-//! summaries are written as the `BENCH_serve.json` artifact.
+//! campaign. Every request travels as a pre-rendered one-line wire string
+//! and is parsed on the submission path through the zero-allocation
+//! pull-parser ([`super::request::WireRequest::parse`]), so the recorded
+//! `parse_us` histogram is the real admission parse cost. The trajectory
+//! (periodic metric snapshots) and final summaries are written as the
+//! `BENCH_serve.json` artifact.
 
+use super::metrics::LatencyHistogram;
 use super::pool::{ServeConfig, ShardPool};
-use super::request::{AnalyzeRequest, ServeRequest};
+use super::request::{ServeRequest, WireRequest};
 use crate::coordinator::GemmJob;
 use crate::sim::Matrix;
 use crate::util::json::{obj, Json};
+use crate::util::json_stream::JsonWriter;
 use crate::util::rng::Rng;
 use crate::workloads::{table1, Gemm};
 use anyhow::{anyhow, Context, Result};
@@ -210,6 +216,10 @@ struct RequestPlan {
     mix: Vec<MixEntry>,
     /// Analyze-shape pool: the paper's Table I layers.
     analyze: Vec<(&'static str, Gemm)>,
+    /// One pre-rendered wire line per request. The generator parses these
+    /// on the submission path (through the pull-parser) so the trajectory
+    /// captures real per-request admission parse cost.
+    wires: Vec<String>,
 }
 
 #[derive(Clone, Copy)]
@@ -231,7 +241,7 @@ fn build_plan(cfg: &LoadtestConfig) -> RequestPlan {
         .collect();
     let total_w: f64 = mix.iter().map(|e| e.weight.max(0.0)).sum();
     let t1 = table1();
-    let kinds = (0..cfg.requests)
+    let kinds: Vec<PlannedKind> = (0..cfg.requests)
         .map(|i| {
             if rng.gen_f64() < cfg.analyze_frac {
                 PlannedKind::Analyze { table1: i as usize % t1.len() }
@@ -249,21 +259,53 @@ fn build_plan(cfg: &LoadtestConfig) -> RequestPlan {
             }
         })
         .collect();
-    let analyze = t1.iter().map(|e| (e.layer, e.gemm)).collect();
-    RequestPlan { kinds, inputs, mix, analyze }
+    let analyze: Vec<(&'static str, Gemm)> = t1.iter().map(|e| (e.layer, e.gemm)).collect();
+    // Render every request as the compact one-line wire format once, up
+    // front, so the hot loop only pays for *parsing* (what a network
+    // frontend would do), not for formatting.
+    let mut w = JsonWriter::with_capacity(256);
+    let wires = kinds
+        .iter()
+        .enumerate()
+        .map(|(i, kind)| {
+            let wire = match *kind {
+                PlannedKind::Gemm { mix: m } => WireRequest::gemm(
+                    i as u64,
+                    mix[m].label.clone(),
+                    mix[m].gemm,
+                    cfg.seed ^ i as u64,
+                ),
+                PlannedKind::Analyze { table1: t } => {
+                    let (layer, gemm) = analyze[t];
+                    WireRequest::analyze(i as u64, layer, gemm, cfg.mac_budget)
+                }
+            };
+            w.clear();
+            wire.write_compact(&mut w);
+            w.as_str().to_string()
+        })
+        .collect();
+    RequestPlan { kinds, inputs, mix, analyze, wires }
 }
 
-fn make_request(plan: &RequestPlan, i: u64, mac_budget: u64) -> ServeRequest {
-    match plan.kinds[i as usize] {
+/// Parse request `i`'s wire line (timed — this is the admission-path cost
+/// the trajectory records) and build the pool request from the parsed
+/// fields. Data-plane GEMMs reuse the plan's pre-built operand matrices so
+/// the open-loop generator stays cheap; identity fields (`id`, `label`)
+/// come from the wire.
+fn make_request(plan: &RequestPlan, i: u64) -> Result<(ServeRequest, Duration)> {
+    let line = &plan.wires[i as usize];
+    let t0 = Instant::now();
+    let wire = WireRequest::parse(line).map_err(|e| anyhow!("wire request {i}: {e}"))?;
+    let parse = t0.elapsed();
+    let req = match plan.kinds[i as usize] {
         PlannedKind::Gemm { mix } => {
             let (a, b) = &plan.inputs[mix];
-            ServeRequest::Gemm(GemmJob::new(i, plan.mix[mix].label.clone(), a.clone(), b.clone()))
+            ServeRequest::Gemm(GemmJob::new(wire.id, wire.label, a.clone(), b.clone()))
         }
-        PlannedKind::Analyze { table1: t } => {
-            let (layer, gemm) = plan.analyze[t];
-            ServeRequest::Analyze(AnalyzeRequest::new(i, layer, gemm, mac_budget))
-        }
-    }
+        PlannedKind::Analyze { .. } => wire.into_request(),
+    };
+    Ok((req, parse))
 }
 
 /// Summary of one run (one shard count) of the load test.
@@ -284,6 +326,7 @@ fn run_one(artifact_dir: &Path, cfg: &LoadtestConfig, shards: usize) -> Result<R
         ServeConfig { shards, max_depth: cfg.max_depth, ..ServeConfig::default() },
     )?;
     let plan = build_plan(cfg);
+    let parse_hist = LatencyHistogram::default();
     let start = Instant::now();
     let mut trajectory: Vec<Json> = Vec::new();
     let mut last_sample = start;
@@ -307,14 +350,16 @@ fn run_one(artifact_dir: &Path, cfg: &LoadtestConfig, shards: usize) -> Result<R
                 killed = true;
             }
         }
-        match pool.submit(make_request(&plan, i, cfg.mac_budget)) {
+        let (req, parse) = make_request(&plan, i)?;
+        parse_hist.record(parse);
+        match pool.submit(req) {
             Ok(_rx) => {} // open loop: receiver dropped, stats are reply-time
             Err(e) if e.is_rejection() => {} // counted by the shard
             Err(_) => pool_down += 1,
         }
         if last_sample.elapsed() >= cfg.sample_every {
             last_sample = Instant::now();
-            trajectory.push(sample(&pool, start, i + 1, pool_down));
+            trajectory.push(sample(&pool, start, i + 1, pool_down, &parse_hist));
         }
     }
 
@@ -332,7 +377,7 @@ fn run_one(artifact_dir: &Path, cfg: &LoadtestConfig, shards: usize) -> Result<R
                 m.lost()
             ));
         }
-        trajectory.push(sample(&pool, start, cfg.requests, pool_down));
+        trajectory.push(sample(&pool, start, cfg.requests, pool_down, &parse_hist));
         std::thread::sleep(cfg.sample_every.min(Duration::from_millis(100)));
     }
     let wall = start.elapsed();
@@ -352,6 +397,7 @@ fn run_one(artifact_dir: &Path, cfg: &LoadtestConfig, shards: usize) -> Result<R
         ("pool_down_errors", Json::Num(pool_down as f64)),
         ("wall_s", Json::Num(wall.as_secs_f64())),
         ("throughput_per_s", Json::Num(throughput)),
+        ("parse_us", parse_hist.snapshot().to_json()),
         ("summary", m.to_json()),
         ("trajectory", Json::Arr(trajectory)),
     ]);
@@ -366,8 +412,15 @@ fn run_one(artifact_dir: &Path, cfg: &LoadtestConfig, shards: usize) -> Result<R
     })
 }
 
-fn sample(pool: &ShardPool, start: Instant, offered: u64, pool_down: u64) -> Json {
+fn sample(
+    pool: &ShardPool,
+    start: Instant,
+    offered: u64,
+    pool_down: u64,
+    parse_hist: &LatencyHistogram,
+) -> Json {
     let m = pool.metrics();
+    let parse = parse_hist.snapshot();
     obj([
         ("t_s", Json::Num(start.elapsed().as_secs_f64())),
         ("offered", Json::Num(offered as f64)),
@@ -376,6 +429,8 @@ fn sample(pool: &ShardPool, start: Instant, offered: u64, pool_down: u64) -> Jso
         ("completed", Json::Num(m.completed() as f64)),
         ("failed", Json::Num(m.failed() as f64)),
         ("rejected", Json::Num(m.rejected() as f64)),
+        ("parse_p50_us", Json::Num(parse.quantile_us(0.50))),
+        ("parse_p99_us", Json::Num(parse.quantile_us(0.99))),
         ("depth", Json::Arr(m.shards.iter().map(|s| Json::Num(s.depth as f64)).collect())),
         ("alive", Json::Arr(m.shards.iter().map(|s| Json::Bool(s.alive)).collect())),
     ])
@@ -471,10 +526,37 @@ mod tests {
         let cfg = LoadtestConfig { requests: 200, ..Default::default() };
         let (p1, p2) = (build_plan(&cfg), build_plan(&cfg));
         for i in 0..200u64 {
-            let a = make_request(&p1, i, cfg.mac_budget);
-            let b = make_request(&p2, i, cfg.mac_budget);
+            assert_eq!(p1.wires[i as usize], p2.wires[i as usize], "wire {i} differs");
+            let (a, _) = make_request(&p1, i).unwrap();
+            let (b, _) = make_request(&p2, i).unwrap();
             assert_eq!(a.shape(), b.shape(), "request {i} differs between plans");
             assert_eq!(a.id(), b.id());
+        }
+    }
+
+    #[test]
+    fn plan_wires_parse_back_to_the_planned_requests() {
+        let cfg = LoadtestConfig { requests: 300, ..Default::default() };
+        let plan = build_plan(&cfg);
+        for i in 0..300u64 {
+            let wire = WireRequest::parse(&plan.wires[i as usize])
+                .unwrap_or_else(|e| panic!("wire {i} unparseable: {e}"));
+            assert_eq!(wire.id, i);
+            match plan.kinds[i as usize] {
+                PlannedKind::Gemm { mix } => {
+                    assert_eq!(wire.kind, super::super::request::WireKind::Gemm);
+                    assert_eq!(wire.gemm, plan.mix[mix].gemm);
+                    assert_eq!(wire.label, plan.mix[mix].label);
+                }
+                PlannedKind::Analyze { table1: t } => {
+                    assert_eq!(wire.kind, super::super::request::WireKind::Analyze);
+                    assert_eq!(wire.gemm, plan.analyze[t].1);
+                    assert_eq!(wire.label, plan.analyze[t].0);
+                    assert_eq!(wire.mac_budget, cfg.mac_budget);
+                }
+            }
+            let (req, _) = make_request(&plan, i).unwrap();
+            assert_eq!(req.id(), i);
         }
     }
 

@@ -9,6 +9,7 @@
 
 use crate::eval::CacheStats;
 use crate::util::json::{obj, Json};
+use crate::util::json_stream::JsonWriter;
 use crate::util::stats::Boxplot;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::time::Duration;
@@ -178,6 +179,27 @@ impl HistSnapshot {
             ("max", Json::Num(self.max_us())),
         ])
     }
+
+    /// The same object through the incremental writer — keys in the tree's
+    /// sorted order, so the bytes match `to_json().to_string_compact()`.
+    pub fn write_compact(&self, w: &mut JsonWriter) {
+        w.begin_obj();
+        w.key("count");
+        w.num_u64(self.count);
+        w.key("max");
+        w.num_f64(self.max_us());
+        w.key("mean");
+        w.num_f64(self.mean_us());
+        w.key("min");
+        w.num_f64(self.min_us());
+        w.key("p50");
+        w.num_f64(self.quantile_us(0.50));
+        w.key("p95");
+        w.num_f64(self.quantile_us(0.95));
+        w.key("p99");
+        w.num_f64(self.quantile_us(0.99));
+        w.end();
+    }
 }
 
 /// Per-shard live counters/gauges, shared (`Arc`) between the shard worker,
@@ -296,6 +318,45 @@ impl ShardMetrics {
             ("exec_us", self.exec.to_json()),
         ])
     }
+
+    /// Streaming form of [`ShardMetrics::to_json`] (sorted keys,
+    /// byte-identical compact output).
+    pub fn write_compact(&self, w: &mut JsonWriter) {
+        w.begin_obj();
+        w.key("alive");
+        w.bool(self.alive);
+        w.key("analyze");
+        w.num_u64(self.analyze);
+        w.key("batch_occupancy");
+        w.num_f64(self.batch_occupancy());
+        w.key("batches");
+        w.num_u64(self.batches);
+        w.key("completed");
+        w.num_u64(self.completed);
+        w.key("depth");
+        w.num_u64(self.depth as u64);
+        w.key("exec_us");
+        self.exec.write_compact(w);
+        w.key("executions");
+        w.num_u64(self.executions);
+        w.key("failed");
+        w.num_u64(self.failed);
+        w.key("latency_us");
+        self.latency.write_compact(w);
+        w.key("panicked");
+        w.bool(self.panicked);
+        w.key("peak_depth");
+        w.num_u64(self.peak_depth);
+        w.key("rejected");
+        w.num_u64(self.rejected);
+        w.key("shard");
+        w.num_u64(self.shard as u64);
+        w.key("submitted");
+        w.num_u64(self.submitted);
+        w.key("tiled_folds");
+        w.num_u64(self.tiled_folds);
+        w.end();
+    }
 }
 
 /// Aggregate view of the whole pool (per-shard snapshots + evaluator cache
@@ -398,6 +459,41 @@ impl PoolMetrics {
             ("cache", self.cache.to_json()),
         ])
     }
+
+    /// Streaming form of [`PoolMetrics::to_json`]: the whole metrics dump
+    /// goes through the incremental writer without building a tree — the
+    /// `--json` metrics path of a live pool. Byte-identical to
+    /// `to_json().to_string_compact()`.
+    pub fn write_compact(&self, w: &mut JsonWriter) {
+        w.begin_obj();
+        w.key("accepted");
+        w.num_u64(self.accepted());
+        w.key("cache");
+        self.cache.write_compact(w);
+        w.key("completed");
+        w.num_u64(self.completed());
+        w.key("exec_us");
+        self.exec_latency().write_compact(w);
+        w.key("failed");
+        w.num_u64(self.failed());
+        w.key("latency_us");
+        self.latency().write_compact(w);
+        w.key("lost");
+        w.num_u64(self.lost());
+        w.key("rejected");
+        w.num_u64(self.rejected());
+        w.key("shards");
+        w.begin_arr();
+        for s in &self.shards {
+            s.write_compact(w);
+        }
+        w.end();
+        w.key("throughput_per_s");
+        w.num_f64(self.throughput());
+        w.key("wall_s");
+        w.num_f64(self.wall.as_secs_f64());
+        w.end();
+    }
 }
 
 #[cfg(test)]
@@ -471,6 +567,36 @@ mod tests {
             assert!(v >= last, "quantile not monotone at q={q}: {v} < {last}");
             last = v;
         }
+    }
+
+    #[test]
+    fn write_compact_is_bit_identical_to_tree() {
+        let st = ShardStats::default();
+        st.submitted.fetch_add(9, Ordering::Relaxed);
+        st.rejected.fetch_add(2, Ordering::Relaxed);
+        for i in 1..=50u64 {
+            st.record_ok(Duration::from_micros(i * 7), Duration::from_micros(i * 3));
+        }
+        st.batches.fetch_add(5, Ordering::Relaxed);
+        st.batched_jobs.fetch_add(23, Ordering::Relaxed);
+        let shard = st.snapshot(2, true);
+
+        let mut w = JsonWriter::new();
+        shard.latency.write_compact(&mut w);
+        assert_eq!(w.as_str(), shard.latency.to_json().to_string_compact());
+
+        w.clear();
+        shard.write_compact(&mut w);
+        assert_eq!(w.as_str(), shard.to_json().to_string_compact());
+
+        let pool = PoolMetrics {
+            wall: Duration::from_millis(1234),
+            shards: vec![shard.clone(), st.snapshot(3, false)],
+            cache: CacheStats { hits: 10, misses: 4, evictions: 0, len: 4, capacity: 1024 },
+        };
+        w.clear();
+        pool.write_compact(&mut w);
+        assert_eq!(w.as_str(), pool.to_json().to_string_compact());
     }
 
     #[test]

@@ -44,6 +44,7 @@ pub use loadtest::{LoadtestConfig, MixEntry};
 pub use metrics::{HistSnapshot, LatencyHistogram, PoolMetrics, ShardMetrics, ShardStats};
 pub use pool::{ServeConfig, ShardPool};
 pub use request::{
-    AnalyzeRequest, AnalyzeResult, ServeError, ServeOutput, ServeReply, ServeRequest,
+    AnalyzeRequest, AnalyzeResult, ServeError, ServeOutput, ServeReply, ServeRequest, WireKind,
+    WireRequest,
 };
 pub use shard::{shard_for_shape, PauseGuard};

@@ -18,6 +18,10 @@
 use crate::analytical::OptimalDesign;
 use crate::coordinator::{GemmJob, JobResult};
 use crate::dataflow::Dataflow;
+use crate::sim::Matrix;
+use crate::util::json::Json;
+use crate::util::json_stream::{JsonWriter, PullParser};
+use crate::util::rng::Rng;
 use crate::workloads::Gemm;
 use std::time::Duration;
 
@@ -145,6 +149,326 @@ impl ServeOutput {
     }
 }
 
+/// The wire form of a serving request: one compact JSON object per line,
+/// keys in sorted order (what [`WireRequest::write_compact`] emits).
+///
+/// ```text
+/// {"id":7,"k":256,"kind":"gemm","label":"exact64","m":64,"n":96,"seed":3}
+/// {"dataflow":"dos","id":8,"k":12100,"kind":"analyze","label":"RN0","m":64,
+///  "mac_budget":262144,"max_tiers":12,"n":147}
+/// ```
+///
+/// GEMM requests carry a `seed` instead of operand bytes: both sides derive
+/// the matrices from the same deterministic [`Rng`] stream (the load
+/// generator's value formula), so a request line stays O(1) bytes however
+/// large the operands. [`parse`](WireRequest::parse) reads the line
+/// straight off the [`PullParser`] event stream — no tree, no allocation
+/// beyond the label — and is what the admission path times; malformed input
+/// comes back as [`ServeError::Invalid`] naming the offending key.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireRequest {
+    pub kind: WireKind,
+    pub id: u64,
+    pub label: String,
+    pub gemm: Gemm,
+    /// Analyze: MAC budget of the design query (default 2^18).
+    pub mac_budget: u64,
+    /// Analyze: tier-count ceiling of the design query (default 12).
+    pub max_tiers: u64,
+    /// Analyze: dataflow of the design query (default dOS).
+    pub dataflow: Dataflow,
+    /// Gemm: operand-matrix generator seed.
+    pub seed: u64,
+}
+
+/// Which class of [`ServeRequest`] a wire line encodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireKind {
+    Gemm,
+    Analyze,
+}
+
+/// The [`ServeError::Invalid`] for a wire-parse failure, carrying whatever
+/// identity the line yielded before it went bad.
+fn wire_invalid(id: &Option<u64>, label: &Option<String>, msg: String) -> ServeError {
+    ServeError::Invalid {
+        id: id.unwrap_or(0),
+        label: label.clone().unwrap_or_else(|| "<wire>".to_string()),
+        msg,
+    }
+}
+
+fn bad_u64_field(id: &Option<u64>, label: &Option<String>, key: &str) -> ServeError {
+    wire_invalid(id, label, format!("request field '{key}' must be a non-negative integer"))
+}
+
+fn bad_str_field(id: &Option<u64>, label: &Option<String>, key: &str) -> ServeError {
+    wire_invalid(id, label, format!("request field '{key}' must be a string"))
+}
+
+impl WireRequest {
+    /// A data-plane GEMM line (operands derived from `seed` on admission).
+    pub fn gemm(id: u64, label: impl Into<String>, gemm: Gemm, seed: u64) -> WireRequest {
+        WireRequest {
+            kind: WireKind::Gemm,
+            id,
+            label: label.into(),
+            gemm,
+            mac_budget: 1 << 18,
+            max_tiers: 12,
+            dataflow: Dataflow::DistributedOutputStationary,
+            seed,
+        }
+    }
+
+    /// A model-plane analyze line.
+    pub fn analyze(id: u64, label: impl Into<String>, gemm: Gemm, mac_budget: u64) -> WireRequest {
+        WireRequest {
+            kind: WireKind::Analyze,
+            id,
+            label: label.into(),
+            gemm,
+            mac_budget,
+            max_tiers: 12,
+            dataflow: Dataflow::DistributedOutputStationary,
+            seed: 0,
+        }
+    }
+
+    /// Parse one wire line through the pull-parser — the admission hot
+    /// path. No `Json` tree is built; unknown keys are skipped without
+    /// materializing their values; every rejection names the offending key.
+    pub fn parse(line: &str) -> Result<WireRequest, ServeError> {
+        let mut kind: Option<WireKind> = None;
+        let mut id: Option<u64> = None;
+        let mut label: Option<String> = None;
+        let (mut m, mut n, mut k) = (None, None, None);
+        let mut mac_budget: Option<u64> = None;
+        let mut max_tiers: Option<u64> = None;
+        let mut dataflow: Option<Dataflow> = None;
+        let mut seed: Option<u64> = None;
+
+        let mut p = PullParser::new(line);
+        p.expect_obj_begin()
+            .map_err(|e| wire_invalid(&id, &label, format!("request line is not an object: {e}")))?;
+        loop {
+            let field = p
+                .next_field()
+                .map_err(|e| wire_invalid(&id, &label, format!("malformed request line: {e}")))?;
+            let Some(key) = field else { break };
+            // One arm per known key; the error text names the key so a bad
+            // producer can be debugged from the reply alone.
+            if key.is("kind") {
+                let s = p.read_str().map_err(|_| bad_str_field(&id, &label, "kind"))?;
+                kind = Some(if s.is("gemm") {
+                    WireKind::Gemm
+                } else if s.is("analyze") {
+                    WireKind::Analyze
+                } else {
+                    let s = s.decode().map(|c| c.into_owned()).unwrap_or_default();
+                    return Err(wire_invalid(
+                        &id,
+                        &label,
+                        format!("unknown request kind '{s}' (gemm|analyze)"),
+                    ));
+                });
+            } else if key.is("id") {
+                let v = p.read_u64().map_err(|_| bad_u64_field(&id, &label, "id"))?;
+                id = Some(v);
+            } else if key.is("label") {
+                let s = p.read_str().map_err(|_| bad_str_field(&id, &label, "label"))?;
+                let s = s
+                    .decode()
+                    .map_err(|e| wire_invalid(&id, &label, format!("request field 'label': {e}")))?;
+                label = Some(s.into_owned());
+            } else if key.is("m") {
+                m = Some(p.read_u64().map_err(|_| bad_u64_field(&id, &label, "m"))?);
+            } else if key.is("n") {
+                n = Some(p.read_u64().map_err(|_| bad_u64_field(&id, &label, "n"))?);
+            } else if key.is("k") {
+                k = Some(p.read_u64().map_err(|_| bad_u64_field(&id, &label, "k"))?);
+            } else if key.is("mac_budget") {
+                let v = p.read_u64().map_err(|_| bad_u64_field(&id, &label, "mac_budget"))?;
+                mac_budget = Some(v);
+            } else if key.is("max_tiers") {
+                let v = p.read_u64().map_err(|_| bad_u64_field(&id, &label, "max_tiers"))?;
+                max_tiers = Some(v);
+            } else if key.is("dataflow") {
+                let s = p.read_str().map_err(|_| bad_str_field(&id, &label, "dataflow"))?;
+                let s = s.decode().map_err(|e| {
+                    wire_invalid(&id, &label, format!("request field 'dataflow': {e}"))
+                })?;
+                let df = crate::config::parse_dataflow(&s).map_err(|e| {
+                    wire_invalid(&id, &label, format!("request field 'dataflow': {e}"))
+                })?;
+                dataflow = Some(df);
+            } else if key.is("seed") {
+                seed = Some(p.read_u64().map_err(|_| bad_u64_field(&id, &label, "seed"))?);
+            } else {
+                p.skip_value().map_err(|e| {
+                    wire_invalid(&id, &label, format!("malformed request line: {e}"))
+                })?;
+            }
+        }
+        p.expect_end()
+            .map_err(|e| wire_invalid(&id, &label, format!("malformed request line: {e}")))?;
+
+        let require = |v: Option<u64>, key: &str, id: &Option<u64>, label: &Option<String>| {
+            v.ok_or_else(|| wire_invalid(id, label, format!("missing request field '{key}'")))
+        };
+        let kind =
+            kind.ok_or_else(|| wire_invalid(&id, &label, "missing request field 'kind'".into()))?;
+        let label_v = label
+            .clone()
+            .ok_or_else(|| wire_invalid(&id, &label, "missing request field 'label'".into()))?;
+        let id_v = require(id, "id", &id, &label)?;
+        let gemm = Gemm::new(
+            require(m, "m", &id, &label)?,
+            require(n, "n", &id, &label)?,
+            require(k, "k", &id, &label)?,
+        );
+        Ok(WireRequest {
+            kind,
+            id: id_v,
+            label: label_v,
+            gemm,
+            mac_budget: mac_budget.unwrap_or(1 << 18),
+            max_tiers: max_tiers.unwrap_or(12),
+            dataflow: dataflow.unwrap_or(Dataflow::DistributedOutputStationary),
+            seed: seed.unwrap_or(0),
+        })
+    }
+
+    /// Tree-parser reference path: same acceptance, same defaults, built
+    /// from a materialized [`Json`] document. The differential tests hold
+    /// this equal to [`parse`](WireRequest::parse); production uses only the
+    /// streaming path.
+    pub fn from_json(doc: &Json) -> Result<WireRequest, ServeError> {
+        if !matches!(doc, Json::Obj(_)) {
+            return Err(wire_invalid(&None, &None, "request line is not a JSON object".into()));
+        }
+        let id = doc.get("id").and_then(Json::as_u64);
+        let label = doc.get("label").and_then(Json::as_str).map(str::to_string);
+        let get_u64 = |key: &str| -> Result<Option<u64>, ServeError> {
+            match doc.get(key) {
+                None => Ok(None),
+                Some(v) => v.as_u64().map(Some).ok_or_else(|| bad_u64_field(&id, &label, key)),
+            }
+        };
+        let kind = match doc.get("kind") {
+            Some(Json::Str(s)) if s == "gemm" => WireKind::Gemm,
+            Some(Json::Str(s)) if s == "analyze" => WireKind::Analyze,
+            Some(Json::Str(s)) => {
+                let msg = format!("unknown request kind '{s}' (gemm|analyze)");
+                return Err(wire_invalid(&id, &label, msg));
+            }
+            Some(_) => return Err(bad_str_field(&id, &label, "kind")),
+            None => return Err(wire_invalid(&id, &label, "missing request field 'kind'".into())),
+        };
+        let require = |v: Option<u64>, key: &str| {
+            v.ok_or_else(|| wire_invalid(&id, &label, format!("missing request field '{key}'")))
+        };
+        let gemm = Gemm::new(
+            require(get_u64("m")?, "m")?,
+            require(get_u64("n")?, "n")?,
+            require(get_u64("k")?, "k")?,
+        );
+        let dataflow = match doc.get("dataflow") {
+            None => Dataflow::DistributedOutputStationary,
+            Some(v) => {
+                let s = v.as_str().ok_or_else(|| bad_str_field(&id, &label, "dataflow"))?;
+                crate::config::parse_dataflow(s).map_err(|e| {
+                    wire_invalid(&id, &label, format!("request field 'dataflow': {e}"))
+                })?
+            }
+        };
+        Ok(WireRequest {
+            kind,
+            id: require(id, "id")?,
+            label: label.clone().ok_or_else(|| {
+                wire_invalid(&id, &label, "missing request field 'label'".into())
+            })?,
+            gemm,
+            mac_budget: get_u64("mac_budget")?.unwrap_or(1 << 18),
+            max_tiers: get_u64("max_tiers")?.unwrap_or(12),
+            dataflow,
+            seed: get_u64("seed")?.unwrap_or(0),
+        })
+    }
+
+    /// Emit the wire line through the incremental writer — keys sorted, so
+    /// the bytes match `Json::to_string_compact` of the same document.
+    /// Kind-irrelevant fields are omitted (a GEMM line carries no
+    /// `mac_budget`, an analyze line no `seed`).
+    pub fn write_compact(&self, w: &mut JsonWriter) {
+        w.begin_obj();
+        match self.kind {
+            WireKind::Gemm => {
+                w.key("id");
+                w.num_u64(self.id);
+                w.key("k");
+                w.num_u64(self.gemm.k);
+                w.key("kind");
+                w.str("gemm");
+                w.key("label");
+                w.str(&self.label);
+                w.key("m");
+                w.num_u64(self.gemm.m);
+                w.key("n");
+                w.num_u64(self.gemm.n);
+                w.key("seed");
+                w.num_u64(self.seed);
+            }
+            WireKind::Analyze => {
+                w.key("dataflow");
+                w.str(self.dataflow.short_name());
+                w.key("id");
+                w.num_u64(self.id);
+                w.key("k");
+                w.num_u64(self.gemm.k);
+                w.key("kind");
+                w.str("analyze");
+                w.key("label");
+                w.str(&self.label);
+                w.key("m");
+                w.num_u64(self.gemm.m);
+                w.key("mac_budget");
+                w.num_u64(self.mac_budget);
+                w.key("max_tiers");
+                w.num_u64(self.max_tiers);
+                w.key("n");
+                w.num_u64(self.gemm.n);
+            }
+        }
+        w.end();
+    }
+
+    /// Materialize the executable [`ServeRequest`]. For GEMM lines this is
+    /// where the operand matrices come into existence — derived from
+    /// `seed`, off the timed admission-parse path.
+    pub fn into_request(self) -> ServeRequest {
+        match self.kind {
+            WireKind::Analyze => ServeRequest::Analyze(AnalyzeRequest {
+                id: self.id,
+                label: self.label,
+                gemm: self.gemm,
+                mac_budget: self.mac_budget,
+                max_tiers: self.max_tiers,
+                dataflow: self.dataflow,
+            }),
+            WireKind::Gemm => {
+                let (m, k, n) =
+                    (self.gemm.m as usize, self.gemm.k as usize, self.gemm.n as usize);
+                let mut rng = Rng::new(self.seed);
+                let mut f = |_: usize, _: usize| (rng.gen_range(200) as f32 - 100.0) / 50.0;
+                let a = Matrix::from_fn(m, k, &mut f);
+                let b = Matrix::from_fn(k, n, &mut f);
+                ServeRequest::Gemm(GemmJob::new(self.id, self.label, a, b))
+            }
+        }
+    }
+}
+
 /// Typed serving errors. `Rejected` is returned *synchronously* from
 /// [`crate::serve::ShardPool::submit`] (admission control never enqueues);
 /// the rest arrive as replies on the submission's channel.
@@ -203,6 +527,97 @@ mod tests {
         let r = ServeRequest::Analyze(a);
         assert_eq!(r.shape(), Gemm::new(64, 147, 12100));
         assert_eq!(r.id(), 9);
+    }
+
+    #[test]
+    fn wire_round_trip_both_kinds() {
+        let mut w = JsonWriter::new();
+        for wire in [
+            WireRequest::gemm(7, "exact64", Gemm::new(64, 96, 256), 3),
+            WireRequest::analyze(9, "RN0", Gemm::new(64, 147, 12100), 1 << 18),
+        ] {
+            w.clear();
+            wire.write_compact(&mut w);
+            // Sorted keys ⇒ the streamed bytes equal the tree's compact form.
+            let tree = Json::parse(w.as_str()).unwrap();
+            assert_eq!(w.as_str(), tree.to_string_compact());
+            // Pull path and tree path agree with each other and the source.
+            let parsed = WireRequest::parse(w.as_str()).unwrap();
+            assert_eq!(parsed, wire);
+            assert_eq!(WireRequest::from_json(&tree).unwrap(), parsed);
+        }
+    }
+
+    #[test]
+    fn wire_parse_is_the_admission_request() {
+        let mut w = JsonWriter::new();
+        WireRequest::gemm(7, "exact64", Gemm::new(4, 6, 5), 3).write_compact(&mut w);
+        let r = WireRequest::parse(w.as_str()).unwrap().into_request();
+        assert_eq!(r.shape(), Gemm::new(4, 6, 5));
+        assert_eq!(r.id(), 7);
+        // Operand matrices are derived from the seed, deterministically.
+        let ServeRequest::Gemm(j1) = WireRequest::parse(w.as_str()).unwrap().into_request() else {
+            panic!("gemm line must admit a gemm request")
+        };
+        let ServeRequest::Gemm(j2) = r else { panic!() };
+        assert_eq!(j1.a.data(), j2.a.data());
+
+        w.clear();
+        WireRequest::analyze(9, "RN0", Gemm::new(64, 147, 12100), 4096).write_compact(&mut w);
+        let ServeRequest::Analyze(a) = WireRequest::parse(w.as_str()).unwrap().into_request()
+        else {
+            panic!("analyze line must admit an analyze request")
+        };
+        assert_eq!(a.mac_budget, 4096);
+        assert_eq!(a.max_tiers, 12);
+    }
+
+    #[test]
+    fn wire_errors_name_the_offending_key() {
+        for (line, needle) in [
+            (r#"{"id":1,"kind":"gemm","label":"x","m":-3,"n":2,"k":2}"#, "'m'"),
+            (r#"{"id":1,"kind":"gemm","label":"x","n":2,"k":2}"#, "missing request field 'm'"),
+            (
+                r#"{"id":1,"kind":"warp","label":"x","m":2,"n":2,"k":2}"#,
+                "unknown request kind 'warp'",
+            ),
+            (r#"{"id":1,"label":"x","m":2,"n":2,"k":2}"#, "missing request field 'kind'"),
+            (r#"{"id":"seven","kind":"gemm","label":"x","m":2,"n":2,"k":2}"#, "'id'"),
+            (
+                r#"{"id":1,"kind":"analyze","label":"x","m":2,"n":2,"k":2,"dataflow":"zz"}"#,
+                "'dataflow'",
+            ),
+            (r#"{"id":1,"kind":"gemm","label":"x","m":2,"n":2,"k":2"#, "malformed"),
+        ] {
+            let e = WireRequest::parse(line).unwrap_err();
+            assert!(
+                matches!(e, ServeError::Invalid { .. }),
+                "non-Invalid error for {line}: {e}"
+            );
+            assert!(e.to_string().contains(needle), "{line} -> {e}");
+        }
+    }
+
+    #[test]
+    fn wire_pull_and_tree_paths_agree_on_rejection() {
+        // Lines the pull path rejects must be rejected by the tree path too
+        // (and vice versa, on anything that parses as JSON at all).
+        for line in [
+            r#"{"id":1,"kind":"gemm","label":"x","m":2,"n":2,"k":2,"seed":9}"#,
+            r#"{"id":1,"kind":"analyze","label":"x","m":2,"n":2,"k":2}"#,
+            r#"{"id":1,"kind":"gemm","label":"x","m":2.5,"n":2,"k":2}"#,
+            r#"{"kind":"gemm","label":"x","m":2,"n":2,"k":2}"#,
+            r#"{"id":1,"kind":"gemm","m":2,"n":2,"k":2}"#,
+            r#"{"id":1,"kind":"gemm","label":"x","m":2,"n":2,"k":2,"unknown":[1,{"q":2}]}"#,
+        ] {
+            let doc = Json::parse(line).unwrap();
+            let (a, b) = (WireRequest::parse(line), WireRequest::from_json(&doc));
+            match (a, b) {
+                (Ok(x), Ok(y)) => assert_eq!(x, y, "{line}"),
+                (Err(_), Err(_)) => {}
+                (a, b) => panic!("paths disagree on {line}: pull={a:?} tree={b:?}"),
+            }
+        }
     }
 
     #[test]

@@ -25,7 +25,7 @@ impl Json {
     /// Parse a JSON document. Trailing whitespace is allowed; trailing
     /// non-whitespace content is an error.
     pub fn parse(s: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        let mut p = Parser { b: s.as_bytes(), i: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -101,13 +101,7 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(true) => out.push_str("true"),
             Json::Bool(false) => out.push_str("false"),
-            Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9e15 {
-                    out.push_str(&format!("{}", *n as i64));
-                } else {
-                    out.push_str(&format!("{n}"));
-                }
-            }
+            Json::Num(n) => write_f64(out, *n),
             Json::Str(s) => write_escaped(out, s),
             Json::Arr(a) => {
                 out.push('[');
@@ -169,7 +163,25 @@ fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
     }
 }
 
-fn write_escaped(out: &mut String, s: &str) {
+/// Shortest-form f64 printing shared by the tree writer and the streaming
+/// [`crate::util::json_stream::JsonWriter`]: integral magnitudes below 2^53
+/// print without a fraction (`3`, not `3.0`), everything else uses Rust's
+/// shortest-roundtrip `Display`. Both writers MUST go through this function —
+/// campaign JSONL bit-identity (CI `diff clean.jsonl resume.jsonl`) depends
+/// on it.
+pub fn write_f64(out: &mut String, n: f64) {
+    use std::fmt::Write as _;
+    if n.fract() == 0.0 && n.abs() < 9e15 {
+        let _ = write!(out, "{}", n as i64);
+    } else {
+        let _ = write!(out, "{n}");
+    }
+}
+
+/// Write `s` as a JSON string literal (quoted, minimally escaped). Shared by
+/// the tree writer and the streaming writer for the same bit-identity reason
+/// as [`write_f64`].
+pub fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
     for c in s.chars() {
         match c {
@@ -185,22 +197,48 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
-/// Parse error with byte offset.
+/// Nesting ceiling for the recursive tree parser. Beyond this the parser
+/// returns [`JsonError::TooDeep`] instead of risking a stack overflow on
+/// adversarial input (`[[[[...`). 128 levels is far beyond any document the
+/// framework emits (configs nest ~4 deep, campaign points 2).
+pub const MAX_TREE_DEPTH: usize = 128;
+
+/// Typed parse error with byte offset.
 #[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
-#[error("json parse error at byte {at}: {msg}")]
-pub struct JsonError {
-    pub at: usize,
-    pub msg: String,
+pub enum JsonError {
+    #[error("json parse error at byte {at}: {msg}")]
+    Syntax { at: usize, msg: String },
+    #[error("json nesting exceeds {limit} levels at byte {at}")]
+    TooDeep { at: usize, limit: usize },
+}
+
+impl JsonError {
+    /// Byte offset of the error in the input.
+    pub fn at(&self) -> usize {
+        match self {
+            JsonError::Syntax { at, .. } | JsonError::TooDeep { at, .. } => *at,
+        }
+    }
 }
 
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
     fn err(&self, msg: &str) -> JsonError {
-        JsonError { at: self.i, msg: msg.to_string() }
+        JsonError::Syntax { at: self.i, msg: msg.to_string() }
+    }
+
+    fn descend(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_TREE_DEPTH {
+            Err(JsonError::TooDeep { at: self.i, limit: MAX_TREE_DEPTH })
+        } else {
+            Ok(())
+        }
     }
 
     fn peek(&self) -> Option<u8> {
@@ -246,10 +284,12 @@ impl<'a> Parser<'a> {
 
     fn array(&mut self) -> Result<Json, JsonError> {
         self.expect(b'[')?;
+        self.descend()?;
         let mut out = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(out));
         }
         loop {
@@ -260,6 +300,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b']') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(out));
                 }
                 _ => return Err(self.err("expected ',' or ']'")),
@@ -269,10 +310,12 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> Result<Json, JsonError> {
         self.expect(b'{')?;
+        self.descend()?;
         let mut out = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(out));
         }
         loop {
@@ -288,6 +331,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b'}') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(out));
                 }
                 _ => return Err(self.err("expected ',' or '}'")),
@@ -448,5 +492,32 @@ mod tests {
     fn integers_emit_without_fraction() {
         assert_eq!(Json::Num(3.0).to_string_compact(), "3");
         assert_eq!(Json::Num(3.25).to_string_compact(), "3.25");
+    }
+
+    #[test]
+    fn depth_guard_rejects_pathological_nesting() {
+        // One level inside the ceiling parses; one past it is a typed error,
+        // not a stack overflow.
+        let ok = format!(
+            "{}1{}",
+            "[".repeat(MAX_TREE_DEPTH),
+            "]".repeat(MAX_TREE_DEPTH)
+        );
+        assert!(Json::parse(&ok).is_ok());
+        let deep = format!(
+            "{}1{}",
+            "[".repeat(MAX_TREE_DEPTH + 1),
+            "]".repeat(MAX_TREE_DEPTH + 1)
+        );
+        match Json::parse(&deep) {
+            Err(JsonError::TooDeep { limit, .. }) => assert_eq!(limit, MAX_TREE_DEPTH),
+            other => panic!("expected TooDeep, got {other:?}"),
+        }
+        // Same guard for objects, and the error survives a mixed prefix.
+        let deep_obj = "{\"k\":".repeat(MAX_TREE_DEPTH + 1);
+        assert!(matches!(
+            Json::parse(&deep_obj),
+            Err(JsonError::TooDeep { .. })
+        ));
     }
 }

@@ -1,0 +1,926 @@
+//! Streaming JSON: a non-recursive, zero-allocation **pull-parser** and an
+//! **incremental writer** — the hot-path fast lane next to the tree model in
+//! [`super::json`].
+//!
+//! The tree parser materializes every value (`String` keys, `BTreeMap`
+//! objects, `Vec` arrays); that is the right shape for configs and reports
+//! but the wrong one for the two per-item hot paths: resuming a
+//! million-line campaign JSONL stream and admitting serve requests. The
+//! pull-parser borrows everything from the input line — keys, strings and
+//! numbers are `&str` slices, nesting is tracked in a **bitstack** (one bit
+//! per level: object or array, in the style of `picojson`), and the caller
+//! drives it as an event stream:
+//!
+//! ```text
+//! {"label":"macs=4096","cycles":8192}
+//!   → ObjBegin, Key("label"), Str("macs=4096"), Key("cycles"), Num(8192),
+//!     ObjEnd, End
+//! ```
+//!
+//! No recursion (depth is data, not call stack), no heap allocation on the
+//! event path, and escape decoding is deferred: [`RawStr`] compares against
+//! expected keys without decoding (`is`) and only unescapes on demand
+//! (`decode`, copy-on-write).
+//!
+//! [`JsonWriter`] is the mirror image: it emits objects and arrays
+//! field-by-field into a reusable buffer, routing numbers and strings
+//! through the exact same [`write_f64`]/[`write_escaped`] helpers as the
+//! tree writer, so its output is bit-identical to
+//! [`Json::to_string_compact`] provided object keys are fed in sorted
+//! order (the tree's `BTreeMap` sorts; the streaming caller must).
+//! Campaign resume (`diff clean.jsonl resume.jsonl` in CI) pins this.
+//!
+//! Both halves accept and produce exactly the dialect of the tree module —
+//! differential tests in `tests/json_stream.rs` hold them equal on random
+//! documents, every shipped config, and truncation prefixes.
+
+use super::json::{write_escaped, write_f64, Json, JsonError};
+use std::borrow::Cow;
+
+/// Maximum nesting depth of the pull-parser: the bitstack holds one bit per
+/// level in four words. Deeper input returns [`JsonError::TooDeep`] — depth
+/// is an O(1) array, never a call stack.
+pub const MAX_STREAM_DEPTH: usize = 256;
+
+/// One bit of container kind per nesting level (`true` = object,
+/// `false` = array), packed into fixed words — the `picojson` trick that
+/// keeps arbitrary nesting O(1) in memory.
+#[derive(Debug, Clone, Copy, Default)]
+struct BitStack {
+    words: [u64; MAX_STREAM_DEPTH / 64],
+    depth: usize,
+}
+
+impl BitStack {
+    /// Push a level; `false` when the stack is full.
+    fn push(&mut self, is_obj: bool) -> bool {
+        if self.depth == MAX_STREAM_DEPTH {
+            return false;
+        }
+        let (w, b) = (self.depth / 64, self.depth % 64);
+        if is_obj {
+            self.words[w] |= 1 << b;
+        } else {
+            self.words[w] &= !(1 << b);
+        }
+        self.depth += 1;
+        true
+    }
+
+    fn pop(&mut self) -> Option<bool> {
+        self.depth = self.depth.checked_sub(1)?;
+        Some(self.bit(self.depth))
+    }
+
+    fn top(&self) -> Option<bool> {
+        self.depth.checked_sub(1).map(|d| self.bit(d))
+    }
+
+    fn bit(&self, level: usize) -> bool {
+        self.words[level / 64] >> (level % 64) & 1 == 1
+    }
+
+    fn set_top(&mut self, v: bool) {
+        let d = self.depth - 1;
+        if v {
+            self.words[d / 64] |= 1 << (d % 64);
+        } else {
+            self.words[d / 64] &= !(1 << (d % 64));
+        }
+    }
+}
+
+/// A string token borrowed from the input, still escaped. Comparison
+/// against plain needles (`is`) costs nothing when the raw slice has no
+/// backslash — the overwhelmingly common case for keys and labels — and
+/// [`decode`](RawStr::decode) unescapes copy-on-write only when asked.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RawStr<'a> {
+    raw: &'a str,
+    at: usize,
+}
+
+impl<'a> RawStr<'a> {
+    /// The raw slice between the quotes, escapes intact.
+    pub fn raw(&self) -> &'a str {
+        self.raw
+    }
+
+    /// Does this token equal `needle` (an unescaped string)? Allocation-free
+    /// when the token holds no escapes.
+    pub fn is(&self, needle: &str) -> bool {
+        if !self.raw.contains('\\') {
+            return self.raw == needle;
+        }
+        matches!(self.decode(), Ok(d) if d == needle)
+    }
+
+    /// Unescape: borrowed when there is nothing to decode, owned otherwise.
+    pub fn decode(&self) -> Result<Cow<'a, str>, JsonError> {
+        if !self.raw.contains('\\') {
+            return Ok(Cow::Borrowed(self.raw));
+        }
+        unescape(self.raw, self.at).map(Cow::Owned)
+    }
+}
+
+/// A number token borrowed from the input, parsed on demand through the
+/// same `str::parse::<f64>` the tree parser uses (identical accept set and
+/// rounding).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RawNum<'a> {
+    raw: &'a str,
+    at: usize,
+}
+
+impl<'a> RawNum<'a> {
+    pub fn raw(&self) -> &'a str {
+        self.raw
+    }
+
+    pub fn f64(&self) -> Result<f64, JsonError> {
+        self.raw.parse::<f64>().map_err(|_| JsonError::Syntax {
+            at: self.at,
+            msg: "bad number".to_string(),
+        })
+    }
+
+    /// Non-negative integral read, mirroring [`Json::as_u64`]'s acceptance
+    /// (`n >= 0 && n.fract() == 0`).
+    pub fn u64(&self) -> Result<u64, JsonError> {
+        let n = self.f64()?;
+        if n >= 0.0 && n.fract() == 0.0 {
+            Ok(n as u64)
+        } else {
+            Err(JsonError::Syntax {
+                at: self.at,
+                msg: "expected a non-negative integer".to_string(),
+            })
+        }
+    }
+}
+
+/// One parse event. String-ish payloads are borrowed from the input.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Event<'a> {
+    ObjBegin,
+    ObjEnd,
+    ArrBegin,
+    ArrEnd,
+    /// An object key (the value's events follow immediately).
+    Key(RawStr<'a>),
+    Str(RawStr<'a>),
+    Num(RawNum<'a>),
+    Bool(bool),
+    Null,
+    /// The document is complete (trailing whitespace consumed, trailing
+    /// content rejected). Terminal: returned on every subsequent call.
+    End,
+}
+
+/// Parser state between events — which token class is legal next.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum State {
+    /// Before the top-level value.
+    Start,
+    /// Just after `{`: a key or `}`.
+    ObjFirst,
+    /// After a comma inside an object: a key.
+    ObjKey,
+    /// After a key's `:`: a value.
+    ObjValue,
+    /// After a value inside an object: `,` or `}`.
+    ObjNext,
+    /// Just after `[`: a value or `]`.
+    ArrFirst,
+    /// After a comma inside an array: a value.
+    ArrValue,
+    /// After a value inside an array: `,` or `]`.
+    ArrNext,
+    /// After the top-level value: only whitespace may remain.
+    Done,
+}
+
+/// The pull-parser: call [`next_event`](PullParser::next_event) until
+/// [`Event::End`]. Zero allocation, zero recursion; nesting lives in a
+/// [`BitStack`].
+pub struct PullParser<'a> {
+    b: &'a [u8],
+    s: &'a str,
+    i: usize,
+    stack: BitStack,
+    state: State,
+}
+
+impl<'a> PullParser<'a> {
+    pub fn new(s: &'a str) -> PullParser<'a> {
+        PullParser { b: s.as_bytes(), s, i: 0, stack: BitStack::default(), state: State::Start }
+    }
+
+    /// Current nesting depth (0 at top level).
+    pub fn depth(&self) -> usize {
+        self.stack.depth
+    }
+
+    /// Byte offset of the next unread input.
+    pub fn offset(&self) -> usize {
+        self.i
+    }
+
+    fn err(&self, msg: &str) -> JsonError {
+        JsonError::Syntax { at: self.i, msg: msg.to_string() }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    /// The state after a complete value at the current depth.
+    fn after_value(&self) -> State {
+        match self.stack.top() {
+            None => State::Done,
+            Some(true) => State::ObjNext,
+            Some(false) => State::ArrNext,
+        }
+    }
+
+    /// Produce the next event. After an `Err` the parser is poisoned for
+    /// that input — callers bail on the line, they do not resync.
+    pub fn next_event(&mut self) -> Result<Event<'a>, JsonError> {
+        loop {
+            self.skip_ws();
+            match self.state {
+                State::Start | State::ObjValue | State::ArrValue => return self.value_event(),
+                State::ArrFirst => {
+                    if self.peek() == Some(b']') {
+                        self.i += 1;
+                        self.stack.pop();
+                        self.state = self.after_value();
+                        return Ok(Event::ArrEnd);
+                    }
+                    return self.value_event();
+                }
+                State::ObjFirst => {
+                    if self.peek() == Some(b'}') {
+                        self.i += 1;
+                        self.stack.pop();
+                        self.state = self.after_value();
+                        return Ok(Event::ObjEnd);
+                    }
+                    return self.key_event();
+                }
+                State::ObjKey => return self.key_event(),
+                State::ObjNext => match self.peek() {
+                    Some(b',') => {
+                        self.i += 1;
+                        self.state = State::ObjKey;
+                    }
+                    Some(b'}') => {
+                        self.i += 1;
+                        self.stack.pop();
+                        self.state = self.after_value();
+                        return Ok(Event::ObjEnd);
+                    }
+                    _ => return Err(self.err("expected ',' or '}'")),
+                },
+                State::ArrNext => match self.peek() {
+                    Some(b',') => {
+                        self.i += 1;
+                        self.state = State::ArrValue;
+                    }
+                    Some(b']') => {
+                        self.i += 1;
+                        self.stack.pop();
+                        self.state = self.after_value();
+                        return Ok(Event::ArrEnd);
+                    }
+                    _ => return Err(self.err("expected ',' or ']'")),
+                },
+                State::Done => {
+                    if self.i == self.b.len() {
+                        return Ok(Event::End);
+                    }
+                    return Err(self.err("trailing content"));
+                }
+            }
+        }
+    }
+
+    fn value_event(&mut self) -> Result<Event<'a>, JsonError> {
+        match self.peek() {
+            Some(b'n') => self.lit("null", Event::Null),
+            Some(b't') => self.lit("true", Event::Bool(true)),
+            Some(b'f') => self.lit("false", Event::Bool(false)),
+            Some(b'"') => {
+                let s = self.raw_string()?;
+                self.state = self.after_value();
+                Ok(Event::Str(s))
+            }
+            Some(b'{') => {
+                self.i += 1;
+                if !self.stack.push(true) {
+                    return Err(JsonError::TooDeep { at: self.i - 1, limit: MAX_STREAM_DEPTH });
+                }
+                self.state = State::ObjFirst;
+                Ok(Event::ObjBegin)
+            }
+            Some(b'[') => {
+                self.i += 1;
+                if !self.stack.push(false) {
+                    return Err(JsonError::TooDeep { at: self.i - 1, limit: MAX_STREAM_DEPTH });
+                }
+                self.state = State::ArrFirst;
+                Ok(Event::ArrBegin)
+            }
+            Some(c) if c == b'-' || c.is_ascii_digit() => {
+                let n = self.raw_number()?;
+                self.state = self.after_value();
+                Ok(Event::Num(n))
+            }
+            _ => Err(self.err("expected value")),
+        }
+    }
+
+    fn key_event(&mut self) -> Result<Event<'a>, JsonError> {
+        let k = self.raw_string()?;
+        self.skip_ws();
+        if self.peek() != Some(b':') {
+            return Err(self.err("expected ':'"));
+        }
+        self.i += 1;
+        self.state = State::ObjValue;
+        Ok(Event::Key(k))
+    }
+
+    fn lit(&mut self, word: &str, ev: Event<'a>) -> Result<Event<'a>, JsonError> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            self.state = self.after_value();
+            Ok(ev)
+        } else {
+            Err(self.err(&format!("expected '{word}'")))
+        }
+    }
+
+    /// Scan a string literal without decoding: validate escape shapes and
+    /// reject raw control bytes, but keep the bytes borrowed.
+    fn raw_string(&mut self) -> Result<RawStr<'a>, JsonError> {
+        if self.peek() != Some(b'"') {
+            return Err(self.err("expected string"));
+        }
+        self.i += 1;
+        let start = self.i;
+        loop {
+            match self.peek() {
+                Some(b'"') => {
+                    let raw = &self.s[start..self.i];
+                    self.i += 1;
+                    return Ok(RawStr { raw, at: start });
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.peek() {
+                        Some(b'"' | b'\\' | b'/' | b'b' | b'f' | b'n' | b'r' | b't') => {
+                            self.i += 1;
+                        }
+                        Some(b'u') => {
+                            self.i += 1;
+                            for _ in 0..4 {
+                                match self.peek() {
+                                    Some(c) if c.is_ascii_hexdigit() => self.i += 1,
+                                    _ => return Err(self.err("bad hex")),
+                                }
+                            }
+                        }
+                        Some(_) => return Err(self.err("bad escape")),
+                        None => return Err(self.err("eof in escape")),
+                    }
+                }
+                Some(c) if c < 0x20 => return Err(self.err("control char in string")),
+                Some(_) => self.i += 1,
+                None => return Err(self.err("eof in string")),
+            }
+        }
+    }
+
+    fn raw_number(&mut self) -> Result<RawNum<'a>, JsonError> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.i += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.i += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.i += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.i += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        let raw = &self.s[start..self.i];
+        // Validate eagerly so doc-level acceptance matches the tree parser,
+        // which parses numbers as it scans them.
+        let num = RawNum { raw, at: start };
+        num.f64()?;
+        Ok(num)
+    }
+
+    // ---- typed convenience layer -------------------------------------
+    //
+    // The decoding loops in campaign/serve read one object per line with a
+    // known key set; these helpers keep those loops flat:
+    //
+    //   p.expect_obj_begin()?;
+    //   while let Some(key) = p.next_field()? {
+    //       if key.is("cycles") { cycles = Some(p.read_u64()?) }
+    //       else { p.skip_value()? }
+    //   }
+    //   p.expect_end()?;
+
+    pub fn expect_obj_begin(&mut self) -> Result<(), JsonError> {
+        match self.next_event()? {
+            Event::ObjBegin => Ok(()),
+            _ => Err(self.err("expected object")),
+        }
+    }
+
+    /// Inside an object, at key position: the next key, or `None` at `}`.
+    pub fn next_field(&mut self) -> Result<Option<RawStr<'a>>, JsonError> {
+        match self.next_event()? {
+            Event::Key(k) => Ok(Some(k)),
+            Event::ObjEnd => Ok(None),
+            _ => Err(self.err("expected key or '}'")),
+        }
+    }
+
+    /// After the top-level value closed: require clean end of input.
+    pub fn expect_end(&mut self) -> Result<(), JsonError> {
+        match self.next_event()? {
+            Event::End => Ok(()),
+            _ => Err(self.err("trailing content")),
+        }
+    }
+
+    pub fn read_f64(&mut self) -> Result<f64, JsonError> {
+        match self.next_event()? {
+            Event::Num(n) => n.f64(),
+            _ => Err(self.err("expected number")),
+        }
+    }
+
+    pub fn read_u64(&mut self) -> Result<u64, JsonError> {
+        match self.next_event()? {
+            Event::Num(n) => n.u64(),
+            _ => Err(self.err("expected number")),
+        }
+    }
+
+    /// `Some(x)` for a number, `None` for `null` — the optional-metric
+    /// encoding of [`super::json::opt_num`].
+    pub fn read_opt_f64(&mut self) -> Result<Option<f64>, JsonError> {
+        match self.next_event()? {
+            Event::Num(n) => n.f64().map(Some),
+            Event::Null => Ok(None),
+            _ => Err(self.err("expected number or null")),
+        }
+    }
+
+    pub fn read_str(&mut self) -> Result<RawStr<'a>, JsonError> {
+        match self.next_event()? {
+            Event::Str(s) => Ok(s),
+            _ => Err(self.err("expected string")),
+        }
+    }
+
+    pub fn read_bool(&mut self) -> Result<bool, JsonError> {
+        match self.next_event()? {
+            Event::Bool(b) => Ok(b),
+            _ => Err(self.err("expected bool")),
+        }
+    }
+
+    /// Consume exactly one value (scalar or whole subtree) at the current
+    /// position — how decoding loops ignore unknown keys without paying for
+    /// their contents.
+    pub fn skip_value(&mut self) -> Result<(), JsonError> {
+        let mut depth = 0usize;
+        loop {
+            match self.next_event()? {
+                Event::ObjBegin | Event::ArrBegin => depth += 1,
+                Event::ObjEnd | Event::ArrEnd => {
+                    depth = depth
+                        .checked_sub(1)
+                        .ok_or_else(|| self.err("unexpected container end"))?;
+                    if depth == 0 {
+                        return Ok(());
+                    }
+                }
+                Event::Key(_) => {}
+                Event::End => return Err(self.err("expected value")),
+                _ if depth == 0 => return Ok(()),
+                _ => {}
+            }
+        }
+    }
+}
+
+/// Decode a raw (still-escaped) string slice. Mirrors the tree parser's
+/// escape handling exactly, including surrogate pairs.
+fn unescape(raw: &str, at: usize) -> Result<String, JsonError> {
+    let b = raw.as_bytes();
+    let err = |i: usize, msg: &str| JsonError::Syntax { at: at + i, msg: msg.to_string() };
+    let mut out = String::with_capacity(raw.len());
+    let mut i = 0;
+    while i < b.len() {
+        if b[i] != b'\\' {
+            let start = i;
+            while i < b.len() && b[i] != b'\\' {
+                i += 1;
+            }
+            out.push_str(&raw[start..i]);
+            continue;
+        }
+        i += 1;
+        let c = *b.get(i).ok_or_else(|| err(i, "eof in escape"))?;
+        i += 1;
+        match c {
+            b'"' => out.push('"'),
+            b'\\' => out.push('\\'),
+            b'/' => out.push('/'),
+            b'b' => out.push('\u{8}'),
+            b'f' => out.push('\u{c}'),
+            b'n' => out.push('\n'),
+            b'r' => out.push('\r'),
+            b't' => out.push('\t'),
+            b'u' => {
+                let hex4 = |i: usize| -> Result<u32, JsonError> {
+                    let s = raw.get(i..i + 4).ok_or_else(|| err(i, "eof in \\u escape"))?;
+                    u32::from_str_radix(s, 16).map_err(|_| err(i, "bad hex"))
+                };
+                let cp = hex4(i)?;
+                i += 4;
+                if (0xD800..0xDC00).contains(&cp) {
+                    if b.get(i) != Some(&b'\\') || b.get(i + 1) != Some(&b'u') {
+                        return Err(err(i, "invalid low surrogate"));
+                    }
+                    i += 2;
+                    let lo = hex4(i)?;
+                    i += 4;
+                    if !(0xDC00..0xE000).contains(&lo) {
+                        return Err(err(i, "invalid low surrogate"));
+                    }
+                    let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                    out.push(char::from_u32(c).ok_or_else(|| err(i, "bad codepoint"))?);
+                } else {
+                    out.push(char::from_u32(cp).ok_or_else(|| err(i, "bad codepoint"))?);
+                }
+            }
+            _ => return Err(err(i, "bad escape")),
+        }
+    }
+    Ok(out)
+}
+
+/// Incremental compact-JSON writer: emit objects and arrays field-by-field
+/// into a reusable buffer, no tree in between. Numbers and strings route
+/// through [`write_f64`]/[`write_escaped`], so output is bit-identical to
+/// [`Json::to_string_compact`] when object keys are written in sorted order.
+///
+/// Commas are inserted automatically (per-level "has items" bit in a second
+/// [`BitStack`]); in objects every value must be preceded by
+/// [`key`](JsonWriter::key). Misuse (a value without a key, `end` at top
+/// level) is a `debug_assert` — the callers are fixed serialization
+/// routines, not untrusted input.
+#[derive(Debug, Default)]
+pub struct JsonWriter {
+    out: String,
+    stack: BitStack,
+    /// Per-level: has this container emitted an element yet?
+    any: BitStack,
+    /// Object-value position: a key was written, its value is pending.
+    have_key: bool,
+}
+
+impl JsonWriter {
+    pub fn new() -> JsonWriter {
+        JsonWriter::default()
+    }
+
+    pub fn with_capacity(n: usize) -> JsonWriter {
+        JsonWriter { out: String::with_capacity(n), ..JsonWriter::default() }
+    }
+
+    /// Reset for the next document, keeping the buffer allocation — the
+    /// per-line steady state of campaign streaming writes nothing to the
+    /// heap.
+    pub fn clear(&mut self) {
+        self.out.clear();
+        self.stack = BitStack::default();
+        self.any = BitStack::default();
+        self.have_key = false;
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.out
+    }
+
+    pub fn into_string(self) -> String {
+        self.out
+    }
+
+    /// Comma/position bookkeeping shared by every value form.
+    fn pre_value(&mut self) {
+        match self.stack.top() {
+            None => debug_assert!(self.out.is_empty(), "one top-level value per document"),
+            Some(true) => {
+                debug_assert!(self.have_key, "object values must follow key()");
+                self.have_key = false;
+            }
+            Some(false) => {
+                if self.any.top() == Some(true) {
+                    self.out.push(',');
+                }
+                self.any.set_top(true);
+            }
+        }
+    }
+
+    /// Write an object key (and its `,`/`:` punctuation). The next call
+    /// must write the value.
+    pub fn key(&mut self, k: &str) {
+        debug_assert_eq!(self.stack.top(), Some(true), "key() outside an object");
+        debug_assert!(!self.have_key, "two keys in a row");
+        if self.any.top() == Some(true) {
+            self.out.push(',');
+        }
+        self.any.set_top(true);
+        write_escaped(&mut self.out, k);
+        self.out.push(':');
+        self.have_key = true;
+    }
+
+    pub fn begin_obj(&mut self) {
+        self.pre_value();
+        self.out.push('{');
+        let ok = self.stack.push(true) && self.any.push(false);
+        debug_assert!(ok, "writer nesting exceeds MAX_STREAM_DEPTH");
+    }
+
+    pub fn begin_arr(&mut self) {
+        self.pre_value();
+        self.out.push('[');
+        let ok = self.stack.push(false) && self.any.push(false);
+        debug_assert!(ok, "writer nesting exceeds MAX_STREAM_DEPTH");
+    }
+
+    /// Close the innermost container (the bitstack remembers which kind).
+    pub fn end(&mut self) {
+        self.any.pop();
+        match self.stack.pop() {
+            Some(true) => self.out.push('}'),
+            Some(false) => self.out.push(']'),
+            None => debug_assert!(false, "end() with nothing open"),
+        }
+    }
+
+    pub fn str(&mut self, s: &str) {
+        self.pre_value();
+        write_escaped(&mut self.out, s);
+    }
+
+    pub fn num_f64(&mut self, n: f64) {
+        self.pre_value();
+        write_f64(&mut self.out, n);
+    }
+
+    /// Integral write through the same f64 path the tree takes for
+    /// `Json::Num(v as f64)` — bit-identical bytes for v ≤ 2^53 (the
+    /// campaign's `debug_assert`ed range).
+    pub fn num_u64(&mut self, n: u64) {
+        self.num_f64(n as f64);
+    }
+
+    /// `Some(x)` → number, `None` → `null` ([`super::json::opt_num`]).
+    pub fn opt_num(&mut self, v: Option<f64>) {
+        match v {
+            Some(x) => self.num_f64(x),
+            None => self.null(),
+        }
+    }
+
+    pub fn bool(&mut self, b: bool) {
+        self.pre_value();
+        self.out.push_str(if b { "true" } else { "false" });
+    }
+
+    pub fn null(&mut self) {
+        self.pre_value();
+        self.out.push_str("null");
+    }
+
+    /// Splice a pre-rendered compact JSON value (cold-path embeds, e.g. a
+    /// tree-built sub-document inside a streamed envelope). The caller
+    /// guarantees `json` is one valid compact value.
+    pub fn raw(&mut self, json: &str) {
+        self.pre_value();
+        self.out.push_str(json);
+    }
+
+    /// Write a tree value through the streaming surface (test bridge and
+    /// cold-path embeds).
+    pub fn value(&mut self, v: &Json) {
+        match v {
+            Json::Null => self.null(),
+            Json::Bool(b) => self.bool(*b),
+            Json::Num(n) => self.num_f64(*n),
+            Json::Str(s) => self.str(s),
+            Json::Arr(items) => {
+                self.begin_arr();
+                for item in items {
+                    self.value(item);
+                }
+                self.end();
+            }
+            Json::Obj(fields) => {
+                self.begin_obj();
+                for (k, val) in fields {
+                    self.key(k);
+                    self.value(val);
+                }
+                self.end();
+            }
+        }
+    }
+}
+
+/// Re-parse a document through the pull-parser and re-emit it through the
+/// streaming writer — the round-trip the differential tests pin against
+/// `Json::parse(..).to_string_compact()`. Returns the compact encoding.
+/// Note object keys are emitted **in input order** (streaming has no sort),
+/// so bit-identity vs the tree holds exactly when the input's keys are
+/// already sorted — true for everything this crate writes.
+pub fn restream_compact(input: &str) -> Result<String, JsonError> {
+    let mut p = PullParser::new(input);
+    let mut w = JsonWriter::with_capacity(input.len());
+    loop {
+        match p.next_event()? {
+            Event::ObjBegin => w.begin_obj(),
+            Event::ArrBegin => w.begin_arr(),
+            Event::ObjEnd | Event::ArrEnd => w.end(),
+            Event::Key(k) => {
+                let k = k.decode()?;
+                w.key(&k);
+            }
+            Event::Str(s) => {
+                let s = s.decode()?;
+                w.str(&s);
+            }
+            Event::Num(n) => w.num_f64(n.f64()?),
+            Event::Bool(b) => w.bool(b),
+            Event::Null => w.null(),
+            Event::End => return Ok(w.into_string()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn events(s: &str) -> Vec<String> {
+        let mut p = PullParser::new(s);
+        let mut out = Vec::new();
+        loop {
+            let ev = p.next_event().unwrap();
+            out.push(format!("{ev:?}"));
+            if matches!(ev, Event::End) {
+                return out;
+            }
+        }
+    }
+
+    #[test]
+    fn event_stream_shape() {
+        let evs = events(r#"{"a":1,"b":[true,null],"c":"x"}"#);
+        assert_eq!(evs.len(), 12, "{evs:?}");
+        assert!(evs[0].starts_with("ObjBegin"));
+        assert!(evs.last().unwrap().starts_with("End"));
+    }
+
+    #[test]
+    fn scalars_at_top_level() {
+        for (src, want) in [("1", "Num"), ("\"x\"", "Str"), ("true", "Bool"), ("null", "Null")] {
+            let evs = events(src);
+            assert!(evs[0].starts_with(want), "{src} -> {evs:?}");
+            assert_eq!(evs.len(), 2);
+        }
+    }
+
+    #[test]
+    fn rejects_what_the_tree_rejects() {
+        for bad in ["1 2", "{", "[1,]", "{\"a\":}", "[}", "{\"a\" 1}", "nul", ""] {
+            let mut p = PullParser::new(bad);
+            let r = loop {
+                match p.next_event() {
+                    Ok(Event::End) => break Ok(()),
+                    Ok(_) => continue,
+                    Err(e) => break Err(e),
+                }
+            };
+            assert!(r.is_err(), "pull-parser accepted {bad:?}");
+            assert!(Json::parse(bad).is_err(), "tree accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn bitstack_depth_guard() {
+        let deep = "[".repeat(MAX_STREAM_DEPTH + 1);
+        let mut p = PullParser::new(&deep);
+        let r = loop {
+            match p.next_event() {
+                Ok(Event::End) => break Ok(()),
+                Ok(_) => continue,
+                Err(e) => break Err(e),
+            }
+        };
+        assert!(matches!(r, Err(JsonError::TooDeep { .. })), "{r:?}");
+    }
+
+    #[test]
+    fn raw_str_compares_without_decoding() {
+        let mut p = PullParser::new(r#"{"pla\nin":1}"#);
+        p.expect_obj_begin().unwrap();
+        let k = p.next_field().unwrap().unwrap();
+        assert!(k.raw().contains('\\'));
+        assert!(k.is("pla\nin"));
+        assert!(!k.is("plain"));
+    }
+
+    #[test]
+    fn skip_value_consumes_subtrees() {
+        let mut p = PullParser::new(r#"{"skip":{"x":[1,{"y":2}]},"keep":7}"#);
+        p.expect_obj_begin().unwrap();
+        assert!(p.next_field().unwrap().unwrap().is("skip"));
+        p.skip_value().unwrap();
+        assert!(p.next_field().unwrap().unwrap().is("keep"));
+        assert_eq!(p.read_u64().unwrap(), 7);
+        assert!(p.next_field().unwrap().is_none());
+        p.expect_end().unwrap();
+    }
+
+    #[test]
+    fn writer_matches_tree_compact() {
+        let mut w = JsonWriter::new();
+        w.begin_obj();
+        w.key("arr");
+        w.begin_arr();
+        w.num_f64(1.0);
+        w.num_f64(2.5);
+        w.str("x\"y");
+        w.end();
+        w.key("n");
+        w.null();
+        w.key("ok");
+        w.bool(true);
+        w.end();
+        let tree = Json::parse(w.as_str()).unwrap();
+        assert_eq!(w.as_str(), tree.to_string_compact());
+    }
+
+    #[test]
+    fn writer_clear_reuses_buffer() {
+        let mut w = JsonWriter::with_capacity(64);
+        w.begin_arr();
+        w.num_u64(1);
+        w.end();
+        assert_eq!(w.as_str(), "[1]");
+        w.clear();
+        w.begin_obj();
+        w.key("a");
+        w.num_u64(2);
+        w.end();
+        assert_eq!(w.as_str(), r#"{"a":2}"#);
+    }
+
+    #[test]
+    fn restream_is_bit_exact_on_sorted_input() {
+        let src = r#"{"a":1,"b":[true,null,"x\ny"],"c":-2.5e3,"d":{"p":0.1}}"#;
+        let compact = Json::parse(src).unwrap().to_string_compact();
+        assert_eq!(restream_compact(&compact).unwrap(), compact);
+    }
+}

@@ -9,6 +9,7 @@ pub mod bench;
 pub mod cli;
 pub mod csv;
 pub mod json;
+pub mod json_stream;
 pub mod prop;
 pub mod rng;
 pub mod stats;

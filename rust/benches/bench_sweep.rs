@@ -14,10 +14,12 @@
 use cube3d::campaign::{Campaign, CampaignMode};
 use cube3d::config::ExperimentConfig;
 use cube3d::eval::Evaluator;
+use cube3d::obs;
 use cube3d::util::bench::{black_box, Bench};
 use cube3d::util::json::{obj, Json};
 use std::path::PathBuf;
 use std::sync::Arc;
+use std::time::Instant;
 
 fn repo_root() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..")
@@ -86,6 +88,64 @@ fn bench_config(b: &mut Bench, name: &'static str, mode: CampaignMode) -> Config
     run
 }
 
+/// Per-call cost of the disabled tracer's fast path (one relaxed load and
+/// an inert guard), ns.
+fn measure_disabled_span_ns() -> f64 {
+    assert!(!obs::enabled(), "overhead must be measured with the recorder off");
+    const CALLS: u64 = 4_000_000;
+    let t0 = Instant::now();
+    for _ in 0..CALLS {
+        black_box(obs::span(obs::Phase::EvalPoint));
+    }
+    t0.elapsed().as_secs_f64() * 1e9 / CALLS as f64
+}
+
+/// Span sites hit per completed point on `campaign`: run it once serially
+/// with the recorder on and count every recording (timed spans and
+/// duration-free `count()` events alike — each is one disabled-path load on
+/// an untraced run). Leaves the recorder off. Must run *after* the timed
+/// benches so they stay untraced.
+fn measure_spans_per_point(campaign: &Campaign, points: usize) -> f64 {
+    obs::reset();
+    obs::enable();
+    let c = campaign.clone().with_evaluator(fresh_evaluator(CampaignMode::Point));
+    black_box(c.run_serial());
+    obs::disable();
+    let spans: u64 = obs::phase_stats().iter().map(|s| s.count).sum();
+    obs::reset();
+    spans as f64 / points.max(1) as f64
+}
+
+/// Today's UTC date as `YYYY-MM-DD` (civil-from-days; no date crate).
+fn civil_date_utc() -> String {
+    let secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let z = (secs / 86_400) as i64 + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097);
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 };
+    let y = yoe + era * 400 + i64::from(m <= 2);
+    format!("{y:04}-{m:02}-{d:02}")
+}
+
+/// The trajectory carried over from the checked-in artifact, if any.
+fn prior_trajectory(path: &std::path::Path) -> Vec<Json> {
+    std::fs::read_to_string(path)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok())
+        .and_then(|j| match j.get("trajectory") {
+            Some(Json::Arr(entries)) => Some(entries.clone()),
+            _ => None,
+        })
+        .unwrap_or_default()
+}
+
 fn main() {
     let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     println!("== bench_sweep: campaign points/sec, serial vs parallel ({workers} workers) ==\n");
@@ -96,7 +156,47 @@ fn main() {
         bench_config(&mut b, "gnmt_pipeline.json", CampaignMode::Network),
     ];
 
+    // Disabled-tracer overhead on the serial rn0 run: spans/point × the
+    // disabled span cost, as a fraction of the measured per-point time. CI
+    // (`trace-smoke`) gates this below 1%.
+    let rn0 = &runs[0];
+    let disabled_span_ns = measure_disabled_span_ns();
+    let rn0_campaign = Campaign::from_config(
+        &ExperimentConfig::from_file(&repo_root().join("configs").join(rn0.name)).unwrap(),
+        CampaignMode::Point,
+    )
+    .unwrap();
+    let spans_per_point = measure_spans_per_point(&rn0_campaign, rn0.points);
+    let serial_point_ns = 1e9 / rn0.serial_pts_per_s;
+    let overhead_frac = spans_per_point * disabled_span_ns / serial_point_ns;
+    println!(
+        "\n  tracer overhead (disabled): {disabled_span_ns:.2} ns/span x {spans_per_point:.1} \
+         spans/point = {:.4}% of the {serial_point_ns:.0} ns serial point",
+        overhead_frac * 100.0
+    );
+
+    let out = repo_root().join("BENCH_sweep.json");
+    let mut trajectory = prior_trajectory(&out);
+    trajectory.push(obj([
+        ("date", Json::Str(civil_date_utc())),
+        ("workers", Json::Num(workers as f64)),
+        ("config", Json::Str(rn0.name.to_string())),
+        ("serial_points_per_sec", Json::Num(rn0.serial_pts_per_s)),
+        ("parallel_points_per_sec", Json::Num(rn0.parallel_pts_per_s)),
+        ("disabled_tracer_overhead_frac", Json::Num(overhead_frac)),
+    ]));
+
     let doc = obj([
+        (
+            "overhead",
+            obj([
+                ("disabled_span_ns", Json::Num(disabled_span_ns)),
+                ("spans_per_point", Json::Num(spans_per_point)),
+                ("serial_point_ns", Json::Num(serial_point_ns)),
+                ("overhead_frac", Json::Num(overhead_frac)),
+            ]),
+        ),
+        ("trajectory", Json::Arr(trajectory)),
         ("bench", Json::Str("bench_sweep".to_string())),
         (
             "note",
@@ -129,7 +229,6 @@ fn main() {
             Json::Arr(b.results().iter().map(|r| r.to_json()).collect()),
         ),
     ]);
-    let out = repo_root().join("BENCH_sweep.json");
     std::fs::write(&out, doc.to_string_pretty() + "\n").expect("write BENCH_sweep.json");
     println!("\nwrote {}", out.display());
 }

@@ -13,6 +13,7 @@ use crate::eval::{
     shared_evaluator, shared_full_evaluator, shared_schedule_evaluator, CacheStats, Evaluator,
     Metrics, Scenario,
 };
+use crate::obs;
 use crate::power::Tech;
 use crate::schedule::{NetworkMetrics, ScheduleSpec};
 use crate::util::json::{obj, Json};
@@ -85,6 +86,10 @@ pub struct CampaignOutcome {
     pub skipped: usize,
     /// Snapshot of the evaluator's memo-cache counters after the run.
     pub cache: CacheStats,
+    /// FNV-1a hash of the campaign fingerprint (the JSONL stream identity) —
+    /// what the resume stderr line prints so operators of sharded campaigns
+    /// can tell streams apart at a glance.
+    pub fingerprint_hash: String,
 }
 
 impl CampaignOutcome {
@@ -278,6 +283,17 @@ impl Campaign {
         .to_string_compact()
     }
 
+    /// 64-bit FNV-1a of [`Campaign::fingerprint`], as 16 hex digits — the
+    /// short stream identity printed by the CLI resume report.
+    pub fn fingerprint_hash(&self) -> String {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in self.fingerprint().bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0100_0000_01b3);
+        }
+        format!("{h:016x}")
+    }
+
     fn point_label(&self, workload_index: usize, gp: &GridPoint) -> String {
         let label = gp.label();
         if self.workloads.len() > 1 {
@@ -362,6 +378,7 @@ impl Campaign {
         collect: bool,
         on_point: Option<&mut dyn FnMut(&CampaignPoint) -> Result<()>>,
     ) -> Result<CampaignOutcome> {
+        let _run_span = obs::span(obs::Phase::CampaignRun);
         let ev = self.pick_evaluator();
         let objectives = self.objectives();
         let mut stored: Option<StoredPoints> = None;
@@ -374,8 +391,10 @@ impl Campaign {
             completed: 0,
             front: ParetoSet::new(objectives),
             feasible_front: ParetoSet::new(objectives),
+            heartbeat: obs::Heartbeat::new("campaign", self.n_points() as u64, 0),
         };
         if let Some(path) = jsonl {
+            let _merge = obs::span(obs::Phase::CampaignResumeMerge);
             let expected = self.fingerprint();
             prepare_stream(path, &expected)?;
             stored = Some(StoredPoints::open(path)?);
@@ -400,7 +419,10 @@ impl Campaign {
                 // point, it is consumed in place — no label set, no point
                 // map, O(1) memory however long the stream.
                 let prior = match stored.as_mut() {
-                    Some(s) => s.take_if(&label)?,
+                    Some(s) => {
+                        let _merge = obs::span(obs::Phase::CampaignResumeMerge);
+                        s.take_if(&label)?
+                    }
                     None => None,
                 };
                 if let Some(prior) = prior {
@@ -413,6 +435,7 @@ impl Campaign {
                     col.complete(prior, false)?;
                     continue;
                 }
+                let enumerate = obs::span(obs::Phase::CampaignEnumerate);
                 let spec = self.base.with_values(&gp.values);
                 match self.scenario_for(wi, &spec) {
                     Ok(s) => pending.push((label, s)),
@@ -421,6 +444,7 @@ impl Campaign {
                     // legacy sweeps.
                     Err(_) => skipped += 1,
                 }
+                drop(enumerate);
                 if pending.len() >= chunk {
                     for p in self.evaluate_chunk(&ev, &mut pending, parallel, &mut skipped) {
                         col.complete(p, true)?;
@@ -442,6 +466,7 @@ impl Campaign {
             resumed,
             skipped,
             cache: ev.cache_stats(),
+            fingerprint_hash: self.fingerprint_hash(),
         })
     }
 
@@ -540,14 +565,19 @@ impl Campaign {
         if pending.is_empty() {
             return Vec::new();
         }
+        let mut dispatch = obs::span(obs::Phase::CampaignDispatch);
+        dispatch.add(pending.len() as u64);
         let batch: Vec<(String, Scenario)> = std::mem::take(pending);
         match self.mode {
             CampaignMode::Point => {
                 let scenarios: Vec<Scenario> = batch.iter().map(|(_, s)| s.clone()).collect();
-                let metrics: Vec<Metrics> = if parallel {
-                    ev.evaluate_batch(&scenarios)
-                } else {
-                    scenarios.iter().map(|s| ev.evaluate(s)).collect()
+                let metrics: Vec<Metrics> = {
+                    let _batch_span = obs::span(obs::Phase::CampaignEvaluateBatch);
+                    if parallel {
+                        ev.evaluate_batch(&scenarios)
+                    } else {
+                        scenarios.iter().map(|s| ev.evaluate(s)).collect()
+                    }
                 };
                 batch
                     .into_iter()
@@ -559,10 +589,13 @@ impl Campaign {
                     .collect()
             }
             CampaignMode::Network => {
-                let evaluated: Vec<Option<NetworkMetrics>> = if parallel {
-                    par_map(&batch, |(_, s)| ev.evaluate_network(s).ok())
-                } else {
-                    batch.iter().map(|(_, s)| ev.evaluate_network(s).ok()).collect()
+                let evaluated: Vec<Option<NetworkMetrics>> = {
+                    let _batch_span = obs::span(obs::Phase::CampaignEvaluateBatch);
+                    if parallel {
+                        par_map(&batch, |(_, s)| ev.evaluate_network(s).ok())
+                    } else {
+                        batch.iter().map(|(_, s)| ev.evaluate_network(s).ok()).collect()
+                    }
                 };
                 let mut out = Vec::new();
                 for ((label, s), m) in batch.into_iter().zip(evaluated) {
@@ -633,12 +666,14 @@ struct Collector<'a> {
     completed: usize,
     front: ParetoSet<CampaignPoint>,
     feasible_front: ParetoSet<CampaignPoint>,
+    heartbeat: obs::Heartbeat,
 }
 
 impl Collector<'_> {
     fn complete(&mut self, p: CampaignPoint, fresh: bool) -> Result<()> {
         if fresh {
             if let Some(file) = &mut self.sink {
+                let _flush_span = obs::span(obs::Phase::CampaignJsonlFlush);
                 self.wbuf.clear();
                 p.write_jsonl(&mut self.wbuf);
                 file.write_all(self.wbuf.as_str().as_bytes())?;
@@ -649,10 +684,14 @@ impl Collector<'_> {
             f(&p)?;
         }
         self.completed += 1;
-        self.front.insert(p.clone());
-        if p.feasible() {
-            self.feasible_front.insert(p.clone());
+        {
+            let _pareto_span = obs::span(obs::Phase::CampaignParetoInsert);
+            self.front.insert(p.clone());
+            if p.feasible() {
+                self.feasible_front.insert(p.clone());
+            }
         }
+        self.heartbeat.tick(1, self.front.len() as u64);
         if self.collect {
             self.points.push(p);
         }
@@ -663,6 +702,7 @@ impl Collector<'_> {
     /// run loses at most one chunk of completed work.
     fn flush(&mut self) -> Result<()> {
         if let Some(file) = &mut self.sink {
+            let _flush_span = obs::span(obs::Phase::CampaignJsonlFlush);
             file.flush()?;
         }
         Ok(())

@@ -5,6 +5,7 @@ use super::metrics::{aggregate, Metrics};
 use super::models::{AnalyticalModel, AreaModel, CostModel, PowerModel, ThermalModel};
 use super::scenario::{ArrayChoice, Scenario, TierChoice};
 use crate::dataflow::Dataflow;
+use crate::obs;
 use crate::power::VerticalTech;
 use crate::util::threadpool::par_map;
 use crate::workloads::Gemm;
@@ -218,14 +219,18 @@ impl Evaluator {
     }
 
     fn evaluate_point(&self, point: &Scenario) -> Metrics {
+        let _point_span = obs::span(obs::Phase::EvalPoint);
         let key = PointKey::of(point);
         {
+            let _lookup = obs::span(obs::Phase::EvalCacheLookup);
             let cache = self.cache.read().unwrap();
             if let Some(hit) = cache.map.get(&key) {
                 self.hits.fetch_add(1, Ordering::Relaxed);
+                obs::count(obs::Phase::EvalCacheHit);
                 return hit.clone();
             }
         }
+        obs::count(obs::Phase::EvalCacheMiss);
         self.misses.fetch_add(1, Ordering::Relaxed);
         // Model execution happens outside the lock; two threads racing on
         // the same fresh key redundantly compute the same value — harmless
@@ -233,6 +238,7 @@ impl Evaluator {
         let mut m = Metrics::default();
         for model in &self.models {
             self.model_calls.fetch_add(1, Ordering::Relaxed);
+            let _model_span = obs::span(obs::Phase::for_model(model.name()));
             model.evaluate(point, &mut m);
         }
         let mut cache = self.cache.write().unwrap();
@@ -276,6 +282,7 @@ impl Evaluator {
         resolved: &super::models::ResolvedNetwork,
         out: &mut crate::schedule::NetworkMetrics,
     ) {
+        let _span = obs::span(obs::Phase::EvalNetworkPass);
         for model in &self.models {
             model.evaluate_network(scenario, resolved, out);
         }

@@ -86,6 +86,7 @@ fn resolve_designs(s: &Scenario) -> (Option<OptimalDesign>, OptimalDesign, u64) 
             (None, d3, arr.tiers)
         }
         ArrayChoice::Optimize => {
+            let _span = crate::obs::span(crate::obs::Phase::EvalDataflowOptimize);
             let tiers = match s.tiers {
                 TierChoice::Fixed(t) => t,
                 // The auto search only considers stacks the vertical tech

@@ -70,6 +70,7 @@ pub mod dataflow;
 pub mod dse;
 pub mod eval;
 pub mod memory;
+pub mod obs;
 pub mod power;
 pub mod report;
 pub mod runtime;

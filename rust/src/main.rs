@@ -36,6 +36,9 @@
 //!                 grid point) without evaluating anything — the fixture
 //!                 behind `bench_json` and the CI constant-memory resume
 //!                 gate.
+//! * `check-trace` — validate a `--trace` artifact: well-formed, bit-exact
+//!                 streaming round-trip, monotonic timestamps, and (for
+//!                 single-threaded runs) self-time-vs-wall attribution.
 //!
 //! Every metric printed here comes from the shared [`cube3d::eval`]
 //! evaluator — the CLI builds a [`Scenario`] and formats the bundle.
@@ -175,6 +178,16 @@ fn workload_opts() -> Vec<OptSpec> {
             takes_value: true,
             help: "loadtest: artifact path (default BENCH_serve.json)",
         },
+        OptSpec {
+            name: "trace",
+            takes_value: true,
+            help: "write a Chrome trace-event JSON of the run (open in ui.perfetto.dev)",
+        },
+        OptSpec {
+            name: "trace-summary",
+            takes_value: false,
+            help: "print the per-phase wall-time attribution table to stderr",
+        },
     ]
 }
 
@@ -208,27 +221,186 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
     let specs = workload_opts();
     let args = Args::parse(rest, &specs)?;
 
-    match cmd.as_str() {
-        "analyze" => cmd_analyze(&args),
-        "sweep" => cmd_sweep(&args),
-        "power" => cmd_power(&args),
-        "thermal" => cmd_thermal(&args),
-        "simulate" => cmd_simulate(&args),
-        "reproduce" => cmd_reproduce(&args),
-        "serve" => cmd_serve(&args),
-        "loadtest" => cmd_loadtest(&args),
-        "schedule" => cmd_schedule(&args),
-        "workloads" => cmd_workloads(),
-        "gen-jsonl" => cmd_gen_jsonl(&args),
-        "dataflows" => cmd_dataflows(&args),
-        "pareto" => cmd_pareto(&args),
-        "memory" => cmd_memory(&args),
-        "help" | "--help" | "-h" => {
-            print_help();
-            Ok(())
-        }
-        other => anyhow::bail!("unknown command '{other}' (try `cube3d help`)"),
+    // `--trace` / `--trace-summary` turn the recorder on for the whole
+    // command; without them every span site is a single relaxed load.
+    let trace_out = args.get("trace").map(str::to_string);
+    let trace_summary = args.flag("trace-summary");
+    if trace_out.is_some() || trace_summary {
+        cube3d::obs::enable();
     }
+
+    let result = {
+        let _run_span = cube3d::obs::span(cube3d::obs::Phase::CliRun);
+        match cmd.as_str() {
+            "analyze" => cmd_analyze(&args),
+            "sweep" => cmd_sweep(&args),
+            "power" => cmd_power(&args),
+            "thermal" => cmd_thermal(&args),
+            "simulate" => cmd_simulate(&args),
+            "reproduce" => cmd_reproduce(&args),
+            "serve" => cmd_serve(&args),
+            "loadtest" => cmd_loadtest(&args),
+            "schedule" => cmd_schedule(&args),
+            "workloads" => cmd_workloads(),
+            "gen-jsonl" => cmd_gen_jsonl(&args),
+            "dataflows" => cmd_dataflows(&args),
+            "pareto" => cmd_pareto(&args),
+            "memory" => cmd_memory(&args),
+            "check-trace" => cmd_check_trace(&args),
+            "help" | "--help" | "-h" => {
+                print_help();
+                Ok(())
+            }
+            other => anyhow::bail!("unknown command '{other}' (try `cube3d help`)"),
+        }
+    };
+
+    // Export after the run span closed, so the trace and the table cover
+    // the complete command (including a failed one — a trace of the run up
+    // to the error is exactly what you want then).
+    if let Some(path) = &trace_out {
+        let mut w = JsonWriter::with_capacity(1 << 16);
+        cube3d::obs::write_chrome_trace(&mut w);
+        std::fs::write(path, w.as_str())?;
+        eprintln!("wrote Chrome trace to {path} (load it in ui.perfetto.dev)");
+    }
+    if trace_summary {
+        eprint!("{}", cube3d::obs::render_summary());
+    }
+    result
+}
+
+/// `check-trace`: validate a `--trace` artifact end to end, entirely through
+/// the pull-parser (the file is never materialized as a tree):
+///
+/// * well-formed JSON that round-trips bit-identically through the
+///   streaming writer (`restream_compact`),
+/// * more than zero complete (`ph:"X"`) events, each carrying `dur`,
+/// * non-decreasing `ts` across the event array,
+/// * and, when the trace came from a single-threaded run (one `tid`, no
+///   dropped events), the events' summed `args.self_ns` must match the
+///   recorded `wallNs` within 5% — the attribution-completeness gate the CI
+///   `trace-smoke` job runs with `CUBE3D_THREADS=1`.
+fn cmd_check_trace(args: &Args) -> anyhow::Result<()> {
+    use cube3d::util::json_stream::{restream_compact, Event, PullParser};
+    let Some(path) = args.positional().first() else {
+        anyhow::bail!("usage: cube3d check-trace <trace.json>");
+    };
+    let input = std::fs::read_to_string(path)?;
+
+    let restreamed = restream_compact(&input)
+        .map_err(|e| anyhow::anyhow!("{path}: not well-formed JSON: {e}"))?;
+    anyhow::ensure!(
+        restreamed == input,
+        "{path}: does not round-trip bit-identically through the streaming writer \
+         ({} bytes in, {} bytes restreamed)",
+        input.len(),
+        restreamed.len()
+    );
+
+    let mut p = PullParser::new(&input);
+    let mut dropped = 0u64;
+    let mut wall_ns: Option<u64> = None;
+    let mut n_events = 0u64;
+    let mut n_complete = 0u64;
+    let mut last_ts = f64::NEG_INFINITY;
+    let mut sum_self_ns = 0.0f64;
+    let mut tids: Vec<u64> = Vec::new();
+    p.expect_obj_begin()?;
+    while let Some(key) = p.next_field()? {
+        if key.is("droppedEvents") {
+            dropped = p.read_u64()?;
+        } else if key.is("wallNs") {
+            wall_ns = Some(p.read_u64()?);
+        } else if key.is("traceEvents") {
+            anyhow::ensure!(
+                matches!(p.next_event()?, Event::ArrBegin),
+                "{path}: traceEvents is not an array"
+            );
+            loop {
+                match p.next_event()? {
+                    Event::ArrEnd => break,
+                    Event::ObjBegin => {}
+                    _ => anyhow::bail!("{path}: traceEvents[{n_events}] is not an object"),
+                }
+                let mut is_complete = false;
+                let mut has_dur = false;
+                let mut ts: Option<f64> = None;
+                while let Some(k) = p.next_field()? {
+                    if k.is("ph") {
+                        is_complete = p.read_str()?.is("X");
+                    } else if k.is("dur") {
+                        p.read_f64()?;
+                        has_dur = true;
+                    } else if k.is("ts") {
+                        ts = Some(p.read_f64()?);
+                    } else if k.is("tid") {
+                        let tid = p.read_u64()?;
+                        if !tids.contains(&tid) {
+                            tids.push(tid);
+                        }
+                    } else if k.is("args") {
+                        p.expect_obj_begin()?;
+                        while let Some(ak) = p.next_field()? {
+                            if ak.is("self_ns") {
+                                sum_self_ns += p.read_f64()?;
+                            } else {
+                                p.skip_value()?;
+                            }
+                        }
+                    } else {
+                        p.skip_value()?;
+                    }
+                }
+                if is_complete {
+                    anyhow::ensure!(
+                        has_dur,
+                        "{path}: complete (ph:\"X\") event {n_events} has no dur"
+                    );
+                }
+                let ts =
+                    ts.ok_or_else(|| anyhow::anyhow!("{path}: event {n_events} has no ts"))?;
+                anyhow::ensure!(
+                    ts >= last_ts,
+                    "{path}: ts went backwards at event {n_events} ({ts} after {last_ts})"
+                );
+                last_ts = ts;
+                n_events += 1;
+                if is_complete {
+                    n_complete += 1;
+                }
+            }
+        } else {
+            p.skip_value()?;
+        }
+    }
+    p.expect_end()?;
+
+    anyhow::ensure!(n_complete > 0, "{path}: no complete (ph:\"X\") events recorded");
+    let wall_ns =
+        wall_ns.ok_or_else(|| anyhow::anyhow!("{path}: missing top-level wallNs"))?;
+
+    // Attribution completeness is only meaningful for a serial timeline: in
+    // a parallel run the summed self time is busy-thread time, a multiple
+    // of the wall clock.
+    let mut attribution = String::new();
+    if tids.len() == 1 && dropped == 0 && wall_ns > 0 {
+        let ratio = sum_self_ns / wall_ns as f64;
+        attribution = format!("   self/wall {ratio:.4}");
+        anyhow::ensure!(
+            (ratio - 1.0).abs() <= 0.05,
+            "{path}: per-phase self times sum to {:.3} ms but wallNs is {:.3} ms \
+             (ratio {ratio:.4}, outside the 5% attribution gate)",
+            sum_self_ns / 1e6,
+            wall_ns as f64 / 1e6
+        );
+    }
+    println!(
+        "{path}: OK — {n_events} events ({n_complete} complete), {} thread(s), {} dropped{attribution}",
+        tids.len(),
+        dropped
+    );
+    Ok(())
 }
 
 fn print_help() {
@@ -248,6 +420,7 @@ fn print_help() {
         ("dataflows", "four-way OS/WS/IS/dOS comparison on a workload"),
         ("pareto", "Pareto front (cycles/area/power) of a design space"),
         ("memory", "off-chip bandwidth demand + feasibility per memory tech"),
+        ("check-trace", "validate a --trace artifact (schema, round-trip, attribution)"),
     ] {
         println!("  {c:<12} {about}");
     }
@@ -345,10 +518,13 @@ fn run_campaign(campaign: &Campaign, args: &Args) -> anyhow::Result<CampaignOutc
 
 fn report_resume(outcome: &CampaignOutcome) {
     if outcome.resumed > 0 {
+        let fp = &outcome.fingerprint_hash[..outcome.fingerprint_hash.len().min(12)];
         eprintln!(
-            "resumed {} completed points from the JSONL stream ({} evaluated fresh)",
+            "resumed {} completed points from the JSONL stream ({} skipped as stale, \
+             {} evaluated fresh; stream fingerprint {fp})",
             outcome.resumed,
-            outcome.completed - outcome.resumed
+            outcome.skipped,
+            outcome.completed - outcome.resumed,
         );
     }
 }
@@ -399,6 +575,14 @@ fn stream_campaign_json(campaign: &Campaign, args: &Args) -> anyhow::Result<Camp
     wbuf.clear();
     outcome.cache.write_compact(&mut wbuf);
     out.write_all(wbuf.as_str().as_bytes())?;
+    // With tracing on, the per-phase attribution table rides next to the
+    // cache stats (same streamed-writer discipline, sorted keys).
+    if cube3d::obs::enabled() {
+        out.write_all(b",\"phases\":")?;
+        wbuf.clear();
+        cube3d::obs::write_phases_compact(&mut wbuf);
+        out.write_all(wbuf.as_str().as_bytes())?;
+    }
     out.write_all(b"}\n")?;
     out.flush()?;
     report_resume(&outcome);
@@ -864,7 +1048,7 @@ fn network_json(s: &Scenario, m: &cube3d::schedule::NetworkMetrics, feasible: Op
             ])
         })
         .collect();
-    obj([
+    let mut doc = obj([
         ("workload", Json::Str(m.workload.clone())),
         ("dataflow", Json::Str(s.dataflow.short_name().to_string())),
         ("vertical_tech", Json::Str(s.vtech.name().to_string())),
@@ -892,7 +1076,15 @@ fn network_json(s: &Scenario, m: &cube3d::schedule::NetworkMetrics, feasible: Op
             "cache",
             cube3d::eval::shared_schedule_evaluator().cache_stats().to_json(),
         ),
-    ])
+    ]);
+    // With tracing on, the per-phase attribution table rides next to the
+    // cache stats (the `Json::Obj` BTreeMap keeps the keys sorted).
+    if cube3d::obs::enabled() {
+        if let Json::Obj(fields) = &mut doc {
+            fields.insert("phases".to_string(), cube3d::obs::phases_to_json());
+        }
+    }
+    doc
 }
 
 fn cmd_schedule(args: &Args) -> anyhow::Result<()> {

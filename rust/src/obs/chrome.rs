@@ -1,0 +1,64 @@
+//! Chrome trace-event (`chrome://tracing` / Perfetto) export.
+//!
+//! Emits the object form `{"traceEvents":[...],"wallNs":N}` with one
+//! complete (`ph:"X"`) event per recorded span, streamed through
+//! `util::json_stream::JsonWriter` with keys in sorted order — so the file
+//! round-trips bit-identically through `restream_compact` (pinned by the
+//! `check-trace` subcommand and `tests/obs.rs`). Timestamps/durations are in
+//! microseconds per the trace-event spec; events are sorted by start time so
+//! `ts` is non-decreasing. `args` carries the span's exact `self_ns` (used
+//! by `check-trace` to compare attributed self time against `wallNs`) and
+//! its unit counter.
+
+use super::recorder::{now_ns, snapshot_events};
+use crate::util::json_stream::JsonWriter;
+
+/// Stream the full trace into `w` (object keys in sorted order).
+pub fn write_chrome_trace(w: &mut JsonWriter) {
+    // Pin the wall clock before serializing: `wallNs` is the traced-run
+    // duration, and must not absorb the export's own serialization time
+    // (check-trace compares the events' summed self time against it).
+    let wall_ns = now_ns();
+    let (events, dropped) = snapshot_events();
+    w.begin_obj();
+    w.key("droppedEvents");
+    w.num_u64(dropped);
+    w.key("traceEvents");
+    w.begin_arr();
+    for e in &events {
+        w.begin_obj();
+        w.key("args");
+        w.begin_obj();
+        w.key("counter");
+        w.num_u64(e.counter);
+        w.key("self_ns");
+        w.num_u64(e.self_ns);
+        w.end();
+        w.key("cat");
+        w.str(e.phase.category());
+        w.key("dur");
+        w.num_f64(e.end_ns.saturating_sub(e.start_ns) as f64 / 1000.0);
+        w.key("name");
+        w.str(e.phase.name());
+        w.key("ph");
+        w.str("X");
+        w.key("pid");
+        w.num_u64(1);
+        w.key("tid");
+        w.num_u64(e.tid);
+        w.key("ts");
+        w.num_f64(e.start_ns as f64 / 1000.0);
+        w.end();
+    }
+    w.end();
+    w.key("wallNs");
+    w.num_u64(wall_ns);
+    w.end();
+}
+
+/// The full trace as one compact JSON string.
+pub fn chrome_trace_string() -> String {
+    let mut w = JsonWriter::with_capacity(1 << 16);
+    write_chrome_trace(&mut w);
+    w.into_string()
+}

@@ -1,0 +1,25 @@
+//! Unified low-overhead observability: span tracing, per-phase wall-time
+//! attribution, Chrome-trace export, and the campaign progress heartbeat.
+//!
+//! The recorder is process-global and off by default; every instrumented
+//! call site pays one relaxed atomic load until `enable()` is called (CLI
+//! `--trace` / `--trace-summary`). See DESIGN.md §2g for the architecture
+//! and `tests/obs.rs` for the end-to-end pins.
+//!
+//! ```no_run
+//! let _span = cube3d::obs::span(cube3d::obs::Phase::EvalPoint);
+//! // ... work; the span records itself when the guard drops ...
+//! ```
+
+mod chrome;
+mod progress;
+mod recorder;
+mod summary;
+
+pub use chrome::{chrome_trace_string, write_chrome_trace};
+pub use progress::Heartbeat;
+pub use recorder::{
+    count, disable, enable, enabled, now_ns, phase_stats, reset, snapshot_events, span, EventRec,
+    Phase, PhaseStat, SpanGuard, total_self_ns, N_PHASES, RING_CAPACITY,
+};
+pub use summary::{phases_to_json, render_summary, write_phases_compact};

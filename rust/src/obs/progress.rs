@@ -1,0 +1,92 @@
+//! Campaign progress heartbeat.
+//!
+//! A million-point campaign used to run silently until the final summary;
+//! the heartbeat prints a stderr line at most once a second — and nothing at
+//! all for runs shorter than a second, so smoke tests and CI greps stay
+//! clean. Thread-safe: chunk workers tick it concurrently.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+const PERIOD: Duration = Duration::from_secs(1);
+
+pub struct Heartbeat {
+    label: &'static str,
+    total: u64,
+    done0: u64,
+    start: Instant,
+    done: AtomicU64,
+    front: AtomicU64,
+    last: Mutex<Instant>,
+}
+
+impl Heartbeat {
+    /// `total` is the full grid size; `done0` pre-counts resumed points so
+    /// rates and ETA only cover fresh work.
+    pub fn new(label: &'static str, total: u64, done0: u64) -> Heartbeat {
+        let now = Instant::now();
+        Heartbeat {
+            label,
+            total,
+            done0,
+            start: now,
+            done: AtomicU64::new(done0),
+            front: AtomicU64::new(0),
+            last: Mutex::new(now),
+        }
+    }
+
+    /// Record `n` more completed points and the current Pareto front size;
+    /// emits a progress line if a full period has elapsed since the last.
+    pub fn tick(&self, n: u64, front_len: u64) {
+        let done = self.done.fetch_add(n, Ordering::Relaxed) + n;
+        self.front.store(front_len, Ordering::Relaxed);
+        let Ok(mut last) = self.last.try_lock() else {
+            return; // another worker is emitting; skip
+        };
+        if last.elapsed() < PERIOD {
+            return;
+        }
+        *last = Instant::now();
+        self.emit(done);
+    }
+
+    fn emit(&self, done: u64) {
+        let elapsed = self.start.elapsed().as_secs_f64();
+        let fresh = done.saturating_sub(self.done0);
+        let rate = if elapsed > 0.0 { fresh as f64 / elapsed } else { 0.0 };
+        let remaining = self.total.saturating_sub(done);
+        let eta = if rate > 0.0 {
+            format_secs(remaining as f64 / rate)
+        } else {
+            "?".to_string()
+        };
+        let pct = if self.total > 0 {
+            done as f64 * 100.0 / self.total as f64
+        } else {
+            100.0
+        };
+        eprintln!(
+            "[{}] {}/{} points ({:.1}%) | {:.1} pts/s | front {} | eta {}",
+            self.label,
+            done,
+            self.total,
+            pct,
+            rate,
+            self.front.load(Ordering::Relaxed),
+            eta,
+        );
+    }
+
+}
+
+fn format_secs(s: f64) -> String {
+    if s >= 3600.0 {
+        format!("{:.1}h", s / 3600.0)
+    } else if s >= 60.0 {
+        format!("{:.1}m", s / 60.0)
+    } else {
+        format!("{:.1}s", s)
+    }
+}

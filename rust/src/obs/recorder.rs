@@ -1,0 +1,500 @@
+//! The span recorder: a process-global, lock-free tracer.
+//!
+//! Design constraints (see DESIGN.md §2g):
+//!
+//! * **Disabled cost is one relaxed atomic load.** `span()` checks a
+//!   process-wide `AtomicBool` and returns an inert guard without touching
+//!   the clock, thread-locals, or any shared state. `bench_sweep` measures
+//!   this path and CI gates it below 1% of a serial sweep's per-point cost.
+//! * **No locks on the hot path.** Completed spans land in a per-thread ring
+//!   buffer of atomic slots (single writer, `Release`-published head) and in
+//!   a global per-phase aggregate table updated with relaxed RMWs. The only
+//!   mutex is taken once per thread, at ring registration.
+//! * **Exact self-time without tree walks.** Each thread carries the current
+//!   parent span id and a child-duration accumulator in thread-locals; a
+//!   guard's drop computes `self = duration − accumulated child time` in
+//!   O(1), so the attribution table is exact even when rings wrap.
+//! * **Bounded memory under scoped-thread churn.** `util::threadpool` spawns
+//!   fresh scoped threads per `par_map` call; rings are recycled through a
+//!   free list when their thread exits, so a million-chunk campaign reuses
+//!   the same handful of rings instead of leaking one per spawn.
+
+use std::cell::{Cell, OnceCell};
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// One identified stretch of work. Names are `subsystem/step`, which is also
+/// the Chrome-trace `cat`/`name` split.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+#[repr(usize)]
+pub enum Phase {
+    CliRun,
+    EvalPoint,
+    EvalCacheLookup,
+    EvalCacheHit,
+    EvalCacheMiss,
+    EvalAnalytical,
+    EvalDataflowOptimize,
+    EvalExactSim,
+    EvalArea,
+    EvalPower,
+    EvalThermalSolve,
+    EvalNetworkPass,
+    CampaignRun,
+    CampaignEnumerate,
+    CampaignDispatch,
+    CampaignEvaluateBatch,
+    CampaignParetoInsert,
+    CampaignJsonlFlush,
+    CampaignResumeMerge,
+    SchedNetwork,
+    SchedBaseline2d,
+    SchedTierSearch,
+    SchedPartition,
+    ServeAdmission,
+    ServeBatchAssembly,
+    ServeExecute,
+    ServeReply,
+    ServeAnalyze,
+}
+
+pub const N_PHASES: usize = 28;
+
+impl Phase {
+    pub const ALL: [Phase; N_PHASES] = [
+        Phase::CliRun,
+        Phase::EvalPoint,
+        Phase::EvalCacheLookup,
+        Phase::EvalCacheHit,
+        Phase::EvalCacheMiss,
+        Phase::EvalAnalytical,
+        Phase::EvalDataflowOptimize,
+        Phase::EvalExactSim,
+        Phase::EvalArea,
+        Phase::EvalPower,
+        Phase::EvalThermalSolve,
+        Phase::EvalNetworkPass,
+        Phase::CampaignRun,
+        Phase::CampaignEnumerate,
+        Phase::CampaignDispatch,
+        Phase::CampaignEvaluateBatch,
+        Phase::CampaignParetoInsert,
+        Phase::CampaignJsonlFlush,
+        Phase::CampaignResumeMerge,
+        Phase::SchedNetwork,
+        Phase::SchedBaseline2d,
+        Phase::SchedTierSearch,
+        Phase::SchedPartition,
+        Phase::ServeAdmission,
+        Phase::ServeBatchAssembly,
+        Phase::ServeExecute,
+        Phase::ServeReply,
+        Phase::ServeAnalyze,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::CliRun => "cli/run",
+            Phase::EvalPoint => "eval/point",
+            Phase::EvalCacheLookup => "eval/cache_lookup",
+            Phase::EvalCacheHit => "eval/cache_hit",
+            Phase::EvalCacheMiss => "eval/cache_miss",
+            Phase::EvalAnalytical => "eval/analytical",
+            Phase::EvalDataflowOptimize => "eval/dataflow_optimize",
+            Phase::EvalExactSim => "eval/exact_sim",
+            Phase::EvalArea => "eval/area",
+            Phase::EvalPower => "eval/power",
+            Phase::EvalThermalSolve => "eval/thermal_solve",
+            Phase::EvalNetworkPass => "eval/network_pass",
+            Phase::CampaignRun => "campaign/run",
+            Phase::CampaignEnumerate => "campaign/enumerate",
+            Phase::CampaignDispatch => "campaign/dispatch",
+            Phase::CampaignEvaluateBatch => "campaign/evaluate_batch",
+            Phase::CampaignParetoInsert => "campaign/pareto_insert",
+            Phase::CampaignJsonlFlush => "campaign/jsonl_flush",
+            Phase::CampaignResumeMerge => "campaign/resume_merge",
+            Phase::SchedNetwork => "schedule/network",
+            Phase::SchedBaseline2d => "schedule/baseline_2d",
+            Phase::SchedTierSearch => "schedule/tier_search",
+            Phase::SchedPartition => "schedule/partition",
+            Phase::ServeAdmission => "serve/admission",
+            Phase::ServeBatchAssembly => "serve/batch_assembly",
+            Phase::ServeExecute => "serve/execute",
+            Phase::ServeReply => "serve/reply",
+            Phase::ServeAnalyze => "serve/analyze",
+        }
+    }
+
+    /// The `subsystem` half of the name (Chrome-trace `cat`).
+    pub fn category(self) -> &'static str {
+        let n = self.name();
+        &n[..n.find('/').unwrap_or(n.len())]
+    }
+
+    /// Map a `CostModel::name()` onto its evaluator phase.
+    pub fn for_model(model_name: &str) -> Phase {
+        match model_name {
+            "analytical" => Phase::EvalAnalytical,
+            "area" => Phase::EvalArea,
+            "power" => Phase::EvalPower,
+            "thermal" => Phase::EvalThermalSolve,
+            _ => Phase::EvalPoint,
+        }
+    }
+
+    #[inline]
+    fn index(self) -> usize {
+        self as usize
+    }
+
+    fn from_index(i: u64) -> Option<Phase> {
+        Phase::ALL.get(i as usize).copied()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Global state
+// ---------------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the recorder epoch (pinned at `enable()`).
+pub fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+/// Turn the recorder on. Idempotent; also pins the trace epoch.
+pub fn enable() {
+    epoch();
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Turn the recorder off. Spans already open finish recording normally
+/// (guards latch the enabled state at creation).
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Clear every ring and the aggregate table (test support; callers must
+/// ensure no spans are concurrently recording).
+pub fn reset() {
+    for agg in AGG.iter() {
+        agg.count.store(0, Ordering::Relaxed);
+        agg.total_ns.store(0, Ordering::Relaxed);
+        agg.self_ns.store(0, Ordering::Relaxed);
+        agg.max_ns.store(0, Ordering::Relaxed);
+        agg.counter.store(0, Ordering::Relaxed);
+    }
+    for buf in REGISTRY.lock().unwrap().iter() {
+        buf.head.store(0, Ordering::Release);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-phase aggregate table (exact, ring-wrap independent)
+// ---------------------------------------------------------------------------
+
+struct PhaseAgg {
+    count: AtomicU64,
+    total_ns: AtomicU64,
+    self_ns: AtomicU64,
+    max_ns: AtomicU64,
+    counter: AtomicU64,
+}
+
+impl PhaseAgg {
+    const NEW: PhaseAgg = PhaseAgg {
+        count: AtomicU64::new(0),
+        total_ns: AtomicU64::new(0),
+        self_ns: AtomicU64::new(0),
+        max_ns: AtomicU64::new(0),
+        counter: AtomicU64::new(0),
+    };
+
+    fn record(&self, dur_ns: u64, self_ns: u64, counter: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.total_ns.fetch_add(dur_ns, Ordering::Relaxed);
+        self.self_ns.fetch_add(self_ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(dur_ns, Ordering::Relaxed);
+        self.counter.fetch_add(counter, Ordering::Relaxed);
+    }
+}
+
+static AGG: [PhaseAgg; N_PHASES] = [PhaseAgg::NEW; N_PHASES];
+
+/// Aggregated attribution for one phase.
+#[derive(Copy, Clone, Debug)]
+pub struct PhaseStat {
+    pub phase: Phase,
+    pub count: u64,
+    pub total_ns: u64,
+    pub self_ns: u64,
+    pub max_ns: u64,
+    pub counter: u64,
+}
+
+/// Snapshot of every phase with at least one recording.
+pub fn phase_stats() -> Vec<PhaseStat> {
+    Phase::ALL
+        .iter()
+        .filter_map(|&phase| {
+            let agg = &AGG[phase.index()];
+            let count = agg.count.load(Ordering::Relaxed);
+            if count == 0 {
+                return None;
+            }
+            Some(PhaseStat {
+                phase,
+                count,
+                total_ns: agg.total_ns.load(Ordering::Relaxed),
+                self_ns: agg.self_ns.load(Ordering::Relaxed),
+                max_ns: agg.max_ns.load(Ordering::Relaxed),
+                counter: agg.counter.load(Ordering::Relaxed),
+            })
+        })
+        .collect()
+}
+
+/// Sum of self-times across all phases — the recorder's total attributed
+/// busy time (equals traced wall time on a single-threaded run).
+pub fn total_self_ns() -> u64 {
+    AGG.iter().map(|a| a.self_ns.load(Ordering::Relaxed)).sum()
+}
+
+/// Bump a phase's occurrence count without timing anything (cache hit/miss
+/// style events that have no duration of their own).
+#[inline]
+pub fn count(phase: Phase) {
+    if !enabled() {
+        return;
+    }
+    AGG[phase.index()].count.fetch_add(1, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// Per-thread ring buffers
+// ---------------------------------------------------------------------------
+
+/// Ring capacity per thread lane (power of two). ~16k spans ≈ 786 KiB of
+/// atomic slots; long runs wrap (Chrome export keeps the newest spans, the
+/// aggregate table stays complete).
+pub const RING_CAPACITY: usize = 1 << 14;
+
+struct Slot {
+    phase: AtomicU64,
+    parent: AtomicU64,
+    start: AtomicU64,
+    end: AtomicU64,
+    self_ns: AtomicU64,
+    counter: AtomicU64,
+}
+
+pub(crate) struct ThreadBuf {
+    tid: u64,
+    head: AtomicU64,
+    slots: Box<[Slot]>,
+}
+
+impl ThreadBuf {
+    fn new(tid: u64) -> ThreadBuf {
+        let slots = (0..RING_CAPACITY)
+            .map(|_| Slot {
+                phase: AtomicU64::new(0),
+                parent: AtomicU64::new(0),
+                start: AtomicU64::new(0),
+                end: AtomicU64::new(0),
+                self_ns: AtomicU64::new(0),
+                counter: AtomicU64::new(0),
+            })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        ThreadBuf {
+            tid,
+            head: AtomicU64::new(0),
+            slots,
+        }
+    }
+
+    /// Single-writer push: fill the slot relaxed, publish the head Release.
+    fn push(&self, phase: Phase, parent: u64, start: u64, end: u64, self_ns: u64, counter: u64) {
+        let h = self.head.load(Ordering::Relaxed);
+        let slot = &self.slots[(h as usize) & (RING_CAPACITY - 1)];
+        slot.phase.store(phase.index() as u64, Ordering::Relaxed);
+        slot.parent.store(parent, Ordering::Relaxed);
+        slot.start.store(start, Ordering::Relaxed);
+        slot.end.store(end, Ordering::Relaxed);
+        slot.self_ns.store(self_ns, Ordering::Relaxed);
+        slot.counter.store(counter, Ordering::Relaxed);
+        self.head.store(h + 1, Ordering::Release);
+    }
+}
+
+/// Every ring ever created, for export. Rings outlive their threads (serve
+/// workers' spans survive worker exit).
+static REGISTRY: Mutex<Vec<Arc<ThreadBuf>>> = Mutex::new(Vec::new());
+
+/// Rings whose owning thread has exited, ready for reuse by the next thread
+/// (scoped-threadpool churn would otherwise allocate one ring per spawn).
+static FREE: Mutex<Vec<Arc<ThreadBuf>>> = Mutex::new(Vec::new());
+
+struct BufHandle(Arc<ThreadBuf>);
+
+impl Drop for BufHandle {
+    fn drop(&mut self) {
+        if let Ok(mut free) = FREE.lock() {
+            free.push(self.0.clone());
+        }
+    }
+}
+
+thread_local! {
+    static CUR_PARENT: Cell<u64> = const { Cell::new(0) };
+    static CHILD_ACC: Cell<u64> = const { Cell::new(0) };
+    static BUF: OnceCell<BufHandle> = const { OnceCell::new() };
+}
+
+fn with_thread_buf(f: impl FnOnce(&ThreadBuf)) {
+    let _ = BUF.try_with(|cell| {
+        let handle = cell.get_or_init(|| {
+            let recycled = FREE.lock().unwrap().pop();
+            let buf = recycled.unwrap_or_else(|| {
+                let mut reg = REGISTRY.lock().unwrap();
+                let buf = Arc::new(ThreadBuf::new(reg.len() as u64));
+                reg.push(buf.clone());
+                buf
+            });
+            BufHandle(buf)
+        });
+        f(&handle.0);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Spans
+// ---------------------------------------------------------------------------
+
+/// RAII scope guard for one span. Created by [`span`]; records on drop.
+pub struct SpanGuard {
+    active: bool,
+    phase: Phase,
+    start: u64,
+    saved_parent: u64,
+    saved_child: u64,
+    counter: u64,
+    // Parent/child bookkeeping lives in thread-locals: keep guards on the
+    // thread that opened them.
+    _not_send: PhantomData<*const ()>,
+}
+
+/// Open a span. When the recorder is disabled this is a single relaxed
+/// atomic load and an inert guard.
+#[inline]
+pub fn span(phase: Phase) -> SpanGuard {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return SpanGuard {
+            active: false,
+            phase,
+            start: 0,
+            saved_parent: 0,
+            saved_child: 0,
+            counter: 0,
+            _not_send: PhantomData,
+        };
+    }
+    let id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+    let saved_parent = CUR_PARENT.with(|c| c.replace(id));
+    let saved_child = CHILD_ACC.with(|c| c.replace(0));
+    SpanGuard {
+        active: true,
+        phase,
+        start: now_ns(),
+        saved_parent,
+        saved_child,
+        counter: 0,
+        _not_send: PhantomData,
+    }
+}
+
+impl SpanGuard {
+    /// Attach a unit count to this span (items batched, bytes flushed, …).
+    #[inline]
+    pub fn add(&mut self, n: u64) {
+        if self.active {
+            self.counter += n;
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        let end = now_ns();
+        let dur = end.saturating_sub(self.start);
+        let child = CHILD_ACC.with(|c| c.get());
+        let self_ns = dur.saturating_sub(child);
+        CUR_PARENT.with(|c| c.set(self.saved_parent));
+        CHILD_ACC.with(|c| c.set(self.saved_child.saturating_add(dur)));
+        AGG[self.phase.index()].record(dur, self_ns, self.counter);
+        let (phase, parent, start, counter) = (self.phase, self.saved_parent, self.start, self.counter);
+        with_thread_buf(|buf| buf.push(phase, parent, start, end, self_ns, counter));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Export snapshot
+// ---------------------------------------------------------------------------
+
+/// One completed span read back out of a ring.
+#[derive(Copy, Clone, Debug)]
+pub struct EventRec {
+    pub tid: u64,
+    pub phase: Phase,
+    pub parent: u64,
+    pub start_ns: u64,
+    pub end_ns: u64,
+    pub self_ns: u64,
+    pub counter: u64,
+}
+
+/// Read every ring (Acquire on each head) and return the retained spans
+/// sorted by start time, plus the number lost to ring wrap.
+pub fn snapshot_events() -> (Vec<EventRec>, u64) {
+    let mut events = Vec::new();
+    let mut dropped = 0u64;
+    for buf in REGISTRY.lock().unwrap().iter() {
+        let head = buf.head.load(Ordering::Acquire);
+        let n = (head as usize).min(RING_CAPACITY);
+        dropped += head.saturating_sub(RING_CAPACITY as u64);
+        for slot in buf.slots.iter().take(n) {
+            let Some(phase) = Phase::from_index(slot.phase.load(Ordering::Relaxed)) else {
+                continue;
+            };
+            events.push(EventRec {
+                tid: buf.tid,
+                phase,
+                parent: slot.parent.load(Ordering::Relaxed),
+                start_ns: slot.start.load(Ordering::Relaxed),
+                end_ns: slot.end.load(Ordering::Relaxed),
+                self_ns: slot.self_ns.load(Ordering::Relaxed),
+                counter: slot.counter.load(Ordering::Relaxed),
+            });
+        }
+    }
+    events.sort_by_key(|e| (e.start_ns, e.end_ns, e.tid));
+    (events, dropped)
+}

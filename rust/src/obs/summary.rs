@@ -1,0 +1,122 @@
+//! The per-phase wall-time attribution table.
+//!
+//! Two renderings of the same aggregate snapshot: an aligned text table for
+//! the CLI (`--trace-summary`) and a JSON object for `--json` dumps, keyed
+//! by phase name with per-phase `{count, counter, max_us, mean_us, self_ms,
+//! total_ms}`. The JSON comes in both tree (`Json`) and streaming
+//! (`JsonWriter`) forms, bit-identical when keys are fed sorted (pinned by a
+//! unit test below).
+
+use super::recorder::{phase_stats, PhaseStat};
+use crate::util::json::{obj, Json};
+use crate::util::json_stream::JsonWriter;
+
+fn sorted_stats() -> Vec<PhaseStat> {
+    let mut stats = phase_stats();
+    stats.sort_by_key(|s| s.phase.name());
+    stats
+}
+
+/// The attribution table as a tree `Json` object (phase name → stats).
+pub fn phases_to_json() -> Json {
+    let fields = |s: &PhaseStat| {
+        obj([
+            ("count", Json::Num(s.count as f64)),
+            ("counter", Json::Num(s.counter as f64)),
+            ("max_us", Json::Num(s.max_ns as f64 / 1e3)),
+            ("mean_us", Json::Num(mean_us(s))),
+            ("self_ms", Json::Num(s.self_ns as f64 / 1e6)),
+            ("total_ms", Json::Num(s.total_ns as f64 / 1e6)),
+        ])
+    };
+    Json::Obj(
+        sorted_stats()
+            .iter()
+            .map(|s| (s.phase.name().to_string(), fields(s)))
+            .collect(),
+    )
+}
+
+/// Stream the attribution table into `w` (bit-identical to
+/// `phases_to_json().to_string_compact()`).
+pub fn write_phases_compact(w: &mut JsonWriter) {
+    w.begin_obj();
+    for s in sorted_stats() {
+        w.key(s.phase.name());
+        w.begin_obj();
+        w.key("count");
+        w.num_f64(s.count as f64);
+        w.key("counter");
+        w.num_f64(s.counter as f64);
+        w.key("max_us");
+        w.num_f64(s.max_ns as f64 / 1e3);
+        w.key("mean_us");
+        w.num_f64(mean_us(&s));
+        w.key("self_ms");
+        w.num_f64(s.self_ns as f64 / 1e6);
+        w.key("total_ms");
+        w.num_f64(s.total_ns as f64 / 1e6);
+        w.end();
+    }
+    w.end();
+}
+
+fn mean_us(s: &PhaseStat) -> f64 {
+    if s.count == 0 {
+        0.0
+    } else {
+        s.total_ns as f64 / s.count as f64 / 1e3
+    }
+}
+
+/// Render the attribution table as aligned text (one line per phase, sorted
+/// by self time descending, totals row last).
+pub fn render_summary() -> String {
+    let mut stats = phase_stats();
+    stats.sort_by(|a, b| b.self_ns.cmp(&a.self_ns));
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<26} {:>10} {:>12} {:>12} {:>11} {:>11} {:>10}\n",
+        "phase", "count", "total(ms)", "self(ms)", "mean(us)", "max(us)", "counter"
+    ));
+    let mut sum_self = 0u64;
+    for s in &stats {
+        sum_self += s.self_ns;
+        out.push_str(&format!(
+            "{:<26} {:>10} {:>12.3} {:>12.3} {:>11.1} {:>11.1} {:>10}\n",
+            s.phase.name(),
+            s.count,
+            s.total_ns as f64 / 1e6,
+            s.self_ns as f64 / 1e6,
+            mean_us(s),
+            s.max_ns as f64 / 1e3,
+            s.counter,
+        ));
+    }
+    out.push_str(&format!(
+        "{:<26} {:>10} {:>12} {:>12.3}\n",
+        "(sum of self)",
+        "",
+        "",
+        sum_self as f64 / 1e6
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The streamed table must stay bit-identical to the tree rendering
+    /// (same sorted-key discipline as every other write_compact pair).
+    #[test]
+    fn stream_matches_tree() {
+        // Whatever the global recorder holds at this point (possibly empty,
+        // possibly populated by a concurrently-run test) — both renderings
+        // read the same snapshot-free aggregate, so compare them directly.
+        let tree = phases_to_json().to_string_compact();
+        let mut w = JsonWriter::new();
+        write_phases_compact(&mut w);
+        assert_eq!(tree, w.as_str());
+    }
+}

@@ -129,6 +129,7 @@ impl NetworkMetrics {
 /// state; the spec defaults to [`ScheduleSpec::default`] when the scenario
 /// carries none.
 pub fn evaluate_network(ev: &Evaluator, s: &Scenario) -> Result<NetworkMetrics> {
+    let _span = crate::obs::span(crate::obs::Phase::SchedNetwork);
     if matches!(s.array, ArrayChoice::Fixed(_)) {
         bail!("schedule mode optimizes per-stage arrays; pinned-array scenarios are not supported");
     }
@@ -148,21 +149,28 @@ pub fn evaluate_network(ev: &Evaluator, s: &Scenario) -> Result<NetworkMetrics> 
     // The 2D reference — every layer back-to-back on the whole budget, one
     // tier — is independent of the stack height; compute it once.
     let gemms = s.workload.gemms();
-    let base_points: Vec<Scenario> = gemms
-        .iter()
-        .map(|&g| layer_point(s, g, s.mac_budget))
-        .collect::<Result<Vec<_>>>()?;
-    let base_metrics = ev.evaluate_batch(&base_points);
+    let base_metrics = {
+        let _base_span = crate::obs::span(crate::obs::Phase::SchedBaseline2d);
+        let base_points: Vec<Scenario> = gemms
+            .iter()
+            .map(|&g| layer_point(s, g, s.mac_budget))
+            .collect::<Result<Vec<_>>>()?;
+        ev.evaluate_batch(&base_points)
+    };
     let mut baseline_2d = 0u64;
     for m in &base_metrics {
         baseline_2d += cycles_of(m)?;
     }
     let mut best: Option<(NetworkMetrics, Vec<Metrics>)> = None;
-    for &t in &tier_candidates {
-        let (m, pts) = evaluate_at_tiers(ev, s, &spec, t, &gemms, baseline_2d)?;
-        // Ties favor the shorter stack (candidates ascend).
-        if best.as_ref().map_or(true, |(b, _)| m.interval_cycles < b.interval_cycles) {
-            best = Some((m, pts));
+    {
+        let mut search_span = crate::obs::span(crate::obs::Phase::SchedTierSearch);
+        search_span.add(tier_candidates.len() as u64);
+        for &t in &tier_candidates {
+            let (m, pts) = evaluate_at_tiers(ev, s, &spec, t, &gemms, baseline_2d)?;
+            // Ties favor the shorter stack (candidates ascend).
+            if best.as_ref().map_or(true, |(b, _)| m.interval_cycles < b.interval_cycles) {
+                best = Some((m, pts));
+            }
         }
     }
     let (mut m, stage_points) = best.expect("at least one tier candidate evaluated");
@@ -226,7 +234,10 @@ fn evaluate_at_tiers(
     }
     let boundary_cycles: Vec<u64> = btraffic.iter().map(|b| b.map_or(0, |t| t.cycles)).collect();
 
-    let part = partition(spec.strategy, &per_layer, &boundary_cycles, tiers)?;
+    let part = {
+        let _span = crate::obs::span(crate::obs::Phase::SchedPartition);
+        partition(spec.strategy, &per_layer, &boundary_cycles, tiers)?
+    };
     let mut stages = Vec::with_capacity(part.stages.len());
     let mut stage_cycles = Vec::with_capacity(part.stages.len());
     let mut traffic_bytes = 0u64;

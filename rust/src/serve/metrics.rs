@@ -298,6 +298,17 @@ impl ShardMetrics {
         }
     }
 
+    /// Fraction of admission decisions that bounced: `rejected / (submitted
+    /// + rejected)` (rejections never reach `submitted`). 0 when idle.
+    pub fn reject_rate(&self) -> f64 {
+        let offered = self.submitted + self.rejected;
+        if offered == 0 {
+            0.0
+        } else {
+            self.rejected as f64 / offered as f64
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         obj([
             ("shard", Json::Num(self.shard as f64)),
@@ -307,6 +318,7 @@ impl ShardMetrics {
             ("completed", Json::Num(self.completed as f64)),
             ("failed", Json::Num(self.failed as f64)),
             ("rejected", Json::Num(self.rejected as f64)),
+            ("reject_rate", Json::Num(self.reject_rate())),
             ("analyze", Json::Num(self.analyze as f64)),
             ("batches", Json::Num(self.batches as f64)),
             ("batch_occupancy", Json::Num(self.batch_occupancy())),
@@ -347,6 +359,8 @@ impl ShardMetrics {
         w.bool(self.panicked);
         w.key("peak_depth");
         w.num_u64(self.peak_depth);
+        w.key("reject_rate");
+        w.num_f64(self.reject_rate());
         w.key("rejected");
         w.num_u64(self.rejected);
         w.key("shard");
@@ -434,6 +448,17 @@ impl PoolMetrics {
         h
     }
 
+    /// The evaluator cache's hit fraction over this pool's lifetime:
+    /// `hits / (hits + misses)`. 0 before the first lookup.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let lookups = self.cache.hits + self.cache.misses;
+        if lookups == 0 {
+            0.0
+        } else {
+            self.cache.hits as f64 / lookups as f64
+        }
+    }
+
     /// Completed requests per second of wall time.
     pub fn throughput(&self) -> f64 {
         let secs = self.wall.as_secs_f64();
@@ -457,6 +482,7 @@ impl PoolMetrics {
             ("exec_us", self.exec_latency().to_json()),
             ("shards", Json::Arr(self.shards.iter().map(|s| s.to_json()).collect())),
             ("cache", self.cache.to_json()),
+            ("cache_hit_rate", Json::Num(self.cache_hit_rate())),
         ])
     }
 
@@ -470,6 +496,8 @@ impl PoolMetrics {
         w.num_u64(self.accepted());
         w.key("cache");
         self.cache.write_compact(w);
+        w.key("cache_hit_rate");
+        w.num_f64(self.cache_hit_rate());
         w.key("completed");
         w.num_u64(self.completed());
         w.key("exec_us");
@@ -597,6 +625,100 @@ mod tests {
         w.clear();
         pool.write_compact(&mut w);
         assert_eq!(w.as_str(), pool.to_json().to_string_compact());
+
+        // The derived rates are part of the schema: pin key presence and
+        // value in both renderings (9 submitted + 2 rejected; 10/14 cache).
+        assert_eq!(
+            shard.to_json().get("reject_rate").and_then(|v| v.as_f64()),
+            Some(2.0 / 11.0)
+        );
+        assert!(w.as_str().contains("\"reject_rate\":"));
+        assert_eq!(
+            pool.to_json().get("cache_hit_rate").and_then(|v| v.as_f64()),
+            Some(10.0 / 14.0)
+        );
+        assert!(w.as_str().contains("\"cache_hit_rate\":"));
+    }
+
+    /// Build a histogram snapshot from explicit µs samples.
+    fn hist_of(samples: &[u64]) -> HistSnapshot {
+        let h = LatencyHistogram::default();
+        for &us in samples {
+            h.record(Duration::from_micros(us));
+        }
+        h.snapshot()
+    }
+
+    fn merged(a: &HistSnapshot, b: &HistSnapshot) -> HistSnapshot {
+        let mut m = a.clone();
+        m.merge(b);
+        m
+    }
+
+    fn snapshots_equal(a: &HistSnapshot, b: &HistSnapshot) -> bool {
+        a.buckets == b.buckets
+            && a.count == b.count
+            && a.sum_ns == b.sum_ns
+            && a.min_us == b.min_us
+            && a.max_us == b.max_us
+    }
+
+    /// Random µs samples, log-uniform across the histogram's range so every
+    /// octave gets traffic.
+    fn random_samples(rng: &mut crate::util::rng::Rng, n: usize) -> Vec<u64> {
+        (0..n).map(|_| rng.gen_log_uniform(1, 20_000_000)).collect()
+    }
+
+    #[test]
+    fn prop_merge_is_commutative_and_associative() {
+        use crate::util::prop::{run_u64s, Config};
+        run_u64s(
+            Config::default().cases(48).seed(0x3D1C_0B5E),
+            &[(0, u64::MAX >> 1)],
+            |vals| {
+                let mut rng = crate::util::rng::Rng::new(vals[0]);
+                let n_a = 1 + rng.gen_range(300) as usize;
+                let n_b = 1 + rng.gen_range(300) as usize;
+                let n_c = 1 + rng.gen_range(300) as usize;
+                let a = hist_of(&random_samples(&mut rng, n_a));
+                let b = hist_of(&random_samples(&mut rng, n_b));
+                let c = hist_of(&random_samples(&mut rng, n_c));
+                let ab = merged(&a, &b);
+                let ba = merged(&b, &a);
+                let ab_c = merged(&ab, &c);
+                let a_bc = merged(&a, &merged(&b, &c));
+                snapshots_equal(&ab, &ba) && snapshots_equal(&ab_c, &a_bc)
+            },
+        );
+    }
+
+    #[test]
+    fn prop_merged_quantiles_track_pooled_samples() {
+        use crate::util::prop::{run_u64s, Config};
+        // One log-bucket spans a factor of 2^(1/BUCKETS_PER_OCTAVE); a
+        // histogram quantile picks the same ordinal sample as the pooled
+        // sorted-sample quantile, so the estimate must land within one
+        // bucket width of it.
+        let width = (1.0 / BUCKETS_PER_OCTAVE as f64).exp2() * 1.0001;
+        run_u64s(Config::default().cases(32), &[(0, u64::MAX >> 1)], |vals| {
+            let mut rng = crate::util::rng::Rng::new(vals[0]);
+            let n_shards = 2 + rng.gen_range(3) as usize;
+            let mut pooled: Vec<u64> = Vec::new();
+            let mut agg = HistSnapshot::default();
+            for _ in 0..n_shards {
+                let samples = random_samples(&mut rng, 1 + rng.gen_range(400) as usize);
+                agg.merge(&hist_of(&samples));
+                pooled.extend_from_slice(&samples);
+            }
+            pooled.sort_unstable();
+            let n = pooled.len();
+            [0.50, 0.95, 0.99].iter().all(|&q| {
+                let ordinal = ((q * n as f64).ceil() as usize).clamp(1, n);
+                let exact = pooled[ordinal - 1] as f64;
+                let est = agg.quantile_us(q);
+                est <= exact * width && est >= exact / width
+            })
+        });
     }
 
     #[test]

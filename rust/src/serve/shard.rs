@@ -154,6 +154,7 @@ impl Shard {
         req: ServeRequest,
         reply: mpsc::Sender<ServeReply>,
     ) -> Result<(), (ServeRequest, Refusal)> {
+        let _span = crate::obs::span(crate::obs::Phase::ServeAdmission);
         let mut inf = lock(&self.inflight);
         if !inf.alive {
             return Err((req, Refusal::Dead));
@@ -343,6 +344,7 @@ impl ShardWorker {
     }
 
     fn serve_analyze(&mut self, ticket: u64, a: AnalyzeRequest) {
+        let _span = crate::obs::span(crate::obs::Phase::ServeAnalyze);
         let Some(pending) = self.take_pending(ticket) else { return };
         let exec_start = Instant::now();
         let scenario = Scenario::builder()
@@ -386,7 +388,11 @@ impl ShardWorker {
     }
 
     fn drain_one_batch(&mut self) {
-        let Some(batch) = self.batcher.next_batch() else { return };
+        let batch = {
+            let _assembly = crate::obs::span(crate::obs::Phase::ServeBatchAssembly);
+            self.batcher.next_batch()
+        };
+        let Some(batch) = batch else { return };
         self.stats.batches.fetch_add(1, Ordering::Relaxed);
         self.stats.batched_jobs.fetch_add(batch.jobs.len() as u64, Ordering::Relaxed);
         for (job, _) in batch.jobs {
@@ -395,6 +401,7 @@ impl ShardWorker {
             let g = job.gemm();
             let (design, speedup) = self.router.design_for(&g);
             let exec_start = Instant::now();
+            let mut exec_span = crate::obs::span(crate::obs::Phase::ServeExecute);
             let (result, folds) = match &batch.plan {
                 ExecutionPlan::Exact { artifact } => {
                     (self.rt.run_gemm(artifact, &job.a, &job.b), 1u64)
@@ -406,6 +413,8 @@ impl ShardWorker {
                     }
                 }
             };
+            exec_span.add(folds);
+            drop(exec_span);
             let exec_time = exec_start.elapsed();
             let total_time = pending.submit.elapsed();
             self.stats.tiled_folds.fetch_add(folds.saturating_sub(1), Ordering::Relaxed);
@@ -436,6 +445,7 @@ impl ShardWorker {
     /// recorded *here*, at reply time, so callers that drop their receiver
     /// (the open-loop load generator) still produce exact accounting.
     fn finish_reply(&self, pending: &Pending, reply: ServeReply, exec: std::time::Duration) {
+        let _span = crate::obs::span(crate::obs::Phase::ServeReply);
         match &reply {
             Ok(_) => self.stats.record_ok(pending.submit.elapsed(), exec),
             Err(_) => {

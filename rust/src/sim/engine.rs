@@ -54,6 +54,7 @@ pub fn simulate_dataflow(
     b: &Matrix<i64>,
     array: &Array3d,
 ) -> SimResult {
+    let _span = crate::obs::span(crate::obs::Phase::EvalExactSim);
     match dataflow {
         Dataflow::OutputStationary => simulate_os_3d_scaleout(a, b, array),
         Dataflow::WeightStationary => simulate_ws(a, b, array),

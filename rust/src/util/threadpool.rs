@@ -8,11 +8,19 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 /// Number of worker threads to use: the machine's parallelism, capped to the
-/// work available.
+/// work available. `CUBE3D_THREADS=N` overrides the hardware count (still
+/// capped to the work available) — `CUBE3D_THREADS=1` forces fully serial
+/// execution, which keeps trace timelines single-threaded.
 pub fn default_workers(n_items: usize) -> usize {
-    let hw = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1);
+    let hw = std::env::var("CUBE3D_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        });
     hw.min(n_items).max(1)
 }
 

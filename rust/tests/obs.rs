@@ -1,0 +1,238 @@
+//! obs end-to-end pins: exact nested-span self/total attribution, the
+//! disabled recorder's zero-footprint guarantee, ring-wrap drop accounting,
+//! and the Chrome-trace artifact (well-formed, sorted timestamps,
+//! bit-identical round-trip through the streaming JSON layer).
+//!
+//! The recorder is process-global, so every test serializes on one mutex
+//! and leaves the recorder disabled and reset behind it.
+
+use cube3d::obs::{self, Phase, RING_CAPACITY};
+use cube3d::util::json::Json;
+use cube3d::util::json_stream::restream_compact;
+use std::sync::{Mutex, MutexGuard};
+
+static RECORDER: Mutex<()> = Mutex::new(());
+
+/// Exclusive use of the global recorder, starting from a clean slate.
+fn recorder_lock() -> MutexGuard<'static, ()> {
+    let guard = RECORDER.lock().unwrap_or_else(|e| e.into_inner());
+    obs::disable();
+    obs::reset();
+    guard
+}
+
+fn teardown() {
+    obs::disable();
+    obs::reset();
+}
+
+/// Busy-wait on the recorder clock so span durations are deterministic
+/// lower bounds (sleep granularity is too coarse for the exact-sum pins).
+fn spin_ns(ns: u64) {
+    let t0 = obs::now_ns();
+    while obs::now_ns().saturating_sub(t0) < ns {
+        std::hint::spin_loop();
+    }
+}
+
+fn stat(phase: Phase) -> obs::PhaseStat {
+    obs::phase_stats()
+        .into_iter()
+        .find(|s| s.phase == phase)
+        .unwrap_or_else(|| panic!("no recordings for {}", phase.name()))
+}
+
+#[test]
+fn nested_spans_attribute_exact_self_time() {
+    let _g = recorder_lock();
+    obs::enable();
+
+    {
+        let _outer = obs::span(Phase::EvalPoint);
+        spin_ns(400_000);
+        {
+            let _inner = obs::span(Phase::EvalAnalytical);
+            spin_ns(600_000);
+        }
+        spin_ns(200_000);
+    }
+    obs::disable();
+
+    let outer = stat(Phase::EvalPoint);
+    let inner = stat(Phase::EvalAnalytical);
+    assert_eq!(outer.count, 1);
+    assert_eq!(inner.count, 1);
+    assert!(inner.total_ns >= 600_000, "inner ran at least the spin time");
+    assert_eq!(inner.total_ns, inner.self_ns, "leaf span: self == total");
+    // Self-time is exact, not sampled: outer self = outer dur − inner dur.
+    assert_eq!(
+        outer.self_ns + inner.total_ns,
+        outer.total_ns,
+        "outer self + child total == outer total, to the nanosecond"
+    );
+    // With one root span, total attributed self time is the root's duration.
+    assert_eq!(obs::total_self_ns(), outer.total_ns);
+
+    // The ring agrees with the aggregate table when nothing wrapped.
+    let (events, dropped) = obs::snapshot_events();
+    assert_eq!(dropped, 0);
+    assert_eq!(events.len(), 2);
+    let ring_self: u64 = events.iter().map(|e| e.self_ns).sum();
+    assert_eq!(ring_self, obs::total_self_ns());
+    teardown();
+}
+
+#[test]
+fn count_events_are_duration_free() {
+    let _g = recorder_lock();
+    obs::enable();
+    obs::count(Phase::EvalCacheHit);
+    obs::count(Phase::EvalCacheHit);
+    obs::count(Phase::EvalCacheMiss);
+    obs::disable();
+
+    let hit = stat(Phase::EvalCacheHit);
+    assert_eq!((hit.count, hit.total_ns, hit.self_ns), (2, 0, 0));
+    assert_eq!(stat(Phase::EvalCacheMiss).count, 1);
+    // Occurrence counters never reach the rings: nothing to export.
+    let (events, dropped) = obs::snapshot_events();
+    assert_eq!((events.len(), dropped), (0, 0));
+    teardown();
+}
+
+#[test]
+fn disabled_recorder_records_nothing() {
+    let _g = recorder_lock();
+    assert!(!obs::enabled());
+
+    let mut s = obs::span(Phase::CampaignRun);
+    s.add(42);
+    drop(s);
+    obs::count(Phase::EvalCacheHit);
+
+    assert!(obs::phase_stats().is_empty());
+    assert_eq!(obs::total_self_ns(), 0);
+    let (events, dropped) = obs::snapshot_events();
+    assert_eq!((events.len(), dropped), (0, 0));
+    teardown();
+}
+
+#[test]
+fn ring_wrap_is_counted_not_silent() {
+    let _g = recorder_lock();
+    obs::enable();
+    let extra = 1000;
+    for _ in 0..RING_CAPACITY + extra {
+        drop(obs::span(Phase::ServeExecute));
+    }
+    obs::disable();
+
+    // The aggregate table is exact even though the ring wrapped.
+    assert_eq!(stat(Phase::ServeExecute).count, (RING_CAPACITY + extra) as u64);
+    let (events, dropped) = obs::snapshot_events();
+    assert_eq!(events.len(), RING_CAPACITY);
+    assert_eq!(dropped, extra as u64);
+    teardown();
+}
+
+#[test]
+fn chrome_trace_is_well_formed_and_round_trips_bit_identically() {
+    let _g = recorder_lock();
+    obs::enable();
+
+    {
+        let mut run = obs::span(Phase::CliRun);
+        run.add(1);
+        {
+            let _e = obs::span(Phase::EvalPoint);
+            spin_ns(100_000);
+            let mut batch = obs::span(Phase::CampaignEvaluateBatch);
+            batch.add(7);
+            spin_ns(100_000);
+        }
+        spin_ns(50_000);
+    }
+    // A second thread contributes events through its own ring.
+    std::thread::spawn(|| {
+        let _s = obs::span(Phase::ServeExecute);
+        spin_ns(100_000);
+    })
+    .join()
+    .unwrap();
+    obs::disable();
+
+    let trace = obs::chrome_trace_string();
+
+    // The artifact must survive the streaming pull-parser → writer loop
+    // byte-for-byte (the check-trace subcommand enforces the same pin).
+    assert_eq!(restream_compact(&trace).unwrap(), trace);
+
+    let doc = Json::parse(&trace).expect("trace parses");
+    assert_eq!(doc.get("droppedEvents").and_then(Json::as_u64), Some(0));
+    let wall_ns = doc.get("wallNs").and_then(Json::as_f64).expect("wallNs");
+    assert!(wall_ns > 0.0);
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents");
+    assert_eq!(events.len(), 4);
+
+    let mut last_ts = f64::MIN;
+    let mut tids = Vec::new();
+    let mut sum_self_ns = 0.0;
+    for e in events {
+        assert_eq!(e.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(e.get("pid").and_then(Json::as_u64), Some(1));
+        let name = e.get("name").and_then(Json::as_str).expect("name");
+        let cat = e.get("cat").and_then(Json::as_str).expect("cat");
+        assert!(name.starts_with(&format!("{cat}/")), "{name} in category {cat}");
+        let ts = e.get("ts").and_then(Json::as_f64).expect("ts");
+        assert!(ts >= last_ts, "events sorted by start time");
+        last_ts = ts;
+        assert!(e.get("dur").and_then(Json::as_f64).is_some(), "complete events carry dur");
+        let tid = e.get("tid").and_then(Json::as_u64).expect("tid");
+        if !tids.contains(&tid) {
+            tids.push(tid);
+        }
+        sum_self_ns += e
+            .get("args")
+            .and_then(|a| a.get("self_ns"))
+            .and_then(Json::as_f64)
+            .expect("args.self_ns");
+    }
+    assert_eq!(tids.len(), 2, "both threads' rings exported");
+    // The spawned thread ran after the main stack closed, so attributed
+    // self time stays within the traced wall clock.
+    assert!(sum_self_ns > 0.0 && sum_self_ns <= wall_ns);
+
+    // The per-span counters survive into args.
+    let counters: Vec<u64> = events
+        .iter()
+        .filter_map(|e| e.get("args").and_then(|a| a.get("counter")).and_then(Json::as_u64))
+        .collect();
+    assert_eq!(counters.iter().sum::<u64>(), 8, "add() counters exported");
+    teardown();
+}
+
+#[test]
+fn summary_table_and_json_agree_with_phase_stats() {
+    let _g = recorder_lock();
+    obs::enable();
+    {
+        let _s = obs::span(Phase::SchedNetwork);
+        spin_ns(200_000);
+    }
+    obs::count(Phase::EvalCacheHit);
+    obs::disable();
+
+    let rendered = obs::render_summary();
+    assert!(rendered.contains("schedule/network"));
+    assert!(rendered.contains("eval/cache_hit"));
+
+    let json = obs::phases_to_json();
+    let sched = json.get("schedule/network").expect("schedule/network in json");
+    assert_eq!(sched.get("count").and_then(Json::as_u64), Some(1));
+    let total_ms = sched.get("total_ms").and_then(Json::as_f64).unwrap();
+    assert!(total_ms >= 0.2, "at least the 200µs spin: {total_ms} ms");
+    teardown();
+}

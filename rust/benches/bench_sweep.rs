@@ -11,8 +11,9 @@
 //! `cargo bench --bench bench_sweep` (values are machine-dependent; the
 //! file records the worker count it was measured with).
 
-use cube3d::campaign::{Campaign, CampaignMode};
+use cube3d::campaign::{AdaptiveConfig, Campaign, CampaignMode, CampaignPoint, SearchMode};
 use cube3d::config::ExperimentConfig;
+use cube3d::dse::{hypervolume_by, Objective};
 use cube3d::eval::Evaluator;
 use cube3d::obs;
 use cube3d::util::bench::{black_box, Bench};
@@ -84,6 +85,97 @@ fn bench_config(b: &mut Bench, name: &'static str, mode: CampaignMode) -> Config
         run.serial_pts_per_s,
         run.parallel_pts_per_s,
         run.speedup()
+    );
+    run
+}
+
+/// Adaptive-vs-exhaustive search quality on one config: evaluation budget
+/// actually spent and front hypervolume relative to the exhaustive front.
+struct SearchRun {
+    name: &'static str,
+    exhaustive_evals: usize,
+    adaptive_evals: usize,
+    rounds: usize,
+    hv_exhaustive: f64,
+    hv_adaptive: f64,
+}
+
+impl SearchRun {
+    fn eval_frac(&self) -> f64 {
+        self.adaptive_evals as f64 / self.exhaustive_evals.max(1) as f64
+    }
+
+    fn hv_ratio(&self) -> f64 {
+        if self.hv_exhaustive > 0.0 {
+            self.hv_adaptive / self.hv_exhaustive
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Run one config exhaustively and with default `Adaptive` search (seeded,
+/// deterministic), then score both fronts by dominated hypervolume on the
+/// paper's Fig. 9 objectives (runtime, silicon area; both minimized). The
+/// reference box spans the exhaustive sweep's observed range plus half a
+/// range of nadir padding, and both estimates share one MC seed, so the
+/// ratio is bit-reproducible for a given config. CI (`campaign-smoke`)
+/// gates the rn0 ratio at ≥ 0.95 with ≤ 25% of the evaluations.
+fn measure_search(name: &'static str) -> SearchRun {
+    let path = repo_root().join("configs").join(name);
+    let cfg = ExperimentConfig::from_file(&path).unwrap_or_else(|e| panic!("{name}: {e}"));
+    let campaign =
+        Campaign::from_config(&cfg, CampaignMode::Point).expect("shipped config builds a campaign");
+    let exhaustive = campaign
+        .clone()
+        .with_evaluator(fresh_evaluator(CampaignMode::Point))
+        .run();
+    let adaptive = campaign
+        .clone()
+        .search(SearchMode::Adaptive(AdaptiveConfig::default()))
+        .with_evaluator(fresh_evaluator(CampaignMode::Point))
+        .run();
+    let objs: [Objective<CampaignPoint>; 2] = [
+        |p| p.dse().map_or(f64::INFINITY, |d| d.cycles as f64),
+        |p| p.dse().map_or(f64::INFINITY, |d| d.area_m2),
+    ];
+    let mut lower = vec![f64::INFINITY; objs.len()];
+    let mut hi = vec![f64::NEG_INFINITY; objs.len()];
+    for p in &exhaustive.points {
+        for (i, o) in objs.iter().enumerate() {
+            lower[i] = lower[i].min(o(p));
+            hi[i] = hi[i].max(o(p));
+        }
+    }
+    let (hv_exhaustive, hv_adaptive) = if exhaustive.points.is_empty() {
+        (0.0, 0.0)
+    } else {
+        let upper: Vec<f64> = lower
+            .iter()
+            .zip(&hi)
+            .map(|(l, h)| h + 0.5 * (h - l).max(f64::MIN_POSITIVE))
+            .collect();
+        (
+            hypervolume_by(&exhaustive.front, &objs, &lower, &upper, 400_000, 42),
+            hypervolume_by(&adaptive.front, &objs, &lower, &upper, 400_000, 42),
+        )
+    };
+    let run = SearchRun {
+        name,
+        exhaustive_evals: exhaustive.completed,
+        adaptive_evals: adaptive.completed,
+        rounds: adaptive.rounds,
+        hv_exhaustive,
+        hv_adaptive,
+    };
+    println!(
+        "  search {}: adaptive {} / {} evals ({:.0}%)   hv ratio {:.4}   {} rounds",
+        name.trim_end_matches(".json"),
+        run.adaptive_evals,
+        run.exhaustive_evals,
+        run.eval_frac() * 100.0,
+        run.hv_ratio(),
+        run.rounds
     );
     run
 }
@@ -175,6 +267,12 @@ fn main() {
         overhead_frac * 100.0
     );
 
+    // Adaptive search quality vs the exhaustive front, on the same config
+    // the throughput gate uses (plus the dense variant for a harder grid).
+    println!();
+    let search = measure_search("rn0_tsv_sweep.json");
+    let search_dense = measure_search("rn0_tsv_dense.json");
+
     let out = repo_root().join("BENCH_sweep.json");
     let mut trajectory = prior_trajectory(&out);
     trajectory.push(obj([
@@ -184,6 +282,8 @@ fn main() {
         ("serial_points_per_sec", Json::Num(rn0.serial_pts_per_s)),
         ("parallel_points_per_sec", Json::Num(rn0.parallel_pts_per_s)),
         ("disabled_tracer_overhead_frac", Json::Num(overhead_frac)),
+        ("adaptive_eval_frac", Json::Num(search.eval_frac())),
+        ("adaptive_hv_ratio", Json::Num(search.hv_ratio())),
     ]));
 
     let doc = obj([
@@ -195,6 +295,26 @@ fn main() {
                 ("serial_point_ns", Json::Num(serial_point_ns)),
                 ("overhead_frac", Json::Num(overhead_frac)),
             ]),
+        ),
+        (
+            "search",
+            Json::Arr(
+                [&search, &search_dense]
+                    .iter()
+                    .map(|s| {
+                        obj([
+                            ("config", Json::Str(s.name.to_string())),
+                            ("exhaustive_evals", Json::Num(s.exhaustive_evals as f64)),
+                            ("adaptive_evals", Json::Num(s.adaptive_evals as f64)),
+                            ("eval_frac", Json::Num(s.eval_frac())),
+                            ("rounds", Json::Num(s.rounds as f64)),
+                            ("hv_exhaustive", Json::Num(s.hv_exhaustive)),
+                            ("hv_adaptive", Json::Num(s.hv_adaptive)),
+                            ("hv_ratio", Json::Num(s.hv_ratio())),
+                        ])
+                    })
+                    .collect(),
+            ),
         ),
         ("trajectory", Json::Arr(trajectory)),
         ("bench", Json::Str("bench_sweep".to_string())),

@@ -49,6 +49,33 @@ impl Grid {
         values.into_iter().map(|v| v.expect("every axis decoded")).collect()
     }
 
+    /// Decode flat index `i` into one **value index** per axis — the
+    /// coordinate system adaptive search perturbs one axis step at a time.
+    /// Panics when `i >= n_points()`.
+    pub fn axis_indices(&self, i: usize) -> Vec<usize> {
+        assert!(i < self.n_points(), "grid index {i} out of range");
+        let mut indices = vec![0usize; self.axes.len()];
+        let mut rest = i;
+        for (j, axis) in self.axes.iter().enumerate().rev() {
+            indices[j] = rest % axis.len();
+            rest /= axis.len();
+        }
+        indices
+    }
+
+    /// Re-encode per-axis value indices into the flat index — the inverse
+    /// of [`Grid::axis_indices`]. Panics on a wrong-arity or out-of-range
+    /// coordinate.
+    pub fn flat_index(&self, indices: &[usize]) -> usize {
+        assert_eq!(indices.len(), self.axes.len(), "one index per axis");
+        let mut flat = 0usize;
+        for (axis, &idx) in self.axes.iter().zip(indices) {
+            assert!(idx < axis.len(), "axis index {idx} out of range");
+            flat = flat * axis.len() + idx;
+        }
+        flat
+    }
+
     /// Lazy iterator over all points, in nested-loop order.
     pub fn iter(&self) -> GridIter<'_> {
         GridIter { grid: self, next: 0, total: self.n_points() }
@@ -177,5 +204,25 @@ mod tests {
         for (i, p) in g.iter().enumerate() {
             assert_eq!(g.point(i), p.values);
         }
+    }
+
+    #[test]
+    fn axis_indices_round_trip_and_match_decoded_values() {
+        let g = grid();
+        for i in 0..g.n_points() {
+            let idxs = g.axis_indices(i);
+            assert_eq!(g.flat_index(&idxs), i, "flat_index inverts axis_indices");
+            let values: Vec<AxisValue> = g
+                .axes()
+                .iter()
+                .zip(&idxs)
+                .map(|(a, &vi)| a.value(vi))
+                .collect();
+            assert_eq!(values, g.point(i), "per-axis indices decode the same point");
+        }
+        // The empty grid has exactly one point with the empty coordinate.
+        let g = Grid::new();
+        assert_eq!(g.axis_indices(0), Vec::<usize>::new());
+        assert_eq!(g.flat_index(&[]), 0);
     }
 }

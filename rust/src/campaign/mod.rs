@@ -25,13 +25,26 @@
 //! `dse::sweep_partitions`) are thin campaign instances, and the CLI's
 //! `sweep`/`pareto`/`schedule --config`/`dataflows` subcommands all build
 //! their campaign through one [`Campaign::from_config`] path.
+//!
+//! Two extensions trade exactness for scale without leaving the substrate:
+//!
+//! * [`SearchMode`] — how the grid is explored: exhaustive (default,
+//!   bit-identical to the original runner), `Adaptive` Pareto-guided
+//!   sampling under an evaluation budget, or `Halving` successive stratum
+//!   elimination with cheap analytical-only promotion scoring.
+//! * `--shard K/N` ([`Campaign::shard`]) — disjoint flat-index-stride
+//!   partitions of one exhaustive campaign across processes, each with its
+//!   own fingerprinted resumable stream, reassembled bit-identically by
+//!   [`Campaign::merge_streams`].
 
 mod axis;
 mod grid;
 mod point;
 mod runner;
+mod search;
 
 pub use axis::{Axis, AxisValue};
 pub use grid::{Grid, GridIter, GridPoint};
 pub use point::{CampaignPoint, PointSpec, PointView};
 pub use runner::{dse_view, schedule_view, Campaign, CampaignMode, CampaignOutcome};
+pub use search::{AdaptiveConfig, HalvingConfig, SearchMode};

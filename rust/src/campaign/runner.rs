@@ -7,6 +7,7 @@
 use super::axis::Axis;
 use super::grid::{Grid, GridPoint};
 use super::point::{CampaignPoint, PointSpec, PointView};
+use super::search::SearchMode;
 use crate::config::ExperimentConfig;
 use crate::dse::{DsePoint, Objective, ParetoSet, SchedulePoint};
 use crate::eval::{
@@ -30,7 +31,7 @@ use std::sync::Arc;
 /// `evaluate_batch`), small enough that streaming output and resume
 /// checkpoints stay fresh — every shipped config produces multiple chunks,
 /// and a killed run loses at most one chunk of completed work.
-const CHUNK: usize = 8;
+pub(super) const CHUNK: usize = 8;
 
 /// What a campaign evaluates at each grid point.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -84,6 +85,12 @@ pub struct CampaignOutcome {
     /// Grid points that don't build as scenarios (or whose network
     /// evaluation failed) — the legacy sweeps skip exactly these.
     pub skipped: usize,
+    /// Grid points owned by *other* shards of a `--shard K/N` run — never
+    /// enumerated or evaluated here, only counted. Zero when unsharded.
+    pub shard_skipped: usize,
+    /// Search rounds after the seed pass (`Adaptive`: neighbor-proposal
+    /// rounds; `Halving`: elimination rungs). Zero for exhaustive runs.
+    pub rounds: usize,
     /// Snapshot of the evaluator's memo-cache counters after the run.
     pub cache: CacheStats,
     /// FNV-1a hash of the campaign fingerprint (the JSONL stream identity) —
@@ -108,12 +115,16 @@ impl CampaignOutcome {
 /// evaluation mode, streamed through the shared evaluator.
 #[derive(Clone)]
 pub struct Campaign {
-    workloads: Vec<Workload>,
-    grid: Grid,
-    base: PointSpec,
-    tech: Tech,
-    mode: CampaignMode,
-    evaluator: Option<Arc<Evaluator>>,
+    pub(super) workloads: Vec<Workload>,
+    pub(super) grid: Grid,
+    pub(super) base: PointSpec,
+    pub(super) tech: Tech,
+    pub(super) mode: CampaignMode,
+    pub(super) search: SearchMode,
+    /// `Some((k, n))`: this process owns every k-th grid point (1-based,
+    /// flat-index stride n) of an n-way sharded run. Exhaustive mode only.
+    pub(super) shard: Option<(usize, usize)>,
+    pub(super) evaluator: Option<Arc<Evaluator>>,
 }
 
 impl Campaign {
@@ -127,6 +138,8 @@ impl Campaign {
             base: PointSpec::default(),
             tech: Tech::default(),
             mode,
+            search: SearchMode::Exhaustive,
+            shard: None,
             evaluator: None,
         }
     }
@@ -168,6 +181,31 @@ impl Campaign {
         self
     }
 
+    /// How the grid is explored: [`SearchMode::Exhaustive`] (default,
+    /// bit-identical to the pre-search runner), `Adaptive` Pareto-guided
+    /// sampling, or `Halving` successive stratum elimination.
+    pub fn search(mut self, search: SearchMode) -> Campaign {
+        self.search = search;
+        self
+    }
+
+    /// Restrict this run to shard `k` of `n` (1-based): the lazy grid is
+    /// partitioned by flat-index stride, so the n shards are disjoint and
+    /// cover every point. Each shard streams its own JSONL whose
+    /// fingerprint carries the shard topology; [`Campaign::merge_streams`]
+    /// reassembles them bit-identically. Exhaustive search only — sampling
+    /// orders are not stride-decomposable.
+    pub fn shard(mut self, k: usize, n: usize) -> Result<Campaign> {
+        if n == 0 || k == 0 || k > n {
+            bail!("invalid shard {k}/{n}: expected 1 <= K <= N");
+        }
+        if !matches!(self.search, SearchMode::Exhaustive) {
+            bail!("--shard requires exhaustive search (adaptive/halving orders are not stride-decomposable)");
+        }
+        self.shard = Some((k, n));
+        Ok(self)
+    }
+
     pub fn grid(&self) -> &Grid {
         &self.grid
     }
@@ -176,9 +214,28 @@ impl Campaign {
         self.mode
     }
 
+    pub fn search_mode(&self) -> &SearchMode {
+        &self.search
+    }
+
+    pub fn shard_topology(&self) -> Option<(usize, usize)> {
+        self.shard
+    }
+
     /// Total grid points before feasibility skipping.
     pub fn n_points(&self) -> usize {
         self.workloads.len() * self.grid.n_points()
+    }
+
+    /// Grid points this process enumerates: the shard's share of the flat
+    /// index space, or the full grid when unsharded.
+    pub fn owned_points(&self) -> usize {
+        let total = self.n_points();
+        match self.shard {
+            // Owned flat indices are k-1, k-1+n, ... — i.e. ceil((total-(k-1))/n).
+            Some((k, n)) => total.saturating_sub(k - 1).div_ceil(n),
+            None => total,
+        }
     }
 
     fn needs_thermal(&self) -> bool {
@@ -189,7 +246,7 @@ impl Campaign {
             })
     }
 
-    fn pick_evaluator(&self) -> Arc<Evaluator> {
+    pub(super) fn pick_evaluator(&self) -> Arc<Evaluator> {
         if let Some(ev) = &self.evaluator {
             return ev.clone();
         }
@@ -205,7 +262,7 @@ impl Campaign {
         }
     }
 
-    fn objectives(&self) -> &'static [Objective<CampaignPoint>] {
+    pub(super) fn objectives(&self) -> &'static [Objective<CampaignPoint>] {
         match self.mode {
             CampaignMode::Point => &POINT_OBJECTIVES,
             CampaignMode::Network => &NETWORK_OBJECTIVES,
@@ -215,9 +272,12 @@ impl Campaign {
     /// Stable identity of this campaign — the header every result stream
     /// carries. Point labels only encode *axis* coordinates, so the header
     /// pins everything else (mode, workloads, base spec, tech, the full
-    /// grid): resuming a stream that belongs to a different campaign is an
-    /// error, never a silent reuse of the wrong metrics.
-    fn fingerprint(&self) -> String {
+    /// grid — plus, when set, the shard topology and the search mode):
+    /// resuming a stream that belongs to a different campaign, a different
+    /// shard, or a different search is an error, never a silent reuse of
+    /// the wrong metrics. Unsharded exhaustive campaigns add no keys, so
+    /// every pre-search stream stays byte-identical.
+    pub(super) fn fingerprint(&self) -> String {
         let axes: Vec<Json> = self
             .grid
             .axes()
@@ -244,7 +304,7 @@ impl Campaign {
             c.max_temp_c,
             c.power_budget_w,
         );
-        obj([
+        let mut fields = vec![
             (
                 "mode",
                 Json::Str(
@@ -279,8 +339,14 @@ impl Campaign {
             // change (or new field) changes the fingerprint.
             ("tech", Json::Str(format!("{:?}", self.tech))),
             ("grid", Json::Arr(axes)),
-        ])
-        .to_string_compact()
+        ];
+        if let Some((k, n)) = self.shard {
+            fields.push(("shard", Json::Str(format!("{k}/{n}"))));
+        }
+        if let Some(d) = self.search.descriptor() {
+            fields.push(("search", Json::Str(d)));
+        }
+        obj(fields).to_string_compact()
     }
 
     /// 64-bit FNV-1a of [`Campaign::fingerprint`], as 16 hex digits — the
@@ -294,7 +360,7 @@ impl Campaign {
         format!("{h:016x}")
     }
 
-    fn point_label(&self, workload_index: usize, gp: &GridPoint) -> String {
+    pub(super) fn point_label(&self, workload_index: usize, gp: &GridPoint) -> String {
         let label = gp.label();
         if self.workloads.len() > 1 {
             format!("w{workload_index}/{label}")
@@ -303,7 +369,7 @@ impl Campaign {
         }
     }
 
-    fn scenario_for(&self, workload_index: usize, spec: &PointSpec) -> Result<Scenario> {
+    pub(super) fn scenario_for(&self, workload_index: usize, spec: &PointSpec) -> Result<Scenario> {
         let builder = Scenario::builder()
             .workload(self.workloads[workload_index].clone())
             .mac_budget(spec.mac_budget)
@@ -325,6 +391,13 @@ impl Campaign {
     pub fn run(&self) -> CampaignOutcome {
         self.run_inner(true, None, true, None)
             .expect("in-memory campaign run performs no I/O")
+    }
+
+    /// [`Campaign::run`], surfacing configuration errors (a sharded or
+    /// network-mode campaign whose search mode refuses them) instead of
+    /// panicking — the CLI's in-memory entry point.
+    pub fn try_run(&self) -> Result<CampaignOutcome> {
+        self.run_inner(true, None, true, None)
     }
 
     /// One-point-at-a-time run — the baseline `bench_sweep` compares the
@@ -378,6 +451,12 @@ impl Campaign {
         collect: bool,
         on_point: Option<&mut dyn FnMut(&CampaignPoint) -> Result<()>>,
     ) -> Result<CampaignOutcome> {
+        if !matches!(self.search, SearchMode::Exhaustive) {
+            if self.shard.is_some() {
+                bail!("--shard requires exhaustive search (adaptive/halving orders are not stride-decomposable)");
+            }
+            return self.run_search(parallel, jsonl, collect, on_point);
+        }
         let _run_span = obs::span(obs::Phase::CampaignRun);
         let ev = self.pick_evaluator();
         let objectives = self.objectives();
@@ -391,7 +470,7 @@ impl Campaign {
             completed: 0,
             front: ParetoSet::new(objectives),
             feasible_front: ParetoSet::new(objectives),
-            heartbeat: obs::Heartbeat::new("campaign", self.n_points() as u64, 0),
+            heartbeat: obs::Heartbeat::new("campaign", self.owned_points() as u64, 0),
         };
         if let Some(path) = jsonl {
             let _merge = obs::span(obs::Phase::CampaignResumeMerge);
@@ -408,11 +487,21 @@ impl Campaign {
 
         let mut resumed = 0usize;
         let mut skipped = 0usize;
+        let mut shard_skipped = 0usize;
         let mut pending: Vec<(String, Scenario)> = Vec::new();
         let chunk = if parallel { CHUNK } else { 1 };
+        let grid_points = self.grid.n_points();
 
         for wi in 0..self.workloads.len() {
             for gp in self.grid.iter() {
+                // Sharded runs own every n-th flat index; foreign points
+                // are counted and skipped before any decode-dependent work.
+                if let Some((k, n)) = self.shard {
+                    if (wi * grid_points + gp.index) % n != k - 1 {
+                        shard_skipped += 1;
+                        continue;
+                    }
+                }
                 let label = self.point_label(wi, &gp);
                 // Stored streams are written in grid order, so resume is a
                 // one-lookahead merge: if the next stored line is this grid
@@ -465,6 +554,8 @@ impl Campaign {
             feasible_front: col.feasible_front.into_front(),
             resumed,
             skipped,
+            shard_skipped,
+            rounds: 0,
             cache: ev.cache_stats(),
             fingerprint_hash: self.fingerprint_hash(),
         })
@@ -475,7 +566,10 @@ impl Campaign {
     /// synthetic metric line per grid point, all through the incremental
     /// writer. This backs `cube3d gen-jsonl`, `bench_json` and the CI
     /// million-line O(1)-resume gate; a subsequent `--jsonl` run resumes
-    /// every line without building a single scenario.
+    /// every line without building a single scenario. Sharded campaigns
+    /// write only their owned points, keyed by the **global** flat index,
+    /// so every shard stream is a byte-identical subset of the unsharded
+    /// one and the N shard streams merge back to it exactly.
     pub fn write_synthetic_stream(&self, path: &Path) -> Result<usize> {
         let mut out = BufWriter::new(
             std::fs::File::create(path)
@@ -488,21 +582,28 @@ impl Campaign {
         w.end();
         out.write_all(w.as_str().as_bytes())?;
         out.write_all(b"\n")?;
-        let mut i = 0u64;
+        let grid_points = self.grid.n_points();
+        let mut written = 0usize;
         for wi in 0..self.workloads.len() {
             for gp in self.grid.iter() {
+                let flat = wi * grid_points + gp.index;
+                if let Some((k, n)) = self.shard {
+                    if flat % n != k - 1 {
+                        continue;
+                    }
+                }
                 let label = self.point_label(wi, &gp);
                 let spec = self.base.with_values(&gp.values);
-                let p = self.synthetic_point(wi, &spec, label, i);
+                let p = self.synthetic_point(wi, &spec, label, flat as u64);
                 w.clear();
                 p.write_jsonl(&mut w);
                 out.write_all(w.as_str().as_bytes())?;
                 out.write_all(b"\n")?;
-                i += 1;
+                written += 1;
             }
         }
         out.flush()?;
-        Ok(i as usize)
+        Ok(written)
     }
 
     /// Deterministic pseudo-metrics for [`Campaign::write_synthetic_stream`].
@@ -555,7 +656,7 @@ impl Campaign {
     }
 
     /// Evaluate and drain the pending chunk, in order.
-    fn evaluate_chunk(
+    pub(super) fn evaluate_chunk(
         &self,
         ev: &Evaluator,
         pending: &mut Vec<(String, Scenario)>,
@@ -611,6 +712,171 @@ impl Campaign {
             }
         }
     }
+
+    /// Merge the N shard streams of this campaign back into one unsharded
+    /// stream at `out`, **bit-identical** to what a single-process
+    /// exhaustive run would have written: unsharded header, then every
+    /// completed line in grid order. Each input must carry this campaign's
+    /// fingerprint extended with a distinct `shard: k/N` topology (N =
+    /// `inputs.len()`); anything else — a foreign campaign, a duplicate or
+    /// missing shard, a wrong N — is an error before a byte is written.
+    /// Fronts are unioned through the same one-lookahead pull-parser the
+    /// resume path uses, so memory stays O(front) however large the grid.
+    ///
+    /// Self must be the *unsharded* campaign being reassembled. In point
+    /// mode a missing owned line is checked against the scenario builder:
+    /// a buildable-but-absent point means the shard run is incomplete and
+    /// the merge fails rather than silently dropping work. (Network-mode
+    /// evaluation failures also produce no line, so there an absent point
+    /// counts as skipped.)
+    pub fn merge_streams(
+        &self,
+        inputs: &[std::path::PathBuf],
+        out: &Path,
+    ) -> Result<CampaignOutcome> {
+        let _span = obs::span(obs::Phase::CampaignShardMerge);
+        if self.shard.is_some() {
+            bail!("merge target must be the unsharded campaign");
+        }
+        if !matches!(self.search, SearchMode::Exhaustive) {
+            bail!("merge-campaign applies to exhaustive sharded runs only");
+        }
+        let n = inputs.len();
+        if n == 0 {
+            bail!("merge-campaign needs at least one shard stream");
+        }
+        let mut cursors: Vec<Option<StoredPoints>> = Vec::new();
+        cursors.resize_with(n, || None);
+        for path in inputs {
+            let file = std::fs::File::open(path)
+                .with_context(|| format!("reading campaign stream {}", path.display()))?;
+            let mut first = String::new();
+            BufReader::new(file).read_line(&mut first)?;
+            let Some(found) = parse_header_line(first.trim()) else {
+                bail!(
+                    "campaign stream {} has no fingerprint header; \
+                     was it produced by a --shard run of this campaign?",
+                    path.display()
+                );
+            };
+            let (k, found_n) = shard_of_fingerprint(&found).with_context(|| {
+                format!(
+                    "campaign stream {} carries no shard topology; \
+                     merge-campaign reassembles --shard K/N streams",
+                    path.display()
+                )
+            })?;
+            if found_n != n {
+                bail!(
+                    "campaign stream {} is shard {k}/{found_n}, but {n} streams were given — \
+                     pass every shard of one N-way run exactly once",
+                    path.display()
+                );
+            }
+            let expected = self.clone().shard(k, n)?.fingerprint();
+            if found != expected {
+                bail!(
+                    "campaign stream {} belongs to a different campaign (header mismatch)\n  \
+                     expected fingerprint: {expected}\n  \
+                     found fingerprint:    {found}",
+                    path.display()
+                );
+            }
+            if cursors[k - 1].is_some() {
+                bail!("shard {k}/{n} appears more than once in the merge inputs");
+            }
+            cursors[k - 1] = Some(StoredPoints::open(path)?);
+        }
+        let mut cursors: Vec<StoredPoints> = cursors.into_iter().map(|c| c.unwrap()).collect();
+
+        let mut sink = BufWriter::new(
+            std::fs::File::create(out)
+                .with_context(|| format!("creating campaign stream {}", out.display()))?,
+        );
+        let mut w = JsonWriter::with_capacity(512);
+        w.begin_obj();
+        w.key("campaign");
+        w.str(&self.fingerprint());
+        w.end();
+        sink.write_all(w.as_str().as_bytes())?;
+        sink.write_all(b"\n")?;
+
+        let objectives = self.objectives();
+        let mut front = ParetoSet::new(objectives);
+        let mut feasible_front = ParetoSet::new(objectives);
+        let mut completed = 0usize;
+        let mut skipped = 0usize;
+        let grid_points = self.grid.n_points();
+        for wi in 0..self.workloads.len() {
+            for gp in self.grid.iter() {
+                let owner = (wi * grid_points + gp.index) % n;
+                let label = self.point_label(wi, &gp);
+                match cursors[owner].take_if(&label)? {
+                    Some(p) => {
+                        w.clear();
+                        p.write_jsonl(&mut w);
+                        sink.write_all(w.as_str().as_bytes())?;
+                        sink.write_all(b"\n")?;
+                        completed += 1;
+                        front.insert(p.clone());
+                        if p.feasible() {
+                            feasible_front.insert(p);
+                        }
+                    }
+                    None => {
+                        // No stored line: either the shard legitimately
+                        // skipped the point, or its run never got there.
+                        let spec = self.base.with_values(&gp.values);
+                        if self.mode == CampaignMode::Point && self.scenario_for(wi, &spec).is_ok()
+                        {
+                            bail!(
+                                "shard {}/{n} stream is missing completed point '{label}' — \
+                                 the shard run is incomplete; finish it before merging",
+                                owner + 1
+                            );
+                        }
+                        skipped += 1;
+                    }
+                }
+            }
+        }
+        for (i, c) in cursors.iter().enumerate() {
+            if let Some(p) = &c.next {
+                bail!(
+                    "shard {}/{n} stream holds point '{}' that its shard does not own — \
+                     the stream is out of grid order or corrupt",
+                    i + 1,
+                    p.label
+                );
+            }
+        }
+        sink.flush()?;
+        Ok(CampaignOutcome {
+            points: Vec::new(),
+            completed,
+            front: front.into_front(),
+            feasible_front: feasible_front.into_front(),
+            resumed: completed,
+            skipped,
+            shard_skipped: 0,
+            rounds: 0,
+            cache: CacheStats { hits: 0, misses: 0, evictions: 0, len: 0, capacity: 0 },
+            fingerprint_hash: self.fingerprint_hash(),
+        })
+    }
+}
+
+/// Extract the `shard: "K/N"` topology from a fingerprint string (the
+/// compact-JSON campaign identity). Errors when absent or malformed.
+fn shard_of_fingerprint(fingerprint: &str) -> Result<(usize, usize)> {
+    let doc = Json::parse(fingerprint).context("unparseable campaign fingerprint")?;
+    let Some(Json::Str(spec)) = doc.get("shard") else {
+        bail!("fingerprint carries no shard key");
+    };
+    let (k, n) = spec
+        .split_once('/')
+        .ok_or_else(|| anyhow::anyhow!("malformed shard topology '{spec}'"))?;
+    Ok((k.parse()?, n.parse()?))
 }
 
 /// The legacy [`DsePoint`] field mapping over an evaluated scenario — the
@@ -657,20 +923,20 @@ pub fn schedule_view(s: &Scenario, m: &NetworkMetrics) -> SchedulePoint {
 /// the reusable incremental writer, the optional per-point callback, the
 /// incremental fronts, and (only when collecting) the materialized point
 /// set. Everything here is O(front) except the opt-in `points` vec.
-struct Collector<'a> {
-    collect: bool,
-    on_point: Option<&'a mut dyn FnMut(&CampaignPoint) -> Result<()>>,
-    sink: Option<BufWriter<std::fs::File>>,
-    wbuf: JsonWriter,
-    points: Vec<CampaignPoint>,
-    completed: usize,
-    front: ParetoSet<CampaignPoint>,
-    feasible_front: ParetoSet<CampaignPoint>,
-    heartbeat: obs::Heartbeat,
+pub(super) struct Collector<'a> {
+    pub(super) collect: bool,
+    pub(super) on_point: Option<&'a mut dyn FnMut(&CampaignPoint) -> Result<()>>,
+    pub(super) sink: Option<BufWriter<std::fs::File>>,
+    pub(super) wbuf: JsonWriter,
+    pub(super) points: Vec<CampaignPoint>,
+    pub(super) completed: usize,
+    pub(super) front: ParetoSet<CampaignPoint>,
+    pub(super) feasible_front: ParetoSet<CampaignPoint>,
+    pub(super) heartbeat: obs::Heartbeat,
 }
 
 impl Collector<'_> {
-    fn complete(&mut self, p: CampaignPoint, fresh: bool) -> Result<()> {
+    pub(super) fn complete(&mut self, p: CampaignPoint, fresh: bool) -> Result<()> {
         if fresh {
             if let Some(file) = &mut self.sink {
                 let _flush_span = obs::span(obs::Phase::CampaignJsonlFlush);
@@ -700,7 +966,7 @@ impl Collector<'_> {
 
     /// Push buffered fresh lines to the OS — called per chunk, so a killed
     /// run loses at most one chunk of completed work.
-    fn flush(&mut self) -> Result<()> {
+    pub(super) fn flush(&mut self) -> Result<()> {
         if let Some(file) = &mut self.sink {
             let _flush_span = obs::span(obs::Phase::CampaignJsonlFlush);
             file.flush()?;
@@ -733,7 +999,7 @@ fn parse_header_line(line: &str) -> Option<String> {
 /// first appended line, and a crash *during* the rewrite leaves the
 /// original stream untouched. A fingerprint mismatch is an error quoting
 /// both fingerprints, raised before anything is written.
-fn prepare_stream(path: &Path, expected: &str) -> Result<()> {
+pub(super) fn prepare_stream(path: &Path, expected: &str) -> Result<()> {
     let header_line = {
         let mut w = JsonWriter::new();
         w.begin_obj();
@@ -822,13 +1088,13 @@ fn prepare_stream(path: &Path, expected: &str) -> Result<()> {
 /// parsed point at a time, however many millions of lines the file has.
 /// Stored streams are grid-ordered (fresh points append in evaluation
 /// order), so the runner consumes them as an ordered merge.
-struct StoredPoints {
+pub(super) struct StoredPoints {
     lines: std::io::Lines<BufReader<std::fs::File>>,
     next: Option<CampaignPoint>,
 }
 
 impl StoredPoints {
-    fn open(path: &Path) -> Result<StoredPoints> {
+    pub(super) fn open(path: &Path) -> Result<StoredPoints> {
         let file = std::fs::File::open(path)
             .with_context(|| format!("reading campaign stream {}", path.display()))?;
         let mut lines = BufReader::new(file).lines();
@@ -856,7 +1122,7 @@ impl StoredPoints {
     }
 
     /// Consume and return the next stored point iff its label is `label`.
-    fn take_if(&mut self, label: &str) -> Result<Option<CampaignPoint>> {
+    pub(super) fn take_if(&mut self, label: &str) -> Result<Option<CampaignPoint>> {
         if self.next.as_ref().is_some_and(|p| p.label == label) {
             let p = self.next.take();
             self.advance()?;
@@ -864,6 +1130,19 @@ impl StoredPoints {
         } else {
             Ok(None)
         }
+    }
+
+    /// Consume and return the next stored point unconditionally — `None`
+    /// when the stream is exhausted. Search-mode resume drains the whole
+    /// stream into a label map this way (search streams are written in
+    /// evaluation order, not grid order, so the one-lookahead merge the
+    /// exhaustive runner uses does not apply).
+    pub(super) fn next_point(&mut self) -> Result<Option<CampaignPoint>> {
+        let p = self.next.take();
+        if p.is_some() {
+            self.advance()?;
+        }
+        Ok(p)
     }
 }
 

@@ -29,9 +29,9 @@
 mod pareto;
 
 pub use pareto::{
-    constrained_front, constrained_schedule_front, dominates, dominates_by, pareto_front,
-    pareto_front_by, pareto_front_feasible_by, schedule_front, Objective, ParetoSet,
-    DSE_OBJECTIVES, SCHEDULE_OBJECTIVES,
+    constrained_front, constrained_schedule_front, dominates, dominates_by, hypervolume_by,
+    pareto_front, pareto_front_by, pareto_front_feasible_by, schedule_front, Objective,
+    ParetoSet, DSE_OBJECTIVES, SCHEDULE_OBJECTIVES,
 };
 
 use crate::campaign::{dse_view, Axis, Campaign, CampaignMode, Grid, PointSpec};

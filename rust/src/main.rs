@@ -10,7 +10,14 @@
 //!                 as a `campaign` (chunked parallel batches, incremental
 //!                 Pareto front); `--jsonl FILE` streams each completed
 //!                 point and resumes an interrupted run, `--json` emits the
-//!                 points + front + evaluator cache stats.
+//!                 points + front + evaluator cache stats. `--search
+//!                 adaptive|halving` samples the grid instead of enumerating
+//!                 it; `--shard K/N` runs one stride-partition of the grid
+//!                 (own fingerprinted stream), `--procs N` forks N local
+//!                 shard processes and merges their streams.
+//! * `merge-campaign` — reassemble the N streams of a `--shard K/N` run
+//!                 into one unsharded stream, bit-identical to a
+//!                 single-process run (fronts unioned in O(1) memory).
 //! * `power`     — Table-II-style power analysis for a configuration.
 //! * `thermal`   — Fig.-8-style thermal study for a configuration.
 //! * `simulate`  — run the exact cycle simulator on a small GEMM and check
@@ -43,8 +50,11 @@
 //! Every metric printed here comes from the shared [`cube3d::eval`]
 //! evaluator — the CLI builds a [`Scenario`] and formats the bundle.
 
+use anyhow::Context as _;
 use cube3d::analytical::{breakdown_2d, breakdown_3d};
-use cube3d::campaign::{Campaign, CampaignMode, CampaignOutcome};
+use cube3d::campaign::{
+    AdaptiveConfig, Campaign, CampaignMode, CampaignOutcome, HalvingConfig, SearchMode,
+};
 use cube3d::config::{parse_dataflow, parse_strategy, parse_vtech, ExperimentConfig, WorkloadSpec};
 use cube3d::coordinator::{BatcherConfig, Coordinator, GemmJob, RouterConfig};
 use cube3d::dataflow::Dataflow;
@@ -128,7 +138,27 @@ fn workload_opts() -> Vec<OptSpec> {
         OptSpec {
             name: "mode",
             takes_value: true,
-            help: "gen-jsonl: campaign mode the stream encodes, point|network (default point)",
+            help: "gen-jsonl/merge-campaign: campaign mode, point|network (default point)",
+        },
+        OptSpec {
+            name: "search",
+            takes_value: true,
+            help: "sweep/pareto/schedule: grid search mode, exhaustive|adaptive|halving (default exhaustive)",
+        },
+        OptSpec {
+            name: "search-budget",
+            takes_value: true,
+            help: "adaptive search: evaluation budget as a fraction of the grid, in (0,1] (default 0.25)",
+        },
+        OptSpec {
+            name: "shard",
+            takes_value: true,
+            help: "sweep/schedule/gen-jsonl: evaluate shard K/N of the grid (disjoint flat-index stride)",
+        },
+        OptSpec {
+            name: "procs",
+            takes_value: true,
+            help: "sweep/schedule: fork N local shard processes and merge their streams (needs --config --jsonl)",
         },
         OptSpec { name: "out-dir", takes_value: true, help: "output directory (default reports)" },
         OptSpec { name: "jobs", takes_value: true, help: "serve: number of jobs (default 32)" },
@@ -243,6 +273,7 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
             "schedule" => cmd_schedule(&args),
             "workloads" => cmd_workloads(),
             "gen-jsonl" => cmd_gen_jsonl(&args),
+            "merge-campaign" => cmd_merge_campaign(&args),
             "dataflows" => cmd_dataflows(&args),
             "pareto" => cmd_pareto(&args),
             "memory" => cmd_memory(&args),
@@ -417,6 +448,7 @@ fn print_help() {
         ("schedule", "tier-partition a network and evaluate the layer pipeline"),
         ("workloads", "print the Table I workload library"),
         ("gen-jsonl", "synthesize a fully completed campaign JSONL stream (bench/CI fixture)"),
+        ("merge-campaign", "reassemble --shard K/N streams into one bit-identical stream"),
         ("dataflows", "four-way OS/WS/IS/dOS comparison on a workload"),
         ("pareto", "Pareto front (cycles/area/power) of a design space"),
         ("memory", "off-chip bandwidth demand + feasibility per memory tech"),
@@ -510,7 +542,7 @@ fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
 fn run_campaign(campaign: &Campaign, args: &Args) -> anyhow::Result<CampaignOutcome> {
     let outcome = match args.get("jsonl") {
         Some(path) => campaign.run_streaming(Path::new(path))?,
-        None => campaign.run(),
+        None => campaign.try_run()?,
     };
     report_resume(&outcome);
     Ok(outcome)
@@ -519,14 +551,124 @@ fn run_campaign(campaign: &Campaign, args: &Args) -> anyhow::Result<CampaignOutc
 fn report_resume(outcome: &CampaignOutcome) {
     if outcome.resumed > 0 {
         let fp = &outcome.fingerprint_hash[..outcome.fingerprint_hash.len().min(12)];
+        let shard = if outcome.shard_skipped > 0 {
+            format!("; {} points owned by other shards", outcome.shard_skipped)
+        } else {
+            String::new()
+        };
         eprintln!(
             "resumed {} completed points from the JSONL stream ({} skipped as stale, \
-             {} evaluated fresh; stream fingerprint {fp})",
+             {} evaluated fresh; stream fingerprint {fp}{shard})",
             outcome.resumed,
             outcome.skipped,
             outcome.completed - outcome.resumed,
         );
     }
+}
+
+/// `K/N` shard topology from a `--shard` value.
+fn parse_shard(spec: &str) -> anyhow::Result<(usize, usize)> {
+    let Some((k, n)) = spec.split_once('/') else {
+        anyhow::bail!("--shard expects K/N (e.g. 2/3), got '{spec}'");
+    };
+    Ok((
+        k.trim().parse().with_context(|| format!("--shard: bad shard index '{k}'"))?,
+        n.trim().parse().with_context(|| format!("--shard: bad shard count '{n}'"))?,
+    ))
+}
+
+/// Apply `--search` (with `--seed` / `--search-budget`) and `--shard` to a
+/// campaign. The defaults leave it untouched: exhaustive and unsharded.
+fn apply_search_args(mut campaign: Campaign, args: &Args) -> anyhow::Result<Campaign> {
+    if let Some(mode) = args.get("search") {
+        let seed = args.get_u64_or("seed", 7)?;
+        let search = match mode {
+            "exhaustive" => SearchMode::Exhaustive,
+            "adaptive" => {
+                let mut cfg = AdaptiveConfig { seed, ..AdaptiveConfig::default() };
+                if let Some(frac) = args.get_f64("search-budget")? {
+                    anyhow::ensure!(
+                        frac > 0.0 && frac <= 1.0,
+                        "--search-budget must be in (0, 1], got {frac}"
+                    );
+                    cfg.budget_frac = frac;
+                }
+                SearchMode::Adaptive(cfg)
+            }
+            "halving" => SearchMode::Halving(HalvingConfig { seed, ..HalvingConfig::default() }),
+            other => anyhow::bail!("unknown search mode '{other}' (exhaustive|adaptive|halving)"),
+        };
+        campaign = campaign.search(search);
+    }
+    if let Some(spec) = args.get("shard") {
+        let (k, n) = parse_shard(spec)?;
+        campaign = campaign.shard(k, n)?;
+    }
+    Ok(campaign)
+}
+
+/// The `--procs N` convenience: fork N children of this very subcommand,
+/// one per shard (`--shard k/N`, each streaming to `<jsonl>.shardKofN`),
+/// wait for all of them, merge the shard streams into `--jsonl`, and delete
+/// them. The caller then runs normally and resumes every merged point, so
+/// its output is identical to a single-process run of the whole grid.
+fn run_sharded_procs(
+    cmd: &str,
+    campaign: &Campaign,
+    args: &Args,
+    procs: usize,
+) -> anyhow::Result<()> {
+    use std::process::{Command, Stdio};
+    anyhow::ensure!(procs >= 1, "--procs needs at least 1 process");
+    let Some(cfg) = args.get("config") else {
+        anyhow::bail!("--procs needs --config (the shard children re-read the campaign from it)");
+    };
+    let Some(jsonl) = args.get("jsonl") else {
+        anyhow::bail!("--procs needs --jsonl (the merged stream path)");
+    };
+    anyhow::ensure!(args.get("shard").is_none(), "--procs forks its own shards; drop --shard");
+    anyhow::ensure!(
+        matches!(campaign.search_mode(), SearchMode::Exhaustive),
+        "--procs shards the exhaustive grid; adaptive/halving runs are single-process"
+    );
+    let exe = std::env::current_exe()?;
+    let shard_paths: Vec<std::path::PathBuf> = (1..=procs)
+        .map(|k| std::path::PathBuf::from(format!("{jsonl}.shard{k}of{procs}")))
+        .collect();
+    let mut children = Vec::new();
+    for (i, path) in shard_paths.iter().enumerate() {
+        let mut c = Command::new(&exe);
+        c.arg(cmd)
+            .arg("--config")
+            .arg(cfg)
+            .arg("--shard")
+            .arg(format!("{}/{procs}", i + 1))
+            .arg("--jsonl")
+            .arg(path);
+        // Forward the flags that reach the campaign fingerprint, so every
+        // shard stream matches the parent campaign exactly.
+        for flag in ["max-temp", "power-budget"] {
+            if let Some(v) = args.get(flag) {
+                c.arg(format!("--{flag}")).arg(v);
+            }
+        }
+        c.stdout(Stdio::null());
+        children
+            .push(c.spawn().with_context(|| format!("spawning shard {}/{procs}", i + 1))?);
+    }
+    for (i, mut child) in children.into_iter().enumerate() {
+        let status = child.wait()?;
+        anyhow::ensure!(status.success(), "shard {}/{procs} process failed with {status}", i + 1);
+    }
+    let outcome = campaign.merge_streams(&shard_paths, Path::new(jsonl))?;
+    for p in &shard_paths {
+        let _ = std::fs::remove_file(p);
+    }
+    eprintln!(
+        "merged {} completed points from {procs} shard processes into {jsonl}",
+        outcome.completed
+    );
+    Ok(())
 }
 
 /// The `--json` document every campaign-backed subcommand emits: all
@@ -571,7 +713,11 @@ fn stream_campaign_json(campaign: &Campaign, args: &Args) -> anyhow::Result<Camp
     out.write_all(b",\"feasible_front\":")?;
     labels(&mut wbuf, &outcome.feasible_front);
     out.write_all(wbuf.as_str().as_bytes())?;
-    write!(out, ",\"resumed\":{},\"skipped\":{},\"cache\":", outcome.resumed, outcome.skipped)?;
+    write!(
+        out,
+        ",\"resumed\":{},\"skipped\":{},\"shard_skipped\":{},\"rounds\":{},\"cache\":",
+        outcome.resumed, outcome.skipped, outcome.shard_skipped, outcome.rounds
+    )?;
     wbuf.clear();
     outcome.cache.write_compact(&mut wbuf);
     out.write_all(wbuf.as_str().as_bytes())?;
@@ -615,7 +761,10 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     };
     let mut cfg = cfg;
     cfg.constraints = constraints_from_args(args, cfg.constraints)?;
-    let campaign = Campaign::from_config(&cfg, CampaignMode::Point)?;
+    let campaign = apply_search_args(Campaign::from_config(&cfg, CampaignMode::Point)?, args)?;
+    if let Some(procs) = args.get_u64("procs")? {
+        run_sharded_procs("sweep", &campaign, args, procs as usize)?;
+    }
     if args.flag("json") {
         let outcome = stream_campaign_json(&campaign, args)?;
         if outcome.completed == 0 {
@@ -1096,7 +1245,11 @@ fn cmd_schedule(args: &Args) -> anyhow::Result<()> {
         let mut cfg = ExperimentConfig::from_file(Path::new(path))?;
         cfg.constraints = constraints_from_args(args, cfg.constraints)?;
         let constraints = cfg.constraints;
-        let campaign = Campaign::from_config(&cfg, CampaignMode::Network)?;
+        let campaign =
+            apply_search_args(Campaign::from_config(&cfg, CampaignMode::Network)?, args)?;
+        if let Some(procs) = args.get_u64("procs")? {
+            run_sharded_procs("schedule", &campaign, args, procs as usize)?;
+        }
         if args.flag("json") {
             let outcome = stream_campaign_json(&campaign, args)?;
             if outcome.completed == 0 {
@@ -1320,7 +1473,7 @@ fn cmd_pareto(args: &Args) -> anyhow::Result<()> {
     cfg.constraints = constraints_from_args(args, cfg.constraints)?;
     let constraints = cfg.constraints;
     let vtech = cfg.vertical_tech;
-    let campaign = Campaign::from_config(&cfg, CampaignMode::Point)?;
+    let campaign = apply_search_args(Campaign::from_config(&cfg, CampaignMode::Point)?, args)?;
     if args.flag("json") {
         stream_campaign_json(&campaign, args)?;
         return Ok(());
@@ -1437,9 +1590,55 @@ fn cmd_gen_jsonl(args: &Args) -> anyhow::Result<()> {
         other => anyhow::bail!("unknown campaign mode '{other}' (point|network)"),
     };
     let cfg = ExperimentConfig::from_file(Path::new(cfg_path))?;
-    let campaign = Campaign::from_config(&cfg, mode)?;
+    let mut campaign = Campaign::from_config(&cfg, mode)?;
+    if let Some(spec) = args.get("shard") {
+        let (k, n) = parse_shard(spec)?;
+        campaign = campaign.shard(k, n)?;
+    }
     let n = campaign.write_synthetic_stream(Path::new(out))?;
     println!("wrote {n} synthetic completed points to {out}");
+    Ok(())
+}
+
+/// `merge-campaign`: reassemble the N shard streams of a `--shard K/N`
+/// campaign into one unsharded stream — bit-identical to what a single
+/// process would have written — unioning the fronts through the O(1)-memory
+/// pull-parser along the way.
+fn cmd_merge_campaign(args: &Args) -> anyhow::Result<()> {
+    let Some(cfg_path) = args.get("config") else {
+        anyhow::bail!(
+            "merge-campaign needs --config <experiment config> (the campaign the shards belong to)"
+        );
+    };
+    let Some(out) = args.get("out") else {
+        anyhow::bail!("merge-campaign needs --out <merged stream path>");
+    };
+    let mode = match args.get_or("mode", "point") {
+        "point" => CampaignMode::Point,
+        "network" => CampaignMode::Network,
+        other => anyhow::bail!("unknown campaign mode '{other}' (point|network)"),
+    };
+    let inputs: Vec<std::path::PathBuf> =
+        args.positional().iter().map(std::path::PathBuf::from).collect();
+    if inputs.is_empty() {
+        anyhow::bail!(
+            "usage: cube3d merge-campaign --config <cfg> --out <merged.jsonl> \
+             <shard1.jsonl> <shard2.jsonl> ..."
+        );
+    }
+    let mut cfg = ExperimentConfig::from_file(Path::new(cfg_path))?;
+    cfg.constraints = constraints_from_args(args, cfg.constraints)?;
+    let campaign = Campaign::from_config(&cfg, mode)?;
+    let outcome = campaign.merge_streams(&inputs, Path::new(out))?;
+    println!(
+        "merged {} completed points from {} shard streams into {out} \
+         ({} skipped; front {}, feasible front {})",
+        outcome.completed,
+        inputs.len(),
+        outcome.skipped,
+        outcome.front.len(),
+        outcome.feasible_front.len()
+    );
     Ok(())
 }
 

@@ -4,6 +4,12 @@
 //! the heartbeat prints a stderr line at most once a second — and nothing at
 //! all for runs shorter than a second, so smoke tests and CI greps stay
 //! clean. Thread-safe: chunk workers tick it concurrently.
+//!
+//! Exhaustive runs know their grid size up front and report `done/total`
+//! with an ETA. Search-mode runs ([`Heartbeat::unbounded`]) don't — an
+//! adaptive campaign stops on front staleness, not on a count — so a
+//! done/total line there would be a lie; they report the search round,
+//! evaluations so far, evals/sec and the live front size instead.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -13,11 +19,14 @@ const PERIOD: Duration = Duration::from_secs(1);
 
 pub struct Heartbeat {
     label: &'static str,
-    total: u64,
+    /// `None` when the run has no meaningful completion count (search
+    /// modes): progress is reported without the done/total + ETA framing.
+    total: Option<u64>,
     done0: u64,
     start: Instant,
     done: AtomicU64,
     front: AtomicU64,
+    round: AtomicU64,
     last: Mutex<Instant>,
 }
 
@@ -28,13 +37,35 @@ impl Heartbeat {
         let now = Instant::now();
         Heartbeat {
             label,
-            total,
+            total: Some(total),
             done0,
             start: now,
             done: AtomicU64::new(done0),
             front: AtomicU64::new(0),
+            round: AtomicU64::new(0),
             last: Mutex::new(now),
         }
+    }
+
+    /// A heartbeat with no known completion total — search-mode campaigns,
+    /// whose stopping rule is front staleness rather than grid exhaustion.
+    pub fn unbounded(label: &'static str) -> Heartbeat {
+        let now = Instant::now();
+        Heartbeat {
+            label,
+            total: None,
+            done0: 0,
+            start: now,
+            done: AtomicU64::new(0),
+            front: AtomicU64::new(0),
+            round: AtomicU64::new(0),
+            last: Mutex::new(now),
+        }
+    }
+
+    /// Publish the current search round (seed pass is round 0).
+    pub fn set_round(&self, round: u64) {
+        self.round.store(round, Ordering::Relaxed);
     }
 
     /// Record `n` more completed points and the current Pareto front size;
@@ -56,29 +87,35 @@ impl Heartbeat {
         let elapsed = self.start.elapsed().as_secs_f64();
         let fresh = done.saturating_sub(self.done0);
         let rate = if elapsed > 0.0 { fresh as f64 / elapsed } else { 0.0 };
-        let remaining = self.total.saturating_sub(done);
+        let Some(total) = self.total else {
+            eprintln!(
+                "[{}] round {} | {} evals | {:.1} evals/s | front {}",
+                self.label,
+                self.round.load(Ordering::Relaxed),
+                done,
+                rate,
+                self.front.load(Ordering::Relaxed),
+            );
+            return;
+        };
+        let remaining = total.saturating_sub(done);
         let eta = if rate > 0.0 {
             format_secs(remaining as f64 / rate)
         } else {
             "?".to_string()
         };
-        let pct = if self.total > 0 {
-            done as f64 * 100.0 / self.total as f64
-        } else {
-            100.0
-        };
+        let pct = if total > 0 { done as f64 * 100.0 / total as f64 } else { 100.0 };
         eprintln!(
             "[{}] {}/{} points ({:.1}%) | {:.1} pts/s | front {} | eta {}",
             self.label,
             done,
-            self.total,
+            total,
             pct,
             rate,
             self.front.load(Ordering::Relaxed),
             eta,
         );
     }
-
 }
 
 fn format_secs(s: f64) -> String {

@@ -49,6 +49,9 @@ pub enum Phase {
     CampaignParetoInsert,
     CampaignJsonlFlush,
     CampaignResumeMerge,
+    CampaignSearchPropose,
+    CampaignSearchScore,
+    CampaignShardMerge,
     SchedNetwork,
     SchedBaseline2d,
     SchedTierSearch,
@@ -60,7 +63,7 @@ pub enum Phase {
     ServeAnalyze,
 }
 
-pub const N_PHASES: usize = 28;
+pub const N_PHASES: usize = 31;
 
 impl Phase {
     pub const ALL: [Phase; N_PHASES] = [
@@ -83,6 +86,9 @@ impl Phase {
         Phase::CampaignParetoInsert,
         Phase::CampaignJsonlFlush,
         Phase::CampaignResumeMerge,
+        Phase::CampaignSearchPropose,
+        Phase::CampaignSearchScore,
+        Phase::CampaignShardMerge,
         Phase::SchedNetwork,
         Phase::SchedBaseline2d,
         Phase::SchedTierSearch,
@@ -115,6 +121,9 @@ impl Phase {
             Phase::CampaignParetoInsert => "campaign/pareto_insert",
             Phase::CampaignJsonlFlush => "campaign/jsonl_flush",
             Phase::CampaignResumeMerge => "campaign/resume_merge",
+            Phase::CampaignSearchPropose => "campaign/search_propose",
+            Phase::CampaignSearchScore => "campaign/search_score",
+            Phase::CampaignShardMerge => "campaign/shard_merge",
             Phase::SchedNetwork => "schedule/network",
             Phase::SchedBaseline2d => "schedule/baseline_2d",
             Phase::SchedTierSearch => "schedule/tier_search",

@@ -6,7 +6,8 @@
 //! exact result.
 
 use cube3d::campaign::{
-    dse_view, schedule_view, Axis, Campaign, CampaignMode, CampaignPoint, Grid, PointSpec,
+    dse_view, schedule_view, AdaptiveConfig, Axis, Campaign, CampaignMode, CampaignPoint, Grid,
+    PointSpec, SearchMode,
 };
 use cube3d::config::ExperimentConfig;
 use cube3d::dataflow::Dataflow;
@@ -31,13 +32,16 @@ fn configs_dir() -> PathBuf {
 }
 
 fn shipped_configs() -> Vec<PathBuf> {
+    // `configs/` also ships non-campaign configs (the serve loadtest
+    // probe); a campaign config is exactly one `ExperimentConfig` accepts.
     let mut entries: Vec<_> = std::fs::read_dir(configs_dir())
         .expect("configs dir")
         .map(|e| e.unwrap().path())
         .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .filter(|p| ExperimentConfig::from_file(p).is_ok())
         .collect();
     entries.sort();
-    assert!(!entries.is_empty(), "no shipped configs found");
+    assert!(entries.len() >= 6, "campaign configs missing from configs/: {entries:?}");
     entries
 }
 
@@ -466,4 +470,265 @@ fn constraint_levels_are_a_sweep_axis() {
     // The feasible front only ever holds unconstrained-level points.
     assert!(outcome.feasible_front.iter().all(|p| p.feasible()));
     assert!(!outcome.feasible_front.is_empty());
+}
+
+/// Acceptance: with one seed, the `Adaptive` searcher completes the exact
+/// same label sequence, metrics, and fronts on every shipped config — on
+/// fresh evaluators, so equality comes from the deterministic proposal
+/// stream, not a shared cache — and never exceeds its evaluation budget.
+#[test]
+fn adaptive_search_is_seed_deterministic_on_every_shipped_config() {
+    for path in shipped_configs() {
+        let name = path.file_name().unwrap().to_string_lossy().to_string();
+        let cfg = ExperimentConfig::from_file(&path).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let campaign = Campaign::from_config(&cfg, CampaignMode::Point)
+            .unwrap()
+            .search(SearchMode::Adaptive(AdaptiveConfig::default()));
+        let a = campaign.clone().with_evaluator(Arc::new(Evaluator::new())).run();
+        let b = campaign.clone().with_evaluator(Arc::new(Evaluator::new())).run();
+        assert_same_outcome_points(&a.points, &b.points, &name);
+        assert_same_outcome_points(&a.front, &b.front, &format!("{name} front"));
+        assert_same_outcome_points(
+            &a.feasible_front,
+            &b.feasible_front,
+            &format!("{name} feasible front"),
+        );
+        let total = campaign.n_points();
+        let budget = ((total as f64 * 0.25) as usize).max(2).min(total);
+        assert!(
+            a.completed <= budget,
+            "{name}: {} evaluations exceed the {budget} budget",
+            a.completed
+        );
+    }
+}
+
+/// Acceptance: `--shard K/N` runs partition the grid into disjoint streams
+/// whose `merge-campaign` reassembly is **byte-identical** to the stream a
+/// single-process exhaustive run writes, front included.
+#[test]
+fn sharded_runs_partition_the_grid_and_merge_bit_identical() {
+    let campaign = rn0_campaign();
+    let clean_path = tmp_path("shard_clean");
+    let _ = std::fs::remove_file(&clean_path);
+    let clean = campaign.run_streaming(&clean_path).unwrap();
+    assert_eq!(clean.completed, 24);
+
+    let n = 3usize;
+    let mut shard_paths = Vec::new();
+    let mut total_completed = 0usize;
+    for k in 1..=n {
+        let p = tmp_path(&format!("shard{k}of{n}"));
+        let _ = std::fs::remove_file(&p);
+        let sharded = campaign.clone().shard(k, n).unwrap();
+        assert_eq!(sharded.owned_points(), 8, "24 points stride into 8-point shards");
+        let out = sharded.run_streaming(&p).unwrap();
+        assert_eq!(out.completed, 8, "shard {k}");
+        assert_eq!(out.shard_skipped, 16, "shard {k} leaves the other shards' points alone");
+        total_completed += out.completed;
+        shard_paths.push(p);
+    }
+    assert_eq!(total_completed, clean.completed);
+
+    // The shard streams are label-disjoint and jointly complete.
+    let mut seen = std::collections::HashSet::new();
+    for p in &shard_paths {
+        let text = std::fs::read_to_string(p).unwrap();
+        for line in text.lines().skip(1) {
+            let label = CampaignPoint::from_json(&Json::parse(line).unwrap()).unwrap().label;
+            assert!(seen.insert(label), "shard streams must be disjoint");
+        }
+    }
+    assert_eq!(seen.len(), clean.completed);
+
+    let merged_path = tmp_path("shard_merged");
+    let merged = campaign.merge_streams(&shard_paths, &merged_path).unwrap();
+    assert_eq!(merged.completed, clean.completed);
+    assert_eq!(
+        std::fs::read(&merged_path).unwrap(),
+        std::fs::read(&clean_path).unwrap(),
+        "merged stream must be byte-identical to the single-process stream"
+    );
+    assert_same_outcome_points(&merged.front, &clean.front, "merged front");
+    assert_same_outcome_points(
+        &merged.feasible_front,
+        &clean.feasible_front,
+        "merged feasible front",
+    );
+
+    for p in shard_paths.iter().chain([&clean_path, &merged_path]) {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+/// A shard stream's fingerprint pins its exact topology: a different shard
+/// index, a different N, or the unsharded campaign all refuse to resume it,
+/// and a merge given the wrong stream count is rejected up front.
+#[test]
+fn shard_streams_refuse_resume_under_a_different_topology() {
+    let campaign = rn0_campaign();
+    let path = tmp_path("shard_mismatch");
+    let _ = std::fs::remove_file(&path);
+    campaign.clone().shard(1, 3).unwrap().run_streaming(&path).unwrap();
+
+    for other in [
+        campaign.clone().shard(2, 3).unwrap(),
+        campaign.clone().shard(1, 2).unwrap(),
+        campaign.clone(),
+    ] {
+        let err = other.run_streaming(&path).unwrap_err();
+        assert!(format!("{err}").contains("different campaign"), "{err}");
+    }
+
+    let badmerge = tmp_path("shard_badmerge");
+    let err = campaign.merge_streams(&[path.clone()], &badmerge).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("shard 1/3"), "{msg}");
+
+    // Invalid topologies and non-exhaustive sharding never build at all.
+    assert!(campaign.clone().shard(0, 3).is_err());
+    assert!(campaign.clone().shard(4, 3).is_err());
+    assert!(campaign
+        .clone()
+        .search(SearchMode::Adaptive(AdaptiveConfig::default()))
+        .shard(1, 2)
+        .is_err());
+
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&badmerge);
+}
+
+/// Property: the Pareto front of a point set equals the front of the union
+/// of per-shard fronts, for any disjoint stride partition — the invariant
+/// `merge-campaign` relies on to union shard streams in O(front) memory.
+/// Duplicates make tie order insertion-dependent, so fronts are compared as
+/// multisets of objective tuples.
+#[test]
+fn front_union_of_disjoint_shards_equals_the_unsharded_front() {
+    #[derive(Debug, Clone)]
+    struct P(f64, f64, f64);
+    let objs: [Objective<P>; 3] = [|p| p.0, |p| p.1, |p| p.2];
+    let key = |p: &P| (p.0.to_bits(), p.1.to_bits(), p.2.to_bits());
+    let mut rng = Rng::new(0x5AAD);
+    for round in 0..100u32 {
+        let n_pts = rng.gen_range(80) as usize + 1;
+        let pts: Vec<P> = (0..n_pts)
+            .map(|_| {
+                P(
+                    rng.gen_range(8) as f64,
+                    rng.gen_range(8) as f64,
+                    rng.gen_range(8) as f64,
+                )
+            })
+            .collect();
+        let n = rng.gen_range(5) as usize + 1;
+        let mut whole = ParetoSet::new(&objs);
+        for p in &pts {
+            whole.insert(p.clone());
+        }
+        let mut union = ParetoSet::new(&objs);
+        for k in 0..n {
+            let mut shard = ParetoSet::new(&objs);
+            for (i, p) in pts.iter().enumerate() {
+                if i % n == k {
+                    shard.insert(p.clone());
+                }
+            }
+            for m in shard.into_front() {
+                union.insert(m);
+            }
+        }
+        let mut a: Vec<_> = whole.into_front().iter().map(key).collect();
+        let mut b: Vec<_> = union.into_front().iter().map(key).collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "round {round}, {n} shards");
+    }
+}
+
+/// An interrupted `Adaptive` JSONL run resumes to the clean run's exact
+/// stream: the stored prefix re-enters without re-evaluation, the replayed
+/// proposal sequence finishes the rest, and the final file is
+/// byte-identical.
+#[test]
+fn adaptive_jsonl_resume_replays_the_search_deterministically() {
+    let campaign = rn0_campaign().search(SearchMode::Adaptive(AdaptiveConfig::default()));
+    let path = tmp_path("adaptive_resume");
+    let _ = std::fs::remove_file(&path);
+    let clean = campaign.run_streaming(&path).unwrap();
+    assert!(clean.completed >= 2, "adaptive run evaluates at least two points");
+    assert_eq!(clean.points.len(), clean.completed);
+    let clean_bytes = std::fs::read(&path).unwrap();
+    let text = String::from_utf8(clean_bytes.clone()).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), clean.completed + 1, "header plus one line per evaluation");
+
+    // Kill simulation: header, half the points, and a torn line.
+    let keep = clean.points.len() / 2;
+    let mut partial = lines[..keep + 1].join("\n");
+    partial.push_str("\n{\"label\":\"torn-mid-write");
+    std::fs::write(&path, partial).unwrap();
+
+    let resumed = campaign.run_streaming(&path).unwrap();
+    assert_eq!(resumed.resumed, keep, "the stored prefix re-enters without re-evaluation");
+    assert_eq!(resumed.completed, clean.completed);
+    assert_same_outcome_points(&resumed.points, &clean.points, "resumed adaptive run");
+    assert_same_outcome_points(&resumed.front, &clean.front, "resumed adaptive front");
+    assert_eq!(std::fs::read(&path).unwrap(), clean_bytes, "stream is byte-identical again");
+
+    // A third run resumes everything and evaluates nothing new.
+    let third = campaign.run_streaming(&path).unwrap();
+    assert_eq!(third.resumed, clean.completed);
+    assert_eq!(third.completed, clean.completed);
+
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Sharded synthetic streams (the `gen-jsonl --shard` path the CI RSS gate
+/// exercises) are exact line subsets of the unsharded stream, and merging
+/// them reproduces that stream byte-for-byte without any evaluation.
+#[test]
+fn synthetic_shard_streams_merge_to_the_unsharded_stream() {
+    let campaign = rn0_campaign();
+    let whole = tmp_path("synth_whole");
+    let merged = tmp_path("synth_merged");
+    let total = campaign.write_synthetic_stream(&whole).unwrap();
+    assert_eq!(total, 24);
+
+    let n = 4usize;
+    let mut shard_paths = Vec::new();
+    let mut written = 0usize;
+    for k in 1..=n {
+        let p = tmp_path(&format!("synth{k}of{n}"));
+        written += campaign
+            .clone()
+            .shard(k, n)
+            .unwrap()
+            .write_synthetic_stream(&p)
+            .unwrap();
+        shard_paths.push(p);
+    }
+    assert_eq!(written, total);
+
+    // Every shard line appears verbatim in the unsharded stream.
+    let whole_text = std::fs::read_to_string(&whole).unwrap();
+    let whole_lines: std::collections::HashSet<&str> = whole_text.lines().skip(1).collect();
+    for p in &shard_paths {
+        let text = std::fs::read_to_string(p).unwrap();
+        for line in text.lines().skip(1) {
+            assert!(whole_lines.contains(line), "shard line missing from whole stream: {line}");
+        }
+    }
+
+    let outcome = campaign.merge_streams(&shard_paths, &merged).unwrap();
+    assert_eq!(outcome.completed, total);
+    assert_eq!(
+        std::fs::read(&merged).unwrap(),
+        std::fs::read(&whole).unwrap(),
+        "merged synthetic stream must equal the unsharded one"
+    );
+
+    for p in shard_paths.iter().chain([&whole, &merged]) {
+        let _ = std::fs::remove_file(p);
+    }
 }

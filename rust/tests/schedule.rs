@@ -67,10 +67,13 @@ fn all_three_networks_schedule_on_2d_and_3d_points() {
 fn dp_beats_or_matches_greedy_on_every_shipped_config() {
     let dir = configs_dir();
     let mut checked_configs = 0;
+    // Skip non-campaign configs (the serve loadtest probe) — a campaign
+    // config is exactly one `ExperimentConfig` accepts.
     let mut entries: Vec<_> = std::fs::read_dir(&dir)
         .unwrap_or_else(|e| panic!("configs dir {}: {e}", dir.display()))
         .map(|e| e.unwrap().path())
         .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .filter(|p| ExperimentConfig::from_file(p).is_ok())
         .collect();
     entries.sort();
     assert!(!entries.is_empty(), "no shipped configs found in {}", dir.display());

@@ -23,12 +23,12 @@ fn main() {
     let area = thermal_footprint_m2(&arr, &tech);
     let mut b = Bench::default();
     b.run("fig8/one_thermal_study_3tier", || {
-        black_box(thermal_study(&g, &arr, &tech, VerticalTech::Miv, &params, area));
+        black_box(thermal_study(&g, &arr, &tech, VerticalTech::Miv, &params, area).unwrap());
     });
     let big = Array3d::new(256, 256, 3);
     let big_area = thermal_footprint_m2(&big, &tech);
     b.run("fig8/one_thermal_study_3x65536", || {
-        black_box(thermal_study(&g, &big, &tech, VerticalTech::Tsv, &params, big_area));
+        black_box(thermal_study(&g, &big, &tech, VerticalTech::Tsv, &params, big_area).unwrap());
     });
     b.run("fig8/full_report_15_configs", || {
         black_box(fig8::report());

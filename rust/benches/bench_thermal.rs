@@ -1,0 +1,284 @@
+//! Bench TH: the factor-once thermal solver vs the CG reference — the perf
+//! gate the `thermal/factor` refactor is held to. Three questions:
+//!
+//! 1. **Per-solve**: with the factorization amortized (cache warm), how much
+//!    faster is one steady-state solve than Jacobi-preconditioned CG, across
+//!    stack heights? CI (`thermal-smoke`) gates the minimum at ≥ 3×.
+//! 2. **Amortization**: what does one factorization cost, and after how many
+//!    solves does factoring pay for itself (breakeven)?
+//! 3. **End-to-end**: wall time of the constrained `rn0_tsv_sweep`
+//!    (`max_temp_c = 105`) campaign under each backend, on fresh evaluators
+//!    (cold memo cache) so every run pays the full thermal work. The factor
+//!    cache is *process*-level, so repeated runs measure exactly the reuse a
+//!    constrained sweep or schedule search sees; the recorded hit rate must
+//!    stay above 90%.
+//!
+//! Results are written to `BENCH_thermal.json` at the repository root — the
+//! checked-in copy is the perf trajectory; regenerate it with
+//! `cargo bench --bench bench_thermal` (values are machine-dependent).
+
+use cube3d::campaign::{Campaign, CampaignMode};
+use cube3d::config::ExperimentConfig;
+use cube3d::eval::Evaluator;
+use cube3d::power::VerticalTech;
+use cube3d::thermal::{
+    build_network, cached_factor, factor_cache_stats, reset_factor_cache, set_solver_backend,
+    solve_steady_state, SolverBackend, ThermalFactor, ThermalParams,
+};
+use cube3d::util::bench::{black_box, Bench};
+use cube3d::util::json::{obj, Json};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..")
+}
+
+/// Deterministic non-uniform per-die power grids (hot corner + base load).
+fn power_grids(g2: usize, dies: usize) -> Vec<Vec<f64>> {
+    (0..dies)
+        .map(|d| (0..g2).map(|i| 0.002 + 0.001 * ((i * 7 + d * 13) % 10) as f64).collect())
+        .collect()
+}
+
+struct SolveRun {
+    dies: usize,
+    cg_s: f64,
+    factored_s: f64,
+    factorize_s: f64,
+}
+
+impl SolveRun {
+    fn speedup(&self) -> f64 {
+        self.cg_s / self.factored_s
+    }
+
+    /// Solves after which factor-once beats CG-every-time.
+    fn breakeven_solves(&self) -> f64 {
+        let gain = self.cg_s - self.factored_s;
+        if gain > 0.0 {
+            self.factorize_s / gain
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+fn bench_solves(b: &mut Bench, dies: usize) -> SolveRun {
+    let params = ThermalParams::default();
+    let area = 25e-6;
+    let g2 = params.grid * params.grid;
+    let grids = power_grids(g2, dies);
+    let net = build_network(&params, area, &grids, VerticalTech::Tsv);
+    let factor = cached_factor(&params, area, dies, VerticalTech::Tsv).unwrap();
+
+    // Sanity: the two backends must agree before their times mean anything.
+    let reference = solve_steady_state(&net).unwrap();
+    let factored = {
+        let mut p = vec![0.0; factor.n()];
+        for (d, pg) in grids.iter().enumerate() {
+            p[(1 + d) * g2..(2 + d) * g2].copy_from_slice(pg);
+        }
+        factor.solve(&p)
+    };
+    let scale = reference.iter().fold(1e-12f64, |a, &v| a.max((v - net.t_amb).abs()));
+    for (a, c) in factored.iter().zip(&reference) {
+        assert!((a - c).abs() <= 1e-8 * scale, "backends disagree: {a} vs {c}");
+    }
+
+    let cg_s = b
+        .run(&format!("thermal/cg_solve_{dies}d"), || {
+            black_box(solve_steady_state(&net).unwrap());
+        })
+        .mean_s();
+    let factored_s = b
+        .run(&format!("thermal/factored_solve_{dies}d"), || {
+            black_box(factor.solve(&net.p));
+        })
+        .mean_s();
+    let factorize_s = b
+        .run(&format!("thermal/factorize_{dies}d"), || {
+            black_box(ThermalFactor::from_network(&net).unwrap());
+        })
+        .mean_s();
+    let run = SolveRun { dies, cg_s, factored_s, factorize_s };
+    println!(
+        "  {dies} dies: solve speedup {:.1}x   breakeven after {:.1} solves\n",
+        run.speedup(),
+        run.breakeven_solves()
+    );
+    run
+}
+
+struct CampaignRun {
+    points: usize,
+    cg_pts_per_s: f64,
+    factored_pts_per_s: f64,
+    hit_rate: f64,
+}
+
+impl CampaignRun {
+    fn speedup(&self) -> f64 {
+        self.factored_pts_per_s / self.cg_pts_per_s
+    }
+}
+
+/// The constrained rn0 sweep under each backend. Fresh full-pipeline
+/// evaluator per run (cold memo cache); the process-level factor cache is
+/// reset once before the factored section so the recorded hit rate covers
+/// exactly these runs.
+fn bench_campaign(b: &mut Bench) -> CampaignRun {
+    let mut cfg =
+        ExperimentConfig::from_file(&repo_root().join("configs").join("rn0_tsv_sweep.json"))
+            .expect("shipped config parses");
+    cfg.constraints.max_temp_c = Some(105.0);
+    let campaign =
+        Campaign::from_config(&cfg, CampaignMode::Point).expect("config builds a campaign");
+    let points = campaign
+        .clone()
+        .with_evaluator(Arc::new(Evaluator::full()))
+        .run_serial()
+        .points
+        .len();
+
+    set_solver_backend(Some(SolverBackend::Cg));
+    let cg_s = b
+        .run("thermal/rn0_sweep_105c_cg", || {
+            let c = campaign.clone().with_evaluator(Arc::new(Evaluator::full()));
+            black_box(c.run_serial());
+        })
+        .mean_s();
+
+    set_solver_backend(Some(SolverBackend::Factored));
+    reset_factor_cache();
+    let before = factor_cache_stats();
+    let factored_s = b
+        .run("thermal/rn0_sweep_105c_factored", || {
+            let c = campaign.clone().with_evaluator(Arc::new(Evaluator::full()));
+            black_box(c.run_serial());
+        })
+        .mean_s();
+    let after = factor_cache_stats();
+    set_solver_backend(None);
+
+    let hits = (after.hits - before.hits) as f64;
+    let misses = (after.misses - before.misses) as f64;
+    let run = CampaignRun {
+        points,
+        cg_pts_per_s: points as f64 / cg_s,
+        factored_pts_per_s: points as f64 / factored_s,
+        hit_rate: hits / (hits + misses).max(1.0),
+    };
+    println!(
+        "  rn0 sweep @105C: {} points   cg {:.1} pts/s   factored {:.1} pts/s   \
+         ({:.2}x, {:.1}% factor-cache hits)\n",
+        run.points,
+        run.cg_pts_per_s,
+        run.factored_pts_per_s,
+        run.speedup(),
+        run.hit_rate * 100.0
+    );
+    run
+}
+
+/// Today's UTC date as `YYYY-MM-DD` (civil-from-days; no date crate).
+fn civil_date_utc() -> String {
+    let secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let z = (secs / 86_400) as i64 + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097);
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 };
+    let y = yoe + era * 400 + i64::from(m <= 2);
+    format!("{y:04}-{m:02}-{d:02}")
+}
+
+/// The trajectory carried over from the checked-in artifact, if any.
+fn prior_trajectory(path: &std::path::Path) -> Vec<Json> {
+    std::fs::read_to_string(path)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok())
+        .and_then(|j| match j.get("trajectory") {
+            Some(Json::Arr(entries)) => Some(entries.clone()),
+            _ => None,
+        })
+        .unwrap_or_default()
+}
+
+fn main() {
+    println!("== bench_thermal: cached Cholesky vs CG, per-solve and end-to-end ==\n");
+    let mut b = Bench::default();
+
+    let solves: Vec<SolveRun> =
+        [2usize, 3, 8, 12].iter().map(|&d| bench_solves(&mut b, d)).collect();
+    let per_solve_speedup_min =
+        solves.iter().map(SolveRun::speedup).fold(f64::INFINITY, f64::min);
+
+    let campaign = bench_campaign(&mut b);
+
+    let out = repo_root().join("BENCH_thermal.json");
+    let mut trajectory = prior_trajectory(&out);
+    trajectory.push(obj([
+        ("date", Json::Str(civil_date_utc())),
+        ("per_solve_speedup_min", Json::Num(per_solve_speedup_min)),
+        ("campaign_speedup", Json::Num(campaign.speedup())),
+        ("factor_cache_hit_rate", Json::Num(campaign.hit_rate)),
+    ]));
+
+    let doc = obj([
+        ("bench", Json::Str("bench_thermal".to_string())),
+        (
+            "note",
+            Json::Str(
+                "cached envelope-Cholesky vs Jacobi-CG on the RC thermal grid; \
+                 regenerate with `cargo bench --bench bench_thermal` (machine-dependent)"
+                    .to_string(),
+            ),
+        ),
+        ("populated", Json::Bool(true)),
+        (
+            "per_solve",
+            Json::Arr(
+                solves
+                    .iter()
+                    .map(|s| {
+                        obj([
+                            ("dies", Json::Num(s.dies as f64)),
+                            ("cg_solve_s", Json::Num(s.cg_s)),
+                            ("factored_solve_s", Json::Num(s.factored_s)),
+                            ("factorize_s", Json::Num(s.factorize_s)),
+                            ("speedup", Json::Num(s.speedup())),
+                            ("breakeven_solves", Json::Num(s.breakeven_solves())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("per_solve_speedup_min", Json::Num(per_solve_speedup_min)),
+        (
+            "campaign",
+            obj([
+                ("config", Json::Str("rn0_tsv_sweep.json".to_string())),
+                ("max_temp_c", Json::Num(105.0)),
+                ("points", Json::Num(campaign.points as f64)),
+                ("cg_points_per_sec", Json::Num(campaign.cg_pts_per_s)),
+                ("factored_points_per_sec", Json::Num(campaign.factored_pts_per_s)),
+                ("speedup", Json::Num(campaign.speedup())),
+                ("factor_cache_hit_rate", Json::Num(campaign.hit_rate)),
+            ]),
+        ),
+        ("trajectory", Json::Arr(trajectory)),
+        (
+            "samples",
+            Json::Arr(b.results().iter().map(|r| r.to_json()).collect()),
+        ),
+    ]);
+    std::fs::write(&out, doc.to_string_pretty() + "\n").expect("write BENCH_thermal.json");
+    println!("wrote {}", out.display());
+}

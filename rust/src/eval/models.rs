@@ -18,6 +18,8 @@
 //! over is built from the same memoized evaluator points as everything
 //! else.
 
+use std::cell::RefCell;
+
 use super::metrics::Metrics;
 use super::scenario::{ArrayChoice, Scenario, TierChoice};
 use crate::analytical::{Array3d, OptimalDesign};
@@ -25,7 +27,7 @@ use crate::area::{tier_area_m2, total_area_m2};
 use crate::power::{power_map, power_summary, VerticalTech};
 use crate::schedule::NetworkMetrics;
 use crate::thermal::{
-    coarsen_power_map, stack_study, thermal_footprint_m2, thermal_study, ThermalParams,
+    coarsen_power_map_into, stack_study, thermal_footprint_m2, thermal_study, ThermalParams,
 };
 use crate::workloads::Gemm;
 
@@ -285,14 +287,18 @@ impl CostModel for ThermalModel {
         let g = s.workload.primary_gemm();
         let (_, d3) = designs_from(s, m);
         let arr = d3.array3d();
-        m.thermal = Some(thermal_study(
+        // A malformed network fails this point (thermal stays None, so any
+        // thermal constraint reads as unverifiable ⇒ infeasible), never the
+        // whole campaign process.
+        m.thermal = thermal_study(
             &g,
             &arr,
             &s.tech,
             s.vtech,
             &self.params,
             thermal_footprint_m2(&arr, &s.tech),
-        ));
+        )
+        .ok();
     }
 
     fn evaluate_network(&self, s: &Scenario, r: &ResolvedNetwork, out: &mut NetworkMetrics) {
@@ -326,38 +332,56 @@ impl CostModel for ThermalModel {
         if !footprint.is_finite() || footprint <= 0.0 {
             return;
         }
-        let mut grids: Vec<Vec<f64>> = Vec::with_capacity(out.tiers as usize);
-        for st in &out.stages {
-            let mut die = vec![0.0f64; g2];
-            for l in st.first_layer..st.first_layer + st.n_layers {
-                let m = &r.stage_points[l];
-                let arr = m.design_3d.expect("checked above").array3d();
-                let maps = power_map(&r.gemms[l], &arr, &s.tech, s.vtech);
-                let coarse = coarsen_power_map(
-                    &maps[0],
-                    arr.rows as usize,
-                    arr.cols as usize,
-                    grid,
-                );
-                let duty =
-                    m.cycles_3d.expect("checked above") as f64 / out.interval_cycles as f64;
-                for (acc, v) in die.iter_mut().zip(&coarse) {
-                    *acc += v * duty;
-                }
+        // Thread-local accumulation grids + coarsening buffer: the schedule
+        // tier-search calls this pass per candidate, so per-call `Vec`s were
+        // measurable churn. Stages fill the leading dies; tiers beyond the
+        // last stage idle at (freshly re-zeroed) zero power.
+        out.thermal = NET_GRIDS.with(|grids_cell| {
+            let mut grids = grids_cell.borrow_mut();
+            grids.resize_with(out.tiers as usize, Vec::new);
+            for die in grids.iter_mut() {
+                die.clear();
+                die.resize(g2, 0.0);
             }
-            if let Some(tr) = st.in_traffic {
-                let w = tr.energy_j / t_interval / g2 as f64;
-                for acc in die.iter_mut() {
-                    *acc += w;
+            NET_COARSE.with(|coarse_cell| {
+                let mut coarse = coarse_cell.borrow_mut();
+                for (st, die) in out.stages.iter().zip(grids.iter_mut()) {
+                    for l in st.first_layer..st.first_layer + st.n_layers {
+                        let m = &r.stage_points[l];
+                        let arr = m.design_3d.expect("checked above").array3d();
+                        let maps = power_map(&r.gemms[l], &arr, &s.tech, s.vtech);
+                        coarsen_power_map_into(
+                            &maps[0],
+                            arr.rows as usize,
+                            arr.cols as usize,
+                            grid,
+                            &mut coarse,
+                        );
+                        let duty =
+                            m.cycles_3d.expect("checked above") as f64 / out.interval_cycles as f64;
+                        for (acc, v) in die.iter_mut().zip(coarse.iter()) {
+                            *acc += v * duty;
+                        }
+                    }
+                    if let Some(tr) = st.in_traffic {
+                        let w = tr.energy_j / t_interval / g2 as f64;
+                        for acc in die.iter_mut() {
+                            *acc += w;
+                        }
+                    }
                 }
-            }
-            grids.push(die);
-        }
-        while grids.len() < out.tiers as usize {
-            grids.push(vec![0.0; g2]);
-        }
-        out.thermal = Some(stack_study(&self.params, footprint, &grids, s.vtech));
+            });
+            stack_study(&self.params, footprint, &grids, s.vtech).ok()
+        });
     }
+}
+
+thread_local! {
+    // Reused buffers for the heterogeneous network pass (see above). The
+    // threadpool spawns scoped workers per batch, so each worker keeps its
+    // own pair for the duration of its chunk.
+    static NET_GRIDS: RefCell<Vec<Vec<f64>>> = const { RefCell::new(Vec::new()) };
+    static NET_COARSE: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
 }
 
 #[cfg(test)]

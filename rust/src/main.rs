@@ -721,6 +721,12 @@ fn stream_campaign_json(campaign: &Campaign, args: &Args) -> anyhow::Result<Camp
     wbuf.clear();
     outcome.cache.write_compact(&mut wbuf);
     out.write_all(wbuf.as_str().as_bytes())?;
+    // Thermal factor reuse across the campaign's constrained points (same
+    // CacheStats shape as the memo cache; zeros when no thermal ran).
+    out.write_all(b",\"thermal_factor_cache\":")?;
+    wbuf.clear();
+    cube3d::thermal::factor_cache_stats().write_compact(&mut wbuf);
+    out.write_all(wbuf.as_str().as_bytes())?;
     // With tracing on, the per-phase attribution table rides next to the
     // cache stats (same streamed-writer discipline, sorted keys).
     if cube3d::obs::enabled() {
@@ -1224,6 +1230,11 @@ fn network_json(s: &Scenario, m: &cube3d::schedule::NetworkMetrics, feasible: Op
         (
             "cache",
             cube3d::eval::shared_schedule_evaluator().cache_stats().to_json(),
+        ),
+        // Factor reuse in the stack solves behind this schedule run.
+        (
+            "thermal_factor_cache",
+            cube3d::thermal::factor_cache_stats().to_json(),
         ),
     ]);
     // With tracing on, the per-phase attribution table rides next to the

@@ -61,9 +61,12 @@ pub enum Phase {
     ServeExecute,
     ServeReply,
     ServeAnalyze,
+    ThermalFactor,
+    ThermalSolve,
+    ThermalFactorCacheHit,
 }
 
-pub const N_PHASES: usize = 31;
+pub const N_PHASES: usize = 34;
 
 impl Phase {
     pub const ALL: [Phase; N_PHASES] = [
@@ -98,6 +101,9 @@ impl Phase {
         Phase::ServeExecute,
         Phase::ServeReply,
         Phase::ServeAnalyze,
+        Phase::ThermalFactor,
+        Phase::ThermalSolve,
+        Phase::ThermalFactorCacheHit,
     ];
 
     pub fn name(self) -> &'static str {
@@ -133,6 +139,9 @@ impl Phase {
             Phase::ServeExecute => "serve/execute",
             Phase::ServeReply => "serve/reply",
             Phase::ServeAnalyze => "serve/analyze",
+            Phase::ThermalFactor => "thermal/factor",
+            Phase::ThermalSolve => "thermal/solve",
+            Phase::ThermalFactorCacheHit => "thermal/factor_cache_hit",
         }
     }
 

@@ -1,0 +1,504 @@
+//! Factor-once steady-state thermal solves (see DESIGN.md §Perf).
+//!
+//! The steady-state system `(L + diag(g_amb)) · T' = P` depends only on the
+//! stack *geometry* — grid side G, die count, die footprint, vertical tech,
+//! and the material constants in [`ThermalParams`] — while the power vector
+//! `P` changes on every evaluated design point. A constrained campaign or a
+//! schedule tier-search therefore re-solves the *same* SPD matrix thousands
+//! of times with different right-hand sides. This module factors that matrix
+//! once.
+//!
+//! The network is a structured G×G×D mesh in natural ordering: spreader
+//! cells `0..G²`, then die d at `(1+d)·G²`, then one lumped sink node tied
+//! to every spreader cell. Row i's nonzeros all lie in `first[i]..=i` where
+//! `first[i]` is its lowest-numbered neighbor, so an envelope (profile)
+//! Cholesky factorization fills only within that band — bandwidth ≈ G² — and
+//! each subsequent solve is two triangular sweeps, O(n·bandwidth), with zero
+//! allocation on the reused-buffer path. For G = 16 and 3 dies (n = 1025)
+//! the envelope holds ~200k doubles; 12 dies (n = 3329) ~790k (≈ 6 MiB).
+//!
+//! [`cached_factor`] keys factors by the exact geometry tuple (bit patterns
+//! of every `f64`, so distinct geometries can never alias) in a
+//! process-shared bounded LRU; `eval::CacheStats`-shaped counters surface
+//! through [`factor_cache_stats`]. Jacobi-CG stays available as the
+//! reference solver behind the same [`SteadySolver`] trait
+//! (`CUBE3D_THERMAL_SOLVER=cg` or [`set_solver_backend`]), differential-
+//! tested to ≤ 1e-8 relative agreement in `tests/thermal_factor.rs`.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::grid::{build_network, Network};
+use super::stack::ThermalParams;
+use crate::eval::CacheStats;
+use crate::obs;
+use crate::power::VerticalTech;
+
+/// Typed failure of a steady-state thermal solve. A malformed network
+/// (e.g. no ambient tie) fails the design point, not the campaign process.
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum ThermalError {
+    /// Cholesky hit a non-positive pivot: the conductance system is not
+    /// SPD, i.e. some node has no path to ambient.
+    #[error("thermal network is not SPD at node {node} (pivot {pivot:.3e}): malformed stack")]
+    NotSpd { node: usize, pivot: f64 },
+    /// The CG reference solver exhausted its iteration budget.
+    #[error("CG failed to converge after {iterations} iterations (residual {residual:.3e})")]
+    CgDiverged { iterations: usize, residual: f64 },
+}
+
+/// Envelope Cholesky factor `L·Lᵀ` of one conductance system, plus the
+/// ambient offset needed to turn rises into absolute temperatures.
+///
+/// Row-profile storage: row i holds columns `first[i]..=i` contiguously in
+/// `data` starting at `offsets[i]` (skyline format — no per-entry column
+/// indices, no fill outside the envelope).
+#[derive(Debug, Clone)]
+pub struct ThermalFactor {
+    n: usize,
+    t_amb: f64,
+    first: Vec<usize>,
+    offsets: Vec<usize>,
+    data: Vec<f64>,
+}
+
+impl ThermalFactor {
+    /// Factor the steady-state matrix `L + diag(g_amb)` of a network.
+    pub fn from_network(net: &Network) -> Result<ThermalFactor, ThermalError> {
+        Self::build(net, None)
+    }
+
+    /// Factor `L + diag(g_amb) + diag(extra)` — the backward-Euler iteration
+    /// matrix when `extra = C/dt` (see [`super::transient`]). One factor
+    /// then amortizes across every implicit timestep.
+    pub fn with_extra_diag(net: &Network, extra: &[f64]) -> Result<ThermalFactor, ThermalError> {
+        assert_eq!(extra.len(), net.n);
+        Self::build(net, Some(extra))
+    }
+
+    fn build(net: &Network, extra: Option<&[f64]>) -> Result<ThermalFactor, ThermalError> {
+        let n = net.n;
+        // Row profile: everything from the lowest-numbered neighbor up to
+        // the diagonal (symmetric matrix, lower triangle stored).
+        let mut first = vec![0usize; n];
+        for (i, f) in first.iter_mut().enumerate() {
+            *f = net.neighbors[i]
+                .iter()
+                .map(|&(j, _)| j)
+                .filter(|&j| j < i)
+                .fold(i, usize::min);
+        }
+        let mut offsets = vec![0usize; n + 1];
+        for i in 0..n {
+            offsets[i + 1] = offsets[i] + (i - first[i] + 1);
+        }
+        let mut data = vec![0.0f64; offsets[n]];
+
+        // Assemble A = L + diag(g_amb) [+ diag(extra)] into the envelope.
+        for i in 0..n {
+            let row = offsets[i];
+            let mut diag = net.g_amb[i];
+            for &(j, g) in &net.neighbors[i] {
+                diag += g;
+                if j < i {
+                    data[row + (j - first[i])] -= g;
+                }
+            }
+            if let Some(extra) = extra {
+                diag += extra[i];
+            }
+            data[row + (i - first[i])] = diag;
+        }
+
+        // In-place envelope Cholesky: rows < i are final when row i starts,
+        // so split the storage at the current row to satisfy the borrows.
+        for i in 0..n {
+            let fi = first[i];
+            let (prev, cur) = data.split_at_mut(offsets[i]);
+            for j in fi..i {
+                let fj = first[j];
+                let lo = fi.max(fj);
+                let rj = offsets[j] + (lo - fj);
+                let sum: f64 = cur[lo - fi..j - fi]
+                    .iter()
+                    .zip(&prev[rj..rj + (j - lo)])
+                    .map(|(a, b)| a * b)
+                    .sum();
+                cur[j - fi] = (cur[j - fi] - sum) / prev[offsets[j] + (j - fj)];
+            }
+            let d = cur[i - fi] - cur[..i - fi].iter().map(|v| v * v).sum::<f64>();
+            if d <= 0.0 || !d.is_finite() {
+                return Err(ThermalError::NotSpd { node: i, pivot: d });
+            }
+            cur[i - fi] = d.sqrt();
+        }
+
+        Ok(ThermalFactor { n, t_amb: net.t_amb, first, offsets, data })
+    }
+
+    /// Number of nodes.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Stored envelope entries (factor memory footprint in doubles).
+    pub fn envelope_len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// In-place solve of `A·x = b` where `x` enters holding `b` (temperature
+    /// *rises* over ambient): forward sweep `L·z = b`, then the transposed
+    /// backward sweep expressed over the row storage.
+    pub fn solve_rise_in_place(&self, x: &mut [f64]) {
+        assert_eq!(x.len(), self.n);
+        for i in 0..self.n {
+            let fi = self.first[i];
+            let row = &self.data[self.offsets[i]..self.offsets[i + 1]];
+            let sum: f64 = row[..i - fi].iter().zip(&x[fi..i]).map(|(l, z)| l * z).sum();
+            x[i] = (x[i] - sum) / row[i - fi];
+        }
+        for i in (0..self.n).rev() {
+            let fi = self.first[i];
+            let row = &self.data[self.offsets[i]..self.offsets[i + 1]];
+            x[i] /= row[i - fi];
+            let xi = x[i];
+            for (l, xk) in row[..i - fi].iter().zip(&mut x[fi..i]) {
+                *xk -= l * xi;
+            }
+        }
+    }
+
+    /// Solve into a reusable buffer (cleared and refilled): the
+    /// zero-allocation hot path for campaigns and transient stepping.
+    pub fn solve_rise_into(&self, b: &[f64], x: &mut Vec<f64>) {
+        x.clear();
+        x.extend_from_slice(b);
+        self.solve_rise_in_place(x);
+    }
+
+    /// Temperature rises over ambient for one power vector.
+    pub fn solve_rise(&self, p: &[f64]) -> Vec<f64> {
+        let mut x = p.to_vec();
+        self.solve_rise_in_place(&mut x);
+        x
+    }
+
+    /// Absolute temperatures (°C) for one power vector — the drop-in
+    /// counterpart of [`super::solver::solve_steady_state`].
+    pub fn solve(&self, p: &[f64]) -> Vec<f64> {
+        let _span = obs::span(obs::Phase::ThermalSolve);
+        let mut x = p.to_vec();
+        self.solve_rise_in_place(&mut x);
+        for v in &mut x {
+            *v += self.t_amb;
+        }
+        x
+    }
+
+    /// Batched multi-RHS solve: absolute temperatures for each power vector
+    /// against the one factor.
+    pub fn solve_many(&self, ps: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        ps.iter().map(|p| self.solve(p)).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Process-shared factor cache
+// ---------------------------------------------------------------------------
+
+/// Bound on cached factors. `rn0_tsv_sweep.json` visits 24 distinct
+/// geometries (3 budgets × 8 tier counts); 32 keeps a full constrained
+/// campaign resident without thrashing while capping worst-case memory at a
+/// couple hundred MiB of envelopes.
+pub const FACTOR_CACHE_CAPACITY: usize = 32;
+
+/// Exact geometry fingerprint: every `f64` enters as its bit pattern, so
+/// two geometries share a factor only when each constant is bit-identical.
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct FactorKey {
+    grid: usize,
+    dies: usize,
+    die_area_bits: u64,
+    vtech: VerticalTech,
+    param_bits: [u64; 10],
+}
+
+impl FactorKey {
+    fn of(params: &ThermalParams, die_area_m2: f64, dies: usize, vtech: VerticalTech) -> FactorKey {
+        FactorKey {
+            grid: params.grid,
+            dies,
+            die_area_bits: die_area_m2.to_bits(),
+            vtech,
+            param_bits: [
+                params.ambient_c.to_bits(),
+                params.k_si.to_bits(),
+                params.t_die.to_bits(),
+                params.k_tim.to_bits(),
+                params.t_tim.to_bits(),
+                params.k_spreader.to_bits(),
+                params.t_spreader.to_bits(),
+                params.r_conv_fixed.to_bits(),
+                params.r_spread_unit.to_bits(),
+                params.sink_mass_j_per_k.to_bits(),
+            ],
+        }
+    }
+}
+
+/// Map + LRU order behind one lock; factorization happens while holding it,
+/// so concurrent misses on the same geometry factor exactly once (the
+/// second thread blocks, then hits).
+struct FactorCacheState {
+    map: HashMap<FactorKey, Arc<ThermalFactor>>,
+    order: VecDeque<FactorKey>,
+}
+
+static FACTOR_CACHE: OnceLock<Mutex<FactorCacheState>> = OnceLock::new();
+static FACTOR_HITS: AtomicU64 = AtomicU64::new(0);
+static FACTOR_MISSES: AtomicU64 = AtomicU64::new(0);
+static FACTOR_EVICTIONS: AtomicU64 = AtomicU64::new(0);
+
+fn factor_cache() -> &'static Mutex<FactorCacheState> {
+    FACTOR_CACHE.get_or_init(|| {
+        Mutex::new(FactorCacheState { map: HashMap::new(), order: VecDeque::new() })
+    })
+}
+
+/// Fetch (or compute and insert) the factor for one stack geometry. The
+/// returned factor is shared — solve against it with per-point power
+/// vectors. Errors are not cached.
+pub fn cached_factor(
+    params: &ThermalParams,
+    die_area_m2: f64,
+    dies: usize,
+    vtech: VerticalTech,
+) -> Result<Arc<ThermalFactor>, ThermalError> {
+    let key = FactorKey::of(params, die_area_m2, dies, vtech);
+    let mut cache = factor_cache().lock().unwrap();
+    let hit = cache.map.get(&key).cloned();
+    if let Some(factor) = hit {
+        FACTOR_HITS.fetch_add(1, Ordering::Relaxed);
+        obs::count(obs::Phase::ThermalFactorCacheHit);
+        if let Some(pos) = cache.order.iter().position(|k| *k == key) {
+            cache.order.remove(pos);
+            cache.order.push_back(key);
+        }
+        return Ok(factor);
+    }
+    FACTOR_MISSES.fetch_add(1, Ordering::Relaxed);
+    let factor = {
+        let _span = obs::span(obs::Phase::ThermalFactor);
+        let g2 = params.grid * params.grid;
+        let zero_grids = vec![vec![0.0f64; g2]; dies];
+        let net = build_network(params, die_area_m2, &zero_grids, vtech);
+        Arc::new(ThermalFactor::from_network(&net)?)
+    };
+    cache.map.insert(key.clone(), factor.clone());
+    cache.order.push_back(key);
+    if cache.map.len() > FACTOR_CACHE_CAPACITY {
+        if let Some(oldest) = cache.order.pop_front() {
+            cache.map.remove(&oldest);
+            FACTOR_EVICTIONS.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    Ok(factor)
+}
+
+/// One consistent snapshot of the factor-cache counters, in the same shape
+/// campaign outcomes and `--json` output already use for the memo cache.
+pub fn factor_cache_stats() -> CacheStats {
+    CacheStats {
+        hits: FACTOR_HITS.load(Ordering::Relaxed),
+        misses: FACTOR_MISSES.load(Ordering::Relaxed),
+        evictions: FACTOR_EVICTIONS.load(Ordering::Relaxed),
+        len: factor_cache().lock().unwrap().map.len(),
+        capacity: FACTOR_CACHE_CAPACITY,
+    }
+}
+
+/// Drop every cached factor (bench support; counters are left running so
+/// concurrent readers only ever see them increase).
+pub fn reset_factor_cache() {
+    let mut cache = factor_cache().lock().unwrap();
+    cache.map.clear();
+    cache.order.clear();
+}
+
+// ---------------------------------------------------------------------------
+// Solver backend selection
+// ---------------------------------------------------------------------------
+
+/// Which steady-state solver the stack drivers use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolverBackend {
+    /// Cached envelope-Cholesky factor + triangular solves (default).
+    Factored,
+    /// Jacobi-preconditioned CG from scratch (the reference path).
+    Cg,
+}
+
+/// 0 = no override (env/default), 1 = Factored, 2 = Cg.
+static BACKEND_OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+/// Force a backend process-wide (benches and A/B comparisons); `None`
+/// restores the `CUBE3D_THERMAL_SOLVER` / default behavior. Tests should
+/// prefer the explicit `*_with` entry points instead — they run in parallel.
+pub fn set_solver_backend(backend: Option<SolverBackend>) {
+    let v = match backend {
+        None => 0,
+        Some(SolverBackend::Factored) => 1,
+        Some(SolverBackend::Cg) => 2,
+    };
+    BACKEND_OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+/// The backend in effect: the [`set_solver_backend`] override if any, else
+/// `CUBE3D_THERMAL_SOLVER=cg` (read once), else [`SolverBackend::Factored`].
+pub fn solver_backend() -> SolverBackend {
+    match BACKEND_OVERRIDE.load(Ordering::Relaxed) {
+        1 => SolverBackend::Factored,
+        2 => SolverBackend::Cg,
+        _ => {
+            static ENV_DEFAULT: OnceLock<SolverBackend> = OnceLock::new();
+            *ENV_DEFAULT.get_or_init(|| match std::env::var("CUBE3D_THERMAL_SOLVER") {
+                Ok(v) if v.eq_ignore_ascii_case("cg") => SolverBackend::Cg,
+                _ => SolverBackend::Factored,
+            })
+        }
+    }
+}
+
+/// Common interface over the factored and CG steady-state solvers, so
+/// callers (and differential tests) can swap them freely.
+pub trait SteadySolver: Sync {
+    fn name(&self) -> &'static str;
+    /// Absolute temperatures (°C) of every node of `net`.
+    fn steady_temps(&self, net: &Network) -> Result<Vec<f64>, ThermalError>;
+}
+
+/// [`SteadySolver`] over a fresh (uncached) envelope-Cholesky factor.
+pub struct FactoredSolver;
+
+impl SteadySolver for FactoredSolver {
+    fn name(&self) -> &'static str {
+        "factored"
+    }
+
+    fn steady_temps(&self, net: &Network) -> Result<Vec<f64>, ThermalError> {
+        Ok(ThermalFactor::from_network(net)?.solve(&net.p))
+    }
+}
+
+/// [`SteadySolver`] over Jacobi-preconditioned conjugate gradients.
+pub struct CgSolver;
+
+impl SteadySolver for CgSolver {
+    fn name(&self) -> &'static str {
+        "cg"
+    }
+
+    fn steady_temps(&self, net: &Network) -> Result<Vec<f64>, ThermalError> {
+        super::solver::solve_steady_state(net)
+    }
+}
+
+impl SolverBackend {
+    /// The solver object for this backend.
+    pub fn solver(self) -> &'static dyn SteadySolver {
+        match self {
+            SolverBackend::Factored => &FactoredSolver,
+            SolverBackend::Cg => &CgSolver,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::thermal::solver::solve_steady_state;
+
+    /// Same hand net as solver.rs::two_node_analytic: T0 = 48, T1 = 49.5.
+    #[test]
+    fn two_node_analytic() {
+        let net = Network {
+            n: 2,
+            neighbors: vec![vec![(1, 2.0)], vec![(0, 2.0)]],
+            g_amb: vec![1.0, 0.0],
+            p: vec![0.0, 3.0],
+            t_amb: 45.0,
+            grid: 1,
+            dies: 1,
+        };
+        let f = ThermalFactor::from_network(&net).unwrap();
+        let t = f.solve(&net.p);
+        assert!((t[0] - 48.0).abs() < 1e-9, "t0 {}", t[0]);
+        assert!((t[1] - 49.5).abs() < 1e-9, "t1 {}", t[1]);
+    }
+
+    #[test]
+    fn matches_cg_on_a_built_stack() {
+        let params = ThermalParams::default();
+        let g2 = params.grid * params.grid;
+        let pg: Vec<f64> = (0..g2).map(|i| 0.01 + (i % 5) as f64 * 0.002).collect();
+        let net = build_network(&params, 25e-6, &[pg.clone(), pg.clone(), pg], VerticalTech::Tsv);
+        let cg = solve_steady_state(&net).unwrap();
+        let t = ThermalFactor::from_network(&net).unwrap().solve(&net.p);
+        let scale = cg.iter().map(|v| (v - net.t_amb).abs()).fold(0.0f64, f64::max);
+        for (a, b) in t.iter().zip(&cg) {
+            assert!((a - b).abs() <= 1e-8 * scale, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn extra_diag_solves_shifted_system() {
+        // (A + diag(e))·x = b ⇒ residual of the original operator must be
+        // b − diag(e)·x exactly.
+        let params = ThermalParams::default();
+        let g2 = params.grid * params.grid;
+        let pg = vec![0.05; g2];
+        let net = build_network(&params, 16e-6, &[pg.clone(), pg], VerticalTech::Miv);
+        let extra: Vec<f64> = (0..net.n).map(|i| 0.5 + (i % 3) as f64).collect();
+        let f = ThermalFactor::with_extra_diag(&net, &extra).unwrap();
+        let x = f.solve_rise(&net.p);
+        // A·x (graph operator) per node.
+        for i in 0..net.n {
+            let mut ax = net.g_amb[i] * x[i];
+            for &(j, g) in &net.neighbors[i] {
+                ax += g * (x[i] - x[j]);
+            }
+            let want = net.p[i] - extra[i] * x[i];
+            assert!((ax - want).abs() < 1e-9, "node {i}: {ax} vs {want}");
+        }
+    }
+
+    #[test]
+    fn zero_power_is_exact_ambient() {
+        let params = ThermalParams::default();
+        let g2 = params.grid * params.grid;
+        let net = build_network(&params, 25e-6, &[vec![0.0; g2]], VerticalTech::Tsv);
+        let f = ThermalFactor::from_network(&net).unwrap();
+        let t = f.solve(&net.p);
+        // Triangular sweeps of a zero RHS stay exactly zero: bitwise ambient.
+        assert!(t.iter().all(|&v| v == params.ambient_c));
+    }
+
+    #[test]
+    fn floating_network_is_not_spd() {
+        // No ambient tie anywhere ⇒ singular Laplacian ⇒ typed error.
+        let net = Network {
+            n: 2,
+            neighbors: vec![vec![(1, 1.0)], vec![(0, 1.0)]],
+            g_amb: vec![0.0, 0.0],
+            p: vec![0.0, 1.0],
+            t_amb: 45.0,
+            grid: 1,
+            dies: 1,
+        };
+        assert!(matches!(
+            ThermalFactor::from_network(&net),
+            Err(ThermalError::NotSpd { .. })
+        ));
+    }
+}

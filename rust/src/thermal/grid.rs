@@ -52,8 +52,24 @@ impl Network {
 /// Coarsen a per-MAC power map (row-major R×C) onto a G×G grid by summing
 /// cell powers. Preserves total power exactly.
 pub fn coarsen_power_map(map: &[f64], rows: usize, cols: usize, grid: usize) -> Vec<f64> {
+    let mut out = Vec::new();
+    coarsen_power_map_into(map, rows, cols, grid, &mut out);
+    out
+}
+
+/// [`coarsen_power_map`] into a reused buffer (cleared and refilled) — the
+/// allocation-free path hot loops use; summation order is identical, so the
+/// output is bit-for-bit the same.
+pub fn coarsen_power_map_into(
+    map: &[f64],
+    rows: usize,
+    cols: usize,
+    grid: usize,
+    out: &mut Vec<f64>,
+) {
     assert_eq!(map.len(), rows * cols);
-    let mut out = vec![0.0; grid * grid];
+    out.clear();
+    out.resize(grid * grid, 0.0);
     for r in 0..rows {
         let gx = r * grid / rows;
         for c in 0..cols {
@@ -61,7 +77,6 @@ pub fn coarsen_power_map(map: &[f64], rows: usize, cols: usize, grid: usize) -> 
             out[gx * grid + gy] += map[r * cols + c];
         }
     }
-    out
 }
 
 /// Build the thermal network for a stack of `power_grids.len()` dies
@@ -196,7 +211,7 @@ mod tests {
         let g2 = params.grid * params.grid;
         let power = vec![vec![5.0 / g2 as f64; g2]]; // 5 W total
         let net = build_network(&params, 25e-6, &power, VerticalTech::Tsv);
-        let t = solve_steady_state(&net);
+        let t = solve_steady_state(&net).unwrap();
         // Every die node must be above ambient.
         for &temp in net.die_temps(&t, 0) {
             assert!(temp > params.ambient_c);
@@ -211,7 +226,7 @@ mod tests {
         let g2 = params.grid * params.grid;
         let power = vec![vec![3.0 / g2 as f64; g2]];
         let net = build_network(&params, 25e-6, &power, VerticalTech::Miv);
-        let t = solve_steady_state(&net);
+        let t = solve_steady_state(&net).unwrap();
         let out = net.g_amb[net.sink()] * (t[net.sink()] - net.t_amb);
         assert!((out - 3.0).abs() < 1e-6, "heat out {out}");
     }
@@ -223,7 +238,7 @@ mod tests {
         let mut pg = vec![0.0; g * g];
         pg[(g / 2) * g + g / 2] = 4.0; // concentrated source
         let net = build_network(&params, 25e-6, &[pg], VerticalTech::Tsv);
-        let t = solve_steady_state(&net);
+        let t = solve_steady_state(&net).unwrap();
         let d = net.die_temps(&t, 0);
         assert!(d[(g / 2) * g + g / 2] > d[0]);
     }
@@ -240,7 +255,7 @@ mod tests {
             &[per_die.clone(), per_die.clone(), per_die],
             VerticalTech::Tsv,
         );
-        let t = solve_steady_state(&net);
+        let t = solve_steady_state(&net).unwrap();
         let mean = |d: usize| {
             let v = net.die_temps(&t, d);
             v.iter().sum::<f64>() / v.len() as f64

@@ -6,7 +6,10 @@
 //! coupled through bond/TIM interfaces, with a copper spreader and a lumped
 //! convective heat sink at the *bottom* of the stack (the paper's "bottom"
 //! tier is the one near the sink). Steady-state temperatures solve the
-//! conductance Laplacian `G·T = P` via preconditioned conjugate gradients.
+//! conductance Laplacian `G·T = P` through a per-geometry cached envelope
+//! Cholesky factorization ([`factor`]); Jacobi-preconditioned conjugate
+//! gradients remains the differential-tested reference path
+//! (`CUBE3D_THERMAL_SOLVER=cg`).
 //!
 //! TSV vs MIV differences enter in two physically-grounded ways:
 //! * the TSV bond interface (thinned silicon + copper vias) conducts better
@@ -16,15 +19,21 @@
 //! Both push TSV stacks cooler than MIV stacks — the paper's
 //! counter-intuitive Fig. 8 finding.
 
+mod factor;
 mod grid;
 mod solver;
 mod stack;
 mod transient;
 
-pub use grid::{build_network, coarsen_power_map, Network};
-pub use solver::solve_steady_state;
-pub use transient::{node_capacitances, solve_transient, TransientResult};
-pub use stack::{
-    bond_interface, stack_study, thermal_footprint_m2, thermal_study, StackSummary,
-    ThermalParams, ThermalStudy, TierTemps,
+pub use factor::{
+    cached_factor, factor_cache_stats, reset_factor_cache, set_solver_backend, solver_backend,
+    CgSolver, FactoredSolver, SolverBackend, SteadySolver, ThermalError, ThermalFactor,
+    FACTOR_CACHE_CAPACITY,
 };
+pub use grid::{build_network, coarsen_power_map, coarsen_power_map_into, Network};
+pub use solver::{solve_cg, solve_steady_state};
+pub use stack::{
+    bond_interface, stack_study, stack_study_with, thermal_footprint_m2, thermal_study,
+    thermal_study_with, StackSummary, ThermalParams, ThermalStudy, TierTemps,
+};
+pub use transient::{node_capacitances, solve_transient, TransientResult};

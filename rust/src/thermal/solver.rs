@@ -5,12 +5,19 @@
 //! positive definite (connected network + at least one ambient tie), so
 //! Jacobi-preconditioned conjugate gradients converges quickly; node counts
 //! are a few thousand (G² per layer).
+//!
+//! This is the *reference* solver: the default production path factors the
+//! matrix once per geometry instead (see [`super::factor`]) and CG remains
+//! behind the same [`super::factor::SteadySolver`] trait for differential
+//! testing and `CUBE3D_THERMAL_SOLVER=cg` A/B runs.
 
+use super::factor::ThermalError;
 use super::grid::Network;
 
-/// Solve for absolute temperatures (°C). Panics if CG fails to converge,
-/// which for an SPD system of this size indicates a malformed network.
-pub fn solve_steady_state(net: &Network) -> Vec<f64> {
+/// Jacobi-PCG solve of `(L + diag(g_amb))·x = rhs` for the temperature
+/// *rise* vector. Fails with [`ThermalError::CgDiverged`] instead of
+/// panicking — a malformed network fails the point, not the process.
+pub fn solve_cg(net: &Network, rhs: &[f64]) -> Result<Vec<f64>, ThermalError> {
     let n = net.n;
     // Diagonal: sum of incident conductances + ambient tie.
     let mut diag = vec![0.0f64; n];
@@ -29,14 +36,14 @@ pub fn solve_steady_state(net: &Network) -> Vec<f64> {
         }
     };
 
-    let b = &net.p;
+    let b = rhs;
     let b_norm = b.iter().map(|v| v * v).sum::<f64>().sqrt();
     if b_norm == 0.0 {
-        return vec![net.t_amb; n];
+        return Ok(vec![0.0; n]);
     }
 
     let mut x = vec![0.0f64; n];
-    let mut r = b.clone(); // r = b − A·0
+    let mut r = b.to_vec(); // r = b − A·0
     let mut z: Vec<f64> = r.iter().zip(&diag).map(|(ri, di)| ri / di).collect();
     let mut p = z.clone();
     let mut rz: f64 = r.iter().zip(&z).map(|(a, b)| a * b).sum();
@@ -44,6 +51,7 @@ pub fn solve_steady_state(net: &Network) -> Vec<f64> {
 
     let tol = 1e-10 * b_norm;
     let max_iter = 20 * n;
+    let mut r_norm = b_norm;
     for _ in 0..max_iter {
         spmv(&p, &mut ap);
         let pap: f64 = p.iter().zip(&ap).map(|(a, b)| a * b).sum();
@@ -52,9 +60,9 @@ pub fn solve_steady_state(net: &Network) -> Vec<f64> {
             x[i] += alpha * p[i];
             r[i] -= alpha * ap[i];
         }
-        let r_norm = r.iter().map(|v| v * v).sum::<f64>().sqrt();
+        r_norm = r.iter().map(|v| v * v).sum::<f64>().sqrt();
         if r_norm < tol {
-            return x.iter().map(|v| v + net.t_amb).collect();
+            return Ok(x);
         }
         for i in 0..n {
             z[i] = r[i] / diag[i];
@@ -66,7 +74,13 @@ pub fn solve_steady_state(net: &Network) -> Vec<f64> {
             p[i] = z[i] + beta * p[i];
         }
     }
-    panic!("CG failed to converge after {max_iter} iterations");
+    Err(ThermalError::CgDiverged { iterations: max_iter, residual: r_norm })
+}
+
+/// Solve for absolute temperatures (°C) with the CG reference solver.
+pub fn solve_steady_state(net: &Network) -> Result<Vec<f64>, ThermalError> {
+    let rise = solve_cg(net, &net.p)?;
+    Ok(rise.iter().map(|v| v + net.t_amb).collect())
 }
 
 #[cfg(test)]
@@ -87,7 +101,7 @@ mod tests {
             grid: 1,
             dies: 1,
         };
-        let t = solve_steady_state(&net);
+        let t = solve_steady_state(&net).unwrap();
         assert!((t[0] - 48.0).abs() < 1e-6, "t0 {}", t[0]);
         assert!((t[1] - 49.5).abs() < 1e-6, "t1 {}", t[1]);
     }
@@ -103,7 +117,7 @@ mod tests {
             grid: 1,
             dies: 1,
         };
-        let t = solve_steady_state(&net);
+        let t = solve_steady_state(&net).unwrap();
         assert!(t.iter().all(|&v| (v - 25.0).abs() < 1e-9));
     }
 
@@ -119,8 +133,27 @@ mod tests {
             grid: 1,
             dies: 1,
         };
-        let t1 = solve_steady_state(&mk(1.0));
-        let t2 = solve_steady_state(&mk(2.0));
+        let t1 = solve_steady_state(&mk(1.0)).unwrap();
+        let t2 = solve_steady_state(&mk(2.0)).unwrap();
         assert!((t2[1] - 2.0 * t1[1]).abs() < 1e-8);
+    }
+
+    #[test]
+    fn floating_network_diverges_with_typed_error() {
+        // No ambient tie ⇒ singular system ⇒ CG cannot converge; the old
+        // code panicked here, now the point fails with a typed error.
+        let net = Network {
+            n: 2,
+            neighbors: vec![vec![(1, 1.0)], vec![(0, 1.0)]],
+            g_amb: vec![0.0, 0.0],
+            p: vec![0.0, 1.0],
+            t_amb: 45.0,
+            grid: 1,
+            dies: 1,
+        };
+        assert!(matches!(
+            solve_steady_state(&net),
+            Err(ThermalError::CgDiverged { .. })
+        ));
     }
 }

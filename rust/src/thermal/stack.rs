@@ -1,8 +1,12 @@
 //! Layer-stack parameters and the Fig. 8 thermal study driver.
 
-use super::grid::{build_network, coarsen_power_map};
+use std::cell::RefCell;
+
+use super::factor::{cached_factor, solver_backend, SolverBackend, ThermalError};
+use super::grid::{build_network, coarsen_power_map_into};
 use super::solver::solve_steady_state;
 use crate::analytical::Array3d;
+use crate::obs;
 use crate::power::{power_map, Tech, VerticalTech};
 use crate::util::stats::{boxplot, Boxplot};
 use crate::workloads::Gemm;
@@ -151,13 +155,31 @@ pub fn thermal_study(
     vtech: VerticalTech,
     params: &ThermalParams,
     die_area_m2: f64,
-) -> ThermalStudy {
+) -> Result<ThermalStudy, ThermalError> {
+    thermal_study_with(solver_backend(), g, array, tech, vtech, params, die_area_m2)
+}
+
+/// [`thermal_study`] with an explicit solver backend (differential tests
+/// and A/B benches; production callers use the process default).
+#[allow(clippy::too_many_arguments)]
+pub fn thermal_study_with(
+    backend: SolverBackend,
+    g: &Gemm,
+    array: &Array3d,
+    tech: &Tech,
+    vtech: VerticalTech,
+    params: &ThermalParams,
+    die_area_m2: f64,
+) -> Result<ThermalStudy, ThermalError> {
     let maps = power_map(g, array, tech, vtech);
-    let grids: Vec<Vec<f64>> = maps
-        .iter()
-        .map(|m| coarsen_power_map(m, array.rows as usize, array.cols as usize, params.grid))
-        .collect();
-    stack_study(params, die_area_m2, &grids, vtech)
+    COARSE_SCRATCH.with(|cell| {
+        let mut grids = cell.borrow_mut();
+        grids.resize_with(maps.len(), Vec::new);
+        for (m, out) in maps.iter().zip(grids.iter_mut()) {
+            coarsen_power_map_into(m, array.rows as usize, array.cols as usize, params.grid, out);
+        }
+        stack_study_with(backend, params, die_area_m2, &grids, vtech)
+    })
 }
 
 /// General stack driver: solve a stack of `power_grids.len()` dies (bottom,
@@ -171,36 +193,96 @@ pub fn stack_study(
     die_area_m2: f64,
     power_grids: &[Vec<f64>],
     vtech: VerticalTech,
-) -> ThermalStudy {
-    let total_power_w: f64 = power_grids.iter().flat_map(|m| m.iter()).sum();
-    let net = build_network(params, die_area_m2, power_grids, vtech);
-    let t = solve_steady_state(&net);
+) -> Result<ThermalStudy, ThermalError> {
+    stack_study_with(solver_backend(), params, die_area_m2, power_grids, vtech)
+}
 
+thread_local! {
+    // Per-thread scratch so hot loops (campaign chunks, schedule tier
+    // searches) stop allocating per evaluated point. `par_map` spawns
+    // scoped threads per chunk, so each chunk reuses its own set.
+    static RHS_SCRATCH: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+    static TEMP_SCRATCH: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+    static MIDDLE_SCRATCH: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+    static COARSE_SCRATCH: RefCell<Vec<Vec<f64>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// [`stack_study`] with an explicit solver backend. The `Factored` path
+/// reuses the geometry's cached Cholesky factor ([`cached_factor`]) and a
+/// thread-local RHS buffer — zero matrix work and zero allocation per point
+/// on a cache hit. The `Cg` path reproduces the pre-factor solver
+/// bit-for-bit (pinned in `tests/physical.rs`).
+pub fn stack_study_with(
+    backend: SolverBackend,
+    params: &ThermalParams,
+    die_area_m2: f64,
+    power_grids: &[Vec<f64>],
+    vtech: VerticalTech,
+) -> Result<ThermalStudy, ThermalError> {
+    let total_power_w: f64 = power_grids.iter().flat_map(|m| m.iter()).sum();
+    let g2 = params.grid * params.grid;
     let dies = power_grids.len();
+    match backend {
+        SolverBackend::Factored => {
+            let factor = cached_factor(params, die_area_m2, dies, vtech)?;
+            RHS_SCRATCH.with(|rhs| {
+                TEMP_SCRATCH.with(|temps| {
+                    let mut p = rhs.borrow_mut();
+                    p.clear();
+                    p.resize(factor.n(), 0.0);
+                    for (d, pg) in power_grids.iter().enumerate() {
+                        assert_eq!(pg.len(), g2, "power grid must be G×G");
+                        p[(1 + d) * g2..(2 + d) * g2].copy_from_slice(pg);
+                    }
+                    let mut t = temps.borrow_mut();
+                    {
+                        let _span = obs::span(obs::Phase::ThermalSolve);
+                        factor.solve_rise_into(&p, &mut t);
+                    }
+                    for v in t.iter_mut() {
+                        *v += params.ambient_c;
+                    }
+                    Ok(summarize(&t, g2, dies, die_area_m2, total_power_w))
+                })
+            })
+        }
+        SolverBackend::Cg => {
+            let net = build_network(params, die_area_m2, power_grids, vtech);
+            let t = solve_steady_state(&net)?;
+            Ok(summarize(&t, g2, dies, die_area_m2, total_power_w))
+        }
+    }
+}
+
+/// Per-tier boxplots + the paper's bottom/middle split over one solved
+/// temperature vector (die d occupies `(1+d)·G² ..`, exactly
+/// [`super::grid::Network::die_temps`]).
+fn summarize(
+    t: &[f64],
+    g2: usize,
+    dies: usize,
+    die_area_m2: f64,
+    total_power_w: f64,
+) -> ThermalStudy {
+    let die = |d: usize| &t[(1 + d) * g2..(2 + d) * g2];
     let tiers: Vec<TierTemps> = (0..dies)
-        .map(|d| TierTemps {
-            tier: d,
-            stats: boxplot(net.die_temps(&t, d)),
-        })
+        .map(|d| TierTemps { tier: d, stats: boxplot(die(d)) })
         .collect();
     let bottom = tiers[0].stats.clone();
     let middle = if dies > 1 {
-        let mut all: Vec<f64> = Vec::new();
-        for d in 1..dies {
-            all.extend_from_slice(net.die_temps(&t, d));
-        }
-        Some(boxplot(&all))
+        MIDDLE_SCRATCH.with(|cell| {
+            let mut all = cell.borrow_mut();
+            all.clear();
+            for d in 1..dies {
+                all.extend_from_slice(die(d));
+            }
+            Some(boxplot(&all))
+        })
     } else {
         None
     };
 
-    ThermalStudy {
-        tiers,
-        bottom,
-        middle,
-        die_area_m2,
-        total_power_w,
-    }
+    ThermalStudy { tiers, bottom, middle, die_area_m2, total_power_w }
 }
 
 #[cfg(test)]
@@ -215,7 +297,7 @@ mod tests {
         let tech = Tech::default();
         let params = ThermalParams::default();
         let area = thermal_footprint_m2(&array, &tech);
-        thermal_study(&fig8_workload(), &array, &tech, vtech, &params, area)
+        thermal_study(&fig8_workload(), &array, &tech, vtech, &params, area).unwrap()
     }
 
     #[test]

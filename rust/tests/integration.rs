@@ -76,7 +76,8 @@ fn power_thermal_area_compose_for_table2_config() {
             v,
             &ThermalParams::default(),
             thermal_footprint_m2(&arr3, &tech),
-        );
+        )
+        .unwrap();
         assert!(s.bottom.median > 45.0 && s.middle.unwrap().max < 110.0);
         let a = total_area_m2(&arr3, &tech, v);
         assert!(a > 0.0);
@@ -138,13 +139,16 @@ fn thermal_orderings_for_fig8_sizes() {
         let a3 = Array3d::new(s3, s3, 3);
         let t2 = thermal_study(
             &g, &a2, &tech, VerticalTech::Tsv, &params, thermal_footprint_m2(&a2, &tech),
-        );
+        )
+        .unwrap();
         let tsv = thermal_study(
             &g, &a3, &tech, VerticalTech::Tsv, &params, thermal_footprint_m2(&a3, &tech),
-        );
+        )
+        .unwrap();
         let miv = thermal_study(
             &g, &a3, &tech, VerticalTech::Miv, &params, thermal_footprint_m2(&a3, &tech),
-        );
+        )
+        .unwrap();
         let m2 = t2.bottom.median;
         let mt = tsv.middle.unwrap().median;
         let mm = miv.middle.unwrap().median;

@@ -11,8 +11,8 @@ use cube3d::eval::Constraints;
 use cube3d::power::{power_map, Tech, VerticalTech};
 use cube3d::schedule::PartitionStrategy;
 use cube3d::thermal::{
-    build_network, coarsen_power_map, solve_steady_state, stack_study, thermal_footprint_m2,
-    thermal_study, ThermalParams,
+    build_network, coarsen_power_map, solve_steady_state, stack_study_with, thermal_footprint_m2,
+    thermal_study_with, SolverBackend, ThermalParams,
 };
 use cube3d::util::rng::Rng;
 use cube3d::util::stats::boxplot;
@@ -23,10 +23,11 @@ fn configs_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../configs")
 }
 
-/// Regression pin for the stack-driver refactor: `thermal_study` (now a
-/// thin wrapper over the heterogeneous `stack_study`) must reproduce the
-/// pre-refactor composition — power map → coarsen → build → solve →
-/// per-tier boxplots — *exactly*, temperature for temperature.
+/// Regression pin for the stack-driver refactor: `thermal_study` on the CG
+/// backend (the pre-factor reference path) must reproduce the original
+/// composition — power map → coarsen → build → solve → per-tier boxplots —
+/// *exactly*, temperature for temperature. The factored backend must agree
+/// with it to ≤ 1e-8 relative on the same configurations.
 #[test]
 fn homogeneous_path_reproduces_prerefactor_numbers_exactly() {
     let g = Gemm::new(128, 128, 300);
@@ -38,7 +39,8 @@ fn homogeneous_path_reproduces_prerefactor_numbers_exactly() {
         (Array3d::new(128, 128, 3), VerticalTech::Miv),
     ] {
         let area = thermal_footprint_m2(&arr, &tech);
-        let study = thermal_study(&g, &arr, &tech, vtech, &params, area);
+        let study =
+            thermal_study_with(SolverBackend::Cg, &g, &arr, &tech, vtech, &params, area).unwrap();
 
         // The pre-refactor body, inlined.
         let maps = power_map(&g, &arr, &tech, vtech);
@@ -48,7 +50,7 @@ fn homogeneous_path_reproduces_prerefactor_numbers_exactly() {
             .map(|m| coarsen_power_map(m, arr.rows as usize, arr.cols as usize, params.grid))
             .collect();
         let net = build_network(&params, area, &grids, vtech);
-        let t = solve_steady_state(&net);
+        let t = solve_steady_state(&net).unwrap();
 
         assert_eq!(study.tiers.len(), arr.tiers as usize);
         for d in 0..arr.tiers as usize {
@@ -64,6 +66,25 @@ fn homogeneous_path_reproduces_prerefactor_numbers_exactly() {
             study.total_power_w,
             raw_total
         );
+
+        // Factored backend: same study within the differential tolerance
+        // (relative to the ambient rise, the quantity being solved for).
+        let fac = thermal_study_with(SolverBackend::Factored, &g, &arr, &tech, vtech, &params, area)
+            .unwrap();
+        let rise = study.peak_c() - params.ambient_c;
+        for (a, b) in fac.tiers.iter().zip(&study.tiers) {
+            for (x, y) in [
+                (a.stats.min, b.stats.min),
+                (a.stats.median, b.stats.median),
+                (a.stats.max, b.stats.max),
+                (a.stats.mean, b.stats.mean),
+            ] {
+                assert!(
+                    (x - y).abs() <= 1e-8 * rise,
+                    "factored {x} vs cg {y} on {arr:?} ({vtech:?})"
+                );
+            }
+        }
     }
 }
 
@@ -75,10 +96,11 @@ fn uniform_maps_reproduce_homogeneous_results_bit_for_bit() {
     let g2 = params.grid * params.grid;
     let per_die: Vec<f64> = (0..g2).map(|i| 2.0e-2 + (i % 5) as f64 * 1e-3).collect();
     let grids = vec![per_die.clone(), per_die.clone(), per_die];
-    let hetero = stack_study(&params, 25e-6, &grids, VerticalTech::Tsv);
+    let hetero =
+        stack_study_with(SolverBackend::Cg, &params, 25e-6, &grids, VerticalTech::Tsv).unwrap();
 
     let net = build_network(&params, 25e-6, &grids, VerticalTech::Tsv);
-    let t = solve_steady_state(&net);
+    let t = solve_steady_state(&net).unwrap();
     for d in 0..3 {
         assert_eq!(hetero.tiers[d].stats, boxplot(net.die_temps(&t, d)), "die {d}");
     }
@@ -100,7 +122,7 @@ fn heterogeneous_stack_conserves_energy() {
     let total: f64 = die_powers.iter().sum();
     for vtech in [VerticalTech::Tsv, VerticalTech::Miv] {
         let net = build_network(&params, 25e-6, &grids, vtech);
-        let t = solve_steady_state(&net);
+        let t = solve_steady_state(&net).unwrap();
         let out = net.g_amb[net.sink()] * (t[net.sink()] - net.t_amb);
         assert!((out - total).abs() < 1e-6, "{vtech:?}: heat out {out} vs in {total}");
     }
@@ -118,7 +140,7 @@ fn raising_one_dies_power_never_cools_any_node() {
         .collect();
     let solve = |grids: &[Vec<f64>]| {
         let net = build_network(&params, 25e-6, grids, VerticalTech::Miv);
-        solve_steady_state(&net)
+        solve_steady_state(&net).unwrap()
     };
     let t0 = solve(&base);
     for die in 0..3 {

@@ -1,0 +1,341 @@
+//! Acceptance tests for the factor-once thermal solver: envelope-Cholesky
+//! vs CG agreement on random SPD networks and every shipped config, the
+//! constrained-sweep differential against the CG baseline, linearity
+//! (superposition) through the cached-factor path, cache-key distinctness,
+//! and typed-error propagation (a malformed stack fails the *point*, not
+//! the process).
+//!
+//! None of these tests touch the process-global backend override
+//! (`set_solver_backend`) — backends are always selected explicitly through
+//! the `*_with` entry points, so the binary stays order-independent under
+//! the parallel test runner. Cache-counter assertions use deltas with
+//! test-unique geometry values for the same reason.
+
+use cube3d::config::ExperimentConfig;
+use cube3d::dataflow::Dataflow;
+use cube3d::dse::sweep_dataflows;
+use cube3d::eval::{Constraints, Evaluator, Scenario};
+use cube3d::power::{Tech, VerticalTech};
+use cube3d::thermal::{
+    cached_factor, factor_cache_stats, solve_cg, solve_steady_state, stack_study_with,
+    thermal_footprint_m2, thermal_study_with, Network, SolverBackend, ThermalError,
+    ThermalFactor, ThermalParams,
+};
+use cube3d::util::rng::Rng;
+use std::path::PathBuf;
+
+fn configs_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../configs")
+}
+
+/// A random connected SPD thermal network: a conductance chain through all
+/// nodes (connectivity), extra random edges (fill-in beyond the tridiagonal
+/// envelope), one grounded node (strict diagonal dominance somewhere, which
+/// with connectivity makes the matrix positive definite).
+fn random_network(rng: &mut Rng, n: usize) -> Network {
+    let mut neighbors: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n];
+    let mut connect = |nb: &mut Vec<Vec<(usize, f64)>>, i: usize, j: usize, g: f64| {
+        nb[i].push((j, g));
+        nb[j].push((i, g));
+    };
+    for i in 0..n - 1 {
+        connect(&mut neighbors, i, i + 1, 0.1 + 10.0 * rng.gen_f64());
+    }
+    for _ in 0..n {
+        let i = rng.gen_range(n as u64) as usize;
+        let j = rng.gen_range(n as u64) as usize;
+        if i != j {
+            // Parallel edges are legal: conductances just accumulate.
+            connect(&mut neighbors, i, j, 0.05 + 2.0 * rng.gen_f64());
+        }
+    }
+    let mut g_amb = vec![0.0; n];
+    g_amb[rng.gen_range(n as u64) as usize] = 0.5 + 5.0 * rng.gen_f64();
+    let p = (0..n).map(|_| rng.gen_f64() * 0.5).collect();
+    Network { n, neighbors, g_amb, p, t_amb: 45.0, grid: 1, dies: 1 }
+}
+
+#[test]
+fn cholesky_matches_cg_on_random_spd_networks() {
+    let mut rng = Rng::new(0xFAC70);
+    for trial in 0..20 {
+        let n = 10 + rng.gen_range(40) as usize;
+        let net = random_network(&mut rng, n);
+        let chol = ThermalFactor::from_network(&net).unwrap().solve_rise(&net.p);
+        let cg = solve_cg(&net, &net.p).unwrap();
+        let scale = chol.iter().fold(1e-12f64, |a, &v| a.max(v.abs()));
+        for (i, (a, b)) in chol.iter().zip(&cg).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-8 * scale,
+                "trial {trial} node {i}: cholesky {a} vs cg {b} (scale {scale})"
+            );
+        }
+    }
+}
+
+#[test]
+fn cholesky_matches_cg_on_every_shipped_config() {
+    let params = ThermalParams::default();
+    let g2 = params.grid * params.grid;
+    let mut checked = 0usize;
+    for entry in std::fs::read_dir(configs_dir()).unwrap() {
+        let path = entry.unwrap().path();
+        let Ok(cfg) = ExperimentConfig::from_file(&path) else { continue };
+        for &tiers in &cfg.tiers {
+            let dies = tiers as usize;
+            let grids: Vec<Vec<f64>> = (0..dies)
+                .map(|d| {
+                    (0..g2).map(|i| 0.002 + 0.001 * ((i * 7 + d * 13) % 10) as f64).collect()
+                })
+                .collect();
+            let fac = stack_study_with(
+                SolverBackend::Factored,
+                &params,
+                25e-6,
+                &grids,
+                cfg.vertical_tech,
+            )
+            .unwrap();
+            let cg = stack_study_with(
+                SolverBackend::Cg,
+                &params,
+                25e-6,
+                &grids,
+                cfg.vertical_tech,
+            )
+            .unwrap();
+            let rise = (cg.peak_c() - params.ambient_c).max(1e-12);
+            let name = path.file_name().unwrap().to_string_lossy().into_owned();
+            assert!(
+                (fac.peak_c() - cg.peak_c()).abs() <= 1e-8 * rise,
+                "{name} tiers {tiers}: peak {} vs {}",
+                fac.peak_c(),
+                cg.peak_c()
+            );
+            assert!(
+                (fac.mean_c() - cg.mean_c()).abs() <= 1e-8 * rise,
+                "{name} tiers {tiers}: mean {} vs {}",
+                fac.mean_c(),
+                cg.mean_c()
+            );
+            checked += 1;
+        }
+    }
+    assert!(checked >= 10, "only {checked} config/tier combinations checked");
+}
+
+/// The ISSUE's acceptance criterion: the constrained RN0 TSV sweep
+/// (`--max-temp 105`) through the default (factored) pipeline must match a
+/// CG recomputation of every point within 1e-8 relative on peak
+/// temperature, with identical feasibility labels.
+#[test]
+fn constrained_rn0_sweep_matches_cg_baseline() {
+    let cfg = ExperimentConfig::from_file(&configs_dir().join("rn0_tsv_sweep.json")).unwrap();
+    let constraints = Constraints { max_temp_c: Some(105.0), power_budget_w: None };
+    let tech = Tech::default();
+    let workloads = cfg.workload.resolve().unwrap().gemms();
+    let pts = sweep_dataflows(
+        &workloads,
+        &cfg.mac_budgets,
+        &cfg.tiers,
+        &cfg.dataflows,
+        cfg.vertical_tech,
+        &tech,
+        &constraints,
+    );
+    assert_eq!(pts.len(), cfg.mac_budgets.len() * cfg.tiers.len() * cfg.dataflows.len());
+    let params = ThermalParams::default();
+    for p in &pts {
+        let peak = p.peak_temp_c.expect("constrained sweep runs the thermal model");
+        // Recompute the same design point's thermals through the CG
+        // reference, bypassing every cache (fresh evaluator for the design,
+        // explicit CG backend for the solve).
+        let s = Scenario::design_point(
+            p.workload,
+            p.mac_budget,
+            p.tiers,
+            p.dataflow,
+            p.vtech,
+            tech.clone(),
+        )
+        .unwrap();
+        let m = Evaluator::full().evaluate(&s);
+        let arr = m.design_3d.expect("design point optimizes").array3d();
+        let area = thermal_footprint_m2(&arr, &tech);
+        let reference = thermal_study_with(
+            SolverBackend::Cg,
+            &p.workload,
+            &arr,
+            &tech,
+            p.vtech,
+            &params,
+            area,
+        )
+        .unwrap();
+        let rise = (reference.peak_c() - params.ambient_c).max(1e-12);
+        assert!(
+            (peak - reference.peak_c()).abs() <= 1e-8 * rise,
+            "budget {} tiers {}: factored peak {peak} vs cg {}",
+            p.mac_budget,
+            p.tiers,
+            reference.peak_c()
+        );
+        let cg_feasible =
+            constraints.is_satisfied(Some(p.power_w), Some(reference.peak_c()));
+        assert_eq!(
+            p.feasible, cg_feasible,
+            "budget {} tiers {}: feasibility flipped between backends",
+            p.mac_budget, p.tiers
+        );
+    }
+    // The 105 °C ceiling must actually bite somewhere on this grid —
+    // otherwise the differential above is vacuous.
+    assert!(pts.iter().any(|p| !p.feasible), "no infeasible point on the RN0 grid");
+    assert!(pts.iter().any(|p| p.feasible), "every point infeasible on the RN0 grid");
+}
+
+#[test]
+fn superposition_holds_through_the_cached_factor_path() {
+    // Geometry chosen to collide with nothing else in this binary, so the
+    // counter deltas below are deterministic even under the parallel runner.
+    let params = ThermalParams::default();
+    let area = 1.2345e-5;
+    let g2 = params.grid * params.grid;
+    let before = factor_cache_stats();
+    let factor = cached_factor(&params, area, 2, VerticalTech::Tsv).unwrap();
+    let factor2 = cached_factor(&params, area, 2, VerticalTech::Tsv).unwrap();
+    let after = factor_cache_stats();
+    assert!(after.misses >= before.misses + 1, "first call must factor");
+    assert!(after.hits >= before.hits + 1, "second call must hit the cache");
+
+    let n = factor.n();
+    let mut p = vec![0.0; n];
+    for (i, v) in p.iter_mut().enumerate().take(3 * g2).skip(g2) {
+        *v = 0.01 + 1e-4 * (i % 17) as f64;
+    }
+    let p2: Vec<f64> = p.iter().map(|v| 2.0 * v).collect();
+    let r1 = factor.solve_rise(&p);
+    let r2 = factor2.solve_rise(&p2);
+    for (i, (a, b)) in r1.iter().zip(&r2).enumerate() {
+        assert!(
+            (2.0 * a - b).abs() <= 1e-9 * b.abs().max(1e-12),
+            "node {i}: 2·T'(P) = {} vs T'(2P) = {b}",
+            2.0 * a
+        );
+    }
+
+    // The batched entry point is the same solve, RHS by RHS (absolute °C).
+    let batch = factor.solve_many(&[p.clone(), p2.clone()]);
+    assert_eq!(batch.len(), 2);
+    for (rise, abs) in r1.iter().zip(&batch[0]) {
+        assert_eq!(rise + params.ambient_c, *abs);
+    }
+    for (rise, abs) in r2.iter().zip(&batch[1]) {
+        assert_eq!(rise + params.ambient_c, *abs);
+    }
+}
+
+#[test]
+fn distinct_geometries_never_share_a_factor() {
+    let params = ThermalParams::default();
+    let before = factor_cache_stats();
+    let a = cached_factor(&params, 1.1111e-5, 3, VerticalTech::Tsv).unwrap();
+    let b = cached_factor(&params, 1.1112e-5, 3, VerticalTech::Tsv).unwrap();
+    let c = cached_factor(&params, 1.1111e-5, 3, VerticalTech::Miv).unwrap();
+    let mut hot = ThermalParams::default();
+    hot.ambient_c += 0.125;
+    let d = cached_factor(&hot, 1.1111e-5, 3, VerticalTech::Tsv).unwrap();
+    let after = factor_cache_stats();
+    assert!(
+        after.misses >= before.misses + 4,
+        "four distinct keys must be four misses ({} -> {})",
+        before.misses,
+        after.misses
+    );
+
+    // Distinct geometries produce distinct solutions for the same power.
+    let n = a.n();
+    assert_eq!(n, b.n());
+    let p = vec![0.01; n];
+    let ra = a.solve_rise(&p);
+    let rb = b.solve_rise(&p);
+    let rc = c.solve_rise(&p);
+    assert!(ra.iter().zip(&rb).any(|(x, y)| x != y), "area must change the factor");
+    assert!(ra.iter().zip(&rc).any(|(x, y)| x != y), "vtech must change the factor");
+    // `ambient_c` does not enter the conductance matrix, but it is part of
+    // the key (it shifts `solve`'s output), so `d` is a separate entry whose
+    // *rise* agrees with `a` bit-for-bit.
+    assert_eq!(ra, d.solve_rise(&p), "rise is ambient-independent");
+
+    // Re-deriving the same key is bit-identical, hit or miss.
+    let a2 = cached_factor(&params, 1.1111e-5, 3, VerticalTech::Tsv).unwrap();
+    assert_eq!(ra, a2.solve_rise(&p));
+}
+
+#[test]
+fn singular_network_yields_typed_errors_from_both_backends() {
+    // No path to ambient: the conductance matrix is exactly singular.
+    let net = Network {
+        n: 3,
+        neighbors: vec![vec![(1, 1.0)], vec![(0, 1.0), (2, 1.0)], vec![(1, 1.0)]],
+        g_amb: vec![0.0; 3],
+        p: vec![0.1; 3],
+        t_amb: 45.0,
+        grid: 1,
+        dies: 1,
+    };
+    assert!(matches!(
+        ThermalFactor::from_network(&net),
+        Err(ThermalError::NotSpd { .. })
+    ));
+    match solve_steady_state(&net) {
+        Err(ThermalError::CgDiverged { iterations, residual }) => {
+            assert!(iterations > 0);
+            assert!(residual > 0.0);
+        }
+        other => panic!("expected CgDiverged, got {other:?}"),
+    }
+}
+
+#[test]
+fn malformed_stack_fails_the_point_not_the_process() {
+    // An infinite convection resistance disconnects the sink from ambient:
+    // the steady state does not exist. Both backends must report a typed
+    // error (never panic), and the constraint layer must classify the
+    // resulting missing metric as infeasible.
+    let mut params = ThermalParams::default();
+    params.r_conv_fixed = f64::INFINITY;
+    let g2 = params.grid * params.grid;
+    let grids = vec![vec![0.01; g2]; 2];
+    let fac = stack_study_with(SolverBackend::Factored, &params, 25e-6, &grids, VerticalTech::Tsv);
+    assert!(matches!(fac, Err(ThermalError::NotSpd { .. })), "got {fac:?}");
+    let cg = stack_study_with(SolverBackend::Cg, &params, 25e-6, &grids, VerticalTech::Tsv);
+    assert!(matches!(cg, Err(ThermalError::CgDiverged { .. })), "got {cg:?}");
+
+    let c = Constraints { max_temp_c: Some(105.0), power_budget_w: None };
+    assert!(!c.is_satisfied(Some(1.0), None), "missing thermal metric must violate max_temp_c");
+
+    // The error messages carry the diagnosis.
+    let msg = fac.unwrap_err().to_string();
+    assert!(msg.contains("not SPD"), "unexpected message: {msg}");
+    let msg = cg.unwrap_err().to_string();
+    assert!(msg.contains("failed to converge"), "unexpected message: {msg}");
+}
+
+#[test]
+fn dataflow_default_is_available_for_scenario_rebuilds() {
+    // Guard for the differential test above: the sweep's dataflow axis must
+    // round-trip through `Scenario::design_point` unchanged.
+    let s = Scenario::design_point(
+        cube3d::workloads::Gemm::new(64, 147, 12100),
+        4096,
+        2,
+        Dataflow::DistributedOutputStationary,
+        VerticalTech::Tsv,
+        Tech::default(),
+    )
+    .unwrap();
+    let m = Evaluator::full().evaluate(&s);
+    assert!(m.design_3d.is_some());
+    assert!(m.thermal.is_some());
+}
